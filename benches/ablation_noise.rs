@@ -1,0 +1,42 @@
+//! Ablation: PPA-model accuracy vs synthesis-jitter amplitude.
+//!
+//! Sweeps the oracle's noise sigma and reports holdout R² / MAPE — shows
+//! the regression degrades gracefully as the "synthesis tool" gets noisier
+//! (and that Figure-2-quality fits do not depend on a conveniently quiet
+//! oracle).
+
+use qappa::coordinator::report::fig2_accuracy;
+use qappa::coordinator::DseOptions;
+use qappa::model::native::NativeBackend;
+use qappa::util::bench::Bench;
+use qappa::util::table::Table;
+
+fn main() {
+    let backend = NativeBackend::new(7);
+    println!("=== ablation: model accuracy vs synthesis jitter ===");
+    let mut t = Table::new(&["sigma", "min_R2", "mean_R2", "max_MAPE_%"]);
+    for sigma in [0.0, 0.01, 0.03, 0.06, 0.10] {
+        let mut opts = DseOptions::default();
+        opts.sigma = sigma;
+        opts.train_per_type = 256;
+        let mut rows = None;
+        Bench::new(&format!("ablation_noise/sigma_{sigma}"))
+            .warmup(0)
+            .samples(3)
+            .run(|| {
+                rows = Some(fig2_accuracy(&backend, &opts, 96).expect("fig2"));
+            })
+            .print();
+        let rows = rows.unwrap();
+        let min_r2 = rows.iter().map(|r| r.r2).fold(f64::INFINITY, f64::min);
+        let mean_r2 = rows.iter().map(|r| r.r2).sum::<f64>() / rows.len() as f64;
+        let max_mape = rows.iter().map(|r| r.mape).fold(0.0, f64::max);
+        t.row(vec![
+            format!("{sigma:.2}"),
+            format!("{min_r2:.4}"),
+            format!("{mean_r2:.4}"),
+            format!("{max_mape:.2}"),
+        ]);
+    }
+    print!("{}", t.render());
+}

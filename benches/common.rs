@@ -1,0 +1,85 @@
+//! Shared bench plumbing (included by `#[path]` from each bench target).
+
+use std::sync::Arc;
+
+use qappa::coordinator::report::{dse_summary_table, fig2_accuracy, fig2_table};
+use qappa::coordinator::{run_dse, DseOptions};
+use qappa::model::native::NativeBackend;
+use qappa::model::Backend;
+use qappa::runtime::{ArtifactRuntime, Engine, XlaBackend};
+use qappa::util::bench::Bench;
+use qappa::workloads;
+
+/// Backend holder usable from bench mains.
+pub enum AnyBackend {
+    Native(NativeBackend),
+    Xla(XlaBackend, Arc<Engine>),
+}
+
+impl AnyBackend {
+    pub fn auto() -> AnyBackend {
+        let dir = ArtifactRuntime::artifacts_dir_default();
+        if dir.join("manifest.json").exists() {
+            if let Ok(engine) = Engine::start(&dir) {
+                let engine = Arc::new(engine);
+                return AnyBackend::Xla(XlaBackend::new(engine.clone()), engine);
+            }
+        }
+        AnyBackend::Native(NativeBackend::new(7))
+    }
+
+    pub fn native() -> AnyBackend {
+        AnyBackend::Native(NativeBackend::new(7))
+    }
+
+    pub fn get(&self) -> &dyn Backend {
+        match self {
+            AnyBackend::Native(b) => b,
+            AnyBackend::Xla(b, _) => b,
+        }
+    }
+}
+
+/// Run one figure-3/4/5 style DSE bench: times the full pipeline and prints
+/// the figure's summary table (the regenerated "figure").
+pub fn dse_figure_bench(fig: u32, workload: &str) {
+    let backend = AnyBackend::auto();
+    let layers = workloads::by_name(workload).expect("workload");
+    let opts = DseOptions::default();
+
+    println!(
+        "=== Figure {fig}: {workload} design space ({} configs/type, backend={}) ===",
+        opts.space.len(),
+        backend.get().name()
+    );
+    let mut last = None;
+    let r = Bench::new(&format!("fig{fig}/{workload}/dse_pipeline"))
+        .warmup(1)
+        .samples(5)
+        .run_with_units(4.0 * opts.space.len() as f64, "configs", || {
+            last = Some(run_dse(backend.get(), &layers, workload, &opts).expect("dse"));
+        });
+    r.print();
+    let res = last.unwrap();
+    println!("anchor: {}", res.anchor.cfg.key());
+    print!("{}", dse_summary_table(&res).render());
+}
+
+/// Figure-2 style accuracy bench.
+pub fn fig2_bench() {
+    let backend = AnyBackend::auto();
+    let opts = DseOptions::default();
+    println!(
+        "=== Figure 2: PPA model accuracy (backend={}) ===",
+        backend.get().name()
+    );
+    let mut rows = None;
+    Bench::new("fig2/train+holdout_score")
+        .warmup(1)
+        .samples(5)
+        .run(|| {
+            rows = Some(fig2_accuracy(backend.get(), &opts, 128).expect("fig2"));
+        })
+        .print();
+    print!("{}", fig2_table(&rows.unwrap()).render());
+}

@@ -1,0 +1,42 @@
+//! Bench: row-stationary dataflow evaluation throughput (layers/s and
+//! full-network evals/s) — step 4 of the DSE pipeline.
+
+use qappa::config::{AcceleratorConfig, PeType};
+use qappa::dataflow::evaluate_network;
+use qappa::synth::oracle::energy_params;
+use qappa::util::bench::Bench;
+use qappa::util::pool::{default_workers, parallel_map};
+use qappa::workloads;
+
+fn main() {
+    let cfg = AcceleratorConfig::default_with(PeType::Int16);
+    let ep = energy_params(&cfg);
+
+    for wl in ["vgg16", "resnet34", "resnet50"] {
+        let layers = workloads::by_name(wl).unwrap();
+        Bench::new(&format!("dataflow/{wl}_single_eval"))
+            .warmup(2)
+            .samples(10)
+            .run_with_units(layers.len() as f64, "layers", || {
+                evaluate_network(&cfg, &ep, &layers).cycles
+            })
+            .print();
+    }
+
+    // Whole-grid evaluation (the DSE inner loop) for one PE type.
+    let space = qappa::coordinator::space::DesignSpace::default();
+    let cfgs = space.enumerate(PeType::LightPe1);
+    let layers = workloads::resnet34();
+    let w = default_workers();
+    Bench::new(&format!("dataflow/resnet34_grid_{}cfgs_x{w}", cfgs.len()))
+        .warmup(1)
+        .samples(3)
+        .run_with_units(cfgs.len() as f64, "configs", || {
+            parallel_map(&cfgs, w, |c| {
+                let ep = energy_params(c);
+                evaluate_network(c, &ep, &layers).energy_mj
+            })
+            .len()
+        })
+        .print();
+}

@@ -1,0 +1,7 @@
+//! Bench: regenerate Figure 2 (PPA model accuracy) and time the pipeline.
+#[path = "common.rs"]
+mod common;
+
+fn main() {
+    common::fig2_bench();
+}

@@ -1,0 +1,7 @@
+//! Bench: regenerate Figure 3 (VGG-16 design-space exploration).
+#[path = "common.rs"]
+mod common;
+
+fn main() {
+    common::dse_figure_bench(3, "vgg16");
+}

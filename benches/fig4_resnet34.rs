@@ -1,0 +1,7 @@
+//! Bench: regenerate Figure 4 (ResNet-34 design-space exploration).
+#[path = "common.rs"]
+mod common;
+
+fn main() {
+    common::dse_figure_bench(4, "resnet34");
+}

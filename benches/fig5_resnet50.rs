@@ -1,0 +1,7 @@
+//! Bench: regenerate Figure 5 (ResNet-50 design-space exploration).
+#[path = "common.rs"]
+mod common;
+
+fn main() {
+    common::dse_figure_bench(5, "resnet50");
+}

@@ -1,0 +1,36 @@
+//! Bench: synthesis-oracle throughput (configs/s), single-threaded and
+//! with the worker fleet — the "how fast is ground truth" baseline that
+//! motivates the regression models.
+
+use qappa::config::PeType;
+use qappa::coordinator::space::DesignSpace;
+use qappa::synth::oracle::synthesize;
+use qappa::util::bench::Bench;
+use qappa::util::pool::{default_workers, parallel_map};
+
+fn main() {
+    let space = DesignSpace::default();
+    let cfgs = space.sample(PeType::Int16, 2048, 1);
+    println!("=== synthesis oracle throughput ({} configs) ===", cfgs.len());
+
+    Bench::new("oracle/serial")
+        .warmup(1)
+        .samples(8)
+        .run_with_units(cfgs.len() as f64, "configs", || {
+            let mut acc = 0.0;
+            for c in &cfgs {
+                acc += synthesize(c).area_mm2;
+            }
+            acc
+        })
+        .print();
+
+    let w = default_workers();
+    Bench::new(&format!("oracle/parallel_x{w}"))
+        .warmup(1)
+        .samples(8)
+        .run_with_units(cfgs.len() as f64, "configs", || {
+            parallel_map(&cfgs, w, synthesize).len()
+        })
+        .print();
+}

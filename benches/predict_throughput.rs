@@ -1,0 +1,92 @@
+//! Bench: PPA model evaluation throughput — the framework's hot path.
+//!
+//! Sweeps request batch size through the XLA engine's dynamic batcher
+//! (ablation: batching amortization) and compares against the native Rust
+//! evaluator and the raw synthesis oracle.
+
+#[path = "common.rs"]
+mod common;
+
+use std::sync::Arc;
+
+use common::AnyBackend;
+use qappa::config::PeType;
+use qappa::coordinator::space::DesignSpace;
+use qappa::model::{num_features, Backend, M};
+use qappa::synth::oracle::synthesize;
+use qappa::util::bench::Bench;
+
+fn main() {
+    let degree = 2usize;
+    let d = 7usize;
+    let p = num_features(d, degree);
+    let coef: Vec<f32> = (0..p * M).map(|i| (i as f32 * 0.017).sin()).collect();
+
+    let space = DesignSpace::default();
+    let cfgs = space.sample(PeType::LightPe1, 8192, 3);
+    let mut x = Vec::with_capacity(cfgs.len() * d);
+    for c in &cfgs {
+        for f in c.features() {
+            x.push(f as f32);
+        }
+    }
+    let n = cfgs.len();
+    println!("=== predict throughput (degree {degree}, {n} design points) ===");
+
+    // Baseline: the oracle itself (what the model replaces).
+    Bench::new("oracle/ground_truth_1024")
+        .warmup(1)
+        .samples(5)
+        .run_with_units(1024.0, "configs", || {
+            cfgs[..1024].iter().map(|c| synthesize(c).power_mw).sum::<f64>()
+        })
+        .print();
+
+    // Native evaluator.
+    let native = AnyBackend::native();
+    Bench::new("predict/native_full")
+        .warmup(1)
+        .samples(8)
+        .run_with_units(n as f64, "rows", || {
+            native.get().predict(&x, n, &coef, degree).unwrap().len()
+        })
+        .print();
+
+    // XLA engine at several request granularities (batcher ablation).
+    let xla = AnyBackend::auto();
+    if xla.get().name() != "xla" {
+        println!("(artifacts not built — skipping XLA sweep)");
+        return;
+    }
+    let AnyBackend::Xla(_, engine) = &xla else { unreachable!() };
+    for chunk in [32usize, 128, 256, 1024, 8192] {
+        let coef_arc = Arc::new(coef.clone());
+        Bench::new(&format!("predict/xla_chunk_{chunk}"))
+            .warmup(1)
+            .samples(5)
+            .run_with_units(n as f64, "rows", || {
+                let mut total = 0usize;
+                let mut off = 0;
+                while off < n {
+                    let take = (n - off).min(chunk);
+                    let slab = x[off * 7..(off + take) * 7].to_vec();
+                    total += engine
+                        .predict(degree, coef_arc.clone(), slab, take)
+                        .unwrap()
+                        .len();
+                    off += take;
+                }
+                total
+            })
+            .print();
+    }
+    use std::sync::atomic::Ordering::Relaxed;
+    println!(
+        "engine totals: {} rows / {} batches ({:.1} rows/batch avg), {} padded",
+        engine.stats.predict_rows.load(Relaxed),
+        engine.stats.predict_batches.load(Relaxed),
+        engine.stats.predict_rows.load(Relaxed) as f64
+            / engine.stats.predict_batches.load(Relaxed).max(1) as f64,
+        engine.stats.predict_padded_rows.load(Relaxed)
+    );
+}

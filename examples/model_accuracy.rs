@@ -1,0 +1,68 @@
+//! Figure 2 reproduction: actual (synthesis oracle) vs estimated
+//! (polynomial model) power / performance / area, per PE type.
+//!
+//! Run: `cargo run --release --example model_accuracy`
+//! Writes `figures/fig2_accuracy.csv` and prints R² / MAPE per cell plus a
+//! few sample actual-vs-predicted rows, mirroring the paper's scatter.
+
+use std::sync::Arc;
+
+use qappa::config::ALL_PE_TYPES;
+use qappa::coordinator::explorer::train_models;
+use qappa::coordinator::report::{fig2_accuracy, fig2_table};
+use qappa::coordinator::DseOptions;
+use qappa::model::native::NativeBackend;
+use qappa::model::{predict_ppa, Backend};
+use qappa::runtime::{ArtifactRuntime, Engine, XlaBackend};
+use qappa::synth::oracle::synthesize;
+
+fn main() {
+    let dir = ArtifactRuntime::artifacts_dir_default();
+    let engine = if dir.join("manifest.json").exists() {
+        Some(Arc::new(Engine::start(&dir).expect("engine")))
+    } else {
+        None
+    };
+    let xla;
+    let native;
+    let backend: &dyn Backend = match &engine {
+        Some(e) => {
+            xla = XlaBackend::new(e.clone());
+            &xla
+        }
+        None => {
+            native = NativeBackend::new(7);
+            &native
+        }
+    };
+    println!("backend: {}", backend.name());
+
+    let opts = DseOptions::default();
+    let rows = fig2_accuracy(backend, &opts, 160).expect("fig2");
+    let t = fig2_table(&rows);
+    println!("\nFigure 2 — model accuracy on a fresh holdout (160 configs/type):");
+    print!("{}", t.render());
+    t.write_csv("figures/fig2_accuracy.csv").expect("csv");
+
+    // A few raw actual-vs-predicted rows (the scatter's underlying data).
+    let models = train_models(backend, &opts).expect("models");
+    println!("\nsample actual vs predicted (first 4 holdout configs per type):");
+    for ty in ALL_PE_TYPES {
+        let cfgs = opts.space.sample(ty, 4, opts.seed ^ 0x601d);
+        let mut feats = Vec::new();
+        for c in &cfgs {
+            feats.extend_from_slice(&c.features());
+        }
+        let preds = predict_ppa(backend, &models[&ty], &feats).expect("predict");
+        for (c, p) in cfgs.iter().zip(&preds) {
+            let a = synthesize(c).as_array();
+            println!(
+                "  {:<9} {}: power {:>8.2} vs {:>8.2} mW | fmax {:>7.1} vs {:>7.1} MHz | area {:>6.3} vs {:>6.3} mm2",
+                ty.label(),
+                c.key(),
+                a[0], p[0], a[1], p[1], a[2], p[2]
+            );
+        }
+    }
+    println!("\nwrote figures/fig2_accuracy.csv");
+}

@@ -1,0 +1,95 @@
+//! Quickstart: the whole QAPPA flow in one minute on a tiny space.
+//!
+//! 1. synthesize a handful of configs per PE type (ground truth),
+//! 2. fit the polynomial PPA models (k-fold CV),
+//! 3. sweep a small grid with the fitted models,
+//! 4. print a mini Pareto table for a toy conv workload.
+//!
+//! Run: `cargo run --release --example quickstart`
+//! (uses the XLA artifacts when `artifacts/` exists, else the native
+//! backend — both produce the same numbers to ~1e-3.)
+
+use std::sync::Arc;
+
+use qappa::config::ALL_PE_TYPES;
+use qappa::coordinator::report::dse_summary_table;
+use qappa::coordinator::space::DesignSpace;
+use qappa::coordinator::{run_dse, DseOptions};
+use qappa::dataflow::Layer;
+use qappa::model::native::NativeBackend;
+use qappa::model::{Backend, CvConfig};
+use qappa::runtime::{ArtifactRuntime, Engine, XlaBackend};
+
+enum AnyBackend {
+    Native(NativeBackend),
+    Xla(XlaBackend),
+}
+
+impl AnyBackend {
+    fn auto() -> AnyBackend {
+        let dir = ArtifactRuntime::artifacts_dir_default();
+        if dir.join("manifest.json").exists() {
+            match Engine::start(&dir) {
+                Ok(engine) => {
+                    println!("backend: XLA artifacts from {}", dir.display());
+                    return AnyBackend::Xla(XlaBackend::new(Arc::new(engine)));
+                }
+                Err(e) => eprintln!("XLA engine unavailable ({e}); falling back to native"),
+            }
+        } else {
+            println!("backend: native (run `make artifacts` for the XLA path)");
+        }
+        AnyBackend::Native(NativeBackend::new(7))
+    }
+
+    fn get(&self) -> &dyn Backend {
+        match self {
+            AnyBackend::Native(b) => b,
+            AnyBackend::Xla(b) => b,
+        }
+    }
+}
+
+fn main() {
+    let backend = AnyBackend::auto();
+
+    // --- a toy workload ---------------------------------------------------
+    let layers = vec![
+        Layer::conv("conv1", 3, 16, 32, 32, 3, 1, 1),
+        Layer::conv("conv2", 16, 32, 16, 16, 3, 1, 1),
+        Layer::fc("fc", 2048, 10),
+    ];
+
+    let opts = DseOptions {
+        space: DesignSpace::tiny(),
+        train_per_type: 128,
+        cv: CvConfig { k: 3, degrees: vec![1, 2], lambdas: vec![1e-3, 1e-2], seed: 1 },
+        seed: 42,
+        workers: 4,
+        sigma: 0.03,
+    };
+
+    println!(
+        "design space: {} configs per PE type, {} training samples each",
+        opts.space.len(),
+        opts.train_per_type
+    );
+
+    let res = run_dse(backend.get(), &layers, "quickstart", &opts).expect("dse");
+
+    println!("\nanchor (best INT16 perf/area): {}", res.anchor.cfg.key());
+    print!("{}", dse_summary_table(&res).render());
+
+    println!("\nselected models:");
+    for ty in ALL_PE_TYPES {
+        let m = &res.models[&ty];
+        println!(
+            "  {:<10} degree={} lambda={:.0e}  (train n={})",
+            ty.label(),
+            m.degree,
+            m.lambda,
+            m.n_train
+        );
+    }
+    println!("\nquickstart OK");
+}

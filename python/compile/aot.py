@@ -1,0 +1,227 @@
+"""AOT compile path: lower the L2 model functions to HLO *text* artifacts.
+
+HLO text — NOT ``lowered.compile()`` or serialized HloModuleProto — is the
+interchange format: jax >= 0.5 emits protos with 64-bit instruction ids that
+the rust side's xla_extension 0.5.1 rejects (``proto.id() <= INT_MAX``); the
+text parser reassigns ids and round-trips cleanly (see /opt/xla-example).
+
+Emits, for each polynomial degree in {1, 2, 3}:
+
+* ``predict_d{d}.hlo.txt`` — (X[B,D], W[P,3])           -> (Yhat[B,3],)
+* ``fit_d{d}.hlo.txt``     — (X[N,D], Y[N,3], w[N], λ[]) -> (W[P,3],)
+* ``loss_d{d}.hlo.txt``    — (X[N,D], Y[N,3], w[N], W[P,3]) -> (mse[3],)
+
+plus ``manifest.json`` describing every artifact's shapes and the feature
+ordering contract, which ``rust/src/runtime/artifact.rs`` consumes.
+
+Python runs exactly once (``make artifacts``); the rust binary is
+self-contained afterwards.
+"""
+
+from __future__ import annotations
+
+import argparse
+import hashlib
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model
+from .kernels import poly
+
+# Fixed-shape contract shared with the rust runtime (see DESIGN.md §3).
+D = poly.DEFAULT_D          # design-space feature dimension
+M = 3                       # targets: [power_mW, fmax_MHz, area_mm2]
+N_FIT = 2048                # fit/loss row capacity (padding masked by w=0)
+B_PREDICT = 256             # predict batch tile
+B_GRAM = 256                # gram accumulation tile (Grams are additive,
+                            # so the rust engine chunks arbitrary row
+                            # counts through this tile)
+DEGREES = (1, 2, 3)
+
+F32 = jnp.float32
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (return_tuple=True)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    # print_large_constants: the default elides arrays >10 elements as
+    # literal "{...}", which the HLO text parser silently turns into
+    # garbage — the baked monomial index vectors MUST round-trip.
+    return comp.as_hlo_text(print_large_constants=True)
+
+
+def _spec(*shape):
+    return jax.ShapeDtypeStruct(shape, F32)
+
+
+def lower_all() -> dict[str, str]:
+    """Lower every artifact; returns {filename: hlo_text}."""
+    out: dict[str, str] = {}
+    for d in DEGREES:
+        predict = lambda x, w, _d=d: (model.predict_fn(x, w, _d),)
+        fit = lambda x, y, w, lam, _d=d: (model.fit_fn(x, y, w, lam, _d),)
+        loss = lambda x, y, w, coef, _d=d: (model.loss_fn(x, y, w, coef, _d),)
+        gram = lambda x, y, w, _d=d: model.gram_fn(x, y, w, _d)
+        solve = lambda g, c, n, lam: (model.solve_fn(g, c, n, lam),)
+        p = poly.num_features(D, d)
+
+        out[f"predict_d{d}.hlo.txt"] = to_hlo_text(
+            jax.jit(predict).lower(_spec(B_PREDICT, D), _spec(p, M)))
+        out[f"fit_d{d}.hlo.txt"] = to_hlo_text(
+            jax.jit(fit).lower(_spec(N_FIT, D), _spec(N_FIT, M),
+                               _spec(N_FIT), _spec()))
+        out[f"loss_d{d}.hlo.txt"] = to_hlo_text(
+            jax.jit(loss).lower(_spec(N_FIT, D), _spec(N_FIT, M),
+                                _spec(N_FIT), _spec(p, M)))
+        # CV fast path: per-fold Gram accumulation + cheap per-lambda solve
+        out[f"gram_d{d}.hlo.txt"] = to_hlo_text(
+            jax.jit(gram).lower(_spec(B_GRAM, D), _spec(B_GRAM, M),
+                                _spec(B_GRAM)))
+        out[f"solve_d{d}.hlo.txt"] = to_hlo_text(
+            jax.jit(solve).lower(_spec(p, p), _spec(p, M), _spec(), _spec()))
+    return out
+
+
+def manifest() -> dict:
+    arts = {}
+    for d in DEGREES:
+        p = poly.num_features(D, d)
+        arts[f"predict_d{d}"] = {
+            "file": f"predict_d{d}.hlo.txt", "degree": d, "p": p,
+            "inputs": [["x", [B_PREDICT, D]], ["w", [p, M]]],
+            "outputs": [["yhat", [B_PREDICT, M]]],
+        }
+        arts[f"fit_d{d}"] = {
+            "file": f"fit_d{d}.hlo.txt", "degree": d, "p": p,
+            "inputs": [["x", [N_FIT, D]], ["y", [N_FIT, M]],
+                       ["w", [N_FIT]], ["lam", []]],
+            "outputs": [["coef", [p, M]]],
+        }
+        arts[f"loss_d{d}"] = {
+            "file": f"loss_d{d}.hlo.txt", "degree": d, "p": p,
+            "inputs": [["x", [N_FIT, D]], ["y", [N_FIT, M]],
+                       ["w", [N_FIT]], ["coef", [p, M]]],
+            "outputs": [["mse", [M]]],
+        }
+        arts[f"gram_d{d}"] = {
+            "file": f"gram_d{d}.hlo.txt", "degree": d, "p": p,
+            "inputs": [["x", [B_GRAM, D]], ["y", [B_GRAM, M]], ["w", [B_GRAM]]],
+            "outputs": [["g", [p, p]], ["c", [p, M]], ["n_eff", []]],
+        }
+        arts[f"solve_d{d}"] = {
+            "file": f"solve_d{d}.hlo.txt", "degree": d, "p": p,
+            "inputs": [["g", [p, p]], ["c", [p, M]], ["n_eff", []], ["lam", []]],
+            "outputs": [["coef", [p, M]]],
+        }
+    return {
+        "version": 1,
+        "d": D,
+        "m": M,
+        "n_fit": N_FIT,
+        "b_predict": B_PREDICT,
+        "b_gram": B_GRAM,
+        "degrees": list(DEGREES),
+        "feature_order": [
+            "pe_rows", "pe_cols", "glb_kb",
+            "spad_ifmap_b", "spad_filter_b", "spad_psum_b", "bandwidth_gbps",
+        ],
+        "target_order": ["power_mw", "fmax_mhz", "area_mm2"],
+        "monomials": {
+            str(d): [list(t) for t in poly.monomial_indices(D, d)]
+            for d in DEGREES
+        },
+        "artifacts": arts,
+    }
+
+
+def golden() -> dict:
+    """Deterministic test vectors for the rust runtime's integration tests.
+
+    For each degree: a predict case (full B tile) and a fit case (padded to
+    N_FIT with w=0) with expected outputs computed by the in-process L2
+    functions — the rust side must reproduce them through the artifacts.
+    """
+    import numpy as np
+
+    out: dict = {"cases": {}}
+    for d in DEGREES:
+        rng = np.random.default_rng(1000 + d)
+        p = poly.num_features(D, d)
+        x = rng.uniform(-1.5, 1.5, (B_PREDICT, D)).astype(np.float32)
+        w = (rng.standard_normal((p, M)) * 0.5).astype(np.float32)
+        yhat = np.asarray(model.predict_fn(jnp.asarray(x), jnp.asarray(w), d))
+
+        n_real = 384
+        fx = np.zeros((N_FIT, D), np.float32)
+        fy = np.zeros((N_FIT, M), np.float32)
+        fw = np.zeros((N_FIT,), np.float32)
+        fx[:n_real] = rng.uniform(-1, 1, (n_real, D))
+        fy[:n_real] = rng.standard_normal((n_real, M))
+        fw[:n_real] = 1.0
+        lam = 0.01
+        coef = np.asarray(model.fit_fn(jnp.asarray(fx), jnp.asarray(fy),
+                                       jnp.asarray(fw), jnp.float32(lam), d))
+        mse = np.asarray(model.loss_fn(jnp.asarray(fx), jnp.asarray(fy),
+                                       jnp.asarray(fw), jnp.asarray(coef), d))
+        out["cases"][str(d)] = {
+            "predict": {
+                "x": x.ravel().tolist(),
+                "w": w.ravel().tolist(),
+                "yhat": yhat.ravel().tolist(),
+            },
+            "fit": {
+                "n_real": n_real,
+                "x": fx[:n_real].ravel().tolist(),
+                "y": fy[:n_real].ravel().tolist(),
+                "lam": lam,
+                "coef": coef.ravel().tolist(),
+                "mse": mse.ravel().tolist(),
+            },
+        }
+    return out
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="../artifacts/model.hlo.txt",
+                    help="path of the stamp artifact; siblings are emitted "
+                         "into its directory")
+    args = ap.parse_args()
+    out_dir = os.path.dirname(os.path.abspath(args.out)) or "."
+    os.makedirs(out_dir, exist_ok=True)
+
+    texts = lower_all()
+    for name, text in sorted(texts.items()):
+        path = os.path.join(out_dir, name)
+        with open(path, "w") as f:
+            f.write(text)
+        print(f"wrote {path} ({len(text)} chars)")
+
+    man = manifest()
+    man["hlo_sha256"] = {
+        name: hashlib.sha256(text.encode()).hexdigest()[:16]
+        for name, text in texts.items()
+    }
+    with open(os.path.join(out_dir, "manifest.json"), "w") as f:
+        json.dump(man, f, indent=1, sort_keys=True)
+    print(f"wrote {os.path.join(out_dir, 'manifest.json')}")
+
+    with open(os.path.join(out_dir, "golden.json"), "w") as f:
+        json.dump(golden(), f)
+    print(f"wrote {os.path.join(out_dir, 'golden.json')}")
+
+    # Makefile stamp target: make's freshness check keys on this file.
+    with open(os.path.join(out_dir, "model.hlo.txt"), "w") as f:
+        f.write("".join(f"{n}\n" for n in sorted(texts)))
+    print(f"stamped {args.out}")
+
+
+if __name__ == "__main__":
+    main()

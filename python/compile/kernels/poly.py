@@ -1,0 +1,250 @@
+"""Layer-1 Pallas kernels for QAPPA's polynomial PPA models.
+
+Three kernels, all blocked over the design-point (row) dimension so each
+block's working set fits VMEM on a real TPU (see DESIGN.md §4):
+
+* ``polyfeat``  — X[B, D]          -> F[B, P]  monomial feature expansion
+* ``predict``   — X[B, D], W[P, M] -> Y[B, M]  fused expansion + matmul (MXU)
+* ``gram``      — X[N, D], y[N, M], w[N] -> (G[P, P], C[P, M]) weighted
+                  normal-equation accumulators  G = F' diag(w) F,
+                  C = F' diag(w) y, accumulated block-by-block in VMEM.
+
+All kernels are lowered with ``interpret=True``: the CPU PJRT client that the
+rust coordinator embeds cannot execute Mosaic custom calls.  On a real TPU the
+same BlockSpecs map the expansion to the VPU and the two matmuls to the MXU.
+
+The monomial index sets are a property of (D, degree), not data; Pallas does
+not allow kernels to close over constant arrays, so they are fed as small
+int32 operands (one gather-index vector per monomial degree x position) that
+constant-fold into the AOT artifact.  The expansion itself is a handful of
+gathers and elementwise multiplies — no dynamic control flow on the hot path.
+"""
+
+from __future__ import annotations
+
+import functools
+import itertools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+
+# Feature dimension used by the shipped artifacts: [pe_rows, pe_cols, glb_kb,
+# spad_ifmap, spad_filter, spad_psum, bandwidth].  Kept symbolic everywhere so
+# the kernels (and tests) work for any D.
+DEFAULT_D = 7
+
+# Row-block size: 128 rows x 120 features (degree 3) of f32 is ~60 KiB of
+# VMEM for the feature tile — small enough to double-buffer.
+DEFAULT_BLOCK = 128
+
+
+def monomial_indices(d: int, degree: int) -> list[tuple[int, ...]]:
+    """All monomials of total degree 1..``degree`` over ``d`` variables.
+
+    Returned in a canonical order (degree-major, then lexicographic index
+    tuples with repetition).  The constant term is *not* included here; the
+    feature matrix is ``[1, monomials...]`` so ``P = 1 + len(indices)``.
+    """
+    if d <= 0:
+        raise ValueError(f"d must be positive, got {d}")
+    if degree < 1:
+        raise ValueError(f"degree must be >= 1, got {degree}")
+    out: list[tuple[int, ...]] = []
+    for k in range(1, degree + 1):
+        out.extend(itertools.combinations_with_replacement(range(d), k))
+    return out
+
+
+def num_features(d: int, degree: int) -> int:
+    """P — number of polynomial features including the constant column."""
+    return 1 + len(monomial_indices(d, degree))
+
+
+def _gather_plan(d: int, degree: int):
+    """Group monomials by degree k into gather-index vectors.
+
+    Returns ``(meta, arrays)`` where ``meta`` is ``[(k, n_k), ...]`` (static,
+    baked into the kernel) and ``arrays`` is the flat list of int32 index
+    vectors (length k per group) passed as kernel operands.
+    """
+    by_deg: dict[int, list[tuple[int, ...]]] = {}
+    for t in monomial_indices(d, degree):
+        by_deg.setdefault(len(t), []).append(t)
+    meta: list[tuple[int, int]] = []
+    arrays: list[np.ndarray] = []
+    for k in sorted(by_deg):
+        tuples = by_deg[k]
+        meta.append((k, len(tuples)))
+        for pos in range(k):
+            arrays.append(np.asarray([t[pos] for t in tuples], np.int32))
+    return meta, arrays
+
+
+def _expand_block(x: jax.Array, idx_refs, meta) -> jax.Array:
+    """Expand a [b, D] block into [b, P] monomial features.
+
+    Gathers are grouped by monomial degree so each degree is one ``take`` per
+    operand position followed by elementwise products — VPU-friendly.
+    """
+    b = x.shape[0]
+    cols = [jnp.ones((b, 1), x.dtype)]
+    it = iter(idx_refs)
+    for k, _n_k in meta:
+        prod = None
+        for _pos in range(k):
+            # mode='clip': indices are static and always in-bounds; the
+            # default 'fill' mode wraps the gather in an out-of-bounds ->
+            # NaN select whose shared callee miscompiles through the HLO
+            # text round-trip (xla_extension 0.5.1 text parser).
+            g = jnp.take(x, next(it)[...], axis=1, mode="clip")
+            prod = g if prod is None else prod * g
+        cols.append(prod)
+    return jnp.concatenate(cols, axis=1)
+
+
+def _idx_specs(meta):
+    specs = []
+    for k, n_k in meta:
+        specs.extend([pl.BlockSpec((n_k,), lambda i: (0,))] * k)
+    return specs
+
+
+def _check_block(total: int, block: int, what: str) -> int:
+    block = min(block, total)
+    if total % block:
+        raise ValueError(f"{what}={total} not a multiple of block={block}")
+    return block
+
+
+def auto_block(total: int, block: int = DEFAULT_BLOCK) -> int:
+    """Largest divisor of ``total`` that is <= ``block``.
+
+    The AOT artifacts use shapes that are multiples of DEFAULT_BLOCK; this
+    helper lets the L2 model functions accept arbitrary row counts in tests.
+    """
+    block = min(block, total)
+    while total % block:
+        block -= 1
+    return block
+
+
+# ---------------------------------------------------------------------------
+# polyfeat
+# ---------------------------------------------------------------------------
+
+
+def _polyfeat_kernel(x_ref, *refs, meta):
+    f_ref = refs[-1]
+    f_ref[...] = _expand_block(x_ref[...], refs[:-1], meta)
+
+
+def polyfeat(x: jax.Array, degree: int, block: int = DEFAULT_BLOCK) -> jax.Array:
+    """Pallas polynomial feature expansion: [B, D] -> [B, P].
+
+    ``B`` must be a multiple of ``block`` (the AOT wrapper pads; tests sweep
+    odd sizes through ``block=B``).
+    """
+    b_total, d = x.shape
+    block = _check_block(b_total, block, "B")
+    meta, arrays = _gather_plan(d, degree)
+    p = num_features(d, degree)
+    return pl.pallas_call(
+        functools.partial(_polyfeat_kernel, meta=meta),
+        grid=(b_total // block,),
+        in_specs=[pl.BlockSpec((block, d), lambda i: (i, 0)), *_idx_specs(meta)],
+        out_specs=pl.BlockSpec((block, p), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((b_total, p), x.dtype),
+        interpret=True,
+    )(x, *arrays)
+
+
+# ---------------------------------------------------------------------------
+# predict (fused expansion + matmul)
+# ---------------------------------------------------------------------------
+
+
+def _predict_kernel(x_ref, *refs, meta):
+    w_ref, y_ref = refs[-2], refs[-1]
+    f = _expand_block(x_ref[...], refs[:-2], meta)
+    # [b, P] @ [P, M] — the MXU op on real hardware.
+    y_ref[...] = jnp.dot(f, w_ref[...], preferred_element_type=jnp.float32)
+
+
+def predict(x: jax.Array, w: jax.Array, degree: int,
+            block: int = DEFAULT_BLOCK) -> jax.Array:
+    """Fused polynomial model evaluation: [B, D], [P, M] -> [B, M]."""
+    b_total, d = x.shape
+    block = _check_block(b_total, block, "B")
+    meta, arrays = _gather_plan(d, degree)
+    p = num_features(d, degree)
+    if w.shape[0] != p:
+        raise ValueError(f"W has {w.shape[0]} rows, expected P={p}")
+    m = w.shape[1]
+    return pl.pallas_call(
+        functools.partial(_predict_kernel, meta=meta),
+        grid=(b_total // block,),
+        in_specs=[
+            pl.BlockSpec((block, d), lambda i: (i, 0)),
+            *_idx_specs(meta),
+            pl.BlockSpec((p, m), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((block, m), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((b_total, m), x.dtype),
+        interpret=True,
+    )(x, *arrays, w)
+
+
+# ---------------------------------------------------------------------------
+# gram (weighted normal-equation accumulators)
+# ---------------------------------------------------------------------------
+
+
+def _gram_kernel(x_ref, y_ref, w_ref, *refs, meta):
+    g_ref, c_ref = refs[-2], refs[-1]
+    i = pl.program_id(0)
+    f = _expand_block(x_ref[...], refs[:-2], meta)
+    fw = f * w_ref[...][:, None]
+
+    @pl.when(i == 0)
+    def _init():
+        g_ref[...] = jnp.zeros_like(g_ref)
+        c_ref[...] = jnp.zeros_like(c_ref)
+
+    g_ref[...] += jnp.dot(fw.T, f, preferred_element_type=jnp.float32)
+    c_ref[...] += jnp.dot(fw.T, y_ref[...], preferred_element_type=jnp.float32)
+
+
+def gram(x: jax.Array, y: jax.Array, w: jax.Array, degree: int,
+         block: int = DEFAULT_BLOCK) -> tuple[jax.Array, jax.Array]:
+    """Blocked weighted Gram accumulation.
+
+    Returns ``G = F' diag(w) F`` ([P, P]) and ``C = F' diag(w) y`` ([P, M]).
+    The G/C output blocks revisit the same VMEM tile across the whole grid,
+    so the accumulation never leaves VMEM on real hardware.
+    """
+    n_total, d = x.shape
+    block = _check_block(n_total, block, "N")
+    meta, arrays = _gather_plan(d, degree)
+    p = num_features(d, degree)
+    m = y.shape[1]
+    return pl.pallas_call(
+        functools.partial(_gram_kernel, meta=meta),
+        grid=(n_total // block,),
+        in_specs=[
+            pl.BlockSpec((block, d), lambda i: (i, 0)),
+            pl.BlockSpec((block, m), lambda i: (i, 0)),
+            pl.BlockSpec((block,), lambda i: (i,)),
+            *_idx_specs(meta),
+        ],
+        out_specs=[
+            pl.BlockSpec((p, p), lambda i: (0, 0)),
+            pl.BlockSpec((p, m), lambda i: (0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((p, p), x.dtype),
+            jax.ShapeDtypeStruct((p, m), x.dtype),
+        ],
+        interpret=True,
+    )(x, y, w, *arrays)

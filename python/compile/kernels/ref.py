@@ -1,0 +1,62 @@
+"""Pure-jnp oracle for the Pallas kernels (no pallas, no shared helpers).
+
+Deliberately written with naive per-monomial loops so it cannot share a bug
+with the vectorized kernel implementations in ``poly.py``.
+"""
+
+from __future__ import annotations
+
+import itertools
+
+import jax.numpy as jnp
+
+
+def monomial_indices_ref(d: int, degree: int) -> list[tuple[int, ...]]:
+    out: list[tuple[int, ...]] = []
+    for k in range(1, degree + 1):
+        out.extend(itertools.combinations_with_replacement(range(d), k))
+    return out
+
+
+def polyfeat_ref(x: jnp.ndarray, degree: int) -> jnp.ndarray:
+    """[B, D] -> [B, P]: naive column-by-column monomial expansion."""
+    b, d = x.shape
+    cols = [jnp.ones((b,), x.dtype)]
+    for tup in monomial_indices_ref(d, degree):
+        col = jnp.ones((b,), x.dtype)
+        for j in tup:
+            col = col * x[:, j]
+        cols.append(col)
+    return jnp.stack(cols, axis=1)
+
+
+def predict_ref(x: jnp.ndarray, w: jnp.ndarray, degree: int) -> jnp.ndarray:
+    return polyfeat_ref(x, degree) @ w
+
+
+def gram_ref(x: jnp.ndarray, y: jnp.ndarray, w: jnp.ndarray,
+             degree: int) -> tuple[jnp.ndarray, jnp.ndarray]:
+    f = polyfeat_ref(x, degree)
+    fw = f * w[:, None]
+    return fw.T @ f, fw.T @ y
+
+
+def ridge_fit_ref(x: jnp.ndarray, y: jnp.ndarray, w: jnp.ndarray,
+                  lam: float, degree: int) -> jnp.ndarray:
+    """Reference weighted ridge solve using jnp.linalg (LAPACK is fine in
+    pytest — it is only the AOT path that must avoid custom calls)."""
+    g, c = gram_ref(x, y, w, degree)
+    n_eff = jnp.maximum(jnp.sum(w), 1.0)
+    p = g.shape[0]
+    # Intercept (feature 0) is not penalized.
+    pen = jnp.ones((p,)).at[0].set(0.0)
+    a = g / n_eff + lam * jnp.diag(pen)
+    return jnp.linalg.solve(a, c / n_eff)
+
+
+def mse_ref(x: jnp.ndarray, y: jnp.ndarray, w: jnp.ndarray,
+            coef: jnp.ndarray, degree: int) -> jnp.ndarray:
+    """Weighted per-output MSE, matching model.loss_fn's contract."""
+    err = predict_ref(x, coef, degree) - y
+    n_eff = jnp.maximum(jnp.sum(w), 1.0)
+    return jnp.sum(w[:, None] * err * err, axis=0) / n_eff

@@ -1,0 +1,139 @@
+"""Layer-2 JAX model: weighted polynomial ridge regression for PPA fitting.
+
+This is the compute graph the rust coordinator drives via the AOT artifacts:
+
+* ``fit_fn``     — normal-equation ridge solve (Gram via the L1 Pallas kernel,
+                   Cholesky factorization/solve hand-rolled with ``fori_loop``
+                   so the lowered HLO contains NO LAPACK custom calls — the
+                   PJRT CPU client used from rust cannot resolve them).
+* ``predict_fn`` — fused polynomial evaluation (L1 Pallas kernel).
+* ``loss_fn``    — weighted per-output MSE on a held-out (masked) set; used
+                   by the rust side's k-fold cross-validation loop.
+
+Fixed-shape contract (HLO is static): the rust side pads the row dimension
+and masks padding with ``w = 0``.  Fold selection in k-fold CV is likewise a
+0/1 weight vector, so a single fit artifact serves every fold.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from .kernels import poly
+
+
+# ---------------------------------------------------------------------------
+# LAPACK-free linear algebra (lowered into the AOT artifacts)
+# ---------------------------------------------------------------------------
+
+
+def cholesky(a: jax.Array) -> jax.Array:
+    """Lower-triangular Cholesky factor via column-wise Banachiewicz.
+
+    Pure ``fori_loop`` + vector ops: lowers to a plain HLO while-loop with
+    dynamic-update-slice — runs on any PJRT backend.
+    """
+    p = a.shape[0]
+    rng = jnp.arange(p)
+
+    def body(j, l):
+        lt = (rng < j).astype(a.dtype)          # columns strictly left of j
+        row_j = l[j] * lt                        # [P] — L[j, :j]
+        s = l @ row_j                            # s_i = sum_{k<j} L[i,k] L[j,k]
+        d = jnp.sqrt(jnp.maximum(a[j, j] - s[j], 1e-30))
+        col = (a[:, j] - s) / d
+        col = jnp.where(rng > j, col, 0.0).at[j].set(d)
+        return l.at[:, j].set(col)
+
+    return lax.fori_loop(0, p, body, jnp.zeros_like(a))
+
+
+def solve_lower(l: jax.Array, b: jax.Array) -> jax.Array:
+    """Forward substitution: solve L z = b for lower-triangular L; b [P, M]."""
+    p = l.shape[0]
+
+    def body(i, z):
+        zi = (b[i] - l[i] @ z) / l[i, i]
+        return z.at[i].set(zi)
+
+    return lax.fori_loop(0, p, body, jnp.zeros_like(b))
+
+
+def solve_upper(u: jax.Array, b: jax.Array) -> jax.Array:
+    """Back substitution: solve U z = b for upper-triangular U; b [P, M]."""
+    p = u.shape[0]
+
+    def body(k, z):
+        i = p - 1 - k
+        zi = (b[i] - u[i] @ z) / u[i, i]
+        return z.at[i].set(zi)
+
+    return lax.fori_loop(0, p, body, jnp.zeros_like(b))
+
+
+def cholesky_solve(a: jax.Array, b: jax.Array) -> jax.Array:
+    """Solve the SPD system A X = B via Cholesky (no LAPACK)."""
+    l = cholesky(a)
+    return solve_upper(l.T, solve_lower(l, b))
+
+
+# ---------------------------------------------------------------------------
+# Model functions (traced into artifacts by aot.py)
+# ---------------------------------------------------------------------------
+
+
+def gram_fn(x: jax.Array, y: jax.Array, w: jax.Array,
+            degree: int) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """Weighted normal-equation accumulators (un-normalized).
+
+    Returns ``(G, C, n_eff)`` with ``G = F' diag(w) F``,
+    ``C = F' diag(w) y`` and ``n_eff = sum(w)``.  Grams are *additive* over
+    row subsets, which is what makes the k-fold CV fast path possible: the
+    rust coordinator computes one Gram per fold and assembles every
+    training split by subtraction instead of re-reducing all N rows.
+    """
+    g, c = poly.gram(x, y, w, degree, block=poly.auto_block(x.shape[0]))
+    return g, c, jnp.sum(w)
+
+
+def solve_fn(g: jax.Array, c: jax.Array, n_eff: jax.Array,
+             lam: jax.Array) -> jax.Array:
+    """Ridge solve from accumulated Grams: returns W [P, M].
+
+    Solves ``(G / n_eff + lam * Pen) W = C / n_eff`` where ``Pen`` excludes
+    the intercept from the penalty.
+    """
+    n_eff = jnp.maximum(n_eff, 1.0)
+    p = g.shape[0]
+    pen = jnp.ones((p,), g.dtype).at[0].set(0.0)
+    a = g / n_eff + lam * jnp.diag(pen)
+    # Tiny jitter keeps the factorization stable when lam -> 0 and the
+    # degree-3 Gram is near-singular on small folds.
+    a = a + 1e-7 * jnp.eye(p, dtype=g.dtype)
+    return cholesky_solve(a, c / n_eff)
+
+
+def fit_fn(x: jax.Array, y: jax.Array, w: jax.Array, lam: jax.Array,
+           degree: int) -> jax.Array:
+    """Weighted ridge fit: returns coefficients W [P, M].
+
+    ``solve_fn(*gram_fn(...))`` — rows with ``w = 0`` (padding, held-out
+    folds) do not influence the fit.
+    """
+    g, c, n_eff = gram_fn(x, y, w, degree)
+    return solve_fn(g, c, n_eff, lam)
+
+
+def predict_fn(x: jax.Array, coef: jax.Array, degree: int) -> jax.Array:
+    """Batched model evaluation: [B, D], [P, M] -> [B, M]."""
+    return poly.predict(x, coef, degree, block=poly.auto_block(x.shape[0]))
+
+
+def loss_fn(x: jax.Array, y: jax.Array, w: jax.Array, coef: jax.Array,
+            degree: int) -> jax.Array:
+    """Weighted per-output MSE [M] over the rows selected by ``w``."""
+    err = poly.predict(x, coef, degree, block=poly.auto_block(x.shape[0])) - y
+    n_eff = jnp.maximum(jnp.sum(w), 1.0)
+    return jnp.sum(w[:, None] * err * err, axis=0) / n_eff

@@ -1,0 +1,186 @@
+"""Kernel-vs-reference correctness: the CORE L1 signal.
+
+Hypothesis sweeps shapes, degrees and value ranges; every Pallas kernel must
+agree with the naive pure-jnp oracle in ref.py to tight f32 tolerance.
+"""
+
+import hypothesis
+import hypothesis.strategies as st
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+
+from compile.kernels import poly, ref
+
+jax.config.update("jax_enable_x64", False)
+
+COMMON = dict(deadline=None, max_examples=25,
+              suppress_health_check=[hypothesis.HealthCheck.too_slow])
+
+
+def _x(rng, b, d, scale=2.0):
+    return jnp.asarray(rng.uniform(-scale, scale, (b, d)).astype(np.float32))
+
+
+# ---------------------------------------------------------------------------
+# monomial index sets
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("d,degree,p", [
+    (7, 1, 8), (7, 2, 36), (7, 3, 120),  # the shipped D=7 contract
+    (1, 3, 4), (2, 2, 6), (3, 1, 4),
+])
+def test_num_features(d, degree, p):
+    assert poly.num_features(d, degree) == p
+    assert len(poly.monomial_indices(d, degree)) == p - 1
+
+
+@given(d=st.integers(1, 8), degree=st.integers(1, 3))
+@settings(**COMMON)
+def test_monomial_indices_match_ref(d, degree):
+    assert poly.monomial_indices(d, degree) == ref.monomial_indices_ref(d, degree)
+
+
+def test_monomial_indices_sorted_within_tuple():
+    for t in poly.monomial_indices(7, 3):
+        assert list(t) == sorted(t)
+
+
+def test_monomial_indices_rejects_bad_args():
+    with pytest.raises(ValueError):
+        poly.monomial_indices(0, 2)
+    with pytest.raises(ValueError):
+        poly.monomial_indices(3, 0)
+
+
+# ---------------------------------------------------------------------------
+# polyfeat kernel
+# ---------------------------------------------------------------------------
+
+
+@given(b=st.sampled_from([1, 2, 3, 8, 17, 64]),
+       d=st.integers(1, 8), degree=st.integers(1, 3),
+       seed=st.integers(0, 2**31 - 1))
+@settings(**COMMON)
+def test_polyfeat_matches_ref(b, d, degree, seed):
+    x = _x(np.random.default_rng(seed), b, d)
+    got = poly.polyfeat(x, degree, block=b)
+    want = ref.polyfeat_ref(x, degree)
+    np.testing.assert_allclose(got, want, rtol=1e-6, atol=1e-6)
+
+
+@pytest.mark.parametrize("block", [32, 64, 128])
+def test_polyfeat_blocked_grid(block):
+    """Multi-block grids must tile the row dimension transparently."""
+    rng = np.random.default_rng(0)
+    x = _x(rng, 256, 7)
+    got = poly.polyfeat(x, 2, block=block)
+    want = ref.polyfeat_ref(x, 2)
+    np.testing.assert_allclose(got, want, rtol=1e-6, atol=1e-6)
+
+
+def test_polyfeat_rejects_misaligned_block():
+    x = jnp.zeros((100, 7), jnp.float32)
+    with pytest.raises(ValueError):
+        poly.polyfeat(x, 2, block=64)
+
+
+def test_polyfeat_constant_column_is_one():
+    x = _x(np.random.default_rng(1), 64, 7)
+    f = poly.polyfeat(x, 3, block=64)
+    np.testing.assert_allclose(f[:, 0], np.ones(64), atol=0)
+
+
+# ---------------------------------------------------------------------------
+# predict kernel (fused expansion + matmul)
+# ---------------------------------------------------------------------------
+
+
+@given(b=st.sampled_from([1, 4, 32, 128]), d=st.integers(1, 8),
+       degree=st.integers(1, 3), m=st.integers(1, 4),
+       seed=st.integers(0, 2**31 - 1))
+@settings(**COMMON)
+def test_predict_matches_ref(b, d, degree, m, seed):
+    rng = np.random.default_rng(seed)
+    x = _x(rng, b, d)
+    p = poly.num_features(d, degree)
+    w = jnp.asarray(rng.standard_normal((p, m)).astype(np.float32))
+    got = poly.predict(x, w, degree, block=b)
+    want = ref.predict_ref(x, w, degree)
+    np.testing.assert_allclose(got, want, rtol=2e-5, atol=2e-5)
+
+
+def test_predict_shape_mismatch_raises():
+    x = jnp.zeros((8, 7), jnp.float32)
+    w = jnp.zeros((10, 3), jnp.float32)  # P should be 36 for degree 2
+    with pytest.raises(ValueError):
+        poly.predict(x, w, 2, block=8)
+
+
+def test_predict_multiblock_equals_singleblock():
+    rng = np.random.default_rng(7)
+    x = _x(rng, 512, 7)
+    w = jnp.asarray(rng.standard_normal((36, 3)).astype(np.float32))
+    a = poly.predict(x, w, 2, block=512)
+    b = poly.predict(x, w, 2, block=64)
+    np.testing.assert_allclose(a, b, rtol=1e-6, atol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# gram kernel (blocked weighted accumulation)
+# ---------------------------------------------------------------------------
+
+
+@given(n=st.sampled_from([1, 2, 16, 96]), d=st.integers(1, 7),
+       degree=st.integers(1, 3), seed=st.integers(0, 2**31 - 1))
+@settings(**COMMON)
+def test_gram_matches_ref(n, d, degree, seed):
+    rng = np.random.default_rng(seed)
+    x = _x(rng, n, d, scale=1.5)
+    y = jnp.asarray(rng.standard_normal((n, 3)).astype(np.float32))
+    w = jnp.asarray(rng.uniform(0, 1, n).astype(np.float32))
+    g, c = poly.gram(x, y, w, degree, block=n)
+    g_ref, c_ref = ref.gram_ref(x, y, w, degree)
+    np.testing.assert_allclose(g, g_ref, rtol=3e-5, atol=3e-5)
+    np.testing.assert_allclose(c, c_ref, rtol=3e-5, atol=3e-5)
+
+
+@pytest.mark.parametrize("block", [32, 128])
+def test_gram_blocked_accumulation(block):
+    """Accumulating across grid steps == one-shot reference."""
+    rng = np.random.default_rng(3)
+    n = 256
+    x = _x(rng, n, 7, scale=1.0)
+    y = jnp.asarray(rng.standard_normal((n, 3)).astype(np.float32))
+    w = jnp.asarray(rng.uniform(0, 1, n).astype(np.float32))
+    g, c = poly.gram(x, y, w, 2, block=block)
+    g_ref, c_ref = ref.gram_ref(x, y, w, 2)
+    np.testing.assert_allclose(g, g_ref, rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(c, c_ref, rtol=1e-4, atol=1e-4)
+
+
+def test_gram_zero_weights_rows_ignored():
+    rng = np.random.default_rng(4)
+    x = _x(rng, 128, 7)
+    y = jnp.asarray(rng.standard_normal((128, 3)).astype(np.float32))
+    w = jnp.concatenate([jnp.ones(64), jnp.zeros(64)]).astype(jnp.float32)
+    g_full, c_full = poly.gram(x, y, w, 2, block=64)
+    g_half, c_half = poly.gram(x[:64], y[:64], jnp.ones(64, jnp.float32), 2,
+                               block=64)
+    np.testing.assert_allclose(g_full, g_half, rtol=1e-5, atol=1e-5)
+    np.testing.assert_allclose(c_full, c_half, rtol=1e-5, atol=1e-5)
+
+
+def test_gram_is_symmetric_psd():
+    rng = np.random.default_rng(5)
+    x = _x(rng, 128, 7)
+    y = jnp.zeros((128, 3), jnp.float32)
+    w = jnp.ones(128, jnp.float32)
+    g, _ = poly.gram(x, y, w, 2, block=128)
+    g = np.asarray(g)
+    np.testing.assert_allclose(g, g.T, rtol=1e-5, atol=1e-4)
+    eig = np.linalg.eigvalsh(g.astype(np.float64))
+    assert eig.min() > -1e-2 * max(1.0, eig.max())

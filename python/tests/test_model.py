@@ -1,0 +1,194 @@
+"""L2 model tests: LAPACK-free linear algebra + ridge fit behaviour."""
+
+import hypothesis
+import hypothesis.strategies as st
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+
+from compile import model
+from compile.kernels import poly, ref
+
+jax.config.update("jax_enable_x64", False)
+
+COMMON = dict(deadline=None, max_examples=20,
+              suppress_health_check=[hypothesis.HealthCheck.too_slow])
+
+
+def _spd(rng, p, cond=10.0):
+    """Random well-conditioned SPD matrix."""
+    q, _ = np.linalg.qr(rng.standard_normal((p, p)))
+    eig = np.linspace(1.0, cond, p)
+    return (q * eig) @ q.T
+
+
+# ---------------------------------------------------------------------------
+# Cholesky + triangular solves (the hand-rolled, scan-based linalg)
+# ---------------------------------------------------------------------------
+
+
+@given(p=st.integers(1, 24), seed=st.integers(0, 2**31 - 1))
+@settings(**COMMON)
+def test_cholesky_matches_numpy(p, seed):
+    a = _spd(np.random.default_rng(seed), p).astype(np.float32)
+    l = np.asarray(model.cholesky(jnp.asarray(a)))
+    want = np.linalg.cholesky(a.astype(np.float64))
+    np.testing.assert_allclose(l, want, rtol=2e-3, atol=2e-3)
+    # strictly lower-triangular output
+    assert np.allclose(np.triu(l, 1), 0.0)
+
+
+@given(p=st.integers(1, 24), m=st.integers(1, 4),
+       seed=st.integers(0, 2**31 - 1))
+@settings(**COMMON)
+def test_cholesky_solve_roundtrip(p, m, seed):
+    rng = np.random.default_rng(seed)
+    a = _spd(rng, p).astype(np.float32)
+    b = rng.standard_normal((p, m)).astype(np.float32)
+    x = np.asarray(model.cholesky_solve(jnp.asarray(a), jnp.asarray(b)))
+    np.testing.assert_allclose(a @ x, b, rtol=5e-3, atol=5e-3)
+
+
+def test_solve_lower_upper_unit():
+    l = jnp.asarray([[2.0, 0.0], [1.0, 3.0]], jnp.float32)
+    b = jnp.asarray([[4.0], [11.0]], jnp.float32)
+    z = model.solve_lower(l, b)
+    np.testing.assert_allclose(z, [[2.0], [3.0]], rtol=1e-6)
+    u = l.T
+    z2 = model.solve_upper(u, jnp.asarray([[7.0], [9.0]], jnp.float32))
+    np.testing.assert_allclose(u @ z2, [[7.0], [9.0]], rtol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# fit / loss
+# ---------------------------------------------------------------------------
+
+
+def test_fit_recovers_planted_polynomial():
+    """fit_fn must recover coefficients of an exactly-polynomial target."""
+    rng = np.random.default_rng(0)
+    n, d, degree = 256, 4, 2
+    p = poly.num_features(d, degree)
+    x = jnp.asarray(rng.uniform(-1, 1, (n, d)).astype(np.float32))
+    coef_true = jnp.asarray(rng.standard_normal((p, 3)).astype(np.float32))
+    y = ref.predict_ref(x, coef_true, degree)
+    w = jnp.ones((n,), jnp.float32)
+    coef = model.fit_fn(x, y, w, jnp.float32(0.0), degree)
+    np.testing.assert_allclose(coef, coef_true, rtol=5e-2, atol=5e-3)
+    mse = model.loss_fn(x, y, w, coef, degree)
+    assert float(jnp.max(mse)) < 1e-5
+
+
+def test_fit_matches_lapack_reference():
+    rng = np.random.default_rng(1)
+    n, d, degree = 200, 7, 2
+    x = jnp.asarray(rng.uniform(-1, 1, (n, d)).astype(np.float32))
+    y = jnp.asarray(rng.standard_normal((n, 3)).astype(np.float32))
+    w = jnp.asarray(rng.uniform(0.2, 1, n).astype(np.float32))
+    lam = 0.01
+    got = model.fit_fn(x, y, w, jnp.float32(lam), degree)
+    want = ref.ridge_fit_ref(x, y, w, lam, degree)
+    np.testing.assert_allclose(got, want, rtol=2e-2, atol=2e-2)
+
+
+def test_fit_ignores_zero_weight_rows():
+    rng = np.random.default_rng(2)
+    n, d, degree = 128, 5, 2
+    x = jnp.asarray(rng.uniform(-1, 1, (n, d)).astype(np.float32))
+    y = jnp.asarray(rng.standard_normal((n, 3)).astype(np.float32))
+    w_full = jnp.concatenate([jnp.ones(96), jnp.zeros(32)]).astype(jnp.float32)
+    a = model.fit_fn(x, y, w_full, jnp.float32(0.1), degree)
+    # corrupt the masked rows wildly — the fit must not move
+    y2 = y.at[96:].set(1e3)
+    x2 = x.at[96:].set(0.5)
+    b = model.fit_fn(x2, y2, w_full, jnp.float32(0.1), degree)
+    np.testing.assert_allclose(a, b, rtol=1e-4, atol=1e-4)
+
+
+def test_ridge_regularization_shrinks_coefficients():
+    rng = np.random.default_rng(3)
+    n, d, degree = 128, 7, 3
+    x = jnp.asarray(rng.uniform(-1, 1, (n, d)).astype(np.float32))
+    y = jnp.asarray(rng.standard_normal((n, 3)).astype(np.float32))
+    w = jnp.ones((n,), jnp.float32)
+    small = model.fit_fn(x, y, w, jnp.float32(1e-4), degree)
+    big = model.fit_fn(x, y, w, jnp.float32(10.0), degree)
+    # exclude intercept (unpenalized) from the norm comparison
+    assert float(jnp.linalg.norm(big[1:])) < float(jnp.linalg.norm(small[1:]))
+
+
+def test_loss_matches_ref():
+    rng = np.random.default_rng(4)
+    n, d, degree = 64, 7, 2
+    p = poly.num_features(d, degree)
+    x = jnp.asarray(rng.uniform(-1, 1, (n, d)).astype(np.float32))
+    y = jnp.asarray(rng.standard_normal((n, 3)).astype(np.float32))
+    w = jnp.asarray(rng.uniform(0, 1, n).astype(np.float32))
+    coef = jnp.asarray(rng.standard_normal((p, 3)).astype(np.float32))
+    got = model.loss_fn(x, y, w, coef, degree)
+    want = ref.mse_ref(x, y, w, coef, degree)
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+
+def test_kfold_cv_selects_planted_degree():
+    """A degree-2 ground truth must score best at degree 2 under masked CV —
+    the exact protocol the rust coordinator runs against the artifacts."""
+    rng = np.random.default_rng(5)
+    n, d = 240, 4
+    x = jnp.asarray(rng.uniform(-1, 1, (n, d)).astype(np.float32))
+    p2 = poly.num_features(d, 2)
+    coef_true = jnp.asarray(rng.standard_normal((p2, 3)).astype(np.float32))
+    y = ref.predict_ref(x, coef_true, 2)
+    y = y + 0.01 * jnp.asarray(rng.standard_normal(y.shape).astype(np.float32))
+
+    k = 4
+    fold = np.arange(n) % k
+    cv = {}
+    for degree in (1, 2, 3):
+        errs = []
+        for f in range(k):
+            w_tr = jnp.asarray((fold != f).astype(np.float32))
+            w_te = jnp.asarray((fold == f).astype(np.float32))
+            coef = model.fit_fn(x, y, w_tr, jnp.float32(1e-3), degree)
+            errs.append(float(jnp.mean(model.loss_fn(x, y, w_te, coef, degree))))
+        cv[degree] = np.mean(errs)
+    assert cv[2] < cv[1], cv
+    # degree 3 nests degree 2, so it may tie; it must not *beat* 2 by much
+    assert cv[2] < cv[3] * 1.5, cv
+
+
+def test_gram_solve_composition_equals_fit():
+    """fit_fn must be exactly solve_fn(*gram_fn(...)) — the CV fast path's
+    correctness precondition (Gram additivity over folds)."""
+    rng = np.random.default_rng(6)
+    n, d, degree = 160, 7, 2
+    x = jnp.asarray(rng.uniform(-1, 1, (n, d)).astype(np.float32))
+    y = jnp.asarray(rng.standard_normal((n, 3)).astype(np.float32))
+    w = jnp.asarray(rng.uniform(0, 1, n).astype(np.float32))
+    lam = jnp.float32(0.02)
+    g, c, n_eff = model.gram_fn(x, y, w, degree)
+    via_parts = model.solve_fn(g, c, n_eff, lam)
+    direct = model.fit_fn(x, y, w, lam, degree)
+    np.testing.assert_allclose(via_parts, direct, rtol=1e-6, atol=1e-6)
+
+
+def test_gram_additivity_over_folds():
+    """G/C/n_eff computed per fold must sum to the full-data Gram."""
+    rng = np.random.default_rng(7)
+    n, d, degree, k = 120, 5, 2, 3
+    x = jnp.asarray(rng.uniform(-1, 1, (n, d)).astype(np.float32))
+    y = jnp.asarray(rng.standard_normal((n, 3)).astype(np.float32))
+    fold = np.arange(n) % k
+    g_sum = c_sum = n_sum = 0.0
+    for f in range(k):
+        wf = jnp.asarray((fold == f).astype(np.float32))
+        g, c, ne = model.gram_fn(x, y, wf, degree)
+        g_sum = g_sum + g
+        c_sum = c_sum + c
+        n_sum = n_sum + ne
+    g_all, c_all, n_all = model.gram_fn(x, y, jnp.ones(n, jnp.float32), degree)
+    np.testing.assert_allclose(g_sum, g_all, rtol=5e-5, atol=5e-5)
+    np.testing.assert_allclose(c_sum, c_all, rtol=5e-5, atol=5e-5)
+    np.testing.assert_allclose(n_sum, n_all, rtol=1e-6)

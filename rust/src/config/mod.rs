@@ -1,0 +1,276 @@
+//! Accelerator configuration types — the axes of QAPPA's design space.
+//!
+//! A configuration fixes the spatial-array accelerator the paper's RTL
+//! generator would emit: PE type (bit precision + datapath style), PE array
+//! geometry, per-PE scratchpad capacities, global buffer size and device
+//! bandwidth.  `features()` produces the 7-vector consumed by the regression
+//! models, in the exact order pinned by `artifacts/manifest.json`.
+
+use crate::util::json::{obj, Json};
+
+/// Processing-element type: precision + datapath style.
+///
+/// * `Fp32`     — IEEE-754 single-precision multiply-accumulate.
+/// * `Int16`    — 16-bit integer MAC (the paper's normalization baseline).
+/// * `LightPe1` — 8-bit activations x 4-bit weights; the multiply is
+///   replaced by **one** shift (LightNN-style sign + power-of-two weight).
+/// * `LightPe2` — 8-bit activations x 8-bit weights; **two** shift-add
+///   terms (sum of two signed powers of two).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub enum PeType {
+    Fp32,
+    Int16,
+    LightPe1,
+    LightPe2,
+}
+
+pub const ALL_PE_TYPES: [PeType; 4] =
+    [PeType::Fp32, PeType::Int16, PeType::LightPe1, PeType::LightPe2];
+
+impl PeType {
+    pub fn label(self) -> &'static str {
+        match self {
+            PeType::Fp32 => "FP32",
+            PeType::Int16 => "INT16",
+            PeType::LightPe1 => "LightPE-1",
+            PeType::LightPe2 => "LightPE-2",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<PeType> {
+        match s.to_ascii_lowercase().as_str() {
+            "fp32" => Some(PeType::Fp32),
+            "int16" => Some(PeType::Int16),
+            "lightpe1" | "lightpe-1" | "light1" => Some(PeType::LightPe1),
+            "lightpe2" | "lightpe-2" | "light2" => Some(PeType::LightPe2),
+            _ => None,
+        }
+    }
+
+    /// Activation operand width in bits.
+    pub fn act_bits(self) -> u32 {
+        match self {
+            PeType::Fp32 => 32,
+            PeType::Int16 => 16,
+            PeType::LightPe1 | PeType::LightPe2 => 8,
+        }
+    }
+
+    /// Weight operand width in bits.
+    pub fn wt_bits(self) -> u32 {
+        match self {
+            PeType::Fp32 => 32,
+            PeType::Int16 => 16,
+            PeType::LightPe1 => 4,
+            PeType::LightPe2 => 8,
+        }
+    }
+
+    /// Partial-sum (accumulator) width in bits.
+    pub fn psum_bits(self) -> u32 {
+        match self {
+            PeType::Fp32 => 32,
+            PeType::Int16 => 32,
+            // 8b act shifted by up to 7 (1 or 2 terms) + accumulation margin.
+            PeType::LightPe1 => 20,
+            PeType::LightPe2 => 24,
+        }
+    }
+
+    /// Number of shift-add terms replacing the multiplier (0 = real multiply).
+    pub fn shift_terms(self) -> u32 {
+        match self {
+            PeType::Fp32 | PeType::Int16 => 0,
+            PeType::LightPe1 => 1,
+            PeType::LightPe2 => 2,
+        }
+    }
+
+    pub fn is_light(self) -> bool {
+        self.shift_terms() > 0
+    }
+}
+
+/// One point in the accelerator design space.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct AcceleratorConfig {
+    pub pe_type: PeType,
+    /// PE array geometry.
+    pub pe_rows: u32,
+    pub pe_cols: u32,
+    /// Global buffer capacity in KiB.
+    pub glb_kb: u32,
+    /// Per-PE scratchpad capacities in **bytes**.
+    pub spad_ifmap_b: u32,
+    pub spad_filter_b: u32,
+    pub spad_psum_b: u32,
+    /// Device (DRAM) bandwidth in GB/s.
+    pub bandwidth_gbps: f64,
+}
+
+/// Number of regression features (must match `manifest.json: d`).
+pub const NUM_FEATURES: usize = 7;
+
+impl AcceleratorConfig {
+    /// A mid-range Eyeriss-like default used by examples and tests.
+    pub fn default_with(pe_type: PeType) -> AcceleratorConfig {
+        AcceleratorConfig {
+            pe_type,
+            pe_rows: 12,
+            pe_cols: 14,
+            glb_kb: 108,
+            spad_ifmap_b: 48,
+            spad_filter_b: 448,
+            spad_psum_b: 64,
+            bandwidth_gbps: 4.0,
+        }
+    }
+
+    pub fn num_pes(&self) -> u32 {
+        self.pe_rows * self.pe_cols
+    }
+
+    /// Regression feature vector (order pinned by `manifest.json:
+    /// feature_order` = [pe_rows, pe_cols, glb_kb, spad_ifmap_b,
+    /// spad_filter_b, spad_psum_b, bandwidth_gbps]).
+    pub fn features(&self) -> [f64; NUM_FEATURES] {
+        [
+            self.pe_rows as f64,
+            self.pe_cols as f64,
+            self.glb_kb as f64,
+            self.spad_ifmap_b as f64,
+            self.spad_filter_b as f64,
+            self.spad_psum_b as f64,
+            self.bandwidth_gbps,
+        ]
+    }
+
+    /// Validity constraints of the RTL generator.
+    pub fn validate(&self) -> Result<(), String> {
+        let err = |m: String| Err(m);
+        if self.pe_rows == 0 || self.pe_cols == 0 {
+            return err(format!("PE array must be non-empty: {}x{}", self.pe_rows, self.pe_cols));
+        }
+        if self.pe_rows > 256 || self.pe_cols > 256 {
+            return err(format!("PE array {}x{} exceeds generator limit 256", self.pe_rows, self.pe_cols));
+        }
+        if self.glb_kb == 0 {
+            return err("global buffer must be > 0 KiB".into());
+        }
+        if self.spad_ifmap_b == 0 || self.spad_filter_b == 0 || self.spad_psum_b == 0 {
+            return err("scratchpads must be > 0 bytes".into());
+        }
+        if !(self.bandwidth_gbps > 0.0) {
+            return err("bandwidth must be positive".into());
+        }
+        Ok(())
+    }
+
+    /// Stable identity string (used to key synthesis jitter and caches).
+    pub fn key(&self) -> String {
+        format!(
+            "{}:r{}c{}:g{}:s{}/{}/{}:bw{:.3}",
+            self.pe_type.label(),
+            self.pe_rows,
+            self.pe_cols,
+            self.glb_kb,
+            self.spad_ifmap_b,
+            self.spad_filter_b,
+            self.spad_psum_b,
+            self.bandwidth_gbps
+        )
+    }
+
+    pub fn to_json(&self) -> Json {
+        obj(vec![
+            ("pe_type", Json::Str(self.pe_type.label().into())),
+            ("pe_rows", Json::Num(self.pe_rows as f64)),
+            ("pe_cols", Json::Num(self.pe_cols as f64)),
+            ("glb_kb", Json::Num(self.glb_kb as f64)),
+            ("spad_ifmap_b", Json::Num(self.spad_ifmap_b as f64)),
+            ("spad_filter_b", Json::Num(self.spad_filter_b as f64)),
+            ("spad_psum_b", Json::Num(self.spad_psum_b as f64)),
+            ("bandwidth_gbps", Json::Num(self.bandwidth_gbps)),
+        ])
+    }
+
+    pub fn from_json(v: &Json) -> Option<AcceleratorConfig> {
+        Some(AcceleratorConfig {
+            pe_type: PeType::parse(v.get("pe_type").as_str()?)?,
+            pe_rows: v.get("pe_rows").as_usize()? as u32,
+            pe_cols: v.get("pe_cols").as_usize()? as u32,
+            glb_kb: v.get("glb_kb").as_usize()? as u32,
+            spad_ifmap_b: v.get("spad_ifmap_b").as_usize()? as u32,
+            spad_filter_b: v.get("spad_filter_b").as_usize()? as u32,
+            spad_psum_b: v.get("spad_psum_b").as_usize()? as u32,
+            bandwidth_gbps: v.get("bandwidth_gbps").as_f64()?,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pe_type_parse_roundtrip() {
+        for t in ALL_PE_TYPES {
+            assert_eq!(PeType::parse(t.label()), Some(t));
+        }
+        assert_eq!(PeType::parse("lightpe-2"), Some(PeType::LightPe2));
+        assert_eq!(PeType::parse("bogus"), None);
+    }
+
+    #[test]
+    fn precision_ladder() {
+        // storage footprint must strictly shrink FP32 -> INT16 -> LightPE
+        assert!(PeType::Fp32.act_bits() > PeType::Int16.act_bits());
+        assert!(PeType::Int16.wt_bits() > PeType::LightPe2.wt_bits());
+        assert!(PeType::LightPe2.wt_bits() > PeType::LightPe1.wt_bits());
+        assert!(PeType::LightPe1.is_light() && PeType::LightPe2.is_light());
+        assert!(!PeType::Int16.is_light());
+    }
+
+    #[test]
+    fn features_order_matches_manifest_contract() {
+        let c = AcceleratorConfig::default_with(PeType::Int16);
+        let f = c.features();
+        assert_eq!(f[0], c.pe_rows as f64);
+        assert_eq!(f[1], c.pe_cols as f64);
+        assert_eq!(f[2], c.glb_kb as f64);
+        assert_eq!(f[3], c.spad_ifmap_b as f64);
+        assert_eq!(f[4], c.spad_filter_b as f64);
+        assert_eq!(f[5], c.spad_psum_b as f64);
+        assert_eq!(f[6], c.bandwidth_gbps);
+    }
+
+    #[test]
+    fn validate_rejects_degenerate() {
+        let mut c = AcceleratorConfig::default_with(PeType::Fp32);
+        c.validate().unwrap();
+        c.pe_rows = 0;
+        assert!(c.validate().is_err());
+        let mut c2 = AcceleratorConfig::default_with(PeType::Fp32);
+        c2.bandwidth_gbps = -1.0;
+        assert!(c2.validate().is_err());
+        let mut c3 = AcceleratorConfig::default_with(PeType::Fp32);
+        c3.glb_kb = 0;
+        assert!(c3.validate().is_err());
+    }
+
+    #[test]
+    fn json_roundtrip() {
+        let c = AcceleratorConfig::default_with(PeType::LightPe1);
+        let j = c.to_json().to_string();
+        let back = AcceleratorConfig::from_json(&Json::parse(&j).unwrap()).unwrap();
+        assert_eq!(back, c);
+    }
+
+    #[test]
+    fn key_distinguishes_configs() {
+        let a = AcceleratorConfig::default_with(PeType::Int16);
+        let mut b = a;
+        b.glb_kb += 1;
+        assert_ne!(a.key(), b.key());
+    }
+}

@@ -1,0 +1,23 @@
+//! The DSE coordinator — QAPPA's workflow engine.
+//!
+//! Pipeline (one call to [`explorer::run_dse`]):
+//!
+//! 1. sample a training set per PE type and run the synthesis-oracle fleet
+//!    over it (thread pool);
+//! 2. fit a PPA model per PE type with k-fold CV (degree x lambda), through
+//!    either the native backend or the AOT-artifact engine;
+//! 3. predict PPA over the *full* design-space grid (batched through the
+//!    runtime engine — this is the framework's raison d'être: the oracle
+//!    takes ~ms per config, the model ~µs);
+//! 4. evaluate every predicted config on the workload with the
+//!    row-stationary dataflow model;
+//! 5. extract Pareto frontiers and the paper's normalized ratios.
+
+pub mod explorer;
+pub mod pareto;
+pub mod report;
+pub mod space;
+
+pub use explorer::{run_dse, DseOptions, DsePoint, DseResult};
+pub use pareto::pareto_frontier;
+pub use space::DesignSpace;

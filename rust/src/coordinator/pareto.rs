@@ -1,0 +1,142 @@
+//! Pareto-frontier extraction for (maximize perf/area, minimize energy).
+
+/// Return the indices of the Pareto-optimal points among
+/// `(perf_per_area, energy)` pairs: no other point has >= perf/area AND
+/// <= energy with at least one strict.
+pub fn pareto_frontier(points: &[(f64, f64)]) -> Vec<usize> {
+    let mut idx: Vec<usize> = (0..points.len()).collect();
+    // sort by perf/area descending, energy ascending as tiebreak
+    idx.sort_by(|&a, &b| {
+        points[b]
+            .0
+            .partial_cmp(&points[a].0)
+            .unwrap()
+            .then(points[a].1.partial_cmp(&points[b].1).unwrap())
+    });
+    let mut out = Vec::new();
+    let mut best_energy = f64::INFINITY;
+    let mut last_pa = f64::INFINITY;
+    for &i in &idx {
+        let (pa, e) = points[i];
+        if e < best_energy {
+            // strictly better energy than everything with >= perf/area
+            out.push(i);
+            best_energy = e;
+            last_pa = pa;
+        } else if e == best_energy && pa == last_pa {
+            // exact duplicates of a frontier point are dominated (keep one)
+        }
+    }
+    out.sort();
+    out
+}
+
+/// True iff `a` dominates `b` (>= perf/area, <= energy, one strict).
+pub fn dominates(a: (f64, f64), b: (f64, f64)) -> bool {
+    a.0 >= b.0 && a.1 <= b.1 && (a.0 > b.0 || a.1 < b.1)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testkit;
+    use crate::util::prng::Rng;
+
+    #[test]
+    fn simple_frontier() {
+        // (pa, energy): point 1 dominates 0; 2 is incomparable to 1.
+        let pts = vec![(1.0, 5.0), (2.0, 3.0), (1.5, 1.0)];
+        let f = pareto_frontier(&pts);
+        assert_eq!(f, vec![1, 2]);
+    }
+
+    #[test]
+    fn single_and_empty() {
+        assert_eq!(pareto_frontier(&[]), Vec::<usize>::new());
+        assert_eq!(pareto_frontier(&[(1.0, 1.0)]), vec![0]);
+    }
+
+    #[test]
+    fn dominated_duplicates_removed() {
+        let pts = vec![(2.0, 3.0), (2.0, 3.0), (2.0, 3.0)];
+        let f = pareto_frontier(&pts);
+        assert_eq!(f.len(), 1);
+    }
+
+    #[test]
+    fn property_frontier_has_no_dominated_member() {
+        testkit::forall(
+            "no dominated member",
+            200,
+            11,
+            |rng: &mut Rng| {
+                let n = 1 + rng.below(40);
+                (0..n)
+                    .map(|_| (rng.range_f64(0.0, 10.0), rng.range_f64(0.0, 10.0)))
+                    .collect::<Vec<_>>()
+            },
+            |pts| {
+                let f = pareto_frontier(pts);
+                for &i in &f {
+                    for (j, &q) in pts.iter().enumerate() {
+                        if i != j && dominates(q, pts[i]) {
+                            return Err(format!("frontier member {i} dominated by {j}"));
+                        }
+                    }
+                }
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn property_every_point_dominated_by_some_frontier_member() {
+        testkit::forall(
+            "coverage",
+            200,
+            13,
+            |rng: &mut Rng| {
+                let n = 1 + rng.below(40);
+                (0..n)
+                    .map(|_| (rng.range_f64(0.0, 10.0), rng.range_f64(0.0, 10.0)))
+                    .collect::<Vec<_>>()
+            },
+            |pts| {
+                let f = pareto_frontier(pts);
+                for (j, &q) in pts.iter().enumerate() {
+                    let covered = f.iter().any(|&i| i == j || dominates(pts[i], q))
+                        // equal points count as covered
+                        || f.iter().any(|&i| pts[i] == q);
+                    if !covered {
+                        return Err(format!("point {j} not covered by frontier"));
+                    }
+                }
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn property_idempotent() {
+        testkit::forall(
+            "idempotent",
+            100,
+            17,
+            |rng: &mut Rng| {
+                let n = 1 + rng.below(30);
+                (0..n)
+                    .map(|_| (rng.range_f64(0.0, 4.0), rng.range_f64(0.0, 4.0)))
+                    .collect::<Vec<_>>()
+            },
+            |pts| {
+                let f = pareto_frontier(pts);
+                let sub: Vec<(f64, f64)> = f.iter().map(|&i| pts[i]).collect();
+                let f2 = pareto_frontier(&sub);
+                if f2.len() != sub.len() {
+                    return Err(format!("re-running dropped {} points", sub.len() - f2.len()));
+                }
+                Ok(())
+            },
+        );
+    }
+}

@@ -1,0 +1,190 @@
+//! Figure / table regeneration (paper §4).
+
+use crate::config::{PeType, ALL_PE_TYPES};
+use crate::coordinator::explorer::{DseOptions, DseResult};
+use crate::model::{predict_ppa, Backend};
+use crate::synth::oracle::synthesize_with_sigma;
+use crate::util::stats;
+use crate::util::table::{fmt_g, Table};
+
+/// Figure-2 row: model accuracy for one (PE type, metric).
+#[derive(Debug, Clone)]
+pub struct AccuracyRow {
+    pub pe_type: PeType,
+    pub metric: &'static str,
+    pub r2: f64,
+    pub mape: f64,
+    pub pearson: f64,
+    pub degree: usize,
+}
+
+/// Reproduce Figure 2: fit models on a training sample, score them on a
+/// fresh holdout against the synthesis oracle.
+pub fn fig2_accuracy(
+    backend: &dyn Backend,
+    opts: &DseOptions,
+    holdout_per_type: usize,
+) -> Result<Vec<AccuracyRow>, String> {
+    let models = crate::coordinator::explorer::train_models(backend, opts)?;
+    let metrics = ["power_mw", "fmax_mhz", "area_mm2"];
+    let mut rows = Vec::new();
+    for ty in ALL_PE_TYPES {
+        let cfgs = opts.space.sample(ty, holdout_per_type, opts.seed ^ 0x601d);
+        let mut feats = Vec::new();
+        for c in &cfgs {
+            feats.extend_from_slice(&c.features());
+        }
+        let preds = predict_ppa(backend, &models[&ty], &feats)?;
+        for (k, name) in metrics.iter().enumerate() {
+            let actual: Vec<f64> = cfgs
+                .iter()
+                .map(|c| synthesize_with_sigma(c, opts.sigma).as_array()[k])
+                .collect();
+            let predicted: Vec<f64> = preds.iter().map(|p| p[k]).collect();
+            rows.push(AccuracyRow {
+                pe_type: ty,
+                metric: name,
+                r2: stats::r2(&actual, &predicted),
+                mape: stats::mape(&actual, &predicted),
+                pearson: stats::pearson(&actual, &predicted),
+                degree: models[&ty].degree,
+            });
+        }
+    }
+    Ok(rows)
+}
+
+/// Render the Figure-2 table.
+pub fn fig2_table(rows: &[AccuracyRow]) -> Table {
+    let mut t = Table::new(&["pe_type", "metric", "R2", "MAPE_%", "pearson", "degree"]);
+    for r in rows {
+        t.row(vec![
+            r.pe_type.label().to_string(),
+            r.metric.to_string(),
+            format!("{:.4}", r.r2),
+            format!("{:.2}", r.mape),
+            format!("{:.4}", r.pearson),
+            r.degree.to_string(),
+        ]);
+    }
+    t
+}
+
+/// Render a Figure-3/4/5 summary table (ratios vs the best-INT16 anchor).
+pub fn dse_summary_table(res: &DseResult) -> Table {
+    let mut t = Table::new(&[
+        "pe_type",
+        "configs",
+        "frontier",
+        "perf/area_pred",
+        "perf/area_true",
+        "energy_pred",
+        "energy_true",
+        "best_cfg",
+    ]);
+    for ty in ALL_PE_TYPES {
+        let pts = &res.points[&ty];
+        let (pa, e) = res.ratios[&ty];
+        let (pav, ev) = res.ratios_validated[&ty];
+        let best = pts
+            .iter()
+            .max_by(|a, b| a.perf_per_area.partial_cmp(&b.perf_per_area).unwrap())
+            .unwrap();
+        t.row(vec![
+            ty.label().to_string(),
+            pts.len().to_string(),
+            res.frontier[&ty].len().to_string(),
+            format!("{:.2}x", pa),
+            format!("{:.2}x", pav),
+            format!("{:.2}x", e),
+            format!("{:.2}x", ev),
+            best.cfg.key(),
+        ]);
+    }
+    t
+}
+
+/// Full scatter (the actual figure series): normalized perf/area and
+/// normalized energy per point, per PE type.
+pub fn dse_scatter_table(res: &DseResult) -> Table {
+    let mut t = Table::new(&[
+        "pe_type",
+        "norm_perf_per_area",
+        "norm_energy",
+        "on_frontier",
+        "pe_rows",
+        "pe_cols",
+        "glb_kb",
+        "spad_if",
+        "spad_w",
+        "spad_ps",
+        "bw_gbps",
+    ]);
+    for ty in ALL_PE_TYPES {
+        let pts = &res.points[&ty];
+        let frontier: std::collections::BTreeSet<usize> =
+            res.frontier[&ty].iter().copied().collect();
+        for (i, p) in pts.iter().enumerate() {
+            t.row(vec![
+                ty.label().to_string(),
+                fmt_g(p.perf_per_area / res.anchor.perf_per_area),
+                fmt_g(p.energy_mj / res.anchor.energy_mj),
+                (frontier.contains(&i) as u8).to_string(),
+                p.cfg.pe_rows.to_string(),
+                p.cfg.pe_cols.to_string(),
+                p.cfg.glb_kb.to_string(),
+                p.cfg.spad_ifmap_b.to_string(),
+                p.cfg.spad_filter_b.to_string(),
+                p.cfg.spad_psum_b.to_string(),
+                format!("{:.2}", p.cfg.bandwidth_gbps),
+            ]);
+        }
+    }
+    t
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::space::DesignSpace;
+    use crate::model::native::NativeBackend;
+    use crate::model::CvConfig;
+
+    fn opts() -> DseOptions {
+        DseOptions {
+            space: DesignSpace::tiny(),
+            train_per_type: 192,
+            cv: CvConfig { k: 3, degrees: vec![2], lambdas: vec![1e-3], seed: 2 },
+            seed: 5,
+            workers: 4,
+            sigma: 0.02,
+        }
+    }
+
+    #[test]
+    fn fig2_rows_cover_types_and_metrics() {
+        let backend = NativeBackend::new(7);
+        let rows = fig2_accuracy(&backend, &opts(), 48).unwrap();
+        assert_eq!(rows.len(), 4 * 3);
+        for r in &rows {
+            assert!(r.r2 > 0.8, "{:?} {} R2 {}", r.pe_type, r.metric, r.r2);
+            assert!(r.mape < 15.0, "{:?} {} MAPE {}", r.pe_type, r.metric, r.mape);
+        }
+        let t = fig2_table(&rows);
+        assert_eq!(t.len(), 12);
+    }
+
+    #[test]
+    fn summary_and_scatter_render() {
+        let backend = NativeBackend::new(7);
+        let layers = vec![crate::dataflow::Layer::conv("c", 8, 16, 16, 16, 3, 1, 1)];
+        let res =
+            crate::coordinator::explorer::run_dse(&backend, &layers, "t", &opts()).unwrap();
+        let summary = dse_summary_table(&res);
+        assert_eq!(summary.len(), 4);
+        let scatter = dse_scatter_table(&res);
+        assert_eq!(scatter.len(), 4 * opts().space.len());
+        // CSV round trip sanity
+        assert!(scatter.to_csv().lines().count() == scatter.len() + 1);
+    }
+}

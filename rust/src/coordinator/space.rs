@@ -1,0 +1,180 @@
+//! Design-space definition: the axes swept in §4 of the paper.
+
+use crate::config::{AcceleratorConfig, PeType};
+use crate::util::prng::Rng;
+
+/// A grid over the accelerator parameters (per PE type).
+#[derive(Debug, Clone)]
+pub struct DesignSpace {
+    pub rows: Vec<u32>,
+    pub cols: Vec<u32>,
+    pub glb_kb: Vec<u32>,
+    pub spad_ifmap_b: Vec<u32>,
+    pub spad_filter_b: Vec<u32>,
+    pub spad_psum_b: Vec<u32>,
+    pub bandwidth_gbps: Vec<f64>,
+}
+
+impl Default for DesignSpace {
+    /// The paper-scale sweep: array geometry around Eyeriss (12x14),
+    /// Eyeriss-like scratchpads, edge-device GLB sizes and bandwidths.
+    fn default() -> DesignSpace {
+        DesignSpace {
+            rows: vec![8, 12, 16, 24],
+            cols: vec![8, 14, 20, 28],
+            glb_kb: vec![32, 64, 108, 256, 512],
+            spad_ifmap_b: vec![12, 24, 48, 96],
+            // down to sizes where the quantization-aware capacity limits
+            // bind: 28 B holds 18 LightPE-1 filter planes but only 4 INT16
+            // planes of a 3x3 kernel (see dataflow::rs::map_layer)
+            spad_filter_b: vec![28, 56, 112, 224, 448],
+            spad_psum_b: vec![16, 32, 64, 128],
+            bandwidth_gbps: vec![2.0, 4.0, 8.0],
+        }
+    }
+}
+
+impl DesignSpace {
+    /// A small space for tests / quickstart (64 points per type).
+    pub fn tiny() -> DesignSpace {
+        DesignSpace {
+            rows: vec![8, 16],
+            cols: vec![8, 16],
+            glb_kb: vec![64, 256],
+            spad_ifmap_b: vec![48],
+            spad_filter_b: vec![224, 448],
+            spad_psum_b: vec![64],
+            bandwidth_gbps: vec![2.0, 8.0],
+        }
+    }
+
+    /// Number of grid points (per PE type).
+    pub fn len(&self) -> usize {
+        self.rows.len()
+            * self.cols.len()
+            * self.glb_kb.len()
+            * self.spad_ifmap_b.len()
+            * self.spad_filter_b.len()
+            * self.spad_psum_b.len()
+            * self.bandwidth_gbps.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Enumerate the full grid for one PE type.
+    pub fn enumerate(&self, pe_type: PeType) -> Vec<AcceleratorConfig> {
+        let mut out = Vec::with_capacity(self.len());
+        for &r in &self.rows {
+            for &c in &self.cols {
+                for &g in &self.glb_kb {
+                    for &si in &self.spad_ifmap_b {
+                        for &sf in &self.spad_filter_b {
+                            for &sp in &self.spad_psum_b {
+                                for &bw in &self.bandwidth_gbps {
+                                    out.push(AcceleratorConfig {
+                                        pe_type,
+                                        pe_rows: r,
+                                        pe_cols: c,
+                                        glb_kb: g,
+                                        spad_ifmap_b: si,
+                                        spad_filter_b: sf,
+                                        spad_psum_b: sp,
+                                        bandwidth_gbps: bw,
+                                    });
+                                }
+                            }
+                        }
+                    }
+                }
+            }
+        }
+        out
+    }
+
+    /// Sample `n` training configs uniformly from the *continuous* hull of
+    /// the grid (better regression coverage than grid points; the oracle
+    /// can synthesize any config).
+    pub fn sample(&self, pe_type: PeType, n: usize, seed: u64) -> Vec<AcceleratorConfig> {
+        let mut rng = Rng::new(seed ^ (pe_type as u64).wrapping_mul(0x9e37));
+        let span_u = |v: &[u32], rng: &mut Rng| -> u32 {
+            let lo = *v.iter().min().unwrap();
+            let hi = *v.iter().max().unwrap();
+            lo + rng.below((hi - lo + 1) as usize) as u32
+        };
+        let mut out = Vec::with_capacity(n);
+        for _ in 0..n {
+            out.push(AcceleratorConfig {
+                pe_type,
+                pe_rows: span_u(&self.rows, &mut rng),
+                pe_cols: span_u(&self.cols, &mut rng),
+                glb_kb: span_u(&self.glb_kb, &mut rng),
+                spad_ifmap_b: span_u(&self.spad_ifmap_b, &mut rng),
+                spad_filter_b: span_u(&self.spad_filter_b, &mut rng),
+                spad_psum_b: span_u(&self.spad_psum_b, &mut rng),
+                bandwidth_gbps: rng.range_f64(
+                    self.bandwidth_gbps
+                        .iter()
+                        .cloned()
+                        .fold(f64::INFINITY, f64::min),
+                    self.bandwidth_gbps
+                        .iter()
+                        .cloned()
+                        .fold(f64::NEG_INFINITY, f64::max),
+                ),
+            });
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn enumerate_count_matches_len() {
+        let s = DesignSpace::default();
+        let e = s.enumerate(PeType::Int16);
+        assert_eq!(e.len(), s.len());
+        // every config valid
+        for c in &e {
+            c.validate().unwrap();
+        }
+    }
+
+    #[test]
+    fn enumerate_distinct() {
+        let s = DesignSpace::tiny();
+        let e = s.enumerate(PeType::Fp32);
+        let mut keys: Vec<String> = e.iter().map(|c| c.key()).collect();
+        keys.sort();
+        keys.dedup();
+        assert_eq!(keys.len(), e.len());
+    }
+
+    #[test]
+    fn sample_is_deterministic_and_in_hull() {
+        let s = DesignSpace::default();
+        let a = s.sample(PeType::LightPe1, 50, 1);
+        let b = s.sample(PeType::LightPe1, 50, 1);
+        assert_eq!(a, b);
+        for c in &a {
+            assert!(c.pe_rows >= 8 && c.pe_rows <= 24);
+            assert!(c.bandwidth_gbps >= 2.0 && c.bandwidth_gbps <= 8.0);
+            c.validate().unwrap();
+        }
+    }
+
+    #[test]
+    fn samples_differ_across_types() {
+        let s = DesignSpace::default();
+        let a = s.sample(PeType::Int16, 10, 1);
+        let b = s.sample(PeType::Fp32, 10, 1);
+        assert_ne!(
+            a.iter().map(|c| c.pe_rows).collect::<Vec<_>>(),
+            b.iter().map(|c| c.pe_rows).collect::<Vec<_>>()
+        );
+    }
+}

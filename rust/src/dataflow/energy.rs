@@ -1,0 +1,99 @@
+//! Layer energy model: traffic x per-access energy + compute + leakage.
+//!
+//! Every coefficient comes from the synthesis oracle's `EnergyParams`, so
+//! the workload-level energy is consistent with the synthesized hardware.
+
+use crate::config::AcceleratorConfig;
+use crate::dataflow::layer::Layer;
+use crate::dataflow::rs::LayerPerf;
+use crate::dataflow::traffic::Traffic;
+use crate::synth::oracle::EnergyParams;
+
+/// Energy breakdown for one layer, millijoules.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct EnergyBreakdown {
+    pub compute_mj: f64,
+    pub glb_mj: f64,
+    pub noc_mj: f64,
+    pub dram_mj: f64,
+    pub leakage_mj: f64,
+}
+
+impl EnergyBreakdown {
+    pub fn total_mj(&self) -> f64 {
+        self.compute_mj + self.glb_mj + self.noc_mj + self.dram_mj + self.leakage_mj
+    }
+}
+
+const FJ_TO_MJ: f64 = 1e-12;
+
+/// Energy of one mapped layer.
+pub fn layer_energy(
+    _cfg: &AcceleratorConfig,
+    ep: &EnergyParams,
+    layer: &Layer,
+    perf: &LayerPerf,
+    traffic: &Traffic,
+) -> EnergyBreakdown {
+    let compute_mj = layer.macs() as f64 * ep.mac_with_spads_fj * FJ_TO_MJ;
+    let glb_mj = traffic.glb_accesses as f64 * ep.glb_access_fj * FJ_TO_MJ;
+    let noc_mj = traffic.noc_bits as f64 * ep.wire_fj_per_bit * FJ_TO_MJ;
+    let dram_mj = traffic.dram_bytes as f64 * 8.0 * ep.dram_fj_per_bit * FJ_TO_MJ;
+    // mW x s = mJ.
+    let leakage_mj = ep.leakage_mw * perf.latency_s(ep.fmax_mhz);
+    EnergyBreakdown { compute_mj, glb_mj, noc_mj, dram_mj, leakage_mj }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{AcceleratorConfig, PeType};
+    use crate::dataflow::rs::map_layer;
+    use crate::dataflow::traffic::layer_traffic;
+    use crate::synth::oracle::energy_params;
+
+    fn energy_for(cfg: &AcceleratorConfig, l: &Layer) -> EnergyBreakdown {
+        let ep = energy_params(cfg);
+        let perf = map_layer(cfg, &ep, l);
+        let traffic = layer_traffic(cfg, l, &perf);
+        layer_energy(cfg, &ep, l, &perf, &traffic)
+    }
+
+    #[test]
+    fn total_is_sum_of_parts() {
+        let cfg = AcceleratorConfig::default_with(PeType::Int16);
+        let l = Layer::conv("c", 64, 64, 28, 28, 3, 1, 1);
+        let e = energy_for(&cfg, &l);
+        let sum = e.compute_mj + e.glb_mj + e.noc_mj + e.dram_mj + e.leakage_mj;
+        assert!((e.total_mj() - sum).abs() < 1e-15);
+        assert!(e.total_mj() > 0.0);
+    }
+
+    #[test]
+    fn lightpe_cheaper_than_int16_cheaper_than_fp32() {
+        let l = Layer::conv("c", 128, 128, 28, 28, 3, 1, 1);
+        let e32 = energy_for(&AcceleratorConfig::default_with(PeType::Fp32), &l).total_mj();
+        let e16 = energy_for(&AcceleratorConfig::default_with(PeType::Int16), &l).total_mj();
+        let e8 = energy_for(&AcceleratorConfig::default_with(PeType::LightPe1), &l).total_mj();
+        assert!(e32 > e16, "{e32} <= {e16}");
+        assert!(e16 > e8, "{e16} <= {e8}");
+    }
+
+    #[test]
+    fn compute_energy_matches_hand_formula() {
+        let cfg = AcceleratorConfig::default_with(PeType::Int16);
+        let ep = energy_params(&cfg);
+        let l = Layer::fc("fc", 64, 64);
+        let e = energy_for(&cfg, &l);
+        let expect = l.macs() as f64 * ep.mac_with_spads_fj * 1e-12;
+        assert!((e.compute_mj - expect).abs() < 1e-12 * expect.max(1.0));
+    }
+
+    #[test]
+    fn bigger_layer_more_energy() {
+        let cfg = AcceleratorConfig::default_with(PeType::Int16);
+        let small = Layer::conv("s", 16, 16, 14, 14, 3, 1, 1);
+        let big = Layer::conv("b", 64, 64, 28, 28, 3, 1, 1);
+        assert!(energy_for(&cfg, &big).total_mj() > energy_for(&cfg, &small).total_mj());
+    }
+}

@@ -1,0 +1,108 @@
+//! DNN layer descriptors (convolution and fully-connected).
+
+/// One layer of a network, in inference shape (batch = 1, as in the
+/// paper's edge-deployment setting).
+#[derive(Debug, Clone, PartialEq)]
+pub struct Layer {
+    pub name: String,
+    /// Input channels.
+    pub c: u32,
+    /// Output channels (filters).
+    pub k: u32,
+    /// Input spatial size (square h = w; VGG/ResNet are square throughout).
+    pub hw: u32,
+    /// Filter spatial size (square r = s).
+    pub rs: u32,
+    pub stride: u32,
+    pub pad: u32,
+}
+
+impl Layer {
+    pub fn conv(
+        name: &str,
+        c: u32,
+        k: u32,
+        hw: u32,
+        _unused_w: u32,
+        rs: u32,
+        stride: u32,
+        pad: u32,
+    ) -> Layer {
+        Layer { name: name.into(), c, k, hw, rs, stride, pad }
+    }
+
+    /// Fully-connected layer as a 1x1 conv over a 1x1 "image".
+    pub fn fc(name: &str, c_in: u32, c_out: u32) -> Layer {
+        Layer { name: name.into(), c: c_in, k: c_out, hw: 1, rs: 1, stride: 1, pad: 0 }
+    }
+
+    pub fn is_fc(&self) -> bool {
+        self.hw == 1 && self.rs == 1
+    }
+
+    /// Output spatial size (square).
+    pub fn out_hw(&self) -> u32 {
+        debug_assert!(self.stride > 0);
+        (self.hw + 2 * self.pad - self.rs) / self.stride + 1
+    }
+
+    /// Total multiply-accumulates.
+    pub fn macs(&self) -> u64 {
+        let e = self.out_hw() as u64;
+        self.c as u64 * self.k as u64 * e * e * (self.rs as u64 * self.rs as u64)
+    }
+
+    /// Elements in the input feature map.
+    pub fn ifmap_elems(&self) -> u64 {
+        self.c as u64 * self.hw as u64 * self.hw as u64
+    }
+
+    /// Elements in all filters.
+    pub fn filter_elems(&self) -> u64 {
+        self.c as u64 * self.k as u64 * self.rs as u64 * self.rs as u64
+    }
+
+    /// Elements in the output feature map.
+    pub fn ofmap_elems(&self) -> u64 {
+        let e = self.out_hw() as u64;
+        self.k as u64 * e * e
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn conv_output_size() {
+        // 224x224, 3x3 stride 1 pad 1 -> 224
+        let l = Layer::conv("x", 3, 64, 224, 224, 3, 1, 1);
+        assert_eq!(l.out_hw(), 224);
+        // 224x224, 7x7 stride 2 pad 3 -> 112 (ResNet stem)
+        let s = Layer::conv("stem", 3, 64, 224, 224, 7, 2, 3);
+        assert_eq!(s.out_hw(), 112);
+    }
+
+    #[test]
+    fn macs_formula() {
+        let l = Layer::conv("x", 3, 64, 224, 224, 3, 1, 1);
+        // 3*64*224*224*9
+        assert_eq!(l.macs(), 3 * 64 * 224 * 224 * 9);
+    }
+
+    #[test]
+    fn fc_macs() {
+        let f = Layer::fc("fc", 4096, 1000);
+        assert!(f.is_fc());
+        assert_eq!(f.macs(), 4096 * 1000);
+        assert_eq!(f.out_hw(), 1);
+    }
+
+    #[test]
+    fn element_counts() {
+        let l = Layer::conv("x", 16, 32, 8, 8, 3, 1, 1);
+        assert_eq!(l.ifmap_elems(), 16 * 64);
+        assert_eq!(l.filter_elems(), 16 * 32 * 9);
+        assert_eq!(l.ofmap_elems(), 32 * 64);
+    }
+}

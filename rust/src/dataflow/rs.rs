@@ -1,0 +1,268 @@
+//! Row-stationary mapping and cycle model.
+//!
+//! Eyeriss's RS dataflow assigns PE(i, j) the 1-D convolution of filter row
+//! `i` against the ifmap rows needed for output row `j`: a logical PE set
+//! of `rs x out_hw` per (input-channel, filter) plane.  Folding/replication
+//! onto the physical `rows x cols` array:
+//!
+//! * vertical: filter rows fold if `rs > rows` (`v_folds` passes), and if
+//!   `rs <= rows` the array stacks `v_stack = rows / rs` independent
+//!   (c, k) planes on top of each other;
+//! * horizontal: output rows strip-mine across `cols` (`h_strips` passes);
+//! * the `c*k` planes not covered by vertical stacking become sequential
+//!   plane passes.
+//!
+//! Each pass keeps a PE busy for `rs * out_hw` MACs (one 1-D conv per
+//! output row: `out_hw` outputs x `rs` taps), plus an array-fill overhead.
+//! FC layers degenerate (out_hw = rs = 1), so they map as a `rows x cols`
+//! dot-product tile: K across columns, C across rows.
+
+use crate::config::AcceleratorConfig;
+use crate::dataflow::layer::Layer;
+use crate::synth::oracle::EnergyParams;
+
+/// Per-layer mapping/performance result.
+#[derive(Debug, Clone, Copy)]
+pub struct LayerPerf {
+    /// Total cycles including fill and bandwidth stalls.
+    pub cycles: u64,
+    /// Pure compute cycles (no stalls).
+    pub compute_cycles: u64,
+    /// Bandwidth stall cycles.
+    pub stall_cycles: u64,
+    /// Number of array passes.
+    pub passes: u64,
+    /// Active PEs per pass (average).
+    pub active_pes: f64,
+    /// MAC-level utilization of the whole array over the layer.
+    pub utilization: f64,
+}
+
+impl LayerPerf {
+    pub fn latency_s(&self, fmax_mhz: f64) -> f64 {
+        self.cycles as f64 / (fmax_mhz * 1e6)
+    }
+}
+
+/// Pipeline fill cycles per pass (operands ripple down the array).
+const FILL_PER_PASS: u64 = 8;
+
+/// Map one layer onto the array and derive cycles.
+pub fn map_layer(cfg: &AcceleratorConfig, ep: &EnergyParams, layer: &Layer) -> LayerPerf {
+    let rows = cfg.pe_rows as u64;
+    let cols = cfg.pe_cols as u64;
+    let total_pes = rows * cols;
+    let macs = layer.macs();
+
+    let (passes, active_pes) = if layer.is_fc() {
+        // K across cols, C across rows; each active PE does one MAC per
+        // pass; partial sums reduce down the column.
+        let tile_c = rows.min(layer.c as u64);
+        let tile_k = cols.min(layer.k as u64);
+        let passes = (layer.c as u64).div_ceil(tile_c) * (layer.k as u64).div_ceil(tile_k);
+        (passes, (tile_c * tile_k) as f64)
+    } else {
+        let rs = layer.rs as u64;
+        let e = layer.out_hw() as u64;
+        // vertical: fold large filters (rs > rows), stack small ones
+        let v_folds = rs.div_ceil(rows);
+        let rs_phys = rs.min(rows); // filter rows resident per pass
+        // Quantization-aware capacity limit: stacking a (c,k) plane keeps
+        // one filter row (rs weights) resident per PE, so the filter spad
+        // bounds how many planes can stack — narrower weights stack more.
+        let wt_bits = cfg.pe_type.wt_bits() as u64;
+        let spad_planes = (cfg.spad_filter_b as u64 * 8 / (rs * wt_bits)).max(1);
+        let v_stack = (rows / rs_phys).max(1).min(spad_planes); // (c,k) planes stacked
+        // horizontal strips of output rows
+        let h_strips = e.div_ceil(cols);
+        let e_phys = e.min(cols);
+        // sequential (c,k) plane groups
+        let planes = layer.c as u64 * layer.k as u64;
+        let plane_passes = planes.div_ceil(v_stack);
+        let passes = v_folds * h_strips * plane_passes;
+        let active = (rs_phys * e_phys * v_stack.min(planes)) as f64;
+        (passes, active.min(total_pes as f64))
+    };
+
+    // Compute cycles: work conservation — the active PEs must execute all
+    // MACs, at per-pass granularity (>= 1 cycle per pass), plus the
+    // array-fill overhead of each pass.
+    let ideal = (macs as f64 / active_pes.max(1.0)).ceil() as u64;
+    let compute_cycles = ideal.max(passes) + passes * FILL_PER_PASS;
+
+    // Bandwidth roofline against *compulsory* traffic (a lower bound);
+    // `apply_bandwidth` re-tightens it with the scheduled traffic.
+    let act_bits = cfg.pe_type.act_bits() as u64;
+    let wt_bits = cfg.pe_type.wt_bits() as u64;
+    let compulsory_bits = layer.ifmap_elems() * act_bits
+        + layer.filter_elems() * wt_bits
+        + layer.ofmap_elems() * act_bits;
+    let bytes = compulsory_bits.div_ceil(8);
+    with_mem_roofline(cfg, ep, layer, compute_cycles, passes, active_pes, bytes)
+}
+
+fn with_mem_roofline(
+    cfg: &AcceleratorConfig,
+    ep: &EnergyParams,
+    layer: &Layer,
+    compute_cycles: u64,
+    passes: u64,
+    active_pes: f64,
+    dram_bytes: u64,
+) -> LayerPerf {
+    let bytes_per_cycle = cfg.bandwidth_gbps * 1e9 / (ep.fmax_mhz * 1e6);
+    let mem_cycles = (dram_bytes as f64 / bytes_per_cycle).ceil() as u64;
+    let cycles = compute_cycles.max(mem_cycles);
+    let stall_cycles = cycles - compute_cycles;
+    let total_pes = (cfg.pe_rows * cfg.pe_cols) as f64;
+    let utilization = layer.macs() as f64 / (cycles as f64 * total_pes);
+    LayerPerf {
+        cycles,
+        compute_cycles,
+        stall_cycles,
+        passes,
+        active_pes,
+        utilization: utilization.min(1.0),
+    }
+}
+
+/// Tighten the bandwidth roofline with the *scheduled* DRAM traffic (which
+/// includes GLB-capacity reloads); returns an updated perf.
+pub fn apply_bandwidth(
+    cfg: &AcceleratorConfig,
+    ep: &EnergyParams,
+    layer: &Layer,
+    perf: &LayerPerf,
+    dram_bytes: u64,
+) -> LayerPerf {
+    with_mem_roofline(
+        cfg,
+        ep,
+        layer,
+        perf.compute_cycles,
+        perf.passes,
+        perf.active_pes,
+        dram_bytes,
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{AcceleratorConfig, PeType};
+    use crate::synth::oracle::energy_params;
+
+    fn setup(t: PeType) -> (AcceleratorConfig, crate::synth::oracle::EnergyParams) {
+        let cfg = AcceleratorConfig::default_with(t);
+        let ep = energy_params(&cfg);
+        (cfg, ep)
+    }
+
+    #[test]
+    fn work_is_conserved() {
+        let (cfg, ep) = setup(PeType::Int16);
+        let l = Layer::conv("c", 32, 64, 28, 28, 3, 1, 1);
+        let p = map_layer(&cfg, &ep, &l);
+        // cycles * total_pes >= macs (can't do more work than the array has)
+        let capacity = p.cycles as f64 * cfg.num_pes() as f64;
+        assert!(capacity >= l.macs() as f64, "{capacity} < {}", l.macs());
+        assert!(p.utilization > 0.0 && p.utilization <= 1.0);
+    }
+
+    #[test]
+    fn utilization_bounded_for_many_shapes() {
+        let (cfg, ep) = setup(PeType::Int16);
+        let shapes = [
+            Layer::conv("a", 3, 64, 224, 224, 3, 1, 1),
+            Layer::conv("b", 512, 512, 7, 7, 3, 1, 1),
+            Layer::conv("c", 64, 64, 56, 56, 1, 1, 0),
+            Layer::conv("d", 3, 64, 224, 224, 7, 2, 3),
+            Layer::fc("e", 4096, 1000),
+            Layer::fc("f", 25088, 4096),
+        ];
+        for l in shapes {
+            let p = map_layer(&cfg, &ep, &l);
+            assert!(p.utilization <= 1.0, "{}: util {}", l.name, p.utilization);
+            assert_eq!(p.cycles, p.compute_cycles + p.stall_cycles);
+            assert!(p.cycles > 0);
+        }
+    }
+
+    #[test]
+    fn more_pes_never_slower() {
+        let (mut small, ep_s) = setup(PeType::Int16);
+        small.pe_rows = 8;
+        small.pe_cols = 8;
+        let mut big = small;
+        big.pe_rows = 16;
+        big.pe_cols = 16;
+        let ep_b = energy_params(&big);
+        let l = Layer::conv("c", 64, 128, 28, 28, 3, 1, 1);
+        let ps = map_layer(&small, &ep_s, &l);
+        let pb = map_layer(&big, &ep_b, &l);
+        assert!(pb.compute_cycles <= ps.compute_cycles);
+    }
+
+    #[test]
+    fn low_bandwidth_stalls() {
+        let (mut cfg, _) = setup(PeType::Fp32);
+        cfg.bandwidth_gbps = 0.05; // starved
+        let ep = energy_params(&cfg);
+        let l = Layer::conv("c", 64, 64, 56, 56, 1, 1, 0); // traffic heavy, compute light
+        let p = map_layer(&cfg, &ep, &l);
+        assert!(p.stall_cycles > 0, "expected stalls at 0.05 GB/s");
+        cfg.bandwidth_gbps = 50.0;
+        let ep2 = energy_params(&cfg);
+        let p2 = map_layer(&cfg, &ep2, &l);
+        assert!(p2.stall_cycles < p.stall_cycles);
+    }
+
+    #[test]
+    fn lower_precision_moves_fewer_bytes() {
+        let (cfg16, ep16) = setup(PeType::Int16);
+        let (cfg8, ep8) = setup(PeType::LightPe1);
+        let mut cfg16 = cfg16;
+        let mut cfg8 = cfg8;
+        cfg16.bandwidth_gbps = 0.2;
+        cfg8.bandwidth_gbps = 0.2;
+        let l = Layer::conv("c", 128, 128, 28, 28, 1, 1, 0);
+        let p16 = map_layer(&cfg16, &ep16, &l);
+        let p8 = map_layer(&cfg8, &ep8, &l);
+        // same compute shape, less traffic -> fewer stalls
+        assert!(p8.stall_cycles <= p16.stall_cycles);
+    }
+
+    #[test]
+    fn filter_spad_capacity_limits_stacking() {
+        // Tiny filter spads prevent plane stacking -> more passes, worse
+        // utilization; the narrow-weight LightPE stacks more planes into
+        // the same bytes than INT16 (the quantization-aware effect).
+        let l = Layer::conv("c", 64, 64, 28, 28, 3, 1, 1);
+        let mut cfg16 = AcceleratorConfig::default_with(PeType::Int16);
+        cfg16.spad_filter_b = 12; // 2 planes of 3x16b
+        let ep16 = energy_params(&cfg16);
+        let tight = map_layer(&cfg16, &ep16, &l);
+        cfg16.spad_filter_b = 448;
+        let ep16b = energy_params(&cfg16);
+        let roomy = map_layer(&cfg16, &ep16b, &l);
+        assert!(tight.passes > roomy.passes, "{} <= {}", tight.passes, roomy.passes);
+        assert!(tight.utilization < roomy.utilization);
+
+        let mut cfg4 = AcceleratorConfig::default_with(PeType::LightPe1);
+        cfg4.spad_filter_b = 12; // same bytes, 4b weights -> 8 planes
+        let ep4 = energy_params(&cfg4);
+        let light = map_layer(&cfg4, &ep4, &l);
+        assert!(light.passes < tight.passes);
+    }
+
+    #[test]
+    fn fc_mapping_tiles() {
+        let (cfg, ep) = setup(PeType::Int16);
+        let l = Layer::fc("fc", 512, 512);
+        let p = map_layer(&cfg, &ep, &l);
+        // passes = ceil(512/rows)*ceil(512/cols)
+        let expect = (512u64.div_ceil(cfg.pe_rows as u64))
+            * (512u64.div_ceil(cfg.pe_cols as u64));
+        assert_eq!(p.passes, expect);
+    }
+}

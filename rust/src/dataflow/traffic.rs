@@ -1,0 +1,223 @@
+//! Memory-hierarchy traffic model for row-stationary execution.
+//!
+//! Traffic at each level is the *compulsory* volume times a reload factor
+//! determined by what fits in the level below:
+//!
+//! * **GLB -> spads**: in RS, ifmap rows are multicast to the PEs that need
+//!   them; each ifmap element leaves the GLB once per *filter group* (the
+//!   set of output channels processed concurrently), and each filter
+//!   element once per *ifmap strip* resident in the spads.
+//! * **DRAM -> GLB**: compulsory ifmap/filter/ofmap volume times a reload
+//!   factor = how many passes over the data the GLB capacity forces.
+//!
+//! All factors are >= 1 and shrink monotonically as capacities grow — the
+//! property tests pin this.
+
+use crate::config::AcceleratorConfig;
+use crate::dataflow::layer::Layer;
+use crate::dataflow::rs::LayerPerf;
+
+/// Per-level access counts for one layer.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct Traffic {
+    /// GLB reads+writes, in words of the PE operand width.
+    pub glb_accesses: u64,
+    /// Bits moved over the GLB<->PE interconnect.
+    pub noc_bits: u64,
+    /// DRAM traffic in bytes (ifmap in + filters in + ofmap out, with
+    /// reloads).
+    pub dram_bytes: u64,
+    /// Breakdown for reports.
+    pub dram_ifmap_bytes: u64,
+    pub dram_filter_bytes: u64,
+    pub dram_ofmap_bytes: u64,
+}
+
+/// Fraction of the GLB the scheduler allots to ifmaps (rest: filters +
+/// psums) — matches Eyeriss's static partitioning.
+const GLB_IFMAP_FRACTION: f64 = 0.5;
+const GLB_FILTER_FRACTION: f64 = 0.35;
+
+fn ceil_div_f(a: f64, b: f64) -> u64 {
+    (a / b).ceil().max(1.0) as u64
+}
+
+/// Compute the traffic for one mapped layer.
+pub fn layer_traffic(cfg: &AcceleratorConfig, layer: &Layer, perf: &LayerPerf) -> Traffic {
+    let t = cfg.pe_type;
+    let act_bits = t.act_bits() as u64;
+    let wt_bits = t.wt_bits() as u64;
+    let glb_bits = cfg.glb_kb as u64 * 1024 * 8;
+
+    let ifmap_bits = layer.ifmap_elems() * act_bits;
+    let filter_bits = layer.filter_elems() * wt_bits;
+    let ofmap_bits = layer.ofmap_elems() * act_bits;
+
+    // ---- DRAM level -------------------------------------------------
+    // Two classic schedules; the mapper picks the cheaper one per layer:
+    //
+    //  A. filter-resident: filters stay in the GLB in chunks; the ifmap is
+    //     re-streamed once per chunk (weights read once);
+    //  B. ifmap-resident: the ifmap stays in strips (with an rs-row halo
+    //     re-read per extra strip); filters are re-streamed per strip.
+    let filter_cap = (glb_bits as f64 * GLB_FILTER_FRACTION).max(1.0);
+    let filter_chunks = ceil_div_f(filter_bits as f64, filter_cap);
+    let ifmap_cap = (glb_bits as f64 * GLB_IFMAP_FRACTION).max(1.0);
+    let ifmap_strips = ceil_div_f(ifmap_bits as f64, ifmap_cap);
+    let halo = (1.0
+        + (layer.rs.saturating_sub(1) as f64 / layer.hw.max(1) as f64)
+            * (ifmap_strips.saturating_sub(1)) as f64)
+        .min(2.0);
+
+    let cost_a_if = ifmap_bits as f64 * filter_chunks as f64;
+    let cost_a_wt = filter_bits as f64;
+    let cost_b_if = ifmap_bits as f64 * halo;
+    let cost_b_wt = filter_bits as f64 * ifmap_strips as f64;
+    let (dram_ifmap_bits, dram_filter_bits) =
+        if cost_a_if + cost_a_wt <= cost_b_if + cost_b_wt {
+            (cost_a_if as u64, cost_a_wt as u64)
+        } else {
+            (cost_b_if as u64, cost_b_wt as u64)
+        };
+    let dram_ofmap_bits = ofmap_bits; // written once (psums stay on-chip)
+    let dram_ifmap_bytes = dram_ifmap_bits.div_ceil(8);
+    let dram_filter_bytes = dram_filter_bits.div_ceil(8);
+    let dram_ofmap_bytes = dram_ofmap_bits.div_ceil(8);
+
+    // ---- GLB level ---------------------------------------------------
+    // Every DRAM bit passes through the GLB (write + read), plus RS reuse
+    // traffic: each pass re-reads its working set from the GLB into spads.
+    let spad_refill_bits = perf.passes
+        * (cfg.spad_ifmap_b as u64 * 8 + cfg.spad_filter_b as u64 * 8) / 2;
+
+    // Psum spill: the psum spad must hold one output-row segment
+    // (out_hw-wide at psum precision). If it can't, partial sums spill to
+    // the GLB once per missing segment (read + write).
+    let psum_bits = t.psum_bits() as u64;
+    let seg_need = layer.out_hw().min(cfg.pe_cols) as u64 * psum_bits;
+    let seg_have = (cfg.spad_psum_b as u64 * 8).max(1);
+    let psum_segments = seg_need.div_ceil(seg_have);
+    let psum_spill_bits = ofmap_bits * 2 * psum_segments.saturating_sub(1);
+
+    // Ifmap window: the ifmap spad must hold a sliding window of rs
+    // activations (double-buffered). Undersized spads re-read from GLB.
+    let win_need = 2 * layer.rs as u64 * act_bits;
+    let win_have = (cfg.spad_ifmap_b as u64 * 8).max(1);
+    let ifmap_rereads = if win_have < win_need {
+        // every pass re-touches its ifmap share from the GLB
+        dram_ifmap_bits / 2
+    } else {
+        0
+    };
+
+    let glb_word = cfg.pe_type.act_bits().max(8) as u64;
+    let glb_bits_moved = 2 * (dram_ifmap_bits + dram_filter_bits + dram_ofmap_bits)
+        + spad_refill_bits
+        + psum_spill_bits
+        + ifmap_rereads;
+    let glb_accesses = glb_bits_moved.div_ceil(glb_word);
+
+    // ---- NoC ----------------------------------------------------------
+    // Multicast amortizes ifmap delivery; filters and psums move
+    // point-to-point. Approximation: everything read from the GLB crosses
+    // the interconnect once.
+    let noc_bits = glb_bits_moved / 2 + spad_refill_bits;
+
+    Traffic {
+        glb_accesses,
+        noc_bits,
+        dram_bytes: dram_ifmap_bytes + dram_filter_bytes + dram_ofmap_bytes,
+        dram_ifmap_bytes,
+        dram_filter_bytes,
+        dram_ofmap_bytes,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{AcceleratorConfig, PeType};
+    use crate::synth::oracle::energy_params;
+
+    fn traffic_for(cfg: &AcceleratorConfig, layer: &Layer) -> Traffic {
+        let ep = energy_params(cfg);
+        let perf = crate::dataflow::rs::map_layer(cfg, &ep, layer);
+        layer_traffic(cfg, layer, &perf)
+    }
+
+    #[test]
+    fn dram_traffic_at_least_compulsory() {
+        let cfg = AcceleratorConfig::default_with(PeType::Int16);
+        let l = Layer::conv("c", 64, 128, 28, 28, 3, 1, 1);
+        let t = traffic_for(&cfg, &l);
+        let compulsory = (l.ifmap_elems() * 16 + l.filter_elems() * 16
+            + l.ofmap_elems() * 16)
+            / 8;
+        assert!(t.dram_bytes >= compulsory, "{} < {compulsory}", t.dram_bytes);
+    }
+
+    #[test]
+    fn bigger_glb_never_more_dram_traffic() {
+        let mut cfg = AcceleratorConfig::default_with(PeType::Fp32);
+        let l = Layer::conv("c", 256, 256, 28, 28, 3, 1, 1);
+        let mut last = u64::MAX;
+        for g in [32u32, 64, 128, 256, 1024] {
+            cfg.glb_kb = g;
+            let t = traffic_for(&cfg, &l);
+            assert!(t.dram_bytes <= last, "glb {g}: {} > {last}", t.dram_bytes);
+            last = t.dram_bytes;
+        }
+    }
+
+    #[test]
+    fn lower_precision_less_traffic() {
+        let l = Layer::conv("c", 128, 128, 28, 28, 3, 1, 1);
+        let t32 = traffic_for(&AcceleratorConfig::default_with(PeType::Fp32), &l);
+        let t16 = traffic_for(&AcceleratorConfig::default_with(PeType::Int16), &l);
+        let t8 = traffic_for(&AcceleratorConfig::default_with(PeType::LightPe1), &l);
+        assert!(t32.dram_bytes > t16.dram_bytes);
+        assert!(t16.dram_bytes > t8.dram_bytes);
+    }
+
+    #[test]
+    fn breakdown_sums_to_total() {
+        let cfg = AcceleratorConfig::default_with(PeType::Int16);
+        let l = Layer::conv("c", 64, 64, 56, 56, 3, 1, 1);
+        let t = traffic_for(&cfg, &l);
+        assert_eq!(
+            t.dram_bytes,
+            t.dram_ifmap_bytes + t.dram_filter_bytes + t.dram_ofmap_bytes
+        );
+    }
+
+    #[test]
+    fn tiny_psum_spad_spills_to_glb() {
+        let mut cfg = AcceleratorConfig::default_with(PeType::Int16);
+        cfg.spad_psum_b = 4; // far below an output-row segment
+        let l = Layer::conv("c", 64, 64, 28, 28, 3, 1, 1);
+        let tight = traffic_for(&cfg, &l);
+        cfg.spad_psum_b = 256;
+        let roomy = traffic_for(&cfg, &l);
+        assert!(tight.glb_accesses > roomy.glb_accesses);
+    }
+
+    #[test]
+    fn tiny_ifmap_spad_rereads_from_glb() {
+        let mut cfg = AcceleratorConfig::default_with(PeType::Fp32);
+        cfg.spad_ifmap_b = 2; // below the 2*rs*act window
+        let l = Layer::conv("c", 64, 64, 28, 28, 3, 1, 1);
+        let tight = traffic_for(&cfg, &l);
+        cfg.spad_ifmap_b = 64;
+        let roomy = traffic_for(&cfg, &l);
+        assert!(tight.glb_accesses > roomy.glb_accesses);
+    }
+
+    #[test]
+    fn glb_and_noc_positive() {
+        let cfg = AcceleratorConfig::default_with(PeType::LightPe2);
+        let l = Layer::fc("fc", 512, 512);
+        let t = traffic_for(&cfg, &l);
+        assert!(t.glb_accesses > 0);
+        assert!(t.noc_bits > 0);
+    }
+}

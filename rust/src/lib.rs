@@ -1,0 +1,42 @@
+//! # QAPPA — Quantization-Aware Power, Performance and Area modeling
+//!
+//! Reproduction of *"QAPPA: Quantization-Aware Power, Performance, and Area
+//! Modeling of DNN Accelerators"* (Inci et al., cs.AR 2022) as a three-layer
+//! Rust + JAX + Pallas stack:
+//!
+//! * **L3 (this crate)** — the DSE coordinator: design-space enumeration, the
+//!   synthesis oracle fleet, k-fold CV over the AOT regression artifacts,
+//!   batched prediction, Pareto extraction and figure regeneration.
+//! * **L2 (python/compile/model.py)** — weighted polynomial ridge regression
+//!   lowered once to HLO-text artifacts (`artifacts/*.hlo.txt`).
+//! * **L1 (python/compile/kernels/poly.py)** — Pallas kernels for monomial
+//!   feature expansion, fused predict and blocked Gram accumulation.
+//!
+//! Python never runs on the request path: the rust binary loads the HLO
+//! artifacts through the PJRT CPU client (`runtime`) and is self-contained.
+//!
+//! Module map (see DESIGN.md for the full inventory):
+//!
+//! | module        | role |
+//! |---------------|------|
+//! | [`config`]    | accelerator configurations, PE types, design spaces |
+//! | [`synth`]     | gate-level synthesis oracle (Design Compiler stand-in) |
+//! | [`rtl`]       | Verilog emitter + gate-level simulator (VCS stand-in) |
+//! | [`dataflow`]  | row-stationary performance / traffic / energy model |
+//! | [`workloads`] | VGG-16, ResNet-34, ResNet-50 layer tables |
+//! | [`model`]     | PPA regression: features, native baseline, CV driver |
+//! | [`runtime`]   | PJRT artifact loading + batched execution engine |
+//! | [`coordinator`]| DSE pipeline, Pareto frontier, figure reports |
+//! | [`util`]      | json / prng / stats / cli / thread-pool substrates |
+//! | [`testkit`]   | property-testing mini-framework (proptest stand-in) |
+
+pub mod config;
+pub mod coordinator;
+pub mod dataflow;
+pub mod model;
+pub mod rtl;
+pub mod runtime;
+pub mod synth;
+pub mod testkit;
+pub mod util;
+pub mod workloads;

@@ -1,0 +1,392 @@
+//! `qappa` — the QAPPA coordinator CLI.
+//!
+//! Subcommands:
+//!
+//! * `synth`     — synthesize one configuration, print ground-truth PPA
+//! * `fit`       — train the PPA models (k-fold CV) and print the CV table
+//! * `fig2`      — model-accuracy reproduction (actual vs estimated)
+//! * `dse`       — full design-space exploration for a workload (Fig 3-5)
+//! * `figures`   — regenerate all paper figures into `figures/*.csv`
+//! * `rtl`       — emit generated Verilog for a configuration
+//! * `verify`    — run the gate-level simulator against golden models
+//! * `workloads` — print the layer tables and MAC totals
+//!
+//! Backend: `--backend xla` (default if `artifacts/` is present) drives the
+//! AOT-compiled PJRT artifacts; `--backend native` uses the pure-Rust
+//! fallback.
+
+use std::sync::Arc;
+
+use qappa::config::{AcceleratorConfig, PeType, ALL_PE_TYPES};
+use qappa::coordinator::report::{dse_scatter_table, dse_summary_table, fig2_accuracy, fig2_table};
+use qappa::coordinator::{run_dse, DseOptions};
+use qappa::model::native::NativeBackend;
+use qappa::model::Backend;
+use qappa::runtime::{Engine, XlaBackend};
+use qappa::util::cli::Args;
+use qappa::util::table::Table;
+use qappa::workloads;
+
+fn main() {
+    let args = match Args::from_env(&["help", "all", "clean", "quiet", "scatter"]) {
+        Ok(a) => a,
+        Err(e) => {
+            eprintln!("error: {e}");
+            std::process::exit(2);
+        }
+    };
+    let sub = args.subcommand.clone().unwrap_or_else(|| "help".to_string());
+    let code = match dispatch(&sub, &args) {
+        Ok(()) => 0,
+        Err(e) => {
+            eprintln!("error: {e}");
+            1
+        }
+    };
+    std::process::exit(code);
+}
+
+fn dispatch(sub: &str, args: &Args) -> Result<(), String> {
+    match sub {
+        "synth" => cmd_synth(args),
+        "fit" => cmd_fit(args),
+        "fig2" | "accuracy" => cmd_fig2(args),
+        "dse" => cmd_dse(args),
+        "figures" => cmd_figures(args),
+        "rtl" => cmd_rtl(args),
+        "verify" => cmd_verify(args),
+        "workloads" => cmd_workloads(args),
+        "analyze" => cmd_analyze(args),
+        _ => {
+            args.finish().ok();
+            print!("{}", HELP);
+            Ok(())
+        }
+    }
+}
+
+const HELP: &str = "\
+qappa — quantization-aware PPA modeling of DNN accelerators
+
+USAGE: qappa <subcommand> [options]
+
+SUBCOMMANDS
+  synth     --pe-type T [--rows N --cols N --glb-kb N --spad-if B --spad-w B
+            --spad-ps B --bw G]          synthesize one config (ground truth)
+  fit       [--backend xla|native --train N --k N --seed S]
+                                         train PPA models, print CV tables
+  fig2      [--backend ... --train N --holdout N --out DIR]
+                                         model accuracy vs synthesis (Fig. 2)
+  dse       --workload vgg16|resnet34|resnet50 [--backend ... --train N
+            --out DIR --scatter]         design-space exploration (Fig. 3-5)
+  figures   [--all --backend ... --out DIR]
+                                         regenerate every figure into CSVs
+  rtl       --pe-type T [--out FILE]     emit generated Verilog
+  verify    [--vectors N]                gate-level sim vs golden models
+  workloads                              print layer tables
+  analyze   --workload W --pe-type T [config flags as in synth]
+                                         per-layer latency/energy breakdown
+
+Artifacts: set QAPPA_ARTIFACTS or run from the repo root (default:
+./artifacts). `--backend native` needs no artifacts.
+";
+
+// ---------------------------------------------------------------------------
+// helpers
+// ---------------------------------------------------------------------------
+
+fn parse_config(args: &Args) -> Result<AcceleratorConfig, String> {
+    let ty = PeType::parse(args.require("pe-type").map_err(|e| e.to_string())?)
+        .ok_or("unknown --pe-type (fp32|int16|lightpe1|lightpe2)")?;
+    let mut cfg = AcceleratorConfig::default_with(ty);
+    cfg.pe_rows = args.get("rows", cfg.pe_rows).map_err(|e| e.to_string())?;
+    cfg.pe_cols = args.get("cols", cfg.pe_cols).map_err(|e| e.to_string())?;
+    cfg.glb_kb = args.get("glb-kb", cfg.glb_kb).map_err(|e| e.to_string())?;
+    cfg.spad_ifmap_b = args.get("spad-if", cfg.spad_ifmap_b).map_err(|e| e.to_string())?;
+    cfg.spad_filter_b = args.get("spad-w", cfg.spad_filter_b).map_err(|e| e.to_string())?;
+    cfg.spad_psum_b = args.get("spad-ps", cfg.spad_psum_b).map_err(|e| e.to_string())?;
+    cfg.bandwidth_gbps = args.get("bw", cfg.bandwidth_gbps).map_err(|e| e.to_string())?;
+    cfg.validate()?;
+    Ok(cfg)
+}
+
+enum AnyBackend {
+    Native(NativeBackend),
+    Xla(XlaBackend, Arc<Engine>),
+}
+
+impl AnyBackend {
+    fn get(&self) -> &dyn Backend {
+        match self {
+            AnyBackend::Native(b) => b,
+            AnyBackend::Xla(b, _) => b,
+        }
+    }
+}
+
+fn make_backend(args: &Args) -> Result<AnyBackend, String> {
+    let dir = qappa::runtime::ArtifactRuntime::artifacts_dir_default();
+    let choice = args.opt("backend").map(str::to_string).unwrap_or_else(|| {
+        if dir.join("manifest.json").exists() {
+            "xla".into()
+        } else {
+            "native".into()
+        }
+    });
+    match choice.as_str() {
+        "native" => Ok(AnyBackend::Native(NativeBackend::new(7))),
+        "xla" => {
+            let engine = Arc::new(Engine::start(&dir).map_err(|e| {
+                format!("starting XLA engine from {}: {e}", dir.display())
+            })?);
+            eprintln!(
+                "[qappa] XLA engine up (d={}, B={}, N_fit={}) from {}",
+                engine.d,
+                engine.b_predict,
+                engine.n_fit,
+                dir.display()
+            );
+            Ok(AnyBackend::Xla(XlaBackend::new(engine.clone()), engine))
+        }
+        other => Err(format!("unknown backend '{other}'")),
+    }
+}
+
+fn dse_options(args: &Args) -> Result<DseOptions, String> {
+    let mut opts = DseOptions::default();
+    opts.train_per_type = args.get("train", opts.train_per_type).map_err(|e| e.to_string())?;
+    opts.cv.k = args.get("k", opts.cv.k).map_err(|e| e.to_string())?;
+    opts.seed = args.get("seed", opts.seed).map_err(|e| e.to_string())?;
+    opts.workers = args.get("workers", opts.workers).map_err(|e| e.to_string())?;
+    opts.sigma = args.get("sigma", opts.sigma).map_err(|e| e.to_string())?;
+    Ok(opts)
+}
+
+// ---------------------------------------------------------------------------
+// subcommands
+// ---------------------------------------------------------------------------
+
+fn cmd_synth(args: &Args) -> Result<(), String> {
+    let cfg = parse_config(args)?;
+    args.finish().map_err(|e| e.to_string())?;
+    let ppa = qappa::synth::synthesize(&cfg);
+    let clean = qappa::synth::synthesize_clean(&cfg);
+    let mut t = Table::new(&["metric", "synthesized", "jitter-free"]);
+    t.row(vec!["power_mw".into(), format!("{:.3}", ppa.power_mw), format!("{:.3}", clean.power_mw)]);
+    t.row(vec!["fmax_mhz".into(), format!("{:.1}", ppa.fmax_mhz), format!("{:.1}", clean.fmax_mhz)]);
+    t.row(vec!["area_mm2".into(), format!("{:.4}", ppa.area_mm2), format!("{:.4}", clean.area_mm2)]);
+    println!("config: {}", cfg.key());
+    print!("{}", t.render());
+    Ok(())
+}
+
+fn cmd_fit(args: &Args) -> Result<(), String> {
+    let opts = dse_options(args)?;
+    let backend = make_backend(args)?;
+    args.finish().map_err(|e| e.to_string())?;
+    let models = qappa::coordinator::explorer::train_models(backend.get(), &opts)?;
+    for ty in ALL_PE_TYPES {
+        let m = &models[&ty];
+        println!(
+            "\n{}: selected degree={} lambda={} (n={}, backend={})",
+            ty.label(),
+            m.degree,
+            m.lambda,
+            m.n_train,
+            backend.get().name()
+        );
+        let mut t = Table::new(&["degree", "lambda", "cv_mse"]);
+        for e in &m.cv_table {
+            t.row(vec![
+                e.degree.to_string(),
+                format!("{:e}", e.lambda),
+                format!("{:.5}", e.mse),
+            ]);
+        }
+        print!("{}", t.render());
+    }
+    Ok(())
+}
+
+fn cmd_fig2(args: &Args) -> Result<(), String> {
+    let opts = dse_options(args)?;
+    let holdout = args.get("holdout", 128usize).map_err(|e| e.to_string())?;
+    let out = args.opt("out").map(str::to_string);
+    let backend = make_backend(args)?;
+    args.finish().map_err(|e| e.to_string())?;
+    let rows = fig2_accuracy(backend.get(), &opts, holdout)?;
+    let t = fig2_table(&rows);
+    println!("Figure 2 — actual vs estimated PPA (backend={})", backend.get().name());
+    print!("{}", t.render());
+    if let Some(dir) = out {
+        let path = format!("{dir}/fig2_accuracy.csv");
+        t.write_csv(&path).map_err(|e| e.to_string())?;
+        println!("wrote {path}");
+    }
+    Ok(())
+}
+
+fn cmd_dse(args: &Args) -> Result<(), String> {
+    let wl = args.require("workload").map_err(|e| e.to_string())?.to_string();
+    let layers = workloads::by_name(&wl).ok_or_else(|| {
+        format!("unknown workload '{wl}' (try {:?})", workloads::WORKLOAD_NAMES)
+    })?;
+    let opts = dse_options(args)?;
+    let out = args.opt("out").map(str::to_string);
+    let want_scatter = args.flag("scatter");
+    let backend = make_backend(args)?;
+    args.finish().map_err(|e| e.to_string())?;
+
+    let t0 = std::time::Instant::now();
+    let res = run_dse(backend.get(), &layers, &wl, &opts)?;
+    let dt = t0.elapsed().as_secs_f64();
+
+    println!(
+        "DSE over {} ({} layers) — {} configs/type, backend={}, {:.2}s",
+        wl,
+        layers.len(),
+        opts.space.len(),
+        backend.get().name(),
+        dt
+    );
+    println!("anchor (best INT16 perf/area): {}", res.anchor.cfg.key());
+    print!("{}", dse_summary_table(&res).render());
+    if let AnyBackend::Xla(_, engine) = &backend {
+        let s = &engine.stats;
+        use std::sync::atomic::Ordering::Relaxed;
+        println!(
+            "[engine] predict: {} rows in {} batches ({} padded rows), fit: {}, loss: {}",
+            s.predict_rows.load(Relaxed),
+            s.predict_batches.load(Relaxed),
+            s.predict_padded_rows.load(Relaxed),
+            s.fit_calls.load(Relaxed),
+            s.loss_calls.load(Relaxed)
+        );
+    }
+    if let Some(dir) = out {
+        let summary_path = format!("{dir}/{wl}_summary.csv");
+        dse_summary_table(&res).write_csv(&summary_path).map_err(|e| e.to_string())?;
+        println!("wrote {summary_path}");
+        if want_scatter {
+            let scatter_path = format!("{dir}/{wl}_scatter.csv");
+            dse_scatter_table(&res).write_csv(&scatter_path).map_err(|e| e.to_string())?;
+            println!("wrote {scatter_path}");
+        }
+    }
+    Ok(())
+}
+
+fn cmd_figures(args: &Args) -> Result<(), String> {
+    let out = args.opt("out").unwrap_or("figures").to_string();
+    let opts = dse_options(args)?;
+    let backend = make_backend(args)?;
+    let _all = args.flag("all");
+    args.finish().map_err(|e| e.to_string())?;
+
+    // Fig 2.
+    let rows = fig2_accuracy(backend.get(), &opts, 128)?;
+    let t2 = fig2_table(&rows);
+    println!("Figure 2 — model accuracy");
+    print!("{}", t2.render());
+    t2.write_csv(&format!("{out}/fig2_accuracy.csv")).map_err(|e| e.to_string())?;
+
+    // Figs 3-5.
+    for (fig, wl) in [(3, "vgg16"), (4, "resnet34"), (5, "resnet50")] {
+        let layers = workloads::by_name(wl).unwrap();
+        let res = run_dse(backend.get(), &layers, wl, &opts)?;
+        println!("\nFigure {fig} — {wl} design space (anchor {})", res.anchor.cfg.key());
+        let ts = dse_summary_table(&res);
+        print!("{}", ts.render());
+        ts.write_csv(&format!("{out}/fig{fig}_{wl}_summary.csv")).map_err(|e| e.to_string())?;
+        dse_scatter_table(&res)
+            .write_csv(&format!("{out}/fig{fig}_{wl}_scatter.csv"))
+            .map_err(|e| e.to_string())?;
+    }
+    println!("\nwrote CSVs under {out}/");
+    Ok(())
+}
+
+fn cmd_rtl(args: &Args) -> Result<(), String> {
+    let cfg = parse_config(args)?;
+    let out = args.opt("out").map(str::to_string);
+    args.finish().map_err(|e| e.to_string())?;
+    let v = qappa::rtl::verilog::generate(&cfg);
+    match out {
+        Some(path) => {
+            std::fs::write(&path, &v).map_err(|e| e.to_string())?;
+            println!("wrote {} ({} bytes)", path, v.len());
+        }
+        None => print!("{v}"),
+    }
+    Ok(())
+}
+
+fn cmd_verify(args: &Args) -> Result<(), String> {
+    let n = args.get("vectors", 500usize).map_err(|e| e.to_string())?;
+    args.finish().map_err(|e| e.to_string())?;
+    println!("gate-level verification ({n} random vectors each):");
+    let act = qappa::rtl::sim::verify_int16_multiplier(n, 0xc0ffee)?;
+    println!("  int16 multiplier  OK   (activity {:.3})", act);
+    for w in [20u32, 24] {
+        let act = qappa::rtl::sim::verify_light_term(w, n, 0xbeef)?;
+        println!("  light term w={w}    OK   (activity {:.3})", act);
+    }
+    Ok(())
+}
+
+fn cmd_analyze(args: &Args) -> Result<(), String> {
+    let wl = args.require("workload").map_err(|e| e.to_string())?.to_string();
+    let layers = workloads::by_name(&wl)
+        .ok_or_else(|| format!("unknown workload '{wl}'"))?;
+    let cfg = parse_config(args)?;
+    args.finish().map_err(|e| e.to_string())?;
+
+    let ep = qappa::synth::oracle::energy_params(&cfg);
+    let ppa = qappa::synth::synthesize_clean(&cfg);
+    println!("config: {}  ({:.2} mW, {:.0} MHz, {:.3} mm2)", cfg.key(),
+             ppa.power_mw, ppa.fmax_mhz, ppa.area_mm2);
+    let mut t = Table::new(&[
+        "layer", "MACs_M", "cycles_k", "util", "stall_%", "dram_MB",
+        "energy_mJ", "E_compute", "E_dram", "E_other",
+    ]);
+    let mut total_lat = 0.0;
+    let mut total_e = 0.0;
+    for l in &layers {
+        let mapped = qappa::dataflow::map_layer(&cfg, &ep, l);
+        let traffic = qappa::dataflow::layer_traffic(&cfg, l, &mapped);
+        let perf = qappa::dataflow::rs::apply_bandwidth(&cfg, &ep, l, &mapped, traffic.dram_bytes);
+        let e = qappa::dataflow::layer_energy(&cfg, &ep, l, &perf, &traffic);
+        total_lat += perf.latency_s(ep.fmax_mhz);
+        total_e += e.total_mj();
+        t.row(vec![
+            l.name.clone(),
+            format!("{:.1}", l.macs() as f64 / 1e6),
+            format!("{:.0}", perf.cycles as f64 / 1e3),
+            format!("{:.2}", perf.utilization),
+            format!("{:.0}", 100.0 * perf.stall_cycles as f64 / perf.cycles.max(1) as f64),
+            format!("{:.2}", traffic.dram_bytes as f64 / 1e6),
+            format!("{:.3}", e.total_mj()),
+            format!("{:.3}", e.compute_mj),
+            format!("{:.3}", e.dram_mj),
+            format!("{:.3}", e.glb_mj + e.noc_mj + e.leakage_mj),
+        ]);
+    }
+    print!("{}", t.render());
+    println!(
+        "total: {:.2} ms/inference ({:.1} inf/s), {:.2} mJ/inference",
+        total_lat * 1e3,
+        1.0 / total_lat,
+        total_e
+    );
+    Ok(())
+}
+
+fn cmd_workloads(args: &Args) -> Result<(), String> {
+    args.finish().map_err(|e| e.to_string())?;
+    for name in workloads::WORKLOAD_NAMES {
+        let layers = workloads::by_name(name).unwrap();
+        let macs: u64 = layers.iter().map(|l| l.macs()).sum();
+        println!("{name}: {} layers, {:.2} GMACs", layers.len(), macs as f64 / 1e9);
+    }
+    Ok(())
+}

@@ -1,0 +1,217 @@
+//! Polynomial feature plumbing + standardization.
+//!
+//! The monomial ordering here MUST match `python/compile/kernels/poly.py`
+//! (degree-major, lexicographic combinations-with-replacement); the
+//! integration tests cross-check it against `artifacts/manifest.json`.
+
+/// All monomials of total degree 1..=degree over d variables.
+pub fn monomial_indices(d: usize, degree: usize) -> Vec<Vec<usize>> {
+    assert!(d > 0 && degree >= 1, "bad monomial args d={d} degree={degree}");
+    let mut out = Vec::new();
+    for k in 1..=degree {
+        let mut cur = vec![0usize; k];
+        loop {
+            out.push(cur.clone());
+            // next combination with replacement (non-decreasing tuples)
+            let mut i = k;
+            loop {
+                if i == 0 {
+                    break;
+                }
+                i -= 1;
+                if cur[i] < d - 1 {
+                    cur[i] += 1;
+                    for j in i + 1..k {
+                        cur[j] = cur[i];
+                    }
+                    break;
+                }
+                if i == 0 {
+                    cur.clear();
+                    break;
+                }
+            }
+            if cur.is_empty() {
+                break;
+            }
+        }
+    }
+    out
+}
+
+/// P — feature count including the constant column.
+pub fn num_features(d: usize, degree: usize) -> usize {
+    1 + monomial_indices(d, degree).len()
+}
+
+/// Expand one standardized feature row into its P monomials.
+pub fn expand_row(x: &[f64], degree: usize, idx: &[Vec<usize>]) -> Vec<f64> {
+    let mut out = Vec::with_capacity(1 + idx.len());
+    out.push(1.0);
+    for tup in idx {
+        let mut v = 1.0;
+        for &j in tup {
+            v *= x[j];
+        }
+        out.push(v);
+    }
+    debug_assert_eq!(out.len(), num_features(x.len(), degree));
+    out
+}
+
+/// Column-wise standardizer: z = (x - mean) / std.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Standardizer {
+    pub mean: Vec<f64>,
+    pub std: Vec<f64>,
+}
+
+impl Standardizer {
+    /// Fit on rows (n x d, row-major).
+    pub fn fit(rows: &[f64], d: usize) -> Standardizer {
+        assert!(d > 0 && rows.len() % d == 0, "bad shape");
+        let n = rows.len() / d;
+        assert!(n > 0, "empty standardizer input");
+        let mut mean = vec![0.0; d];
+        for row in rows.chunks(d) {
+            for (m, v) in mean.iter_mut().zip(row) {
+                *m += v;
+            }
+        }
+        for m in &mut mean {
+            *m /= n as f64;
+        }
+        let mut var = vec![0.0; d];
+        for row in rows.chunks(d) {
+            for ((v, m), x) in var.iter_mut().zip(&mean).zip(row) {
+                *v += (x - m) * (x - m);
+            }
+        }
+        let std = var
+            .into_iter()
+            .map(|v| {
+                let s = (v / n as f64).sqrt();
+                if s < 1e-12 {
+                    1.0 // constant column: leave centred at 0
+                } else {
+                    s
+                }
+            })
+            .collect();
+        Standardizer { mean, std }
+    }
+
+    pub fn d(&self) -> usize {
+        self.mean.len()
+    }
+
+    pub fn apply_row(&self, x: &[f64]) -> Vec<f64> {
+        x.iter()
+            .zip(&self.mean)
+            .zip(&self.std)
+            .map(|((v, m), s)| (v - m) / s)
+            .collect()
+    }
+
+    pub fn invert_row(&self, z: &[f64]) -> Vec<f64> {
+        z.iter()
+            .zip(&self.mean)
+            .zip(&self.std)
+            .map(|((v, m), s)| v * s + m)
+            .collect()
+    }
+
+    /// Apply to an n x d row-major slab, producing f32 (the artifact dtype).
+    pub fn apply_f32(&self, rows: &[f64]) -> Vec<f32> {
+        let d = self.d();
+        let mut out = Vec::with_capacity(rows.len());
+        for row in rows.chunks(d) {
+            for ((v, m), s) in row.iter().zip(&self.mean).zip(&self.std) {
+                out.push(((v - m) / s) as f32);
+            }
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn p_matches_python_contract() {
+        // D=7: P(1)=8, P(2)=36, P(3)=120 — pinned by manifest.json.
+        assert_eq!(num_features(7, 1), 8);
+        assert_eq!(num_features(7, 2), 36);
+        assert_eq!(num_features(7, 3), 120);
+    }
+
+    #[test]
+    fn monomials_are_degree_major_lex() {
+        let idx = monomial_indices(3, 2);
+        assert_eq!(
+            idx,
+            vec![
+                vec![0], vec![1], vec![2],
+                vec![0, 0], vec![0, 1], vec![0, 2],
+                vec![1, 1], vec![1, 2], vec![2, 2],
+            ]
+        );
+    }
+
+    #[test]
+    fn monomials_nondecreasing_tuples() {
+        for tup in monomial_indices(7, 3) {
+            let mut sorted = tup.clone();
+            sorted.sort();
+            assert_eq!(tup, sorted);
+        }
+    }
+
+    #[test]
+    fn expand_row_values() {
+        let idx = monomial_indices(2, 2);
+        let f = expand_row(&[2.0, 3.0], 2, &idx);
+        // [1, x0, x1, x0², x0x1, x1²]
+        assert_eq!(f, vec![1.0, 2.0, 3.0, 4.0, 6.0, 9.0]);
+    }
+
+    #[test]
+    fn standardizer_roundtrip() {
+        let rows = vec![1.0, 10.0, 2.0, 20.0, 3.0, 30.0, 4.0, 40.0];
+        let s = Standardizer::fit(&rows, 2);
+        let z = s.apply_row(&[2.5, 25.0]);
+        assert!(z[0].abs() < 1e-12 && z[1].abs() < 1e-12); // the mean row
+        let back = s.invert_row(&z);
+        assert!((back[0] - 2.5).abs() < 1e-12);
+        assert!((back[1] - 25.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn standardized_columns_have_unit_variance() {
+        let mut rows = Vec::new();
+        for i in 0..100 {
+            rows.push(i as f64);
+            rows.push(3.0 * i as f64 + 7.0);
+        }
+        let s = Standardizer::fit(&rows, 2);
+        let z = s.apply_f32(&rows);
+        for col in 0..2 {
+            let vals: Vec<f64> = z.chunks(2).map(|r| r[col] as f64).collect();
+            let mean: f64 = vals.iter().sum::<f64>() / vals.len() as f64;
+            let var: f64 =
+                vals.iter().map(|v| (v - mean) * (v - mean)).sum::<f64>() / vals.len() as f64;
+            assert!(mean.abs() < 1e-6, "col {col} mean {mean}");
+            assert!((var - 1.0).abs() < 1e-4, "col {col} var {var}");
+        }
+    }
+
+    #[test]
+    fn constant_column_safe() {
+        let rows = vec![5.0, 1.0, 5.0, 2.0, 5.0, 3.0];
+        let s = Standardizer::fit(&rows, 2);
+        let z = s.apply_row(&[5.0, 2.0]);
+        assert_eq!(z[0], 0.0); // centred, not divided by 0
+        assert!(z[0].is_finite() && z[1].is_finite());
+    }
+}

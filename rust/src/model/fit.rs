@@ -1,0 +1,360 @@
+//! k-fold cross-validated model selection + the fitted `PpaModel`.
+//!
+//! Reproduces the paper's §3 methodology: polynomial regression with model
+//! selection (degree, here also the ridge lambda) chosen by k-fold CV.
+//! Fold membership is expressed as 0/1 weight vectors so the same
+//! fixed-shape fit/loss backend calls serve every fold — exactly the
+//! protocol the AOT artifacts were lowered for.
+
+use crate::model::features::Standardizer;
+use crate::model::{Backend, M};
+use crate::util::prng::Rng;
+
+/// Cross-validation settings.
+#[derive(Debug, Clone)]
+pub struct CvConfig {
+    pub k: usize,
+    pub degrees: Vec<usize>,
+    pub lambdas: Vec<f64>,
+    pub seed: u64,
+}
+
+impl Default for CvConfig {
+    fn default() -> CvConfig {
+        CvConfig {
+            k: 4,
+            degrees: vec![1, 2, 3],
+            lambdas: vec![1e-4, 1e-3, 1e-2, 1e-1],
+            seed: 0x9a99a,
+        }
+    }
+}
+
+/// One CV grid entry for reports.
+#[derive(Debug, Clone, Copy)]
+pub struct CvEntry {
+    pub degree: usize,
+    pub lambda: f64,
+    /// Mean (over folds and outputs) validation MSE in standardized units.
+    pub mse: f64,
+}
+
+/// A fitted PPA model for one PE type.
+#[derive(Debug, Clone)]
+pub struct PpaModel {
+    pub degree: usize,
+    pub lambda: f64,
+    /// `p x M` coefficients in standardized space.
+    pub coef: Vec<f32>,
+    pub x_std: Standardizer,
+    pub y_std: Standardizer,
+    pub cv_table: Vec<CvEntry>,
+    /// Training rows used.
+    pub n_train: usize,
+}
+
+/// Fit a PPA model: standardize, CV-select (degree, lambda), refit on all
+/// rows.  `features` is n x d raw features, `targets` n x M raw targets.
+pub fn fit_ppa(
+    backend: &dyn Backend,
+    features: &[f64],
+    targets: &[f64],
+    cv: &CvConfig,
+) -> Result<PpaModel, String> {
+    let d = backend.d();
+    assert_eq!(features.len() % d, 0, "feature shape");
+    let n = features.len() / d;
+    assert_eq!(targets.len(), n * M, "target shape");
+    if n < 2 * cv.k {
+        return Err(format!("need at least {} rows for {}-fold CV, got {n}", 2 * cv.k, cv.k));
+    }
+
+    let x_std = Standardizer::fit(features, d);
+    let y_std = Standardizer::fit(targets, M);
+    let x: Vec<f32> = x_std.apply_f32(features);
+    let y: Vec<f32> = y_std.apply_f32(targets);
+
+    // Shuffled fold assignment.
+    let mut fold = vec![0usize; n];
+    let mut order: Vec<usize> = (0..n).collect();
+    Rng::new(cv.seed).shuffle(&mut order);
+    for (slot, &row) in order.iter().enumerate() {
+        fold[row] = slot % cv.k;
+    }
+
+    let (cv_table, best) = if backend.has_gram_solve() {
+        cv_grid_fast(backend, &x, &y, n, &fold, cv)?
+    } else {
+        cv_grid_plain(backend, &x, &y, n, &fold, cv)?
+    };
+    let (degree, lambda, _) = best;
+
+    // Final fit on all rows.
+    let w = vec![1.0f32; n];
+    let coef = backend.fit(&x, &y, &w, n, lambda as f32, degree)?;
+
+    Ok(PpaModel {
+        degree,
+        lambda,
+        coef,
+        x_std,
+        y_std,
+        cv_table,
+        n_train: n,
+    })
+}
+
+type CvOutcome = (Vec<CvEntry>, (usize, f64, f64));
+
+/// Plain CV: one `fit` + one `loss` backend call per (degree, lambda, fold).
+fn cv_grid_plain(
+    backend: &dyn Backend,
+    x: &[f32],
+    y: &[f32],
+    n: usize,
+    fold: &[usize],
+    cv: &CvConfig,
+) -> Result<CvOutcome, String> {
+    let mut cv_table = Vec::new();
+    let mut best: Option<(usize, f64, f64)> = None;
+    for &degree in &cv.degrees {
+        for &lambda in &cv.lambdas {
+            let mut total = 0.0;
+            for f in 0..cv.k {
+                let w_tr: Vec<f32> =
+                    fold.iter().map(|&g| if g == f { 0.0 } else { 1.0 }).collect();
+                let w_te: Vec<f32> =
+                    fold.iter().map(|&g| if g == f { 1.0 } else { 0.0 }).collect();
+                let coef = backend.fit(x, y, &w_tr, n, lambda as f32, degree)?;
+                let mse = backend.loss(x, y, &w_te, n, &coef, degree)?;
+                total += mse.iter().map(|&v| v as f64).sum::<f64>() / M as f64;
+            }
+            let mse = total / cv.k as f64;
+            cv_table.push(CvEntry { degree, lambda, mse });
+            if best.map_or(true, |(_, _, b)| mse < b) {
+                best = Some((degree, lambda, mse));
+            }
+        }
+    }
+    Ok((cv_table, best.ok_or("empty CV grid")?))
+}
+
+/// Fast CV via Gram additivity: per degree, one `gram` call per fold; each
+/// (lambda, fold) training split is assembled by subtraction and solved by
+/// the cheap `solve` call; the held-out MSE is computed from a `predict`
+/// over just the fold's rows.  Produces the same table as `cv_grid_plain`
+/// to f32 round-off (pinned by a parity test).
+fn cv_grid_fast(
+    backend: &dyn Backend,
+    x: &[f32],
+    y: &[f32],
+    n: usize,
+    fold: &[usize],
+    cv: &CvConfig,
+) -> Result<CvOutcome, String> {
+    let d = backend.d();
+    // Rows of each fold (for held-out scoring).
+    let mut fold_rows: Vec<Vec<usize>> = vec![Vec::new(); cv.k];
+    for (r, &g) in fold.iter().enumerate() {
+        fold_rows[g].push(r);
+    }
+    let mut cv_table = Vec::new();
+    let mut best: Option<(usize, f64, f64)> = None;
+    for &degree in &cv.degrees {
+        // One Gram per fold; totals by accumulation.
+        let mut grams = Vec::with_capacity(cv.k);
+        for f in 0..cv.k {
+            let w_f: Vec<f32> =
+                fold.iter().map(|&g| if g == f { 1.0 } else { 0.0 }).collect();
+            grams.push(backend.gram(x, y, &w_f, n, degree)?);
+        }
+        let p2 = grams[0].0.len();
+        let pm = grams[0].1.len();
+        let mut g_all = vec![0.0f32; p2];
+        let mut c_all = vec![0.0f32; pm];
+        let mut n_all = 0.0f32;
+        for (g, c, ne) in &grams {
+            for (a, b) in g_all.iter_mut().zip(g) {
+                *a += b;
+            }
+            for (a, b) in c_all.iter_mut().zip(c) {
+                *a += b;
+            }
+            n_all += ne;
+        }
+        for &lambda in &cv.lambdas {
+            let mut total = 0.0;
+            for f in 0..cv.k {
+                // training split = all - fold f
+                let (gf, cf, nf) = &grams[f];
+                let g_tr: Vec<f32> = g_all.iter().zip(gf).map(|(a, b)| a - b).collect();
+                let c_tr: Vec<f32> = c_all.iter().zip(cf).map(|(a, b)| a - b).collect();
+                let coef = backend.solve(&g_tr, &c_tr, n_all - nf, lambda as f32, degree)?;
+                // held-out MSE from a predict over the fold's rows only
+                let rows = &fold_rows[f];
+                let mut xf = Vec::with_capacity(rows.len() * d);
+                for &r in rows {
+                    xf.extend_from_slice(&x[r * d..(r + 1) * d]);
+                }
+                let pred = backend.predict(&xf, rows.len(), &coef, degree)?;
+                let mut mse = 0.0f64;
+                for (i, &r) in rows.iter().enumerate() {
+                    for c in 0..M {
+                        let e = (pred[i * M + c] - y[r * M + c]) as f64;
+                        mse += e * e;
+                    }
+                }
+                total += mse / (rows.len().max(1) * M) as f64;
+            }
+            let mse = total / cv.k as f64;
+            cv_table.push(CvEntry { degree, lambda, mse });
+            if best.map_or(true, |(_, _, b)| mse < b) {
+                best = Some((degree, lambda, mse));
+            }
+        }
+    }
+    Ok((cv_table, best.ok_or("empty CV grid")?))
+}
+
+/// Predict raw-unit PPA for raw feature rows (n x d).
+pub fn predict_ppa(
+    backend: &dyn Backend,
+    model: &PpaModel,
+    features: &[f64],
+) -> Result<Vec<[f64; M]>, String> {
+    let d = backend.d();
+    assert_eq!(features.len() % d, 0);
+    let n = features.len() / d;
+    let x = model.x_std.apply_f32(features);
+    let z = backend.predict(&x, n, &model.coef, model.degree)?;
+    let mut out = Vec::with_capacity(n);
+    for r in 0..n {
+        let zrow: Vec<f64> = (0..M).map(|c| z[r * M + c] as f64).collect();
+        let raw = model.y_std.invert_row(&zrow);
+        out.push([raw[0], raw[1], raw[2]]);
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::native::NativeBackend;
+    use crate::util::prng::Rng;
+
+    /// Quadratic ground truth with small noise.
+    fn dataset(n: usize, d: usize, seed: u64) -> (Vec<f64>, Vec<f64>) {
+        let mut rng = Rng::new(seed);
+        let mut x = Vec::with_capacity(n * d);
+        let mut y = Vec::with_capacity(n * M);
+        for _ in 0..n {
+            let row: Vec<f64> = (0..d).map(|_| rng.range_f64(1.0, 10.0)).collect();
+            // targets: nonlinear but exactly quadratic in features
+            let a = 2.0 + row[0] * row[1] + 0.5 * row[0] * row[0];
+            let b = 1.0 + 3.0 * row[1] + row[1] * row[1] * 0.1;
+            let c = 5.0 + row[0] + row[1];
+            y.push(a + 0.001 * rng.gauss());
+            y.push(b + 0.001 * rng.gauss());
+            y.push(c + 0.001 * rng.gauss());
+            x.extend(row);
+        }
+        (x, y)
+    }
+
+    #[test]
+    fn cv_selects_quadratic_for_quadratic_truth() {
+        let (x, y) = dataset(240, 2, 1);
+        let b = NativeBackend::new(2);
+        let model = fit_ppa(&b, &x, &y, &CvConfig::default()).unwrap();
+        assert_eq!(model.degree, 2, "cv table: {:?}", model.cv_table);
+    }
+
+    #[test]
+    fn predictions_match_truth_in_raw_units() {
+        let (x, y) = dataset(300, 2, 2);
+        let b = NativeBackend::new(2);
+        let model = fit_ppa(&b, &x, &y, &CvConfig::default()).unwrap();
+        let preds = predict_ppa(&b, &model, &x).unwrap();
+        let mut worst: f64 = 0.0;
+        for (r, p) in preds.iter().enumerate() {
+            for c in 0..M {
+                let truth = y[r * M + c];
+                worst = worst.max(((p[c] - truth) / truth).abs());
+            }
+        }
+        assert!(worst < 0.05, "worst relative error {worst}");
+    }
+
+    #[test]
+    fn cv_table_covers_grid() {
+        let (x, y) = dataset(120, 2, 3);
+        let b = NativeBackend::new(2);
+        let cv = CvConfig { k: 3, degrees: vec![1, 2], lambdas: vec![1e-3, 1e-1], seed: 7 };
+        let model = fit_ppa(&b, &x, &y, &cv).unwrap();
+        assert_eq!(model.cv_table.len(), 4);
+        // the winner must be in the table with the minimal mse
+        let min = model
+            .cv_table
+            .iter()
+            .map(|e| e.mse)
+            .fold(f64::INFINITY, f64::min);
+        let winner = model
+            .cv_table
+            .iter()
+            .find(|e| e.degree == model.degree && e.lambda == model.lambda)
+            .unwrap();
+        assert!((winner.mse - min).abs() < 1e-15);
+    }
+
+    #[test]
+    fn too_few_rows_is_error() {
+        let b = NativeBackend::new(2);
+        let err = fit_ppa(&b, &[1.0, 2.0], &[1.0, 2.0, 3.0], &CvConfig::default());
+        assert!(err.is_err());
+    }
+
+    #[test]
+    fn fast_and_plain_cv_agree() {
+        // The Gram-additivity fast path must reproduce the plain CV table
+        // (same winners; mse equal to f32 round-off).
+        let (x, y) = dataset(200, 2, 9);
+        let b = NativeBackend::new(2);
+        let cv = CvConfig::default();
+        let x_std = Standardizer::fit(&x, 2);
+        let y_std = Standardizer::fit(&y, M);
+        let xs = x_std.apply_f32(&x);
+        let ys = y_std.apply_f32(&y);
+        let n = 200;
+        let mut fold = vec![0usize; n];
+        let mut order: Vec<usize> = (0..n).collect();
+        Rng::new(cv.seed).shuffle(&mut order);
+        for (slot, &row) in order.iter().enumerate() {
+            fold[row] = slot % cv.k;
+        }
+        let (t_fast, best_fast) = cv_grid_fast(&b, &xs, &ys, n, &fold, &cv).unwrap();
+        let (t_plain, best_plain) = cv_grid_plain(&b, &xs, &ys, n, &fold, &cv).unwrap();
+        assert_eq!(best_fast.0, best_plain.0, "degree winner");
+        assert_eq!(best_fast.1, best_plain.1, "lambda winner");
+        for (a, bb) in t_fast.iter().zip(&t_plain) {
+            assert!(
+                // f32 accumulation-order noise floor near-zero mse
+                (a.mse - bb.mse).abs() < 1e-3 * bb.mse.max(1e-6),
+                "cv mse {} vs {} at d{} l{}",
+                a.mse,
+                bb.mse,
+                a.degree,
+                a.lambda
+            );
+        }
+    }
+
+    #[test]
+    fn deterministic_under_seed() {
+        let (x, y) = dataset(160, 2, 4);
+        let b = NativeBackend::new(2);
+        let m1 = fit_ppa(&b, &x, &y, &CvConfig::default()).unwrap();
+        let m2 = fit_ppa(&b, &x, &y, &CvConfig::default()).unwrap();
+        assert_eq!(m1.degree, m2.degree);
+        assert_eq!(m1.coef, m2.coef);
+    }
+}

@@ -1,0 +1,77 @@
+//! PPA regression models — the rust-side client of the paper's polynomial
+//! models.
+//!
+//! * [`features`] — monomial index sets and feature/target standardization
+//!   (mirrors `python/compile/kernels/poly.py`; the order contract lives in
+//!   `artifacts/manifest.json`);
+//! * [`native`]  — a pure-Rust weighted ridge implementation, used as the
+//!   no-artifact fallback and as the baseline the XLA path is
+//!   parity-checked against;
+//! * [`fit`]     — the k-fold CV driver (degree x lambda model selection)
+//!   over an abstract [`Backend`], plus the fitted [`PpaModel`].
+//!
+//! The [`Backend`] trait is implemented by [`native::NativeBackend`] and by
+//! the PJRT-artifact engine (`crate::runtime::XlaBackend`).
+
+pub mod features;
+pub mod fit;
+pub mod native;
+
+pub use features::{num_features, Standardizer};
+pub use fit::{fit_ppa, predict_ppa, CvConfig, PpaModel};
+
+/// Number of regression targets: [power_mw, fmax_mhz, area_mm2].
+pub const M: usize = 3;
+
+/// Abstract regression backend (native f64 or AOT-compiled XLA artifacts).
+///
+/// All matrices are row-major `f32` slices; `x` is `n x d` *standardized*
+/// features, `y` is `n x M` *standardized* targets, `w` is an `n` weight
+/// vector (0 = ignore row), `coef` is `p x M`.
+pub trait Backend {
+    /// Feature dimension D the backend was built for.
+    fn d(&self) -> usize;
+    /// Weighted ridge fit; returns `p x M` coefficients.
+    fn fit(&self, x: &[f32], y: &[f32], w: &[f32], n: usize, lam: f32, degree: usize)
+        -> Result<Vec<f32>, String>;
+    /// Weighted per-output MSE of `coef` on the rows selected by `w`.
+    fn loss(&self, x: &[f32], y: &[f32], w: &[f32], n: usize, coef: &[f32], degree: usize)
+        -> Result<[f32; M], String>;
+    /// Batched prediction; returns `n x M`.
+    fn predict(&self, x: &[f32], n: usize, coef: &[f32], degree: usize)
+        -> Result<Vec<f32>, String>;
+    /// Human-readable name for reports.
+    fn name(&self) -> &'static str;
+
+    // ---- optional CV fast path (Gram additivity over folds) ------------
+
+    /// Whether `gram`/`solve` are implemented (enables the k-fold CV fast
+    /// path: one Gram per fold, cheap per-lambda solves).
+    fn has_gram_solve(&self) -> bool {
+        false
+    }
+
+    /// Un-normalized accumulators: returns `(G [p*p], C [p*M], n_eff)`.
+    fn gram(
+        &self,
+        _x: &[f32],
+        _y: &[f32],
+        _w: &[f32],
+        _n: usize,
+        _degree: usize,
+    ) -> Result<(Vec<f32>, Vec<f32>, f32), String> {
+        Err("gram unsupported by this backend".into())
+    }
+
+    /// Ridge solve from accumulators; returns `p x M` coefficients.
+    fn solve(
+        &self,
+        _g: &[f32],
+        _c: &[f32],
+        _n_eff: f32,
+        _lam: f32,
+        _degree: usize,
+    ) -> Result<Vec<f32>, String> {
+        Err("solve unsupported by this backend".into())
+    }
+}

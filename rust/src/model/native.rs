@@ -1,0 +1,364 @@
+//! Pure-Rust weighted polynomial ridge regression.
+//!
+//! Mirrors the L2 JAX semantics exactly (unpenalized intercept,
+//! `n_eff = sum(w)` normalization, `1e-7` diagonal jitter), in f64, so it
+//! doubles as the parity oracle for the XLA artifact path and as the
+//! fallback backend when `artifacts/` is absent.
+
+use crate::model::features::{expand_row, monomial_indices};
+use crate::model::{Backend, M};
+
+/// Dense column-major-free little matrix helper (row-major).
+fn cholesky_solve(a: &mut [f64], b: &mut [f64], p: usize, m: usize) -> Result<(), String> {
+    // In-place Cholesky A = L L^T (lower in a).
+    for j in 0..p {
+        let mut diag = a[j * p + j];
+        for k in 0..j {
+            diag -= a[j * p + k] * a[j * p + k];
+        }
+        if !(diag > 0.0) {
+            // negative OR NaN (NaN fails every comparison)
+            return Err(format!("matrix not SPD at column {j} (diag {diag})"));
+        }
+        let d = diag.sqrt();
+        a[j * p + j] = d;
+        for i in j + 1..p {
+            let mut v = a[i * p + j];
+            for k in 0..j {
+                v -= a[i * p + k] * a[j * p + k];
+            }
+            a[i * p + j] = v / d;
+        }
+    }
+    // Forward substitution L z = b.
+    for col in 0..m {
+        for i in 0..p {
+            let mut v = b[i * m + col];
+            for k in 0..i {
+                v -= a[i * p + k] * b[k * m + col];
+            }
+            b[i * m + col] = v / a[i * p + i];
+        }
+        // Back substitution L^T x = z.
+        for i in (0..p).rev() {
+            let mut v = b[i * m + col];
+            for k in i + 1..p {
+                v -= a[k * p + i] * b[k * m + col];
+            }
+            b[i * m + col] = v / a[i * p + i];
+        }
+    }
+    Ok(())
+}
+
+/// Un-normalized weighted Gram accumulators (upper triangle filled,
+/// symmetrized): returns `(G [p*p], C [p*M], n_eff)`.
+pub fn gram_f64(
+    x: &[f64],
+    y: &[f64],
+    w: &[f64],
+    n: usize,
+    d: usize,
+    degree: usize,
+) -> (Vec<f64>, Vec<f64>, f64) {
+    let idx = monomial_indices(d, degree);
+    let p = 1 + idx.len();
+    let mut gram = vec![0.0; p * p];
+    let mut rhs = vec![0.0; p * M];
+    let mut n_eff = 0.0;
+    for r in 0..n {
+        let wi = w[r];
+        if wi == 0.0 {
+            continue;
+        }
+        n_eff += wi;
+        let f = expand_row(&x[r * d..(r + 1) * d], degree, &idx);
+        for i in 0..p {
+            let fwi = f[i] * wi;
+            for j in i..p {
+                gram[i * p + j] += fwi * f[j];
+            }
+            for c in 0..M {
+                rhs[i * M + c] += fwi * y[r * M + c];
+            }
+        }
+    }
+    for i in 0..p {
+        for j in 0..i {
+            gram[i * p + j] = gram[j * p + i];
+        }
+    }
+    (gram, rhs, n_eff)
+}
+
+/// Ridge solve from accumulated Grams (matches the L2 `solve_fn` exactly:
+/// unpenalized intercept, `n_eff` normalization, `1e-7` jitter).
+pub fn solve_from_gram_f64(
+    g: &[f64],
+    c: &[f64],
+    n_eff: f64,
+    lam: f64,
+    p: usize,
+) -> Result<Vec<f64>, String> {
+    let n_eff = n_eff.max(1.0);
+    let mut a: Vec<f64> = g.iter().map(|v| v / n_eff).collect();
+    let mut b: Vec<f64> = c.iter().map(|v| v / n_eff).collect();
+    for i in 0..p {
+        if i > 0 {
+            a[i * p + i] += lam;
+        }
+        a[i * p + i] += 1e-7;
+    }
+    cholesky_solve(&mut a, &mut b, p, M)?;
+    Ok(b)
+}
+
+/// Weighted ridge fit on expanded features (f64 core).
+pub fn ridge_fit_f64(
+    x: &[f64],
+    y: &[f64],
+    w: &[f64],
+    n: usize,
+    d: usize,
+    lam: f64,
+    degree: usize,
+) -> Result<Vec<f64>, String> {
+    let (g, c, n_eff) = gram_f64(x, y, w, n, d, degree);
+    let p = 1 + monomial_indices(d, degree).len();
+    solve_from_gram_f64(&g, &c, n_eff, lam, p)
+}
+
+/// Prediction on expanded features (f64 core).
+pub fn predict_f64(x: &[f64], n: usize, d: usize, coef: &[f64], degree: usize) -> Vec<f64> {
+    let idx = monomial_indices(d, degree);
+    let p = 1 + idx.len();
+    assert_eq!(coef.len(), p * M, "coef shape");
+    let mut out = vec![0.0; n * M];
+    for r in 0..n {
+        let f = expand_row(&x[r * d..(r + 1) * d], degree, &idx);
+        for c in 0..M {
+            let mut acc = 0.0;
+            for i in 0..p {
+                acc += f[i] * coef[i * M + c];
+            }
+            out[r * M + c] = acc;
+        }
+    }
+    out
+}
+
+/// The native backend (f32 interface shared with the XLA path).
+pub struct NativeBackend {
+    pub d: usize,
+}
+
+impl NativeBackend {
+    pub fn new(d: usize) -> NativeBackend {
+        NativeBackend { d }
+    }
+}
+
+fn to_f64(v: &[f32]) -> Vec<f64> {
+    v.iter().map(|&x| x as f64).collect()
+}
+
+impl Backend for NativeBackend {
+    fn d(&self) -> usize {
+        self.d
+    }
+
+    fn fit(
+        &self,
+        x: &[f32],
+        y: &[f32],
+        w: &[f32],
+        n: usize,
+        lam: f32,
+        degree: usize,
+    ) -> Result<Vec<f32>, String> {
+        let coef = ridge_fit_f64(
+            &to_f64(x),
+            &to_f64(y),
+            &to_f64(w),
+            n,
+            self.d,
+            lam as f64,
+            degree,
+        )?;
+        Ok(coef.into_iter().map(|v| v as f32).collect())
+    }
+
+    fn loss(
+        &self,
+        x: &[f32],
+        y: &[f32],
+        w: &[f32],
+        n: usize,
+        coef: &[f32],
+        degree: usize,
+    ) -> Result<[f32; M], String> {
+        let pred = predict_f64(&to_f64(x), n, self.d, &to_f64(coef), degree);
+        let mut mse = [0.0f64; M];
+        let mut n_eff = 0.0;
+        for r in 0..n {
+            let wi = w[r] as f64;
+            n_eff += wi;
+            for c in 0..M {
+                let e = pred[r * M + c] - y[r * M + c] as f64;
+                mse[c] += wi * e * e;
+            }
+        }
+        let n_eff = n_eff.max(1.0);
+        Ok([
+            (mse[0] / n_eff) as f32,
+            (mse[1] / n_eff) as f32,
+            (mse[2] / n_eff) as f32,
+        ])
+    }
+
+    fn predict(
+        &self,
+        x: &[f32],
+        n: usize,
+        coef: &[f32],
+        degree: usize,
+    ) -> Result<Vec<f32>, String> {
+        Ok(predict_f64(&to_f64(x), n, self.d, &to_f64(coef), degree)
+            .into_iter()
+            .map(|v| v as f32)
+            .collect())
+    }
+
+    fn name(&self) -> &'static str {
+        "native"
+    }
+
+    fn has_gram_solve(&self) -> bool {
+        true
+    }
+
+    fn gram(
+        &self,
+        x: &[f32],
+        y: &[f32],
+        w: &[f32],
+        n: usize,
+        degree: usize,
+    ) -> Result<(Vec<f32>, Vec<f32>, f32), String> {
+        let (g, c, n_eff) = gram_f64(&to_f64(x), &to_f64(y), &to_f64(w), n, self.d, degree);
+        Ok((
+            g.into_iter().map(|v| v as f32).collect(),
+            c.into_iter().map(|v| v as f32).collect(),
+            n_eff as f32,
+        ))
+    }
+
+    fn solve(
+        &self,
+        g: &[f32],
+        c: &[f32],
+        n_eff: f32,
+        lam: f32,
+        degree: usize,
+    ) -> Result<Vec<f32>, String> {
+        let p = crate::model::features::num_features(self.d, degree);
+        let out = solve_from_gram_f64(&to_f64(g), &to_f64(c), n_eff as f64, lam as f64, p)?;
+        Ok(out.into_iter().map(|v| v as f32).collect())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prng::Rng;
+
+    /// Build a planted polynomial dataset.
+    fn planted(n: usize, d: usize, degree: usize, seed: u64) -> (Vec<f64>, Vec<f64>, Vec<f64>) {
+        let idx = monomial_indices(d, degree);
+        let p = 1 + idx.len();
+        let mut rng = Rng::new(seed);
+        let coef: Vec<f64> = (0..p * M).map(|_| rng.gauss()).collect();
+        let mut x = Vec::with_capacity(n * d);
+        for _ in 0..n * d {
+            x.push(rng.range_f64(-1.0, 1.0));
+        }
+        let y = predict_f64(&x, n, d, &coef, degree);
+        (x, y, coef)
+    }
+
+    #[test]
+    fn recovers_planted_polynomial() {
+        let (x, y, coef_true) = planted(400, 4, 2, 1);
+        let w = vec![1.0; 400];
+        let coef = ridge_fit_f64(&x, &y, &w, 400, 4, 0.0, 2).unwrap();
+        for (a, b) in coef.iter().zip(&coef_true) {
+            // the 1e-7 stabilization jitter bounds achievable accuracy
+            assert!((a - b).abs() < 1e-4, "{a} vs {b}");
+        }
+    }
+
+    #[test]
+    fn zero_weight_rows_ignored() {
+        let (mut x, mut y, _) = planted(200, 3, 2, 2);
+        let mut w = vec![1.0; 200];
+        // corrupt the last 50 rows and mask them
+        for r in 150..200 {
+            w[r] = 0.0;
+            for j in 0..3 {
+                x[r * 3 + j] = 99.0;
+            }
+            for c in 0..M {
+                y[r * M + c] = -99.0;
+            }
+        }
+        let a = ridge_fit_f64(&x, &y, &w, 200, 3, 0.01, 2).unwrap();
+        let b = ridge_fit_f64(&x[..150 * 3], &y[..150 * M], &vec![1.0; 150], 150, 3, 0.01, 2)
+            .unwrap();
+        for (u, v) in a.iter().zip(&b) {
+            assert!((u - v).abs() < 1e-9, "{u} vs {v}");
+        }
+    }
+
+    #[test]
+    fn ridge_shrinks_non_intercept() {
+        let (x, y, _) = planted(150, 7, 2, 3);
+        let w = vec![1.0; 150];
+        let small = ridge_fit_f64(&x, &y, &w, 150, 7, 1e-6, 2).unwrap();
+        let big = ridge_fit_f64(&x, &y, &w, 150, 7, 10.0, 2).unwrap();
+        let norm = |c: &[f64]| c[M..].iter().map(|v| v * v).sum::<f64>().sqrt();
+        assert!(norm(&big) < norm(&small));
+    }
+
+    #[test]
+    fn backend_loss_zero_on_training_fit() {
+        let (x, y, _) = planted(300, 5, 2, 4);
+        let b = NativeBackend::new(5);
+        let xf: Vec<f32> = x.iter().map(|&v| v as f32).collect();
+        let yf: Vec<f32> = y.iter().map(|&v| v as f32).collect();
+        let w = vec![1.0f32; 300];
+        let coef = b.fit(&xf, &yf, &w, 300, 0.0, 2).unwrap();
+        let mse = b.loss(&xf, &yf, &w, 300, &coef, 2).unwrap();
+        for v in mse {
+            assert!(v < 1e-6, "mse {v}");
+        }
+    }
+
+    #[test]
+    fn non_spd_is_reported() {
+        // n=1 with degree 3 over d=7: wildly underdetermined but jitter
+        // keeps it SPD — so force failure via NaN input instead.
+        let x = vec![f64::NAN; 7];
+        let y = vec![0.0; M];
+        let w = vec![1.0];
+        assert!(ridge_fit_f64(&x, &y, &w, 1, 7, 0.0, 2).is_err());
+    }
+
+    #[test]
+    fn predict_shape() {
+        let b = NativeBackend::new(7);
+        let coef = vec![0.0f32; 36 * M];
+        let x = vec![0.5f32; 7 * 9];
+        let out = b.predict(&x, 9, &coef, 2).unwrap();
+        assert_eq!(out.len(), 9 * M);
+    }
+}

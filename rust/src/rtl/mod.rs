@@ -1,0 +1,14 @@
+//! RTL generation + functional verification — the stand-in for the paper's
+//! "automatically generated RTL" and its Synopsys VCS verification flow.
+//!
+//! * [`netlist`] elaborates the same structural recipes the synthesis
+//!   oracle prices (`synth::mac`) into real gate-level netlists;
+//! * [`sim`] is a levelized gate simulator that verifies the netlists
+//!   against arithmetic golden models and measures toggle activity (the
+//!   activity factors the power model assumes);
+//! * [`verilog`] emits synthesizable Verilog: structural gate netlists for
+//!   the MAC cores plus behavioral PE/array wrappers.
+
+pub mod netlist;
+pub mod sim;
+pub mod verilog;

@@ -1,0 +1,293 @@
+//! Artifact loading: manifest parse + HLO text -> PJRT executables.
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::util::json::Json;
+
+/// Parsed `artifacts/manifest.json` (shapes contract with aot.py).
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub d: usize,
+    pub m: usize,
+    pub n_fit: usize,
+    pub b_predict: usize,
+    /// Gram accumulation tile (gram artifacts take b_gram rows; the engine
+    /// chunks larger row counts and sums the additive accumulators).
+    pub b_gram: usize,
+    pub degrees: Vec<usize>,
+    /// P per degree.
+    pub p: HashMap<usize, usize>,
+    pub feature_order: Vec<String>,
+    pub target_order: Vec<String>,
+    /// Monomial index tuples per degree (for cross-checking the rust
+    /// feature expansion against the kernels').
+    pub monomials: HashMap<usize, Vec<Vec<usize>>>,
+}
+
+impl Manifest {
+    pub fn parse(text: &str) -> Result<Manifest> {
+        let v = Json::parse(text).map_err(|e| anyhow!("manifest: {e}"))?;
+        let need = |k: &str| -> Result<usize> {
+            v.get(k).as_usize().ok_or_else(|| anyhow!("manifest missing {k}"))
+        };
+        let degrees: Vec<usize> = v
+            .get("degrees")
+            .as_arr()
+            .ok_or_else(|| anyhow!("manifest degrees"))?
+            .iter()
+            .filter_map(|x| x.as_usize())
+            .collect();
+        let mut p = HashMap::new();
+        let mut monomials = HashMap::new();
+        for &d in &degrees {
+            let art = v.get("artifacts").get(&format!("predict_d{d}"));
+            p.insert(d, art.get("p").as_usize().ok_or_else(|| anyhow!("p for d{d}"))?);
+            let mons = v
+                .get("monomials")
+                .get(&d.to_string())
+                .as_arr()
+                .ok_or_else(|| anyhow!("monomials d{d}"))?
+                .iter()
+                .map(|t| {
+                    t.as_arr()
+                        .map(|xs| xs.iter().filter_map(|x| x.as_usize()).collect())
+                        .unwrap_or_default()
+                })
+                .collect();
+            monomials.insert(d, mons);
+        }
+        let strings = |k: &str| -> Vec<String> {
+            v.get(k)
+                .as_arr()
+                .map(|a| a.iter().filter_map(|x| x.as_str().map(String::from)).collect())
+                .unwrap_or_default()
+        };
+        Ok(Manifest {
+            d: need("d")?,
+            m: need("m")?,
+            n_fit: need("n_fit")?,
+            b_predict: need("b_predict")?,
+            b_gram: v.get("b_gram").as_usize().unwrap_or(need("n_fit")?),
+            degrees,
+            p,
+            feature_order: strings("feature_order"),
+            target_order: strings("target_order"),
+            monomials,
+        })
+    }
+
+    pub fn load(dir: &Path) -> Result<Manifest> {
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {}", path.display()))?;
+        Manifest::parse(&text)
+    }
+}
+
+/// The PJRT client + compiled executables (owned by the engine thread; the
+/// underlying handles are not Sync).
+pub struct ArtifactRuntime {
+    pub manifest: Manifest,
+    client: xla::PjRtClient,
+    exes: HashMap<String, xla::PjRtLoadedExecutable>,
+}
+
+impl ArtifactRuntime {
+    /// Load every artifact named by the manifest from `dir`.
+    pub fn load(dir: &Path) -> Result<ArtifactRuntime> {
+        let manifest = Manifest::load(dir)?;
+        let client = xla::PjRtClient::cpu()?;
+        let mut exes = HashMap::new();
+        for &d in &manifest.degrees {
+            for kind in ["predict", "fit", "loss", "gram", "solve"] {
+                let name = format!("{kind}_d{d}");
+                let path = dir.join(format!("{name}.hlo.txt"));
+                if !path.exists() {
+                    bail!("artifact {} missing — run `make artifacts`", path.display());
+                }
+                let proto = xla::HloModuleProto::from_text_file(
+                    path.to_str().ok_or_else(|| anyhow!("non-utf8 path"))?,
+                )?;
+                let comp = xla::XlaComputation::from_proto(&proto);
+                let exe = client.compile(&comp)?;
+                exes.insert(name, exe);
+            }
+        }
+        Ok(ArtifactRuntime { manifest, client, exes })
+    }
+
+    pub fn artifacts_dir_default() -> PathBuf {
+        std::env::var("QAPPA_ARTIFACTS")
+            .map(PathBuf::from)
+            .unwrap_or_else(|_| PathBuf::from("artifacts"))
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    fn run1(&self, name: &str, inputs: &[xla::Literal]) -> Result<xla::Literal> {
+        let exe = self
+            .exes
+            .get(name)
+            .ok_or_else(|| anyhow!("no executable {name}"))?;
+        let out = exe.execute::<xla::Literal>(inputs)?[0][0].to_literal_sync()?;
+        Ok(out.to_tuple1()?)
+    }
+
+    fn run3(
+        &self,
+        name: &str,
+        inputs: &[xla::Literal],
+    ) -> Result<(xla::Literal, xla::Literal, xla::Literal)> {
+        let exe = self
+            .exes
+            .get(name)
+            .ok_or_else(|| anyhow!("no executable {name}"))?;
+        let out = exe.execute::<xla::Literal>(inputs)?[0][0].to_literal_sync()?;
+        Ok(out.to_tuple3()?)
+    }
+
+    fn mat(data: &[f32], rows: usize, cols: usize) -> Result<xla::Literal> {
+        debug_assert_eq!(data.len(), rows * cols);
+        Ok(xla::Literal::vec1(data).reshape(&[rows as i64, cols as i64])?)
+    }
+
+    /// Predict one full B-tile: x is `b_predict x d`, coef `p x m`.
+    pub fn predict_tile(&self, degree: usize, x: &[f32], coef: &[f32]) -> Result<Vec<f32>> {
+        let man = &self.manifest;
+        let p = man.p[&degree];
+        let xl = Self::mat(x, man.b_predict, man.d)?;
+        let wl = Self::mat(coef, p, man.m)?;
+        let out = self.run1(&format!("predict_d{degree}"), &[xl, wl])?;
+        Ok(out.to_vec::<f32>()?)
+    }
+
+    /// Fit on padded `n_fit` rows (weights mask padding).
+    pub fn fit(
+        &self,
+        degree: usize,
+        x: &[f32],
+        y: &[f32],
+        w: &[f32],
+        lam: f32,
+    ) -> Result<Vec<f32>> {
+        let man = &self.manifest;
+        let xl = Self::mat(x, man.n_fit, man.d)?;
+        let yl = Self::mat(y, man.n_fit, man.m)?;
+        let wl = xla::Literal::vec1(w).reshape(&[man.n_fit as i64])?;
+        let ll = xla::Literal::scalar(lam);
+        let out = self.run1(&format!("fit_d{degree}"), &[xl, yl, wl, ll])?;
+        Ok(out.to_vec::<f32>()?)
+    }
+
+    /// Un-normalized Gram accumulators for one b_gram tile: `(G, C, n_eff)`.
+    pub fn gram_tile(
+        &self,
+        degree: usize,
+        x: &[f32],
+        y: &[f32],
+        w: &[f32],
+    ) -> Result<(Vec<f32>, Vec<f32>, f32)> {
+        let man = &self.manifest;
+        let xl = Self::mat(x, man.b_gram, man.d)?;
+        let yl = Self::mat(y, man.b_gram, man.m)?;
+        let wl = xla::Literal::vec1(w).reshape(&[man.b_gram as i64])?;
+        let (g, c, n) = self.run3(&format!("gram_d{degree}"), &[xl, yl, wl])?;
+        Ok((
+            g.to_vec::<f32>()?,
+            c.to_vec::<f32>()?,
+            n.to_vec::<f32>()?[0],
+        ))
+    }
+
+    /// Ridge solve from accumulators.
+    pub fn solve(
+        &self,
+        degree: usize,
+        g: &[f32],
+        c: &[f32],
+        n_eff: f32,
+        lam: f32,
+    ) -> Result<Vec<f32>> {
+        let man = &self.manifest;
+        let p = man.p[&degree];
+        let gl = Self::mat(g, p, p)?;
+        let cl = Self::mat(c, p, man.m)?;
+        let nl = xla::Literal::scalar(n_eff);
+        let ll = xla::Literal::scalar(lam);
+        let out = self.run1(&format!("solve_d{degree}"), &[gl, cl, nl, ll])?;
+        Ok(out.to_vec::<f32>()?)
+    }
+
+    /// Weighted MSE of `coef` on padded rows.
+    pub fn loss(
+        &self,
+        degree: usize,
+        x: &[f32],
+        y: &[f32],
+        w: &[f32],
+        coef: &[f32],
+    ) -> Result<Vec<f32>> {
+        let man = &self.manifest;
+        let p = man.p[&degree];
+        let xl = Self::mat(x, man.n_fit, man.d)?;
+        let yl = Self::mat(y, man.n_fit, man.m)?;
+        let wl = xla::Literal::vec1(w).reshape(&[man.n_fit as i64])?;
+        let cl = Self::mat(coef, p, man.m)?;
+        let out = self.run1(&format!("loss_d{degree}"), &[xl, yl, wl, cl])?;
+        Ok(out.to_vec::<f32>()?)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const MANIFEST_SNIPPET: &str = r#"{
+      "d": 7, "m": 3, "n_fit": 2048, "b_predict": 256,
+      "degrees": [1, 2],
+      "feature_order": ["pe_rows","pe_cols","glb_kb","spad_ifmap_b","spad_filter_b","spad_psum_b","bandwidth_gbps"],
+      "target_order": ["power_mw","fmax_mhz","area_mm2"],
+      "monomials": {"1": [[0],[1],[2],[3],[4],[5],[6]], "2": [[0],[0,0]]},
+      "artifacts": {
+        "predict_d1": {"p": 8}, "fit_d1": {"p": 8}, "loss_d1": {"p": 8},
+        "predict_d2": {"p": 36}, "fit_d2": {"p": 36}, "loss_d2": {"p": 36}
+      }
+    }"#;
+
+    #[test]
+    fn manifest_parses() {
+        let m = Manifest::parse(MANIFEST_SNIPPET).unwrap();
+        assert_eq!(m.d, 7);
+        assert_eq!(m.b_predict, 256);
+        assert_eq!(m.degrees, vec![1, 2]);
+        assert_eq!(m.p[&1], 8);
+        assert_eq!(m.p[&2], 36);
+        assert_eq!(m.feature_order.len(), 7);
+        assert_eq!(m.monomials[&1].len(), 7);
+    }
+
+    #[test]
+    fn manifest_rejects_garbage() {
+        assert!(Manifest::parse("{}").is_err());
+        assert!(Manifest::parse("not json").is_err());
+    }
+
+    #[test]
+    fn manifest_feature_order_matches_config() {
+        // The rust feature vector is pinned to this order in
+        // config::AcceleratorConfig::features().
+        let m = Manifest::parse(MANIFEST_SNIPPET).unwrap();
+        assert_eq!(
+            m.feature_order,
+            vec![
+                "pe_rows", "pe_cols", "glb_kb", "spad_ifmap_b", "spad_filter_b",
+                "spad_psum_b", "bandwidth_gbps"
+            ]
+        );
+    }
+}

@@ -1,0 +1,512 @@
+//! The runtime engine: a dedicated thread owning the PJRT client, fed by a
+//! request channel with **dynamic batching** of predict traffic.
+//!
+//! PJRT handles are not `Sync`, so a single engine thread owns them and the
+//! rest of the coordinator talks to it through an mpsc channel.  Predict
+//! requests carry arbitrary row counts; the engine coalesces whatever is
+//! queued into the artifact's fixed `B`-row tile (padding the tail), which
+//! amortizes dispatch overhead exactly like a serving router's batcher.
+
+use std::path::Path;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::Arc;
+
+use crate::model::{Backend, M};
+use crate::runtime::client::ArtifactRuntime;
+
+enum Request {
+    Predict {
+        degree: usize,
+        coef: Arc<Vec<f32>>,
+        x: Vec<f32>, // n x d
+        n: usize,
+        reply: Sender<Result<Vec<f32>, String>>,
+    },
+    Fit {
+        degree: usize,
+        x: Vec<f32>,
+        y: Vec<f32>,
+        w: Vec<f32>,
+        n: usize,
+        lam: f32,
+        reply: Sender<Result<Vec<f32>, String>>,
+    },
+    Loss {
+        degree: usize,
+        x: Vec<f32>,
+        y: Vec<f32>,
+        w: Vec<f32>,
+        n: usize,
+        coef: Vec<f32>,
+        reply: Sender<Result<Vec<f32>, String>>,
+    },
+    Gram {
+        degree: usize,
+        x: Vec<f32>,
+        y: Vec<f32>,
+        w: Vec<f32>,
+        n: usize,
+        reply: Sender<Result<(Vec<f32>, Vec<f32>, f32), String>>,
+    },
+    Solve {
+        degree: usize,
+        g: Vec<f32>,
+        c: Vec<f32>,
+        n_eff: f32,
+        lam: f32,
+        reply: Sender<Result<Vec<f32>, String>>,
+    },
+    Shutdown,
+}
+
+/// Counters exposed for benches and the perf log.
+#[derive(Debug, Default)]
+pub struct EngineStats {
+    pub predict_requests: AtomicU64,
+    pub predict_rows: AtomicU64,
+    pub predict_batches: AtomicU64,
+    pub predict_padded_rows: AtomicU64,
+    pub fit_calls: AtomicU64,
+    pub loss_calls: AtomicU64,
+    pub gram_calls: AtomicU64,
+    pub solve_calls: AtomicU64,
+}
+
+/// Handle to the engine thread.
+pub struct Engine {
+    tx: Sender<Request>,
+    pub stats: Arc<EngineStats>,
+    pub d: usize,
+    pub n_fit: usize,
+    pub b_predict: usize,
+    join: Option<std::thread::JoinHandle<()>>,
+}
+
+impl Engine {
+    /// Start the engine by loading artifacts from `dir`.
+    pub fn start(dir: &Path) -> Result<Engine, String> {
+        let (tx, rx) = channel::<Request>();
+        let stats = Arc::new(EngineStats::default());
+        let stats2 = stats.clone();
+        // Load inside the engine thread (handles are not Send), but fail
+        // fast: the thread reports readiness over a oneshot.
+        let (ready_tx, ready_rx) = channel::<Result<(usize, usize, usize), String>>();
+        let dir = dir.to_path_buf();
+        let join = std::thread::Builder::new()
+            .name("qappa-runtime".into())
+            .spawn(move || {
+                let rt = match ArtifactRuntime::load(&dir) {
+                    Ok(rt) => {
+                        let m = &rt.manifest;
+                        let _ = ready_tx.send(Ok((m.d, m.n_fit, m.b_predict)));
+                        rt
+                    }
+                    Err(e) => {
+                        let _ = ready_tx.send(Err(format!("{e:#}")));
+                        return;
+                    }
+                };
+                engine_loop(rt, rx, stats2);
+            })
+            .map_err(|e| e.to_string())?;
+        let (d, n_fit, b_predict) = ready_rx
+            .recv()
+            .map_err(|_| "engine thread died during artifact load".to_string())??;
+        Ok(Engine { tx, stats, d, n_fit, b_predict, join: Some(join) })
+    }
+
+    fn rpc(&self, req: Request, rx: Receiver<Result<Vec<f32>, String>>) -> Result<Vec<f32>, String> {
+        self.tx.send(req).map_err(|_| "engine gone".to_string())?;
+        rx.recv().map_err(|_| "engine dropped reply".to_string())?
+    }
+
+    pub fn predict(
+        &self,
+        degree: usize,
+        coef: Arc<Vec<f32>>,
+        x: Vec<f32>,
+        n: usize,
+    ) -> Result<Vec<f32>, String> {
+        let (reply, rx) = channel();
+        self.stats.predict_requests.fetch_add(1, Ordering::Relaxed);
+        self.stats.predict_rows.fetch_add(n as u64, Ordering::Relaxed);
+        self.rpc(Request::Predict { degree, coef, x, n, reply }, rx)
+    }
+
+    pub fn fit(
+        &self,
+        degree: usize,
+        x: Vec<f32>,
+        y: Vec<f32>,
+        w: Vec<f32>,
+        n: usize,
+        lam: f32,
+    ) -> Result<Vec<f32>, String> {
+        let (reply, rx) = channel();
+        self.stats.fit_calls.fetch_add(1, Ordering::Relaxed);
+        self.rpc(Request::Fit { degree, x, y, w, n, lam, reply }, rx)
+    }
+
+    pub fn loss(
+        &self,
+        degree: usize,
+        x: Vec<f32>,
+        y: Vec<f32>,
+        w: Vec<f32>,
+        n: usize,
+        coef: Vec<f32>,
+    ) -> Result<Vec<f32>, String> {
+        let (reply, rx) = channel();
+        self.stats.loss_calls.fetch_add(1, Ordering::Relaxed);
+        self.rpc(Request::Loss { degree, x, y, w, n, coef, reply }, rx)
+    }
+
+    pub fn gram(
+        &self,
+        degree: usize,
+        x: Vec<f32>,
+        y: Vec<f32>,
+        w: Vec<f32>,
+        n: usize,
+    ) -> Result<(Vec<f32>, Vec<f32>, f32), String> {
+        let (reply, rx) = channel();
+        self.stats.gram_calls.fetch_add(1, Ordering::Relaxed);
+        self.tx
+            .send(Request::Gram { degree, x, y, w, n, reply })
+            .map_err(|_| "engine gone".to_string())?;
+        rx.recv().map_err(|_| "engine dropped reply".to_string())?
+    }
+
+    pub fn solve(
+        &self,
+        degree: usize,
+        g: Vec<f32>,
+        c: Vec<f32>,
+        n_eff: f32,
+        lam: f32,
+    ) -> Result<Vec<f32>, String> {
+        let (reply, rx) = channel();
+        self.stats.solve_calls.fetch_add(1, Ordering::Relaxed);
+        self.rpc(Request::Solve { degree, g, c, n_eff, lam, reply }, rx)
+    }
+}
+
+impl Drop for Engine {
+    fn drop(&mut self) {
+        let _ = self.tx.send(Request::Shutdown);
+        if let Some(j) = self.join.take() {
+            let _ = j.join();
+        }
+    }
+}
+
+/// Pad an `n x cols` slab to `rows_total` rows with zeros.
+fn pad_rows(data: &[f32], n: usize, cols: usize, rows_total: usize) -> Vec<f32> {
+    debug_assert!(n <= rows_total, "{n} > {rows_total}");
+    let mut out = Vec::with_capacity(rows_total * cols);
+    out.extend_from_slice(&data[..n * cols]);
+    out.resize(rows_total * cols, 0.0);
+    out
+}
+
+fn engine_loop(rt: ArtifactRuntime, rx: Receiver<Request>, stats: Arc<EngineStats>) {
+    let d = rt.manifest.d;
+    let m = rt.manifest.m;
+    let b = rt.manifest.b_predict;
+    // Pending predict rows grouped by (degree, coef identity).
+    struct Pending {
+        degree: usize,
+        coef: Arc<Vec<f32>>,
+        x: Vec<f32>,
+        n: usize,
+        reply: Sender<Result<Vec<f32>, String>>,
+    }
+
+    let mut queue: Vec<Pending> = Vec::new();
+
+    let flush = |queue: &mut Vec<Pending>, stats: &EngineStats| {
+        while !queue.is_empty() {
+            // Take the head request's (degree, coef) group and coalesce all
+            // compatible requests into B-row tiles.
+            let degree = queue[0].degree;
+            let coef = queue[0].coef.clone();
+            let mut group: Vec<Pending> = Vec::new();
+            let mut rest: Vec<Pending> = Vec::new();
+            for p in queue.drain(..) {
+                if p.degree == degree && Arc::ptr_eq(&p.coef, &coef) {
+                    group.push(p);
+                } else {
+                    rest.push(p);
+                }
+            }
+            *queue = rest;
+
+            // Concatenate group rows, execute tile by tile, scatter back.
+            let total: usize = group.iter().map(|p| p.n).sum();
+            let mut all_x = Vec::with_capacity(total * d);
+            for p in &group {
+                all_x.extend_from_slice(&p.x[..p.n * d]);
+            }
+            let mut all_out: Vec<f32> = Vec::with_capacity(total * m);
+            let mut ok = Ok(());
+            let mut off = 0usize;
+            while off < total {
+                let take = (total - off).min(b);
+                let tile = pad_rows(&all_x[off * d..], take, d, b);
+                stats.predict_batches.fetch_add(1, Ordering::Relaxed);
+                stats
+                    .predict_padded_rows
+                    .fetch_add((b - take) as u64, Ordering::Relaxed);
+                match rt.predict_tile(degree, &tile, &coef) {
+                    Ok(out) => all_out.extend_from_slice(&out[..take * m]),
+                    Err(e) => {
+                        ok = Err(format!("{e:#}"));
+                        break;
+                    }
+                }
+                off += take;
+            }
+            // scatter
+            let mut row = 0usize;
+            for p in group {
+                let res = match &ok {
+                    Ok(()) => Ok(all_out[row * m..(row + p.n) * m].to_vec()),
+                    Err(e) => Err(e.clone()),
+                };
+                row += p.n;
+                let _ = p.reply.send(res);
+            }
+        }
+    };
+
+    loop {
+        // Block for one request, then drain whatever else is queued so the
+        // batcher sees the full backlog.
+        let first = match rx.recv() {
+            Ok(r) => r,
+            Err(_) => break,
+        };
+        let mut batchable = Vec::new();
+        let mut others = Vec::new();
+        let mut shutdown = false;
+        let mut stash = |req: Request, batchable: &mut Vec<Pending>, others: &mut Vec<Request>| {
+            match req {
+                Request::Predict { degree, coef, x, n, reply } => {
+                    batchable.push(Pending { degree, coef, x, n, reply })
+                }
+                other => others.push(other),
+            }
+        };
+        match first {
+            Request::Shutdown => break,
+            r => stash(r, &mut batchable, &mut others),
+        }
+        while let Ok(r) = rx.try_recv() {
+            match r {
+                Request::Shutdown => {
+                    shutdown = true;
+                    break;
+                }
+                r => stash(r, &mut batchable, &mut others),
+            }
+        }
+        queue.extend(batchable);
+        flush(&mut queue, &stats);
+        for req in others {
+            match req {
+                Request::Fit { degree, x, y, w, n, lam, reply } => {
+                    let n_fit = rt.manifest.n_fit;
+                    let res = if n > n_fit {
+                        Err(format!("fit rows {n} exceed artifact capacity {n_fit}"))
+                    } else {
+                        let xp = pad_rows(&x, n, d, n_fit);
+                        let yp = pad_rows(&y, n, m, n_fit);
+                        let wp = pad_rows(&w, n, 1, n_fit);
+                        rt.fit(degree, &xp, &yp, &wp, lam).map_err(|e| format!("{e:#}"))
+                    };
+                    let _ = reply.send(res);
+                }
+                Request::Loss { degree, x, y, w, n, coef, reply } => {
+                    let n_fit = rt.manifest.n_fit;
+                    let res = if n > n_fit {
+                        Err(format!("loss rows {n} exceed artifact capacity {n_fit}"))
+                    } else {
+                        let xp = pad_rows(&x, n, d, n_fit);
+                        let yp = pad_rows(&y, n, m, n_fit);
+                        let wp = pad_rows(&w, n, 1, n_fit);
+                        rt.loss(degree, &xp, &yp, &wp, &coef).map_err(|e| format!("{e:#}"))
+                    };
+                    let _ = reply.send(res);
+                }
+                Request::Gram { degree, x, y, w, n, reply } => {
+                    // Grams are additive: chunk the rows through the
+                    // b_gram tile and sum the accumulators.
+                    let bg = rt.manifest.b_gram;
+                    let mut acc: Option<(Vec<f32>, Vec<f32>, f32)> = None;
+                    let mut err = None;
+                    let mut off = 0usize;
+                    while off < n {
+                        let take = (n - off).min(bg);
+                        let xp = pad_rows(&x[off * d..], take, d, bg);
+                        let yp = pad_rows(&y[off * m..], take, m, bg);
+                        let wp = pad_rows(&w[off..], take, 1, bg);
+                        match rt.gram_tile(degree, &xp, &yp, &wp) {
+                            Ok((g, c, ne)) => match &mut acc {
+                                None => acc = Some((g, c, ne)),
+                                Some((ga, ca, na)) => {
+                                    for (a, b) in ga.iter_mut().zip(&g) {
+                                        *a += b;
+                                    }
+                                    for (a, b) in ca.iter_mut().zip(&c) {
+                                        *a += b;
+                                    }
+                                    *na += ne;
+                                }
+                            },
+                            Err(e) => {
+                                err = Some(format!("{e:#}"));
+                                break;
+                            }
+                        }
+                        off += take;
+                    }
+                    let res = match (err, acc) {
+                        (Some(e), _) => Err(e),
+                        (None, Some(a)) => Ok(a),
+                        (None, None) => Err("gram with zero rows".into()),
+                    };
+                    let _ = reply.send(res);
+                }
+                Request::Solve { degree, g, c, n_eff, lam, reply } => {
+                    let res = rt
+                        .solve(degree, &g, &c, n_eff, lam)
+                        .map_err(|e| format!("{e:#}"));
+                    let _ = reply.send(res);
+                }
+                Request::Predict { .. } | Request::Shutdown => unreachable!(),
+            }
+        }
+        if shutdown {
+            break;
+        }
+    }
+}
+
+/// `model::Backend` implementation over the engine (standardized f32
+/// matrices in, coefficients out — same contract as `NativeBackend`).
+pub struct XlaBackend {
+    engine: Arc<Engine>,
+}
+
+impl XlaBackend {
+    pub fn new(engine: Arc<Engine>) -> XlaBackend {
+        XlaBackend { engine }
+    }
+
+    pub fn engine(&self) -> &Engine {
+        &self.engine
+    }
+}
+
+impl Backend for XlaBackend {
+    fn d(&self) -> usize {
+        self.engine.d
+    }
+
+    fn fit(
+        &self,
+        x: &[f32],
+        y: &[f32],
+        w: &[f32],
+        n: usize,
+        lam: f32,
+        degree: usize,
+    ) -> Result<Vec<f32>, String> {
+        self.engine
+            .fit(degree, x.to_vec(), y.to_vec(), w.to_vec(), n, lam)
+    }
+
+    fn loss(
+        &self,
+        x: &[f32],
+        y: &[f32],
+        w: &[f32],
+        n: usize,
+        coef: &[f32],
+        degree: usize,
+    ) -> Result<[f32; M], String> {
+        let v = self
+            .engine
+            .loss(degree, x.to_vec(), y.to_vec(), w.to_vec(), n, coef.to_vec())?;
+        if v.len() != M {
+            return Err(format!("loss returned {} values", v.len()));
+        }
+        Ok([v[0], v[1], v[2]])
+    }
+
+    fn predict(
+        &self,
+        x: &[f32],
+        n: usize,
+        coef: &[f32],
+        degree: usize,
+    ) -> Result<Vec<f32>, String> {
+        self.engine
+            .predict(degree, Arc::new(coef.to_vec()), x.to_vec(), n)
+    }
+
+    fn name(&self) -> &'static str {
+        "xla"
+    }
+
+    fn has_gram_solve(&self) -> bool {
+        true
+    }
+
+    fn gram(
+        &self,
+        x: &[f32],
+        y: &[f32],
+        w: &[f32],
+        n: usize,
+        degree: usize,
+    ) -> Result<(Vec<f32>, Vec<f32>, f32), String> {
+        self.engine
+            .gram(degree, x.to_vec(), y.to_vec(), w.to_vec(), n)
+    }
+
+    fn solve(
+        &self,
+        g: &[f32],
+        c: &[f32],
+        n_eff: f32,
+        lam: f32,
+        degree: usize,
+    ) -> Result<Vec<f32>, String> {
+        self.engine
+            .solve(degree, g.to_vec(), c.to_vec(), n_eff, lam)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pad_rows_pads_and_preserves() {
+        let data = [1.0f32, 2.0, 3.0, 4.0, 5.0, 6.0];
+        let out = pad_rows(&data, 2, 3, 4);
+        assert_eq!(out.len(), 12);
+        assert_eq!(&out[..6], &data[..]);
+        assert!(out[6..].iter().all(|&v| v == 0.0));
+    }
+
+    #[test]
+    #[should_panic]
+    #[cfg(debug_assertions)] // debug_assert! is compiled out in release
+    fn pad_rows_rejects_overflow_in_debug() {
+        let data = [0.0f32; 12];
+        let _ = pad_rows(&data, 4, 3, 2);
+    }
+}

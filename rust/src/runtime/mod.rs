@@ -1,0 +1,18 @@
+//! PJRT runtime: load the AOT HLO-text artifacts and serve fit / loss /
+//! predict requests from the rust hot path.
+//!
+//! * [`client`] — manifest-driven artifact loading: HLO text ->
+//!   `HloModuleProto` -> PJRT compile, one executable per (kind, degree);
+//! * [`engine`] — a dedicated runtime thread owning the PJRT client plus a
+//!   dynamic batcher: concurrent predict requests are coalesced into the
+//!   artifact's fixed `B = 256` tile (padding masked out), the vLLM-router
+//!   pattern scaled down to this paper's workload.
+//!
+//! Python never runs here: after `make artifacts`, the rust binary is
+//! self-contained.
+
+pub mod client;
+pub mod engine;
+
+pub use client::{ArtifactRuntime, Manifest};
+pub use engine::{Engine, EngineStats, XlaBackend};

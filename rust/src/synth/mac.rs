@@ -1,0 +1,365 @@
+//! Gate-level MAC datapath generators — one per PE type.
+//!
+//! Each generator composes the standard-cell library into the arithmetic
+//! structure the paper's RTL generator would emit, returning gate counts and
+//! the combinational critical path.  The LightPE datapaths follow LightNN
+//! (Ding et al. 2018): the weight is encoded as one (LightPE-1) or two
+//! (LightPE-2) signed powers of two, so the multiplier collapses into a
+//! barrel shifter (+ an extra adder for the second term).
+//!
+//! The same structural recipes are elaborated into real gate netlists by
+//! `crate::rtl::netlist`; a cross-check test there asserts the counts agree.
+
+use crate::config::PeType;
+use crate::synth::gates::{GateCounts, GateLib};
+
+/// A synthesized combinational/pipelined block.
+#[derive(Debug, Clone, Copy)]
+pub struct Block {
+    pub counts: GateCounts,
+    /// Combinational critical path before pipelining, ps.
+    pub crit_path_ps: f64,
+}
+
+impl Block {
+    pub fn empty() -> Block {
+        Block { counts: GateCounts::default(), crit_path_ps: 0.0 }
+    }
+
+    /// Series composition: counts add, critical paths add.
+    pub fn then(mut self, other: &Block) -> Block {
+        self.counts.add(&other.counts);
+        self.crit_path_ps += other.crit_path_ps;
+        self
+    }
+
+    /// Parallel composition: counts add, critical path is the max.
+    pub fn beside(mut self, other: &Block) -> Block {
+        self.counts.add(&other.counts);
+        self.crit_path_ps = self.crit_path_ps.max(other.crit_path_ps);
+        self
+    }
+}
+
+/// n-bit ripple-carry adder.
+pub fn ripple_adder(lib: &GateLib, n: u32) -> Block {
+    Block {
+        counts: GateCounts { fa: n as u64, ..Default::default() },
+        crit_path_ps: n as f64 * lib.fa.delay_ps,
+    }
+}
+
+/// n-bit carry-lookahead adder (4-bit groups, two lookahead levels).
+pub fn cla_adder(lib: &GateLib, n: u32) -> Block {
+    let groups = n.div_ceil(4) as u64;
+    let counts = GateCounts {
+        fa: n as u64,
+        // generate/propagate + group lookahead logic
+        and2: 3 * n as u64,
+        or2: 2 * n as u64,
+        nand2: 4 * groups,
+        ..Default::default()
+    };
+    // log-depth carry tree: one FA stage + lookahead levels
+    let levels = (n as f64).log2().ceil().max(1.0);
+    Block {
+        counts,
+        crit_path_ps: lib.fa.delay_ps + levels * (lib.and2.delay_ps + lib.or2.delay_ps),
+    }
+}
+
+/// m x n signed array multiplier (Baugh-Wooley).
+pub fn array_multiplier(lib: &GateLib, m: u32, n: u32) -> Block {
+    let (m, n) = (m as u64, n as u64);
+    let counts = GateCounts {
+        and2: m * n,                   // partial products
+        fa: (m - 1) * n,               // carry-save reduction rows
+        ha: m + n,                     // row edges
+        inv: m + n,                    // Baugh-Wooley sign complements
+        ..Default::default()
+    };
+    Block {
+        counts,
+        // diagonal through the carry-save array plus the final row
+        crit_path_ps: lib.and2.delay_ps + (m + n - 2) as f64 * lib.fa.delay_ps,
+    }
+}
+
+/// w-bit barrel shifter with `stages` mux levels (shift range 2^stages).
+pub fn barrel_shifter(lib: &GateLib, w: u32, stages: u32) -> Block {
+    Block {
+        counts: GateCounts {
+            mux2: (w * stages) as u64,
+            ..Default::default()
+        },
+        crit_path_ps: stages as f64 * lib.mux2.delay_ps,
+    }
+}
+
+/// Conditional two's-complement negate (xor mask + carry-in absorbed by the
+/// downstream adder).
+pub fn cond_negate(lib: &GateLib, w: u32) -> Block {
+    Block {
+        counts: GateCounts { xor2: w as u64, ..Default::default() },
+        crit_path_ps: lib.xor2.delay_ps,
+    }
+}
+
+/// Leading-zero counter for FP normalization (w-bit).
+pub fn leading_zero_count(lib: &GateLib, w: u32) -> Block {
+    let levels = (w as f64).log2().ceil() as u64;
+    Block {
+        counts: GateCounts {
+            nor2: w as u64,
+            mux2: w as u64,
+            or2: (w as u64) / 2 * levels,
+            ..Default::default()
+        },
+        crit_path_ps: levels as f64 * (lib.or2.delay_ps + lib.mux2.delay_ps),
+    }
+}
+
+/// A complete pipelined MAC unit.
+#[derive(Debug, Clone, Copy)]
+pub struct MacUnit {
+    pub pe_type: PeType,
+    pub counts: GateCounts,
+    pub crit_path_ps: f64,
+    pub pipeline_stages: u32,
+    /// Average datapath node activity per MAC (structure-dependent;
+    /// cross-checked against the rtl toggle simulator).
+    pub activity: f64,
+}
+
+/// Pipeline-stage timing target (ps). One MAC issues per cycle; deeper
+/// datapaths get more stages instead of a slower clock.
+const STAGE_TARGET_PS: f64 = 900.0;
+/// Clock overhead per stage: DFF clk->q + setup + margin (ps).
+const CLK_OVERHEAD_PS: f64 = 150.0;
+
+impl MacUnit {
+    /// Achievable clock, MHz (1e6 ps per µs).
+    ///
+    /// Deeper pipelines do not cut the stage time perfectly: register
+    /// placement imbalance adds ~6% per extra stage, and clock skew /
+    /// margin accumulates with depth — so a 5-stage FP32 pipe cannot
+    /// out-clock a 2-stage INT16 pipe just by rounding.
+    pub fn fmax_mhz(&self) -> f64 {
+        let stages = self.pipeline_stages as f64;
+        let imbalance = 1.0 + 0.06 * (stages - 1.0);
+        let overhead = CLK_OVERHEAD_PS + 14.0 * stages;
+        let stage = self.crit_path_ps / stages * imbalance + overhead;
+        1.0e6 / stage
+    }
+
+    pub fn area_um2(&self, lib: &GateLib) -> f64 {
+        lib.area_um2(&self.counts)
+    }
+
+    /// Dynamic energy per MAC operation, fJ.
+    pub fn energy_per_mac_fj(&self, lib: &GateLib) -> f64 {
+        lib.energy_per_op_fj(&self.counts, self.activity)
+    }
+
+    pub fn leakage_nw(&self, lib: &GateLib) -> f64 {
+        lib.leakage_nw(&self.counts)
+    }
+}
+
+fn pipelined(pe_type: PeType, datapath: Block, out_width: u32, activity: f64) -> MacUnit {
+    let stages = (datapath.crit_path_ps / STAGE_TARGET_PS).ceil().max(1.0) as u32;
+    let mut counts = datapath.counts;
+    // Pipeline registers: roughly 1.5x the output width per internal cut,
+    // plus the architectural output register.
+    let regs = out_width as u64 * 3 / 2 * (stages as u64 - 1) + out_width as u64;
+    counts.dff += regs;
+    MacUnit {
+        pe_type,
+        counts,
+        crit_path_ps: datapath.crit_path_ps,
+        pipeline_stages: stages,
+        activity,
+    }
+}
+
+/// Build the MAC unit for a PE type.
+pub fn mac_unit(lib: &GateLib, pe_type: PeType) -> MacUnit {
+    match pe_type {
+        PeType::Fp32 => fp32_mac(lib),
+        PeType::Int16 => int16_mac(lib),
+        PeType::LightPe1 => light_mac(lib, PeType::LightPe1),
+        PeType::LightPe2 => light_mac(lib, PeType::LightPe2),
+    }
+}
+
+/// IEEE-754 single-precision fused multiply-add.
+fn fp32_mac(lib: &GateLib) -> MacUnit {
+    let mant_mult = array_multiplier(lib, 24, 24);
+    let exp_add = ripple_adder(lib, 8);
+    let align = barrel_shifter(lib, 48, 6);
+    let mant_add = cla_adder(lib, 48);
+    let lzc = leading_zero_count(lib, 48);
+    let norm = barrel_shifter(lib, 48, 6);
+    let round = ripple_adder(lib, 12);
+    // Exception/sign/flag logic.
+    let misc = Block {
+        counts: GateCounts { nand2: 220, inv: 90, or2: 60, ..Default::default() },
+        crit_path_ps: 2.0 * lib.nand2.delay_ps,
+    };
+    let datapath = mant_mult
+        .beside(&exp_add) // exponent path runs in parallel with the multiply
+        .then(&align)
+        .then(&mant_add)
+        .then(&lzc)
+        .then(&norm)
+        .then(&round)
+        .then(&misc);
+    // Multiplier arrays toggle heavily; FP datapath average ~0.25.
+    pipelined(PeType::Fp32, datapath, 32, 0.25)
+}
+
+/// 16-bit integer MAC with a 32-bit accumulator.
+fn int16_mac(lib: &GateLib) -> MacUnit {
+    let mult = array_multiplier(lib, 16, 16);
+    let acc = cla_adder(lib, 32);
+    let datapath = mult.then(&acc);
+    pipelined(PeType::Int16, datapath, 32, 0.28)
+}
+
+/// LightNN shift-add MAC: 8-bit activation, weight encoded as
+/// `shift_terms` signed powers of two; accumulator width from the PE type.
+fn light_mac(lib: &GateLib, pe_type: PeType) -> MacUnit {
+    debug_assert!(pe_type.is_light());
+    let acc_w = pe_type.psum_bits();
+    // Weight decode: split the packed weight into per-term (sign, shift).
+    let decode = Block {
+        counts: GateCounts { nand2: 12, inv: 6, ..Default::default() },
+        crit_path_ps: 2.0 * lib.nand2.delay_ps,
+    };
+    // One shifted term: 3-stage barrel shift (range 0..7) widened to the
+    // accumulator, then a conditional negate for the sign.
+    let term = barrel_shifter(lib, acc_w, 3).then(&cond_negate(lib, acc_w));
+    let mut datapath = decode.then(&term);
+    if pe_type.shift_terms() == 2 {
+        // Second term is generated in parallel; the two terms and the
+        // incoming psum merge through a 3:2 carry-save stage (one FA row)
+        // before the single carry-propagate accumulator below — so the
+        // second term costs area but almost no latency.
+        let term2 = barrel_shifter(lib, acc_w, 3).then(&cond_negate(lib, acc_w));
+        let csa = Block {
+            counts: GateCounts { fa: acc_w as u64, ..Default::default() },
+            crit_path_ps: lib.fa.delay_ps,
+        };
+        datapath = datapath.beside(&term2).then(&csa);
+    }
+    // Accumulate into the partial sum.
+    let datapath = datapath.then(&cla_adder(lib, acc_w));
+    // Shift networks toggle sparsely compared to multiplier arrays; in
+    // LightPE-2 the second term is gated off for the ~40% of LightNN
+    // weights that one power-of-two already represents, lowering the
+    // average node activity further.
+    let activity = if pe_type.shift_terms() == 2 { 0.15 } else { 0.18 };
+    pipelined(pe_type, datapath, acc_w, activity)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::ALL_PE_TYPES;
+
+    fn lib() -> GateLib {
+        GateLib::freepdk45()
+    }
+
+    #[test]
+    fn adder_counts_and_paths() {
+        let l = lib();
+        let r8 = ripple_adder(&l, 8);
+        let r32 = ripple_adder(&l, 32);
+        assert_eq!(r8.counts.fa, 8);
+        assert_eq!(r32.counts.fa, 32);
+        assert!(r32.crit_path_ps > r8.crit_path_ps);
+        let c32 = cla_adder(&l, 32);
+        // CLA trades area for delay
+        assert!(c32.counts.total() > r32.counts.total());
+        assert!(c32.crit_path_ps < r32.crit_path_ps);
+    }
+
+    #[test]
+    fn multiplier_scales_quadratically() {
+        let l = lib();
+        let m8 = array_multiplier(&l, 8, 8);
+        let m16 = array_multiplier(&l, 16, 16);
+        let ratio = m16.counts.total() as f64 / m8.counts.total() as f64;
+        assert!((3.0..5.0).contains(&ratio), "ratio {ratio}");
+    }
+
+    #[test]
+    fn compose_then_beside() {
+        let l = lib();
+        let a = ripple_adder(&l, 8);
+        let b = ripple_adder(&l, 16);
+        let s = a.then(&b);
+        assert_eq!(s.counts.fa, 24);
+        assert!((s.crit_path_ps - (a.crit_path_ps + b.crit_path_ps)).abs() < 1e-9);
+        let p = a.beside(&b);
+        assert_eq!(p.counts.fa, 24);
+        assert_eq!(p.crit_path_ps, b.crit_path_ps);
+    }
+
+    #[test]
+    fn mac_area_ordering_matches_paper() {
+        // Fig. 2: FP32 costliest, LightPEs cheapest (per PE).
+        let l = lib();
+        let area = |t| mac_unit(&l, t).area_um2(&l);
+        assert!(area(PeType::Fp32) > 2.0 * area(PeType::Int16));
+        assert!(area(PeType::Int16) > 2.0 * area(PeType::LightPe2));
+        assert!(area(PeType::LightPe2) > area(PeType::LightPe1));
+    }
+
+    #[test]
+    fn mac_energy_ordering_matches_paper() {
+        let l = lib();
+        let e = |t| mac_unit(&l, t).energy_per_mac_fj(&l);
+        assert!(e(PeType::Fp32) > e(PeType::Int16));
+        assert!(e(PeType::Int16) > 3.0 * e(PeType::LightPe2));
+        assert!(e(PeType::LightPe2) > e(PeType::LightPe1));
+    }
+
+    #[test]
+    fn mac_energy_in_horowitz_ballpark() {
+        // 45nm: FP32 FMA ~4.6 pJ, INT16 MAC ~1 pJ (order of magnitude;
+        // our activity-scaled average sits at the low end).
+        let l = lib();
+        let fp = mac_unit(&l, PeType::Fp32).energy_per_mac_fj(&l) / 1000.0;
+        assert!((0.5..12.0).contains(&fp), "fp32 mac {fp} pJ");
+        let i16 = mac_unit(&l, PeType::Int16).energy_per_mac_fj(&l) / 1000.0;
+        assert!((0.2..3.0).contains(&i16), "int16 mac {i16} pJ");
+        let lp1 = mac_unit(&l, PeType::LightPe1).energy_per_mac_fj(&l) / 1000.0;
+        assert!((0.01..0.4).contains(&lp1), "lightpe1 mac {lp1} pJ");
+    }
+
+    #[test]
+    fn lighter_datapaths_clock_no_slower() {
+        let l = lib();
+        let f = |t| mac_unit(&l, t).fmax_mhz();
+        // Shift-add datapaths are shallow and clock fastest; FP32 and
+        // INT16 may land close to each other because deeper pipelining
+        // compensates for the longer FP path.
+        assert!(f(PeType::LightPe1) > f(PeType::Int16));
+        assert!(f(PeType::LightPe1) > f(PeType::Fp32));
+        for t in ALL_PE_TYPES {
+            let mhz = f(t);
+            assert!((200.0..2500.0).contains(&mhz), "{t:?} fmax {mhz} MHz");
+        }
+    }
+
+    #[test]
+    fn pipeline_depth_reflects_path() {
+        let l = lib();
+        let fp = mac_unit(&l, PeType::Fp32);
+        let lp = mac_unit(&l, PeType::LightPe1);
+        assert!(fp.pipeline_stages > lp.pipeline_stages);
+        assert!(lp.pipeline_stages >= 1);
+    }
+}

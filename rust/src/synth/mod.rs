@@ -1,0 +1,24 @@
+//! Synthesis oracle — the stand-in for Synopsys Design Compiler + FreePDK45.
+//!
+//! The paper extracts ground-truth PPA by synthesizing every accelerator
+//! configuration; this module reproduces that data source analytically:
+//! every datapath is composed from a FreePDK45-calibrated standard-cell
+//! library ([`gates`]), SRAM macros come from a CACTI-style model
+//! ([`sram`]), and the full design is assembled bottom-up
+//! (MAC -> PE -> array, [`mac`]/[`pe`]/[`array`]).  [`oracle`] adds the
+//! deterministic per-config "tool jitter" that makes the regression problem
+//! realistic and exposes the `synthesize()` entry point the coordinator's
+//! training-set sweep calls.
+//!
+//! The same structural generators drive the RTL netlist builder
+//! (`crate::rtl`), so the gate counts the oracle prices and the netlists the
+//! logic simulator verifies cannot drift apart.
+
+pub mod array;
+pub mod gates;
+pub mod mac;
+pub mod oracle;
+pub mod pe;
+pub mod sram;
+
+pub use oracle::{synthesize, synthesize_clean, Ppa};

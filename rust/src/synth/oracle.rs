@@ -1,0 +1,186 @@
+//! The synthesis oracle: `synthesize(cfg) -> Ppa` ground truth.
+//!
+//! This is the stand-in for the paper's Synopsys Design Compiler +
+//! FreePDK45 flow.  `synthesize_clean` is the pure analytical model;
+//! `synthesize` adds deterministic per-config multiplicative jitter that
+//! mimics synthesis-tool non-determinism (placement seeds, mapping
+//! heuristics), which is what makes the regression fit a statistics
+//! problem rather than table interpolation.  Jitter is keyed off the
+//! config identity, so the "tool" is reproducible run-to-run.
+
+use crate::config::AcceleratorConfig;
+use crate::synth::array::{synthesize_array, ArraySynth};
+use crate::synth::gates::GateLib;
+use crate::util::prng::{hash64, Rng};
+
+/// Ground-truth (or predicted) power / performance / area triple.
+///
+/// Field order matches the artifact target order
+/// (`manifest.json: target_order` = [power_mw, fmax_mhz, area_mm2]).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Ppa {
+    pub power_mw: f64,
+    pub fmax_mhz: f64,
+    pub area_mm2: f64,
+}
+
+impl Ppa {
+    pub fn as_array(&self) -> [f64; 3] {
+        [self.power_mw, self.fmax_mhz, self.area_mm2]
+    }
+
+    pub fn from_array(a: [f64; 3]) -> Ppa {
+        Ppa { power_mw: a[0], fmax_mhz: a[1], area_mm2: a[2] }
+    }
+}
+
+/// Relative sigma of the synthesis jitter (power — the noisiest report).
+pub const JITTER_SIGMA: f64 = 0.03;
+/// Timing reports are far more repeatable than power estimates.
+pub const JITTER_SIGMA_FMAX_SCALE: f64 = 0.25;
+/// Area sits in between.
+pub const JITTER_SIGMA_AREA_SCALE: f64 = 0.5;
+
+/// Jitter-free analytical synthesis.
+pub fn synthesize_clean(cfg: &AcceleratorConfig) -> Ppa {
+    let lib = GateLib::freepdk45();
+    let arr = synthesize_array(&lib, cfg);
+    Ppa {
+        power_mw: arr.power_mw(&lib),
+        fmax_mhz: arr.fmax_mhz,
+        area_mm2: arr.area_mm2(&lib),
+    }
+}
+
+/// Synthesis with tool jitter — the data source for model training.
+pub fn synthesize(cfg: &AcceleratorConfig) -> Ppa {
+    synthesize_with_sigma(cfg, JITTER_SIGMA)
+}
+
+/// Jitter amplitude exposed for the `ablation_noise` bench.
+pub fn synthesize_with_sigma(cfg: &AcceleratorConfig, sigma: f64) -> Ppa {
+    let clean = synthesize_clean(cfg);
+    let mut rng = Rng::new(hash64(cfg.key().as_bytes()));
+    let mut jitter = |scale: f64| (sigma * scale * rng.gauss()).exp();
+    Ppa {
+        power_mw: clean.power_mw * jitter(1.0),
+        fmax_mhz: clean.fmax_mhz * jitter(JITTER_SIGMA_FMAX_SCALE),
+        area_mm2: clean.area_mm2 * jitter(JITTER_SIGMA_AREA_SCALE),
+    }
+}
+
+/// Energy/time coefficients the dataflow model needs, derived from the same
+/// synthesized design (so the oracle and the workload-level energy model
+/// can never disagree about the hardware).
+#[derive(Debug, Clone, Copy)]
+pub struct EnergyParams {
+    /// Dynamic energy of one MAC including spad traffic, fJ.
+    pub mac_with_spads_fj: f64,
+    /// GLB access energy per word, fJ.
+    pub glb_access_fj: f64,
+    /// Word width for GLB accounting, bits.
+    pub glb_word_bits: u32,
+    /// Interconnect energy per bit moved GLB<->PE, fJ.
+    pub wire_fj_per_bit: f64,
+    /// DRAM energy per bit, fJ.
+    pub dram_fj_per_bit: f64,
+    /// Total chip leakage, mW.
+    pub leakage_mw: f64,
+    /// Array clock, MHz.
+    pub fmax_mhz: f64,
+}
+
+/// Derive the energy parameters for a configuration.
+pub fn energy_params(cfg: &AcceleratorConfig) -> EnergyParams {
+    let lib = GateLib::freepdk45();
+    let arr: ArraySynth = synthesize_array(&lib, cfg);
+    let leak_nw = arr.pe.leakage_nw(&lib) * arr.num_pes as f64
+        + arr.glb.leak_nw
+        + lib.leakage_nw(&arr.infra);
+    EnergyParams {
+        mac_with_spads_fj: arr.pe.energy_per_mac_fj(&lib),
+        glb_access_fj: arr.glb.access_energy_fj,
+        glb_word_bits: 64,
+        wire_fj_per_bit: crate::synth::array::WIRE_FJ_PER_BIT_MM * arr.avg_wire_mm,
+        dram_fj_per_bit: crate::synth::sram::DRAM_FJ_PER_BIT,
+        leakage_mw: leak_nw / 1e6,
+        fmax_mhz: arr.fmax_mhz,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{AcceleratorConfig, PeType, ALL_PE_TYPES};
+
+    #[test]
+    fn jitter_is_deterministic_per_config() {
+        let cfg = AcceleratorConfig::default_with(PeType::Int16);
+        assert_eq!(synthesize(&cfg), synthesize(&cfg));
+    }
+
+    #[test]
+    fn jitter_differs_between_configs() {
+        let a = AcceleratorConfig::default_with(PeType::Int16);
+        let mut b = a;
+        b.glb_kb += 4;
+        let ra = synthesize(&a);
+        let rb = synthesize(&b);
+        assert_ne!(ra, rb);
+    }
+
+    #[test]
+    fn jitter_stays_within_a_few_sigma() {
+        for t in ALL_PE_TYPES {
+            let mut cfg = AcceleratorConfig::default_with(t);
+            for g in [64u32, 128, 256] {
+                cfg.glb_kb = g;
+                let clean = synthesize_clean(&cfg);
+                let noisy = synthesize(&cfg);
+                for (c, n) in clean.as_array().iter().zip(noisy.as_array()) {
+                    let rel = (n / c - 1.0).abs();
+                    assert!(rel < 6.0 * JITTER_SIGMA, "rel dev {rel}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn zero_sigma_equals_clean() {
+        let cfg = AcceleratorConfig::default_with(PeType::LightPe1);
+        assert_eq!(synthesize_with_sigma(&cfg, 0.0), synthesize_clean(&cfg));
+    }
+
+    #[test]
+    fn clean_model_monotone_in_array_size() {
+        let mut cfg = AcceleratorConfig::default_with(PeType::Int16);
+        let mut last_area = 0.0;
+        let mut last_power = 0.0;
+        for n in [8u32, 12, 16, 24] {
+            cfg.pe_rows = n;
+            cfg.pe_cols = n;
+            let p = synthesize_clean(&cfg);
+            assert!(p.area_mm2 > last_area);
+            assert!(p.power_mw > last_power);
+            last_area = p.area_mm2;
+            last_power = p.power_mw;
+        }
+    }
+
+    #[test]
+    fn energy_params_sane() {
+        let cfg = AcceleratorConfig::default_with(PeType::Int16);
+        let ep = energy_params(&cfg);
+        assert!(ep.mac_with_spads_fj > 0.0);
+        assert!(ep.glb_access_fj > ep.mac_with_spads_fj / 100.0);
+        assert!(ep.dram_fj_per_bit > ep.glb_access_fj / 64.0);
+        assert!(ep.leakage_mw > 0.0);
+        assert!(ep.fmax_mhz > 100.0);
+    }
+
+    #[test]
+    fn ppa_array_roundtrip() {
+        let p = Ppa { power_mw: 1.0, fmax_mhz: 2.0, area_mm2: 3.0 };
+        assert_eq!(Ppa::from_array(p.as_array()), p);
+    }
+}

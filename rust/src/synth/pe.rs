@@ -1,0 +1,165 @@
+//! Processing-element assembly: MAC + scratchpads + control.
+//!
+//! Mirrors the paper's PE microarchitecture (Fig. 1): each PE holds an
+//! ifmap scratchpad, a filter scratchpad, a partial-sum scratchpad and a
+//! precision-configurable MAC, plus a small control FSM and operand/result
+//! registers.
+
+use crate::config::{AcceleratorConfig, PeType};
+use crate::synth::gates::{GateCounts, GateLib};
+use crate::synth::mac::{mac_unit, MacUnit};
+use crate::synth::sram::{storage, SramMacro};
+
+/// Synthesized view of one PE.
+#[derive(Debug, Clone, Copy)]
+pub struct PeSynth {
+    pub pe_type: PeType,
+    pub mac: MacUnit,
+    pub spad_ifmap: SramMacro,
+    pub spad_filter: SramMacro,
+    pub spad_psum: SramMacro,
+    /// Control FSM + operand register gate counts.
+    pub ctrl: GateCounts,
+}
+
+/// Control overhead: address counters, FSM, handshake — roughly constant
+/// per PE in the paper's generator.
+fn control_block(pe_type: PeType) -> GateCounts {
+    GateCounts {
+        dff: 55,
+        nand2: 150,
+        inv: 70,
+        mux2: 32 + pe_type.act_bits() as u64, // operand steering
+        ..Default::default()
+    }
+}
+
+/// Assemble (and "synthesize") one PE for a configuration.
+pub fn synthesize_pe(lib: &GateLib, cfg: &AcceleratorConfig) -> PeSynth {
+    let t = cfg.pe_type;
+    PeSynth {
+        pe_type: t,
+        mac: mac_unit(lib, t),
+        // Scratchpad capacities are *bytes of storage hardware*; the word
+        // width (= access granularity) follows the PE type's precision.
+        spad_ifmap: storage(cfg.spad_ifmap_b as u64, t.act_bits()),
+        spad_filter: storage(cfg.spad_filter_b as u64, t.wt_bits()),
+        spad_psum: storage(cfg.spad_psum_b as u64, t.psum_bits()),
+        ctrl: control_block(t),
+    }
+}
+
+impl PeSynth {
+    pub fn area_um2(&self, lib: &GateLib) -> f64 {
+        self.mac.area_um2(lib)
+            + self.spad_ifmap.area_um2
+            + self.spad_filter.area_um2
+            + self.spad_psum.area_um2
+            + lib.area_um2(&self.ctrl)
+    }
+
+    /// Dynamic energy of one MAC *including* its spad traffic, fJ.
+    ///
+    /// Row-stationary inner loop: each MAC reads act + weight, reads and
+    /// writes the partial sum.
+    pub fn energy_per_mac_fj(&self, lib: &GateLib) -> f64 {
+        self.mac.energy_per_mac_fj(lib)
+            + self.spad_ifmap.access_energy_fj
+            + self.spad_filter.access_energy_fj
+            + 2.0 * self.spad_psum.access_energy_fj
+            // address counters / FSM toggle sparsely relative to the datapath
+            + lib.energy_per_op_fj(&self.ctrl, 0.05)
+    }
+
+    pub fn leakage_nw(&self, lib: &GateLib) -> f64 {
+        self.mac.leakage_nw(lib)
+            + self.spad_ifmap.leak_nw
+            + self.spad_filter.leak_nw
+            + self.spad_psum.leak_nw
+            + lib.leakage_nw(&self.ctrl)
+    }
+
+    /// PE clock: MAC pipeline stage time plus the scratchpad read that
+    /// feeds it — larger register files have deeper read muxes, so spad
+    /// sizing genuinely moves fmax (and the regression can learn it).
+    pub fn fmax_mhz(&self) -> f64 {
+        let mac_period_ps = 1.0e6 / self.mac.fmax_mhz();
+        let max_bits = self
+            .spad_ifmap
+            .bits
+            .max(self.spad_filter.bits)
+            .max(self.spad_psum.bits) as f64;
+        let spad_delay_ps = 11.0 * (max_bits / 128.0 + 2.0).log2();
+        1.0e6 / (mac_period_ps + spad_delay_ps)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{AcceleratorConfig, ALL_PE_TYPES};
+
+    fn lib() -> GateLib {
+        GateLib::freepdk45()
+    }
+
+    #[test]
+    fn pe_area_ordering_across_types() {
+        let l = lib();
+        let area = |t| {
+            let cfg = AcceleratorConfig::default_with(t);
+            synthesize_pe(&l, &cfg).area_um2(&l)
+        };
+        assert!(area(PeType::Fp32) > area(PeType::Int16));
+        assert!(area(PeType::Int16) > area(PeType::LightPe2));
+        assert!(area(PeType::LightPe2) >= area(PeType::LightPe1));
+    }
+
+    #[test]
+    fn pe_energy_ordering_across_types() {
+        let l = lib();
+        let e = |t| {
+            let cfg = AcceleratorConfig::default_with(t);
+            synthesize_pe(&l, &cfg).energy_per_mac_fj(&l)
+        };
+        assert!(e(PeType::Fp32) > e(PeType::Int16));
+        assert!(e(PeType::Int16) > 2.0 * e(PeType::LightPe2));
+    }
+
+    #[test]
+    fn bigger_spads_cost_area_and_energy() {
+        let l = lib();
+        let mut small = AcceleratorConfig::default_with(PeType::Int16);
+        small.spad_filter_b = 128;
+        let mut big = small;
+        big.spad_filter_b = 1024;
+        let ps = synthesize_pe(&l, &small);
+        let pb = synthesize_pe(&l, &big);
+        assert!(pb.area_um2(&l) > ps.area_um2(&l));
+        assert!(pb.energy_per_mac_fj(&l) > ps.energy_per_mac_fj(&l));
+        assert!(pb.leakage_nw(&l) > ps.leakage_nw(&l));
+    }
+
+    #[test]
+    fn pe_area_in_eyeriss_ballpark() {
+        // Eyeriss (65nm) PE ~0.01 mm²; at 45nm expect 0.002-0.02 mm².
+        let l = lib();
+        for t in ALL_PE_TYPES {
+            let cfg = AcceleratorConfig::default_with(t);
+            let mm2 = synthesize_pe(&l, &cfg).area_um2(&l) / 1e6;
+            assert!((0.0003..0.05).contains(&mm2), "{t:?} PE = {mm2} mm²");
+        }
+    }
+
+    #[test]
+    fn spad_word_width_follows_precision() {
+        let l = lib();
+        let cfg16 = AcceleratorConfig::default_with(PeType::Int16);
+        let cfg8 = AcceleratorConfig::default_with(PeType::LightPe1);
+        let p16 = synthesize_pe(&l, &cfg16);
+        let p8 = synthesize_pe(&l, &cfg8);
+        // same byte capacity but narrower words -> cheaper accesses
+        assert!(p8.spad_ifmap.access_energy_fj < p16.spad_ifmap.access_energy_fj);
+        assert!(p8.spad_filter.access_energy_fj < p16.spad_filter.access_energy_fj);
+    }
+}

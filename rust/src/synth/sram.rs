@@ -1,0 +1,127 @@
+//! CACTI-style SRAM / register-file macro model.
+//!
+//! Two regimes, matching how the paper's RTL maps storage:
+//!
+//! * small per-PE scratchpads (tens to hundreds of bytes) — flop/latch
+//!   register files, whose cost comes from the standard-cell library;
+//! * the global buffer (tens to hundreds of KiB) — 6T SRAM macros with
+//!   peripheral overhead that amortizes with capacity and access energy
+//!   that grows ~sqrt(bits) (wordline/bitline length), the classic CACTI
+//!   shape at 45 nm.
+
+/// Cost summary of one storage macro.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct SramMacro {
+    pub bits: u64,
+    pub area_um2: f64,
+    /// Energy per read or write access of one word, fJ.
+    pub access_energy_fj: f64,
+    /// Leakage, nW.
+    pub leak_nw: f64,
+}
+
+/// 6T bitcell area at 45 nm, µm² (FreePDK45-era bitcells: 0.25-0.4).
+const BITCELL_UM2: f64 = 0.30;
+/// Register-file storage cost per bit (latch + mux), µm².
+const RF_BIT_UM2: f64 = 1.3;
+/// SRAM leakage per bit, nW.
+const SRAM_LEAK_NW_PER_BIT: f64 = 0.012;
+/// RF leakage per bit, nW.
+const RF_LEAK_NW_PER_BIT: f64 = 0.05;
+
+/// Threshold below which storage synthesizes to a register file.
+pub const RF_THRESHOLD_BITS: u64 = 8 * 1024;
+
+/// Model a scratchpad / buffer of `bytes` capacity with `word_bits` access
+/// width.
+pub fn storage(bytes: u64, word_bits: u32) -> SramMacro {
+    let bits = (bytes * 8).max(1);
+    let word = word_bits.max(1) as f64;
+    if bits <= RF_THRESHOLD_BITS {
+        // Register file: linear area, access energy ~ word width with a
+        // shallow size term (read mux depth).
+        let area = bits as f64 * RF_BIT_UM2;
+        let depth = ((bits as f64 / word).max(1.0)).log2().max(1.0);
+        let access = 0.55 * word * (1.0 + 0.15 * depth);
+        SramMacro {
+            bits,
+            area_um2: area,
+            access_energy_fj: access,
+            leak_nw: bits as f64 * RF_LEAK_NW_PER_BIT,
+        }
+    } else {
+        // SRAM macro: bitcell array + peripheral overhead that shrinks
+        // relatively as capacity grows; access energy ~ word * sqrt(bits).
+        let periph = 1.0 + 4.0 / (bits as f64 / 8192.0).sqrt().max(1.0);
+        let area = bits as f64 * BITCELL_UM2 * periph.min(4.0);
+        let access = 0.35 * word * (bits as f64).sqrt() / 16.0;
+        SramMacro {
+            bits,
+            area_um2: area,
+            access_energy_fj: access,
+            leak_nw: bits as f64 * SRAM_LEAK_NW_PER_BIT,
+        }
+    }
+}
+
+/// DRAM access energy per bit, fJ (LPDDR-class, ~20 pJ/bit at 45 nm-era
+/// systems; used by the dataflow energy model, not by chip area/power).
+pub const DRAM_FJ_PER_BIT: f64 = 20_000.0;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn area_monotone_in_capacity() {
+        let sizes = [16u64, 64, 256, 1024, 16 * 1024, 128 * 1024, 512 * 1024];
+        let mut last = 0.0;
+        for s in sizes {
+            let m = storage(s, 16);
+            assert!(m.area_um2 > last, "area not monotone at {s} B");
+            last = m.area_um2;
+        }
+    }
+
+    #[test]
+    fn access_energy_monotone_in_capacity_within_regime() {
+        let small = storage(64, 16);
+        let bigger = storage(512, 16);
+        assert!(bigger.access_energy_fj >= small.access_energy_fj);
+        let glb_small = storage(32 * 1024, 64);
+        let glb_big = storage(512 * 1024, 64);
+        assert!(glb_big.access_energy_fj > glb_small.access_energy_fj);
+    }
+
+    #[test]
+    fn wider_words_cost_more_per_access() {
+        let narrow = storage(64 * 1024, 16);
+        let wide = storage(64 * 1024, 64);
+        assert!(wide.access_energy_fj > narrow.access_energy_fj);
+    }
+
+    #[test]
+    fn sram_beats_rf_per_bit_at_scale() {
+        // per-bit area must be much cheaper in the SRAM regime
+        let rf = storage(512, 16); // register file
+        let sram = storage(256 * 1024, 16); // SRAM macro
+        let rf_per_bit = rf.area_um2 / rf.bits as f64;
+        let sram_per_bit = sram.area_um2 / sram.bits as f64;
+        assert!(rf_per_bit > 3.0 * sram_per_bit);
+    }
+
+    #[test]
+    fn glb_access_energy_in_cacti_ballpark() {
+        // ~100 KiB buffer, 64-bit word: expect O(1-20 pJ) per access.
+        let glb = storage(108 * 1024, 64);
+        let pj = glb.access_energy_fj / 1000.0;
+        assert!((0.5..50.0).contains(&pj), "GLB access {pj} pJ");
+    }
+
+    #[test]
+    fn spad_access_energy_below_glb() {
+        let spad = storage(448, 16);
+        let glb = storage(108 * 1024, 64);
+        assert!(spad.access_energy_fj < glb.access_energy_fj / 5.0);
+    }
+}

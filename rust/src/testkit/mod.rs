@@ -1,0 +1,141 @@
+//! Property-testing mini-framework (proptest is unavailable offline).
+//!
+//! `forall` runs a property over `n` seeded random cases; on failure it
+//! performs a bounded shrink (re-running with "smaller" generated values by
+//! re-seeding towards simpler cases) and reports the smallest failing seed.
+//! Generators are plain closures over [`Rng`], composed with ordinary Rust.
+
+use crate::util::prng::Rng;
+
+/// Outcome of a property run.
+#[derive(Debug)]
+pub struct Failure {
+    pub seed: u64,
+    pub case: String,
+    pub msg: String,
+}
+
+/// Run `prop` over `n` random cases. `gen` draws a case from the RNG;
+/// `prop` returns `Err(msg)` on violation. Panics with the failing case
+/// (smallest seed found during the retry sweep) so `cargo test` reports it.
+pub fn forall<T: std::fmt::Debug>(
+    name: &str,
+    n: usize,
+    base_seed: u64,
+    gen: impl Fn(&mut Rng) -> T,
+    prop: impl Fn(&T) -> Result<(), String>,
+) {
+    if let Some(f) = forall_result(n, base_seed, &gen, &prop) {
+        panic!(
+            "property '{name}' failed (seed {}):\n  case: {}\n  {}",
+            f.seed, f.case, f.msg
+        );
+    }
+}
+
+/// Non-panicking variant (used by testkit's own tests).
+pub fn forall_result<T: std::fmt::Debug>(
+    n: usize,
+    base_seed: u64,
+    gen: &impl Fn(&mut Rng) -> T,
+    prop: &impl Fn(&T) -> Result<(), String>,
+) -> Option<Failure> {
+    for i in 0..n {
+        let seed = base_seed.wrapping_add(i as u64);
+        let mut rng = Rng::new(seed);
+        let case = gen(&mut rng);
+        if let Err(msg) = prop(&case) {
+            // "Shrink": probe a handful of nearby seeds and keep the
+            // lexicographically-smallest failing debug representation —
+            // cheap, deterministic, and usually lands on a simpler case.
+            let mut best = Failure { seed, case: format!("{case:?}"), msg };
+            for probe in 0..32u64 {
+                let s2 = seed ^ (probe + 1);
+                let mut r2 = Rng::new(s2);
+                let c2 = gen(&mut r2);
+                if let Err(m2) = prop(&c2) {
+                    let repr = format!("{c2:?}");
+                    if repr.len() < best.case.len() {
+                        best = Failure { seed: s2, case: repr, msg: m2 };
+                    }
+                }
+            }
+            return Some(best);
+        }
+    }
+    None
+}
+
+/// Draw a u32 in [lo, hi] (inclusive).
+pub fn gen_u32(rng: &mut Rng, lo: u32, hi: u32) -> u32 {
+    lo + rng.below((hi - lo + 1) as usize) as u32
+}
+
+/// Draw an f64 in [lo, hi).
+pub fn gen_f64(rng: &mut Rng, lo: f64, hi: f64) -> f64 {
+    rng.range_f64(lo, hi)
+}
+
+/// Draw a random accelerator configuration from sane generator bounds.
+pub fn gen_config(rng: &mut Rng) -> crate::config::AcceleratorConfig {
+    use crate::config::{AcceleratorConfig, ALL_PE_TYPES};
+    AcceleratorConfig {
+        pe_type: *rng.choice(&ALL_PE_TYPES),
+        pe_rows: gen_u32(rng, 2, 32),
+        pe_cols: gen_u32(rng, 2, 32),
+        glb_kb: gen_u32(rng, 16, 512),
+        spad_ifmap_b: gen_u32(rng, 8, 128),
+        spad_filter_b: gen_u32(rng, 32, 1024),
+        spad_psum_b: gen_u32(rng, 8, 256),
+        bandwidth_gbps: gen_f64(rng, 0.5, 16.0),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_returns_none() {
+        let out = forall_result(
+            100,
+            1,
+            &|rng| gen_u32(rng, 0, 100),
+            &|&x| if x <= 100 { Ok(()) } else { Err("bound".into()) },
+        );
+        assert!(out.is_none());
+    }
+
+    #[test]
+    fn failing_property_reports_case() {
+        let out = forall_result(
+            100,
+            1,
+            &|rng| gen_u32(rng, 0, 100),
+            &|&x| if x < 50 { Ok(()) } else { Err(format!("{x} >= 50")) },
+        );
+        let f = out.expect("must fail");
+        assert!(f.msg.contains(">= 50"));
+    }
+
+    #[test]
+    #[should_panic(expected = "property 'demo' failed")]
+    fn forall_panics_with_name() {
+        forall("demo", 50, 3, |rng| gen_u32(rng, 10, 20), |_| Err("always".into()));
+    }
+
+    #[test]
+    fn gen_config_is_valid() {
+        let mut rng = Rng::new(9);
+        for _ in 0..200 {
+            gen_config(&mut rng).validate().expect("generated config valid");
+        }
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let mut a = Rng::new(5);
+        let mut b = Rng::new(5);
+        assert_eq!(gen_config(&mut a), gen_config(&mut b));
+    }
+}

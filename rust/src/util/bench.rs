@@ -1,0 +1,144 @@
+//! Criterion-style micro-bench harness (criterion is unavailable offline).
+//!
+//! `cargo bench` targets use `harness = false` and drive this directly:
+//! warmup, fixed sample count, median/p95 reporting, and a throughput
+//! helper.  Output format is stable so `bench_output.txt` diffs cleanly.
+
+use std::time::Instant;
+
+use crate::util::stats::Summary;
+
+/// One benchmark run.
+pub struct Bench {
+    pub name: String,
+    pub warmup_iters: usize,
+    pub sample_iters: usize,
+}
+
+/// Result of a bench (seconds per iteration).
+#[derive(Debug, Clone)]
+pub struct BenchResult {
+    pub name: String,
+    pub summary: Summary,
+    /// Optional units-per-iteration for throughput reporting.
+    pub units: Option<(f64, &'static str)>,
+}
+
+impl Bench {
+    pub fn new(name: &str) -> Bench {
+        Bench { name: name.to_string(), warmup_iters: 2, sample_iters: 10 }
+    }
+
+    pub fn warmup(mut self, n: usize) -> Bench {
+        self.warmup_iters = n;
+        self
+    }
+
+    pub fn samples(mut self, n: usize) -> Bench {
+        self.sample_iters = n;
+        self
+    }
+
+    /// Time `f`; per-iteration wall time is recorded.
+    pub fn run<R>(&self, mut f: impl FnMut() -> R) -> BenchResult {
+        for _ in 0..self.warmup_iters {
+            std::hint::black_box(f());
+        }
+        let mut times = Vec::with_capacity(self.sample_iters);
+        for _ in 0..self.sample_iters {
+            let t0 = Instant::now();
+            std::hint::black_box(f());
+            times.push(t0.elapsed().as_secs_f64());
+        }
+        BenchResult {
+            name: self.name.clone(),
+            summary: Summary::of(&times),
+            units: None,
+        }
+    }
+
+    /// Like `run`, with a throughput annotation (`units` processed per
+    /// iteration, e.g. configs, rows, layers).
+    pub fn run_with_units<R>(
+        &self,
+        units: f64,
+        unit_name: &'static str,
+        f: impl FnMut() -> R,
+    ) -> BenchResult {
+        let mut r = self.run(f);
+        r.units = Some((units, unit_name));
+        r
+    }
+}
+
+fn fmt_time(s: f64) -> String {
+    if s >= 1.0 {
+        format!("{:.3} s", s)
+    } else if s >= 1e-3 {
+        format!("{:.3} ms", s * 1e3)
+    } else if s >= 1e-6 {
+        format!("{:.3} µs", s * 1e6)
+    } else {
+        format!("{:.1} ns", s * 1e9)
+    }
+}
+
+impl BenchResult {
+    /// Render one criterion-ish report line (plus throughput if units set).
+    pub fn report(&self) -> String {
+        let s = &self.summary;
+        let mut line = format!(
+            "{:<42} time: [{} {} {}]",
+            self.name,
+            fmt_time(s.min),
+            fmt_time(s.p50),
+            fmt_time(s.p95),
+        );
+        if let Some((units, name)) = self.units {
+            let thrpt = units / s.p50;
+            line.push_str(&format!("  thrpt: {:.1} {}/s", thrpt, name));
+        }
+        line
+    }
+
+    pub fn print(&self) -> &Self {
+        println!("{}", self.report());
+        self
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_measures_work() {
+        let r = Bench::new("spin").warmup(1).samples(5).run(|| {
+            let mut acc = 0u64;
+            for i in 0..10_000u64 {
+                acc = acc.wrapping_add(i * i);
+            }
+            acc
+        });
+        assert!(r.summary.p50 > 0.0);
+        assert_eq!(r.summary.n, 5);
+        assert!(r.report().contains("spin"));
+    }
+
+    #[test]
+    fn throughput_annotation() {
+        let r = Bench::new("units")
+            .warmup(0)
+            .samples(3)
+            .run_with_units(100.0, "items", || std::thread::sleep(std::time::Duration::from_micros(50)));
+        assert!(r.report().contains("items/s"));
+    }
+
+    #[test]
+    fn time_formatting() {
+        assert!(fmt_time(2.0).ends_with(" s"));
+        assert!(fmt_time(2e-3).ends_with(" ms"));
+        assert!(fmt_time(2e-6).ends_with(" µs"));
+        assert!(fmt_time(2e-9).ends_with(" ns"));
+    }
+}

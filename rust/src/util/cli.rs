@@ -1,0 +1,169 @@
+//! Hand-rolled CLI argument parser (clap is unavailable offline).
+//!
+//! Grammar: `qappa <subcommand> [--key value]... [--flag]... [positional]...`
+//! Unknown options are an error; every accessor records the keys it was
+//! asked for so `finish()` can reject typos.
+
+use std::collections::{BTreeMap, BTreeSet};
+
+#[derive(Debug, Clone)]
+pub struct Args {
+    pub subcommand: Option<String>,
+    opts: BTreeMap<String, String>,
+    flags: BTreeSet<String>,
+    pub positional: Vec<String>,
+    consumed: std::cell::RefCell<BTreeSet<String>>,
+}
+
+#[derive(Debug, Clone, PartialEq)]
+pub struct CliError(pub String);
+
+impl std::fmt::Display for CliError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{}", self.0)
+    }
+}
+
+impl std::error::Error for CliError {}
+
+impl Args {
+    /// Parse raw arguments (without argv[0]). `boolean_flags` lists options
+    /// that take no value.
+    pub fn parse(raw: &[String], boolean_flags: &[&str]) -> Result<Args, CliError> {
+        let boolset: BTreeSet<&str> = boolean_flags.iter().copied().collect();
+        let mut args = Args {
+            subcommand: None,
+            opts: BTreeMap::new(),
+            flags: BTreeSet::new(),
+            positional: Vec::new(),
+            consumed: Default::default(),
+        };
+        let mut it = raw.iter().peekable();
+        // first non-option token is the subcommand
+        if let Some(first) = it.peek() {
+            if !first.starts_with("--") {
+                args.subcommand = Some(it.next().unwrap().clone());
+            }
+        }
+        while let Some(tok) = it.next() {
+            if let Some(name) = tok.strip_prefix("--") {
+                // --key=value form
+                if let Some((k, v)) = name.split_once('=') {
+                    args.opts.insert(k.to_string(), v.to_string());
+                    continue;
+                }
+                if boolset.contains(name) {
+                    args.flags.insert(name.to_string());
+                } else {
+                    let val = it
+                        .next()
+                        .ok_or_else(|| CliError(format!("--{name} requires a value")))?;
+                    args.opts.insert(name.to_string(), val.clone());
+                }
+            } else {
+                args.positional.push(tok.clone());
+            }
+        }
+        Ok(args)
+    }
+
+    pub fn from_env(boolean_flags: &[&str]) -> Result<Args, CliError> {
+        let raw: Vec<String> = std::env::args().skip(1).collect();
+        Args::parse(&raw, boolean_flags)
+    }
+
+    pub fn flag(&self, name: &str) -> bool {
+        self.consumed.borrow_mut().insert(name.to_string());
+        self.flags.contains(name)
+    }
+
+    pub fn opt(&self, name: &str) -> Option<&str> {
+        self.consumed.borrow_mut().insert(name.to_string());
+        self.opts.get(name).map(|s| s.as_str())
+    }
+
+    pub fn get<T: std::str::FromStr>(&self, name: &str, default: T) -> Result<T, CliError> {
+        match self.opt(name) {
+            None => Ok(default),
+            Some(s) => s
+                .parse::<T>()
+                .map_err(|_| CliError(format!("--{name}: cannot parse '{s}'"))),
+        }
+    }
+
+    pub fn require(&self, name: &str) -> Result<&str, CliError> {
+        self.opt(name)
+            .ok_or_else(|| CliError(format!("--{name} is required")))
+    }
+
+    /// Error on any option that was provided but never consumed.
+    pub fn finish(&self) -> Result<(), CliError> {
+        let consumed = self.consumed.borrow();
+        for k in self.opts.keys().chain(self.flags.iter()) {
+            if !consumed.contains(k) {
+                return Err(CliError(format!("unknown option --{k}")));
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn v(parts: &[&str]) -> Vec<String> {
+        parts.iter().map(|s| s.to_string()).collect()
+    }
+
+    #[test]
+    fn parses_subcommand_opts_flags() {
+        let a = Args::parse(&v(&["dse", "--workload", "vgg16", "--verbose", "out.csv"]),
+                            &["verbose"]).unwrap();
+        assert_eq!(a.subcommand.as_deref(), Some("dse"));
+        assert_eq!(a.opt("workload"), Some("vgg16"));
+        assert!(a.flag("verbose"));
+        assert_eq!(a.positional, vec!["out.csv"]);
+        a.finish().unwrap();
+    }
+
+    #[test]
+    fn equals_form() {
+        let a = Args::parse(&v(&["fit", "--k=5"]), &[]).unwrap();
+        assert_eq!(a.get::<usize>("k", 0).unwrap(), 5);
+        a.finish().unwrap();
+    }
+
+    #[test]
+    fn typed_defaults_and_errors() {
+        let a = Args::parse(&v(&["x", "--n", "12"]), &[]).unwrap();
+        assert_eq!(a.get::<u32>("n", 0).unwrap(), 12);
+        assert_eq!(a.get::<u32>("missing", 7).unwrap(), 7);
+        let b = Args::parse(&v(&["x", "--n", "abc"]), &[]).unwrap();
+        assert!(b.get::<u32>("n", 0).is_err());
+    }
+
+    #[test]
+    fn missing_value_is_error() {
+        assert!(Args::parse(&v(&["x", "--k"]), &[]).is_err());
+    }
+
+    #[test]
+    fn unknown_option_rejected_by_finish() {
+        let a = Args::parse(&v(&["x", "--oops", "1"]), &[]).unwrap();
+        assert!(a.finish().is_err());
+    }
+
+    #[test]
+    fn no_subcommand_when_first_is_option() {
+        let a = Args::parse(&v(&["--k", "1"]), &[]).unwrap();
+        assert_eq!(a.subcommand, None);
+        assert_eq!(a.opt("k"), Some("1"));
+    }
+
+    #[test]
+    fn require_reports_missing() {
+        let a = Args::parse(&v(&["x"]), &[]).unwrap();
+        assert!(a.require("pe-type").is_err());
+    }
+}

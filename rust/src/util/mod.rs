@@ -1,0 +1,10 @@
+//! Infrastructure substrates built in-repo (the offline environment has no
+//! serde / clap / rayon / criterion — see DESIGN.md §2 substitutions).
+
+pub mod bench;
+pub mod cli;
+pub mod json;
+pub mod pool;
+pub mod prng;
+pub mod stats;
+pub mod table;

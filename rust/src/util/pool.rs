@@ -1,0 +1,142 @@
+//! Scoped data-parallel map over OS threads (rayon/tokio are unavailable
+//! offline; the workloads here — synthesis-oracle sweeps, dataflow
+//! evaluation over tens of thousands of configs — are embarrassingly
+//! parallel and CPU-bound, so `std::thread::scope` with work chunks is all
+//! the coordinator needs).
+
+/// Number of worker threads to use.
+pub fn default_workers() -> usize {
+    std::thread::available_parallelism()
+        .map(|n| n.get())
+        .unwrap_or(4)
+}
+
+/// Parallel map preserving input order.
+///
+/// Splits `items` into `workers` contiguous chunks; each worker writes its
+/// results into a disjoint region of the output, so no locking is needed on
+/// the hot path.
+pub fn parallel_map<T, R, F>(items: &[T], workers: usize, f: F) -> Vec<R>
+where
+    T: Sync,
+    R: Send,
+    F: Fn(&T) -> R + Sync,
+{
+    let n = items.len();
+    if n == 0 {
+        return Vec::new();
+    }
+    let workers = workers.max(1).min(n);
+    if workers == 1 {
+        return items.iter().map(|t| f(t)).collect();
+    }
+
+    let mut out: Vec<Option<R>> = (0..n).map(|_| None).collect();
+    let chunk = n.div_ceil(workers);
+    // Split the output into disjoint &mut chunks, one per worker.
+    let mut slots: Vec<&mut [Option<R>]> = out.chunks_mut(chunk).collect();
+    let f_ref = &f;
+    std::thread::scope(|scope| {
+        for (w, slot) in slots.drain(..).enumerate() {
+            let start = w * chunk;
+            let input = &items[start..(start + slot.len()).min(n)];
+            scope.spawn(move || {
+                for (i, item) in input.iter().enumerate() {
+                    slot[i] = Some(f_ref(item));
+                }
+            });
+        }
+    });
+    out.into_iter().map(|r| r.expect("worker filled slot")).collect()
+}
+
+/// Parallel map with a per-worker context factory (e.g. a forked RNG).
+pub fn parallel_map_with<T, R, C, F, Init>(
+    items: &[T],
+    workers: usize,
+    init: Init,
+    f: F,
+) -> Vec<R>
+where
+    T: Sync,
+    R: Send,
+    F: Fn(&mut C, &T) -> R + Sync,
+    Init: Fn(usize) -> C + Sync,
+{
+    let n = items.len();
+    if n == 0 {
+        return Vec::new();
+    }
+    let workers = workers.max(1).min(n);
+    let mut out: Vec<Option<R>> = (0..n).map(|_| None).collect();
+    let chunk = n.div_ceil(workers);
+    let mut slots: Vec<&mut [Option<R>]> = out.chunks_mut(chunk).collect();
+    let f_ref = &f;
+    let init_ref = &init;
+    std::thread::scope(|scope| {
+        for (w, slot) in slots.drain(..).enumerate() {
+            let start = w * chunk;
+            let input = &items[start..(start + slot.len()).min(n)];
+            scope.spawn(move || {
+                let mut ctx = init_ref(w);
+                for (i, item) in input.iter().enumerate() {
+                    slot[i] = Some(f_ref(&mut ctx, item));
+                }
+            });
+        }
+    });
+    out.into_iter().map(|r| r.expect("worker filled slot")).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+
+    #[test]
+    fn preserves_order() {
+        let items: Vec<u64> = (0..1000).collect();
+        let out = parallel_map(&items, 8, |x| x * 2);
+        assert_eq!(out, items.iter().map(|x| x * 2).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn runs_every_item_exactly_once() {
+        let counter = AtomicUsize::new(0);
+        let items: Vec<u32> = (0..517).collect();
+        let out = parallel_map(&items, 5, |x| {
+            counter.fetch_add(1, Ordering::Relaxed);
+            *x
+        });
+        assert_eq!(out.len(), 517);
+        assert_eq!(counter.load(Ordering::Relaxed), 517);
+    }
+
+    #[test]
+    fn empty_and_single() {
+        let empty: Vec<u32> = vec![];
+        assert!(parallel_map(&empty, 4, |x| *x).is_empty());
+        assert_eq!(parallel_map(&[9u32], 4, |x| *x + 1), vec![10]);
+    }
+
+    #[test]
+    fn more_workers_than_items() {
+        let items = [1u32, 2, 3];
+        assert_eq!(parallel_map(&items, 64, |x| *x), vec![1, 2, 3]);
+    }
+
+    #[test]
+    fn with_context_gives_each_worker_its_own() {
+        let items: Vec<usize> = (0..100).collect();
+        let out = parallel_map_with(
+            &items,
+            4,
+            |w| w * 1000, // worker id as context
+            |ctx, x| {
+                *ctx += 1;
+                *x + (*ctx % 1) // context mutation must not corrupt results
+            },
+        );
+        assert_eq!(out, items);
+    }
+}

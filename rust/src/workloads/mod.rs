@@ -1,0 +1,174 @@
+//! DNN workload definitions: the three networks the paper's design-space
+//! exploration uses (VGG-16, ResNet-34, ResNet-50), at 224x224 inference.
+
+use crate::dataflow::layer::Layer;
+
+/// Named workload for CLI selection.
+pub fn by_name(name: &str) -> Option<Vec<Layer>> {
+    match name.to_ascii_lowercase().as_str() {
+        "vgg16" | "vgg-16" => Some(vgg16()),
+        "resnet34" | "resnet-34" => Some(resnet34()),
+        "resnet50" | "resnet-50" => Some(resnet50()),
+        _ => None,
+    }
+}
+
+pub const WORKLOAD_NAMES: [&str; 3] = ["vgg16", "resnet34", "resnet50"];
+
+/// VGG-16 (Simonyan & Zisserman 2014): 13 conv + 3 FC.
+pub fn vgg16() -> Vec<Layer> {
+    let c = |name: &str, cin, cout, hw| Layer::conv(name, cin, cout, hw, hw, 3, 1, 1);
+    vec![
+        c("conv1_1", 3, 64, 224),
+        c("conv1_2", 64, 64, 224),
+        c("conv2_1", 64, 128, 112),
+        c("conv2_2", 128, 128, 112),
+        c("conv3_1", 128, 256, 56),
+        c("conv3_2", 256, 256, 56),
+        c("conv3_3", 256, 256, 56),
+        c("conv4_1", 256, 512, 28),
+        c("conv4_2", 512, 512, 28),
+        c("conv4_3", 512, 512, 28),
+        c("conv5_1", 512, 512, 14),
+        c("conv5_2", 512, 512, 14),
+        c("conv5_3", 512, 512, 14),
+        Layer::fc("fc6", 512 * 7 * 7, 4096),
+        Layer::fc("fc7", 4096, 4096),
+        Layer::fc("fc8", 4096, 1000),
+    ]
+}
+
+/// Basic residual block: two 3x3 convs (the projection shortcut conv is
+/// included where the stage downsamples).
+fn basic_block(layers: &mut Vec<Layer>, name: &str, cin: u32, cout: u32, hw_in: u32, downsample: bool) {
+    let stride = if downsample { 2 } else { 1 };
+    let hw_out = if downsample { hw_in / 2 } else { hw_in };
+    layers.push(Layer::conv(&format!("{name}.conv1"), cin, cout, hw_in, hw_in, 3, stride, 1));
+    layers.push(Layer::conv(&format!("{name}.conv2"), cout, cout, hw_out, hw_out, 3, 1, 1));
+    if downsample || cin != cout {
+        layers.push(Layer::conv(&format!("{name}.proj"), cin, cout, hw_in, hw_in, 1, stride, 0));
+    }
+}
+
+/// Bottleneck block: 1x1 reduce, 3x3, 1x1 expand (x4).
+fn bottleneck(layers: &mut Vec<Layer>, name: &str, cin: u32, mid: u32, hw_in: u32, downsample: bool, first: bool) {
+    let cout = mid * 4;
+    let stride = if downsample { 2 } else { 1 };
+    let hw_out = if downsample { hw_in / 2 } else { hw_in };
+    layers.push(Layer::conv(&format!("{name}.conv1"), cin, mid, hw_in, hw_in, 1, 1, 0));
+    layers.push(Layer::conv(&format!("{name}.conv2"), mid, mid, hw_in, hw_in, 3, stride, 1));
+    layers.push(Layer::conv(&format!("{name}.conv3"), mid, cout, hw_out, hw_out, 1, 1, 0));
+    if first {
+        layers.push(Layer::conv(&format!("{name}.proj"), cin, cout, hw_in, hw_in, 1, stride, 0));
+    }
+}
+
+/// ResNet-34 (He et al. 2016): stem + [3,4,6,3] basic blocks + FC.
+pub fn resnet34() -> Vec<Layer> {
+    let mut l = vec![Layer::conv("stem", 3, 64, 224, 224, 7, 2, 3)];
+    // maxpool 3x3/2 -> 56x56 (pooling costs no MACs)
+    let stages: [(u32, u32, u32, usize); 4] = [
+        (64, 64, 56, 3),
+        (64, 128, 56, 4),
+        (128, 256, 28, 6),
+        (256, 512, 14, 3),
+    ];
+    for (si, &(cin, cout, hw, blocks)) in stages.iter().enumerate() {
+        for b in 0..blocks {
+            let first = b == 0;
+            let down = first && si > 0;
+            let (bc_in, bhw) = if first {
+                (cin, hw)
+            } else {
+                (cout, if si > 0 { hw / 2 } else { hw })
+            };
+            basic_block(&mut l, &format!("s{}b{}", si + 1, b + 1), bc_in, cout, bhw, down);
+        }
+    }
+    l.push(Layer::fc("fc", 512, 1000));
+    l
+}
+
+/// ResNet-50 (He et al. 2016): stem + [3,4,6,3] bottleneck blocks + FC.
+pub fn resnet50() -> Vec<Layer> {
+    let mut l = vec![Layer::conv("stem", 3, 64, 224, 224, 7, 2, 3)];
+    let stages: [(u32, u32, u32, usize); 4] = [
+        (64, 64, 56, 3),
+        (256, 128, 56, 4),
+        (512, 256, 28, 6),
+        (1024, 512, 14, 3),
+    ];
+    for (si, &(cin, mid, hw, blocks)) in stages.iter().enumerate() {
+        for b in 0..blocks {
+            let first = b == 0;
+            let down = first && si > 0;
+            let (bc_in, bhw) = if first {
+                (cin, hw)
+            } else {
+                (mid * 4, if si > 0 { hw / 2 } else { hw })
+            };
+            bottleneck(&mut l, &format!("s{}b{}", si + 1, b + 1), bc_in, mid, bhw, down, first);
+        }
+    }
+    l.push(Layer::fc("fc", 2048, 1000));
+    l
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn gmacs(layers: &[Layer]) -> f64 {
+        layers.iter().map(|l| l.macs()).sum::<u64>() as f64 / 1e9
+    }
+
+    #[test]
+    fn vgg16_macs_match_published() {
+        // VGG-16: ~15.5 GMACs (publications quote 15.3-15.5 G).
+        let g = gmacs(&vgg16());
+        assert!((14.5..16.5).contains(&g), "VGG-16 {g} GMACs");
+        assert_eq!(vgg16().len(), 16);
+    }
+
+    #[test]
+    fn resnet34_macs_match_published() {
+        // ResNet-34: ~3.6 GMACs.
+        let g = gmacs(&resnet34());
+        assert!((3.2..4.2).contains(&g), "ResNet-34 {g} GMACs");
+    }
+
+    #[test]
+    fn resnet50_macs_match_published() {
+        // ResNet-50: ~4.1 GMACs.
+        let g = gmacs(&resnet50());
+        assert!((3.6..4.6).contains(&g), "ResNet-50 {g} GMACs");
+    }
+
+    #[test]
+    fn resnet_block_counts() {
+        // ResNet-34: stem + (3+4+6+3) blocks x 2 convs + 3 projections + fc
+        let n34 = resnet34().len();
+        assert_eq!(n34, 1 + 16 * 2 + 3 + 1, "resnet34 layer count {n34}");
+        // ResNet-50: stem + 16 blocks x 3 convs + 4 projections + fc
+        let n50 = resnet50().len();
+        assert_eq!(n50, 1 + 16 * 3 + 4 + 1, "resnet50 layer count {n50}");
+    }
+
+    #[test]
+    fn spatial_dims_consistent() {
+        for net in [vgg16(), resnet34(), resnet50()] {
+            for l in &net {
+                assert!(l.out_hw() > 0, "{} out_hw=0", l.name);
+                assert!(l.macs() > 0, "{} macs=0", l.name);
+            }
+        }
+    }
+
+    #[test]
+    fn by_name_resolves() {
+        for n in WORKLOAD_NAMES {
+            assert!(by_name(n).is_some());
+        }
+        assert!(by_name("alexnet").is_none());
+    }
+}

@@ -1,0 +1,108 @@
+//! Integration: the full DSE pipeline through the XLA artifact backend.
+
+use std::sync::Arc;
+
+use qappa::config::{PeType, ALL_PE_TYPES};
+use qappa::coordinator::space::DesignSpace;
+use qappa::coordinator::{run_dse, DseOptions};
+use qappa::dataflow::Layer;
+use qappa::model::native::NativeBackend;
+use qappa::model::CvConfig;
+use qappa::runtime::{ArtifactRuntime, Engine, XlaBackend};
+
+fn opts() -> DseOptions {
+    DseOptions {
+        space: DesignSpace::tiny(),
+        train_per_type: 96,
+        cv: CvConfig { k: 3, degrees: vec![1, 2], lambdas: vec![1e-3, 1e-2], seed: 4 },
+        seed: 21,
+        workers: 2,
+        sigma: 0.03,
+    }
+}
+
+fn layers() -> Vec<Layer> {
+    vec![
+        Layer::conv("c1", 8, 16, 28, 28, 3, 1, 1),
+        Layer::conv("c2", 16, 32, 14, 14, 3, 1, 1),
+        Layer::fc("fc", 512, 10),
+    ]
+}
+
+#[test]
+fn dse_through_artifacts_matches_native_shape() {
+    let dir = ArtifactRuntime::artifacts_dir_default();
+    if !dir.join("manifest.json").exists() {
+        eprintln!("skipping: artifacts not built");
+        return;
+    }
+    let engine = Arc::new(Engine::start(&dir).expect("engine"));
+    let xla = XlaBackend::new(engine);
+    let native = NativeBackend::new(7);
+
+    let rx = run_dse(&xla, &layers(), "t", &opts()).expect("xla dse");
+    let rn = run_dse(&native, &layers(), "t", &opts()).expect("native dse");
+
+    // Same anchor config and closely matching ratios: the two backends see
+    // the same oracle data and the same CV protocol.
+    assert_eq!(rx.anchor.cfg, rn.anchor.cfg, "anchor config diverged");
+    for ty in ALL_PE_TYPES {
+        let (pax, ex) = rx.ratios[&ty];
+        let (pan, en) = rn.ratios[&ty];
+        assert!(
+            (pax / pan - 1.0).abs() < 0.05,
+            "{ty:?} perf/area ratio: xla {pax} vs native {pan}"
+        );
+        assert!(
+            (ex / en - 1.0).abs() < 0.05,
+            "{ty:?} energy ratio: xla {ex} vs native {en}"
+        );
+    }
+}
+
+#[test]
+fn dse_points_cover_whole_grid_once() {
+    let native = NativeBackend::new(7);
+    let o = opts();
+    let res = run_dse(&native, &layers(), "t", &o).expect("dse");
+    for ty in ALL_PE_TYPES {
+        let pts = &res.points[&ty];
+        assert_eq!(pts.len(), o.space.len());
+        let mut keys: Vec<String> = pts.iter().map(|p| p.cfg.key()).collect();
+        keys.sort();
+        keys.dedup();
+        assert_eq!(keys.len(), pts.len(), "{ty:?}: duplicate configs");
+        for p in pts {
+            assert_eq!(p.cfg.pe_type, ty);
+        }
+    }
+}
+
+#[test]
+fn frontier_members_are_undominated_within_type() {
+    let native = NativeBackend::new(7);
+    let res = run_dse(&native, &layers(), "t", &opts()).expect("dse");
+    for ty in ALL_PE_TYPES {
+        let pts = &res.points[&ty];
+        for &i in &res.frontier[&ty] {
+            for (j, q) in pts.iter().enumerate() {
+                if i == j {
+                    continue;
+                }
+                let dominated = q.perf_per_area >= pts[i].perf_per_area
+                    && q.energy_mj <= pts[i].energy_mj
+                    && (q.perf_per_area > pts[i].perf_per_area
+                        || q.energy_mj < pts[i].energy_mj);
+                assert!(!dominated, "{ty:?}: frontier point {i} dominated by {j}");
+            }
+        }
+    }
+}
+
+#[test]
+fn int16_anchor_ratio_is_identity() {
+    let native = NativeBackend::new(7);
+    let res = run_dse(&native, &layers(), "t", &opts()).expect("dse");
+    let (pa, _e) = res.ratios[&PeType::Int16];
+    assert!((pa - 1.0).abs() < 1e-9);
+}

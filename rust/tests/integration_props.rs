@@ -1,0 +1,255 @@
+//! Cross-module property tests (testkit = in-repo proptest stand-in).
+//!
+//! These pin the invariants that hold *between* subsystems: the oracle,
+//! the dataflow model, the RTL simulator and the regression stack must
+//! stay mutually consistent for any generated configuration.
+
+use qappa::config::{AcceleratorConfig, PeType};
+use qappa::dataflow::{evaluate_network, layer_traffic, map_layer, Layer};
+use qappa::model::features::Standardizer;
+use qappa::synth::oracle::{energy_params, synthesize, synthesize_clean};
+use qappa::testkit::{forall, gen_config, gen_u32};
+use qappa::util::json::Json;
+use qappa::util::prng::Rng;
+
+fn gen_layer(rng: &mut Rng) -> Layer {
+    if rng.f64() < 0.25 {
+        Layer::fc("fc", gen_u32(rng, 8, 4096), gen_u32(rng, 8, 4096))
+    } else {
+        let rs = *rng.choice(&[1u32, 3, 5, 7]);
+        let hw = gen_u32(rng, 7, 64).max(rs);
+        Layer::conv(
+            "conv",
+            gen_u32(rng, 1, 256),
+            gen_u32(rng, 1, 256),
+            hw,
+            hw,
+            rs,
+            *rng.choice(&[1u32, 2]),
+            rs / 2,
+        )
+    }
+}
+
+#[test]
+fn prop_oracle_deterministic_and_positive() {
+    forall("oracle determinism", 150, 1, gen_config, |cfg| {
+        let a = synthesize(cfg);
+        let b = synthesize(cfg);
+        if a != b {
+            return Err("oracle not deterministic".into());
+        }
+        for v in a.as_array() {
+            if !(v > 0.0) || !v.is_finite() {
+                return Err(format!("non-positive metric {v}"));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_oracle_monotone_in_array_size() {
+    forall("area/power monotone in PEs", 100, 2, gen_config, |cfg| {
+        let mut bigger = *cfg;
+        bigger.pe_rows += 4;
+        bigger.pe_cols += 4;
+        let a = synthesize_clean(cfg);
+        let b = synthesize_clean(&bigger);
+        if b.area_mm2 <= a.area_mm2 {
+            return Err(format!("area not monotone: {} vs {}", b.area_mm2, a.area_mm2));
+        }
+        if b.power_mw <= a.power_mw {
+            return Err(format!("power not monotone: {} vs {}", b.power_mw, a.power_mw));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_dataflow_work_conserved() {
+    forall(
+        "array cannot do more MACs than capacity",
+        120,
+        3,
+        |rng: &mut Rng| (gen_config(rng), gen_layer(rng)),
+        |(cfg, layer)| {
+            let ep = energy_params(cfg);
+            let perf = map_layer(cfg, &ep, layer);
+            let capacity = perf.cycles as f64 * cfg.num_pes() as f64;
+            if capacity + 0.5 < layer.macs() as f64 {
+                return Err(format!(
+                    "capacity {capacity} < macs {} (cycles {})",
+                    layer.macs(),
+                    perf.cycles
+                ));
+            }
+            if !(perf.utilization > 0.0 && perf.utilization <= 1.0) {
+                return Err(format!("utilization {}", perf.utilization));
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_traffic_at_least_compulsory() {
+    forall(
+        "dram >= compulsory",
+        120,
+        4,
+        |rng: &mut Rng| (gen_config(rng), gen_layer(rng)),
+        |(cfg, layer)| {
+            let ep = energy_params(cfg);
+            let perf = map_layer(cfg, &ep, layer);
+            let t = layer_traffic(cfg, layer, &perf);
+            let act = cfg.pe_type.act_bits() as u64;
+            let wt = cfg.pe_type.wt_bits() as u64;
+            let compulsory = (layer.ifmap_elems() * act
+                + layer.filter_elems() * wt
+                + layer.ofmap_elems() * act)
+                / 8;
+            if t.dram_bytes < compulsory {
+                return Err(format!("dram {} < compulsory {compulsory}", t.dram_bytes));
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_network_energy_and_latency_positive() {
+    forall(
+        "network eval sane",
+        60,
+        5,
+        |rng: &mut Rng| {
+            let cfg = gen_config(rng);
+            let layers: Vec<Layer> = (0..1 + rng.below(5)).map(|_| gen_layer(rng)).collect();
+            (cfg, layers)
+        },
+        |(cfg, layers)| {
+            let ep = energy_params(cfg);
+            let cost = evaluate_network(cfg, &ep, layers);
+            if !(cost.latency_s > 0.0 && cost.latency_s.is_finite()) {
+                return Err(format!("latency {}", cost.latency_s));
+            }
+            if !(cost.energy_mj > 0.0 && cost.energy_mj.is_finite()) {
+                return Err(format!("energy {}", cost.energy_mj));
+            }
+            if cost.macs != layers.iter().map(|l| l.macs()).sum::<u64>() {
+                return Err("mac accounting".into());
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_lightpe_never_worse_ppa_than_int16_same_config() {
+    // Same geometry => LightPE-1 must synthesize to no more area/power
+    // than INT16 (the paper's hardware-efficiency claim at config parity).
+    forall("lightpe <= int16 at parity", 80, 6, gen_config, |cfg| {
+        let mut a = *cfg;
+        a.pe_type = PeType::Int16;
+        let mut b = *cfg;
+        b.pe_type = PeType::LightPe1;
+        let pa = synthesize_clean(&a);
+        let pb = synthesize_clean(&b);
+        if pb.area_mm2 > pa.area_mm2 * 1.0001 {
+            return Err(format!("area {} > {}", pb.area_mm2, pa.area_mm2));
+        }
+        if pb.power_mw > pa.power_mw * 1.0001 {
+            return Err(format!("power {} > {}", pb.power_mw, pa.power_mw));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_rtl_light_term_verifies_for_any_width() {
+    forall(
+        "light term netlist == arithmetic",
+        12,
+        7,
+        |rng: &mut Rng| gen_u32(rng, 12, 32),
+        |&w| {
+            qappa::rtl::sim::verify_light_term(w, 60, w as u64)
+                .map(|_| ())
+                .map_err(|e| e)
+        },
+    );
+}
+
+#[test]
+fn prop_config_json_roundtrip() {
+    forall("config json roundtrip", 150, 8, gen_config, |cfg| {
+        let j = cfg.to_json().to_string();
+        let parsed = Json::parse(&j).map_err(|e| e.to_string())?;
+        let back = AcceleratorConfig::from_json(&parsed).ok_or("from_json")?;
+        if &back != cfg {
+            return Err(format!("{back:?} != {cfg:?}"));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_standardizer_inverts() {
+    forall(
+        "standardizer roundtrip",
+        100,
+        9,
+        |rng: &mut Rng| {
+            let n = 2 + rng.below(50);
+            let rows: Vec<f64> = (0..n * 3).map(|_| rng.range_f64(-100.0, 100.0)).collect();
+            rows
+        },
+        |rows| {
+            let s = Standardizer::fit(rows, 3);
+            for row in rows.chunks(3) {
+                let z = s.apply_row(row);
+                let back = s.invert_row(&z);
+                for (a, b) in back.iter().zip(row) {
+                    if (a - b).abs() > 1e-8 * b.abs().max(1.0) {
+                        return Err(format!("{a} != {b}"));
+                    }
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_native_fit_interpolates_planted_targets() {
+    use qappa::model::native::{predict_f64, ridge_fit_f64};
+    forall(
+        "planted polynomial recovered",
+        25,
+        10,
+        |rng: &mut Rng| {
+            let d = 2 + rng.below(4);
+            let degree = 1 + rng.below(2);
+            (d, degree, rng.next_u64())
+        },
+        |&(d, degree, seed)| {
+            let idx = qappa::model::features::monomial_indices(d, degree);
+            let p = 1 + idx.len();
+            let mut rng = Rng::new(seed);
+            let n = 40 * p;
+            let coef: Vec<f64> = (0..p * 3).map(|_| rng.gauss()).collect();
+            let x: Vec<f64> = (0..n * d).map(|_| rng.range_f64(-1.0, 1.0)).collect();
+            let y = predict_f64(&x, n, d, &coef, degree);
+            let w = vec![1.0; n];
+            let fitted = ridge_fit_f64(&x, &y, &w, n, d, 0.0, degree).map_err(|e| e)?;
+            let yhat = predict_f64(&x, n, d, &fitted, degree);
+            for (a, b) in yhat.iter().zip(&y) {
+                if (a - b).abs() > 1e-4 * b.abs().max(1.0) {
+                    return Err(format!("pred {a} vs {b}"));
+                }
+            }
+            Ok(())
+        },
+    );
+}

@@ -1,0 +1,174 @@
+//! Integration: the PJRT artifact path against python-generated goldens.
+//!
+//! `artifacts/golden.json` is produced by `python -m compile.aot` and holds
+//! deterministic inputs + the L2 model functions' outputs.  The rust engine
+//! must reproduce them bit-closely through the HLO-text artifacts — this is
+//! the end-to-end proof that L1 (pallas) == L2 (jax) == L3 (rust/PJRT).
+
+use std::path::Path;
+use std::sync::Arc;
+
+use qappa::model::{Backend, M};
+use qappa::runtime::{Engine, XlaBackend};
+use qappa::util::json::Json;
+
+fn artifacts_dir() -> Option<std::path::PathBuf> {
+    let dir = qappa::runtime::ArtifactRuntime::artifacts_dir_default();
+    if dir.join("manifest.json").exists() && dir.join("golden.json").exists() {
+        Some(dir)
+    } else {
+        None
+    }
+}
+
+fn load_golden(dir: &Path) -> Json {
+    let text = std::fs::read_to_string(dir.join("golden.json")).expect("golden.json");
+    Json::parse(&text).expect("golden parses")
+}
+
+fn assert_close(got: &[f32], want: &[f32], tol: f32, what: &str) {
+    assert_eq!(got.len(), want.len(), "{what}: length");
+    let mut worst = 0.0f32;
+    for (g, w) in got.iter().zip(want) {
+        let denom = w.abs().max(1.0);
+        worst = worst.max((g - w).abs() / denom);
+    }
+    assert!(worst <= tol, "{what}: worst rel err {worst} > {tol}");
+}
+
+#[test]
+fn golden_predict_fit_loss_parity() {
+    let Some(dir) = artifacts_dir() else {
+        eprintln!("skipping: artifacts not built (run `make artifacts`)");
+        return;
+    };
+    let golden = load_golden(&dir);
+    let engine = Engine::start(&dir).expect("engine");
+    let d = engine.d;
+
+    for degree in [1usize, 2, 3] {
+        let case = golden.get("cases").get(&degree.to_string());
+        if case == &Json::Null {
+            continue;
+        }
+        // ---- predict ----
+        let p = case.get("predict");
+        let x = p.get("x").as_f32_vec().unwrap();
+        let w = p.get("w").as_f32_vec().unwrap();
+        let want = p.get("yhat").as_f32_vec().unwrap();
+        let n = x.len() / d;
+        let got = engine
+            .predict(degree, Arc::new(w), x, n)
+            .expect("predict");
+        assert_close(&got, &want, 2e-4, &format!("predict d{degree}"));
+
+        // ---- fit + loss ----
+        let f = case.get("fit");
+        let n_real = f.get("n_real").as_usize().unwrap();
+        let fx = f.get("x").as_f32_vec().unwrap();
+        let fy = f.get("y").as_f32_vec().unwrap();
+        let lam = f.get("lam").as_f64().unwrap() as f32;
+        let want_coef = f.get("coef").as_f32_vec().unwrap();
+        let want_mse = f.get("mse").as_f32_vec().unwrap();
+        let w1 = vec![1.0f32; n_real];
+        let coef = engine
+            .fit(degree, fx.clone(), fy.clone(), w1.clone(), n_real, lam)
+            .expect("fit");
+        assert_close(&coef, &want_coef, 5e-3, &format!("fit d{degree}"));
+        let mse = engine
+            .loss(degree, fx, fy, w1, n_real, coef)
+            .expect("loss");
+        assert_close(&mse, &want_mse, 5e-3, &format!("loss d{degree}"));
+    }
+}
+
+#[test]
+fn xla_and_native_backends_agree() {
+    let Some(dir) = artifacts_dir() else {
+        eprintln!("skipping: artifacts not built");
+        return;
+    };
+    let engine = Arc::new(Engine::start(&dir).expect("engine"));
+    let xla = XlaBackend::new(engine);
+    let native = qappa::model::native::NativeBackend::new(xla.d());
+
+    let mut rng = qappa::util::prng::Rng::new(77);
+    let n = 300usize;
+    let d = xla.d();
+    let x: Vec<f32> = (0..n * d).map(|_| rng.range_f64(-1.5, 1.5) as f32).collect();
+    let y: Vec<f32> = (0..n * M).map(|_| rng.gauss() as f32).collect();
+    let w: Vec<f32> = (0..n).map(|_| if rng.f64() < 0.8 { 1.0 } else { 0.0 }).collect();
+
+    for degree in [1usize, 2] {
+        let cx = xla.fit(&x, &y, &w, n, 0.01, degree).expect("xla fit");
+        let cn = native.fit(&x, &y, &w, n, 0.01, degree).expect("native fit");
+        assert_close(&cx, &cn, 2e-2, &format!("fit parity d{degree}"));
+
+        let px = xla.predict(&x, n, &cn, degree).expect("xla predict");
+        let pn = native.predict(&x, n, &cn, degree).expect("native predict");
+        assert_close(&px, &pn, 2e-4, &format!("predict parity d{degree}"));
+
+        let lx = xla.loss(&x, &y, &w, n, &cn, degree).expect("xla loss");
+        let ln = native.loss(&x, &y, &w, n, &cn, degree).expect("native loss");
+        assert_close(&lx, &ln, 2e-3, &format!("loss parity d{degree}"));
+    }
+}
+
+#[test]
+fn batcher_answers_every_request_exactly_once() {
+    let Some(dir) = artifacts_dir() else {
+        eprintln!("skipping: artifacts not built");
+        return;
+    };
+    let engine = Arc::new(Engine::start(&dir).expect("engine"));
+    let d = engine.d;
+    let degree = 2usize;
+    let p = qappa::model::num_features(d, degree);
+    let coef: Arc<Vec<f32>> = Arc::new((0..p * M).map(|i| (i as f32 * 0.01).sin()).collect());
+
+    // Fire concurrent odd-sized requests; each must come back with its own
+    // rows (identity checked through a per-request marker column).
+    let native = qappa::model::native::NativeBackend::new(d);
+    let mut handles = Vec::new();
+    for t in 0..8u32 {
+        let engine = engine.clone();
+        let coef = coef.clone();
+        handles.push(std::thread::spawn(move || {
+            let mut rng = qappa::util::prng::Rng::new(1000 + t as u64);
+            let n = 1 + rng.below(700);
+            let x: Vec<f32> =
+                (0..n * d).map(|_| rng.range_f64(-1.0, 1.0) as f32).collect();
+            let out = engine
+                .predict(degree, coef.clone(), x.clone(), n)
+                .expect("predict");
+            (n, x, out)
+        }));
+    }
+    for h in handles {
+        let (n, x, out) = h.join().unwrap();
+        assert_eq!(out.len(), n * M);
+        let want = native.predict(&x, n, &coef, degree).unwrap();
+        assert_close(&out, &want, 2e-4, "scattered batch rows");
+    }
+    // batching actually occurred (requests > batches is not guaranteed
+    // under races, but rows processed must match rows requested)
+    use std::sync::atomic::Ordering::Relaxed;
+    let rows = engine.stats.predict_rows.load(Relaxed);
+    let batches = engine.stats.predict_batches.load(Relaxed);
+    assert!(rows > 0 && batches > 0);
+}
+
+#[test]
+fn manifest_monomials_match_rust_expansion() {
+    let Some(dir) = artifacts_dir() else {
+        eprintln!("skipping: artifacts not built");
+        return;
+    };
+    let man = qappa::runtime::Manifest::load(&dir).expect("manifest");
+    for (&degree, mons) in &man.monomials {
+        let rust = qappa::model::features::monomial_indices(man.d, degree);
+        assert_eq!(&rust, mons, "monomial order mismatch at degree {degree}");
+    }
+    assert_eq!(man.d, qappa::config::NUM_FEATURES);
+    assert_eq!(man.m, M);
+}

@@ -1,0 +1,85 @@
+//! Calibration probe: per-PE-type decomposition of area / power / energy /
+//! latency at representative configs, plus the headline ratios from clean
+//! (jitter-free, oracle-direct) DSE — the tuning loop for DESIGN.md §5.
+use qappa::config::*;
+use qappa::synth::gates::GateLib;
+use qappa::synth::pe::synthesize_pe;
+use qappa::synth::array::synthesize_array;
+use qappa::synth::oracle::*;
+use qappa::dataflow::*;
+use qappa::workloads;
+
+fn main() {
+    let lib = GateLib::freepdk45();
+    let which = std::env::args().nth(1).unwrap_or_default();
+    // representative "best" config per type (small spads, like the DSE picks)
+    for ty in ALL_PE_TYPES {
+        let mut cfg = AcceleratorConfig::default_with(ty);
+        cfg.pe_rows = 24; cfg.pe_cols = 8; cfg.glb_kb = 108;
+        cfg.spad_ifmap_b = 24; cfg.spad_filter_b = 112; cfg.spad_psum_b = 32;
+        cfg.bandwidth_gbps = 8.0;
+        let pe = synthesize_pe(&lib, &cfg);
+        let arr = synthesize_array(&lib, &cfg);
+        {
+            use qappa::synth::array::*;
+            let f = arr.fmax_mhz;
+            let mac_nw = pe.energy_per_mac_fj(&lib) * arr.num_pes as f64 * f * REF_UTILIZATION;
+            let wb = pe.pe_type.act_bits() as f64;
+            let glb_nw = (arr.glb.access_energy_fj + WIRE_FJ_PER_BIT_MM*arr.avg_wire_mm*wb) * GLB_ACCESS_PER_MAC * arr.num_pes as f64 * f * REF_UTILIZATION;
+            let infra_nw = lib.energy_per_op_fj(&arr.infra, 0.08) * f;
+            let leak_nw = pe.leakage_nw(&lib)*arr.num_pes as f64 + arr.glb.leak_nw + lib.leakage_nw(&arr.infra);
+            println!("  power: pe-array {:.1} + glb/noc {:.1} + infra {:.1} + leak {:.1} mW", mac_nw/1e6, glb_nw/1e6, infra_nw/1e6, leak_nw/1e6);
+        }
+        let ppa = synthesize_clean(&cfg);
+        let ep = energy_params(&cfg);
+        println!("\n=== {} (r24c8 g108 spads 24/112/32 bw8) ===", ty.label());
+        println!("  PE: mac {:6.0} + spads {:6.0} + ctrl {:6.0} = {:6.0} um2; e/mac {:6.1} fJ (mac {:5.1} + spads {:5.1})",
+            pe.mac.area_um2(&lib),
+            pe.spad_ifmap.area_um2 + pe.spad_filter.area_um2 + pe.spad_psum.area_um2,
+            lib.area_um2(&pe.ctrl),
+            pe.area_um2(&lib),
+            pe.energy_per_mac_fj(&lib),
+            pe.mac.energy_per_mac_fj(&lib),
+            pe.spad_ifmap.access_energy_fj + pe.spad_filter.access_energy_fj + 2.0*pe.spad_psum.access_energy_fj);
+        println!("  chip: PEs {:5.3} + GLB {:5.3} + infra {:5.3} = {:5.3} mm2 | {:7.2} mW | fmax {:6.0} MHz",
+            pe.area_um2(&lib) * arr.num_pes as f64 / 1e6 * 1.1,
+            arr.glb.area_um2 / 1e6 * 1.1,
+            lib.area_um2(&arr.infra) / 1e6 * 1.1,
+            ppa.area_mm2, ppa.power_mw, ppa.fmax_mhz);
+        for wl in ["vgg16", "resnet34"] {
+            let layers = workloads::by_name(wl).unwrap();
+            let cost = evaluate_network(&cfg, &ep, &layers);
+            let compute: u64 = layers.iter().map(|l| map_layer(&cfg, &ep, l).compute_cycles).sum();
+            println!("  {wl}: lat {:8.2} ms (compute-only {:8.2} ms), util {:4.2}, dram {:6.1} MB, energy(power*lat) {:7.2} mJ",
+                cost.latency_s*1e3, compute as f64/(ep.fmax_mhz*1e3), cost.avg_utilization,
+                cost.dram_bytes as f64/1e6, ppa.power_mw*cost.latency_s);
+        }
+    }
+    if which == "dse" {
+        // clean oracle-direct DSE ratios (no regression noise)
+        use qappa::coordinator::*;
+        use qappa::coordinator::explorer::*;
+        use qappa::model::native::NativeBackend;
+        let mut opts = DseOptions::default();
+        opts.sigma = 0.0; opts.train_per_type = 512;
+        let b = NativeBackend::new(7);
+        for wl in ["vgg16", "resnet34", "resnet50"] {
+            let layers = workloads::by_name(wl).unwrap();
+            let res = run_dse(&b, &layers, wl, &opts).unwrap();
+            print!("{wl}: ");
+            for ty in ALL_PE_TYPES {
+                let (pa, e) = res.ratios[&ty];
+                print!(" {}={:.2}x/{:.2}x", ty.label(), pa, e);
+            }
+            println!("\n   anchor {}", res.anchor.cfg.key());
+            for ty in ALL_PE_TYPES {
+                let best = res.points[&ty].iter().max_by(|a,b| a.perf_per_area.partial_cmp(&b.perf_per_area).unwrap()).unwrap();
+                println!("   {} best: {} | thr {:8.2}/s area {:5.2} mm2 energy {:7.2} mJ fmax {:6.0}",
+                    ty.label(), best.cfg.key(), best.throughput, best.ppa.area_mm2, best.energy_mj, best.ppa.fmax_mhz);
+            }
+        }
+    }
+}
+
+#[allow(dead_code)]
+fn power_breakdown() {}
