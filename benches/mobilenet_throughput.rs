@@ -1,0 +1,44 @@
+//! Bench: MobileNet dataflow evaluation throughput — depthwise-separable
+//! networks have ~3x the layer count of VGG-16 at ~1/25 the MACs, so they
+//! stress the per-layer mapping overhead rather than the MAC loop.
+
+use qappa::config::{AcceleratorConfig, PeType};
+use qappa::dataflow::evaluate_network;
+use qappa::synth::oracle::energy_params;
+use qappa::util::bench::Bench;
+use qappa::util::pool::{default_workers, parallel_map};
+use qappa::workloads;
+
+fn main() {
+    for wl in ["mobilenetv1", "mobilenetv2"] {
+        let layers = workloads::by_name(wl).unwrap();
+        for ty in [PeType::Int16, PeType::LightPe1] {
+            let cfg = AcceleratorConfig::default_with(ty);
+            let ep = energy_params(&cfg);
+            Bench::new(&format!("dataflow/{wl}_single_eval_{}", ty.label()))
+                .warmup(2)
+                .samples(10)
+                .run_with_units(layers.len() as f64, "layers", || {
+                    evaluate_network(&cfg, &ep, &layers).cycles
+                })
+                .print();
+        }
+    }
+
+    // Whole-grid MobileNetV2 evaluation (the DSE inner loop).
+    let space = qappa::coordinator::space::DesignSpace::default();
+    let cfgs = space.enumerate(PeType::LightPe1);
+    let layers = workloads::mobilenetv2();
+    let w = default_workers();
+    Bench::new(&format!("dataflow/mobilenetv2_grid_{}cfgs_x{w}", cfgs.len()))
+        .warmup(1)
+        .samples(3)
+        .run_with_units(cfgs.len() as f64, "configs", || {
+            parallel_map(&cfgs, w, |c| {
+                let ep = energy_params(c);
+                evaluate_network(c, &ep, &layers).energy_mj
+            })
+            .len()
+        })
+        .print();
+}

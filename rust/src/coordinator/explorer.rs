@@ -333,4 +333,23 @@ mod tests {
         let res = run_dse(&backend, &layers[..4], "vgg16-head", &opts).unwrap();
         assert!(res.ratios[&PeType::LightPe1].0 > 1.0);
     }
+
+    #[test]
+    fn works_on_depthwise_workloads() {
+        // MobileNetV2 head (stem + first two inverted-residual blocks):
+        // the DSE pipeline must evaluate depthwise layers end-to-end and
+        // still produce positive, frontier-bearing points for every type.
+        let backend = NativeBackend::new(7);
+        let mut opts = tiny_opts();
+        opts.train_per_type = 48;
+        let layers = workloads::mobilenetv2();
+        assert!(layers[..6].iter().any(|l| l.is_depthwise()));
+        let res = run_dse(&backend, &layers[..6], "mobilenetv2-head", &opts).unwrap();
+        for ty in ALL_PE_TYPES {
+            for p in &res.points[&ty] {
+                assert!(p.throughput > 0.0 && p.energy_mj > 0.0, "{ty:?}");
+            }
+            assert!(!res.frontier[&ty].is_empty());
+        }
+    }
 }

@@ -2,6 +2,7 @@
 
 use crate::config::{PeType, ALL_PE_TYPES};
 use crate::coordinator::explorer::{DseOptions, DseResult};
+use crate::dataflow::Layer;
 use crate::model::{predict_ppa, Backend};
 use crate::synth::oracle::synthesize_with_sigma;
 use crate::util::stats;
@@ -104,6 +105,28 @@ pub fn dse_summary_table(res: &DseResult) -> Table {
     t
 }
 
+/// Per-layer table for `qappa workloads --workload W`: taxonomy kind,
+/// shape, and the groups-aware MAC count of every layer.
+pub fn workload_table(layers: &[Layer]) -> Table {
+    let mut t = Table::new(&[
+        "layer", "kind", "c", "k", "hw", "rs", "stride", "groups", "MACs_M",
+    ]);
+    for l in layers {
+        t.row(vec![
+            l.name.clone(),
+            l.kind().to_string(),
+            l.c.to_string(),
+            l.k.to_string(),
+            l.hw.to_string(),
+            l.rs.to_string(),
+            l.stride.to_string(),
+            l.groups.to_string(),
+            format!("{:.2}", l.macs() as f64 / 1e6),
+        ]);
+    }
+    t
+}
+
 /// Full scatter (the actual figure series): normalized perf/area and
 /// normalized energy per point, per PE type.
 pub fn dse_scatter_table(res: &DseResult) -> Table {
@@ -186,5 +209,15 @@ mod tests {
         assert_eq!(scatter.len(), 4 * opts().space.len());
         // CSV round trip sanity
         assert!(scatter.to_csv().lines().count() == scatter.len() + 1);
+    }
+
+    #[test]
+    fn workload_table_reports_kinds_and_grouped_macs() {
+        let layers = crate::workloads::mobilenetv2();
+        let t = workload_table(&layers);
+        assert_eq!(t.len(), layers.len());
+        let csv = t.to_csv();
+        assert!(csv.contains("dw"), "depthwise kind missing from table");
+        assert!(csv.contains("pw"), "pointwise kind missing from table");
     }
 }

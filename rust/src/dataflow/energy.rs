@@ -10,16 +10,25 @@ use crate::dataflow::traffic::Traffic;
 use crate::synth::oracle::EnergyParams;
 
 /// Energy breakdown for one layer, millijoules.
+///
+/// Compute energy scales with [`Layer::macs`], which is `groups`-aware: a
+/// depthwise layer pays `1/c` of the dense MAC energy of the same shape.
 #[derive(Debug, Clone, Copy, Default)]
 pub struct EnergyBreakdown {
+    /// MAC datapath + scratchpad energy.
     pub compute_mj: f64,
+    /// Global-buffer access energy.
     pub glb_mj: f64,
+    /// GLB<->PE interconnect energy.
     pub noc_mj: f64,
+    /// Off-chip DRAM transfer energy.
     pub dram_mj: f64,
+    /// Static leakage over the layer's wall-clock latency.
     pub leakage_mj: f64,
 }
 
 impl EnergyBreakdown {
+    /// Sum of all components, millijoules.
     pub fn total_mj(&self) -> f64 {
         self.compute_mj + self.glb_mj + self.noc_mj + self.dram_mj + self.leakage_mj
     }
@@ -87,6 +96,18 @@ mod tests {
         let e = energy_for(&cfg, &l);
         let expect = l.macs() as f64 * ep.mac_with_spads_fj * 1e-12;
         assert!((e.compute_mj - expect).abs() < 1e-12 * expect.max(1.0));
+    }
+
+    #[test]
+    fn depthwise_much_cheaper_than_dense_same_shape() {
+        let cfg = AcceleratorConfig::default_with(PeType::Int16);
+        let dense = Layer::conv("d", 64, 64, 28, 28, 3, 1, 1);
+        let dw = Layer::dw("dw", 64, 28, 3, 1, 1);
+        let ed = energy_for(&cfg, &dense);
+        let edw = energy_for(&cfg, &dw);
+        // Compute energy is proportional to MACs: exactly c=64x less.
+        assert!((edw.compute_mj * 64.0 - ed.compute_mj).abs() < 1e-9 * ed.compute_mj.max(1.0));
+        assert!(edw.total_mj() < ed.total_mj());
     }
 
     #[test]

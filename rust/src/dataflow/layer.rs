@@ -1,23 +1,51 @@
-//! DNN layer descriptors (convolution and fully-connected).
+//! DNN layer descriptors: dense, grouped and depthwise convolutions plus
+//! fully-connected layers.
+//!
+//! The taxonomy (see `docs/WORKLOADS.md`):
+//!
+//! | kind      | constructor         | `groups`     | shape notes |
+//! |-----------|---------------------|--------------|-------------|
+//! | `conv`    | [`Layer::conv`]     | 1            | dense convolution |
+//! | `grouped` | [`Layer::grouped`]  | `1 < g < c`  | channels split into `g` independent groups |
+//! | `dw`      | [`Layer::dw`]       | `g == c == k`| depthwise: one filter per channel |
+//! | `pw`      | [`Layer::pw`]       | 1            | pointwise: dense 1x1 convolution |
+//! | `fc`      | [`Layer::fc`]       | 1            | 1x1 conv over a 1x1 "image" |
+//!
+//! A grouped convolution connects each output channel to only `c / groups`
+//! input channels, so MACs and filter volume shrink by `groups` relative to
+//! a dense layer of the same (c, k, hw, rs) shape — a depthwise layer costs
+//! exactly `dense / c`. Costing it as dense would overstate MobileNet-class
+//! networks by ~8-9x, which is why every accounting method here is
+//! `groups`-aware.
 
 /// One layer of a network, in inference shape (batch = 1, as in the
 /// paper's edge-deployment setting).
 #[derive(Debug, Clone, PartialEq)]
 pub struct Layer {
+    /// Human-readable layer name (report/table key; not part of identity
+    /// for cost purposes).
     pub name: String,
     /// Input channels.
     pub c: u32,
     /// Output channels (filters).
     pub k: u32,
-    /// Input spatial size (square h = w; VGG/ResNet are square throughout).
+    /// Input spatial size (square h = w; the supported nets are square
+    /// throughout).
     pub hw: u32,
     /// Filter spatial size (square r = s).
     pub rs: u32,
+    /// Convolution stride (same in both spatial dims).
     pub stride: u32,
+    /// Zero padding on each spatial border.
     pub pad: u32,
+    /// Channel groups: 1 = dense, `c` = depthwise. Each output channel
+    /// reads only `c / groups` input channels; `c` and `k` must both be
+    /// divisible by `groups`.
+    pub groups: u32,
 }
 
 impl Layer {
+    /// Dense convolution (`groups = 1`).
     pub fn conv(
         name: &str,
         c: u32,
@@ -28,16 +56,103 @@ impl Layer {
         stride: u32,
         pad: u32,
     ) -> Layer {
-        Layer { name: name.into(), c, k, hw, rs, stride, pad }
+        Layer { name: name.into(), c, k, hw, rs, stride, pad, groups: 1 }
+    }
+
+    /// Grouped convolution: input/output channels split into `groups`
+    /// independent slices (AlexNet-style groups, ResNeXt cardinality).
+    pub fn grouped(
+        name: &str,
+        c: u32,
+        k: u32,
+        hw: u32,
+        rs: u32,
+        stride: u32,
+        pad: u32,
+        groups: u32,
+    ) -> Layer {
+        debug_assert!(groups > 0 && c % groups == 0 && k % groups == 0);
+        Layer { name: name.into(), c, k, hw, rs, stride, pad, groups }
+    }
+
+    /// Depthwise convolution: one spatial filter per channel
+    /// (`groups = c = k`), the MobileNet workhorse.
+    pub fn dw(name: &str, c: u32, hw: u32, rs: u32, stride: u32, pad: u32) -> Layer {
+        Layer { name: name.into(), c, k: c, hw, rs, stride, pad, groups: c }
+    }
+
+    /// Pointwise convolution: dense 1x1, stride 1, no padding — the channel
+    /// mixer paired with depthwise layers in separable blocks.
+    pub fn pw(name: &str, c: u32, k: u32, hw: u32) -> Layer {
+        Layer { name: name.into(), c, k, hw, rs: 1, stride: 1, pad: 0, groups: 1 }
     }
 
     /// Fully-connected layer as a 1x1 conv over a 1x1 "image".
     pub fn fc(name: &str, c_in: u32, c_out: u32) -> Layer {
-        Layer { name: name.into(), c: c_in, k: c_out, hw: 1, rs: 1, stride: 1, pad: 0 }
+        Layer { name: name.into(), c: c_in, k: c_out, hw: 1, rs: 1, stride: 1, pad: 0, groups: 1 }
     }
 
+    /// True for layers built by [`Layer::fc`] (1x1 conv over a 1x1 image).
     pub fn is_fc(&self) -> bool {
         self.hw == 1 && self.rs == 1
+    }
+
+    /// True when every channel has its own filter (`groups = c = k`).
+    pub fn is_depthwise(&self) -> bool {
+        self.groups > 1 && self.groups == self.c && self.groups == self.k
+    }
+
+    /// True for any non-dense channel connectivity (`groups > 1`).
+    pub fn is_grouped(&self) -> bool {
+        self.groups > 1
+    }
+
+    /// Taxonomy label used by reports and the JSON schema:
+    /// `fc` / `dw` / `grouped` / `pw` / `conv`.
+    pub fn kind(&self) -> &'static str {
+        // Grouped checks come first: a grouped 1x1 layer at hw = 1 must
+        // not be mistaken for (dense) fc, or serialization would drop its
+        // `groups` and round-trip to a model with groups-times the MACs.
+        if self.is_depthwise() {
+            "dw"
+        } else if self.is_grouped() {
+            "grouped"
+        } else if self.is_fc() {
+            "fc"
+        } else if self.rs == 1 && self.stride == 1 && self.pad == 0 {
+            // Stride-2 1x1 projections (ResNet shortcuts) stay "conv":
+            // [`Layer::pw`] pins stride 1, so only exact matches round-trip.
+            "pw"
+        } else {
+            "conv"
+        }
+    }
+
+    /// Structural validity: positive dims, kernel fits the padded input,
+    /// and channel counts divisible by `groups`. The JSON loader calls this
+    /// on every ingested layer.
+    pub fn validate(&self) -> Result<(), String> {
+        if self.c == 0 || self.k == 0 || self.hw == 0 || self.rs == 0 || self.stride == 0 {
+            return Err(format!("layer '{}': all of c/k/hw/rs/stride must be > 0", self.name));
+        }
+        if self.groups == 0 {
+            return Err(format!("layer '{}': groups must be > 0", self.name));
+        }
+        if self.c % self.groups != 0 || self.k % self.groups != 0 {
+            return Err(format!(
+                "layer '{}': c={} and k={} must be divisible by groups={}",
+                self.name, self.c, self.k, self.groups
+            ));
+        }
+        if self.hw + 2 * self.pad < self.rs {
+            return Err(format!(
+                "layer '{}': kernel {} exceeds padded input {}",
+                self.name,
+                self.rs,
+                self.hw + 2 * self.pad
+            ));
+        }
+        Ok(())
     }
 
     /// Output spatial size (square).
@@ -46,10 +161,13 @@ impl Layer {
         (self.hw + 2 * self.pad - self.rs) / self.stride + 1
     }
 
-    /// Total multiply-accumulates.
+    /// Total multiply-accumulates. Each output channel reduces over
+    /// `c / groups` input channels, so a depthwise layer (`groups = c`)
+    /// costs `1/c` of its dense counterpart.
     pub fn macs(&self) -> u64 {
         let e = self.out_hw() as u64;
-        self.c as u64 * self.k as u64 * e * e * (self.rs as u64 * self.rs as u64)
+        let cin_per_group = (self.c / self.groups.max(1)) as u64;
+        cin_per_group * self.k as u64 * e * e * (self.rs as u64 * self.rs as u64)
     }
 
     /// Elements in the input feature map.
@@ -57,9 +175,11 @@ impl Layer {
         self.c as u64 * self.hw as u64 * self.hw as u64
     }
 
-    /// Elements in all filters.
+    /// Elements in all filters: each of the `k` filters spans only its
+    /// group's `c / groups` input channels.
     pub fn filter_elems(&self) -> u64 {
-        self.c as u64 * self.k as u64 * self.rs as u64 * self.rs as u64
+        let cin_per_group = (self.c / self.groups.max(1)) as u64;
+        cin_per_group * self.k as u64 * self.rs as u64 * self.rs as u64
     }
 
     /// Elements in the output feature map.
@@ -104,5 +224,55 @@ mod tests {
         assert_eq!(l.ifmap_elems(), 16 * 64);
         assert_eq!(l.filter_elems(), 16 * 32 * 9);
         assert_eq!(l.ofmap_elems(), 32 * 64);
+    }
+
+    #[test]
+    fn depthwise_macs_are_dense_over_cin() {
+        // The ISSUE invariant: depthwise MACs = dense MACs / Cin.
+        let dense = Layer::conv("d", 64, 64, 28, 28, 3, 1, 1);
+        let dw = Layer::dw("dw", 64, 28, 3, 1, 1);
+        assert!(dw.is_depthwise());
+        assert_eq!(dw.kind(), "dw");
+        assert_eq!(dw.macs() * 64, dense.macs());
+        assert_eq!(dw.filter_elems() * 64, dense.filter_elems());
+        // Same feature-map volumes either way.
+        assert_eq!(dw.ifmap_elems(), dense.ifmap_elems());
+        assert_eq!(dw.ofmap_elems(), dense.ofmap_elems());
+    }
+
+    #[test]
+    fn grouped_macs_scale_with_groups() {
+        let dense = Layer::conv("d", 128, 256, 14, 14, 3, 1, 1);
+        for g in [2u32, 4, 8] {
+            let grp = Layer::grouped("g", 128, 256, 14, 3, 1, 1, g);
+            assert!(grp.is_grouped() && !grp.is_depthwise());
+            assert_eq!(grp.kind(), "grouped");
+            assert_eq!(grp.macs() * g as u64, dense.macs());
+            assert_eq!(grp.filter_elems() * g as u64, dense.filter_elems());
+        }
+    }
+
+    #[test]
+    fn pointwise_is_dense_1x1() {
+        let pw = Layer::pw("pw", 32, 64, 56);
+        assert_eq!(pw.kind(), "pw");
+        assert_eq!(pw.out_hw(), 56);
+        assert_eq!(pw.macs(), 32 * 64 * 56 * 56);
+        assert!(!pw.is_fc());
+    }
+
+    #[test]
+    fn validate_catches_bad_shapes() {
+        assert!(Layer::conv("ok", 16, 32, 28, 28, 3, 1, 1).validate().is_ok());
+        assert!(Layer::dw("ok", 64, 28, 3, 2, 1).validate().is_ok());
+        // c not divisible by groups
+        let bad = Layer { groups: 3, ..Layer::conv("bad", 16, 32, 28, 28, 3, 1, 1) };
+        assert!(bad.validate().is_err());
+        // kernel larger than padded input
+        let big = Layer::conv("big", 3, 8, 2, 2, 7, 1, 0);
+        assert!(big.validate().is_err());
+        // zero stride
+        let z = Layer { stride: 0, ..Layer::conv("z", 3, 8, 8, 8, 3, 1, 1) };
+        assert!(z.validate().is_err());
     }
 }

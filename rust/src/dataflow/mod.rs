@@ -6,6 +6,10 @@
 //! analytical (closed-form reuse factors) and is documented per-equation in
 //! the submodules; its invariants (work conservation, compulsory-traffic
 //! lower bounds, utilization <= 1) are enforced by unit + property tests.
+//!
+//! All cost accounting is `groups`-aware: dense, grouped and depthwise
+//! convolutions (see [`Layer`]) are costed at their connected-plane MAC and
+//! filter-traffic counts, never at the dense rate.
 
 pub mod energy;
 pub mod layer;
@@ -23,13 +27,17 @@ use crate::synth::oracle::EnergyParams;
 /// Aggregate cost of running a whole network once.
 #[derive(Debug, Clone, Copy, Default)]
 pub struct NetworkCost {
+    /// Total multiply-accumulates (groups-aware, see [`Layer::macs`]).
     pub macs: u64,
+    /// Total cycles across all layers.
     pub cycles: u64,
+    /// End-to-end latency, seconds.
     pub latency_s: f64,
     /// Total energy, mJ.
     pub energy_mj: f64,
     /// MAC-weighted average PE-array utilization.
     pub avg_utilization: f64,
+    /// Total DRAM traffic, bytes.
     pub dram_bytes: u64,
 }
 
@@ -38,7 +46,9 @@ pub struct NetworkCost {
 /// Residual networks repeat identical layer shapes many times (ResNet-34
 /// has 37 layers but only ~24 distinct shapes); since every per-layer cost
 /// is additive, identical layers are evaluated once and scaled by their
-/// multiplicity — exact, and ~1.5-2x faster in the DSE inner loop.
+/// multiplicity — exact, and ~1.5-2x faster in the DSE inner loop. The
+/// shape key includes `groups`, so a depthwise layer never aliases a dense
+/// layer of the same (c, k, hw, rs) dimensions.
 pub fn evaluate_network(
     cfg: &AcceleratorConfig,
     ep: &EnergyParams,
@@ -54,6 +64,7 @@ pub fn evaluate_network(
                 && l.rs == layer.rs
                 && l.stride == layer.stride
                 && l.pad == layer.pad
+                && l.groups == layer.groups
             {
                 *count += 1;
                 continue 'outer;
@@ -108,5 +119,20 @@ mod tests {
         assert!(cost.latency_s > 0.0);
         assert!(cost.energy_mj > 0.0);
         assert!(cost.avg_utilization > 0.0 && cost.avg_utilization <= 1.0);
+    }
+
+    #[test]
+    fn dedup_never_aliases_depthwise_with_dense() {
+        // Same (c, k, hw, rs, stride, pad) but different groups: the
+        // shape-dedup in evaluate_network must keep them distinct, so the
+        // pair costs strictly more than two copies of the depthwise layer.
+        let cfg = AcceleratorConfig::default_with(PeType::Int16);
+        let ep = energy_params(&cfg);
+        let dense = Layer::conv("d", 32, 32, 28, 28, 3, 1, 1);
+        let dw = Layer::dw("dw", 32, 28, 3, 1, 1);
+        let mixed = evaluate_network(&cfg, &ep, &[dense.clone(), dw.clone()]);
+        let twice_dw = evaluate_network(&cfg, &ep, &[dw.clone(), dw.clone()]);
+        assert_eq!(mixed.macs, dense.macs() + dw.macs());
+        assert!(mixed.cycles > twice_dw.cycles);
     }
 }

@@ -16,6 +16,12 @@
 //! output row: `out_hw` outputs x `rs` taps), plus an array-fill overhead.
 //! FC layers degenerate (out_hw = rs = 1), so they map as a `rows x cols`
 //! dot-product tile: K across columns, C across rows.
+//!
+//! Grouped/depthwise convolutions schedule only the (input-channel, filter)
+//! plane pairs that are actually connected: `(c / groups) * k` planes
+//! instead of the dense `c * k`, so a depthwise layer runs `1/c` of the
+//! dense plane passes (and its MAC count shrinks to match — see
+//! [`Layer::macs`]).
 
 use crate::config::AcceleratorConfig;
 use crate::dataflow::layer::Layer;
@@ -39,6 +45,7 @@ pub struct LayerPerf {
 }
 
 impl LayerPerf {
+    /// Wall-clock latency at the given clock, seconds.
     pub fn latency_s(&self, fmax_mhz: f64) -> f64 {
         self.cycles as f64 / (fmax_mhz * 1e6)
     }
@@ -76,8 +83,9 @@ pub fn map_layer(cfg: &AcceleratorConfig, ep: &EnergyParams, layer: &Layer) -> L
         // horizontal strips of output rows
         let h_strips = e.div_ceil(cols);
         let e_phys = e.min(cols);
-        // sequential (c,k) plane groups
-        let planes = layer.c as u64 * layer.k as u64;
+        // sequential (c,k) plane groups — only connected pairs: each of the
+        // k filters reduces over c/groups input channels
+        let planes = (layer.c / layer.groups.max(1)) as u64 * layer.k as u64;
         let plane_passes = planes.div_ceil(v_stack);
         let passes = v_folds * h_strips * plane_passes;
         let active = (rs_phys * e_phys * v_stack.min(planes)) as f64;
@@ -253,6 +261,40 @@ mod tests {
         let ep4 = energy_params(&cfg4);
         let light = map_layer(&cfg4, &ep4, &l);
         assert!(light.passes < tight.passes);
+    }
+
+    #[test]
+    fn depthwise_costed_at_grouped_not_dense_rate() {
+        // A depthwise layer must schedule c plane passes, not c*c: same
+        // spatial shape as the dense layer but 1/c the MACs, so compute
+        // cycles and passes must both shrink.
+        let (cfg, ep) = setup(PeType::Int16);
+        let dense = Layer::conv("d", 64, 64, 28, 28, 3, 1, 1);
+        let dw = Layer::dw("dw", 64, 28, 3, 1, 1);
+        assert_eq!(dw.macs() * 64, dense.macs());
+        let pd = map_layer(&cfg, &ep, &dense);
+        let pdw = map_layer(&cfg, &ep, &dw);
+        assert!(pdw.passes < pd.passes, "dw {} >= dense {}", pdw.passes, pd.passes);
+        assert!(
+            pdw.compute_cycles < pd.compute_cycles,
+            "dw {} >= dense {}",
+            pdw.compute_cycles,
+            pd.compute_cycles
+        );
+        // Work conservation still holds for the grouped layer.
+        let capacity = pdw.cycles as f64 * cfg.num_pes() as f64;
+        assert!(capacity >= dw.macs() as f64);
+    }
+
+    #[test]
+    fn grouped_conv_fewer_cycles_than_dense() {
+        let (cfg, ep) = setup(PeType::Int16);
+        let dense = Layer::conv("d", 128, 128, 14, 14, 3, 1, 1);
+        let grp = Layer::grouped("g", 128, 128, 14, 3, 1, 1, 8);
+        let pd = map_layer(&cfg, &ep, &dense);
+        let pg = map_layer(&cfg, &ep, &grp);
+        assert!(pg.compute_cycles < pd.compute_cycles);
+        assert!(pg.utilization > 0.0 && pg.utilization <= 1.0);
     }
 
     #[test]

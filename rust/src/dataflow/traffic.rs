@@ -12,6 +12,11 @@
 //!
 //! All factors are >= 1 and shrink monotonically as capacities grow — the
 //! property tests pin this.
+//!
+//! Grouped/depthwise layers inherit the reduced filter volume from
+//! [`Layer::filter_elems`] (each filter spans only `c / groups` input
+//! channels), so a depthwise layer moves `1/c` of the dense filter bytes
+//! while its ifmap/ofmap volumes stay unchanged.
 
 use crate::config::AcceleratorConfig;
 use crate::dataflow::layer::Layer;
@@ -27,9 +32,11 @@ pub struct Traffic {
     /// DRAM traffic in bytes (ifmap in + filters in + ofmap out, with
     /// reloads).
     pub dram_bytes: u64,
-    /// Breakdown for reports.
+    /// DRAM ifmap bytes (breakdown for reports).
     pub dram_ifmap_bytes: u64,
+    /// DRAM filter bytes (breakdown for reports).
     pub dram_filter_bytes: u64,
+    /// DRAM ofmap bytes (breakdown for reports).
     pub dram_ofmap_bytes: u64,
 }
 
@@ -210,6 +217,29 @@ mod tests {
         cfg.spad_ifmap_b = 64;
         let roomy = traffic_for(&cfg, &l);
         assert!(tight.glb_accesses > roomy.glb_accesses);
+    }
+
+    #[test]
+    fn depthwise_moves_fewer_filter_bytes_than_dense() {
+        // Same (c, k, hw, rs) shape: the depthwise layer's filter traffic
+        // must shrink by ~c while ifmap/ofmap volumes stay comparable, and
+        // its compulsory floor must still hold.
+        let cfg = AcceleratorConfig::default_with(PeType::Int16);
+        let dense = Layer::conv("d", 64, 64, 28, 28, 3, 1, 1);
+        let dw = Layer::dw("dw", 64, 28, 3, 1, 1);
+        let td = traffic_for(&cfg, &dense);
+        let tdw = traffic_for(&cfg, &dw);
+        assert!(
+            tdw.dram_filter_bytes < td.dram_filter_bytes,
+            "dw filters {} >= dense {}",
+            tdw.dram_filter_bytes,
+            td.dram_filter_bytes
+        );
+        assert!(tdw.dram_bytes < td.dram_bytes);
+        let compulsory = (dw.ifmap_elems() * 16 + dw.filter_elems() * 16
+            + dw.ofmap_elems() * 16)
+            / 8;
+        assert!(tdw.dram_bytes >= compulsory);
     }
 
     #[test]

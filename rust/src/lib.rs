@@ -15,20 +15,31 @@
 //! Python never runs on the request path: the rust binary loads the HLO
 //! artifacts through the PJRT CPU client (`runtime`) and is self-contained.
 //!
-//! Module map (see DESIGN.md for the full inventory):
+//! ## Module map
 //!
-//! | module        | role |
-//! |---------------|------|
-//! | [`config`]    | accelerator configurations, PE types, design spaces |
-//! | [`synth`]     | gate-level synthesis oracle (Design Compiler stand-in) |
-//! | [`rtl`]       | Verilog emitter + gate-level simulator (VCS stand-in) |
-//! | [`dataflow`]  | row-stationary performance / traffic / energy model |
-//! | [`workloads`] | VGG-16, ResNet-34, ResNet-50 layer tables |
-//! | [`model`]     | PPA regression: features, native baseline, CV driver |
-//! | [`runtime`]   | PJRT artifact loading + batched execution engine |
-//! | [`coordinator`]| DSE pipeline, Pareto frontier, figure reports |
-//! | [`util`]      | json / prng / stats / cli / thread-pool substrates |
-//! | [`testkit`]   | property-testing mini-framework (proptest stand-in) |
+//! Each module corresponds to one piece of the paper's flow (README.md has
+//! the end-to-end architecture diagram):
+//!
+//! | module         | paper section | role |
+//! |----------------|---------------|------|
+//! | [`config`]     | §3.1 | accelerator configurations, PE types (FP32 / INT16 / LightPE), design-space axes |
+//! | [`synth`]      | §3.2 | gate-level synthesis oracle (Design Compiler stand-in) producing ground-truth PPA |
+//! | [`rtl`]        | §3.2 | Verilog emitter + gate-level simulator (VCS stand-in) for spot verification |
+//! | [`dataflow`]   | §3.3 | row-stationary performance / traffic / energy model; groups-aware (dense, grouped, depthwise) |
+//! | [`workloads`]  | §4   | built-in nets (VGG-16, ResNet-34/50, MobileNetV1/V2) + JSON model ingestion |
+//! | [`model`]      | §3.4 | PPA regression: features, native baseline, CV driver |
+//! | [`runtime`]    | §3.4 | PJRT artifact loading + batched execution engine |
+//! | [`coordinator`]| §4   | DSE pipeline, Pareto frontier, figure reports (Figs. 2-5) |
+//! | [`util`]       | —    | json / prng / stats / cli / thread-pool substrates |
+//! | [`testkit`]    | —    | property-testing mini-framework (proptest stand-in) with config/layer generators |
+//!
+//! ## Workloads
+//!
+//! The paper evaluates VGG-16 and ResNet-34/50. This crate additionally
+//! models depthwise/grouped convolutions end-to-end ([`dataflow::Layer`]
+//! carries a `groups` field through MAC, traffic and energy accounting),
+//! ships MobileNetV1/V2 builders, and ingests arbitrary user networks from
+//! JSON ([`workloads::from_json`]; schema in `docs/WORKLOADS.md`).
 
 pub mod config;
 pub mod coordinator;

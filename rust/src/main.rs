@@ -5,7 +5,8 @@
 //! * `synth`     — synthesize one configuration, print ground-truth PPA
 //! * `fit`       — train the PPA models (k-fold CV) and print the CV table
 //! * `fig2`      — model-accuracy reproduction (actual vs estimated)
-//! * `dse`       — full design-space exploration for a workload (Fig 3-5)
+//! * `dse` / `explore` — full design-space exploration for a workload
+//!   (built-in name or JSON model file; Fig 3-5)
 //! * `figures`   — regenerate all paper figures into `figures/*.csv`
 //! * `rtl`       — emit generated Verilog for a configuration
 //! * `verify`    — run the gate-level simulator against golden models
@@ -18,7 +19,9 @@
 use std::sync::Arc;
 
 use qappa::config::{AcceleratorConfig, PeType, ALL_PE_TYPES};
-use qappa::coordinator::report::{dse_scatter_table, dse_summary_table, fig2_accuracy, fig2_table};
+use qappa::coordinator::report::{
+    dse_scatter_table, dse_summary_table, fig2_accuracy, fig2_table, workload_table,
+};
 use qappa::coordinator::{run_dse, DseOptions};
 use qappa::model::native::NativeBackend;
 use qappa::model::Backend;
@@ -51,7 +54,7 @@ fn dispatch(sub: &str, args: &Args) -> Result<(), String> {
         "synth" => cmd_synth(args),
         "fit" => cmd_fit(args),
         "fig2" | "accuracy" => cmd_fig2(args),
-        "dse" => cmd_dse(args),
+        "dse" | "explore" => cmd_dse(args),
         "figures" => cmd_figures(args),
         "rtl" => cmd_rtl(args),
         "verify" => cmd_verify(args),
@@ -77,15 +80,20 @@ SUBCOMMANDS
                                          train PPA models, print CV tables
   fig2      [--backend ... --train N --holdout N --out DIR]
                                          model accuracy vs synthesis (Fig. 2)
-  dse       --workload vgg16|resnet34|resnet50 [--backend ... --train N
-            --out DIR --scatter]         design-space exploration (Fig. 3-5)
+  dse       --workload W [--backend ... --train N --out DIR --scatter]
+            (alias: explore)             design-space exploration (Fig. 3-5)
   figures   [--all --backend ... --out DIR]
                                          regenerate every figure into CSVs
   rtl       --pe-type T [--out FILE]     emit generated Verilog
   verify    [--vectors N]                gate-level sim vs golden models
-  workloads                              print layer tables
+  workloads [--workload W]               print layer tables / MAC totals
   analyze   --workload W --pe-type T [config flags as in synth]
                                          per-layer latency/energy breakdown
+
+WORKLOADS (--workload W)
+  Built-in: vgg16, resnet34, resnet50, mobilenetv1, mobilenetv2.
+  Or a path to a JSON model file (depthwise/grouped convs supported);
+  the schema is documented in docs/WORKLOADS.md.
 
 Artifacts: set QAPPA_ARTIFACTS or run from the repo root (default:
 ./artifacts). `--backend native` needs no artifacts.
@@ -226,11 +234,16 @@ fn cmd_fig2(args: &Args) -> Result<(), String> {
     Ok(())
 }
 
+/// CSV-safe file stem for a (possibly user-supplied) workload name.
+fn sanitize_name(name: &str) -> String {
+    name.chars()
+        .map(|c| if c.is_ascii_alphanumeric() || c == '-' || c == '_' { c } else { '_' })
+        .collect()
+}
+
 fn cmd_dse(args: &Args) -> Result<(), String> {
-    let wl = args.require("workload").map_err(|e| e.to_string())?.to_string();
-    let layers = workloads::by_name(&wl).ok_or_else(|| {
-        format!("unknown workload '{wl}' (try {:?})", workloads::WORKLOAD_NAMES)
-    })?;
+    let spec = args.require("workload").map_err(|e| e.to_string())?.to_string();
+    let (wl, layers) = workloads::load(&spec)?;
     let opts = dse_options(args)?;
     let out = args.opt("out").map(str::to_string);
     let want_scatter = args.flag("scatter");
@@ -264,11 +277,12 @@ fn cmd_dse(args: &Args) -> Result<(), String> {
         );
     }
     if let Some(dir) = out {
-        let summary_path = format!("{dir}/{wl}_summary.csv");
+        let stem = sanitize_name(&wl);
+        let summary_path = format!("{dir}/{stem}_summary.csv");
         dse_summary_table(&res).write_csv(&summary_path).map_err(|e| e.to_string())?;
         println!("wrote {summary_path}");
         if want_scatter {
-            let scatter_path = format!("{dir}/{wl}_scatter.csv");
+            let scatter_path = format!("{dir}/{stem}_scatter.csv");
             dse_scatter_table(&res).write_csv(&scatter_path).map_err(|e| e.to_string())?;
             println!("wrote {scatter_path}");
         }
@@ -335,9 +349,8 @@ fn cmd_verify(args: &Args) -> Result<(), String> {
 }
 
 fn cmd_analyze(args: &Args) -> Result<(), String> {
-    let wl = args.require("workload").map_err(|e| e.to_string())?.to_string();
-    let layers = workloads::by_name(&wl)
-        .ok_or_else(|| format!("unknown workload '{wl}'"))?;
+    let spec = args.require("workload").map_err(|e| e.to_string())?.to_string();
+    let (_wl, layers) = workloads::load(&spec)?;
     let cfg = parse_config(args)?;
     args.finish().map_err(|e| e.to_string())?;
 
@@ -382,11 +395,28 @@ fn cmd_analyze(args: &Args) -> Result<(), String> {
 }
 
 fn cmd_workloads(args: &Args) -> Result<(), String> {
+    let detail = args.opt("workload").map(str::to_string);
     args.finish().map_err(|e| e.to_string())?;
-    for name in workloads::WORKLOAD_NAMES {
-        let layers = workloads::by_name(name).unwrap();
-        let macs: u64 = layers.iter().map(|l| l.macs()).sum();
-        println!("{name}: {} layers, {:.2} GMACs", layers.len(), macs as f64 / 1e9);
+    match detail {
+        Some(spec) => {
+            let (name, layers) = workloads::load(&spec)?;
+            let macs: u64 = layers.iter().map(|l| l.macs()).sum();
+            println!("{name}: {} layers, {:.2} GMACs", layers.len(), macs as f64 / 1e9);
+            print!("{}", workload_table(&layers).render());
+        }
+        None => {
+            for name in workloads::WORKLOAD_NAMES {
+                let layers = workloads::by_name(name).unwrap();
+                let macs: u64 = layers.iter().map(|l| l.macs()).sum();
+                let dw = layers.iter().filter(|l| l.is_depthwise()).count();
+                println!(
+                    "{name}: {} layers ({dw} depthwise), {:.2} GMACs",
+                    layers.len(),
+                    macs as f64 / 1e9
+                );
+            }
+            println!("\n(`workloads --workload W` prints the per-layer table)");
+        }
     }
     Ok(())
 }

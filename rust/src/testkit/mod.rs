@@ -76,6 +76,42 @@ pub fn gen_f64(rng: &mut Rng, lo: f64, hi: f64) -> f64 {
     rng.range_f64(lo, hi)
 }
 
+/// Draw a random DNN layer spanning the full taxonomy — fully-connected,
+/// depthwise, grouped and dense convolutions (see
+/// [`crate::dataflow::Layer`]) — always structurally valid.
+pub fn gen_layer(rng: &mut Rng) -> crate::dataflow::Layer {
+    use crate::dataflow::Layer;
+    let roll = rng.f64();
+    if roll < 0.2 {
+        Layer::fc("fc", gen_u32(rng, 8, 4096), gen_u32(rng, 8, 4096))
+    } else if roll < 0.4 {
+        let rs = *rng.choice(&[3u32, 5]);
+        let hw = gen_u32(rng, 7, 64).max(rs);
+        let c = 4 * gen_u32(rng, 1, 64);
+        Layer::dw("dw", c, hw, rs, *rng.choice(&[1u32, 2]), rs / 2)
+    } else if roll < 0.55 {
+        let rs = *rng.choice(&[1u32, 3]);
+        let hw = gen_u32(rng, 7, 64).max(rs);
+        let g = *rng.choice(&[2u32, 4, 8]);
+        let c = g * gen_u32(rng, 1, 32);
+        let k = g * gen_u32(rng, 1, 32);
+        Layer::grouped("grouped", c, k, hw, rs, *rng.choice(&[1u32, 2]), rs / 2, g)
+    } else {
+        let rs = *rng.choice(&[1u32, 3, 5, 7]);
+        let hw = gen_u32(rng, 7, 64).max(rs);
+        Layer::conv(
+            "conv",
+            gen_u32(rng, 1, 256),
+            gen_u32(rng, 1, 256),
+            hw,
+            hw,
+            rs,
+            *rng.choice(&[1u32, 2]),
+            rs / 2,
+        )
+    }
+}
+
 /// Draw a random accelerator configuration from sane generator bounds.
 pub fn gen_config(rng: &mut Rng) -> crate::config::AcceleratorConfig {
     use crate::config::{AcceleratorConfig, ALL_PE_TYPES};
@@ -129,6 +165,20 @@ mod tests {
         let mut rng = Rng::new(9);
         for _ in 0..200 {
             gen_config(&mut rng).validate().expect("generated config valid");
+        }
+    }
+
+    #[test]
+    fn gen_layer_is_valid_and_covers_taxonomy() {
+        let mut rng = Rng::new(11);
+        let mut kinds = std::collections::BTreeSet::new();
+        for _ in 0..500 {
+            let l = gen_layer(&mut rng);
+            l.validate().expect("generated layer valid");
+            kinds.insert(l.kind());
+        }
+        for kind in ["fc", "dw", "grouped", "conv"] {
+            assert!(kinds.contains(kind), "generator never produced '{kind}'");
         }
     }
 

@@ -1,21 +1,243 @@
-//! DNN workload definitions: the three networks the paper's design-space
-//! exploration uses (VGG-16, ResNet-34, ResNet-50), at 224x224 inference.
+//! DNN workload definitions and ingestion.
+//!
+//! Two sources of workloads, both producing a plain `Vec<Layer>`:
+//!
+//! 1. **Built-in builders** — the paper's three classic CNNs (VGG-16,
+//!    ResNet-34/50) plus the depthwise-separable MobileNetV1/V2 family,
+//!    all at 224x224 inference. Resolve by name with [`by_name`] or
+//!    [`load`].
+//! 2. **User-supplied JSON** — [`from_json`] ingests an arbitrary network
+//!    from the schema documented in `docs/WORKLOADS.md`, so
+//!    `qappa explore --workload path/to/model.json` evaluates models the
+//!    repo has never heard of. [`to_json`] writes the same schema back
+//!    (round-trip tested).
+//!
+//! [`load`] is the CLI entry point: it tries built-in names first, then
+//! treats the spec as a JSON file path, and otherwise fails with the full
+//! list of known names.
 
 use crate::dataflow::layer::Layer;
+use crate::util::json::{obj, Json};
 
-/// Named workload for CLI selection.
-pub fn by_name(name: &str) -> Option<Vec<Layer>> {
+/// Canonical names of the built-in workloads, in CLI/help order.
+pub const WORKLOAD_NAMES: [&str; 5] =
+    ["vgg16", "resnet34", "resnet50", "mobilenetv1", "mobilenetv2"];
+
+/// Canonical name + builder for a workload alias, if known.
+fn builder(name: &str) -> Option<(&'static str, fn() -> Vec<Layer>)> {
     match name.to_ascii_lowercase().as_str() {
-        "vgg16" | "vgg-16" => Some(vgg16()),
-        "resnet34" | "resnet-34" => Some(resnet34()),
-        "resnet50" | "resnet-50" => Some(resnet50()),
+        "vgg16" | "vgg-16" => Some(("vgg16", vgg16)),
+        "resnet34" | "resnet-34" => Some(("resnet34", resnet34)),
+        "resnet50" | "resnet-50" => Some(("resnet50", resnet50)),
+        "mobilenetv1" | "mobilenet-v1" | "mobilenet" => Some(("mobilenetv1", mobilenetv1)),
+        "mobilenetv2" | "mobilenet-v2" => Some(("mobilenetv2", mobilenetv2)),
         _ => None,
     }
 }
 
-pub const WORKLOAD_NAMES: [&str; 3] = ["vgg16", "resnet34", "resnet50"];
+/// Named workload for CLI selection (accepts aliases like `vgg-16`).
+pub fn by_name(name: &str) -> Option<Vec<Layer>> {
+    builder(name).map(|(_, f)| f())
+}
 
-/// VGG-16 (Simonyan & Zisserman 2014): 13 conv + 3 FC.
+/// Resolve a CLI workload spec: a built-in name (see [`WORKLOAD_NAMES`]),
+/// or a path to a JSON model file. Returns `(canonical_name, layers)`.
+///
+/// The error message lists every built-in name and points at the JSON
+/// schema docs, so an unknown `--workload` is always actionable.
+pub fn load(spec: &str) -> Result<(String, Vec<Layer>), String> {
+    if let Some((canonical, f)) = builder(spec) {
+        return Ok((canonical.to_string(), f()));
+    }
+    let looks_like_path =
+        spec.ends_with(".json") || spec.contains('/') || spec.contains('\\');
+    if looks_like_path {
+        let text = std::fs::read_to_string(spec)
+            .map_err(|e| format!("reading workload file '{spec}': {e}"))?;
+        return from_json(&text).map_err(|e| format!("workload file '{spec}': {e}"));
+    }
+    Err(format!(
+        "unknown workload '{spec}'. Built-in workloads: {}. \
+         Or pass a path to a .json model file (schema: docs/WORKLOADS.md).",
+        WORKLOAD_NAMES.join(", ")
+    ))
+}
+
+// ---------------------------------------------------------------------------
+// JSON ingestion (docs/WORKLOADS.md documents the schema)
+// ---------------------------------------------------------------------------
+
+/// Parse a workload from JSON text. Returns `(name, layers)`.
+///
+/// Top level: `{"name": "...", "layers": [ ... ]}`. Each layer object has a
+/// `"type"` of `conv` (default), `grouped`, `dw`, `pw` or `fc`; see
+/// `docs/WORKLOADS.md` for the per-type fields and defaults. Every layer is
+/// validated ([`Layer::validate`]) so malformed models fail with the layer
+/// name in the error, not deep inside the dataflow model.
+pub fn from_json(text: &str) -> Result<(String, Vec<Layer>), String> {
+    let v = Json::parse(text).map_err(|e| e.to_string())?;
+    let name = v.get("name").as_str().unwrap_or("custom").to_string();
+    let arr = v
+        .get("layers")
+        .as_arr()
+        .ok_or("workload JSON needs a top-level \"layers\" array")?;
+    if arr.is_empty() {
+        return Err("workload JSON has an empty \"layers\" array".into());
+    }
+    let mut layers = Vec::with_capacity(arr.len());
+    for (i, lj) in arr.iter().enumerate() {
+        let layer = layer_from_json(lj, i)?;
+        layer.validate()?;
+        layers.push(layer);
+    }
+    Ok((name, layers))
+}
+
+/// Serialize a workload into the same JSON schema [`from_json`] reads
+/// (round-trip tested). Useful for exporting the built-ins as templates.
+pub fn to_json(name: &str, layers: &[Layer]) -> Json {
+    let num = |x: u32| Json::Num(x as f64);
+    let arr = layers
+        .iter()
+        .map(|l| {
+            let mut pairs = vec![
+                ("name", Json::Str(l.name.clone())),
+                ("type", Json::Str(l.kind().into())),
+                ("c", num(l.c)),
+            ];
+            match l.kind() {
+                "fc" => pairs.push(("k", num(l.k))),
+                "pw" => {
+                    pairs.push(("k", num(l.k)));
+                    pairs.push(("hw", num(l.hw)));
+                }
+                "dw" => {
+                    pairs.push(("hw", num(l.hw)));
+                    pairs.push(("rs", num(l.rs)));
+                    pairs.push(("stride", num(l.stride)));
+                    pairs.push(("pad", num(l.pad)));
+                }
+                _ => {
+                    pairs.push(("k", num(l.k)));
+                    pairs.push(("hw", num(l.hw)));
+                    pairs.push(("rs", num(l.rs)));
+                    pairs.push(("stride", num(l.stride)));
+                    pairs.push(("pad", num(l.pad)));
+                    pairs.push(("groups", num(l.groups)));
+                }
+            }
+            obj(pairs)
+        })
+        .collect();
+    obj(vec![("name", Json::Str(name.into())), ("layers", Json::Arr(arr))])
+}
+
+fn req_u32(v: &Json, key: &str, what: &str) -> Result<u32, String> {
+    v.get(key)
+        .as_usize()
+        .map(|x| x as u32)
+        .ok_or_else(|| format!("{what}: missing or non-integer field \"{key}\""))
+}
+
+/// Optional field: absent -> default, present-but-malformed -> error (a
+/// string or fractional `stride` must not silently load as the default).
+fn opt_u32(v: &Json, key: &str, default: u32, what: &str) -> Result<u32, String> {
+    match v.get(key) {
+        Json::Null => Ok(default),
+        other => other
+            .as_usize()
+            .map(|x| x as u32)
+            .ok_or_else(|| format!("{what}: field \"{key}\" must be a non-negative integer")),
+    }
+}
+
+fn layer_from_json(v: &Json, idx: usize) -> Result<Layer, String> {
+    let name = v
+        .get("name")
+        .as_str()
+        .map(str::to_string)
+        .unwrap_or_else(|| format!("layer{idx}"));
+    let kind = v.get("type").as_str().unwrap_or("conv");
+    let what = format!("layer {idx} ('{name}')");
+    match kind {
+        "fc" => Ok(Layer::fc(&name, req_u32(v, "c", &what)?, req_u32(v, "k", &what)?)),
+        "pw" => {
+            // pw is dense 1x1 stride 1 by definition: reject fields that
+            // would be silently ignored.
+            if opt_u32(v, "stride", 1, &what)? != 1
+                || opt_u32(v, "pad", 0, &what)? != 0
+                || opt_u32(v, "groups", 1, &what)? != 1
+                || opt_u32(v, "rs", 1, &what)? != 1
+            {
+                return Err(format!(
+                    "{what}: \"pw\" is a dense 1x1 stride-1 conv; use type \"conv\" \
+                     for other strides/kernels/groups"
+                ));
+            }
+            Ok(Layer::pw(
+                &name,
+                req_u32(v, "c", &what)?,
+                req_u32(v, "k", &what)?,
+                req_u32(v, "hw", &what)?,
+            ))
+        }
+        "dw" => {
+            let c = req_u32(v, "c", &what)?;
+            let rs = req_u32(v, "rs", &what)?;
+            // Depthwise pins k = groups = c; an explicit contradicting
+            // value must not be silently overridden.
+            if opt_u32(v, "k", c, &what)? != c || opt_u32(v, "groups", c, &what)? != c {
+                return Err(format!(
+                    "{what}: \"dw\" layers have k = groups = c; use type \"grouped\" \
+                     for other channel connectivities"
+                ));
+            }
+            Ok(Layer::dw(
+                &name,
+                c,
+                req_u32(v, "hw", &what)?,
+                rs,
+                opt_u32(v, "stride", 1, &what)?,
+                opt_u32(v, "pad", rs / 2, &what)?,
+            ))
+        }
+        "conv" | "grouped" => {
+            let rs = req_u32(v, "rs", &what)?;
+            let groups = opt_u32(v, "groups", 1, &what)?;
+            // An explicit "grouped" layer with groups <= 1 is almost
+            // certainly a dropped field — exactly the dense-costing error
+            // this loader exists to prevent. Fail loudly.
+            if kind == "grouped" && groups < 2 {
+                return Err(format!(
+                    "{what}: type \"grouped\" requires \"groups\" >= 2 \
+                     (got {groups}); use type \"conv\" for dense layers"
+                ));
+            }
+            // Built as a struct literal (not Layer::grouped) so bad
+            // divisibility reaches validate() as an error, not a
+            // debug_assert panic.
+            Ok(Layer {
+                name,
+                c: req_u32(v, "c", &what)?,
+                k: req_u32(v, "k", &what)?,
+                hw: req_u32(v, "hw", &what)?,
+                rs,
+                stride: opt_u32(v, "stride", 1, &what)?,
+                pad: opt_u32(v, "pad", rs / 2, &what)?,
+                groups,
+            })
+        }
+        other => Err(format!(
+            "{what}: unknown layer type '{other}' (expected conv|grouped|dw|pw|fc)"
+        )),
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Built-in networks
+// ---------------------------------------------------------------------------
+
+/// VGG-16 (Simonyan & Zisserman 2014): 13 conv + 3 FC, ~15.5 GMACs.
 pub fn vgg16() -> Vec<Layer> {
     let c = |name: &str, cin, cout, hw| Layer::conv(name, cin, cout, hw, hw, 3, 1, 1);
     vec![
@@ -63,7 +285,8 @@ fn bottleneck(layers: &mut Vec<Layer>, name: &str, cin: u32, mid: u32, hw_in: u3
     }
 }
 
-/// ResNet-34 (He et al. 2016): stem + [3,4,6,3] basic blocks + FC.
+/// ResNet-34 (He et al. 2016): stem + [3,4,6,3] basic blocks + FC,
+/// ~3.6 GMACs.
 pub fn resnet34() -> Vec<Layer> {
     let mut l = vec![Layer::conv("stem", 3, 64, 224, 224, 7, 2, 3)];
     // maxpool 3x3/2 -> 56x56 (pooling costs no MACs)
@@ -89,7 +312,8 @@ pub fn resnet34() -> Vec<Layer> {
     l
 }
 
-/// ResNet-50 (He et al. 2016): stem + [3,4,6,3] bottleneck blocks + FC.
+/// ResNet-50 (He et al. 2016): stem + [3,4,6,3] bottleneck blocks + FC,
+/// ~4.1 GMACs.
 pub fn resnet50() -> Vec<Layer> {
     let mut l = vec![Layer::conv("stem", 3, 64, 224, 224, 7, 2, 3)];
     let stages: [(u32, u32, u32, usize); 4] = [
@@ -111,6 +335,91 @@ pub fn resnet50() -> Vec<Layer> {
         }
     }
     l.push(Layer::fc("fc", 2048, 1000));
+    l
+}
+
+/// MobileNetV1 (Howard et al. 2017), width 1.0 at 224x224: conv stem +
+/// 13 depthwise-separable blocks (3x3 dw + 1x1 pw) + FC. ~0.57 GMACs —
+/// the depthwise layers are 13 of 28 layers but only ~3% of the MACs,
+/// which is exactly why costing them as dense convs would be badly wrong.
+pub fn mobilenetv1() -> Vec<Layer> {
+    let mut l = vec![Layer::conv("stem", 3, 32, 224, 224, 3, 2, 1)];
+    // (cin, cout, input hw, dw stride) per separable block.
+    let blocks: [(u32, u32, u32, u32); 13] = [
+        (32, 64, 112, 1),
+        (64, 128, 112, 2),
+        (128, 128, 56, 1),
+        (128, 256, 56, 2),
+        (256, 256, 28, 1),
+        (256, 512, 28, 2),
+        (512, 512, 14, 1),
+        (512, 512, 14, 1),
+        (512, 512, 14, 1),
+        (512, 512, 14, 1),
+        (512, 512, 14, 1),
+        (512, 1024, 14, 2),
+        (1024, 1024, 7, 1),
+    ];
+    for (i, &(cin, cout, hw, stride)) in blocks.iter().enumerate() {
+        let hw_out = if stride == 2 { hw / 2 } else { hw };
+        l.push(Layer::dw(&format!("b{}.dw", i + 1), cin, hw, 3, stride, 1));
+        l.push(Layer::pw(&format!("b{}.pw", i + 1), cin, cout, hw_out));
+    }
+    // global average pool costs no MACs
+    l.push(Layer::fc("fc", 1024, 1000));
+    l
+}
+
+/// One MobileNetV2 inverted-residual block: 1x1 expand (skipped when the
+/// expansion factor is 1), 3x3 depthwise, 1x1 linear projection.
+fn inverted_residual(
+    layers: &mut Vec<Layer>,
+    name: &str,
+    cin: u32,
+    cout: u32,
+    hw: u32,
+    stride: u32,
+    expand: u32,
+) {
+    let mid = cin * expand;
+    let hw_out = if stride == 2 { hw / 2 } else { hw };
+    if expand != 1 {
+        layers.push(Layer::pw(&format!("{name}.expand"), cin, mid, hw));
+    }
+    layers.push(Layer::dw(&format!("{name}.dw"), mid, hw, 3, stride, 1));
+    layers.push(Layer::pw(&format!("{name}.project"), mid, cout, hw_out));
+}
+
+/// MobileNetV2 (Sandler et al. 2018), width 1.0 at 224x224: conv stem +
+/// 17 inverted-residual blocks + 1x1 head + FC. ~0.30 GMACs, matching the
+/// paper's "300M MAdds" (Table 4).
+pub fn mobilenetv2() -> Vec<Layer> {
+    let mut l = vec![Layer::conv("stem", 3, 32, 224, 224, 3, 2, 1)];
+    // (expansion t, output channels c, repeats n, first-block stride s),
+    // straight from the paper's Table 2.
+    let stages: [(u32, u32, u32, u32); 7] = [
+        (1, 16, 1, 1),
+        (6, 24, 2, 2),
+        (6, 32, 3, 2),
+        (6, 64, 4, 2),
+        (6, 96, 3, 1),
+        (6, 160, 3, 2),
+        (6, 320, 1, 1),
+    ];
+    let mut cin = 32u32;
+    let mut hw = 112u32;
+    for (si, &(t, cout, n, s)) in stages.iter().enumerate() {
+        for b in 0..n {
+            let stride = if b == 0 { s } else { 1 };
+            inverted_residual(&mut l, &format!("s{}b{}", si + 1, b + 1), cin, cout, hw, stride, t);
+            if stride == 2 {
+                hw /= 2;
+            }
+            cin = cout;
+        }
+    }
+    l.push(Layer::pw("head", 320, 1280, 7));
+    l.push(Layer::fc("fc", 1280, 1000));
     l
 }
 
@@ -145,6 +454,41 @@ mod tests {
     }
 
     #[test]
+    fn mobilenetv1_macs_match_published() {
+        // MobileNetV1 1.0/224: ~569M MAdds (paper Table 8).
+        let net = mobilenetv1();
+        let g = gmacs(&net);
+        assert!((0.52..0.62).contains(&g), "MobileNetV1 {g} GMACs");
+        // stem + 13 x (dw + pw) + fc
+        assert_eq!(net.len(), 1 + 13 * 2 + 1);
+        assert_eq!(net.iter().filter(|l| l.is_depthwise()).count(), 13);
+    }
+
+    #[test]
+    fn mobilenetv2_macs_match_published() {
+        // MobileNetV2 1.0/224: ~300M MAdds (paper Table 4); per-layer
+        // accounting with stem/head/FC lands ~0.301 G.
+        let net = mobilenetv2();
+        let g = gmacs(&net);
+        assert!((0.27..0.34).contains(&g), "MobileNetV2 {g} GMACs");
+        // stem + (2 + 16*3 block layers) + head + fc
+        assert_eq!(net.len(), 1 + 2 + 16 * 3 + 1 + 1);
+        assert_eq!(net.iter().filter(|l| l.is_depthwise()).count(), 17);
+    }
+
+    #[test]
+    fn mobilenet_depthwise_is_tiny_mac_fraction() {
+        // The MobileNet point: depthwise layers carry almost none of the
+        // MACs. Dense-costing them would inflate the dw share ~c-fold.
+        for net in [mobilenetv1(), mobilenetv2()] {
+            let total: u64 = net.iter().map(|l| l.macs()).sum();
+            let dw: u64 = net.iter().filter(|l| l.is_depthwise()).map(|l| l.macs()).sum();
+            let frac = dw as f64 / total as f64;
+            assert!(frac > 0.0 && frac < 0.10, "dw MAC fraction {frac}");
+        }
+    }
+
+    #[test]
     fn resnet_block_counts() {
         // ResNet-34: stem + (3+4+6+3) blocks x 2 convs + 3 projections + fc
         let n34 = resnet34().len();
@@ -156,10 +500,11 @@ mod tests {
 
     #[test]
     fn spatial_dims_consistent() {
-        for net in [vgg16(), resnet34(), resnet50()] {
-            for l in &net {
+        for name in WORKLOAD_NAMES {
+            for l in &by_name(name).unwrap() {
                 assert!(l.out_hw() > 0, "{} out_hw=0", l.name);
                 assert!(l.macs() > 0, "{} macs=0", l.name);
+                l.validate().unwrap_or_else(|e| panic!("{name}: {e}"));
             }
         }
     }
@@ -169,6 +514,126 @@ mod tests {
         for n in WORKLOAD_NAMES {
             assert!(by_name(n).is_some());
         }
+        assert!(by_name("mobilenet-v2").is_some());
         assert!(by_name("alexnet").is_none());
+    }
+
+    #[test]
+    fn load_resolves_names_and_rejects_unknown_with_listing() {
+        let (name, layers) = load("mobilenetv2").unwrap();
+        assert_eq!(name, "mobilenetv2");
+        assert_eq!(layers.len(), mobilenetv2().len());
+        // alias maps to the canonical name
+        assert_eq!(load("vgg-16").unwrap().0, "vgg16");
+        let err = load("alexnet").unwrap_err();
+        for n in WORKLOAD_NAMES {
+            assert!(err.contains(n), "error should list '{n}': {err}");
+        }
+        assert!(err.contains(".json"), "error should mention JSON: {err}");
+    }
+
+    #[test]
+    fn json_roundtrip_all_builtins() {
+        for name in WORKLOAD_NAMES {
+            let layers = by_name(name).unwrap();
+            let text = to_json(name, &layers).to_string();
+            let (back_name, back) = from_json(&text).unwrap();
+            assert_eq!(back_name, name);
+            assert_eq!(back, layers, "round-trip mismatch for {name}");
+        }
+    }
+
+    #[test]
+    fn from_json_parses_schema_with_defaults() {
+        let text = r#"{
+            "name": "tiny",
+            "layers": [
+                {"name": "stem", "type": "conv", "c": 3, "k": 16, "hw": 32, "rs": 3, "stride": 2},
+                {"type": "dw", "c": 16, "hw": 16, "rs": 3},
+                {"type": "pw", "c": 16, "k": 32, "hw": 16},
+                {"type": "grouped", "c": 32, "k": 32, "hw": 16, "rs": 3, "groups": 4},
+                {"type": "fc", "c": 512, "k": 10}
+            ]
+        }"#;
+        let (name, layers) = from_json(text).unwrap();
+        assert_eq!(name, "tiny");
+        assert_eq!(layers.len(), 5);
+        // conv: pad defaults to rs/2 = 1
+        assert_eq!(layers[0].pad, 1);
+        assert_eq!(layers[0].out_hw(), 16);
+        // dw: groups = c, stride defaults 1, pad defaults rs/2
+        assert!(layers[1].is_depthwise());
+        assert_eq!(layers[1].groups, 16);
+        // unnamed layers get positional names
+        assert_eq!(layers[1].name, "layer1");
+        assert_eq!(layers[3].groups, 4);
+        assert!(layers[4].is_fc());
+    }
+
+    #[test]
+    fn from_json_rejects_malformed() {
+        // not JSON at all
+        assert!(from_json("nope").is_err());
+        // no layers array
+        assert!(from_json(r#"{"name": "x"}"#).is_err());
+        // empty layers
+        assert!(from_json(r#"{"layers": []}"#).is_err());
+        // unknown type
+        let e = from_json(r#"{"layers": [{"type": "pool", "c": 3}]}"#).unwrap_err();
+        assert!(e.contains("pool"), "{e}");
+        // missing required field
+        let e = from_json(r#"{"layers": [{"type": "conv", "c": 3, "hw": 8, "rs": 3}]}"#)
+            .unwrap_err();
+        assert!(e.contains("\"k\""), "{e}");
+        // groups not dividing channels
+        let e = from_json(
+            r#"{"layers": [{"type": "grouped", "c": 10, "k": 8, "hw": 8, "rs": 3, "groups": 3}]}"#,
+        )
+        .unwrap_err();
+        assert!(e.contains("divisible"), "{e}");
+    }
+
+    #[test]
+    fn from_json_is_strict_about_present_fields() {
+        // present-but-malformed optional field must error, not silently
+        // fall back to the default (a string stride would otherwise load
+        // as stride=1 and overstate MACs 4x)
+        let e = from_json(
+            r#"{"layers": [{"type": "conv", "c": 3, "k": 16, "hw": 32, "rs": 3, "stride": "2"}]}"#,
+        )
+        .unwrap_err();
+        assert!(e.contains("\"stride\""), "{e}");
+        // fractional values are not integers
+        assert!(from_json(
+            r#"{"layers": [{"type": "conv", "c": 3, "k": 16, "hw": 32, "rs": 3, "pad": 1.5}]}"#
+        )
+        .is_err());
+        // "grouped" with groups omitted (or 1) is a dropped-field error,
+        // not a silent dense conv
+        let e = from_json(r#"{"layers": [{"type": "grouped", "c": 64, "k": 64, "hw": 8, "rs": 3}]}"#)
+            .unwrap_err();
+        assert!(e.contains("groups"), "{e}");
+        // dw with a contradicting k must not be silently overridden
+        let e = from_json(r#"{"layers": [{"type": "dw", "c": 16, "k": 32, "hw": 8, "rs": 3}]}"#)
+            .unwrap_err();
+        assert!(e.contains("dw"), "{e}");
+        // pw with a stride would be silently ignored -> error
+        assert!(from_json(
+            r#"{"layers": [{"type": "pw", "c": 16, "k": 32, "hw": 8, "stride": 2}]}"#
+        )
+        .is_err());
+    }
+
+    #[test]
+    fn grouped_1x1_at_unit_hw_round_trips_with_groups() {
+        // kind() must classify grouped layers before fc, or a grouped 1x1
+        // layer at hw=1 would serialize as dense fc and round-trip to a
+        // model with groups-times the MACs.
+        let l = Layer::grouped("g", 64, 64, 1, 1, 1, 0, 64);
+        assert_eq!(l.kind(), "dw");
+        let text = to_json("t", std::slice::from_ref(&l)).to_string();
+        let (_, back) = from_json(&text).unwrap();
+        assert_eq!(back[0].groups, 64);
+        assert_eq!(back[0].macs(), l.macs());
     }
 }

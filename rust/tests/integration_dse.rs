@@ -106,3 +106,36 @@ fn int16_anchor_ratio_is_identity() {
     let (pa, _e) = res.ratios[&PeType::Int16];
     assert!((pa - 1.0).abs() < 1e-9);
 }
+
+#[test]
+fn dse_runs_on_json_workload_file_end_to_end() {
+    // The `qappa explore --workload model.json` path: write a small
+    // depthwise-separable model to disk, load it through workloads::load,
+    // and run the full DSE pipeline on it.
+    let text = r#"{
+        "name": "json-tiny",
+        "layers": [
+            {"name": "stem", "type": "conv", "c": 3, "k": 16, "hw": 32, "rs": 3, "stride": 2, "pad": 1},
+            {"name": "dw", "type": "dw", "c": 16, "hw": 16, "rs": 3},
+            {"name": "pw", "type": "pw", "c": 16, "k": 32, "hw": 16},
+            {"name": "fc", "type": "fc", "c": 512, "k": 10}
+        ]
+    }"#;
+    let path = std::env::temp_dir().join("qappa_test_workload.json");
+    std::fs::write(&path, text).expect("write temp workload");
+    let (name, layers) = qappa::workloads::load(path.to_str().unwrap()).expect("load json");
+    assert_eq!(name, "json-tiny");
+    assert_eq!(layers.len(), 4);
+    assert!(layers[1].is_depthwise());
+
+    let native = NativeBackend::new(7);
+    let res = run_dse(&native, &layers, &name, &opts()).expect("dse over json workload");
+    assert_eq!(res.workload, "json-tiny");
+    for ty in ALL_PE_TYPES {
+        assert!(!res.points[&ty].is_empty());
+        for p in &res.points[&ty] {
+            assert!(p.throughput > 0.0 && p.energy_mj > 0.0);
+        }
+    }
+    std::fs::remove_file(&path).ok();
+}

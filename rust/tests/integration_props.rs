@@ -8,28 +8,9 @@ use qappa::config::{AcceleratorConfig, PeType};
 use qappa::dataflow::{evaluate_network, layer_traffic, map_layer, Layer};
 use qappa::model::features::Standardizer;
 use qappa::synth::oracle::{energy_params, synthesize, synthesize_clean};
-use qappa::testkit::{forall, gen_config, gen_u32};
+use qappa::testkit::{forall, gen_config, gen_layer, gen_u32};
 use qappa::util::json::Json;
 use qappa::util::prng::Rng;
-
-fn gen_layer(rng: &mut Rng) -> Layer {
-    if rng.f64() < 0.25 {
-        Layer::fc("fc", gen_u32(rng, 8, 4096), gen_u32(rng, 8, 4096))
-    } else {
-        let rs = *rng.choice(&[1u32, 3, 5, 7]);
-        let hw = gen_u32(rng, 7, 64).max(rs);
-        Layer::conv(
-            "conv",
-            gen_u32(rng, 1, 256),
-            gen_u32(rng, 1, 256),
-            hw,
-            hw,
-            rs,
-            *rng.choice(&[1u32, 2]),
-            rs / 2,
-        )
-    }
-}
 
 #[test]
 fn prop_oracle_deterministic_and_positive() {
@@ -90,6 +71,29 @@ fn prop_dataflow_work_conserved() {
             Ok(())
         },
     );
+}
+
+#[test]
+fn prop_grouped_macs_are_dense_over_groups() {
+    // The grouped-conv invariant: a layer's MAC and filter volume are
+    // exactly 1/groups of the dense layer with the same shape (so
+    // depthwise = dense / Cin).
+    forall("grouped macs = dense / groups", 200, 12, gen_layer, |layer| {
+        let mut dense = layer.clone();
+        dense.groups = 1;
+        if layer.macs() * layer.groups as u64 != dense.macs() {
+            return Err(format!(
+                "macs {} * groups {} != dense {}",
+                layer.macs(),
+                layer.groups,
+                dense.macs()
+            ));
+        }
+        if layer.filter_elems() * layer.groups as u64 != dense.filter_elems() {
+            return Err("filter volume not 1/groups of dense".into());
+        }
+        Ok(())
+    });
 }
 
 #[test]

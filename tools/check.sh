@@ -1,0 +1,24 @@
+#!/usr/bin/env bash
+# Pre-PR gate: build, test, format and doc checks (referenced from README).
+# Usage: tools/check.sh [--no-doc]
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+run() {
+    echo "==> $*"
+    "$@"
+}
+
+run cargo build --release
+run cargo test -q
+# fmt/doc are advisory in environments without the components installed
+if cargo fmt --version >/dev/null 2>&1; then
+    run cargo fmt --check
+else
+    echo "==> cargo fmt unavailable; skipping format check"
+fi
+if [ "${1:-}" != "--no-doc" ]; then
+    run cargo doc --no-deps
+fi
+
+echo "OK: all checks passed"
