@@ -1,0 +1,59 @@
+//! Bench: streaming sweep throughput (evaluated configs/sec) vs shard size.
+//!
+//! Sweeps the full paper-scale INT16 grid through the `SweepEngine` at
+//! chunk sizes {256, 1k, 4k} and against the eager baseline (one
+//! whole-grid shard), recording throughput and the peak resident point
+//! count — the speed/memory trade the streaming refactor buys.
+#[path = "common.rs"]
+mod common;
+
+use qappa::config::PeType;
+use qappa::coordinator::sweep::{NamedWorkload, SweepEngine};
+use qappa::coordinator::{DseOptions, ModelStore};
+use qappa::dataflow::Layer;
+use qappa::util::bench::Bench;
+
+fn main() {
+    let backend = common::AnyBackend::auto();
+    let mut opts = DseOptions::default();
+    opts.train_per_type = 192;
+    let store = ModelStore::new();
+    let model = store
+        .get_or_train(backend.get(), &opts, PeType::Int16)
+        .expect("train INT16 model");
+    let wl = vec![NamedWorkload::new(
+        "conv-stack",
+        vec![
+            Layer::conv("c1", 64, 64, 56, 56, 3, 1, 1),
+            Layer::conv("c2", 64, 128, 28, 28, 3, 1, 1),
+        ],
+    )];
+
+    println!(
+        "=== sweep throughput: {} configs (INT16), backend={} ===",
+        opts.space.len(),
+        backend.get().name()
+    );
+    for chunk in [0usize, 256, 1024, 4096] {
+        let mut o = opts.clone();
+        o.chunk = chunk;
+        let label = if chunk == 0 {
+            "eager(whole-grid shard)".to_string()
+        } else {
+            format!("chunk={chunk}")
+        };
+        let mut peak = 0usize;
+        Bench::new(&format!("sweep/{label}"))
+            .warmup(1)
+            .samples(5)
+            .run_with_units(o.space.len() as f64, "configs", || {
+                let ts = SweepEngine::new(backend.get(), &o)
+                    .sweep_type(&model, PeType::Int16, &wl)
+                    .expect("sweep")
+                    .remove(0);
+                peak = ts.stats.peak_resident;
+            })
+            .print();
+        println!("  peak resident points: {peak}");
+    }
+}

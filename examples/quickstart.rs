@@ -67,6 +67,7 @@ fn main() {
         seed: 42,
         workers: 4,
         sigma: 0.03,
+        ..DseOptions::default()
     };
 
     println!(

@@ -1,14 +1,34 @@
 //! The end-to-end DSE pipeline (paper §4).
+//!
+//! `run_dse` is a thin composition of three pieces:
+//!
+//! * a [`ModelStore`] — PPA models cached by (PE type, space hash, training
+//!   recipe), so one training pass is shared across workloads and repeat
+//!   runs;
+//! * the streaming [`SweepEngine`] (`coordinator::sweep`) — shards of the
+//!   lazy space cursor pipelined through predict -> dataflow-eval with an
+//!   incremental Pareto frontier and top-k reservoirs;
+//! * ratio/validation reporting — the paper's anchor-normalized ratios,
+//!   plus the honest post-selection numbers from re-synthesizing winners.
+//!
+//! [`run_dse_multi`] evaluates many networks in one pass over the grid:
+//! each shard is predicted once per PE type and folded into per-workload
+//! accumulators.
 
 use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex};
 
 use crate::config::{AcceleratorConfig, PeType, ALL_PE_TYPES};
-use crate::coordinator::pareto::pareto_frontier;
 use crate::coordinator::space::DesignSpace;
-use crate::dataflow::{evaluate_network, Layer};
-use crate::model::{fit_ppa, predict_ppa, Backend, CvConfig, PpaModel};
-use crate::synth::oracle::{energy_params, synthesize_with_sigma, Ppa, JITTER_SIGMA};
+use crate::coordinator::sweep::{
+    eval_point, trace, NamedWorkload, SweepEngine, SweepStats, TypeSweep,
+};
+use crate::dataflow::Layer;
+use crate::model::{fit_ppa, Backend, CvConfig, PpaModel};
+use crate::synth::oracle::{synthesize_with_sigma, Ppa, JITTER_SIGMA};
 use crate::util::pool::{default_workers, parallel_map};
+use crate::util::prng::hash64;
 
 /// Options for one DSE run.
 #[derive(Debug, Clone)]
@@ -21,6 +41,10 @@ pub struct DseOptions {
     pub workers: usize,
     /// Synthesis jitter sigma (ablation hook).
     pub sigma: f64,
+    /// Sweep shard size; 0 = whole grid in one shard (eager-equivalent).
+    pub chunk: usize,
+    /// Reservoir depth for the best-perf/area and best-energy top-k sets.
+    pub topk: usize,
 }
 
 impl Default for DseOptions {
@@ -32,6 +56,8 @@ impl Default for DseOptions {
             seed: 42,
             workers: default_workers(),
             sigma: JITTER_SIGMA,
+            chunk: 1024,
+            topk: 8,
         }
     }
 }
@@ -70,127 +96,166 @@ pub struct DseResult {
     /// is optimistically biased (winner's curse); these are the honest
     /// post-selection numbers EXPERIMENTS.md reports.
     pub ratios_validated: BTreeMap<PeType, (f64, f64)>,
+    /// Per-type sweep counters (evaluated points, shards, peak resident).
+    pub stats: BTreeMap<PeType, SweepStats>,
 }
 
-/// Train one PPA model per PE type from oracle data.
-/// Phase-timing hook: set `QAPPA_TRACE=1` to print per-phase wall times.
-fn trace(phase: &str, t0: std::time::Instant) {
-    if std::env::var_os("QAPPA_TRACE").is_some() {
-        eprintln!("[trace] {phase}: {:.1} ms", t0.elapsed().as_secs_f64() * 1e3);
+/// Streaming result of one workload inside a multi-workload run: only the
+/// frontier, the reservoirs and the ratio summary are retained —
+/// O(frontier + k) points instead of O(grid).
+pub struct WorkloadSummary {
+    pub workload: String,
+    /// Pareto frontier points per type, grid order.
+    pub frontier: BTreeMap<PeType, Vec<DsePoint>>,
+    /// Best-perf/area reservoir per type, best-first.
+    pub top_perf_per_area: BTreeMap<PeType, Vec<DsePoint>>,
+    /// Best-energy reservoir per type, best-first.
+    pub top_energy: BTreeMap<PeType, Vec<DsePoint>>,
+    pub anchor: DsePoint,
+    pub ratios: BTreeMap<PeType, (f64, f64)>,
+    pub ratios_validated: BTreeMap<PeType, (f64, f64)>,
+    pub stats: BTreeMap<PeType, SweepStats>,
+}
+
+// ---------------------------------------------------------------------------
+// model store
+// ---------------------------------------------------------------------------
+
+/// Cache of trained PPA models keyed by (PE type, training recipe hash).
+///
+/// The hash covers everything that determines the fitted model: the design
+/// space ([`DesignSpace::space_hash`]), `train_per_type`, the DSE seed, the
+/// jitter sigma, the CV grid, and the backend.  One store shared across
+/// workloads / repeat runs means each PE-type model is trained exactly
+/// once — hit/miss counters make that assertable.
+#[derive(Default)]
+pub struct ModelStore {
+    entries: Mutex<BTreeMap<(PeType, u64), Arc<PpaModel>>>,
+    hits: AtomicUsize,
+    misses: AtomicUsize,
+}
+
+impl ModelStore {
+    pub fn new() -> ModelStore {
+        ModelStore::default()
+    }
+
+    fn recipe_hash(backend: &dyn Backend, opts: &DseOptions) -> u64 {
+        let mut s = format!(
+            "{:x}|{}|{}|{:x}|{}|{}|{:x}",
+            opts.space.space_hash(),
+            opts.train_per_type,
+            opts.seed,
+            opts.sigma.to_bits(),
+            backend.name(),
+            opts.cv.k,
+            opts.cv.seed,
+        );
+        for d in &opts.cv.degrees {
+            s.push_str(&format!("d{d}"));
+        }
+        for l in &opts.cv.lambdas {
+            s.push_str(&format!("l{:x}", l.to_bits()));
+        }
+        hash64(s.as_bytes())
+    }
+
+    /// Return the cached model for `ty`, training it on a miss.
+    pub fn get_or_train(
+        &self,
+        backend: &dyn Backend,
+        opts: &DseOptions,
+        ty: PeType,
+    ) -> Result<Arc<PpaModel>, String> {
+        let key = (ty, Self::recipe_hash(backend, opts));
+        if let Some(m) = self.entries.lock().unwrap().get(&key) {
+            self.hits.fetch_add(1, Ordering::Relaxed);
+            return Ok(m.clone());
+        }
+        self.misses.fetch_add(1, Ordering::Relaxed);
+        let model = Arc::new(train_one_model(backend, opts, ty)?);
+        self.entries.lock().unwrap().insert(key, model.clone());
+        Ok(model)
+    }
+
+    /// Cache hits so far (a hit = one avoided training pass).
+    pub fn hits(&self) -> usize {
+        self.hits.load(Ordering::Relaxed)
+    }
+
+    /// Cache misses so far (= training passes actually run).
+    pub fn misses(&self) -> usize {
+        self.misses.load(Ordering::Relaxed)
+    }
+
+    /// Distinct models resident in the store.
+    pub fn len(&self) -> usize {
+        self.entries.lock().unwrap().len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
     }
 }
 
+/// Train the PPA model of one PE type from oracle data.
+pub fn train_one_model(
+    backend: &dyn Backend,
+    opts: &DseOptions,
+    ty: PeType,
+) -> Result<PpaModel, String> {
+    let t0 = std::time::Instant::now();
+    let cfgs = opts.space.sample(ty, opts.train_per_type, opts.seed);
+    let ppas: Vec<Ppa> = parallel_map(&cfgs, opts.workers, |c| {
+        synthesize_with_sigma(c, opts.sigma)
+    });
+    trace(&format!("train/{}/synth({})", ty.label(), cfgs.len()), t0);
+    let mut feats = Vec::with_capacity(cfgs.len() * 7);
+    let mut targets = Vec::with_capacity(cfgs.len() * 3);
+    for (c, p) in cfgs.iter().zip(&ppas) {
+        feats.extend_from_slice(&c.features());
+        targets.extend_from_slice(&p.as_array());
+    }
+    let t1 = std::time::Instant::now();
+    let model = fit_ppa(backend, &feats, &targets, &opts.cv)
+        .map_err(|e| format!("{}: {e}", ty.label()))?;
+    trace(&format!("train/{}/cv_fit", ty.label()), t1);
+    Ok(model)
+}
+
+/// Train one PPA model per PE type from oracle data.
 pub fn train_models(
     backend: &dyn Backend,
     opts: &DseOptions,
 ) -> Result<BTreeMap<PeType, PpaModel>, String> {
     let mut models = BTreeMap::new();
     for ty in ALL_PE_TYPES {
-        let t0 = std::time::Instant::now();
-        let cfgs = opts.space.sample(ty, opts.train_per_type, opts.seed);
-        let ppas: Vec<Ppa> = parallel_map(&cfgs, opts.workers, |c| {
-            synthesize_with_sigma(c, opts.sigma)
-        });
-        trace(&format!("train/{}/synth({})", ty.label(), cfgs.len()), t0);
-        let mut feats = Vec::with_capacity(cfgs.len() * 7);
-        let mut targets = Vec::with_capacity(cfgs.len() * 3);
-        for (c, p) in cfgs.iter().zip(&ppas) {
-            feats.extend_from_slice(&c.features());
-            targets.extend_from_slice(&p.as_array());
-        }
-        let t1 = std::time::Instant::now();
-        let model = fit_ppa(backend, &feats, &targets, &opts.cv)
-            .map_err(|e| format!("{}: {e}", ty.label()))?;
-        trace(&format!("train/{}/cv_fit", ty.label()), t1);
-        models.insert(ty, model);
+        models.insert(ty, train_one_model(backend, opts, ty)?);
     }
     Ok(models)
 }
 
-/// Evaluate one predicted config on the workload.
-fn eval_point(cfg: &AcceleratorConfig, ppa: Ppa, layers: &[Layer]) -> DsePoint {
-    // Energy coefficients are structural (jitter-free); the clock the
-    // dataflow runs at is the *predicted* fmax, and energy uses the
-    // *predicted* power — the regression models drive the DSE.
-    let mut ep = energy_params(cfg);
-    ep.fmax_mhz = ppa.fmax_mhz.max(1.0);
-    let cost = evaluate_network(cfg, &ep, layers);
-    let throughput = 1.0 / cost.latency_s.max(1e-12);
-    let energy_mj = ppa.power_mw * cost.latency_s; // mW x s = mJ
-    DsePoint {
-        cfg: *cfg,
-        ppa,
-        throughput,
-        perf_per_area: throughput / ppa.area_mm2.max(1e-9),
-        energy_mj,
-        utilization: cost.avg_utilization,
-    }
-}
+// ---------------------------------------------------------------------------
+// ratio assembly (shared by the eager-compatible and streaming paths)
+// ---------------------------------------------------------------------------
 
-/// Full pipeline: train models, sweep the space, evaluate the workload,
-/// extract frontiers and the paper's ratios.
-pub fn run_dse(
-    backend: &dyn Backend,
+/// The paper's anchor-normalized ratios for one workload, from each type's
+/// best points: predicted, and validated by re-synthesizing the winners.
+fn assemble_ratios(
     layers: &[Layer],
-    workload: &str,
-    opts: &DseOptions,
-) -> Result<DseResult, String> {
-    let models = train_models(backend, opts)?;
-
-    let mut points = BTreeMap::new();
-    for ty in ALL_PE_TYPES {
-        let cfgs = opts.space.enumerate(ty);
-        let model = &models[&ty];
-        // Batched prediction over the whole grid (engine tiles to B=256).
-        let mut feats = Vec::with_capacity(cfgs.len() * 7);
-        for c in &cfgs {
-            feats.extend_from_slice(&c.features());
-        }
-        let t0 = std::time::Instant::now();
-        let preds = predict_ppa(backend, model, &feats)?;
-        trace(&format!("sweep/{}/predict({})", ty.label(), preds.len()), t0);
-        // Workload evaluation in parallel.
-        let items: Vec<(AcceleratorConfig, [f64; 3])> =
-            cfgs.into_iter().zip(preds).collect();
-        let t1 = std::time::Instant::now();
-        let pts: Vec<DsePoint> = parallel_map(&items, opts.workers, |(cfg, ppa)| {
-            eval_point(cfg, Ppa::from_array(*ppa), layers)
-        });
-        trace(&format!("sweep/{}/dataflow({})", ty.label(), pts.len()), t1);
-        points.insert(ty, pts);
-    }
-
-    // Anchor: best-perf/area INT16 point.
-    let int16 = &points[&PeType::Int16];
-    let anchor = int16
-        .iter()
-        .max_by(|a, b| a.perf_per_area.partial_cmp(&b.perf_per_area).unwrap())
-        .ok_or("empty INT16 space")?
-        .clone();
-
+    sigma: f64,
+    anchor: &DsePoint,
+    best: &BTreeMap<PeType, (DsePoint, DsePoint)>, // (best perf/area, best energy)
+) -> (BTreeMap<PeType, (f64, f64)>, BTreeMap<PeType, (f64, f64)>) {
     // Ground-truth re-evaluation of the anchor for validated ratios.
     let anchor_true = eval_point(
         &anchor.cfg,
-        synthesize_with_sigma(&anchor.cfg, opts.sigma),
+        synthesize_with_sigma(&anchor.cfg, sigma),
         layers,
     );
-
-    let mut frontier = BTreeMap::new();
     let mut ratios = BTreeMap::new();
     let mut ratios_validated = BTreeMap::new();
-    for ty in ALL_PE_TYPES {
-        let pts = &points[&ty];
-        let pairs: Vec<(f64, f64)> =
-            pts.iter().map(|p| (p.perf_per_area, p.energy_mj)).collect();
-        frontier.insert(ty, pareto_frontier(&pairs));
-        let best_pa_pt = pts
-            .iter()
-            .max_by(|a, b| a.perf_per_area.partial_cmp(&b.perf_per_area).unwrap())
-            .ok_or("empty space")?;
-        let best_e_pt = pts
-            .iter()
-            .min_by(|a, b| a.energy_mj.partial_cmp(&b.energy_mj).unwrap())
-            .ok_or("empty space")?;
+    for (&ty, (best_pa_pt, best_e_pt)) in best {
         ratios.insert(
             ty,
             (
@@ -201,12 +266,12 @@ pub fn run_dse(
         // Winner validation: synthesize the chosen configs for real.
         let pa_true = eval_point(
             &best_pa_pt.cfg,
-            synthesize_with_sigma(&best_pa_pt.cfg, opts.sigma),
+            synthesize_with_sigma(&best_pa_pt.cfg, sigma),
             layers,
         );
         let e_true = eval_point(
             &best_e_pt.cfg,
-            synthesize_with_sigma(&best_e_pt.cfg, opts.sigma),
+            synthesize_with_sigma(&best_e_pt.cfg, sigma),
             layers,
         );
         ratios_validated.insert(
@@ -217,6 +282,80 @@ pub fn run_dse(
             ),
         );
     }
+    (ratios, ratios_validated)
+}
+
+/// Pull each type's (best perf/area, best energy) points out of its sweep.
+fn best_points(
+    sweeps: &BTreeMap<PeType, TypeSweep>,
+) -> Result<BTreeMap<PeType, (DsePoint, DsePoint)>, String> {
+    let mut best = BTreeMap::new();
+    for (&ty, ts) in sweeps {
+        let pa = ts
+            .best_perf_per_area()
+            .ok_or_else(|| format!("empty {} space", ty.label()))?;
+        let e = ts
+            .best_energy()
+            .ok_or_else(|| format!("empty {} space", ty.label()))?;
+        best.insert(ty, (pa.clone(), e.clone()));
+    }
+    Ok(best)
+}
+
+// ---------------------------------------------------------------------------
+// DSE entry points
+// ---------------------------------------------------------------------------
+
+/// Full pipeline: train models, sweep the space, evaluate the workload,
+/// extract frontiers and the paper's ratios.
+pub fn run_dse(
+    backend: &dyn Backend,
+    layers: &[Layer],
+    workload: &str,
+    opts: &DseOptions,
+) -> Result<DseResult, String> {
+    let store = ModelStore::new();
+    run_dse_with_store(backend, &store, layers, workload, opts)
+}
+
+/// Like [`run_dse`], sharing a [`ModelStore`] so repeat runs over the same
+/// space/recipe skip retraining.
+pub fn run_dse_with_store(
+    backend: &dyn Backend,
+    store: &ModelStore,
+    layers: &[Layer],
+    workload: &str,
+    opts: &DseOptions,
+) -> Result<DseResult, String> {
+    let named = [NamedWorkload::new(workload, layers.to_vec())];
+    let engine = SweepEngine::new(backend, opts).retain_all(true);
+
+    let mut models = BTreeMap::new();
+    let mut sweeps = BTreeMap::new();
+    for ty in ALL_PE_TYPES {
+        let model = store.get_or_train(backend, opts, ty)?;
+        let ts = engine.sweep_type(&model, ty, &named)?.remove(0);
+        models.insert(ty, (*model).clone());
+        sweeps.insert(ty, ts);
+    }
+
+    let best = best_points(&sweeps)?;
+    let anchor = best
+        .get(&PeType::Int16)
+        .ok_or("empty INT16 space")?
+        .0
+        .clone();
+    let (ratios, ratios_validated) =
+        assemble_ratios(layers, opts.sigma, &anchor, &best);
+
+    let mut points = BTreeMap::new();
+    let mut frontier = BTreeMap::new();
+    let mut stats = BTreeMap::new();
+    for (ty, ts) in sweeps {
+        frontier.insert(ty, ts.frontier_indices());
+        stats.insert(ty, ts.stats);
+        points.insert(ty, ts.points.expect("retain_all sweep keeps points"));
+    }
 
     Ok(DseResult {
         workload: workload.to_string(),
@@ -226,7 +365,67 @@ pub fn run_dse(
         anchor,
         ratios,
         ratios_validated,
+        stats,
     })
+}
+
+/// Evaluate many workloads in one streaming pass over the grid: each shard
+/// is predicted once per PE type and folded into every workload's frontier
+/// and reservoirs.  Models come from `store`, so with a fresh store exactly
+/// one training pass runs per PE type no matter how many workloads.
+pub fn run_dse_multi(
+    backend: &dyn Backend,
+    store: &ModelStore,
+    workloads: &[NamedWorkload],
+    opts: &DseOptions,
+) -> Result<Vec<WorkloadSummary>, String> {
+    if workloads.is_empty() {
+        return Err("run_dse_multi: no workloads given".into());
+    }
+    let engine = SweepEngine::new(backend, opts);
+
+    // per_wl[w][ty] = TypeSweep
+    let mut per_wl: Vec<BTreeMap<PeType, TypeSweep>> =
+        workloads.iter().map(|_| BTreeMap::new()).collect();
+    for ty in ALL_PE_TYPES {
+        let model = store.get_or_train(backend, opts, ty)?;
+        for (w, ts) in engine.sweep_type(&model, ty, workloads)?.into_iter().enumerate() {
+            per_wl[w].insert(ty, ts);
+        }
+    }
+
+    let mut out = Vec::with_capacity(workloads.len());
+    for (wl, sweeps) in workloads.iter().zip(per_wl) {
+        let best = best_points(&sweeps)?;
+        let anchor = best
+            .get(&PeType::Int16)
+            .ok_or("empty INT16 space")?
+            .0
+            .clone();
+        let (ratios, ratios_validated) =
+            assemble_ratios(&wl.layers, opts.sigma, &anchor, &best);
+        let mut frontier = BTreeMap::new();
+        let mut top_pa = BTreeMap::new();
+        let mut top_e = BTreeMap::new();
+        let mut stats = BTreeMap::new();
+        for (ty, ts) in sweeps {
+            frontier.insert(ty, ts.frontier_points());
+            stats.insert(ty, ts.stats);
+            top_pa.insert(ty, ts.top_perf_per_area);
+            top_e.insert(ty, ts.top_energy);
+        }
+        out.push(WorkloadSummary {
+            workload: wl.name.clone(),
+            frontier,
+            top_perf_per_area: top_pa,
+            top_energy: top_e,
+            anchor,
+            ratios,
+            ratios_validated,
+            stats,
+        });
+    }
+    Ok(out)
 }
 
 #[cfg(test)]
@@ -243,6 +442,8 @@ mod tests {
             seed: 7,
             workers: 4,
             sigma: 0.02,
+            chunk: 1024,
+            topk: 8,
         }
     }
 
@@ -267,6 +468,7 @@ mod tests {
                 assert!(p.ppa.area_mm2 > 0.0);
             }
             assert!(!res.frontier[&ty].is_empty());
+            assert_eq!(res.stats[&ty].evaluated, tiny_opts().space.len());
         }
         // anchor is an INT16 point with the max perf/area
         let int16 = &res.points[&PeType::Int16];
@@ -300,7 +502,7 @@ mod tests {
             for c in &cfgs {
                 feats.extend_from_slice(&c.features());
             }
-            let preds = predict_ppa(&backend, &models[&ty], &feats).unwrap();
+            let preds = crate::model::predict_ppa(&backend, &models[&ty], &feats).unwrap();
             let mut rel_err = 0.0;
             for (c, pred) in cfgs.iter().zip(&preds) {
                 let truth = synthesize_with_sigma(c, opts.sigma).as_array();
@@ -350,6 +552,107 @@ mod tests {
                 assert!(p.throughput > 0.0 && p.energy_mj > 0.0, "{ty:?}");
             }
             assert!(!res.frontier[&ty].is_empty());
+        }
+    }
+
+    #[test]
+    fn eager_and_streaming_chunks_are_bit_identical() {
+        // Acceptance: anchor config, frontier membership and ratios must be
+        // bit-identical between the eager shim path (one whole-grid shard)
+        // and fine-grained streaming shards.
+        let backend = NativeBackend::new(7);
+        let mut eager = tiny_opts();
+        eager.chunk = 0;
+        let mut streaming = tiny_opts();
+        streaming.chunk = 7;
+        let a = run_dse(&backend, &small_net(), "tiny", &eager).unwrap();
+        let b = run_dse(&backend, &small_net(), "tiny", &streaming).unwrap();
+        assert_eq!(a.anchor.cfg, b.anchor.cfg);
+        assert_eq!(a.anchor.perf_per_area, b.anchor.perf_per_area);
+        for ty in ALL_PE_TYPES {
+            assert_eq!(a.frontier[&ty], b.frontier[&ty], "{ty:?} frontier");
+            assert_eq!(a.ratios[&ty], b.ratios[&ty], "{ty:?} ratios");
+            assert_eq!(
+                a.ratios_validated[&ty], b.ratios_validated[&ty],
+                "{ty:?} validated ratios"
+            );
+            let pa_a: Vec<f64> = a.points[&ty].iter().map(|p| p.perf_per_area).collect();
+            let pa_b: Vec<f64> = b.points[&ty].iter().map(|p| p.perf_per_area).collect();
+            assert_eq!(pa_a, pa_b, "{ty:?} points");
+        }
+    }
+
+    #[test]
+    fn model_store_trains_once_per_recipe() {
+        let backend = NativeBackend::new(7);
+        let opts = tiny_opts();
+        let store = ModelStore::new();
+        let layers = small_net();
+        run_dse_with_store(&backend, &store, &layers, "a", &opts).unwrap();
+        assert_eq!(store.misses(), 4, "one training pass per PE type");
+        assert_eq!(store.hits(), 0);
+        // second run over the same recipe: all hits, identical result
+        let r2 = run_dse_with_store(&backend, &store, &layers, "b", &opts).unwrap();
+        assert_eq!(store.misses(), 4);
+        assert_eq!(store.hits(), 4);
+        assert_eq!(store.len(), 4);
+        // a different recipe (seed) retrains
+        let mut opts2 = opts.clone();
+        opts2.seed ^= 1;
+        run_dse_with_store(&backend, &store, &layers, "c", &opts2).unwrap();
+        assert_eq!(store.misses(), 8);
+        assert_eq!(r2.workload, "b");
+    }
+
+    #[test]
+    fn multi_workload_run_shares_one_training_pass() {
+        let backend = NativeBackend::new(7);
+        let mut opts = tiny_opts();
+        opts.chunk = 16;
+        let store = ModelStore::new();
+        let named = vec![
+            NamedWorkload::new("a", small_net()),
+            NamedWorkload::new("b", vec![Layer::conv("c", 8, 16, 16, 16, 3, 1, 1)]),
+            NamedWorkload::new("c", workloads::mobilenetv2()[..4].to_vec()),
+        ];
+        let summaries = run_dse_multi(&backend, &store, &named, &opts).unwrap();
+        assert_eq!(store.misses(), 4, "each PE-type model trained exactly once");
+        assert_eq!(store.hits(), 0);
+        assert_eq!(summaries.len(), 3);
+        for s in &summaries {
+            assert!((s.ratios[&PeType::Int16].0 - 1.0).abs() < 1e-9);
+            for ty in ALL_PE_TYPES {
+                assert!(!s.frontier[&ty].is_empty());
+                assert_eq!(s.stats[&ty].evaluated, opts.space.len());
+                assert!(!s.top_perf_per_area[&ty].is_empty());
+                assert!(!s.top_energy[&ty].is_empty());
+            }
+        }
+    }
+
+    #[test]
+    fn multi_matches_single_workload_results() {
+        // The streaming multi-workload path must agree with the retained
+        // single-workload path on anchor and ratios.
+        let backend = NativeBackend::new(7);
+        let mut opts = tiny_opts();
+        opts.chunk = 16;
+        let layers = small_net();
+        let single = run_dse(&backend, &layers, "t", &opts).unwrap();
+        let store = ModelStore::new();
+        let named = vec![NamedWorkload::new("t", layers)];
+        let multi = run_dse_multi(&backend, &store, &named, &opts)
+            .unwrap()
+            .remove(0);
+        assert_eq!(single.anchor.cfg, multi.anchor.cfg);
+        for ty in ALL_PE_TYPES {
+            assert_eq!(single.ratios[&ty], multi.ratios[&ty]);
+            assert_eq!(single.ratios_validated[&ty], multi.ratios_validated[&ty]);
+            assert_eq!(
+                single.frontier[&ty].len(),
+                multi.frontier[&ty].len(),
+                "{ty:?} frontier size"
+            );
         }
     }
 }

@@ -1,23 +1,33 @@
 //! The DSE coordinator — QAPPA's workflow engine.
 //!
-//! Pipeline (one call to [`explorer::run_dse`]):
+//! Pipeline (one call to [`explorer::run_dse`] / [`explorer::run_dse_multi`]):
 //!
-//! 1. sample a training set per PE type and run the synthesis-oracle fleet
-//!    over it (thread pool);
-//! 2. fit a PPA model per PE type with k-fold CV (degree x lambda), through
-//!    either the native backend or the AOT-artifact engine;
-//! 3. predict PPA over the *full* design-space grid (batched through the
-//!    runtime engine — this is the framework's raison d'être: the oracle
-//!    takes ~ms per config, the model ~µs);
-//! 4. evaluate every predicted config on the workload with the
-//!    row-stationary dataflow model;
-//! 5. extract Pareto frontiers and the paper's normalized ratios.
+//! 1. fetch each PE type's PPA model from the [`explorer::ModelStore`] —
+//!    on a miss, sample a training set, run the synthesis-oracle fleet over
+//!    it (thread pool) and fit with k-fold CV (degree x lambda), through
+//!    either the native backend or the AOT-artifact engine; one training
+//!    pass is shared across workloads and repeat runs;
+//! 2. stream the design-space grid through the [`sweep::SweepEngine`]:
+//!    the lazy [`space::SpaceIter`] cursor yields fixed-size config shards,
+//!    each shard is batch-predicted (the framework's raison d'être: the
+//!    oracle takes ~ms per config, the model ~µs) and evaluated on every
+//!    workload with the row-stationary dataflow model;
+//! 3. fold each shard into an incremental Pareto frontier and top-k
+//!    reservoirs per (PE type, workload) — a streaming run retains
+//!    O(frontier + k) points instead of O(grid);
+//! 4. report the paper's normalized ratios, validated by re-synthesizing
+//!    the winning configs.
 
 pub mod explorer;
 pub mod pareto;
 pub mod report;
 pub mod space;
+pub mod sweep;
 
-pub use explorer::{run_dse, DseOptions, DsePoint, DseResult};
-pub use pareto::pareto_frontier;
+pub use explorer::{
+    run_dse, run_dse_multi, run_dse_with_store, DseOptions, DsePoint, DseResult,
+    ModelStore, WorkloadSummary,
+};
+pub use pareto::{pareto_frontier, IncrementalFrontier};
 pub use space::DesignSpace;
+pub use sweep::{NamedWorkload, SweepEngine, SweepStats};

@@ -3,15 +3,21 @@
 /// Return the indices of the Pareto-optimal points among
 /// `(perf_per_area, energy)` pairs: no other point has >= perf/area AND
 /// <= energy with at least one strict.
+///
+/// Points with a NaN coordinate are excluded outright: a degenerate
+/// prediction must neither panic the sweep nor (since NaN sorts above
+/// every finite value under `total_cmp`) shadow genuine frontier members.
+/// This mirrors [`IncrementalFrontier`], which rejects NaN on push.
 pub fn pareto_frontier(points: &[(f64, f64)]) -> Vec<usize> {
-    let mut idx: Vec<usize> = (0..points.len()).collect();
+    let mut idx: Vec<usize> = (0..points.len())
+        .filter(|&i| !points[i].0.is_nan() && !points[i].1.is_nan())
+        .collect();
     // sort by perf/area descending, energy ascending as tiebreak
     idx.sort_by(|&a, &b| {
         points[b]
             .0
-            .partial_cmp(&points[a].0)
-            .unwrap()
-            .then(points[a].1.partial_cmp(&points[b].1).unwrap())
+            .total_cmp(&points[a].0)
+            .then(points[a].1.total_cmp(&points[b].1))
     });
     let mut out = Vec::new();
     let mut best_energy = f64::INFINITY;
@@ -34,6 +40,74 @@ pub fn pareto_frontier(points: &[(f64, f64)]) -> Vec<usize> {
 /// True iff `a` dominates `b` (>= perf/area, <= energy, one strict).
 pub fn dominates(a: (f64, f64), b: (f64, f64)) -> bool {
     a.0 >= b.0 && a.1 <= b.1 && (a.0 > b.0 || a.1 < b.1)
+}
+
+/// One (perf/area, energy) frontier entry with an arbitrary payload (a grid
+/// index, a full `DsePoint`, ...).
+#[derive(Debug, Clone)]
+pub struct FrontierEntry<T> {
+    pub perf_per_area: f64,
+    pub energy: f64,
+    pub payload: T,
+}
+
+/// Streaming Pareto frontier: fold points in one at a time, keeping only the
+/// undominated set — the memory the sweep engine retains is O(frontier)
+/// instead of O(grid).
+///
+/// Matches [`pareto_frontier`] batch semantics exactly: weakly-dominated
+/// points (including exact duplicates of a member) are rejected, and among
+/// exact duplicates the first-seen point is the one kept.  Entries stay in
+/// insertion order, so pushing in grid order yields payloads in grid order.
+/// Points with a NaN coordinate are rejected outright (a degenerate
+/// prediction must not poison — or panic — the frontier).
+#[derive(Debug, Clone, Default)]
+pub struct IncrementalFrontier<T> {
+    entries: Vec<FrontierEntry<T>>,
+}
+
+impl<T> IncrementalFrontier<T> {
+    pub fn new() -> IncrementalFrontier<T> {
+        IncrementalFrontier { entries: Vec::new() }
+    }
+
+    /// Offer one point; returns true iff it joined the frontier (possibly
+    /// evicting now-dominated members).
+    pub fn push(&mut self, perf_per_area: f64, energy: f64, payload: T) -> bool {
+        if perf_per_area.is_nan() || energy.is_nan() {
+            return false;
+        }
+        // Rejected if any member weakly dominates it (>= on both axes).
+        if self
+            .entries
+            .iter()
+            .any(|q| q.perf_per_area >= perf_per_area && q.energy <= energy)
+        {
+            return false;
+        }
+        // Evict members the new point weakly dominates.
+        self.entries
+            .retain(|q| !(perf_per_area >= q.perf_per_area && energy <= q.energy));
+        self.entries.push(FrontierEntry { perf_per_area, energy, payload });
+        true
+    }
+
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    /// Members in insertion order.
+    pub fn entries(&self) -> &[FrontierEntry<T>] {
+        &self.entries
+    }
+
+    pub fn into_entries(self) -> Vec<FrontierEntry<T>> {
+        self.entries
+    }
 }
 
 #[cfg(test)]
@@ -61,6 +135,97 @@ mod tests {
         let pts = vec![(2.0, 3.0), (2.0, 3.0), (2.0, 3.0)];
         let f = pareto_frontier(&pts);
         assert_eq!(f.len(), 1);
+    }
+
+    #[test]
+    fn duplicate_frontier_point_keeps_first_occurrence() {
+        // two coincident frontier points + a dominated straggler
+        let pts = vec![(1.0, 9.0), (2.0, 3.0), (2.0, 3.0)];
+        assert_eq!(pareto_frontier(&pts), vec![1]);
+    }
+
+    #[test]
+    fn dominance_ties_on_one_axis() {
+        // equal perf/area: only the lower-energy point survives;
+        // equal energy: only the higher-perf/area point survives.
+        let pts = vec![(2.0, 3.0), (2.0, 5.0), (3.0, 3.0), (1.0, 1.0)];
+        assert_eq!(pareto_frontier(&pts), vec![2, 3]);
+    }
+
+    #[test]
+    fn incremental_frontier_edge_cases() {
+        // empty
+        let f: IncrementalFrontier<usize> = IncrementalFrontier::new();
+        assert!(f.is_empty());
+        assert_eq!(f.entries().len(), 0);
+        // single point
+        let mut f = IncrementalFrontier::new();
+        assert!(f.push(1.0, 1.0, 0usize));
+        assert_eq!(f.len(), 1);
+        // all-duplicate points: first-seen wins, the rest are rejected
+        let mut f = IncrementalFrontier::new();
+        assert!(f.push(2.0, 3.0, 10usize));
+        assert!(!f.push(2.0, 3.0, 11));
+        assert!(!f.push(2.0, 3.0, 12));
+        assert_eq!(f.len(), 1);
+        assert_eq!(f.entries()[0].payload, 10);
+        // dominance tie on one axis evicts the weakly-dominated member
+        let mut f = IncrementalFrontier::new();
+        f.push(2.0, 3.0, 0usize);
+        assert!(f.push(2.0, 2.0, 1)); // same pa, less energy: evicts 0
+        assert!(!f.push(2.0, 2.5, 2)); // back between: dominated
+        assert_eq!(f.len(), 1);
+        assert_eq!(f.entries()[0].payload, 1);
+        // NaN never joins (and never panics)
+        assert!(!f.push(f64::NAN, 0.0, 9));
+        assert!(!f.push(3.0, f64::NAN, 9));
+        assert_eq!(f.len(), 1);
+    }
+
+    #[test]
+    fn nan_points_are_excluded_and_paths_agree() {
+        // A degenerate prediction (NaN perf/area, finite energy) must not
+        // shadow the genuine frontier — in either extraction path.
+        let pts = vec![(f64::NAN, 0.3), (5.0, 0.4), (1.0, f64::NAN)];
+        assert_eq!(pareto_frontier(&pts), vec![1]);
+        let mut inc = IncrementalFrontier::new();
+        for (i, &(pa, e)) in pts.iter().enumerate() {
+            inc.push(pa, e, i);
+        }
+        let inc_idx: Vec<usize> = inc.entries().iter().map(|e| e.payload).collect();
+        assert_eq!(inc_idx, vec![1]);
+    }
+
+    #[test]
+    fn property_incremental_matches_batch_frontier() {
+        // Quantized coordinates force duplicates and single-axis ties —
+        // exactly the cases where incremental vs batch semantics could
+        // drift.  Payload = original index, so membership AND identity of
+        // kept duplicates must agree.
+        testkit::forall(
+            "incremental == batch",
+            300,
+            23,
+            |rng: &mut Rng| {
+                let n = 1 + rng.below(50);
+                (0..n)
+                    .map(|_| (rng.below(8) as f64, rng.below(8) as f64))
+                    .collect::<Vec<_>>()
+            },
+            |pts| {
+                let batch = pareto_frontier(pts);
+                let mut inc = IncrementalFrontier::new();
+                for (i, &(pa, e)) in pts.iter().enumerate() {
+                    inc.push(pa, e, i);
+                }
+                let inc_idx: Vec<usize> =
+                    inc.entries().iter().map(|e| e.payload).collect();
+                if inc_idx != batch {
+                    return Err(format!("incremental {inc_idx:?} != batch {batch:?}"));
+                }
+                Ok(())
+            },
+        );
     }
 
     #[test]

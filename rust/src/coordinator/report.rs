@@ -1,7 +1,7 @@
 //! Figure / table regeneration (paper §4).
 
 use crate::config::{PeType, ALL_PE_TYPES};
-use crate::coordinator::explorer::{DseOptions, DseResult};
+use crate::coordinator::explorer::{DseOptions, DseResult, WorkloadSummary};
 use crate::dataflow::Layer;
 use crate::model::{predict_ppa, Backend};
 use crate::synth::oracle::synthesize_with_sigma;
@@ -89,7 +89,7 @@ pub fn dse_summary_table(res: &DseResult) -> Table {
         let (pav, ev) = res.ratios_validated[&ty];
         let best = pts
             .iter()
-            .max_by(|a, b| a.perf_per_area.partial_cmp(&b.perf_per_area).unwrap())
+            .max_by(|a, b| a.perf_per_area.total_cmp(&b.perf_per_area))
             .unwrap();
         t.row(vec![
             ty.label().to_string(),
@@ -101,6 +101,83 @@ pub fn dse_summary_table(res: &DseResult) -> Table {
             format!("{:.2}x", ev),
             best.cfg.key(),
         ]);
+    }
+    t
+}
+
+/// Cross-workload summary for `qappa explore --workload a,b,c`: one row
+/// per (workload, PE type) with the anchor-normalized ratios (predicted
+/// and winner-validated), frontier size and the best config — everything
+/// the streaming multi-workload run retains.
+pub fn multi_summary_table(summaries: &[WorkloadSummary]) -> Table {
+    let mut t = Table::new(&[
+        "workload",
+        "pe_type",
+        "evaluated",
+        "frontier",
+        "perf/area_pred",
+        "perf/area_true",
+        "energy_pred",
+        "energy_true",
+        "best_cfg",
+    ]);
+    for s in summaries {
+        for ty in ALL_PE_TYPES {
+            let (pa, e) = s.ratios[&ty];
+            let (pav, ev) = s.ratios_validated[&ty];
+            let best = s.top_perf_per_area[&ty]
+                .first()
+                .expect("non-empty reservoir");
+            t.row(vec![
+                s.workload.clone(),
+                ty.label().to_string(),
+                s.stats[&ty].evaluated.to_string(),
+                s.frontier[&ty].len().to_string(),
+                format!("{:.2}x", pa),
+                format!("{:.2}x", pav),
+                format!("{:.2}x", e),
+                format!("{:.2}x", ev),
+                best.cfg.key(),
+            ]);
+        }
+    }
+    t
+}
+
+/// One engine-counter row (shared by the single- and multi-workload
+/// stats tables).
+fn stats_row(workload: &str, ty: PeType, st: &crate::coordinator::sweep::SweepStats) -> Vec<String> {
+    vec![
+        workload.to_string(),
+        ty.label().to_string(),
+        st.evaluated.to_string(),
+        st.shards.to_string(),
+        st.frontier_len.to_string(),
+        st.peak_resident.to_string(),
+    ]
+}
+
+const STATS_HEADER: [&str; 6] =
+    ["workload", "pe_type", "evaluated", "shards", "frontier", "peak_resident"];
+
+/// Engine counters for a multi-workload run: per (workload, PE type)
+/// evaluated points, shard count and the peak resident point set — the
+/// streaming-memory guarantee, in a table.
+pub fn sweep_stats_table(summaries: &[WorkloadSummary]) -> Table {
+    let mut t = Table::new(&STATS_HEADER);
+    for s in summaries {
+        for ty in ALL_PE_TYPES {
+            t.row(stats_row(&s.workload, ty, &s.stats[&ty]));
+        }
+    }
+    t
+}
+
+/// Engine counters for a single-workload `DseResult` (`qappa dse --stats`).
+pub fn dse_stats_table(res: &DseResult) -> Table {
+    let mut t = Table::new(&STATS_HEADER);
+    for ty in ALL_PE_TYPES {
+        t.row(stats_row(&res.workload, ty, &res.stats[&ty]));
     }
     t
 }
@@ -181,6 +258,8 @@ mod tests {
             seed: 5,
             workers: 4,
             sigma: 0.02,
+            chunk: 1024,
+            topk: 8,
         }
     }
 
@@ -209,6 +288,33 @@ mod tests {
         assert_eq!(scatter.len(), 4 * opts().space.len());
         // CSV round trip sanity
         assert!(scatter.to_csv().lines().count() == scatter.len() + 1);
+    }
+
+    #[test]
+    fn multi_summary_and_stats_tables_render() {
+        let backend = NativeBackend::new(7);
+        let store = crate::coordinator::explorer::ModelStore::new();
+        let named = vec![
+            crate::coordinator::sweep::NamedWorkload::new(
+                "a",
+                vec![crate::dataflow::Layer::conv("c", 8, 16, 16, 16, 3, 1, 1)],
+            ),
+            crate::coordinator::sweep::NamedWorkload::new(
+                "b",
+                vec![crate::dataflow::Layer::conv("d", 3, 8, 32, 32, 3, 1, 1)],
+            ),
+        ];
+        let summaries =
+            crate::coordinator::explorer::run_dse_multi(&backend, &store, &named, &opts())
+                .unwrap();
+        let t = multi_summary_table(&summaries);
+        assert_eq!(t.len(), 2 * 4);
+        let csv = t.to_csv();
+        assert!(csv.contains("a,"), "workload column missing");
+        assert!(csv.contains("INT16"));
+        let st = sweep_stats_table(&summaries);
+        assert_eq!(st.len(), 2 * 4);
+        assert!(st.to_csv().contains(&opts().space.len().to_string()));
     }
 
     #[test]

@@ -1,7 +1,15 @@
 //! Design-space definition: the axes swept in §4 of the paper.
+//!
+//! The grid is never materialized: [`DesignSpace::nth`] decodes any grid
+//! index directly (mixed-radix over the axes, bandwidth fastest-varying),
+//! [`DesignSpace::iter`] walks the grid lazily, and
+//! [`DesignSpace::chunks`] yields fixed-size config shards for the
+//! streaming sweep engine ([`crate::coordinator::sweep`]).  The historical
+//! [`DesignSpace::enumerate`] is kept as a thin `iter().collect()` shim
+//! for tests and small spaces.
 
 use crate::config::{AcceleratorConfig, PeType};
-use crate::util::prng::Rng;
+use crate::util::prng::{hash64, Rng};
 
 /// A grid over the accelerator parameters (per PE type).
 #[derive(Debug, Clone)]
@@ -63,34 +71,80 @@ impl DesignSpace {
         self.len() == 0
     }
 
-    /// Enumerate the full grid for one PE type.
-    pub fn enumerate(&self, pe_type: PeType) -> Vec<AcceleratorConfig> {
-        let mut out = Vec::with_capacity(self.len());
-        for &r in &self.rows {
-            for &c in &self.cols {
-                for &g in &self.glb_kb {
-                    for &si in &self.spad_ifmap_b {
-                        for &sf in &self.spad_filter_b {
-                            for &sp in &self.spad_psum_b {
-                                for &bw in &self.bandwidth_gbps {
-                                    out.push(AcceleratorConfig {
-                                        pe_type,
-                                        pe_rows: r,
-                                        pe_cols: c,
-                                        glb_kb: g,
-                                        spad_ifmap_b: si,
-                                        spad_filter_b: sf,
-                                        spad_psum_b: sp,
-                                        bandwidth_gbps: bw,
-                                    });
-                                }
-                            }
-                        }
-                    }
-                }
-            }
+    /// Decode grid index `i` into its config (row-major over the axes:
+    /// rows outermost, bandwidth fastest-varying — the same order the old
+    /// eager `enumerate` produced).  O(1); the basis of the lazy cursor.
+    pub fn nth(&self, pe_type: PeType, i: usize) -> Option<AcceleratorConfig> {
+        if i >= self.len() {
+            return None;
         }
-        out
+        let mut rem = i;
+        let mut digit = |axis_len: usize| -> usize {
+            let d = rem % axis_len;
+            rem /= axis_len;
+            d
+        };
+        let bw = digit(self.bandwidth_gbps.len());
+        let sp = digit(self.spad_psum_b.len());
+        let sf = digit(self.spad_filter_b.len());
+        let si = digit(self.spad_ifmap_b.len());
+        let g = digit(self.glb_kb.len());
+        let c = digit(self.cols.len());
+        let r = digit(self.rows.len());
+        Some(AcceleratorConfig {
+            pe_type,
+            pe_rows: self.rows[r],
+            pe_cols: self.cols[c],
+            glb_kb: self.glb_kb[g],
+            spad_ifmap_b: self.spad_ifmap_b[si],
+            spad_filter_b: self.spad_filter_b[sf],
+            spad_psum_b: self.spad_psum_b[sp],
+            bandwidth_gbps: self.bandwidth_gbps[bw],
+        })
+    }
+
+    /// Lazy cursor over the full grid for one PE type.
+    pub fn iter(&self, pe_type: PeType) -> SpaceIter<'_> {
+        SpaceIter { space: self, pe_type, next: 0, len: self.len() }
+    }
+
+    /// Fixed-size config shards for the streaming sweep.  `chunk == 0`
+    /// means one shard holding the whole grid (the eager-equivalent path).
+    pub fn chunks(&self, pe_type: PeType, chunk: usize) -> SpaceChunks<'_> {
+        let len = self.len();
+        let chunk = if chunk == 0 { len.max(1) } else { chunk };
+        SpaceChunks { space: self, pe_type, next: 0, len, chunk }
+    }
+
+    /// Enumerate the full grid for one PE type.  Thin shim over the lazy
+    /// cursor, kept for tests and small spaces; large sweeps should stream
+    /// through [`DesignSpace::chunks`] instead.
+    pub fn enumerate(&self, pe_type: PeType) -> Vec<AcceleratorConfig> {
+        self.iter(pe_type).collect()
+    }
+
+    /// Stable hash of the axis contents — part of the `ModelStore` cache
+    /// key, so model reuse is keyed to the exact space that trained it.
+    pub fn space_hash(&self) -> u64 {
+        let mut s = String::new();
+        for axis in [
+            &self.rows,
+            &self.cols,
+            &self.glb_kb,
+            &self.spad_ifmap_b,
+            &self.spad_filter_b,
+            &self.spad_psum_b,
+        ] {
+            for v in axis {
+                s.push_str(&v.to_string());
+                s.push(',');
+            }
+            s.push(';');
+        }
+        for v in &self.bandwidth_gbps {
+            s.push_str(&format!("{:x},", v.to_bits()));
+        }
+        hash64(s.as_bytes())
     }
 
     /// Sample `n` training configs uniformly from the *continuous* hull of
@@ -103,6 +157,8 @@ impl DesignSpace {
             let hi = *v.iter().max().unwrap();
             lo + rng.below((hi - lo + 1) as usize) as u32
         };
+        let bw_lo = self.bandwidth_gbps.iter().cloned().fold(f64::INFINITY, f64::min);
+        let bw_hi = self.bandwidth_gbps.iter().cloned().fold(f64::NEG_INFINITY, f64::max);
         let mut out = Vec::with_capacity(n);
         for _ in 0..n {
             out.push(AcceleratorConfig {
@@ -113,19 +169,81 @@ impl DesignSpace {
                 spad_ifmap_b: span_u(&self.spad_ifmap_b, &mut rng),
                 spad_filter_b: span_u(&self.spad_filter_b, &mut rng),
                 spad_psum_b: span_u(&self.spad_psum_b, &mut rng),
-                bandwidth_gbps: rng.range_f64(
-                    self.bandwidth_gbps
-                        .iter()
-                        .cloned()
-                        .fold(f64::INFINITY, f64::min),
-                    self.bandwidth_gbps
-                        .iter()
-                        .cloned()
-                        .fold(f64::NEG_INFINITY, f64::max),
-                ),
+                // A single-value bandwidth axis must come back exactly
+                // (range_f64's half-open [lo, hi) is degenerate at lo==hi).
+                bandwidth_gbps: if bw_lo == bw_hi {
+                    bw_lo
+                } else {
+                    rng.range_f64(bw_lo, bw_hi)
+                },
             });
         }
         out
+    }
+}
+
+/// Lazy grid cursor (see [`DesignSpace::iter`]).  `nth` is O(1), so shards
+/// can be dispatched by index without walking the prefix.
+#[derive(Debug, Clone)]
+pub struct SpaceIter<'a> {
+    space: &'a DesignSpace,
+    pe_type: PeType,
+    next: usize,
+    len: usize,
+}
+
+impl Iterator for SpaceIter<'_> {
+    type Item = AcceleratorConfig;
+
+    fn next(&mut self) -> Option<AcceleratorConfig> {
+        if self.next >= self.len {
+            return None;
+        }
+        let cfg = self.space.nth(self.pe_type, self.next);
+        self.next += 1;
+        cfg
+    }
+
+    fn nth(&mut self, n: usize) -> Option<AcceleratorConfig> {
+        self.next = self.next.saturating_add(n);
+        self.next()
+    }
+
+    fn size_hint(&self) -> (usize, Option<usize>) {
+        let rem = self.len - self.next.min(self.len);
+        (rem, Some(rem))
+    }
+}
+
+impl ExactSizeIterator for SpaceIter<'_> {}
+
+/// Iterator of fixed-size config shards (see [`DesignSpace::chunks`]).
+/// Yields `(start_index, configs)` so downstream consumers can recover
+/// global grid indices without materializing the prefix.
+#[derive(Debug, Clone)]
+pub struct SpaceChunks<'a> {
+    space: &'a DesignSpace,
+    pe_type: PeType,
+    next: usize,
+    len: usize,
+    chunk: usize,
+}
+
+impl Iterator for SpaceChunks<'_> {
+    type Item = (usize, Vec<AcceleratorConfig>);
+
+    fn next(&mut self) -> Option<(usize, Vec<AcceleratorConfig>)> {
+        if self.next >= self.len {
+            return None;
+        }
+        let start = self.next;
+        let end = (start + self.chunk).min(self.len);
+        let mut shard = Vec::with_capacity(end - start);
+        for i in start..end {
+            shard.push(self.space.nth(self.pe_type, i).expect("index in range"));
+        }
+        self.next = end;
+        Some((start, shard))
     }
 }
 
@@ -165,6 +283,74 @@ mod tests {
             assert!(c.bandwidth_gbps >= 2.0 && c.bandwidth_gbps <= 8.0);
             c.validate().unwrap();
         }
+    }
+
+    #[test]
+    fn nth_matches_enumerate_order() {
+        let s = DesignSpace::default();
+        let e = s.enumerate(PeType::Int16);
+        for (i, c) in e.iter().enumerate() {
+            assert_eq!(s.nth(PeType::Int16, i).as_ref(), Some(c), "index {i}");
+        }
+        assert!(s.nth(PeType::Int16, s.len()).is_none());
+    }
+
+    #[test]
+    fn iter_is_lazy_but_complete() {
+        let s = DesignSpace::tiny();
+        let it = s.iter(PeType::LightPe2);
+        assert_eq!(it.len(), s.len());
+        let collected: Vec<_> = it.collect();
+        assert_eq!(collected, s.enumerate(PeType::LightPe2));
+        // O(1) nth: skipping straight to the tail matches direct decode
+        let mut it2 = s.iter(PeType::LightPe2);
+        assert_eq!(it2.nth(s.len() - 1), s.nth(PeType::LightPe2, s.len() - 1));
+        assert_eq!(it2.next(), None);
+    }
+
+    #[test]
+    fn chunks_cover_grid_exactly_once() {
+        let s = DesignSpace::tiny();
+        for chunk in [1, 7, 64, 1000, 0] {
+            let mut seen = Vec::new();
+            let mut expected_start = 0;
+            for (start, shard) in s.chunks(PeType::Fp32, chunk) {
+                assert_eq!(start, expected_start);
+                assert!(!shard.is_empty());
+                if chunk > 0 {
+                    assert!(shard.len() <= chunk);
+                }
+                expected_start += shard.len();
+                seen.extend(shard);
+            }
+            assert_eq!(seen, s.enumerate(PeType::Fp32), "chunk={chunk}");
+        }
+    }
+
+    #[test]
+    fn sample_single_value_bandwidth_axis_is_exact() {
+        // Regression: a degenerate bandwidth axis (lo == hi) must sample
+        // the axis value exactly, not a [lo, hi) draw.
+        let mut s = DesignSpace::tiny();
+        s.bandwidth_gbps = vec![4.0];
+        let a = s.sample(PeType::Int16, 32, 3);
+        for c in &a {
+            assert_eq!(c.bandwidth_gbps, 4.0);
+            c.validate().unwrap();
+        }
+        assert_eq!(a, s.sample(PeType::Int16, 32, 3), "still deterministic");
+    }
+
+    #[test]
+    fn space_hash_distinguishes_spaces() {
+        let a = DesignSpace::tiny();
+        let mut b = DesignSpace::tiny();
+        assert_eq!(a.space_hash(), b.space_hash());
+        b.glb_kb.push(512);
+        assert_ne!(a.space_hash(), b.space_hash());
+        let mut c = DesignSpace::tiny();
+        c.bandwidth_gbps[0] += 0.5;
+        assert_ne!(a.space_hash(), c.space_hash());
     }
 
     #[test]

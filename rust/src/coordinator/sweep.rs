@@ -1,0 +1,544 @@
+//! Streaming sweep engine: the bounded-memory hot path of the DSE.
+//!
+//! The eager pipeline materialized the full per-type grid and every
+//! evaluated `DsePoint` (O(grid x workloads) resident).  [`SweepEngine`]
+//! instead pipelines fixed-size config shards from the lazy space cursor
+//! ([`DesignSpace::chunks`]) through predict -> dataflow-eval, folding each
+//! shard into an incremental Pareto frontier and two top-k reservoirs
+//! (best perf/area, best energy) per workload — a run retains
+//! O(frontier + k) points, so paper-scale-and-beyond spaces fit in laptop
+//! memory.  Several workloads share one pass over the grid (and one
+//! prediction per shard); [`SweepStats`] counts evaluated points and the
+//! peak resident set so the bound is checkable, and an optional per-shard
+//! progress hook (plus `QAPPA_TRACE=1` phase timing) exposes the pipeline.
+
+use crate::config::{AcceleratorConfig, NUM_FEATURES, PeType};
+use crate::coordinator::explorer::{DseOptions, DsePoint};
+use crate::coordinator::pareto::{FrontierEntry, IncrementalFrontier};
+use crate::dataflow::{evaluate_network, Layer};
+use crate::model::{predict_ppa, Backend, PpaModel};
+use crate::synth::oracle::{energy_params, Ppa};
+use crate::util::pool::{parallel_map, workers_for};
+
+/// Phase-timing hook: set `QAPPA_TRACE=1` to print per-phase wall times.
+pub(crate) fn trace(phase: &str, t0: std::time::Instant) {
+    if std::env::var_os("QAPPA_TRACE").is_some() {
+        eprintln!("[trace] {phase}: {:.1} ms", t0.elapsed().as_secs_f64() * 1e3);
+    }
+}
+
+/// A workload with its display name, as swept by the engine.
+#[derive(Debug, Clone)]
+pub struct NamedWorkload {
+    pub name: String,
+    pub layers: Vec<Layer>,
+}
+
+impl NamedWorkload {
+    pub fn new(name: impl Into<String>, layers: Vec<Layer>) -> NamedWorkload {
+        NamedWorkload { name: name.into(), layers }
+    }
+}
+
+/// Reservoir objective.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Objective {
+    Maximize,
+    Minimize,
+}
+
+/// Bounded best-k reservoir, kept best-first.
+///
+/// Tie semantics mirror the eager pipeline's selection exactly (pinned by
+/// the eager/streaming identity test): `Maximize` prefers the *latest*
+/// point among equal keys (`Iterator::max_by`), `Minimize` the *earliest*
+/// (`Iterator::min_by`).  Non-finite keys are rejected — a degenerate
+/// prediction cannot claim a slot.
+#[derive(Debug, Clone)]
+pub struct TopK<T> {
+    k: usize,
+    objective: Objective,
+    entries: Vec<(f64, T)>,
+}
+
+impl<T> TopK<T> {
+    pub fn new(k: usize, objective: Objective) -> TopK<T> {
+        TopK { k, objective, entries: Vec::new() }
+    }
+
+    /// Offer one keyed value; returns true iff it took a slot.
+    pub fn push(&mut self, key: f64, value: T) -> bool {
+        if self.k == 0 || !key.is_finite() {
+            return false;
+        }
+        let pos = match self.objective {
+            Objective::Maximize => self.entries.iter().position(|(e, _)| key >= *e),
+            Objective::Minimize => self.entries.iter().position(|(e, _)| key < *e),
+        }
+        .unwrap_or(self.entries.len());
+        if pos >= self.k {
+            return false;
+        }
+        self.entries.insert(pos, (key, value));
+        self.entries.truncate(self.k);
+        true
+    }
+
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    pub fn best(&self) -> Option<&T> {
+        self.entries.first().map(|(_, v)| v)
+    }
+
+    /// Values best-first.
+    pub fn into_values(self) -> Vec<T> {
+        self.entries.into_iter().map(|(_, v)| v).collect()
+    }
+}
+
+/// Counters for one (PE type, workload) sweep — the engine's memory-bound
+/// guarantee is checkable: `peak_resident` is the largest number of
+/// `DsePoint`s (shard in flight + frontier + reservoirs + any retained
+/// points) alive at once.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct SweepStats {
+    pub evaluated: usize,
+    pub shards: usize,
+    pub peak_resident: usize,
+    /// Final frontier size.
+    pub frontier_len: usize,
+    /// Largest mid-sweep frontier (the incremental frontier is not
+    /// monotonic: later points can evict whole swaths).
+    pub peak_frontier: usize,
+    /// Final reservoir occupancy (both reservoirs summed, <= 2 x top-k).
+    pub reservoir_len: usize,
+}
+
+/// Per-shard progress snapshot handed to the [`SweepEngine::on_shard`] hook.
+#[derive(Debug, Clone)]
+pub struct ShardProgress {
+    pub pe_type: PeType,
+    pub workload: String,
+    pub shard: usize,
+    pub shard_len: usize,
+    pub evaluated: usize,
+    pub total: usize,
+    pub resident: usize,
+}
+
+/// Result of sweeping one PE type for one workload.
+#[derive(Debug, Clone)]
+pub struct TypeSweep {
+    pub pe_type: PeType,
+    pub workload: String,
+    /// Pareto frontier in grid order; payload = (grid index, point).
+    pub frontier: Vec<FrontierEntry<(usize, DsePoint)>>,
+    /// Best-perf/area reservoir, best-first.
+    pub top_perf_per_area: Vec<DsePoint>,
+    /// Best-energy reservoir, best-first.
+    pub top_energy: Vec<DsePoint>,
+    /// Every evaluated point, grid order — only with `retain_all` (the
+    /// eager-compatible path); `None` in streaming mode.
+    pub points: Option<Vec<DsePoint>>,
+    pub stats: SweepStats,
+}
+
+impl TypeSweep {
+    /// Frontier as grid indices, ascending (the eager `DseResult` shape).
+    pub fn frontier_indices(&self) -> Vec<usize> {
+        self.frontier.iter().map(|e| e.payload.0).collect()
+    }
+
+    /// Frontier as points, grid order.
+    pub fn frontier_points(&self) -> Vec<DsePoint> {
+        self.frontier.iter().map(|e| e.payload.1.clone()).collect()
+    }
+
+    pub fn best_perf_per_area(&self) -> Option<&DsePoint> {
+        self.top_perf_per_area.first()
+    }
+
+    pub fn best_energy(&self) -> Option<&DsePoint> {
+        self.top_energy.first()
+    }
+}
+
+/// Evaluate one predicted config on a workload.
+pub fn eval_point(cfg: &AcceleratorConfig, ppa: Ppa, layers: &[Layer]) -> DsePoint {
+    // Energy coefficients are structural (jitter-free); the clock the
+    // dataflow runs at is the *predicted* fmax, and energy uses the
+    // *predicted* power — the regression models drive the DSE.
+    let mut ep = energy_params(cfg);
+    ep.fmax_mhz = ppa.fmax_mhz.max(1.0);
+    let cost = evaluate_network(cfg, &ep, layers);
+    let throughput = 1.0 / cost.latency_s.max(1e-12);
+    let energy_mj = ppa.power_mw * cost.latency_s; // mW x s = mJ
+    DsePoint {
+        cfg: *cfg,
+        ppa,
+        throughput,
+        perf_per_area: throughput / ppa.area_mm2.max(1e-9),
+        energy_mj,
+        utilization: cost.avg_utilization,
+    }
+}
+
+/// One sweep accumulator per workload.
+struct Acc {
+    frontier: IncrementalFrontier<(usize, DsePoint)>,
+    top_pa: TopK<DsePoint>,
+    top_e: TopK<DsePoint>,
+    points: Option<Vec<DsePoint>>,
+    stats: SweepStats,
+}
+
+/// The streaming sweep engine.  Borrowing the backend and options, it
+/// sweeps one PE type at a time; each call pipelines every shard through
+/// predict -> dataflow-eval for *all* given workloads, so the per-shard
+/// prediction is paid once per type regardless of workload count.
+pub struct SweepEngine<'a> {
+    backend: &'a dyn Backend,
+    opts: &'a DseOptions,
+    retain_all: bool,
+    progress: Option<Box<dyn Fn(&ShardProgress) + 'a>>,
+}
+
+impl<'a> SweepEngine<'a> {
+    pub fn new(backend: &'a dyn Backend, opts: &'a DseOptions) -> SweepEngine<'a> {
+        SweepEngine { backend, opts, retain_all: false, progress: None }
+    }
+
+    /// Keep every evaluated point (the eager-compatible path; memory goes
+    /// back to O(grid)).  Off by default.
+    pub fn retain_all(mut self, yes: bool) -> SweepEngine<'a> {
+        self.retain_all = yes;
+        self
+    }
+
+    /// Install a per-shard progress hook.
+    pub fn on_shard(mut self, f: impl Fn(&ShardProgress) + 'a) -> SweepEngine<'a> {
+        self.progress = Some(Box::new(f));
+        self
+    }
+
+    /// Sweep the whole grid of one PE type for every workload in one pass.
+    /// Returns one [`TypeSweep`] per workload, in input order.
+    pub fn sweep_type(
+        &self,
+        model: &PpaModel,
+        ty: PeType,
+        workloads: &[NamedWorkload],
+    ) -> Result<Vec<TypeSweep>, String> {
+        if workloads.is_empty() {
+            return Err("sweep_type: no workloads given".into());
+        }
+        let opts = self.opts;
+        let total = opts.space.len();
+        // Anchor/best-point selection reads the reservoir heads, so depth 0
+        // would break every run; clamp to 1.
+        let topk = opts.topk.max(1);
+        let mut accs: Vec<Acc> = workloads
+            .iter()
+            .map(|_| Acc {
+                frontier: IncrementalFrontier::new(),
+                top_pa: TopK::new(topk, Objective::Maximize),
+                top_e: TopK::new(topk, Objective::Minimize),
+                points: if self.retain_all { Some(Vec::with_capacity(total)) } else { None },
+                stats: SweepStats::default(),
+            })
+            .collect();
+
+        for (shard_no, (start, shard)) in opts.space.chunks(ty, opts.chunk).enumerate() {
+            let t0 = std::time::Instant::now();
+            let mut feats = Vec::with_capacity(shard.len() * NUM_FEATURES);
+            for c in &shard {
+                feats.extend_from_slice(&c.features());
+            }
+            let preds = predict_ppa(self.backend, model, &feats)?;
+            trace(
+                &format!("sweep/{}/shard{shard_no}/predict({})", ty.label(), shard.len()),
+                t0,
+            );
+            let items: Vec<(AcceleratorConfig, [f64; 3])> =
+                shard.into_iter().zip(preds).collect();
+            let workers = workers_for(items.len(), opts.workers, 32);
+            for (w, wl) in workloads.iter().enumerate() {
+                let t1 = std::time::Instant::now();
+                let pts: Vec<DsePoint> = parallel_map(&items, workers, |(cfg, ppa)| {
+                    eval_point(cfg, Ppa::from_array(*ppa), &wl.layers)
+                });
+                trace(
+                    &format!(
+                        "sweep/{}/shard{shard_no}/dataflow({}, {})",
+                        ty.label(),
+                        pts.len(),
+                        wl.name
+                    ),
+                    t1,
+                );
+                let acc = &mut accs[w];
+                for (off, p) in pts.into_iter().enumerate() {
+                    let idx = start + off;
+                    acc.frontier.push(p.perf_per_area, p.energy_mj, (idx, p.clone()));
+                    acc.top_pa.push(p.perf_per_area, p.clone());
+                    acc.top_e.push(p.energy_mj, p.clone());
+                    if let Some(all) = &mut acc.points {
+                        all.push(p);
+                    }
+                    acc.stats.evaluated += 1;
+                }
+                acc.stats.shards += 1;
+                acc.stats.peak_frontier =
+                    acc.stats.peak_frontier.max(acc.frontier.len());
+                let resident = items.len()
+                    + acc.frontier.len()
+                    + acc.top_pa.len()
+                    + acc.top_e.len()
+                    + acc.points.as_ref().map_or(0, Vec::len);
+                acc.stats.peak_resident = acc.stats.peak_resident.max(resident);
+                if let Some(hook) = &self.progress {
+                    hook(&ShardProgress {
+                        pe_type: ty,
+                        workload: wl.name.clone(),
+                        shard: shard_no,
+                        shard_len: items.len(),
+                        evaluated: acc.stats.evaluated,
+                        total,
+                        resident,
+                    });
+                }
+            }
+        }
+
+        Ok(workloads
+            .iter()
+            .zip(accs)
+            .map(|(wl, mut acc)| {
+                acc.stats.frontier_len = acc.frontier.len();
+                acc.stats.reservoir_len = acc.top_pa.len() + acc.top_e.len();
+                TypeSweep {
+                    pe_type: ty,
+                    workload: wl.name.clone(),
+                    frontier: acc.frontier.into_entries(),
+                    top_perf_per_area: acc.top_pa.into_values(),
+                    top_energy: acc.top_e.into_values(),
+                    points: acc.points,
+                    stats: acc.stats,
+                }
+            })
+            .collect())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::ALL_PE_TYPES;
+    use crate::coordinator::pareto::pareto_frontier;
+    use crate::coordinator::space::DesignSpace;
+    use crate::coordinator::explorer::{train_models, train_one_model};
+    use crate::model::native::NativeBackend;
+    use crate::model::CvConfig;
+
+    fn opts_with(chunk: usize, topk: usize) -> DseOptions {
+        DseOptions {
+            space: DesignSpace::tiny(),
+            train_per_type: 64,
+            cv: CvConfig { k: 3, degrees: vec![1, 2], lambdas: vec![1e-3, 1e-2], seed: 1 },
+            seed: 7,
+            workers: 4,
+            sigma: 0.02,
+            chunk,
+            topk,
+        }
+    }
+
+    fn net() -> Vec<Layer> {
+        vec![Layer::conv("c", 8, 16, 16, 16, 3, 1, 1)]
+    }
+
+    #[test]
+    fn topk_reservoir_orders_and_bounds() {
+        let mut t = TopK::new(3, Objective::Maximize);
+        for (i, k) in [1.0, 5.0, 3.0, 5.0, 2.0, 9.0].iter().enumerate() {
+            t.push(*k, i);
+        }
+        // best-first; latest among the tied 5.0s (index 3) ranks first
+        assert_eq!(t.len(), 3);
+        assert_eq!(t.best(), Some(&5));
+        assert_eq!(t.clone().into_values(), vec![5, 3, 1]);
+
+        let mut m = TopK::new(2, Objective::Minimize);
+        for (i, k) in [4.0, 2.0, 2.0, 7.0].iter().enumerate() {
+            m.push(*k, i);
+        }
+        // earliest among the tied 2.0s (index 1) ranks first
+        assert_eq!(m.into_values(), vec![1, 2]);
+
+        let mut z = TopK::new(0, Objective::Maximize);
+        assert!(!z.push(1.0, 0));
+        let mut nan = TopK::new(2, Objective::Maximize);
+        assert!(!nan.push(f64::NAN, 0));
+        assert!(nan.is_empty());
+    }
+
+    #[test]
+    fn topk_tie_rules_match_iterator_selection() {
+        // The reservoir's best must be exactly what max_by/min_by picked in
+        // the eager pipeline, including tie direction.
+        let keys = [3.0, 7.0, 7.0, 1.0, 7.0, 1.0];
+        let mut pa = TopK::new(4, Objective::Maximize);
+        let mut e = TopK::new(4, Objective::Minimize);
+        for (i, &k) in keys.iter().enumerate() {
+            pa.push(k, i);
+            e.push(k, i);
+        }
+        let max_by = keys
+            .iter()
+            .enumerate()
+            .max_by(|a, b| a.1.total_cmp(b.1))
+            .unwrap()
+            .0;
+        let min_by = keys
+            .iter()
+            .enumerate()
+            .min_by(|a, b| a.1.total_cmp(b.1))
+            .unwrap()
+            .0;
+        assert_eq!(pa.best(), Some(&max_by)); // last 7.0 (index 4)
+        assert_eq!(e.best(), Some(&min_by)); // first 1.0 (index 3)
+    }
+
+    #[test]
+    fn streaming_matches_eager_shim_per_type() {
+        let backend = NativeBackend::new(7);
+        let eager = opts_with(0, 8); // chunk=0: whole grid in one shard
+        let streaming = opts_with(7, 8); // ragged shards
+        let models = train_models(&backend, &eager).unwrap();
+        let wl = vec![NamedWorkload::new("t", net())];
+        for ty in ALL_PE_TYPES {
+            let a = SweepEngine::new(&backend, &eager)
+                .retain_all(true)
+                .sweep_type(&models[&ty], ty, &wl)
+                .unwrap()
+                .remove(0);
+            let b = SweepEngine::new(&backend, &streaming)
+                .retain_all(true)
+                .sweep_type(&models[&ty], ty, &wl)
+                .unwrap()
+                .remove(0);
+            // bit-identical points, frontier and reservoirs
+            let pa_a: Vec<f64> =
+                a.points.as_ref().unwrap().iter().map(|p| p.perf_per_area).collect();
+            let pa_b: Vec<f64> =
+                b.points.as_ref().unwrap().iter().map(|p| p.perf_per_area).collect();
+            assert_eq!(pa_a, pa_b, "{ty:?} point stream diverged");
+            assert_eq!(a.frontier_indices(), b.frontier_indices(), "{ty:?}");
+            assert_eq!(
+                a.best_perf_per_area().unwrap().cfg,
+                b.best_perf_per_area().unwrap().cfg
+            );
+            assert_eq!(a.best_energy().unwrap().cfg, b.best_energy().unwrap().cfg);
+            // the incremental frontier equals the batch frontier
+            let pairs: Vec<(f64, f64)> = a
+                .points
+                .as_ref()
+                .unwrap()
+                .iter()
+                .map(|p| (p.perf_per_area, p.energy_mj))
+                .collect();
+            assert_eq!(a.frontier_indices(), pareto_frontier(&pairs), "{ty:?}");
+        }
+    }
+
+    #[test]
+    fn streaming_bounds_resident_points() {
+        // chunk <= 2*topk makes the acceptance bound structural:
+        // resident = shard + frontier + reservoirs <= 2*(frontier + topk).
+        let backend = NativeBackend::new(7);
+        let opts = opts_with(16, 8);
+        let models = train_models(&backend, &opts).unwrap();
+        let wl = vec![NamedWorkload::new("t", net())];
+        let ts = SweepEngine::new(&backend, &opts)
+            .sweep_type(&models[&PeType::Int16], PeType::Int16, &wl)
+            .unwrap()
+            .remove(0);
+        assert!(ts.points.is_none());
+        assert_eq!(ts.stats.evaluated, opts.space.len());
+        assert!(
+            ts.stats.peak_resident
+                <= 2 * (ts.stats.peak_frontier + ts.stats.reservoir_len),
+            "peak {} vs frontier {} + reservoirs {}",
+            ts.stats.peak_resident,
+            ts.stats.peak_frontier,
+            ts.stats.reservoir_len
+        );
+    }
+
+    #[test]
+    fn streaming_sweeps_4x_paper_scale_in_bounded_memory() {
+        // 4x the paper-scale grid (76800 configs/type): the streaming
+        // engine must complete with peak resident points <= 2 x
+        // (frontier + top-k) — the whole point of the refactor.
+        let mut space = DesignSpace::default();
+        space.rows.extend([32, 40, 48, 64]); // x2
+        space.bandwidth_gbps.extend([12.0, 16.0, 24.0]); // x2
+        assert_eq!(space.len(), 4 * DesignSpace::default().len());
+        let opts = DseOptions {
+            space,
+            train_per_type: 64,
+            cv: CvConfig { k: 3, degrees: vec![1, 2], lambdas: vec![1e-3], seed: 1 },
+            seed: 11,
+            workers: crate::util::pool::default_workers(),
+            sigma: 0.02,
+            chunk: 512,
+            topk: 256,
+        };
+        let backend = NativeBackend::new(7);
+        let model = train_one_model(&backend, &opts, PeType::Int16).unwrap();
+        let wl = vec![NamedWorkload::new("t", net())];
+        let ts = SweepEngine::new(&backend, &opts)
+            .sweep_type(&model, PeType::Int16, &wl)
+            .unwrap()
+            .remove(0);
+        assert_eq!(ts.stats.evaluated, 76800);
+        assert_eq!(ts.stats.shards, 76800usize.div_ceil(512));
+        assert!(
+            ts.stats.peak_resident
+                <= 2 * (ts.stats.peak_frontier + ts.stats.reservoir_len),
+            "peak {} vs frontier {} + reservoirs {}",
+            ts.stats.peak_resident,
+            ts.stats.peak_frontier,
+            ts.stats.reservoir_len
+        );
+        // and the retained set is a sliver of the grid
+        assert!(ts.stats.peak_resident * 10 < ts.stats.evaluated);
+        assert!(!ts.frontier.is_empty());
+    }
+
+    #[test]
+    fn shard_hook_sees_every_shard() {
+        let backend = NativeBackend::new(7);
+        let opts = opts_with(16, 4);
+        let models = train_models(&backend, &opts).unwrap();
+        let wl = vec![NamedWorkload::new("t", net())];
+        let seen = std::cell::RefCell::new(Vec::new());
+        let engine = SweepEngine::new(&backend, &opts)
+            .on_shard(|p| seen.borrow_mut().push((p.shard, p.evaluated)));
+        let ts = engine
+            .sweep_type(&models[&PeType::Fp32], PeType::Fp32, &wl)
+            .unwrap()
+            .remove(0);
+        drop(engine); // release the hook's borrow of `seen`
+        let seen = seen.into_inner();
+        assert_eq!(seen.len(), opts.space.len().div_ceil(16));
+        assert_eq!(seen.last().unwrap().1, opts.space.len());
+        assert_eq!(ts.stats.shards, seen.len());
+    }
+}

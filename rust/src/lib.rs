@@ -29,7 +29,7 @@
 //! | [`workloads`]  | §4   | built-in nets (VGG-16, ResNet-34/50, MobileNetV1/V2) + JSON model ingestion |
 //! | [`model`]      | §3.4 | PPA regression: features, native baseline, CV driver |
 //! | [`runtime`]    | §3.4 | PJRT artifact loading + batched execution engine |
-//! | [`coordinator`]| §4   | DSE pipeline, Pareto frontier, figure reports (Figs. 2-5) |
+//! | [`coordinator`]| §4   | streaming DSE pipeline (sharded sweeps, model cache, incremental Pareto), figure reports (Figs. 2-5) |
 //! | [`util`]       | —    | json / prng / stats / cli / thread-pool substrates |
 //! | [`testkit`]    | —    | property-testing mini-framework (proptest stand-in) with config/layer generators |
 //!

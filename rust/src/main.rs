@@ -20,9 +20,12 @@ use std::sync::Arc;
 
 use qappa::config::{AcceleratorConfig, PeType, ALL_PE_TYPES};
 use qappa::coordinator::report::{
-    dse_scatter_table, dse_summary_table, fig2_accuracy, fig2_table, workload_table,
+    dse_scatter_table, dse_stats_table, dse_summary_table, fig2_accuracy, fig2_table,
+    multi_summary_table, sweep_stats_table, workload_table,
 };
-use qappa::coordinator::{run_dse, DseOptions};
+use qappa::coordinator::{
+    run_dse, run_dse_multi, DseOptions, ModelStore, NamedWorkload,
+};
 use qappa::model::native::NativeBackend;
 use qappa::model::Backend;
 use qappa::runtime::{Engine, XlaBackend};
@@ -31,7 +34,7 @@ use qappa::util::table::Table;
 use qappa::workloads;
 
 fn main() {
-    let args = match Args::from_env(&["help", "all", "clean", "quiet", "scatter"]) {
+    let args = match Args::from_env(&["help", "all", "clean", "quiet", "scatter", "stats"]) {
         Ok(a) => a,
         Err(e) => {
             eprintln!("error: {e}");
@@ -80,8 +83,12 @@ SUBCOMMANDS
                                          train PPA models, print CV tables
   fig2      [--backend ... --train N --holdout N --out DIR]
                                          model accuracy vs synthesis (Fig. 2)
-  dse       --workload W [--backend ... --train N --out DIR --scatter]
-            (alias: explore)             design-space exploration (Fig. 3-5)
+  dse       --workload W[,W2,...] [--backend ... --train N --chunk N --topk K
+            --out DIR --scatter --stats]
+            (alias: explore)             design-space exploration (Fig. 3-5);
+                                         a comma list sweeps all workloads in
+                                         one streaming pass (models trained
+                                         once, cross-workload summary table)
   figures   [--all --backend ... --out DIR]
                                          regenerate every figure into CSVs
   rtl       --pe-type T [--out FILE]     emit generated Verilog
@@ -97,6 +104,9 @@ WORKLOADS (--workload W)
 
 Artifacts: set QAPPA_ARTIFACTS or run from the repo root (default:
 ./artifacts). `--backend native` needs no artifacts.
+
+Tracing: set QAPPA_TRACE=1 to print per-phase wall times (training,
+per-shard predict and dataflow evaluation).
 ";
 
 // ---------------------------------------------------------------------------
@@ -167,6 +177,8 @@ fn dse_options(args: &Args) -> Result<DseOptions, String> {
     opts.seed = args.get("seed", opts.seed).map_err(|e| e.to_string())?;
     opts.workers = args.get("workers", opts.workers).map_err(|e| e.to_string())?;
     opts.sigma = args.get("sigma", opts.sigma).map_err(|e| e.to_string())?;
+    opts.chunk = args.get("chunk", opts.chunk).map_err(|e| e.to_string())?;
+    opts.topk = args.get("topk", opts.topk).map_err(|e| e.to_string())?;
     Ok(opts)
 }
 
@@ -243,10 +255,18 @@ fn sanitize_name(name: &str) -> String {
 
 fn cmd_dse(args: &Args) -> Result<(), String> {
     let spec = args.require("workload").map_err(|e| e.to_string())?.to_string();
-    let (wl, layers) = workloads::load(&spec)?;
+    let specs: Vec<&str> = spec.split(',').map(str::trim).filter(|s| !s.is_empty()).collect();
+    if specs.is_empty() {
+        return Err("--workload: empty workload list".into());
+    }
+    if specs.len() > 1 {
+        return cmd_dse_multi(args, &specs);
+    }
+    let (wl, layers) = workloads::load(specs[0])?;
     let opts = dse_options(args)?;
     let out = args.opt("out").map(str::to_string);
     let want_scatter = args.flag("scatter");
+    let want_stats = args.flag("stats");
     let backend = make_backend(args)?;
     args.finish().map_err(|e| e.to_string())?;
 
@@ -264,6 +284,9 @@ fn cmd_dse(args: &Args) -> Result<(), String> {
     );
     println!("anchor (best INT16 perf/area): {}", res.anchor.cfg.key());
     print!("{}", dse_summary_table(&res).render());
+    if want_stats {
+        print!("{}", dse_stats_table(&res).render());
+    }
     if let AnyBackend::Xla(_, engine) = &backend {
         let s = &engine.stats;
         use std::sync::atomic::Ordering::Relaxed;
@@ -286,6 +309,77 @@ fn cmd_dse(args: &Args) -> Result<(), String> {
             dse_scatter_table(&res).write_csv(&scatter_path).map_err(|e| e.to_string())?;
             println!("wrote {scatter_path}");
         }
+    }
+    Ok(())
+}
+
+/// `qappa explore --workload a,b,c`: one streaming pass over the grid per
+/// PE type, every workload evaluated against each predicted shard; models
+/// trained once and shared through the `ModelStore`.
+fn cmd_dse_multi(args: &Args, specs: &[&str]) -> Result<(), String> {
+    let mut named = Vec::with_capacity(specs.len());
+    for spec in specs {
+        let (name, layers) = workloads::load(spec)?;
+        named.push(NamedWorkload::new(name, layers));
+    }
+    let opts = dse_options(args)?;
+    let out = args.opt("out").map(str::to_string);
+    let want_stats = args.flag("stats");
+    if args.flag("scatter") {
+        return Err(
+            "--scatter needs the full point set; it is only available for \
+             single-workload runs"
+                .into(),
+        );
+    }
+    let backend = make_backend(args)?;
+    args.finish().map_err(|e| e.to_string())?;
+
+    let store = ModelStore::new();
+    let t0 = std::time::Instant::now();
+    let summaries = run_dse_multi(backend.get(), &store, &named, &opts)?;
+    let dt = t0.elapsed().as_secs_f64();
+
+    println!(
+        "DSE over {} workloads ({}) — {} configs/type, chunk={}, top-k={}, backend={}, {:.2}s",
+        named.len(),
+        named.iter().map(|w| w.name.as_str()).collect::<Vec<_>>().join(", "),
+        opts.space.len(),
+        opts.chunk,
+        opts.topk,
+        backend.get().name(),
+        dt
+    );
+    for s in &summaries {
+        println!(
+            "anchor[{}] (best INT16 perf/area): {}",
+            s.workload,
+            s.anchor.cfg.key()
+        );
+    }
+    print!("{}", multi_summary_table(&summaries).render());
+    println!(
+        "[store] models trained: {} (cache hits: {})",
+        store.misses(),
+        store.hits()
+    );
+    let peak = summaries
+        .iter()
+        .flat_map(|s| s.stats.values().map(|st| st.peak_resident))
+        .max()
+        .unwrap_or(0);
+    println!(
+        "[engine] peak resident points: {} of {} evaluated per (type, workload)",
+        peak,
+        opts.space.len()
+    );
+    if want_stats {
+        print!("{}", sweep_stats_table(&summaries).render());
+    }
+    if let Some(dir) = out {
+        let path = format!("{dir}/multi_summary.csv");
+        multi_summary_table(&summaries).write_csv(&path).map_err(|e| e.to_string())?;
+        println!("wrote {path}");
     }
     Ok(())
 }

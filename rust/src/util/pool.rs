@@ -11,6 +11,16 @@ pub fn default_workers() -> usize {
         .unwrap_or(4)
 }
 
+/// Worker count for a batch of `items`: capped so each worker gets at
+/// least `min_per_worker` items (spawning a thread for a handful of cheap
+/// evaluations costs more than it saves — small streaming shards hit this).
+pub fn workers_for(items: usize, workers: usize, min_per_worker: usize) -> usize {
+    if items == 0 {
+        return 1;
+    }
+    workers.max(1).min(items.div_ceil(min_per_worker.max(1)))
+}
+
 /// Parallel map preserving input order.
 ///
 /// Splits `items` into `workers` contiguous chunks; each worker writes its
@@ -123,6 +133,16 @@ mod tests {
     fn more_workers_than_items() {
         let items = [1u32, 2, 3];
         assert_eq!(parallel_map(&items, 64, |x| *x), vec![1, 2, 3]);
+    }
+
+    #[test]
+    fn workers_for_caps_small_batches() {
+        assert_eq!(workers_for(0, 8, 32), 1);
+        assert_eq!(workers_for(10, 8, 32), 1);
+        assert_eq!(workers_for(64, 8, 32), 2);
+        assert_eq!(workers_for(1000, 8, 32), 8);
+        assert_eq!(workers_for(1000, 0, 32), 1);
+        assert_eq!(workers_for(5, 8, 0), 5); // min_per_worker clamped to 1
     }
 
     #[test]

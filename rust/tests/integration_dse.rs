@@ -4,7 +4,9 @@ use std::sync::Arc;
 
 use qappa::config::{PeType, ALL_PE_TYPES};
 use qappa::coordinator::space::DesignSpace;
-use qappa::coordinator::{run_dse, DseOptions};
+use qappa::coordinator::{
+    run_dse, run_dse_multi, run_dse_with_store, DseOptions, ModelStore, NamedWorkload,
+};
 use qappa::dataflow::Layer;
 use qappa::model::native::NativeBackend;
 use qappa::model::CvConfig;
@@ -18,6 +20,8 @@ fn opts() -> DseOptions {
         seed: 21,
         workers: 2,
         sigma: 0.03,
+        chunk: 1024,
+        topk: 8,
     }
 }
 
@@ -105,6 +109,66 @@ fn int16_anchor_ratio_is_identity() {
     let res = run_dse(&native, &layers(), "t", &opts()).expect("dse");
     let (pa, _e) = res.ratios[&PeType::Int16];
     assert!((pa - 1.0).abs() < 1e-9);
+}
+
+#[test]
+fn streaming_chunks_reproduce_eager_results_end_to_end() {
+    // The streaming engine (small shards) and the eager shim (one
+    // whole-grid shard) must agree bit-for-bit on anchor, frontier
+    // membership and ratios.
+    let native = NativeBackend::new(7);
+    let mut eager = opts();
+    eager.chunk = 0;
+    let mut streaming = opts();
+    streaming.chunk = 13;
+    let a = run_dse(&native, &layers(), "t", &eager).expect("eager");
+    let b = run_dse(&native, &layers(), "t", &streaming).expect("streaming");
+    assert_eq!(a.anchor.cfg, b.anchor.cfg);
+    for ty in ALL_PE_TYPES {
+        assert_eq!(a.frontier[&ty], b.frontier[&ty], "{ty:?}");
+        assert_eq!(a.ratios[&ty], b.ratios[&ty], "{ty:?}");
+        assert_eq!(b.stats[&ty].evaluated, opts().space.len());
+        assert_eq!(b.stats[&ty].shards, opts().space.len().div_ceil(13));
+    }
+}
+
+#[test]
+fn multi_workload_pass_trains_each_model_once() {
+    // `qappa explore --workload a,b,c` semantics: one ModelStore, one
+    // training pass per PE type, one streaming grid pass shared by all
+    // workloads.
+    let native = NativeBackend::new(7);
+    let mut o = opts();
+    o.chunk = 16;
+    let store = ModelStore::new();
+    let named = vec![
+        NamedWorkload::new("a", layers()),
+        NamedWorkload::new("b", vec![Layer::conv("x", 8, 16, 16, 16, 3, 1, 1)]),
+    ];
+    let summaries = run_dse_multi(&native, &store, &named, &o).expect("multi");
+    assert_eq!(store.misses(), 4, "one training pass per PE type");
+    assert_eq!(store.hits(), 0);
+    assert_eq!(summaries.len(), 2);
+    for s in &summaries {
+        assert!((s.ratios[&PeType::Int16].0 - 1.0).abs() < 1e-9);
+        for ty in ALL_PE_TYPES {
+            assert!(!s.frontier[&ty].is_empty(), "{ty:?}");
+            // streaming mode: the retained set is bounded by the shard in
+            // flight plus frontier + reservoirs, never the grid
+            let st = &s.stats[&ty];
+            assert!(
+                st.peak_resident <= 2 * (st.peak_frontier + st.reservoir_len),
+                "{ty:?} peak {} frontier {} reservoirs {}",
+                st.peak_resident,
+                st.peak_frontier,
+                st.reservoir_len
+            );
+        }
+    }
+    // a follow-up single-workload run reuses the same trained models
+    run_dse_with_store(&native, &store, &layers(), "t", &o).expect("reuse");
+    assert_eq!(store.misses(), 4);
+    assert_eq!(store.hits(), 4);
 }
 
 #[test]

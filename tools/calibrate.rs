@@ -73,7 +73,7 @@ fn main() {
             }
             println!("\n   anchor {}", res.anchor.cfg.key());
             for ty in ALL_PE_TYPES {
-                let best = res.points[&ty].iter().max_by(|a,b| a.perf_per_area.partial_cmp(&b.perf_per_area).unwrap()).unwrap();
+                let best = res.points[&ty].iter().max_by(|a,b| a.perf_per_area.total_cmp(&b.perf_per_area)).unwrap();
                 println!("   {} best: {} | thr {:8.2}/s area {:5.2} mm2 energy {:7.2} mJ fmax {:6.0}",
                     ty.label(), best.cfg.key(), best.throughput, best.ppa.area_mm2, best.energy_mj, best.ppa.fmax_mhz);
             }
