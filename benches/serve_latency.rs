@@ -1,0 +1,117 @@
+//! Bench: warm-session serving throughput vs cold per-process invocation.
+//!
+//! The whole point of the `qappa::api` session facade is that models train
+//! once and every subsequent query runs at sweep speed.  This bench pins
+//! that trajectory with three numbers:
+//!
+//! * `serve/warm_explore` — repeat `explore` requests against one warm
+//!   session (pure cache hits; the serving steady state);
+//! * `serve/warm_analyze` + `serve/loop_overhead` — the analytical query
+//!   path and the full JSON-lines round trip (parse → dispatch →
+//!   serialize) per request;
+//! * `serve/cold_session` — a fresh session per request (what per-process
+//!   CLI invocation pays: 4 training passes before the sweep).
+
+use qappa::api::{
+    serve, AnalyzeRequest, BackendChoice, ExploreRequest, Qappa, ServeOptions, SynthRequest,
+};
+use qappa::config::{AcceleratorConfig, PeType};
+use qappa::coordinator::{DesignSpace, DseOptions};
+use qappa::model::CvConfig;
+use qappa::util::bench::Bench;
+
+fn session() -> Qappa {
+    Qappa::builder()
+        .backend(BackendChoice::Native)
+        .options(DseOptions {
+            space: DesignSpace::tiny(),
+            train_per_type: 128,
+            cv: CvConfig { k: 3, degrees: vec![1, 2], lambdas: vec![1e-3, 1e-2], seed: 1 },
+            seed: 7,
+            workers: qappa::util::pool::default_workers(),
+            sigma: 0.02,
+            chunk: 32,
+            topk: 8,
+        })
+        .build()
+}
+
+fn main() {
+    let explore_req = ExploreRequest { workloads: vec!["resnet34".into()] };
+    let analyze_req = AnalyzeRequest {
+        workload: "resnet34".into(),
+        config: AcceleratorConfig::default_with(PeType::LightPe1),
+    };
+
+    // -------------------------------------------------------------- warm
+    let warm = session();
+    warm.explore(&explore_req).expect("prime session");
+    println!(
+        "=== serve latency: tiny space ({} configs/type), backend={} ===",
+        warm.options().space.len(),
+        warm.backend_name().expect("backend")
+    );
+    Bench::new("serve/warm_explore")
+        .warmup(1)
+        .samples(10)
+        .run_with_units(1.0, "req", || warm.explore(&explore_req).expect("explore"))
+        .print();
+    assert_eq!(warm.store().misses(), 4, "warm explores must not retrain");
+
+    Bench::new("serve/warm_analyze")
+        .warmup(2)
+        .samples(20)
+        .run_with_units(1.0, "req", || warm.analyze(&analyze_req).expect("analyze"))
+        .print();
+
+    // Full JSON-lines round trip: parse -> dispatch -> serialize, 64
+    // analyze + synth requests per iteration through the serve loop.
+    let mut batch = String::new();
+    for id in 0..64u64 {
+        if id % 2 == 0 {
+            batch.push_str(&format!(
+                "{{\"id\":{id},\"op\":\"analyze\",\"params\":{}}}\n",
+                analyze_req.to_json()
+            ));
+        } else {
+            let synth = SynthRequest { config: AcceleratorConfig::default_with(PeType::Int16) };
+            batch.push_str(&format!(
+                "{{\"id\":{id},\"op\":\"synth\",\"params\":{}}}\n",
+                synth.to_json()
+            ));
+        }
+    }
+    Bench::new("serve/loop_overhead(64 reqs)")
+        .warmup(1)
+        .samples(10)
+        .run_with_units(64.0, "req", || {
+            let stats = serve(
+                &warm,
+                batch.as_bytes(),
+                std::io::sink(),
+                &ServeOptions { concurrency: 1 },
+            )
+            .expect("serve");
+            assert_eq!(stats.errors, 0);
+        })
+        .print();
+
+    // -------------------------------------------------------------- cold
+    // What every per-process CLI invocation pays: train-then-answer.
+    Bench::new("serve/cold_session_explore")
+        .warmup(0)
+        .samples(3)
+        .run_with_units(1.0, "req", || {
+            let cold = session();
+            cold.explore(&explore_req).expect("cold explore")
+        })
+        .print();
+
+    println!(
+        "\nwarm explores answered from {} cached models ({} hits so far); a cold\n\
+         session re-pays 4 training passes per request — the gap is the case\n\
+         for `qappa serve`.",
+        warm.store().misses(),
+        warm.store().hits()
+    );
+}

@@ -1,0 +1,174 @@
+//! `QappaError` — the crate-wide structured error type.
+//!
+//! Every fallible public API in the crate returns `Result<_, QappaError>`:
+//! the variants classify *where* in the stack a request died (configuration,
+//! workload ingestion, regression backend, model math, I/O, wire protocol),
+//! which is exactly what a service client needs to decide between "fix the
+//! request" and "retry / page the operator".  [`QappaError::kind`] is the
+//! stable lowercase tag carried by `qappa serve` error payloads
+//! (`api::types::ErrorBody`).
+//!
+//! `Display` prints the bare message (no variant prefix) so CLI error lines
+//! read exactly as they did when the crate returned `Result<_, String>`;
+//! the classification travels out-of-band via [`QappaError::kind`].
+
+use std::fmt;
+use std::sync::Arc;
+
+use crate::util::cli::CliError;
+use crate::util::json::ParseError;
+
+/// Structured error for every fallible public API in the crate.
+///
+/// The `Io` variant keeps the failing path / operation as `context` and the
+/// underlying [`std::io::Error`] as `source` (shared through an `Arc` so
+/// the error stays `Clone`-able across the engine's reply channels).
+#[derive(Debug, Clone)]
+pub enum QappaError {
+    /// Invalid accelerator configuration, design space, backend selection
+    /// or CLI/builder parameters.
+    Config(String),
+    /// Workload resolution or ingestion failure (unknown name, malformed
+    /// JSON model, invalid layer shape).
+    Workload(String),
+    /// Regression-backend failure: engine startup, artifact execution,
+    /// channel breakdown, capacity overflow.
+    Backend(String),
+    /// Model-math failure: CV grid problems, non-SPD normal equations,
+    /// golden-model verification mismatches.
+    Model(String),
+    /// I/O failure with the path or operation preserved as context.
+    Io {
+        context: String,
+        source: Arc<std::io::Error>,
+    },
+    /// Malformed service request (the `qappa serve` wire protocol).
+    Protocol(String),
+}
+
+impl QappaError {
+    /// Build an [`QappaError::Io`] with the failing path / operation kept
+    /// as context (a bare `From<io::Error>` would flatten it away, which is
+    /// exactly the context loss this type exists to prevent).
+    pub fn io(context: impl Into<String>, source: std::io::Error) -> QappaError {
+        QappaError::Io { context: context.into(), source: Arc::new(source) }
+    }
+
+    /// Stable lowercase tag for wire payloads and logs.
+    pub fn kind(&self) -> &'static str {
+        match self {
+            QappaError::Config(_) => "config",
+            QappaError::Workload(_) => "workload",
+            QappaError::Backend(_) => "backend",
+            QappaError::Model(_) => "model",
+            QappaError::Io { .. } => "io",
+            QappaError::Protocol(_) => "protocol",
+        }
+    }
+
+    /// Prefix the message with extra context, keeping the variant — the
+    /// `QappaError` analogue of `format!("{ctx}: {e}")` on strings.
+    pub fn context(self, prefix: impl fmt::Display) -> QappaError {
+        match self {
+            QappaError::Config(m) => QappaError::Config(format!("{prefix}: {m}")),
+            QappaError::Workload(m) => QappaError::Workload(format!("{prefix}: {m}")),
+            QappaError::Backend(m) => QappaError::Backend(format!("{prefix}: {m}")),
+            QappaError::Model(m) => QappaError::Model(format!("{prefix}: {m}")),
+            QappaError::Io { context, source } => QappaError::Io {
+                context: format!("{prefix}: {context}"),
+                source,
+            },
+            QappaError::Protocol(m) => QappaError::Protocol(format!("{prefix}: {m}")),
+        }
+    }
+}
+
+impl fmt::Display for QappaError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            QappaError::Config(m)
+            | QappaError::Workload(m)
+            | QappaError::Backend(m)
+            | QappaError::Model(m)
+            | QappaError::Protocol(m) => write!(f, "{m}"),
+            QappaError::Io { context, source } => write!(f, "{context}: {source}"),
+        }
+    }
+}
+
+impl std::error::Error for QappaError {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            QappaError::Io { source, .. } => Some(source.as_ref()),
+            _ => None,
+        }
+    }
+}
+
+/// CLI flag errors carry the flag name in their message
+/// (`--train: cannot parse 'abc'`), so the conversion preserves context.
+impl From<CliError> for QappaError {
+    fn from(e: CliError) -> QappaError {
+        QappaError::Config(e.0)
+    }
+}
+
+/// JSON syntax errors surface as protocol errors (byte offset preserved);
+/// semantic workload errors are classified at the ingestion site instead.
+impl From<ParseError> for QappaError {
+    fn from(e: ParseError) -> QappaError {
+        QappaError::Protocol(e.to_string())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn display_is_the_bare_message() {
+        let e = QappaError::Workload("unknown workload 'x'".into());
+        assert_eq!(e.to_string(), "unknown workload 'x'");
+        assert_eq!(e.kind(), "workload");
+    }
+
+    #[test]
+    fn io_preserves_context_and_source() {
+        let inner = std::io::Error::new(std::io::ErrorKind::NotFound, "gone");
+        let e = QappaError::io("reading workload file 'm.json'", inner);
+        assert_eq!(e.kind(), "io");
+        let msg = e.to_string();
+        assert!(msg.starts_with("reading workload file 'm.json': "), "{msg}");
+        assert!(msg.contains("gone"), "{msg}");
+        use std::error::Error;
+        assert!(e.source().is_some());
+    }
+
+    #[test]
+    fn context_keeps_the_variant() {
+        let e = QappaError::Model("empty CV grid".into()).context("INT16");
+        assert_eq!(e.kind(), "model");
+        assert_eq!(e.to_string(), "INT16: empty CV grid");
+        let io = QappaError::io("writing x.csv", std::io::Error::new(std::io::ErrorKind::Other, "disk"))
+            .context("figures");
+        assert_eq!(io.kind(), "io");
+        assert!(io.to_string().starts_with("figures: writing x.csv: "));
+    }
+
+    #[test]
+    fn cli_and_json_conversions_classify() {
+        let c: QappaError = CliError("--train: cannot parse 'x'".into()).into();
+        assert_eq!(c.kind(), "config");
+        assert_eq!(c.to_string(), "--train: cannot parse 'x'");
+        let p: QappaError = crate::util::json::Json::parse("{").unwrap_err().into();
+        assert_eq!(p.kind(), "protocol");
+        assert!(p.to_string().contains("json parse error"), "{p}");
+    }
+
+    #[test]
+    fn errors_are_cloneable_for_reply_fanout() {
+        let e = QappaError::io("ctx", std::io::Error::new(std::io::ErrorKind::Other, "x"));
+        let c = e.clone();
+        assert_eq!(c.to_string(), e.to_string());
+    }
+}

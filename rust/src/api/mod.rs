@@ -1,0 +1,37 @@
+//! The typed service facade — QAPPA as a queryable estimator.
+//!
+//! The paper's premise is that a trained PPA model answers design queries
+//! in microseconds instead of milliseconds-per-config synthesis; this
+//! module is the surface that makes those queries *programmable*.  Every
+//! other entry point (the CLI in `main.rs`, the serve loop, tests,
+//! benches) is a client of three pieces:
+//!
+//! * [`session::Qappa`] — a warm session built via [`Qappa::builder`]
+//!   (backend choice, training recipe, design-space overrides) that owns
+//!   the backend, the XLA engine and a shared
+//!   [`crate::coordinator::ModelStore`].  Typed methods [`Qappa::synth`],
+//!   [`Qappa::fit`], [`Qappa::explore`], [`Qappa::analyze`] and
+//!   [`Qappa::workloads`]; models train once per session and stay warm
+//!   across any number of queries.
+//! * [`types`] — request/response structs with lossless JSON round-trips
+//!   through [`crate::util::json`] (schemas in `docs/API.md`).
+//! * [`serve`] — the `qappa serve` JSON-lines request loop: concurrent
+//!   requests dispatched against one shared session.
+//!
+//! [`error::QappaError`] is the crate-wide structured error every fallible
+//! public API returns (re-exported at the crate root).
+
+pub mod error;
+pub mod serve;
+pub mod session;
+pub mod types;
+
+pub use error::QappaError;
+pub use serve::{dispatch, handle_line, serve, ServeOptions, ServeStats};
+pub use session::{BackendChoice, Qappa, QappaBuilder};
+pub use types::{
+    config_from_json, AnalyzeRequest, AnalyzeResponse, CvPoint, ErrorBody, ExploreEntry,
+    ExploreRequest, ExploreResponse, ExploreSummary, FitModelReport, FitRequest, FitResponse,
+    LayerCost, RequestBody, ResponseBody, ServeRequest, ServeResponse, SessionInfo, SynthRequest,
+    SynthResponse, WorkloadInfo, WorkloadsRequest, WorkloadsResponse, OPS,
+};

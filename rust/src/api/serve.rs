@@ -1,0 +1,263 @@
+//! The `qappa serve` request loop: JSON-lines in, JSON-lines out, one warm
+//! [`Qappa`] session behind every request.
+//!
+//! Protocol (documented with worked examples in `docs/API.md`):
+//!
+//! * one request per line: `{"id": 7, "op": "explore", "params": {...}}`;
+//! * one response per line: `{"id": 7, "ok": true, "op": "explore",
+//!   "result": {...}}` or `{"id": 7, "ok": false, "error": {"kind": "...",
+//!   "message": "..."}}`;
+//! * `id` is echoed verbatim; with `concurrency > 1` responses may arrive
+//!   out of order, so clients correlate by it;
+//! * a malformed line answers with a `protocol` error (id `null` if the
+//!   line didn't parse far enough to carry one) — the loop never dies on
+//!   bad input, only on I/O failure.
+//!
+//! Requests are dispatched by a small scoped-thread worker pool against one
+//! shared session: models train once (`ModelStore` serializes in-flight
+//! training), every worker answers from the warm cache, and the engine's
+//! dynamic batcher coalesces concurrent predict traffic.
+
+use std::io::{BufRead, Write};
+use std::sync::mpsc::{sync_channel, TrySendError};
+use std::sync::Mutex;
+
+use crate::api::error::QappaError;
+use crate::api::session::Qappa;
+use crate::api::types::{ErrorBody, RequestBody, ResponseBody, ServeRequest, ServeResponse};
+use crate::util::json::Json;
+use crate::util::pool::default_workers;
+
+/// Options for one serve loop.
+#[derive(Debug, Clone)]
+pub struct ServeOptions {
+    /// Worker threads dispatching requests (1 = sequential, in-order
+    /// responses).
+    pub concurrency: usize,
+}
+
+impl Default for ServeOptions {
+    fn default() -> ServeOptions {
+        ServeOptions { concurrency: default_workers().min(4) }
+    }
+}
+
+/// Counters of one serve loop.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct ServeStats {
+    pub requests: usize,
+    pub ok: usize,
+    pub errors: usize,
+}
+
+/// Dispatch one typed request against the session.
+pub fn dispatch(session: &Qappa, body: &RequestBody) -> Result<ResponseBody, QappaError> {
+    match body {
+        RequestBody::Synth(r) => session.synth(r).map(ResponseBody::Synth),
+        RequestBody::Fit(r) => session.fit(r).map(ResponseBody::Fit),
+        RequestBody::Explore(r) => session.explore(r).map(ResponseBody::Explore),
+        RequestBody::Analyze(r) => session.analyze(r).map(ResponseBody::Analyze),
+        RequestBody::Workloads(r) => session.workloads(r).map(ResponseBody::Workloads),
+        RequestBody::Session => Ok(ResponseBody::Session(session.session_info())),
+    }
+}
+
+/// Parse and answer one request line; never panics on bad input.  The
+/// request id is extracted best-effort before typed parsing, so even an
+/// unknown op or a bad parameter payload answers with the caller's id.
+pub fn handle_line(session: &Qappa, line: &str) -> ServeResponse {
+    let v = match Json::parse(line) {
+        Ok(v) => v,
+        Err(e) => {
+            let e = QappaError::from(e);
+            return ServeResponse { id: None, result: Err(ErrorBody::from(&e)) };
+        }
+    };
+    let id = v.get("id").as_usize().map(|x| x as u64);
+    let req = match ServeRequest::from_json(&v) {
+        Ok(req) => req,
+        Err(e) => return ServeResponse { id, result: Err(ErrorBody::from(&e)) },
+    };
+    match dispatch(session, &req.body) {
+        Ok(body) => ServeResponse { id: req.id, result: Ok(body) },
+        Err(e) => ServeResponse { id: req.id, result: Err(ErrorBody::from(&e)) },
+    }
+}
+
+/// Run the request loop: read JSON-lines requests from `reader`, answer on
+/// `writer` from one shared warm session.  Returns the loop counters.
+pub fn serve<R: BufRead, W: Write + Send>(
+    session: &Qappa,
+    reader: R,
+    writer: W,
+    opts: &ServeOptions,
+) -> Result<ServeStats, QappaError> {
+    let workers = opts.concurrency.max(1);
+    let out = Mutex::new(writer);
+    let stats = Mutex::new(ServeStats::default());
+
+    let emit = |resp: &ServeResponse| -> Result<(), QappaError> {
+        {
+            let mut s = stats.lock().unwrap_or_else(|p| p.into_inner());
+            s.requests += 1;
+            if resp.result.is_ok() {
+                s.ok += 1;
+            } else {
+                s.errors += 1;
+            }
+        }
+        let mut w = out.lock().unwrap_or_else(|p| p.into_inner());
+        writeln!(w, "{}", resp.to_json())
+            .and_then(|_| w.flush())
+            .map_err(|e| QappaError::io("writing response", e))
+    };
+
+    if workers == 1 {
+        for line in reader.lines() {
+            let line = line.map_err(|e| QappaError::io("reading request", e))?;
+            if line.trim().is_empty() {
+                continue;
+            }
+            emit(&handle_line(session, &line))?;
+        }
+    } else {
+        // Bounded queue: the producer reads at most O(workers) lines ahead
+        // of the dispatchers, so a huge piped batch never balloons memory.
+        let (tx, rx) = sync_channel::<String>(workers * 2);
+        let rx = Mutex::new(rx);
+        let worker_err: Mutex<Option<QappaError>> = Mutex::new(None);
+        std::thread::scope(|scope| -> Result<(), QappaError> {
+            for _ in 0..workers {
+                scope.spawn(|| loop {
+                    // Hold the receiver lock while waiting: exactly one
+                    // worker blocks in recv, the rest queue on the mutex —
+                    // same semantics as a shared MPMC pop.
+                    let next = rx.lock().unwrap_or_else(|p| p.into_inner()).recv();
+                    let Ok(line) = next else { break };
+                    if let Err(e) = emit(&handle_line(session, &line)) {
+                        let mut slot = worker_err.lock().unwrap_or_else(|p| p.into_inner());
+                        if slot.is_none() {
+                            *slot = Some(e);
+                        }
+                        break;
+                    }
+                });
+            }
+            'produce: for line in reader.lines() {
+                let line = line.map_err(|e| QappaError::io("reading request", e))?;
+                if line.trim().is_empty() {
+                    continue;
+                }
+                // Enqueue with a poll loop instead of a blocking send: if
+                // every worker has died on a write failure (downstream
+                // closed the pipe), a blocking send on the full queue
+                // would hang forever; here the death check runs between
+                // attempts and aborts the read loop instead.
+                let mut pending = line;
+                loop {
+                    if worker_err.lock().unwrap_or_else(|p| p.into_inner()).is_some() {
+                        break 'produce;
+                    }
+                    match tx.try_send(pending) {
+                        Ok(()) => break,
+                        Err(TrySendError::Full(l)) => {
+                            pending = l;
+                            std::thread::sleep(std::time::Duration::from_millis(1));
+                        }
+                        Err(TrySendError::Disconnected(_)) => break 'produce,
+                    }
+                }
+            }
+            drop(tx); // close the queue; workers drain and exit
+            Ok(())
+        })?;
+        if let Some(e) = worker_err.into_inner().unwrap_or_else(|p| p.into_inner()) {
+            return Err(e);
+        }
+    }
+    Ok(stats.into_inner().unwrap_or_else(|p| p.into_inner()))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::api::session::BackendChoice;
+    use crate::api::types::{SessionInfo, WorkloadsResponse};
+    use crate::util::json::Json;
+
+    fn session() -> Qappa {
+        Qappa::builder().backend(BackendChoice::Native).build()
+    }
+
+    fn parse_lines(out: &[u8]) -> Vec<ServeResponse> {
+        std::str::from_utf8(out)
+            .unwrap()
+            .lines()
+            .map(|l| ServeResponse::from_json(&Json::parse(l).unwrap()).unwrap())
+            .collect()
+    }
+
+    #[test]
+    fn sequential_loop_answers_in_order() {
+        let s = session();
+        let input = "\
+{\"id\":1,\"op\":\"workloads\"}\n\
+\n\
+{\"id\":2,\"op\":\"session\"}\n";
+        let mut out = Vec::new();
+        let stats = serve(&s, input.as_bytes(), &mut out, &ServeOptions { concurrency: 1 }).unwrap();
+        assert_eq!(stats, ServeStats { requests: 2, ok: 2, errors: 0 });
+        let resps = parse_lines(&out);
+        assert_eq!(resps.len(), 2);
+        assert_eq!(resps[0].id, Some(1));
+        assert!(matches!(resps[0].result, Ok(ResponseBody::Workloads(WorkloadsResponse::List(_)))));
+        assert_eq!(resps[1].id, Some(2));
+        match &resps[1].result {
+            Ok(ResponseBody::Session(SessionInfo { backend: None, models_trained: 0, .. })) => {}
+            other => panic!("unexpected session response: {other:?}"),
+        }
+    }
+
+    #[test]
+    fn bad_lines_answer_protocol_errors_without_killing_the_loop() {
+        let s = session();
+        let input = "\
+not json\n\
+{\"id\":9,\"op\":\"nope\"}\n\
+{\"id\":10,\"op\":\"synth\",\"params\":{\"config\":{\"pe_type\":\"bogus\"}}}\n\
+{\"id\":11,\"op\":\"workloads\"}\n";
+        let mut out = Vec::new();
+        let stats = serve(&s, input.as_bytes(), &mut out, &ServeOptions { concurrency: 1 }).unwrap();
+        assert_eq!(stats.requests, 4);
+        assert_eq!(stats.errors, 3);
+        let resps = parse_lines(&out);
+        // unparseable line: id unknown
+        assert_eq!(resps[0].id, None);
+        let e = resps[0].result.as_ref().unwrap_err();
+        assert_eq!(e.kind, "protocol");
+        // unknown op: id echoed
+        assert_eq!(resps[1].id, Some(9));
+        assert!(resps[1].result.as_ref().unwrap_err().message.contains("nope"));
+        // typed param error
+        assert_eq!(resps[2].id, Some(10));
+        assert!(resps[2].result.as_ref().unwrap_err().message.contains("pe_type"));
+        // the loop survived to answer the good request
+        assert_eq!(resps[3].id, Some(11));
+        assert!(resps[3].result.is_ok());
+    }
+
+    #[test]
+    fn concurrent_loop_answers_every_request() {
+        let s = session();
+        let mut input = String::new();
+        for id in 1..=12u64 {
+            input.push_str(&format!("{{\"id\":{id},\"op\":\"workloads\"}}\n"));
+        }
+        let mut out = Vec::new();
+        let stats = serve(&s, input.as_bytes(), &mut out, &ServeOptions { concurrency: 4 }).unwrap();
+        assert_eq!(stats, ServeStats { requests: 12, ok: 12, errors: 0 });
+        let mut ids: Vec<u64> = parse_lines(&out).iter().map(|r| r.id.unwrap()).collect();
+        ids.sort_unstable();
+        assert_eq!(ids, (1..=12).collect::<Vec<_>>());
+    }
+}

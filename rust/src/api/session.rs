@@ -1,0 +1,516 @@
+//! The `Qappa` session facade: one warm handle over backend + engine +
+//! `ModelStore`, serving typed requests.
+//!
+//! A session owns everything a query needs — the regression backend (lazily
+//! started, so config-only requests never spin up the XLA engine), the DSE
+//! options (training recipe, design space, sharding) and a shared
+//! [`ModelStore`] — which is what makes QAPPA's economics work as a
+//! service: models train **once per session** and every subsequent
+//! `explore`/`fit` query is answered from the warm cache in the time of a
+//! sweep, not a training pass.  All methods take `&self` and the session is
+//! `Sync`, so one session can serve concurrent requests (`api::serve`).
+//!
+//! ```no_run
+//! use qappa::api::{ExploreRequest, Qappa};
+//!
+//! let session = Qappa::builder().build();
+//! let req = ExploreRequest { workloads: vec!["mobilenetv2".into()] };
+//! let resp = session.explore(&req).unwrap(); // trains models on first use
+//! let again = session.explore(&req).unwrap(); // warm: zero training passes
+//! assert_eq!(session.store().misses(), 4);
+//! # let _ = (resp, again);
+//! ```
+
+use std::path::PathBuf;
+use std::sync::{Arc, Mutex, OnceLock};
+
+use crate::api::error::QappaError;
+use crate::api::types::{
+    AnalyzeRequest, AnalyzeResponse, ExploreRequest, ExploreResponse, FitRequest, FitResponse,
+    CvPoint, FitModelReport, LayerCost, SessionInfo, SynthRequest, SynthResponse, WorkloadInfo,
+    WorkloadsRequest, WorkloadsResponse,
+};
+use crate::config::{PeType, ALL_PE_TYPES, NUM_FEATURES};
+use crate::coordinator::explorer::{
+    run_dse_multi, run_dse_with_store, DseOptions, DseResult, ModelStore, WorkloadSummary,
+};
+use crate::coordinator::report::{fig2_accuracy, AccuracyRow};
+use crate::coordinator::space::DesignSpace;
+use crate::coordinator::sweep::NamedWorkload;
+use crate::dataflow::Layer;
+use crate::model::native::NativeBackend;
+use crate::model::{Backend, CvConfig};
+use crate::runtime::{ArtifactRuntime, Engine, XlaBackend};
+use crate::workloads;
+
+/// Which regression backend a session drives.
+#[derive(Debug, Clone, PartialEq, Eq, Default)]
+pub enum BackendChoice {
+    /// XLA artifacts when `artifacts/manifest.json` exists, native
+    /// otherwise (the historical CLI default).
+    #[default]
+    Auto,
+    /// The pure-Rust fallback; needs no artifacts.
+    Native,
+    /// The PJRT artifact engine, from the given directory (or the default
+    /// artifact location when `None`).
+    Xla(Option<PathBuf>),
+}
+
+impl BackendChoice {
+    /// Parse the CLI `--backend` value.
+    pub fn parse(s: &str) -> Result<BackendChoice, QappaError> {
+        match s {
+            "native" => Ok(BackendChoice::Native),
+            "xla" => Ok(BackendChoice::Xla(None)),
+            "auto" => Ok(BackendChoice::Auto),
+            other => Err(QappaError::Config(format!("unknown backend '{other}'"))),
+        }
+    }
+}
+
+/// Owned backend (native or XLA-with-engine).
+enum AnyBackend {
+    Native(NativeBackend),
+    Xla(XlaBackend, Arc<Engine>),
+}
+
+impl AnyBackend {
+    fn get(&self) -> &dyn Backend {
+        match self {
+            AnyBackend::Native(b) => b,
+            AnyBackend::Xla(b, _) => b,
+        }
+    }
+
+    fn engine(&self) -> Option<&Engine> {
+        match self {
+            AnyBackend::Native(_) => None,
+            AnyBackend::Xla(_, e) => Some(e),
+        }
+    }
+}
+
+/// Builder for a [`Qappa`] session: backend choice, training recipe and
+/// design-space overrides.  Everything defaults to the paper-scale
+/// [`DseOptions::default`].
+#[derive(Default)]
+pub struct QappaBuilder {
+    choice: BackendChoice,
+    opts: DseOptions,
+}
+
+impl QappaBuilder {
+    pub fn backend(mut self, choice: BackendChoice) -> QappaBuilder {
+        self.choice = choice;
+        self
+    }
+
+    /// Replace the whole option block (training recipe + space + sharding).
+    pub fn options(mut self, opts: DseOptions) -> QappaBuilder {
+        self.opts = opts;
+        self
+    }
+
+    pub fn space(mut self, space: DesignSpace) -> QappaBuilder {
+        self.opts.space = space;
+        self
+    }
+
+    pub fn cv(mut self, cv: CvConfig) -> QappaBuilder {
+        self.opts.cv = cv;
+        self
+    }
+
+    /// k of the k-fold CV (keeps the rest of the CV grid).
+    pub fn cv_k(mut self, k: usize) -> QappaBuilder {
+        self.opts.cv.k = k;
+        self
+    }
+
+    pub fn train_per_type(mut self, n: usize) -> QappaBuilder {
+        self.opts.train_per_type = n;
+        self
+    }
+
+    pub fn seed(mut self, seed: u64) -> QappaBuilder {
+        self.opts.seed = seed;
+        self
+    }
+
+    pub fn workers(mut self, workers: usize) -> QappaBuilder {
+        self.opts.workers = workers;
+        self
+    }
+
+    pub fn sigma(mut self, sigma: f64) -> QappaBuilder {
+        self.opts.sigma = sigma;
+        self
+    }
+
+    pub fn chunk(mut self, chunk: usize) -> QappaBuilder {
+        self.opts.chunk = chunk;
+        self
+    }
+
+    pub fn topk(mut self, topk: usize) -> QappaBuilder {
+        self.opts.topk = topk;
+        self
+    }
+
+    pub fn build(self) -> Qappa {
+        Qappa {
+            choice: self.choice,
+            opts: self.opts,
+            store: ModelStore::new(),
+            backend: OnceLock::new(),
+            init: Mutex::new(()),
+        }
+    }
+}
+
+/// A warm QAPPA session (see the module docs).
+pub struct Qappa {
+    choice: BackendChoice,
+    opts: DseOptions,
+    store: ModelStore,
+    /// Lazily-initialized backend: config-only requests (`synth`,
+    /// `analyze`, `workloads`) never pay engine startup.
+    backend: OnceLock<AnyBackend>,
+    /// Serializes backend initialization (double-checked around the
+    /// `OnceLock`), so concurrent first requests start one engine.
+    init: Mutex<()>,
+}
+
+impl Qappa {
+    pub fn builder() -> QappaBuilder {
+        QappaBuilder::default()
+    }
+
+    /// The session's DSE options (training recipe, space, sharding).
+    pub fn options(&self) -> &DseOptions {
+        &self.opts
+    }
+
+    /// The session's model cache; `misses()` counts training passes run,
+    /// `hits()` the passes avoided.
+    pub fn store(&self) -> &ModelStore {
+        &self.store
+    }
+
+    /// The XLA engine, if the session runs one and it has started.
+    pub fn engine(&self) -> Option<&Engine> {
+        self.backend.get().and_then(|b| b.engine())
+    }
+
+    /// Backend name, forcing lazy initialization.
+    pub fn backend_name(&self) -> Result<&'static str, QappaError> {
+        Ok(self.backend()?.name())
+    }
+
+    fn backend(&self) -> Result<&dyn Backend, QappaError> {
+        if self.backend.get().is_none() {
+            let _guard = self.init.lock().unwrap_or_else(|p| p.into_inner());
+            if self.backend.get().is_none() {
+                let b = Self::start_backend(&self.choice)?;
+                let _ = self.backend.set(b);
+            }
+        }
+        Ok(self.backend.get().expect("backend initialized").get())
+    }
+
+    fn start_backend(choice: &BackendChoice) -> Result<AnyBackend, QappaError> {
+        let default_dir = ArtifactRuntime::artifacts_dir_default();
+        let dir = match choice {
+            BackendChoice::Native => return Ok(AnyBackend::Native(NativeBackend::new(NUM_FEATURES))),
+            BackendChoice::Auto => {
+                if !default_dir.join("manifest.json").exists() {
+                    return Ok(AnyBackend::Native(NativeBackend::new(NUM_FEATURES)));
+                }
+                default_dir
+            }
+            BackendChoice::Xla(Some(dir)) => dir.clone(),
+            BackendChoice::Xla(None) => default_dir,
+        };
+        let engine = Arc::new(Engine::start(&dir).map_err(|e| {
+            e.context(format!("starting XLA engine from {}", dir.display()))
+        })?);
+        eprintln!(
+            "[qappa] XLA engine up (d={}, B={}, N_fit={}) from {}",
+            engine.d,
+            engine.b_predict,
+            engine.n_fit,
+            dir.display()
+        );
+        Ok(AnyBackend::Xla(XlaBackend::new(engine.clone()), engine))
+    }
+
+    // ------------------------------------------------------------ queries
+
+    /// Ground-truth synthesis of one configuration (no models involved).
+    pub fn synth(&self, req: &SynthRequest) -> Result<SynthResponse, QappaError> {
+        req.config.validate()?;
+        Ok(SynthResponse {
+            config: req.config,
+            synthesized: crate::synth::synthesize(&req.config),
+            jitter_free: crate::synth::synthesize_clean(&req.config),
+        })
+    }
+
+    /// Train (or fetch warm) PPA models; empty `pe_types` means all four.
+    pub fn fit(&self, req: &FitRequest) -> Result<FitResponse, QappaError> {
+        let types: &[PeType] =
+            if req.pe_types.is_empty() { &ALL_PE_TYPES } else { &req.pe_types };
+        let backend = self.backend()?;
+        let mut models = Vec::with_capacity(types.len());
+        for &ty in types {
+            let m = self.store.get_or_train(backend, &self.opts, ty)?;
+            models.push(FitModelReport {
+                pe_type: ty,
+                degree: m.degree,
+                lambda: m.lambda,
+                n_train: m.n_train,
+                cv: m
+                    .cv_table
+                    .iter()
+                    .map(|e| CvPoint { degree: e.degree, lambda: e.lambda, mse: e.mse })
+                    .collect(),
+            });
+        }
+        Ok(FitResponse { backend: backend.name().to_string(), models })
+    }
+
+    /// Full DSE over already-loaded layers, retaining every evaluated
+    /// point (the CLI / figure path; models come from the warm store).
+    pub fn dse(&self, workload: &str, layers: &[Layer]) -> Result<DseResult, QappaError> {
+        run_dse_with_store(self.backend()?, &self.store, layers, workload, &self.opts)
+    }
+
+    /// Streaming DSE over one or more workload specs (built-in names or
+    /// JSON model paths): one pass over the grid, O(frontier + k) memory
+    /// per workload.  Workloads are resolved before the backend starts, so
+    /// a bad spec never pays engine startup.
+    pub fn explore_summaries(
+        &self,
+        req: &ExploreRequest,
+    ) -> Result<Vec<WorkloadSummary>, QappaError> {
+        if req.workloads.is_empty() {
+            return Err(QappaError::Workload("explore: empty workload list".into()));
+        }
+        let mut named = Vec::with_capacity(req.workloads.len());
+        for spec in &req.workloads {
+            let (name, layers) = workloads::load(spec)?;
+            named.push(NamedWorkload::new(name, layers));
+        }
+        self.explore_named(&named)
+    }
+
+    /// [`Qappa::explore_summaries`] over already-loaded workloads (the CLI
+    /// path, which resolves specs itself to report load errors early).
+    pub fn explore_named(
+        &self,
+        named: &[NamedWorkload],
+    ) -> Result<Vec<WorkloadSummary>, QappaError> {
+        if named.is_empty() {
+            return Err(QappaError::Workload("explore: empty workload list".into()));
+        }
+        run_dse_multi(self.backend()?, &self.store, named, &self.opts)
+    }
+
+    /// [`Qappa::explore_summaries`], condensed to the wire response.
+    pub fn explore(&self, req: &ExploreRequest) -> Result<ExploreResponse, QappaError> {
+        ExploreResponse::from_summaries(&self.explore_summaries(req)?)
+    }
+
+    /// Per-layer latency/energy breakdown of one workload on one config
+    /// (analytical models only; no training).
+    pub fn analyze(&self, req: &AnalyzeRequest) -> Result<AnalyzeResponse, QappaError> {
+        let (name, layers) = workloads::load(&req.workload)?;
+        req.config.validate()?;
+        let cfg = req.config;
+        let ep = crate::synth::oracle::energy_params(&cfg);
+        let ppa = crate::synth::synthesize_clean(&cfg);
+        let mut rows = Vec::with_capacity(layers.len());
+        let mut latency_s = 0.0;
+        let mut energy_mj = 0.0;
+        for l in &layers {
+            let mapped = crate::dataflow::map_layer(&cfg, &ep, l);
+            let traffic = crate::dataflow::layer_traffic(&cfg, l, &mapped);
+            let perf =
+                crate::dataflow::rs::apply_bandwidth(&cfg, &ep, l, &mapped, traffic.dram_bytes);
+            let e = crate::dataflow::layer_energy(&cfg, &ep, l, &perf, &traffic);
+            latency_s += perf.latency_s(ep.fmax_mhz);
+            energy_mj += e.total_mj();
+            rows.push(LayerCost {
+                name: l.name.clone(),
+                macs: l.macs(),
+                cycles: perf.cycles,
+                stall_cycles: perf.stall_cycles,
+                utilization: perf.utilization,
+                dram_bytes: traffic.dram_bytes,
+                compute_mj: e.compute_mj,
+                dram_mj: e.dram_mj,
+                other_mj: e.glb_mj + e.noc_mj + e.leakage_mj,
+                total_mj: e.total_mj(),
+            });
+        }
+        Ok(AnalyzeResponse { workload: name, config: cfg, ppa, layers: rows, latency_s, energy_mj })
+    }
+
+    /// List built-in workloads, or detail one spec.
+    pub fn workloads(&self, req: &WorkloadsRequest) -> Result<WorkloadsResponse, QappaError> {
+        match &req.workload {
+            Some(spec) => {
+                let (name, layers) = workloads::load(spec)?;
+                Ok(WorkloadsResponse::Detail { name, layers })
+            }
+            None => {
+                let mut list = Vec::with_capacity(workloads::WORKLOAD_NAMES.len());
+                for name in workloads::WORKLOAD_NAMES {
+                    let layers = workloads::by_name(name).expect("built-in workload");
+                    list.push(WorkloadInfo {
+                        name: name.to_string(),
+                        layers: layers.len(),
+                        depthwise: layers.iter().filter(|l| l.is_depthwise()).count(),
+                        macs: layers.iter().map(|l| l.macs()).sum(),
+                    });
+                }
+                Ok(WorkloadsResponse::List(list))
+            }
+        }
+    }
+
+    /// Figure-2 model accuracy (trains its own holdout models; the
+    /// ModelStore cache is not involved, matching the figure protocol).
+    pub fn accuracy(&self, holdout_per_type: usize) -> Result<Vec<AccuracyRow>, QappaError> {
+        fig2_accuracy(self.backend()?, &self.opts, holdout_per_type)
+    }
+
+    /// Session counters for the `session` op (does not force backend
+    /// initialization).
+    pub fn session_info(&self) -> SessionInfo {
+        SessionInfo {
+            backend: self.backend.get().map(|b| b.get().name().to_string()),
+            models_trained: self.store.misses(),
+            cache_hits: self.store.hits(),
+            workloads: workloads::WORKLOAD_NAMES.iter().map(|s| s.to_string()).collect(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::api::types::ExploreRequest;
+    use crate::config::AcceleratorConfig;
+
+    fn tiny_session() -> Qappa {
+        Qappa::builder()
+            .backend(BackendChoice::Native)
+            .space(DesignSpace::tiny())
+            .train_per_type(64)
+            .cv(CvConfig { k: 3, degrees: vec![1, 2], lambdas: vec![1e-3, 1e-2], seed: 1 })
+            .seed(7)
+            .workers(4)
+            .sigma(0.02)
+            .chunk(32)
+            .topk(8)
+            .build()
+    }
+
+    #[test]
+    fn synth_needs_no_backend() {
+        let s = tiny_session();
+        let req = SynthRequest { config: AcceleratorConfig::default_with(PeType::Int16) };
+        let resp = s.synth(&req).unwrap();
+        assert!(resp.synthesized.power_mw > 0.0 && resp.jitter_free.area_mm2 > 0.0);
+        // nothing forced the backend up
+        assert_eq!(s.session_info().backend, None);
+        assert_eq!(s.store().misses(), 0);
+    }
+
+    #[test]
+    fn models_train_once_across_queries() {
+        let s = tiny_session();
+        let req = ExploreRequest { workloads: vec!["vgg16".into()] };
+        // first explore trains all four models
+        let r1 = s.explore(&req).unwrap();
+        assert_eq!(s.store().misses(), 4);
+        assert_eq!(s.store().hits(), 0);
+        // fit and a repeat explore are pure cache hits
+        let fit = s.fit(&FitRequest::default()).unwrap();
+        assert_eq!(fit.models.len(), 4);
+        let r2 = s.explore(&req).unwrap();
+        assert_eq!(s.store().misses(), 4, "no retraining on a warm session");
+        assert!(s.store().hits() >= 8);
+        assert_eq!(r1, r2, "warm queries are deterministic");
+        let info = s.session_info();
+        assert_eq!(info.backend.as_deref(), Some("native"));
+        assert_eq!(info.models_trained, 4);
+    }
+
+    #[test]
+    fn explore_response_matches_dse_anchor() {
+        let s = tiny_session();
+        let (name, layers) = workloads::load("vgg16").unwrap();
+        let resp = s.explore(&ExploreRequest { workloads: vec!["vgg16".into()] }).unwrap();
+        let res = s.dse(&name, &layers).unwrap();
+        assert_eq!(resp.summaries.len(), 1);
+        let summary = &resp.summaries[0];
+        assert_eq!(summary.workload, "vgg16");
+        assert_eq!(summary.anchor, res.anchor.cfg);
+        for entry in &summary.entries {
+            let (pa, e) = res.ratios[&entry.pe_type];
+            assert_eq!(entry.perf_per_area, pa, "{:?}", entry.pe_type);
+            assert_eq!(entry.energy, e);
+            assert_eq!(entry.evaluated, s.options().space.len());
+        }
+    }
+
+    #[test]
+    fn analyze_and_workloads_are_config_only() {
+        let s = tiny_session();
+        let resp = s
+            .analyze(&AnalyzeRequest {
+                workload: "mobilenetv2".into(),
+                config: AcceleratorConfig::default_with(PeType::LightPe1),
+            })
+            .unwrap();
+        assert_eq!(resp.workload, "mobilenetv2");
+        assert_eq!(resp.layers.len(), workloads::mobilenetv2().len());
+        assert!(resp.latency_s > 0.0 && resp.energy_mj > 0.0);
+        let total: f64 = resp.layers.iter().map(|l| l.total_mj).sum();
+        assert!((total - resp.energy_mj).abs() < 1e-9);
+
+        match s.workloads(&WorkloadsRequest::default()).unwrap() {
+            WorkloadsResponse::List(list) => {
+                assert_eq!(list.len(), workloads::WORKLOAD_NAMES.len());
+                assert!(list.iter().any(|i| i.name == "mobilenetv1" && i.depthwise == 13));
+            }
+            other => panic!("expected a listing, got {other:?}"),
+        }
+        match s.workloads(&WorkloadsRequest { workload: Some("vgg-16".into()) }).unwrap() {
+            WorkloadsResponse::Detail { name, layers } => {
+                assert_eq!(name, "vgg16");
+                assert_eq!(layers, workloads::vgg16());
+            }
+            other => panic!("expected detail, got {other:?}"),
+        }
+        assert_eq!(s.store().misses(), 0, "no training for analytical queries");
+    }
+
+    #[test]
+    fn bad_requests_classify() {
+        let s = tiny_session();
+        let e = s
+            .explore(&ExploreRequest { workloads: vec!["alexnet".into()] })
+            .unwrap_err();
+        assert_eq!(e.kind(), "workload");
+        assert_eq!(s.session_info().backend, None, "bad spec never starts the backend");
+        let mut cfg = AcceleratorConfig::default_with(PeType::Int16);
+        cfg.pe_rows = 0;
+        let e = s.synth(&SynthRequest { config: cfg }).unwrap_err();
+        assert_eq!(e.kind(), "config");
+        assert_eq!(BackendChoice::parse("bogus").unwrap_err().to_string(), "unknown backend 'bogus'");
+    }
+}

@@ -1,0 +1,1266 @@
+//! Typed request / response structs for the `qappa::api` facade and the
+//! `qappa serve` wire protocol.
+//!
+//! Every type round-trips losslessly through [`crate::util::json`]
+//! (`to_json` → serialize → parse → `from_json` yields an equal value; the
+//! JSON writer prints `f64` with Rust's shortest-round-trip formatting).
+//! The schemas are documented in `docs/API.md`; `main.rs` builds requests
+//! from CLI flags and renders responses, `api::serve` speaks them over
+//! JSON-lines.
+//!
+//! Conventions:
+//!
+//! * configs serialize via [`AcceleratorConfig::to_json`]; request-side
+//!   parsing ([`config_from_json`]) accepts partial objects — `pe_type` is
+//!   required, every other field defaults from
+//!   [`AcceleratorConfig::default_with`] — and validates the result;
+//! * PE types serialize as their display labels (`"INT16"`,
+//!   `"LightPE-1"`, …) and parse through [`PeType::parse`] (case- and
+//!   alias-insensitive);
+//! * malformed request payloads are [`QappaError::Protocol`] errors that
+//!   name the offending field.
+
+use crate::api::error::QappaError;
+use crate::config::{AcceleratorConfig, PeType, ALL_PE_TYPES};
+use crate::coordinator::explorer::WorkloadSummary;
+use crate::dataflow::Layer;
+use crate::synth::oracle::Ppa;
+use crate::util::json::{obj, Json};
+use crate::workloads;
+
+// ---------------------------------------------------------------------------
+// field helpers
+// ---------------------------------------------------------------------------
+
+fn proto(msg: impl Into<String>) -> QappaError {
+    QappaError::Protocol(msg.into())
+}
+
+fn num_u(x: u64) -> Json {
+    Json::Num(x as f64)
+}
+
+fn req_str<'a>(v: &'a Json, key: &str, what: &str) -> Result<&'a str, QappaError> {
+    v.get(key)
+        .as_str()
+        .ok_or_else(|| proto(format!("{what}: missing or non-string field \"{key}\"")))
+}
+
+fn req_usize(v: &Json, key: &str, what: &str) -> Result<usize, QappaError> {
+    v.get(key)
+        .as_usize()
+        .ok_or_else(|| proto(format!("{what}: missing or non-integer field \"{key}\"")))
+}
+
+fn req_u64(v: &Json, key: &str, what: &str) -> Result<u64, QappaError> {
+    Ok(req_usize(v, key, what)? as u64)
+}
+
+fn req_f64(v: &Json, key: &str, what: &str) -> Result<f64, QappaError> {
+    v.get(key)
+        .as_f64()
+        .ok_or_else(|| proto(format!("{what}: missing or non-number field \"{key}\"")))
+}
+
+/// Optional u32: absent -> default, present-but-malformed (including
+/// values past u32::MAX, which `as` would silently wrap) -> error.
+fn opt_u32(v: &Json, key: &str, default: u32, what: &str) -> Result<u32, QappaError> {
+    match v.get(key) {
+        Json::Null => Ok(default),
+        other => other
+            .as_usize()
+            .and_then(|x| u32::try_from(x).ok())
+            .ok_or_else(|| proto(format!("{what}: field \"{key}\" must be a u32 integer"))),
+    }
+}
+
+fn pe_type_to_json(ty: PeType) -> Json {
+    Json::Str(ty.label().into())
+}
+
+fn pe_type_from_json(v: &Json, what: &str) -> Result<PeType, QappaError> {
+    let s = v
+        .as_str()
+        .ok_or_else(|| proto(format!("{what}: \"pe_type\" must be a string")))?;
+    PeType::parse(s).ok_or_else(|| {
+        proto(format!("{what}: unknown pe_type '{s}' (expected fp32|int16|lightpe1|lightpe2)"))
+    })
+}
+
+/// Parse an accelerator config from a (possibly partial) request object:
+/// `pe_type` is required, everything else defaults from
+/// [`AcceleratorConfig::default_with`].  The result is validated.
+pub fn config_from_json(v: &Json) -> Result<AcceleratorConfig, QappaError> {
+    let what = "config";
+    let ty = pe_type_from_json(v.get("pe_type"), what)?;
+    let mut cfg = AcceleratorConfig::default_with(ty);
+    cfg.pe_rows = opt_u32(v, "pe_rows", cfg.pe_rows, what)?;
+    cfg.pe_cols = opt_u32(v, "pe_cols", cfg.pe_cols, what)?;
+    cfg.glb_kb = opt_u32(v, "glb_kb", cfg.glb_kb, what)?;
+    cfg.spad_ifmap_b = opt_u32(v, "spad_ifmap_b", cfg.spad_ifmap_b, what)?;
+    cfg.spad_filter_b = opt_u32(v, "spad_filter_b", cfg.spad_filter_b, what)?;
+    cfg.spad_psum_b = opt_u32(v, "spad_psum_b", cfg.spad_psum_b, what)?;
+    cfg.bandwidth_gbps = match v.get("bandwidth_gbps") {
+        Json::Null => cfg.bandwidth_gbps,
+        other => other
+            .as_f64()
+            .ok_or_else(|| proto(format!("{what}: field \"bandwidth_gbps\" must be a number")))?,
+    };
+    cfg.validate()?;
+    Ok(cfg)
+}
+
+fn ppa_to_json(p: &Ppa) -> Json {
+    obj(vec![
+        ("power_mw", Json::Num(p.power_mw)),
+        ("fmax_mhz", Json::Num(p.fmax_mhz)),
+        ("area_mm2", Json::Num(p.area_mm2)),
+    ])
+}
+
+fn ppa_from_json(v: &Json, what: &str) -> Result<Ppa, QappaError> {
+    Ok(Ppa {
+        power_mw: req_f64(v, "power_mw", what)?,
+        fmax_mhz: req_f64(v, "fmax_mhz", what)?,
+        area_mm2: req_f64(v, "area_mm2", what)?,
+    })
+}
+
+// ---------------------------------------------------------------------------
+// synth
+// ---------------------------------------------------------------------------
+
+/// `synth`: ground-truth PPA for one configuration.
+#[derive(Debug, Clone, PartialEq)]
+pub struct SynthRequest {
+    pub config: AcceleratorConfig,
+}
+
+impl SynthRequest {
+    pub fn to_json(&self) -> Json {
+        obj(vec![("config", self.config.to_json())])
+    }
+
+    pub fn from_json(v: &Json) -> Result<SynthRequest, QappaError> {
+        Ok(SynthRequest { config: config_from_json(v.get("config"))? })
+    }
+}
+
+/// `synth` result: the jittered (tool-realistic) and jitter-free PPA.
+#[derive(Debug, Clone, PartialEq)]
+pub struct SynthResponse {
+    pub config: AcceleratorConfig,
+    pub synthesized: Ppa,
+    pub jitter_free: Ppa,
+}
+
+impl SynthResponse {
+    pub fn to_json(&self) -> Json {
+        obj(vec![
+            ("config", self.config.to_json()),
+            ("synthesized", ppa_to_json(&self.synthesized)),
+            ("jitter_free", ppa_to_json(&self.jitter_free)),
+        ])
+    }
+
+    pub fn from_json(v: &Json) -> Result<SynthResponse, QappaError> {
+        Ok(SynthResponse {
+            config: config_from_json(v.get("config"))?,
+            synthesized: ppa_from_json(v.get("synthesized"), "synth.synthesized")?,
+            jitter_free: ppa_from_json(v.get("jitter_free"), "synth.jitter_free")?,
+        })
+    }
+}
+
+// ---------------------------------------------------------------------------
+// fit
+// ---------------------------------------------------------------------------
+
+/// `fit`: train (or fetch from the session's `ModelStore`) the PPA models.
+/// An empty `pe_types` list means all four types.
+#[derive(Debug, Clone, PartialEq, Default)]
+pub struct FitRequest {
+    pub pe_types: Vec<PeType>,
+}
+
+impl FitRequest {
+    pub fn to_json(&self) -> Json {
+        if self.pe_types.is_empty() {
+            return obj(vec![]);
+        }
+        obj(vec![(
+            "pe_types",
+            Json::Arr(self.pe_types.iter().map(|&t| pe_type_to_json(t)).collect()),
+        )])
+    }
+
+    pub fn from_json(v: &Json) -> Result<FitRequest, QappaError> {
+        let mut pe_types = Vec::new();
+        match v.get("pe_types") {
+            Json::Null => {}
+            Json::Arr(items) => {
+                for item in items {
+                    pe_types.push(pe_type_from_json(item, "fit.pe_types")?);
+                }
+            }
+            _ => return Err(proto("fit: \"pe_types\" must be an array of PE-type names")),
+        }
+        Ok(FitRequest { pe_types })
+    }
+}
+
+/// One (degree, lambda) CV grid entry.
+#[derive(Debug, Clone, PartialEq)]
+pub struct CvPoint {
+    pub degree: usize,
+    pub lambda: f64,
+    pub mse: f64,
+}
+
+/// The selected model for one PE type, with its CV table.
+#[derive(Debug, Clone, PartialEq)]
+pub struct FitModelReport {
+    pub pe_type: PeType,
+    pub degree: usize,
+    pub lambda: f64,
+    pub n_train: usize,
+    pub cv: Vec<CvPoint>,
+}
+
+impl FitModelReport {
+    fn to_json(&self) -> Json {
+        obj(vec![
+            ("pe_type", pe_type_to_json(self.pe_type)),
+            ("degree", num_u(self.degree as u64)),
+            ("lambda", Json::Num(self.lambda)),
+            ("n_train", num_u(self.n_train as u64)),
+            (
+                "cv",
+                Json::Arr(
+                    self.cv
+                        .iter()
+                        .map(|e| {
+                            obj(vec![
+                                ("degree", num_u(e.degree as u64)),
+                                ("lambda", Json::Num(e.lambda)),
+                                ("mse", Json::Num(e.mse)),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
+        ])
+    }
+
+    fn from_json(v: &Json) -> Result<FitModelReport, QappaError> {
+        let what = "fit.models[]";
+        let cv_arr = v
+            .get("cv")
+            .as_arr()
+            .ok_or_else(|| proto(format!("{what}: missing \"cv\" array")))?;
+        let mut cv = Vec::with_capacity(cv_arr.len());
+        for e in cv_arr {
+            cv.push(CvPoint {
+                degree: req_usize(e, "degree", "fit.cv[]")?,
+                lambda: req_f64(e, "lambda", "fit.cv[]")?,
+                mse: req_f64(e, "mse", "fit.cv[]")?,
+            });
+        }
+        Ok(FitModelReport {
+            pe_type: pe_type_from_json(v.get("pe_type"), what)?,
+            degree: req_usize(v, "degree", what)?,
+            lambda: req_f64(v, "lambda", what)?,
+            n_train: req_usize(v, "n_train", what)?,
+            cv,
+        })
+    }
+}
+
+/// `fit` result: the backend that trained and one report per PE type.
+#[derive(Debug, Clone, PartialEq)]
+pub struct FitResponse {
+    pub backend: String,
+    pub models: Vec<FitModelReport>,
+}
+
+impl FitResponse {
+    pub fn to_json(&self) -> Json {
+        obj(vec![
+            ("backend", Json::Str(self.backend.clone())),
+            ("models", Json::Arr(self.models.iter().map(|m| m.to_json()).collect())),
+        ])
+    }
+
+    pub fn from_json(v: &Json) -> Result<FitResponse, QappaError> {
+        let arr = v
+            .get("models")
+            .as_arr()
+            .ok_or_else(|| proto("fit: missing \"models\" array"))?;
+        let mut models = Vec::with_capacity(arr.len());
+        for m in arr {
+            models.push(FitModelReport::from_json(m)?);
+        }
+        Ok(FitResponse { backend: req_str(v, "backend", "fit")?.to_string(), models })
+    }
+}
+
+// ---------------------------------------------------------------------------
+// explore
+// ---------------------------------------------------------------------------
+
+/// `explore`: design-space exploration over one or more workloads (built-in
+/// names or JSON model file paths) in a single streaming pass.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ExploreRequest {
+    pub workloads: Vec<String>,
+}
+
+impl ExploreRequest {
+    pub fn to_json(&self) -> Json {
+        obj(vec![(
+            "workloads",
+            Json::Arr(self.workloads.iter().map(|w| Json::Str(w.clone())).collect()),
+        )])
+    }
+
+    pub fn from_json(v: &Json) -> Result<ExploreRequest, QappaError> {
+        let arr = v
+            .get("workloads")
+            .as_arr()
+            .ok_or_else(|| proto("explore: missing \"workloads\" array"))?;
+        let mut workloads = Vec::with_capacity(arr.len());
+        for w in arr {
+            workloads.push(
+                w.as_str()
+                    .ok_or_else(|| proto("explore: \"workloads\" entries must be strings"))?
+                    .to_string(),
+            );
+        }
+        if workloads.is_empty() {
+            return Err(proto("explore: \"workloads\" must not be empty"));
+        }
+        Ok(ExploreRequest { workloads })
+    }
+}
+
+/// Per-PE-type exploration result: anchor-normalized ratios (predicted and
+/// winner-validated), frontier size, engine counters and the best config.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ExploreEntry {
+    pub pe_type: PeType,
+    /// Best perf/area relative to the INT16 anchor (model-predicted).
+    pub perf_per_area: f64,
+    /// The same ratio with the winning configs re-synthesized (honest
+    /// post-selection numbers).
+    pub perf_per_area_validated: f64,
+    /// Energy-improvement ratio vs the anchor (model-predicted).
+    pub energy: f64,
+    pub energy_validated: f64,
+    /// Pareto-frontier size.
+    pub frontier: usize,
+    /// Evaluated grid points.
+    pub evaluated: usize,
+    /// Streaming shards processed.
+    pub shards: usize,
+    /// Peak resident point count (the streaming-memory guarantee).
+    pub peak_resident: usize,
+    /// Best perf/area configuration.
+    pub best: AcceleratorConfig,
+}
+
+impl ExploreEntry {
+    fn to_json(&self) -> Json {
+        obj(vec![
+            ("pe_type", pe_type_to_json(self.pe_type)),
+            ("perf_per_area", Json::Num(self.perf_per_area)),
+            ("perf_per_area_validated", Json::Num(self.perf_per_area_validated)),
+            ("energy", Json::Num(self.energy)),
+            ("energy_validated", Json::Num(self.energy_validated)),
+            ("frontier", num_u(self.frontier as u64)),
+            ("evaluated", num_u(self.evaluated as u64)),
+            ("shards", num_u(self.shards as u64)),
+            ("peak_resident", num_u(self.peak_resident as u64)),
+            ("best", self.best.to_json()),
+        ])
+    }
+
+    fn from_json(v: &Json) -> Result<ExploreEntry, QappaError> {
+        let what = "explore.entries[]";
+        Ok(ExploreEntry {
+            pe_type: pe_type_from_json(v.get("pe_type"), what)?,
+            perf_per_area: req_f64(v, "perf_per_area", what)?,
+            perf_per_area_validated: req_f64(v, "perf_per_area_validated", what)?,
+            energy: req_f64(v, "energy", what)?,
+            energy_validated: req_f64(v, "energy_validated", what)?,
+            frontier: req_usize(v, "frontier", what)?,
+            evaluated: req_usize(v, "evaluated", what)?,
+            shards: req_usize(v, "shards", what)?,
+            peak_resident: req_usize(v, "peak_resident", what)?,
+            best: config_from_json(v.get("best"))?,
+        })
+    }
+}
+
+/// One workload's exploration summary.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ExploreSummary {
+    pub workload: String,
+    /// The INT16 anchor config (best predicted perf/area).
+    pub anchor: AcceleratorConfig,
+    pub entries: Vec<ExploreEntry>,
+}
+
+impl ExploreSummary {
+    fn to_json(&self) -> Json {
+        obj(vec![
+            ("workload", Json::Str(self.workload.clone())),
+            ("anchor", self.anchor.to_json()),
+            ("entries", Json::Arr(self.entries.iter().map(|e| e.to_json()).collect())),
+        ])
+    }
+
+    fn from_json(v: &Json) -> Result<ExploreSummary, QappaError> {
+        let arr = v
+            .get("entries")
+            .as_arr()
+            .ok_or_else(|| proto("explore.summaries[]: missing \"entries\" array"))?;
+        let mut entries = Vec::with_capacity(arr.len());
+        for e in arr {
+            entries.push(ExploreEntry::from_json(e)?);
+        }
+        Ok(ExploreSummary {
+            workload: req_str(v, "workload", "explore.summaries[]")?.to_string(),
+            anchor: config_from_json(v.get("anchor"))?,
+            entries,
+        })
+    }
+}
+
+/// `explore` result: one summary per requested workload, input order.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ExploreResponse {
+    pub summaries: Vec<ExploreSummary>,
+}
+
+impl ExploreResponse {
+    /// Condense streaming [`WorkloadSummary`]s into the wire shape.
+    pub fn from_summaries(summaries: &[WorkloadSummary]) -> Result<ExploreResponse, QappaError> {
+        let mut out = Vec::with_capacity(summaries.len());
+        for s in summaries {
+            let mut entries = Vec::with_capacity(ALL_PE_TYPES.len());
+            for ty in ALL_PE_TYPES {
+                let (pa, e) = s.ratios[&ty];
+                let (pav, ev) = s.ratios_validated[&ty];
+                let st = &s.stats[&ty];
+                let best = s.top_perf_per_area[&ty].first().ok_or_else(|| {
+                    QappaError::Model(format!("empty {} reservoir for '{}'", ty.label(), s.workload))
+                })?;
+                entries.push(ExploreEntry {
+                    pe_type: ty,
+                    perf_per_area: pa,
+                    perf_per_area_validated: pav,
+                    energy: e,
+                    energy_validated: ev,
+                    frontier: s.frontier[&ty].len(),
+                    evaluated: st.evaluated,
+                    shards: st.shards,
+                    peak_resident: st.peak_resident,
+                    best: best.cfg,
+                });
+            }
+            out.push(ExploreSummary {
+                workload: s.workload.clone(),
+                anchor: s.anchor.cfg,
+                entries,
+            });
+        }
+        Ok(ExploreResponse { summaries: out })
+    }
+
+    pub fn to_json(&self) -> Json {
+        obj(vec![(
+            "summaries",
+            Json::Arr(self.summaries.iter().map(|s| s.to_json()).collect()),
+        )])
+    }
+
+    pub fn from_json(v: &Json) -> Result<ExploreResponse, QappaError> {
+        let arr = v
+            .get("summaries")
+            .as_arr()
+            .ok_or_else(|| proto("explore: missing \"summaries\" array"))?;
+        let mut summaries = Vec::with_capacity(arr.len());
+        for s in arr {
+            summaries.push(ExploreSummary::from_json(s)?);
+        }
+        Ok(ExploreResponse { summaries })
+    }
+}
+
+// ---------------------------------------------------------------------------
+// analyze
+// ---------------------------------------------------------------------------
+
+/// `analyze`: per-layer latency/energy breakdown of one workload on one
+/// configuration.
+#[derive(Debug, Clone, PartialEq)]
+pub struct AnalyzeRequest {
+    pub workload: String,
+    pub config: AcceleratorConfig,
+}
+
+impl AnalyzeRequest {
+    pub fn to_json(&self) -> Json {
+        obj(vec![
+            ("workload", Json::Str(self.workload.clone())),
+            ("config", self.config.to_json()),
+        ])
+    }
+
+    pub fn from_json(v: &Json) -> Result<AnalyzeRequest, QappaError> {
+        Ok(AnalyzeRequest {
+            workload: req_str(v, "workload", "analyze")?.to_string(),
+            config: config_from_json(v.get("config"))?,
+        })
+    }
+}
+
+/// Per-layer cost row of an [`AnalyzeResponse`].
+#[derive(Debug, Clone, PartialEq)]
+pub struct LayerCost {
+    pub name: String,
+    pub macs: u64,
+    pub cycles: u64,
+    pub stall_cycles: u64,
+    pub utilization: f64,
+    pub dram_bytes: u64,
+    pub compute_mj: f64,
+    pub dram_mj: f64,
+    /// GLB + NoC + leakage energy.
+    pub other_mj: f64,
+    pub total_mj: f64,
+}
+
+impl LayerCost {
+    fn to_json(&self) -> Json {
+        obj(vec![
+            ("name", Json::Str(self.name.clone())),
+            ("macs", num_u(self.macs)),
+            ("cycles", num_u(self.cycles)),
+            ("stall_cycles", num_u(self.stall_cycles)),
+            ("utilization", Json::Num(self.utilization)),
+            ("dram_bytes", num_u(self.dram_bytes)),
+            ("compute_mj", Json::Num(self.compute_mj)),
+            ("dram_mj", Json::Num(self.dram_mj)),
+            ("other_mj", Json::Num(self.other_mj)),
+            ("total_mj", Json::Num(self.total_mj)),
+        ])
+    }
+
+    fn from_json(v: &Json) -> Result<LayerCost, QappaError> {
+        let what = "analyze.layers[]";
+        Ok(LayerCost {
+            name: req_str(v, "name", what)?.to_string(),
+            macs: req_u64(v, "macs", what)?,
+            cycles: req_u64(v, "cycles", what)?,
+            stall_cycles: req_u64(v, "stall_cycles", what)?,
+            utilization: req_f64(v, "utilization", what)?,
+            dram_bytes: req_u64(v, "dram_bytes", what)?,
+            compute_mj: req_f64(v, "compute_mj", what)?,
+            dram_mj: req_f64(v, "dram_mj", what)?,
+            other_mj: req_f64(v, "other_mj", what)?,
+            total_mj: req_f64(v, "total_mj", what)?,
+        })
+    }
+}
+
+/// `analyze` result: the jitter-free PPA of the config plus per-layer and
+/// whole-network costs.
+#[derive(Debug, Clone, PartialEq)]
+pub struct AnalyzeResponse {
+    pub workload: String,
+    pub config: AcceleratorConfig,
+    pub ppa: Ppa,
+    pub layers: Vec<LayerCost>,
+    /// End-to-end latency, seconds per inference.
+    pub latency_s: f64,
+    /// End-to-end energy, mJ per inference.
+    pub energy_mj: f64,
+}
+
+impl AnalyzeResponse {
+    pub fn to_json(&self) -> Json {
+        obj(vec![
+            ("workload", Json::Str(self.workload.clone())),
+            ("config", self.config.to_json()),
+            ("ppa", ppa_to_json(&self.ppa)),
+            ("layers", Json::Arr(self.layers.iter().map(|l| l.to_json()).collect())),
+            ("latency_s", Json::Num(self.latency_s)),
+            ("energy_mj", Json::Num(self.energy_mj)),
+        ])
+    }
+
+    pub fn from_json(v: &Json) -> Result<AnalyzeResponse, QappaError> {
+        let arr = v
+            .get("layers")
+            .as_arr()
+            .ok_or_else(|| proto("analyze: missing \"layers\" array"))?;
+        let mut layers = Vec::with_capacity(arr.len());
+        for l in arr {
+            layers.push(LayerCost::from_json(l)?);
+        }
+        Ok(AnalyzeResponse {
+            workload: req_str(v, "workload", "analyze")?.to_string(),
+            config: config_from_json(v.get("config"))?,
+            ppa: ppa_from_json(v.get("ppa"), "analyze.ppa")?,
+            layers,
+            latency_s: req_f64(v, "latency_s", "analyze")?,
+            energy_mj: req_f64(v, "energy_mj", "analyze")?,
+        })
+    }
+}
+
+// ---------------------------------------------------------------------------
+// workloads
+// ---------------------------------------------------------------------------
+
+/// `workloads`: list the built-in networks, or detail one workload
+/// (built-in name or JSON model path).
+#[derive(Debug, Clone, PartialEq, Default)]
+pub struct WorkloadsRequest {
+    pub workload: Option<String>,
+}
+
+impl WorkloadsRequest {
+    pub fn to_json(&self) -> Json {
+        match &self.workload {
+            Some(w) => obj(vec![("workload", Json::Str(w.clone()))]),
+            None => obj(vec![]),
+        }
+    }
+
+    pub fn from_json(v: &Json) -> Result<WorkloadsRequest, QappaError> {
+        let workload = match v.get("workload") {
+            Json::Null => None,
+            other => Some(
+                other
+                    .as_str()
+                    .ok_or_else(|| proto("workloads: \"workload\" must be a string"))?
+                    .to_string(),
+            ),
+        };
+        Ok(WorkloadsRequest { workload })
+    }
+}
+
+/// Listing row for one built-in network.
+#[derive(Debug, Clone, PartialEq)]
+pub struct WorkloadInfo {
+    pub name: String,
+    pub layers: usize,
+    pub depthwise: usize,
+    pub macs: u64,
+}
+
+/// `workloads` result: a listing, or one workload's full layer table
+/// (layers travel in the `docs/WORKLOADS.md` JSON schema, so the detail
+/// payload is itself a loadable model file).
+#[derive(Debug, Clone, PartialEq)]
+pub enum WorkloadsResponse {
+    List(Vec<WorkloadInfo>),
+    Detail { name: String, layers: Vec<Layer> },
+}
+
+impl WorkloadsResponse {
+    pub fn to_json(&self) -> Json {
+        match self {
+            WorkloadsResponse::List(infos) => obj(vec![(
+                "list",
+                Json::Arr(
+                    infos
+                        .iter()
+                        .map(|i| {
+                            obj(vec![
+                                ("name", Json::Str(i.name.clone())),
+                                ("layers", num_u(i.layers as u64)),
+                                ("depthwise", num_u(i.depthwise as u64)),
+                                ("macs", num_u(i.macs)),
+                            ])
+                        })
+                        .collect(),
+                ),
+            )]),
+            WorkloadsResponse::Detail { name, layers } => {
+                obj(vec![("detail", workloads::to_json(name, layers))])
+            }
+        }
+    }
+
+    pub fn from_json(v: &Json) -> Result<WorkloadsResponse, QappaError> {
+        match v.get("list") {
+            Json::Null => {}
+            Json::Arr(items) => {
+                let mut infos = Vec::with_capacity(items.len());
+                for i in items {
+                    infos.push(WorkloadInfo {
+                        name: req_str(i, "name", "workloads.list[]")?.to_string(),
+                        layers: req_usize(i, "layers", "workloads.list[]")?,
+                        depthwise: req_usize(i, "depthwise", "workloads.list[]")?,
+                        macs: req_u64(i, "macs", "workloads.list[]")?,
+                    });
+                }
+                return Ok(WorkloadsResponse::List(infos));
+            }
+            _ => return Err(proto("workloads: \"list\" must be an array")),
+        }
+        match v.get("detail") {
+            Json::Null => Err(proto("workloads: expected a \"list\" or \"detail\" field")),
+            detail => {
+                let (name, layers) = workloads::from_json_value(detail)?;
+                Ok(WorkloadsResponse::Detail { name, layers })
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// session introspection
+// ---------------------------------------------------------------------------
+
+/// `session`: counters of the serving session — which backend is warm and
+/// how many model-training passes ran vs were served from the
+/// `ModelStore` cache.
+#[derive(Debug, Clone, PartialEq)]
+pub struct SessionInfo {
+    /// Backend name, once lazily initialized (`None` before the first
+    /// model-needing request).
+    pub backend: Option<String>,
+    /// Training passes actually run (`ModelStore` misses).
+    pub models_trained: usize,
+    /// Avoided training passes (`ModelStore` hits).
+    pub cache_hits: usize,
+    /// Built-in workload names.
+    pub workloads: Vec<String>,
+}
+
+impl SessionInfo {
+    pub fn to_json(&self) -> Json {
+        let mut pairs = vec![
+            ("models_trained", num_u(self.models_trained as u64)),
+            ("cache_hits", num_u(self.cache_hits as u64)),
+            (
+                "workloads",
+                Json::Arr(self.workloads.iter().map(|w| Json::Str(w.clone())).collect()),
+            ),
+        ];
+        if let Some(b) = &self.backend {
+            pairs.push(("backend", Json::Str(b.clone())));
+        }
+        obj(pairs)
+    }
+
+    pub fn from_json(v: &Json) -> Result<SessionInfo, QappaError> {
+        let backend = match v.get("backend") {
+            Json::Null => None,
+            other => Some(
+                other
+                    .as_str()
+                    .ok_or_else(|| proto("session: \"backend\" must be a string"))?
+                    .to_string(),
+            ),
+        };
+        let arr = v
+            .get("workloads")
+            .as_arr()
+            .ok_or_else(|| proto("session: missing \"workloads\" array"))?;
+        let mut names = Vec::with_capacity(arr.len());
+        for w in arr {
+            names.push(
+                w.as_str()
+                    .ok_or_else(|| proto("session: \"workloads\" entries must be strings"))?
+                    .to_string(),
+            );
+        }
+        Ok(SessionInfo {
+            backend,
+            models_trained: req_usize(v, "models_trained", "session")?,
+            cache_hits: req_usize(v, "cache_hits", "session")?,
+            workloads: names,
+        })
+    }
+}
+
+// ---------------------------------------------------------------------------
+// error payload
+// ---------------------------------------------------------------------------
+
+/// Wire shape of a failed request: the stable [`QappaError::kind`] tag plus
+/// the human-readable message.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ErrorBody {
+    pub kind: String,
+    pub message: String,
+}
+
+impl From<&QappaError> for ErrorBody {
+    fn from(e: &QappaError) -> ErrorBody {
+        ErrorBody { kind: e.kind().to_string(), message: e.to_string() }
+    }
+}
+
+impl ErrorBody {
+    pub fn to_json(&self) -> Json {
+        obj(vec![
+            ("kind", Json::Str(self.kind.clone())),
+            ("message", Json::Str(self.message.clone())),
+        ])
+    }
+
+    pub fn from_json(v: &Json) -> Result<ErrorBody, QappaError> {
+        Ok(ErrorBody {
+            kind: req_str(v, "kind", "error")?.to_string(),
+            message: req_str(v, "message", "error")?.to_string(),
+        })
+    }
+}
+
+// ---------------------------------------------------------------------------
+// serve envelope
+// ---------------------------------------------------------------------------
+
+/// The ops the serve loop understands, with their typed parameters.
+#[derive(Debug, Clone, PartialEq)]
+pub enum RequestBody {
+    Synth(SynthRequest),
+    Fit(FitRequest),
+    Explore(ExploreRequest),
+    Analyze(AnalyzeRequest),
+    Workloads(WorkloadsRequest),
+    Session,
+}
+
+/// Every op name, in help/docs order.
+pub const OPS: [&str; 6] = ["synth", "fit", "explore", "analyze", "workloads", "session"];
+
+impl RequestBody {
+    pub fn op(&self) -> &'static str {
+        match self {
+            RequestBody::Synth(_) => "synth",
+            RequestBody::Fit(_) => "fit",
+            RequestBody::Explore(_) => "explore",
+            RequestBody::Analyze(_) => "analyze",
+            RequestBody::Workloads(_) => "workloads",
+            RequestBody::Session => "session",
+        }
+    }
+
+    pub fn from_op_params(op: &str, params: &Json) -> Result<RequestBody, QappaError> {
+        match op {
+            "synth" => Ok(RequestBody::Synth(SynthRequest::from_json(params)?)),
+            "fit" => Ok(RequestBody::Fit(FitRequest::from_json(params)?)),
+            "explore" => Ok(RequestBody::Explore(ExploreRequest::from_json(params)?)),
+            "analyze" => Ok(RequestBody::Analyze(AnalyzeRequest::from_json(params)?)),
+            "workloads" => Ok(RequestBody::Workloads(WorkloadsRequest::from_json(params)?)),
+            "session" => Ok(RequestBody::Session),
+            other => Err(proto(format!(
+                "unknown op '{other}' (expected {})",
+                OPS.join("|")
+            ))),
+        }
+    }
+
+    pub fn params_to_json(&self) -> Json {
+        match self {
+            RequestBody::Synth(r) => r.to_json(),
+            RequestBody::Fit(r) => r.to_json(),
+            RequestBody::Explore(r) => r.to_json(),
+            RequestBody::Analyze(r) => r.to_json(),
+            RequestBody::Workloads(r) => r.to_json(),
+            RequestBody::Session => obj(vec![]),
+        }
+    }
+}
+
+/// One JSON-lines request: `{"id": 7, "op": "explore", "params": {...}}`.
+/// `id` is optional and echoed verbatim in the response — clients that
+/// pipeline concurrent requests correlate by it.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ServeRequest {
+    pub id: Option<u64>,
+    pub body: RequestBody,
+}
+
+impl ServeRequest {
+    pub fn to_json(&self) -> Json {
+        let mut pairs = Vec::new();
+        if let Some(id) = self.id {
+            pairs.push(("id", num_u(id)));
+        }
+        pairs.push(("op", Json::Str(self.body.op().into())));
+        pairs.push(("params", self.body.params_to_json()));
+        obj(pairs)
+    }
+
+    pub fn from_json(v: &Json) -> Result<ServeRequest, QappaError> {
+        if v.as_obj().is_none() {
+            return Err(proto("request must be a JSON object"));
+        }
+        let id = match v.get("id") {
+            Json::Null => None,
+            other => Some(
+                other
+                    .as_usize()
+                    .ok_or_else(|| proto("\"id\" must be a non-negative integer"))?
+                    as u64,
+            ),
+        };
+        let op = req_str(v, "op", "request")?;
+        let body = RequestBody::from_op_params(op, v.get("params"))?;
+        Ok(ServeRequest { id, body })
+    }
+
+    /// Parse one request line (JSON syntax errors become protocol errors).
+    pub fn parse_line(line: &str) -> Result<ServeRequest, QappaError> {
+        let v = Json::parse(line)?;
+        ServeRequest::from_json(&v)
+    }
+}
+
+/// Typed results, one variant per op.
+#[derive(Debug, Clone, PartialEq)]
+pub enum ResponseBody {
+    Synth(SynthResponse),
+    Fit(FitResponse),
+    Explore(ExploreResponse),
+    Analyze(AnalyzeResponse),
+    Workloads(WorkloadsResponse),
+    Session(SessionInfo),
+}
+
+impl ResponseBody {
+    pub fn op(&self) -> &'static str {
+        match self {
+            ResponseBody::Synth(_) => "synth",
+            ResponseBody::Fit(_) => "fit",
+            ResponseBody::Explore(_) => "explore",
+            ResponseBody::Analyze(_) => "analyze",
+            ResponseBody::Workloads(_) => "workloads",
+            ResponseBody::Session(_) => "session",
+        }
+    }
+
+    fn result_to_json(&self) -> Json {
+        match self {
+            ResponseBody::Synth(r) => r.to_json(),
+            ResponseBody::Fit(r) => r.to_json(),
+            ResponseBody::Explore(r) => r.to_json(),
+            ResponseBody::Analyze(r) => r.to_json(),
+            ResponseBody::Workloads(r) => r.to_json(),
+            ResponseBody::Session(r) => r.to_json(),
+        }
+    }
+
+    fn from_op_result(op: &str, result: &Json) -> Result<ResponseBody, QappaError> {
+        match op {
+            "synth" => Ok(ResponseBody::Synth(SynthResponse::from_json(result)?)),
+            "fit" => Ok(ResponseBody::Fit(FitResponse::from_json(result)?)),
+            "explore" => Ok(ResponseBody::Explore(ExploreResponse::from_json(result)?)),
+            "analyze" => Ok(ResponseBody::Analyze(AnalyzeResponse::from_json(result)?)),
+            "workloads" => Ok(ResponseBody::Workloads(WorkloadsResponse::from_json(result)?)),
+            "session" => Ok(ResponseBody::Session(SessionInfo::from_json(result)?)),
+            other => Err(proto(format!("unknown response op '{other}'"))),
+        }
+    }
+}
+
+/// One JSON-lines response:
+/// `{"id": 7, "ok": true, "op": "explore", "result": {...}}` or
+/// `{"id": 7, "ok": false, "error": {"kind": "...", "message": "..."}}`.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ServeResponse {
+    pub id: Option<u64>,
+    pub result: Result<ResponseBody, ErrorBody>,
+}
+
+impl ServeResponse {
+    pub fn to_json(&self) -> Json {
+        // Responses always carry an explicit `id` (`null` when the request
+        // line didn't parse far enough to supply one) — the documented
+        // wire contract, so strict clients can key on the field.
+        let mut pairs = vec![("id", match self.id {
+            Some(id) => num_u(id),
+            None => Json::Null,
+        })];
+        match &self.result {
+            Ok(body) => {
+                pairs.push(("ok", Json::Bool(true)));
+                pairs.push(("op", Json::Str(body.op().into())));
+                pairs.push(("result", body.result_to_json()));
+            }
+            Err(e) => {
+                pairs.push(("ok", Json::Bool(false)));
+                pairs.push(("error", e.to_json()));
+            }
+        }
+        obj(pairs)
+    }
+
+    pub fn from_json(v: &Json) -> Result<ServeResponse, QappaError> {
+        let id = match v.get("id") {
+            Json::Null => None,
+            other => Some(
+                other
+                    .as_usize()
+                    .ok_or_else(|| proto("response \"id\" must be a non-negative integer"))?
+                    as u64,
+            ),
+        };
+        match v.get("ok").as_bool() {
+            Some(true) => {
+                let op = req_str(v, "op", "response")?;
+                let body = ResponseBody::from_op_result(op, v.get("result"))?;
+                Ok(ServeResponse { id, result: Ok(body) })
+            }
+            Some(false) => Ok(ServeResponse {
+                id,
+                result: Err(ErrorBody::from_json(v.get("error"))?),
+            }),
+            None => Err(proto("response needs a boolean \"ok\" field")),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// parse(serialize(x)) == x, through actual JSON text.
+    fn roundtrip_json(v: &Json) -> Json {
+        Json::parse(&v.to_string()).expect("round-trip parse")
+    }
+
+    fn cfg(ty: PeType) -> AcceleratorConfig {
+        let mut c = AcceleratorConfig::default_with(ty);
+        c.pe_rows = 24;
+        c.bandwidth_gbps = 6.5;
+        c
+    }
+
+    #[test]
+    fn config_roundtrip_and_partial_defaults() {
+        let c = cfg(PeType::LightPe2);
+        let back = config_from_json(&roundtrip_json(&c.to_json())).unwrap();
+        assert_eq!(back, c);
+        // partial: only pe_type -> full default config
+        let partial = Json::parse(r#"{"pe_type": "int16", "pe_rows": 16}"#).unwrap();
+        let got = config_from_json(&partial).unwrap();
+        let mut want = AcceleratorConfig::default_with(PeType::Int16);
+        want.pe_rows = 16;
+        assert_eq!(got, want);
+        // present-but-malformed must error, not silently default
+        let bad = Json::parse(r#"{"pe_type": "int16", "glb_kb": "big"}"#).unwrap();
+        assert!(config_from_json(&bad).is_err());
+        // values past u32::MAX must error, not wrap modulo 2^32
+        let wrap = Json::parse(r#"{"pe_type": "int16", "glb_kb": 4294967404}"#).unwrap();
+        assert!(config_from_json(&wrap).is_err());
+        // invalid configs are rejected at the boundary
+        let zero = Json::parse(r#"{"pe_type": "int16", "pe_rows": 0}"#).unwrap();
+        assert_eq!(config_from_json(&zero).unwrap_err().kind(), "config");
+    }
+
+    #[test]
+    fn synth_types_roundtrip() {
+        let req = SynthRequest { config: cfg(PeType::Fp32) };
+        assert_eq!(SynthRequest::from_json(&roundtrip_json(&req.to_json())).unwrap(), req);
+        let resp = SynthResponse {
+            config: cfg(PeType::Fp32),
+            synthesized: Ppa { power_mw: 123.456, fmax_mhz: 987.5, area_mm2: 1.2345 },
+            jitter_free: Ppa { power_mw: 120.0, fmax_mhz: 990.25, area_mm2: 1.25 },
+        };
+        assert_eq!(SynthResponse::from_json(&roundtrip_json(&resp.to_json())).unwrap(), resp);
+    }
+
+    #[test]
+    fn fit_types_roundtrip() {
+        let empty = FitRequest::default();
+        assert_eq!(FitRequest::from_json(&roundtrip_json(&empty.to_json())).unwrap(), empty);
+        let req = FitRequest { pe_types: vec![PeType::Int16, PeType::LightPe1] };
+        assert_eq!(FitRequest::from_json(&roundtrip_json(&req.to_json())).unwrap(), req);
+        let resp = FitResponse {
+            backend: "native".into(),
+            models: vec![FitModelReport {
+                pe_type: PeType::LightPe1,
+                degree: 2,
+                lambda: 1e-3,
+                n_train: 384,
+                cv: vec![
+                    CvPoint { degree: 1, lambda: 1e-4, mse: 0.0123 },
+                    CvPoint { degree: 2, lambda: 1e-3, mse: 0.0045 },
+                ],
+            }],
+        };
+        assert_eq!(FitResponse::from_json(&roundtrip_json(&resp.to_json())).unwrap(), resp);
+    }
+
+    #[test]
+    fn explore_types_roundtrip() {
+        let req = ExploreRequest { workloads: vec!["vgg16".into(), "m.json".into()] };
+        assert_eq!(ExploreRequest::from_json(&roundtrip_json(&req.to_json())).unwrap(), req);
+        assert!(ExploreRequest::from_json(&Json::parse(r#"{"workloads": []}"#).unwrap()).is_err());
+
+        let resp = ExploreResponse {
+            summaries: vec![ExploreSummary {
+                workload: "vgg16".into(),
+                anchor: cfg(PeType::Int16),
+                entries: vec![ExploreEntry {
+                    pe_type: PeType::LightPe1,
+                    perf_per_area: 4.87,
+                    perf_per_area_validated: 4.12,
+                    energy: 3.3,
+                    energy_validated: 3.05,
+                    frontier: 17,
+                    evaluated: 19200,
+                    shards: 19,
+                    peak_resident: 1200,
+                    best: cfg(PeType::LightPe1),
+                }],
+            }],
+        };
+        assert_eq!(
+            ExploreResponse::from_json(&roundtrip_json(&resp.to_json())).unwrap(),
+            resp
+        );
+    }
+
+    #[test]
+    fn analyze_types_roundtrip() {
+        let req = AnalyzeRequest { workload: "resnet50".into(), config: cfg(PeType::Int16) };
+        assert_eq!(AnalyzeRequest::from_json(&roundtrip_json(&req.to_json())).unwrap(), req);
+        let resp = AnalyzeResponse {
+            workload: "resnet50".into(),
+            config: cfg(PeType::Int16),
+            ppa: Ppa { power_mw: 250.5, fmax_mhz: 800.0, area_mm2: 2.75 },
+            layers: vec![LayerCost {
+                name: "stem".into(),
+                macs: 118_013_952,
+                cycles: 1_234_567,
+                stall_cycles: 4321,
+                utilization: 0.87,
+                dram_bytes: 1_500_000,
+                compute_mj: 0.125,
+                dram_mj: 0.5,
+                other_mj: 0.0625,
+                total_mj: 0.6875,
+            }],
+            latency_s: 0.0123,
+            energy_mj: 12.5,
+        };
+        assert_eq!(
+            AnalyzeResponse::from_json(&roundtrip_json(&resp.to_json())).unwrap(),
+            resp
+        );
+    }
+
+    #[test]
+    fn workloads_types_roundtrip() {
+        let req = WorkloadsRequest::default();
+        assert_eq!(WorkloadsRequest::from_json(&roundtrip_json(&req.to_json())).unwrap(), req);
+        let req2 = WorkloadsRequest { workload: Some("mobilenetv2".into()) };
+        assert_eq!(WorkloadsRequest::from_json(&roundtrip_json(&req2.to_json())).unwrap(), req2);
+
+        let list = WorkloadsResponse::List(vec![WorkloadInfo {
+            name: "vgg16".into(),
+            layers: 16,
+            depthwise: 0,
+            macs: 15_470_264_320,
+        }]);
+        assert_eq!(WorkloadsResponse::from_json(&roundtrip_json(&list.to_json())).unwrap(), list);
+
+        // detail carries real layers through the docs/WORKLOADS.md schema
+        let detail = WorkloadsResponse::Detail {
+            name: "mobilenetv2".into(),
+            layers: workloads::mobilenetv2(),
+        };
+        assert_eq!(
+            WorkloadsResponse::from_json(&roundtrip_json(&detail.to_json())).unwrap(),
+            detail
+        );
+    }
+
+    #[test]
+    fn session_and_error_payloads_roundtrip() {
+        for backend in [None, Some("xla".to_string())] {
+            let info = SessionInfo {
+                backend,
+                models_trained: 4,
+                cache_hits: 12,
+                workloads: workloads::WORKLOAD_NAMES.iter().map(|s| s.to_string()).collect(),
+            };
+            assert_eq!(SessionInfo::from_json(&roundtrip_json(&info.to_json())).unwrap(), info);
+        }
+        let err = ErrorBody::from(&QappaError::Workload("unknown workload 'x'".into()));
+        assert_eq!(err.kind, "workload");
+        assert_eq!(ErrorBody::from_json(&roundtrip_json(&err.to_json())).unwrap(), err);
+    }
+
+    #[test]
+    fn serve_envelope_roundtrip() {
+        let reqs = vec![
+            ServeRequest { id: Some(7), body: RequestBody::Session },
+            ServeRequest {
+                id: None,
+                body: RequestBody::Explore(ExploreRequest { workloads: vec!["vgg16".into()] }),
+            },
+            ServeRequest {
+                id: Some(1),
+                body: RequestBody::Synth(SynthRequest { config: cfg(PeType::Int16) }),
+            },
+            ServeRequest { id: Some(2), body: RequestBody::Fit(FitRequest::default()) },
+            ServeRequest {
+                id: Some(3),
+                body: RequestBody::Workloads(WorkloadsRequest { workload: Some("vgg16".into()) }),
+            },
+            ServeRequest {
+                id: Some(4),
+                body: RequestBody::Analyze(AnalyzeRequest {
+                    workload: "vgg16".into(),
+                    config: cfg(PeType::LightPe1),
+                }),
+            },
+        ];
+        for req in reqs {
+            let line = req.to_json().to_string();
+            assert_eq!(ServeRequest::parse_line(&line).unwrap(), req, "{line}");
+        }
+
+        let ok = ServeResponse {
+            id: Some(7),
+            result: Ok(ResponseBody::Session(SessionInfo {
+                backend: Some("native".into()),
+                models_trained: 4,
+                cache_hits: 8,
+                workloads: vec!["vgg16".into()],
+            })),
+        };
+        assert_eq!(ServeResponse::from_json(&roundtrip_json(&ok.to_json())).unwrap(), ok);
+
+        let err = ServeResponse {
+            id: None,
+            result: Err(ErrorBody { kind: "protocol".into(), message: "bad".into() }),
+        };
+        assert_eq!(ServeResponse::from_json(&roundtrip_json(&err.to_json())).unwrap(), err);
+    }
+
+    #[test]
+    fn request_parsing_rejects_malformed() {
+        assert_eq!(ServeRequest::parse_line("not json").unwrap_err().kind(), "protocol");
+        assert_eq!(ServeRequest::parse_line("[1,2]").unwrap_err().kind(), "protocol");
+        let e = ServeRequest::parse_line(r#"{"op": "nope"}"#).unwrap_err();
+        assert!(e.to_string().contains("unknown op 'nope'"), "{e}");
+        let e = ServeRequest::parse_line(r#"{"id": 1.5, "op": "session"}"#).unwrap_err();
+        assert!(e.to_string().contains("\"id\""), "{e}");
+        // op params are validated by the typed parsers
+        let e = ServeRequest::parse_line(r#"{"op": "synth"}"#).unwrap_err();
+        assert!(e.to_string().contains("pe_type"), "{e}");
+    }
+}

@@ -6,6 +6,7 @@
 //! bandwidth.  `features()` produces the 7-vector consumed by the regression
 //! models, in the exact order pinned by `artifacts/manifest.json`.
 
+use crate::api::error::QappaError;
 use crate::util::json::{obj, Json};
 
 /// Processing-element type: precision + datapath style.
@@ -146,8 +147,8 @@ impl AcceleratorConfig {
     }
 
     /// Validity constraints of the RTL generator.
-    pub fn validate(&self) -> Result<(), String> {
-        let err = |m: String| Err(m);
+    pub fn validate(&self) -> Result<(), QappaError> {
+        let err = |m: String| Err(QappaError::Config(m));
         if self.pe_rows == 0 || self.pe_cols == 0 {
             return err(format!("PE array must be non-empty: {}x{}", self.pe_rows, self.pe_cols));
         }

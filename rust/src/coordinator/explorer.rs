@@ -19,6 +19,7 @@ use std::collections::BTreeMap;
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::{Arc, Mutex};
 
+use crate::api::error::QappaError;
 use crate::config::{AcceleratorConfig, PeType, ALL_PE_TYPES};
 use crate::coordinator::space::DesignSpace;
 use crate::coordinator::sweep::{
@@ -131,6 +132,13 @@ pub struct WorkloadSummary {
 #[derive(Default)]
 pub struct ModelStore {
     entries: Mutex<BTreeMap<(PeType, u64), Arc<PpaModel>>>,
+    /// Serializes all training through the store (one pass at a time):
+    /// concurrent requests for the same (type, recipe) dedupe — the loser
+    /// re-checks the cache under this lock and records a hit instead of
+    /// retraining.  Training of *different* keys also queues here; each
+    /// pass is internally parallel (oracle fleet), so the lost overlap is
+    /// small and the trained-exactly-once invariant stays simple.
+    train_lock: Mutex<()>,
     hits: AtomicUsize,
     misses: AtomicUsize,
 }
@@ -160,14 +168,23 @@ impl ModelStore {
         hash64(s.as_bytes())
     }
 
-    /// Return the cached model for `ty`, training it on a miss.
+    /// Return the cached model for `ty`, training it on a miss.  In-flight
+    /// training is deduplicated: concurrent callers of the same (type,
+    /// recipe) block on one training pass instead of each running their
+    /// own, so a warm serving session trains each model exactly once no
+    /// matter how many requests race on a cold cache.
     pub fn get_or_train(
         &self,
         backend: &dyn Backend,
         opts: &DseOptions,
         ty: PeType,
-    ) -> Result<Arc<PpaModel>, String> {
+    ) -> Result<Arc<PpaModel>, QappaError> {
         let key = (ty, Self::recipe_hash(backend, opts));
+        if let Some(m) = self.entries.lock().unwrap().get(&key) {
+            self.hits.fetch_add(1, Ordering::Relaxed);
+            return Ok(m.clone());
+        }
+        let _training = self.train_lock.lock().unwrap_or_else(|p| p.into_inner());
         if let Some(m) = self.entries.lock().unwrap().get(&key) {
             self.hits.fetch_add(1, Ordering::Relaxed);
             return Ok(m.clone());
@@ -203,7 +220,7 @@ pub fn train_one_model(
     backend: &dyn Backend,
     opts: &DseOptions,
     ty: PeType,
-) -> Result<PpaModel, String> {
+) -> Result<PpaModel, QappaError> {
     let t0 = std::time::Instant::now();
     let cfgs = opts.space.sample(ty, opts.train_per_type, opts.seed);
     let ppas: Vec<Ppa> = parallel_map(&cfgs, opts.workers, |c| {
@@ -218,7 +235,7 @@ pub fn train_one_model(
     }
     let t1 = std::time::Instant::now();
     let model = fit_ppa(backend, &feats, &targets, &opts.cv)
-        .map_err(|e| format!("{}: {e}", ty.label()))?;
+        .map_err(|e| e.context(ty.label()))?;
     trace(&format!("train/{}/cv_fit", ty.label()), t1);
     Ok(model)
 }
@@ -227,7 +244,7 @@ pub fn train_one_model(
 pub fn train_models(
     backend: &dyn Backend,
     opts: &DseOptions,
-) -> Result<BTreeMap<PeType, PpaModel>, String> {
+) -> Result<BTreeMap<PeType, PpaModel>, QappaError> {
     let mut models = BTreeMap::new();
     for ty in ALL_PE_TYPES {
         models.insert(ty, train_one_model(backend, opts, ty)?);
@@ -288,15 +305,15 @@ fn assemble_ratios(
 /// Pull each type's (best perf/area, best energy) points out of its sweep.
 fn best_points(
     sweeps: &BTreeMap<PeType, TypeSweep>,
-) -> Result<BTreeMap<PeType, (DsePoint, DsePoint)>, String> {
+) -> Result<BTreeMap<PeType, (DsePoint, DsePoint)>, QappaError> {
     let mut best = BTreeMap::new();
     for (&ty, ts) in sweeps {
         let pa = ts
             .best_perf_per_area()
-            .ok_or_else(|| format!("empty {} space", ty.label()))?;
+            .ok_or_else(|| QappaError::Config(format!("empty {} space", ty.label())))?;
         let e = ts
             .best_energy()
-            .ok_or_else(|| format!("empty {} space", ty.label()))?;
+            .ok_or_else(|| QappaError::Config(format!("empty {} space", ty.label())))?;
         best.insert(ty, (pa.clone(), e.clone()));
     }
     Ok(best)
@@ -313,7 +330,7 @@ pub fn run_dse(
     layers: &[Layer],
     workload: &str,
     opts: &DseOptions,
-) -> Result<DseResult, String> {
+) -> Result<DseResult, QappaError> {
     let store = ModelStore::new();
     run_dse_with_store(backend, &store, layers, workload, opts)
 }
@@ -326,7 +343,7 @@ pub fn run_dse_with_store(
     layers: &[Layer],
     workload: &str,
     opts: &DseOptions,
-) -> Result<DseResult, String> {
+) -> Result<DseResult, QappaError> {
     let named = [NamedWorkload::new(workload, layers.to_vec())];
     let engine = SweepEngine::new(backend, opts).retain_all(true);
 
@@ -342,7 +359,7 @@ pub fn run_dse_with_store(
     let best = best_points(&sweeps)?;
     let anchor = best
         .get(&PeType::Int16)
-        .ok_or("empty INT16 space")?
+        .ok_or_else(|| QappaError::Config("empty INT16 space".into()))?
         .0
         .clone();
     let (ratios, ratios_validated) =
@@ -378,9 +395,9 @@ pub fn run_dse_multi(
     store: &ModelStore,
     workloads: &[NamedWorkload],
     opts: &DseOptions,
-) -> Result<Vec<WorkloadSummary>, String> {
+) -> Result<Vec<WorkloadSummary>, QappaError> {
     if workloads.is_empty() {
-        return Err("run_dse_multi: no workloads given".into());
+        return Err(QappaError::Workload("run_dse_multi: no workloads given".into()));
     }
     let engine = SweepEngine::new(backend, opts);
 
@@ -399,7 +416,7 @@ pub fn run_dse_multi(
         let best = best_points(&sweeps)?;
         let anchor = best
             .get(&PeType::Int16)
-            .ok_or("empty INT16 space")?
+            .ok_or_else(|| QappaError::Config("empty INT16 space".into()))?
             .0
             .clone();
         let (ratios, ratios_validated) =

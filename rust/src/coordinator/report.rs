@@ -1,5 +1,6 @@
 //! Figure / table regeneration (paper §4).
 
+use crate::api::error::QappaError;
 use crate::config::{PeType, ALL_PE_TYPES};
 use crate::coordinator::explorer::{DseOptions, DseResult, WorkloadSummary};
 use crate::dataflow::Layer;
@@ -25,7 +26,7 @@ pub fn fig2_accuracy(
     backend: &dyn Backend,
     opts: &DseOptions,
     holdout_per_type: usize,
-) -> Result<Vec<AccuracyRow>, String> {
+) -> Result<Vec<AccuracyRow>, QappaError> {
     let models = crate::coordinator::explorer::train_models(backend, opts)?;
     let metrics = ["power_mw", "fmax_mhz", "area_mm2"];
     let mut rows = Vec::new();

@@ -12,6 +12,7 @@
 //! peak resident set so the bound is checkable, and an optional per-shard
 //! progress hook (plus `QAPPA_TRACE=1` phase timing) exposes the pipeline.
 
+use crate::api::error::QappaError;
 use crate::config::{AcceleratorConfig, NUM_FEATURES, PeType};
 use crate::coordinator::explorer::{DseOptions, DsePoint};
 use crate::coordinator::pareto::{FrontierEntry, IncrementalFrontier};
@@ -234,9 +235,9 @@ impl<'a> SweepEngine<'a> {
         model: &PpaModel,
         ty: PeType,
         workloads: &[NamedWorkload],
-    ) -> Result<Vec<TypeSweep>, String> {
+    ) -> Result<Vec<TypeSweep>, QappaError> {
         if workloads.is_empty() {
-            return Err("sweep_type: no workloads given".into());
+            return Err(QappaError::Workload("sweep_type: no workloads given".into()));
         }
         let opts = self.opts;
         let total = opts.space.len();

@@ -18,6 +18,8 @@
 //! networks by ~8-9x, which is why every accounting method here is
 //! `groups`-aware.
 
+use crate::api::error::QappaError;
+
 /// One layer of a network, in inference shape (batch = 1, as in the
 /// paper's edge-deployment setting).
 #[derive(Debug, Clone, PartialEq)]
@@ -131,21 +133,22 @@ impl Layer {
     /// Structural validity: positive dims, kernel fits the padded input,
     /// and channel counts divisible by `groups`. The JSON loader calls this
     /// on every ingested layer.
-    pub fn validate(&self) -> Result<(), String> {
+    pub fn validate(&self) -> Result<(), QappaError> {
+        let err = |m: String| Err(QappaError::Workload(m));
         if self.c == 0 || self.k == 0 || self.hw == 0 || self.rs == 0 || self.stride == 0 {
-            return Err(format!("layer '{}': all of c/k/hw/rs/stride must be > 0", self.name));
+            return err(format!("layer '{}': all of c/k/hw/rs/stride must be > 0", self.name));
         }
         if self.groups == 0 {
-            return Err(format!("layer '{}': groups must be > 0", self.name));
+            return err(format!("layer '{}': groups must be > 0", self.name));
         }
         if self.c % self.groups != 0 || self.k % self.groups != 0 {
-            return Err(format!(
+            return err(format!(
                 "layer '{}': c={} and k={} must be divisible by groups={}",
                 self.name, self.c, self.k, self.groups
             ));
         }
         if self.hw + 2 * self.pad < self.rs {
-            return Err(format!(
+            return err(format!(
                 "layer '{}': kernel {} exceeds padded input {}",
                 self.name,
                 self.rs,

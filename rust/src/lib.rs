@@ -22,6 +22,7 @@
 //!
 //! | module         | paper section | role |
 //! |----------------|---------------|------|
+//! | [`api`]        | —    | typed service facade: `Qappa` sessions, request/response types, `QappaError`, the `qappa serve` JSON-lines loop (`docs/API.md`) |
 //! | [`config`]     | §3.1 | accelerator configurations, PE types (FP32 / INT16 / LightPE), design-space axes |
 //! | [`synth`]      | §3.2 | gate-level synthesis oracle (Design Compiler stand-in) producing ground-truth PPA |
 //! | [`rtl`]        | §3.2 | Verilog emitter + gate-level simulator (VCS stand-in) for spot verification |
@@ -40,7 +41,21 @@
 //! carries a `groups` field through MAC, traffic and energy accounting),
 //! ships MobileNetV1/V2 builders, and ingests arbitrary user networks from
 //! JSON ([`workloads::from_json`]; schema in `docs/WORKLOADS.md`).
+//!
+//! ## Using QAPPA as a library / service
+//!
+//! The [`api`] module is the crate's public service layer: build a warm
+//! [`api::Qappa`] session once, then issue typed `synth` / `fit` /
+//! `explore` / `analyze` / `workloads` queries against it — models train
+//! once per session and every query after that runs at sweep speed.
+//! `qappa serve` exposes the same facade as a JSON-lines request loop on
+//! stdin/stdout.  Every fallible public API in the crate returns
+//! [`QappaError`], a structured error whose variants (`Config`,
+//! `Workload`, `Backend`, `Model`, `Io`, `Protocol`) classify where a
+//! request died.  Schemas and the wire protocol are documented in
+//! `docs/API.md`.
 
+pub mod api;
 pub mod config;
 pub mod coordinator;
 pub mod dataflow;
@@ -51,3 +66,5 @@ pub mod synth;
 pub mod testkit;
 pub mod util;
 pub mod workloads;
+
+pub use api::error::QappaError;

@@ -1,5 +1,9 @@
 //! `qappa` — the QAPPA coordinator CLI.
 //!
+//! A thin client of the [`qappa::api`] service facade: every subcommand
+//! parses flags into typed requests, runs them against a [`Qappa`] session
+//! and renders the response.
+//!
 //! Subcommands:
 //!
 //! * `synth`     — synthesize one configuration, print ground-truth PPA
@@ -11,24 +15,22 @@
 //! * `rtl`       — emit generated Verilog for a configuration
 //! * `verify`    — run the gate-level simulator against golden models
 //! * `workloads` — print the layer tables and MAC totals
+//! * `serve`     — JSON-lines request loop on stdin/stdout (docs/API.md)
 //!
 //! Backend: `--backend xla` (default if `artifacts/` is present) drives the
 //! AOT-compiled PJRT artifacts; `--backend native` uses the pure-Rust
 //! fallback.
 
-use std::sync::Arc;
-
-use qappa::config::{AcceleratorConfig, PeType, ALL_PE_TYPES};
+use qappa::api::{
+    AnalyzeRequest, BackendChoice, FitRequest, Qappa, QappaError, ServeOptions, SynthRequest,
+    WorkloadsRequest, WorkloadsResponse,
+};
+use qappa::config::{AcceleratorConfig, PeType};
 use qappa::coordinator::report::{
-    dse_scatter_table, dse_stats_table, dse_summary_table, fig2_accuracy, fig2_table,
-    multi_summary_table, sweep_stats_table, workload_table,
+    dse_scatter_table, dse_stats_table, dse_summary_table, fig2_table, multi_summary_table,
+    sweep_stats_table, workload_table,
 };
-use qappa::coordinator::{
-    run_dse, run_dse_multi, DseOptions, ModelStore, NamedWorkload,
-};
-use qappa::model::native::NativeBackend;
-use qappa::model::Backend;
-use qappa::runtime::{Engine, XlaBackend};
+use qappa::coordinator::{DseOptions, NamedWorkload};
 use qappa::util::cli::Args;
 use qappa::util::table::Table;
 use qappa::workloads;
@@ -43,17 +45,24 @@ fn main() {
     };
     let sub = args.subcommand.clone().unwrap_or_else(|| "help".to_string());
     let code = match dispatch(&sub, &args) {
-        Ok(()) => 0,
-        Err(e) => {
+        Some(Ok(())) => 0,
+        Some(Err(e)) => {
             eprintln!("error: {e}");
             1
+        }
+        None => {
+            eprintln!("error: unknown subcommand '{sub}'");
+            eprintln!("run `qappa help` for the subcommand list");
+            2
         }
     };
     std::process::exit(code);
 }
 
-fn dispatch(sub: &str, args: &Args) -> Result<(), String> {
-    match sub {
+/// `None` = unknown subcommand (the caller prints the error and exits 2);
+/// `help` and the no-subcommand default still succeed with the usage text.
+fn dispatch(sub: &str, args: &Args) -> Option<Result<(), QappaError>> {
+    Some(match sub {
         "synth" => cmd_synth(args),
         "fit" => cmd_fit(args),
         "fig2" | "accuracy" => cmd_fig2(args),
@@ -63,12 +72,14 @@ fn dispatch(sub: &str, args: &Args) -> Result<(), String> {
         "verify" => cmd_verify(args),
         "workloads" => cmd_workloads(args),
         "analyze" => cmd_analyze(args),
-        _ => {
+        "serve" => cmd_serve(args),
+        "help" => {
             args.finish().ok();
             print!("{}", HELP);
             Ok(())
         }
-    }
+        _ => return None,
+    })
 }
 
 const HELP: &str = "\
@@ -96,6 +107,12 @@ SUBCOMMANDS
   workloads [--workload W]               print layer tables / MAC totals
   analyze   --workload W --pe-type T [config flags as in synth]
                                          per-layer latency/energy breakdown
+  serve     [--backend ... --train N --concurrency N]
+                                         JSON-lines request loop on
+                                         stdin/stdout against one warm
+                                         session (models trained once across
+                                         all requests); protocol and worked
+                                         examples in docs/API.md
 
 WORKLOADS (--workload W)
   Built-in: vgg16, resnet34, resnet50, mobilenetv1, mobilenetv2.
@@ -113,110 +130,78 @@ per-shard predict and dataflow evaluation).
 // helpers
 // ---------------------------------------------------------------------------
 
-fn parse_config(args: &Args) -> Result<AcceleratorConfig, String> {
-    let ty = PeType::parse(args.require("pe-type").map_err(|e| e.to_string())?)
-        .ok_or("unknown --pe-type (fp32|int16|lightpe1|lightpe2)")?;
+fn parse_config(args: &Args) -> Result<AcceleratorConfig, QappaError> {
+    let ty = PeType::parse(args.require("pe-type")?)
+        .ok_or_else(|| QappaError::Config("unknown --pe-type (fp32|int16|lightpe1|lightpe2)".into()))?;
     let mut cfg = AcceleratorConfig::default_with(ty);
-    cfg.pe_rows = args.get("rows", cfg.pe_rows).map_err(|e| e.to_string())?;
-    cfg.pe_cols = args.get("cols", cfg.pe_cols).map_err(|e| e.to_string())?;
-    cfg.glb_kb = args.get("glb-kb", cfg.glb_kb).map_err(|e| e.to_string())?;
-    cfg.spad_ifmap_b = args.get("spad-if", cfg.spad_ifmap_b).map_err(|e| e.to_string())?;
-    cfg.spad_filter_b = args.get("spad-w", cfg.spad_filter_b).map_err(|e| e.to_string())?;
-    cfg.spad_psum_b = args.get("spad-ps", cfg.spad_psum_b).map_err(|e| e.to_string())?;
-    cfg.bandwidth_gbps = args.get("bw", cfg.bandwidth_gbps).map_err(|e| e.to_string())?;
+    cfg.pe_rows = args.get("rows", cfg.pe_rows)?;
+    cfg.pe_cols = args.get("cols", cfg.pe_cols)?;
+    cfg.glb_kb = args.get("glb-kb", cfg.glb_kb)?;
+    cfg.spad_ifmap_b = args.get("spad-if", cfg.spad_ifmap_b)?;
+    cfg.spad_filter_b = args.get("spad-w", cfg.spad_filter_b)?;
+    cfg.spad_psum_b = args.get("spad-ps", cfg.spad_psum_b)?;
+    cfg.bandwidth_gbps = args.get("bw", cfg.bandwidth_gbps)?;
     cfg.validate()?;
     Ok(cfg)
 }
 
-enum AnyBackend {
-    Native(NativeBackend),
-    Xla(XlaBackend, Arc<Engine>),
-}
-
-impl AnyBackend {
-    fn get(&self) -> &dyn Backend {
-        match self {
-            AnyBackend::Native(b) => b,
-            AnyBackend::Xla(b, _) => b,
-        }
+/// Build a session from the model/backend flags (`--backend --train --k
+/// --seed --workers --sigma --chunk --topk`), defaults from
+/// [`DseOptions::default`].  The backend starts lazily on first use.
+fn session_from(args: &Args) -> Result<Qappa, QappaError> {
+    let d = DseOptions::default();
+    let mut b = Qappa::builder()
+        .train_per_type(args.get("train", d.train_per_type)?)
+        .cv_k(args.get("k", d.cv.k)?)
+        .seed(args.get("seed", d.seed)?)
+        .workers(args.get("workers", d.workers)?)
+        .sigma(args.get("sigma", d.sigma)?)
+        .chunk(args.get("chunk", d.chunk)?)
+        .topk(args.get("topk", d.topk)?);
+    if let Some(choice) = args.opt("backend") {
+        b = b.backend(BackendChoice::parse(choice)?);
     }
+    Ok(b.build())
 }
 
-fn make_backend(args: &Args) -> Result<AnyBackend, String> {
-    let dir = qappa::runtime::ArtifactRuntime::artifacts_dir_default();
-    let choice = args.opt("backend").map(str::to_string).unwrap_or_else(|| {
-        if dir.join("manifest.json").exists() {
-            "xla".into()
-        } else {
-            "native".into()
-        }
-    });
-    match choice.as_str() {
-        "native" => Ok(AnyBackend::Native(NativeBackend::new(7))),
-        "xla" => {
-            let engine = Arc::new(Engine::start(&dir).map_err(|e| {
-                format!("starting XLA engine from {}: {e}", dir.display())
-            })?);
-            eprintln!(
-                "[qappa] XLA engine up (d={}, B={}, N_fit={}) from {}",
-                engine.d,
-                engine.b_predict,
-                engine.n_fit,
-                dir.display()
-            );
-            Ok(AnyBackend::Xla(XlaBackend::new(engine.clone()), engine))
-        }
-        other => Err(format!("unknown backend '{other}'")),
-    }
-}
-
-fn dse_options(args: &Args) -> Result<DseOptions, String> {
-    let mut opts = DseOptions::default();
-    opts.train_per_type = args.get("train", opts.train_per_type).map_err(|e| e.to_string())?;
-    opts.cv.k = args.get("k", opts.cv.k).map_err(|e| e.to_string())?;
-    opts.seed = args.get("seed", opts.seed).map_err(|e| e.to_string())?;
-    opts.workers = args.get("workers", opts.workers).map_err(|e| e.to_string())?;
-    opts.sigma = args.get("sigma", opts.sigma).map_err(|e| e.to_string())?;
-    opts.chunk = args.get("chunk", opts.chunk).map_err(|e| e.to_string())?;
-    opts.topk = args.get("topk", opts.topk).map_err(|e| e.to_string())?;
-    Ok(opts)
+fn write_csv(t: &Table, path: &str) -> Result<(), QappaError> {
+    t.write_csv(path).map_err(|e| QappaError::io(format!("writing {path}"), e))
 }
 
 // ---------------------------------------------------------------------------
 // subcommands
 // ---------------------------------------------------------------------------
 
-fn cmd_synth(args: &Args) -> Result<(), String> {
+fn cmd_synth(args: &Args) -> Result<(), QappaError> {
     let cfg = parse_config(args)?;
-    args.finish().map_err(|e| e.to_string())?;
-    let ppa = qappa::synth::synthesize(&cfg);
-    let clean = qappa::synth::synthesize_clean(&cfg);
+    args.finish()?;
+    let session = Qappa::builder().build();
+    let resp = session.synth(&SynthRequest { config: cfg })?;
+    let (ppa, clean) = (&resp.synthesized, &resp.jitter_free);
     let mut t = Table::new(&["metric", "synthesized", "jitter-free"]);
     t.row(vec!["power_mw".into(), format!("{:.3}", ppa.power_mw), format!("{:.3}", clean.power_mw)]);
     t.row(vec!["fmax_mhz".into(), format!("{:.1}", ppa.fmax_mhz), format!("{:.1}", clean.fmax_mhz)]);
     t.row(vec!["area_mm2".into(), format!("{:.4}", ppa.area_mm2), format!("{:.4}", clean.area_mm2)]);
-    println!("config: {}", cfg.key());
+    println!("config: {}", resp.config.key());
     print!("{}", t.render());
     Ok(())
 }
 
-fn cmd_fit(args: &Args) -> Result<(), String> {
-    let opts = dse_options(args)?;
-    let backend = make_backend(args)?;
-    args.finish().map_err(|e| e.to_string())?;
-    let models = qappa::coordinator::explorer::train_models(backend.get(), &opts)?;
-    for ty in ALL_PE_TYPES {
-        let m = &models[&ty];
+fn cmd_fit(args: &Args) -> Result<(), QappaError> {
+    let session = session_from(args)?;
+    args.finish()?;
+    let resp = session.fit(&FitRequest::default())?;
+    for m in &resp.models {
         println!(
             "\n{}: selected degree={} lambda={} (n={}, backend={})",
-            ty.label(),
+            m.pe_type.label(),
             m.degree,
             m.lambda,
             m.n_train,
-            backend.get().name()
+            resp.backend
         );
         let mut t = Table::new(&["degree", "lambda", "cv_mse"]);
-        for e in &m.cv_table {
+        for e in &m.cv {
             t.row(vec![
                 e.degree.to_string(),
                 format!("{:e}", e.lambda),
@@ -228,19 +213,19 @@ fn cmd_fit(args: &Args) -> Result<(), String> {
     Ok(())
 }
 
-fn cmd_fig2(args: &Args) -> Result<(), String> {
-    let opts = dse_options(args)?;
-    let holdout = args.get("holdout", 128usize).map_err(|e| e.to_string())?;
+fn cmd_fig2(args: &Args) -> Result<(), QappaError> {
+    let session = session_from(args)?;
+    let holdout = args.get("holdout", 128usize)?;
     let out = args.opt("out").map(str::to_string);
-    let backend = make_backend(args)?;
-    args.finish().map_err(|e| e.to_string())?;
-    let rows = fig2_accuracy(backend.get(), &opts, holdout)?;
+    let backend_name = session.backend_name()?;
+    args.finish()?;
+    let rows = session.accuracy(holdout)?;
     let t = fig2_table(&rows);
-    println!("Figure 2 — actual vs estimated PPA (backend={})", backend.get().name());
+    println!("Figure 2 — actual vs estimated PPA (backend={backend_name})");
     print!("{}", t.render());
     if let Some(dir) = out {
         let path = format!("{dir}/fig2_accuracy.csv");
-        t.write_csv(&path).map_err(|e| e.to_string())?;
+        write_csv(&t, &path)?;
         println!("wrote {path}");
     }
     Ok(())
@@ -253,33 +238,33 @@ fn sanitize_name(name: &str) -> String {
         .collect()
 }
 
-fn cmd_dse(args: &Args) -> Result<(), String> {
-    let spec = args.require("workload").map_err(|e| e.to_string())?.to_string();
+fn cmd_dse(args: &Args) -> Result<(), QappaError> {
+    let spec = args.require("workload")?.to_string();
     let specs: Vec<&str> = spec.split(',').map(str::trim).filter(|s| !s.is_empty()).collect();
     if specs.is_empty() {
-        return Err("--workload: empty workload list".into());
+        return Err(QappaError::Workload("--workload: empty workload list".into()));
     }
     if specs.len() > 1 {
         return cmd_dse_multi(args, &specs);
     }
     let (wl, layers) = workloads::load(specs[0])?;
-    let opts = dse_options(args)?;
+    let session = session_from(args)?;
     let out = args.opt("out").map(str::to_string);
     let want_scatter = args.flag("scatter");
     let want_stats = args.flag("stats");
-    let backend = make_backend(args)?;
-    args.finish().map_err(|e| e.to_string())?;
+    let backend_name = session.backend_name()?;
+    args.finish()?;
 
     let t0 = std::time::Instant::now();
-    let res = run_dse(backend.get(), &layers, &wl, &opts)?;
+    let res = session.dse(&wl, &layers)?;
     let dt = t0.elapsed().as_secs_f64();
 
     println!(
         "DSE over {} ({} layers) — {} configs/type, backend={}, {:.2}s",
         wl,
         layers.len(),
-        opts.space.len(),
-        backend.get().name(),
+        session.options().space.len(),
+        backend_name,
         dt
     );
     println!("anchor (best INT16 perf/area): {}", res.anchor.cfg.key());
@@ -287,7 +272,7 @@ fn cmd_dse(args: &Args) -> Result<(), String> {
     if want_stats {
         print!("{}", dse_stats_table(&res).render());
     }
-    if let AnyBackend::Xla(_, engine) = &backend {
+    if let Some(engine) = session.engine() {
         let s = &engine.stats;
         use std::sync::atomic::Ordering::Relaxed;
         println!(
@@ -302,11 +287,11 @@ fn cmd_dse(args: &Args) -> Result<(), String> {
     if let Some(dir) = out {
         let stem = sanitize_name(&wl);
         let summary_path = format!("{dir}/{stem}_summary.csv");
-        dse_summary_table(&res).write_csv(&summary_path).map_err(|e| e.to_string())?;
+        write_csv(&dse_summary_table(&res), &summary_path)?;
         println!("wrote {summary_path}");
         if want_scatter {
             let scatter_path = format!("{dir}/{stem}_scatter.csv");
-            dse_scatter_table(&res).write_csv(&scatter_path).map_err(|e| e.to_string())?;
+            write_csv(&dse_scatter_table(&res), &scatter_path)?;
             println!("wrote {scatter_path}");
         }
     }
@@ -315,39 +300,38 @@ fn cmd_dse(args: &Args) -> Result<(), String> {
 
 /// `qappa explore --workload a,b,c`: one streaming pass over the grid per
 /// PE type, every workload evaluated against each predicted shard; models
-/// trained once and shared through the `ModelStore`.
-fn cmd_dse_multi(args: &Args, specs: &[&str]) -> Result<(), String> {
+/// trained once and shared through the session's `ModelStore`.
+fn cmd_dse_multi(args: &Args, specs: &[&str]) -> Result<(), QappaError> {
     let mut named = Vec::with_capacity(specs.len());
     for spec in specs {
         let (name, layers) = workloads::load(spec)?;
         named.push(NamedWorkload::new(name, layers));
     }
-    let opts = dse_options(args)?;
+    let session = session_from(args)?;
     let out = args.opt("out").map(str::to_string);
     let want_stats = args.flag("stats");
     if args.flag("scatter") {
-        return Err(
+        return Err(QappaError::Config(
             "--scatter needs the full point set; it is only available for \
              single-workload runs"
                 .into(),
-        );
+        ));
     }
-    let backend = make_backend(args)?;
-    args.finish().map_err(|e| e.to_string())?;
+    let backend_name = session.backend_name()?;
+    args.finish()?;
 
-    let store = ModelStore::new();
     let t0 = std::time::Instant::now();
-    let summaries = run_dse_multi(backend.get(), &store, &named, &opts)?;
+    let summaries = session.explore_named(&named)?;
     let dt = t0.elapsed().as_secs_f64();
 
     println!(
         "DSE over {} workloads ({}) — {} configs/type, chunk={}, top-k={}, backend={}, {:.2}s",
         named.len(),
         named.iter().map(|w| w.name.as_str()).collect::<Vec<_>>().join(", "),
-        opts.space.len(),
-        opts.chunk,
-        opts.topk,
-        backend.get().name(),
+        session.options().space.len(),
+        session.options().chunk,
+        session.options().topk,
+        backend_name,
         dt
     );
     for s in &summaries {
@@ -360,8 +344,8 @@ fn cmd_dse_multi(args: &Args, specs: &[&str]) -> Result<(), String> {
     print!("{}", multi_summary_table(&summaries).render());
     println!(
         "[store] models trained: {} (cache hits: {})",
-        store.misses(),
-        store.hits()
+        session.store().misses(),
+        session.store().hits()
     );
     let peak = summaries
         .iter()
@@ -371,57 +355,55 @@ fn cmd_dse_multi(args: &Args, specs: &[&str]) -> Result<(), String> {
     println!(
         "[engine] peak resident points: {} of {} evaluated per (type, workload)",
         peak,
-        opts.space.len()
+        session.options().space.len()
     );
     if want_stats {
         print!("{}", sweep_stats_table(&summaries).render());
     }
     if let Some(dir) = out {
         let path = format!("{dir}/multi_summary.csv");
-        multi_summary_table(&summaries).write_csv(&path).map_err(|e| e.to_string())?;
+        write_csv(&multi_summary_table(&summaries), &path)?;
         println!("wrote {path}");
     }
     Ok(())
 }
 
-fn cmd_figures(args: &Args) -> Result<(), String> {
+fn cmd_figures(args: &Args) -> Result<(), QappaError> {
     let out = args.opt("out").unwrap_or("figures").to_string();
-    let opts = dse_options(args)?;
-    let backend = make_backend(args)?;
+    let session = session_from(args)?;
     let _all = args.flag("all");
-    args.finish().map_err(|e| e.to_string())?;
+    session.backend_name()?;
+    args.finish()?;
 
     // Fig 2.
-    let rows = fig2_accuracy(backend.get(), &opts, 128)?;
+    let rows = session.accuracy(128)?;
     let t2 = fig2_table(&rows);
     println!("Figure 2 — model accuracy");
     print!("{}", t2.render());
-    t2.write_csv(&format!("{out}/fig2_accuracy.csv")).map_err(|e| e.to_string())?;
+    write_csv(&t2, &format!("{out}/fig2_accuracy.csv"))?;
 
     // Figs 3-5.
     for (fig, wl) in [(3, "vgg16"), (4, "resnet34"), (5, "resnet50")] {
         let layers = workloads::by_name(wl).unwrap();
-        let res = run_dse(backend.get(), &layers, wl, &opts)?;
+        let res = session.dse(wl, &layers)?;
         println!("\nFigure {fig} — {wl} design space (anchor {})", res.anchor.cfg.key());
         let ts = dse_summary_table(&res);
         print!("{}", ts.render());
-        ts.write_csv(&format!("{out}/fig{fig}_{wl}_summary.csv")).map_err(|e| e.to_string())?;
-        dse_scatter_table(&res)
-            .write_csv(&format!("{out}/fig{fig}_{wl}_scatter.csv"))
-            .map_err(|e| e.to_string())?;
+        write_csv(&ts, &format!("{out}/fig{fig}_{wl}_summary.csv"))?;
+        write_csv(&dse_scatter_table(&res), &format!("{out}/fig{fig}_{wl}_scatter.csv"))?;
     }
     println!("\nwrote CSVs under {out}/");
     Ok(())
 }
 
-fn cmd_rtl(args: &Args) -> Result<(), String> {
+fn cmd_rtl(args: &Args) -> Result<(), QappaError> {
     let cfg = parse_config(args)?;
     let out = args.opt("out").map(str::to_string);
-    args.finish().map_err(|e| e.to_string())?;
+    args.finish()?;
     let v = qappa::rtl::verilog::generate(&cfg);
     match out {
         Some(path) => {
-            std::fs::write(&path, &v).map_err(|e| e.to_string())?;
+            std::fs::write(&path, &v).map_err(|e| QappaError::io(format!("writing {path}"), e))?;
             println!("wrote {} ({} bytes)", path, v.len());
         }
         None => print!("{v}"),
@@ -429,9 +411,9 @@ fn cmd_rtl(args: &Args) -> Result<(), String> {
     Ok(())
 }
 
-fn cmd_verify(args: &Args) -> Result<(), String> {
-    let n = args.get("vectors", 500usize).map_err(|e| e.to_string())?;
-    args.finish().map_err(|e| e.to_string())?;
+fn cmd_verify(args: &Args) -> Result<(), QappaError> {
+    let n = args.get("vectors", 500usize)?;
+    args.finish()?;
     println!("gate-level verification ({n} random vectors each):");
     let act = qappa::rtl::sim::verify_int16_multiplier(n, 0xc0ffee)?;
     println!("  int16 multiplier  OK   (activity {:.3})", act);
@@ -442,75 +424,93 @@ fn cmd_verify(args: &Args) -> Result<(), String> {
     Ok(())
 }
 
-fn cmd_analyze(args: &Args) -> Result<(), String> {
-    let spec = args.require("workload").map_err(|e| e.to_string())?.to_string();
-    let (_wl, layers) = workloads::load(&spec)?;
+fn cmd_analyze(args: &Args) -> Result<(), QappaError> {
+    let spec = args.require("workload")?.to_string();
     let cfg = parse_config(args)?;
-    args.finish().map_err(|e| e.to_string())?;
+    args.finish()?;
 
-    let ep = qappa::synth::oracle::energy_params(&cfg);
-    let ppa = qappa::synth::synthesize_clean(&cfg);
-    println!("config: {}  ({:.2} mW, {:.0} MHz, {:.3} mm2)", cfg.key(),
-             ppa.power_mw, ppa.fmax_mhz, ppa.area_mm2);
+    let session = Qappa::builder().build();
+    let resp = session.analyze(&AnalyzeRequest { workload: spec, config: cfg })?;
+    println!(
+        "config: {}  ({:.2} mW, {:.0} MHz, {:.3} mm2)",
+        resp.config.key(),
+        resp.ppa.power_mw,
+        resp.ppa.fmax_mhz,
+        resp.ppa.area_mm2
+    );
     let mut t = Table::new(&[
         "layer", "MACs_M", "cycles_k", "util", "stall_%", "dram_MB",
         "energy_mJ", "E_compute", "E_dram", "E_other",
     ]);
-    let mut total_lat = 0.0;
-    let mut total_e = 0.0;
-    for l in &layers {
-        let mapped = qappa::dataflow::map_layer(&cfg, &ep, l);
-        let traffic = qappa::dataflow::layer_traffic(&cfg, l, &mapped);
-        let perf = qappa::dataflow::rs::apply_bandwidth(&cfg, &ep, l, &mapped, traffic.dram_bytes);
-        let e = qappa::dataflow::layer_energy(&cfg, &ep, l, &perf, &traffic);
-        total_lat += perf.latency_s(ep.fmax_mhz);
-        total_e += e.total_mj();
+    for l in &resp.layers {
         t.row(vec![
             l.name.clone(),
-            format!("{:.1}", l.macs() as f64 / 1e6),
-            format!("{:.0}", perf.cycles as f64 / 1e3),
-            format!("{:.2}", perf.utilization),
-            format!("{:.0}", 100.0 * perf.stall_cycles as f64 / perf.cycles.max(1) as f64),
-            format!("{:.2}", traffic.dram_bytes as f64 / 1e6),
-            format!("{:.3}", e.total_mj()),
-            format!("{:.3}", e.compute_mj),
-            format!("{:.3}", e.dram_mj),
-            format!("{:.3}", e.glb_mj + e.noc_mj + e.leakage_mj),
+            format!("{:.1}", l.macs as f64 / 1e6),
+            format!("{:.0}", l.cycles as f64 / 1e3),
+            format!("{:.2}", l.utilization),
+            format!("{:.0}", 100.0 * l.stall_cycles as f64 / l.cycles.max(1) as f64),
+            format!("{:.2}", l.dram_bytes as f64 / 1e6),
+            format!("{:.3}", l.total_mj),
+            format!("{:.3}", l.compute_mj),
+            format!("{:.3}", l.dram_mj),
+            format!("{:.3}", l.other_mj),
         ]);
     }
     print!("{}", t.render());
     println!(
         "total: {:.2} ms/inference ({:.1} inf/s), {:.2} mJ/inference",
-        total_lat * 1e3,
-        1.0 / total_lat,
-        total_e
+        resp.latency_s * 1e3,
+        1.0 / resp.latency_s,
+        resp.energy_mj
     );
     Ok(())
 }
 
-fn cmd_workloads(args: &Args) -> Result<(), String> {
+fn cmd_workloads(args: &Args) -> Result<(), QappaError> {
     let detail = args.opt("workload").map(str::to_string);
-    args.finish().map_err(|e| e.to_string())?;
-    match detail {
-        Some(spec) => {
-            let (name, layers) = workloads::load(&spec)?;
+    args.finish()?;
+    let session = Qappa::builder().build();
+    match session.workloads(&WorkloadsRequest { workload: detail })? {
+        WorkloadsResponse::Detail { name, layers } => {
             let macs: u64 = layers.iter().map(|l| l.macs()).sum();
             println!("{name}: {} layers, {:.2} GMACs", layers.len(), macs as f64 / 1e9);
             print!("{}", workload_table(&layers).render());
         }
-        None => {
-            for name in workloads::WORKLOAD_NAMES {
-                let layers = workloads::by_name(name).unwrap();
-                let macs: u64 = layers.iter().map(|l| l.macs()).sum();
-                let dw = layers.iter().filter(|l| l.is_depthwise()).count();
+        WorkloadsResponse::List(infos) => {
+            for i in &infos {
                 println!(
-                    "{name}: {} layers ({dw} depthwise), {:.2} GMACs",
-                    layers.len(),
-                    macs as f64 / 1e9
+                    "{}: {} layers ({} depthwise), {:.2} GMACs",
+                    i.name,
+                    i.layers,
+                    i.depthwise,
+                    i.macs as f64 / 1e9
                 );
             }
             println!("\n(`workloads --workload W` prints the per-layer table)");
         }
     }
+    Ok(())
+}
+
+fn cmd_serve(args: &Args) -> Result<(), QappaError> {
+    let session = session_from(args)?;
+    let opts = ServeOptions {
+        concurrency: args.get("concurrency", ServeOptions::default().concurrency)?,
+    };
+    args.finish()?;
+    eprintln!(
+        "[qappa] serving JSON-lines requests on stdin (concurrency {}); \
+         protocol: docs/API.md",
+        opts.concurrency.max(1)
+    );
+    let stats = qappa::api::serve(&session, std::io::stdin().lock(), std::io::stdout(), &opts)?;
+    eprintln!(
+        "[qappa] served {} requests ({} ok, {} errors); models trained: {} (cache hits: {})",
+        stats.requests,
+        stats.ok,
+        stats.errors,
+        session.store().misses(),
+        session.store().hits()
+    );
     Ok(())
 }

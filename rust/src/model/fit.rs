@@ -6,6 +6,7 @@
 //! fixed-shape fit/loss backend calls serve every fold — exactly the
 //! protocol the AOT artifacts were lowered for.
 
+use crate::api::error::QappaError;
 use crate::model::features::Standardizer;
 use crate::model::{Backend, M};
 use crate::util::prng::Rng;
@@ -60,13 +61,17 @@ pub fn fit_ppa(
     features: &[f64],
     targets: &[f64],
     cv: &CvConfig,
-) -> Result<PpaModel, String> {
+) -> Result<PpaModel, QappaError> {
     let d = backend.d();
     assert_eq!(features.len() % d, 0, "feature shape");
     let n = features.len() / d;
     assert_eq!(targets.len(), n * M, "target shape");
     if n < 2 * cv.k {
-        return Err(format!("need at least {} rows for {}-fold CV, got {n}", 2 * cv.k, cv.k));
+        return Err(QappaError::Model(format!(
+            "need at least {} rows for {}-fold CV, got {n}",
+            2 * cv.k,
+            cv.k
+        )));
     }
 
     let x_std = Standardizer::fit(features, d);
@@ -114,7 +119,7 @@ fn cv_grid_plain(
     n: usize,
     fold: &[usize],
     cv: &CvConfig,
-) -> Result<CvOutcome, String> {
+) -> Result<CvOutcome, QappaError> {
     let mut cv_table = Vec::new();
     let mut best: Option<(usize, f64, f64)> = None;
     for &degree in &cv.degrees {
@@ -136,7 +141,7 @@ fn cv_grid_plain(
             }
         }
     }
-    Ok((cv_table, best.ok_or("empty CV grid")?))
+    Ok((cv_table, best.ok_or_else(|| QappaError::Model("empty CV grid".into()))?))
 }
 
 /// Fast CV via Gram additivity: per degree, one `gram` call per fold; each
@@ -151,7 +156,7 @@ fn cv_grid_fast(
     n: usize,
     fold: &[usize],
     cv: &CvConfig,
-) -> Result<CvOutcome, String> {
+) -> Result<CvOutcome, QappaError> {
     let d = backend.d();
     // Rows of each fold (for held-out scoring).
     let mut fold_rows: Vec<Vec<usize>> = vec![Vec::new(); cv.k];
@@ -213,7 +218,7 @@ fn cv_grid_fast(
             }
         }
     }
-    Ok((cv_table, best.ok_or("empty CV grid")?))
+    Ok((cv_table, best.ok_or_else(|| QappaError::Model("empty CV grid".into()))?))
 }
 
 /// Predict raw-unit PPA for raw feature rows (n x d).
@@ -221,7 +226,7 @@ pub fn predict_ppa(
     backend: &dyn Backend,
     model: &PpaModel,
     features: &[f64],
-) -> Result<Vec<[f64; M]>, String> {
+) -> Result<Vec<[f64; M]>, QappaError> {
     let d = backend.d();
     assert_eq!(features.len() % d, 0);
     let n = features.len() / d;

@@ -20,6 +20,8 @@ pub mod native;
 pub use features::{num_features, Standardizer};
 pub use fit::{fit_ppa, predict_ppa, CvConfig, PpaModel};
 
+use crate::api::error::QappaError;
+
 /// Number of regression targets: [power_mw, fmax_mhz, area_mm2].
 pub const M: usize = 3;
 
@@ -33,13 +35,13 @@ pub trait Backend {
     fn d(&self) -> usize;
     /// Weighted ridge fit; returns `p x M` coefficients.
     fn fit(&self, x: &[f32], y: &[f32], w: &[f32], n: usize, lam: f32, degree: usize)
-        -> Result<Vec<f32>, String>;
+        -> Result<Vec<f32>, QappaError>;
     /// Weighted per-output MSE of `coef` on the rows selected by `w`.
     fn loss(&self, x: &[f32], y: &[f32], w: &[f32], n: usize, coef: &[f32], degree: usize)
-        -> Result<[f32; M], String>;
+        -> Result<[f32; M], QappaError>;
     /// Batched prediction; returns `n x M`.
     fn predict(&self, x: &[f32], n: usize, coef: &[f32], degree: usize)
-        -> Result<Vec<f32>, String>;
+        -> Result<Vec<f32>, QappaError>;
     /// Human-readable name for reports.
     fn name(&self) -> &'static str;
 
@@ -59,8 +61,8 @@ pub trait Backend {
         _w: &[f32],
         _n: usize,
         _degree: usize,
-    ) -> Result<(Vec<f32>, Vec<f32>, f32), String> {
-        Err("gram unsupported by this backend".into())
+    ) -> Result<(Vec<f32>, Vec<f32>, f32), QappaError> {
+        Err(QappaError::Backend("gram unsupported by this backend".into()))
     }
 
     /// Ridge solve from accumulators; returns `p x M` coefficients.
@@ -71,7 +73,7 @@ pub trait Backend {
         _n_eff: f32,
         _lam: f32,
         _degree: usize,
-    ) -> Result<Vec<f32>, String> {
-        Err("solve unsupported by this backend".into())
+    ) -> Result<Vec<f32>, QappaError> {
+        Err(QappaError::Backend("solve unsupported by this backend".into()))
     }
 }

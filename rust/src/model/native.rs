@@ -5,11 +5,12 @@
 //! doubles as the parity oracle for the XLA artifact path and as the
 //! fallback backend when `artifacts/` is absent.
 
+use crate::api::error::QappaError;
 use crate::model::features::{expand_row, monomial_indices};
 use crate::model::{Backend, M};
 
 /// Dense column-major-free little matrix helper (row-major).
-fn cholesky_solve(a: &mut [f64], b: &mut [f64], p: usize, m: usize) -> Result<(), String> {
+fn cholesky_solve(a: &mut [f64], b: &mut [f64], p: usize, m: usize) -> Result<(), QappaError> {
     // In-place Cholesky A = L L^T (lower in a).
     for j in 0..p {
         let mut diag = a[j * p + j];
@@ -18,7 +19,9 @@ fn cholesky_solve(a: &mut [f64], b: &mut [f64], p: usize, m: usize) -> Result<()
         }
         if !(diag > 0.0) {
             // negative OR NaN (NaN fails every comparison)
-            return Err(format!("matrix not SPD at column {j} (diag {diag})"));
+            return Err(QappaError::Model(format!(
+                "matrix not SPD at column {j} (diag {diag})"
+            )));
         }
         let d = diag.sqrt();
         a[j * p + j] = d;
@@ -99,7 +102,7 @@ pub fn solve_from_gram_f64(
     n_eff: f64,
     lam: f64,
     p: usize,
-) -> Result<Vec<f64>, String> {
+) -> Result<Vec<f64>, QappaError> {
     let n_eff = n_eff.max(1.0);
     let mut a: Vec<f64> = g.iter().map(|v| v / n_eff).collect();
     let mut b: Vec<f64> = c.iter().map(|v| v / n_eff).collect();
@@ -122,7 +125,7 @@ pub fn ridge_fit_f64(
     d: usize,
     lam: f64,
     degree: usize,
-) -> Result<Vec<f64>, String> {
+) -> Result<Vec<f64>, QappaError> {
     let (g, c, n_eff) = gram_f64(x, y, w, n, d, degree);
     let p = 1 + monomial_indices(d, degree).len();
     solve_from_gram_f64(&g, &c, n_eff, lam, p)
@@ -175,7 +178,7 @@ impl Backend for NativeBackend {
         n: usize,
         lam: f32,
         degree: usize,
-    ) -> Result<Vec<f32>, String> {
+    ) -> Result<Vec<f32>, QappaError> {
         let coef = ridge_fit_f64(
             &to_f64(x),
             &to_f64(y),
@@ -196,7 +199,7 @@ impl Backend for NativeBackend {
         n: usize,
         coef: &[f32],
         degree: usize,
-    ) -> Result<[f32; M], String> {
+    ) -> Result<[f32; M], QappaError> {
         let pred = predict_f64(&to_f64(x), n, self.d, &to_f64(coef), degree);
         let mut mse = [0.0f64; M];
         let mut n_eff = 0.0;
@@ -222,7 +225,7 @@ impl Backend for NativeBackend {
         n: usize,
         coef: &[f32],
         degree: usize,
-    ) -> Result<Vec<f32>, String> {
+    ) -> Result<Vec<f32>, QappaError> {
         Ok(predict_f64(&to_f64(x), n, self.d, &to_f64(coef), degree)
             .into_iter()
             .map(|v| v as f32)
@@ -244,7 +247,7 @@ impl Backend for NativeBackend {
         w: &[f32],
         n: usize,
         degree: usize,
-    ) -> Result<(Vec<f32>, Vec<f32>, f32), String> {
+    ) -> Result<(Vec<f32>, Vec<f32>, f32), QappaError> {
         let (g, c, n_eff) = gram_f64(&to_f64(x), &to_f64(y), &to_f64(w), n, self.d, degree);
         Ok((
             g.into_iter().map(|v| v as f32).collect(),
@@ -260,7 +263,7 @@ impl Backend for NativeBackend {
         n_eff: f32,
         lam: f32,
         degree: usize,
-    ) -> Result<Vec<f32>, String> {
+    ) -> Result<Vec<f32>, QappaError> {
         let p = crate::model::features::num_features(self.d, degree);
         let out = solve_from_gram_f64(&to_f64(g), &to_f64(c), n_eff as f64, lam as f64, p)?;
         Ok(out.into_iter().map(|v| v as f32).collect())

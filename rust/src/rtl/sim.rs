@@ -6,6 +6,7 @@
 //! assumes (`synth::mac` activity constants) — the same loop the paper
 //! closes with VCS + SAIF.
 
+use crate::api::error::QappaError;
 use crate::rtl::netlist::{GateKind, Netlist};
 use crate::util::prng::Rng;
 
@@ -94,7 +95,7 @@ pub fn to_bits(value: u64, width: u32) -> Vec<bool> {
 
 /// Run `n` random vectors through the INT16 multiplier netlist and verify
 /// against host arithmetic; returns measured activity.
-pub fn verify_int16_multiplier(n: usize, seed: u64) -> Result<f64, String> {
+pub fn verify_int16_multiplier(n: usize, seed: u64) -> Result<f64, QappaError> {
     let nl = crate::rtl::netlist::int16_multiplier();
     let mut sim = Simulator::new(&nl);
     let mut rng = Rng::new(seed);
@@ -107,14 +108,16 @@ pub fn verify_int16_multiplier(n: usize, seed: u64) -> Result<f64, String> {
         let got = sim.output_u64("product");
         let want = a * b;
         if got != want {
-            return Err(format!("vector {i}: {a} * {b} = {want}, netlist says {got}"));
+            return Err(QappaError::Model(format!(
+                "vector {i}: {a} * {b} = {want}, netlist says {got}"
+            )));
         }
     }
     Ok(sim.activity())
 }
 
 /// Verify the LightPE shift-add term netlist against host arithmetic.
-pub fn verify_light_term(acc_w: u32, n: usize, seed: u64) -> Result<f64, String> {
+pub fn verify_light_term(acc_w: u32, n: usize, seed: u64) -> Result<f64, QappaError> {
     let nl = crate::rtl::netlist::light_term(acc_w);
     let mut sim = Simulator::new(&nl);
     let mut rng = Rng::new(seed);
@@ -137,9 +140,9 @@ pub fn verify_light_term(acc_w: u32, n: usize, seed: u64) -> Result<f64, String>
             acc.wrapping_add(term) & mask
         };
         if got != want {
-            return Err(format!(
+            return Err(QappaError::Model(format!(
                 "vector {i}: acc={acc} act={act} shamt={shamt} sign={sign}: want {want}, got {got}"
-            ));
+            )));
         }
     }
     Ok(sim.activity())

@@ -10,8 +10,9 @@
 use std::path::Path;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::mpsc::{channel, Receiver, Sender};
-use std::sync::Arc;
+use std::sync::{Arc, Mutex};
 
+use crate::api::error::QappaError;
 use crate::model::{Backend, M};
 use crate::runtime::client::ArtifactRuntime;
 
@@ -21,7 +22,7 @@ enum Request {
         coef: Arc<Vec<f32>>,
         x: Vec<f32>, // n x d
         n: usize,
-        reply: Sender<Result<Vec<f32>, String>>,
+        reply: Sender<Result<Vec<f32>, QappaError>>,
     },
     Fit {
         degree: usize,
@@ -30,7 +31,7 @@ enum Request {
         w: Vec<f32>,
         n: usize,
         lam: f32,
-        reply: Sender<Result<Vec<f32>, String>>,
+        reply: Sender<Result<Vec<f32>, QappaError>>,
     },
     Loss {
         degree: usize,
@@ -39,7 +40,7 @@ enum Request {
         w: Vec<f32>,
         n: usize,
         coef: Vec<f32>,
-        reply: Sender<Result<Vec<f32>, String>>,
+        reply: Sender<Result<Vec<f32>, QappaError>>,
     },
     Gram {
         degree: usize,
@@ -47,7 +48,7 @@ enum Request {
         y: Vec<f32>,
         w: Vec<f32>,
         n: usize,
-        reply: Sender<Result<(Vec<f32>, Vec<f32>, f32), String>>,
+        reply: Sender<Result<(Vec<f32>, Vec<f32>, f32), QappaError>>,
     },
     Solve {
         degree: usize,
@@ -55,7 +56,7 @@ enum Request {
         c: Vec<f32>,
         n_eff: f32,
         lam: f32,
-        reply: Sender<Result<Vec<f32>, String>>,
+        reply: Sender<Result<Vec<f32>, QappaError>>,
     },
     Shutdown,
 }
@@ -74,8 +75,13 @@ pub struct EngineStats {
 }
 
 /// Handle to the engine thread.
+///
+/// `Engine` is `Sync` (the request sender sits behind a `Mutex`), so one
+/// engine can be shared by reference across a serving session's worker
+/// threads — concurrent predict requests land in the same queue and get
+/// coalesced by the dynamic batcher.
 pub struct Engine {
-    tx: Sender<Request>,
+    tx: Mutex<Sender<Request>>,
     pub stats: Arc<EngineStats>,
     pub d: usize,
     pub n_fit: usize,
@@ -85,13 +91,13 @@ pub struct Engine {
 
 impl Engine {
     /// Start the engine by loading artifacts from `dir`.
-    pub fn start(dir: &Path) -> Result<Engine, String> {
+    pub fn start(dir: &Path) -> Result<Engine, QappaError> {
         let (tx, rx) = channel::<Request>();
         let stats = Arc::new(EngineStats::default());
         let stats2 = stats.clone();
         // Load inside the engine thread (handles are not Send), but fail
         // fast: the thread reports readiness over a oneshot.
-        let (ready_tx, ready_rx) = channel::<Result<(usize, usize, usize), String>>();
+        let (ready_tx, ready_rx) = channel::<Result<(usize, usize, usize), QappaError>>();
         let dir = dir.to_path_buf();
         let join = std::thread::Builder::new()
             .name("qappa-runtime".into())
@@ -103,22 +109,37 @@ impl Engine {
                         rt
                     }
                     Err(e) => {
-                        let _ = ready_tx.send(Err(format!("{e:#}")));
+                        let _ = ready_tx.send(Err(QappaError::Backend(format!("{e:#}"))));
                         return;
                     }
                 };
                 engine_loop(rt, rx, stats2);
             })
-            .map_err(|e| e.to_string())?;
-        let (d, n_fit, b_predict) = ready_rx
-            .recv()
-            .map_err(|_| "engine thread died during artifact load".to_string())??;
-        Ok(Engine { tx, stats, d, n_fit, b_predict, join: Some(join) })
+            .map_err(|e| QappaError::io("spawning qappa-runtime thread", e))?;
+        let (d, n_fit, b_predict) = ready_rx.recv().map_err(|_| {
+            QappaError::Backend("engine thread died during artifact load".into())
+        })??;
+        Ok(Engine { tx: Mutex::new(tx), stats, d, n_fit, b_predict, join: Some(join) })
     }
 
-    fn rpc(&self, req: Request, rx: Receiver<Result<Vec<f32>, String>>) -> Result<Vec<f32>, String> {
-        self.tx.send(req).map_err(|_| "engine gone".to_string())?;
-        rx.recv().map_err(|_| "engine dropped reply".to_string())?
+    /// Queue one request (lock scope is just the send, so concurrent
+    /// callers only serialize on the enqueue).
+    fn send(&self, req: Request) -> Result<(), QappaError> {
+        self.tx
+            .lock()
+            .unwrap_or_else(|p| p.into_inner())
+            .send(req)
+            .map_err(|_| QappaError::Backend("engine gone".into()))
+    }
+
+    fn rpc(
+        &self,
+        req: Request,
+        rx: Receiver<Result<Vec<f32>, QappaError>>,
+    ) -> Result<Vec<f32>, QappaError> {
+        self.send(req)?;
+        rx.recv()
+            .map_err(|_| QappaError::Backend("engine dropped reply".into()))?
     }
 
     pub fn predict(
@@ -127,7 +148,7 @@ impl Engine {
         coef: Arc<Vec<f32>>,
         x: Vec<f32>,
         n: usize,
-    ) -> Result<Vec<f32>, String> {
+    ) -> Result<Vec<f32>, QappaError> {
         let (reply, rx) = channel();
         self.stats.predict_requests.fetch_add(1, Ordering::Relaxed);
         self.stats.predict_rows.fetch_add(n as u64, Ordering::Relaxed);
@@ -142,7 +163,7 @@ impl Engine {
         w: Vec<f32>,
         n: usize,
         lam: f32,
-    ) -> Result<Vec<f32>, String> {
+    ) -> Result<Vec<f32>, QappaError> {
         let (reply, rx) = channel();
         self.stats.fit_calls.fetch_add(1, Ordering::Relaxed);
         self.rpc(Request::Fit { degree, x, y, w, n, lam, reply }, rx)
@@ -156,7 +177,7 @@ impl Engine {
         w: Vec<f32>,
         n: usize,
         coef: Vec<f32>,
-    ) -> Result<Vec<f32>, String> {
+    ) -> Result<Vec<f32>, QappaError> {
         let (reply, rx) = channel();
         self.stats.loss_calls.fetch_add(1, Ordering::Relaxed);
         self.rpc(Request::Loss { degree, x, y, w, n, coef, reply }, rx)
@@ -169,13 +190,12 @@ impl Engine {
         y: Vec<f32>,
         w: Vec<f32>,
         n: usize,
-    ) -> Result<(Vec<f32>, Vec<f32>, f32), String> {
+    ) -> Result<(Vec<f32>, Vec<f32>, f32), QappaError> {
         let (reply, rx) = channel();
         self.stats.gram_calls.fetch_add(1, Ordering::Relaxed);
-        self.tx
-            .send(Request::Gram { degree, x, y, w, n, reply })
-            .map_err(|_| "engine gone".to_string())?;
-        rx.recv().map_err(|_| "engine dropped reply".to_string())?
+        self.send(Request::Gram { degree, x, y, w, n, reply })?;
+        rx.recv()
+            .map_err(|_| QappaError::Backend("engine dropped reply".into()))?
     }
 
     pub fn solve(
@@ -185,7 +205,7 @@ impl Engine {
         c: Vec<f32>,
         n_eff: f32,
         lam: f32,
-    ) -> Result<Vec<f32>, String> {
+    ) -> Result<Vec<f32>, QappaError> {
         let (reply, rx) = channel();
         self.stats.solve_calls.fetch_add(1, Ordering::Relaxed);
         self.rpc(Request::Solve { degree, g, c, n_eff, lam, reply }, rx)
@@ -194,7 +214,7 @@ impl Engine {
 
 impl Drop for Engine {
     fn drop(&mut self) {
-        let _ = self.tx.send(Request::Shutdown);
+        let _ = self.send(Request::Shutdown);
         if let Some(j) = self.join.take() {
             let _ = j.join();
         }
@@ -220,7 +240,7 @@ fn engine_loop(rt: ArtifactRuntime, rx: Receiver<Request>, stats: Arc<EngineStat
         coef: Arc<Vec<f32>>,
         x: Vec<f32>,
         n: usize,
-        reply: Sender<Result<Vec<f32>, String>>,
+        reply: Sender<Result<Vec<f32>, QappaError>>,
     }
 
     let mut queue: Vec<Pending> = Vec::new();
@@ -249,7 +269,7 @@ fn engine_loop(rt: ArtifactRuntime, rx: Receiver<Request>, stats: Arc<EngineStat
                 all_x.extend_from_slice(&p.x[..p.n * d]);
             }
             let mut all_out: Vec<f32> = Vec::with_capacity(total * m);
-            let mut ok = Ok(());
+            let mut ok: Result<(), QappaError> = Ok(());
             let mut off = 0usize;
             while off < total {
                 let take = (total - off).min(b);
@@ -261,7 +281,7 @@ fn engine_loop(rt: ArtifactRuntime, rx: Receiver<Request>, stats: Arc<EngineStat
                 match rt.predict_tile(degree, &tile, &coef) {
                     Ok(out) => all_out.extend_from_slice(&out[..take * m]),
                     Err(e) => {
-                        ok = Err(format!("{e:#}"));
+                        ok = Err(QappaError::Backend(format!("{e:#}")));
                         break;
                     }
                 }
@@ -318,24 +338,30 @@ fn engine_loop(rt: ArtifactRuntime, rx: Receiver<Request>, stats: Arc<EngineStat
                 Request::Fit { degree, x, y, w, n, lam, reply } => {
                     let n_fit = rt.manifest.n_fit;
                     let res = if n > n_fit {
-                        Err(format!("fit rows {n} exceed artifact capacity {n_fit}"))
+                        Err(QappaError::Backend(format!(
+                            "fit rows {n} exceed artifact capacity {n_fit}"
+                        )))
                     } else {
                         let xp = pad_rows(&x, n, d, n_fit);
                         let yp = pad_rows(&y, n, m, n_fit);
                         let wp = pad_rows(&w, n, 1, n_fit);
-                        rt.fit(degree, &xp, &yp, &wp, lam).map_err(|e| format!("{e:#}"))
+                        rt.fit(degree, &xp, &yp, &wp, lam)
+                            .map_err(|e| QappaError::Backend(format!("{e:#}")))
                     };
                     let _ = reply.send(res);
                 }
                 Request::Loss { degree, x, y, w, n, coef, reply } => {
                     let n_fit = rt.manifest.n_fit;
                     let res = if n > n_fit {
-                        Err(format!("loss rows {n} exceed artifact capacity {n_fit}"))
+                        Err(QappaError::Backend(format!(
+                            "loss rows {n} exceed artifact capacity {n_fit}"
+                        )))
                     } else {
                         let xp = pad_rows(&x, n, d, n_fit);
                         let yp = pad_rows(&y, n, m, n_fit);
                         let wp = pad_rows(&w, n, 1, n_fit);
-                        rt.loss(degree, &xp, &yp, &wp, &coef).map_err(|e| format!("{e:#}"))
+                        rt.loss(degree, &xp, &yp, &wp, &coef)
+                            .map_err(|e| QappaError::Backend(format!("{e:#}")))
                     };
                     let _ = reply.send(res);
                 }
@@ -344,7 +370,7 @@ fn engine_loop(rt: ArtifactRuntime, rx: Receiver<Request>, stats: Arc<EngineStat
                     // b_gram tile and sum the accumulators.
                     let bg = rt.manifest.b_gram;
                     let mut acc: Option<(Vec<f32>, Vec<f32>, f32)> = None;
-                    let mut err = None;
+                    let mut err: Option<QappaError> = None;
                     let mut off = 0usize;
                     while off < n {
                         let take = (n - off).min(bg);
@@ -365,7 +391,7 @@ fn engine_loop(rt: ArtifactRuntime, rx: Receiver<Request>, stats: Arc<EngineStat
                                 }
                             },
                             Err(e) => {
-                                err = Some(format!("{e:#}"));
+                                err = Some(QappaError::Backend(format!("{e:#}")));
                                 break;
                             }
                         }
@@ -374,14 +400,16 @@ fn engine_loop(rt: ArtifactRuntime, rx: Receiver<Request>, stats: Arc<EngineStat
                     let res = match (err, acc) {
                         (Some(e), _) => Err(e),
                         (None, Some(a)) => Ok(a),
-                        (None, None) => Err("gram with zero rows".into()),
+                        (None, None) => {
+                            Err(QappaError::Backend("gram with zero rows".into()))
+                        }
                     };
                     let _ = reply.send(res);
                 }
                 Request::Solve { degree, g, c, n_eff, lam, reply } => {
                     let res = rt
                         .solve(degree, &g, &c, n_eff, lam)
-                        .map_err(|e| format!("{e:#}"));
+                        .map_err(|e| QappaError::Backend(format!("{e:#}")));
                     let _ = reply.send(res);
                 }
                 Request::Predict { .. } | Request::Shutdown => unreachable!(),
@@ -422,7 +450,7 @@ impl Backend for XlaBackend {
         n: usize,
         lam: f32,
         degree: usize,
-    ) -> Result<Vec<f32>, String> {
+    ) -> Result<Vec<f32>, QappaError> {
         self.engine
             .fit(degree, x.to_vec(), y.to_vec(), w.to_vec(), n, lam)
     }
@@ -435,12 +463,12 @@ impl Backend for XlaBackend {
         n: usize,
         coef: &[f32],
         degree: usize,
-    ) -> Result<[f32; M], String> {
+    ) -> Result<[f32; M], QappaError> {
         let v = self
             .engine
             .loss(degree, x.to_vec(), y.to_vec(), w.to_vec(), n, coef.to_vec())?;
         if v.len() != M {
-            return Err(format!("loss returned {} values", v.len()));
+            return Err(QappaError::Backend(format!("loss returned {} values", v.len())));
         }
         Ok([v[0], v[1], v[2]])
     }
@@ -451,7 +479,7 @@ impl Backend for XlaBackend {
         n: usize,
         coef: &[f32],
         degree: usize,
-    ) -> Result<Vec<f32>, String> {
+    ) -> Result<Vec<f32>, QappaError> {
         self.engine
             .predict(degree, Arc::new(coef.to_vec()), x.to_vec(), n)
     }
@@ -471,7 +499,7 @@ impl Backend for XlaBackend {
         w: &[f32],
         n: usize,
         degree: usize,
-    ) -> Result<(Vec<f32>, Vec<f32>, f32), String> {
+    ) -> Result<(Vec<f32>, Vec<f32>, f32), QappaError> {
         self.engine
             .gram(degree, x.to_vec(), y.to_vec(), w.to_vec(), n)
     }
@@ -483,7 +511,7 @@ impl Backend for XlaBackend {
         n_eff: f32,
         lam: f32,
         degree: usize,
-    ) -> Result<Vec<f32>, String> {
+    ) -> Result<Vec<f32>, QappaError> {
         self.engine
             .solve(degree, g.to_vec(), c.to_vec(), n_eff, lam)
     }

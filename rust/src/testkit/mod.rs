@@ -7,6 +7,12 @@
 
 use crate::util::prng::Rng;
 
+/// Property outcome: `Err(message)` describes the violation.  Properties
+/// report plain test-expectation messages, not service failures, so this
+/// stays a string (the crate's service APIs return
+/// [`crate::QappaError`] instead).
+pub type PropResult = Result<(), String>;
+
 /// Outcome of a property run.
 #[derive(Debug)]
 pub struct Failure {
@@ -23,7 +29,7 @@ pub fn forall<T: std::fmt::Debug>(
     n: usize,
     base_seed: u64,
     gen: impl Fn(&mut Rng) -> T,
-    prop: impl Fn(&T) -> Result<(), String>,
+    prop: impl Fn(&T) -> PropResult,
 ) {
     if let Some(f) = forall_result(n, base_seed, &gen, &prop) {
         panic!(
@@ -38,7 +44,7 @@ pub fn forall_result<T: std::fmt::Debug>(
     n: usize,
     base_seed: u64,
     gen: &impl Fn(&mut Rng) -> T,
-    prop: &impl Fn(&T) -> Result<(), String>,
+    prop: &impl Fn(&T) -> PropResult,
 ) -> Option<Failure> {
     for i in 0..n {
         let seed = base_seed.wrapping_add(i as u64);

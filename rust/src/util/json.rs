@@ -126,12 +126,6 @@ impl Json {
 
     // -------------------------------------------------------------- writers
 
-    pub fn to_string(&self) -> String {
-        let mut s = String::new();
-        self.write(&mut s);
-        s
-    }
-
     fn write(&self, out: &mut String) {
         match self {
             Json::Null => out.push_str("null"),
@@ -168,6 +162,16 @@ impl Json {
                 out.push('}');
             }
         }
+    }
+}
+
+/// Serialization: `json.to_string()` (via `ToString`) emits compact JSON
+/// text that [`Json::parse`] round-trips.
+impl fmt::Display for Json {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        let mut s = String::new();
+        self.write(&mut s);
+        f.write_str(&s)
     }
 }
 

@@ -16,6 +16,7 @@
 //! treats the spec as a JSON file path, and otherwise fails with the full
 //! list of known names.
 
+use crate::api::error::QappaError;
 use crate::dataflow::layer::Layer;
 use crate::util::json::{obj, Json};
 
@@ -45,7 +46,7 @@ pub fn by_name(name: &str) -> Option<Vec<Layer>> {
 ///
 /// The error message lists every built-in name and points at the JSON
 /// schema docs, so an unknown `--workload` is always actionable.
-pub fn load(spec: &str) -> Result<(String, Vec<Layer>), String> {
+pub fn load(spec: &str) -> Result<(String, Vec<Layer>), QappaError> {
     if let Some((canonical, f)) = builder(spec) {
         return Ok((canonical.to_string(), f()));
     }
@@ -53,14 +54,14 @@ pub fn load(spec: &str) -> Result<(String, Vec<Layer>), String> {
         spec.ends_with(".json") || spec.contains('/') || spec.contains('\\');
     if looks_like_path {
         let text = std::fs::read_to_string(spec)
-            .map_err(|e| format!("reading workload file '{spec}': {e}"))?;
-        return from_json(&text).map_err(|e| format!("workload file '{spec}': {e}"));
+            .map_err(|e| QappaError::io(format!("reading workload file '{spec}'"), e))?;
+        return from_json(&text).map_err(|e| e.context(format!("workload file '{spec}'")));
     }
-    Err(format!(
+    Err(QappaError::Workload(format!(
         "unknown workload '{spec}'. Built-in workloads: {}. \
          Or pass a path to a .json model file (schema: docs/WORKLOADS.md).",
         WORKLOAD_NAMES.join(", ")
-    ))
+    )))
 }
 
 // ---------------------------------------------------------------------------
@@ -74,15 +75,25 @@ pub fn load(spec: &str) -> Result<(String, Vec<Layer>), String> {
 /// `docs/WORKLOADS.md` for the per-type fields and defaults. Every layer is
 /// validated ([`Layer::validate`]) so malformed models fail with the layer
 /// name in the error, not deep inside the dataflow model.
-pub fn from_json(text: &str) -> Result<(String, Vec<Layer>), String> {
-    let v = Json::parse(text).map_err(|e| e.to_string())?;
+pub fn from_json(text: &str) -> Result<(String, Vec<Layer>), QappaError> {
+    let v = Json::parse(text).map_err(|e| QappaError::Workload(e.to_string()))?;
+    from_json_value(&v)
+}
+
+/// [`from_json`] over an already-parsed [`Json`] value (used by the
+/// service layer, whose payloads embed workloads inside larger objects).
+pub fn from_json_value(v: &Json) -> Result<(String, Vec<Layer>), QappaError> {
     let name = v.get("name").as_str().unwrap_or("custom").to_string();
     let arr = v
         .get("layers")
         .as_arr()
-        .ok_or("workload JSON needs a top-level \"layers\" array")?;
+        .ok_or_else(|| {
+            QappaError::Workload("workload JSON needs a top-level \"layers\" array".into())
+        })?;
     if arr.is_empty() {
-        return Err("workload JSON has an empty \"layers\" array".into());
+        return Err(QappaError::Workload(
+            "workload JSON has an empty \"layers\" array".into(),
+        ));
     }
     let mut layers = Vec::with_capacity(arr.len());
     for (i, lj) in arr.iter().enumerate() {
@@ -132,26 +143,29 @@ pub fn to_json(name: &str, layers: &[Layer]) -> Json {
     obj(vec![("name", Json::Str(name.into())), ("layers", Json::Arr(arr))])
 }
 
-fn req_u32(v: &Json, key: &str, what: &str) -> Result<u32, String> {
+fn req_u32(v: &Json, key: &str, what: &str) -> Result<u32, QappaError> {
     v.get(key)
         .as_usize()
-        .map(|x| x as u32)
-        .ok_or_else(|| format!("{what}: missing or non-integer field \"{key}\""))
+        .and_then(|x| u32::try_from(x).ok())
+        .ok_or_else(|| {
+            QappaError::Workload(format!("{what}: missing or non-integer field \"{key}\""))
+        })
 }
 
 /// Optional field: absent -> default, present-but-malformed -> error (a
 /// string or fractional `stride` must not silently load as the default).
-fn opt_u32(v: &Json, key: &str, default: u32, what: &str) -> Result<u32, String> {
+fn opt_u32(v: &Json, key: &str, default: u32, what: &str) -> Result<u32, QappaError> {
     match v.get(key) {
         Json::Null => Ok(default),
-        other => other
-            .as_usize()
-            .map(|x| x as u32)
-            .ok_or_else(|| format!("{what}: field \"{key}\" must be a non-negative integer")),
+        other => other.as_usize().and_then(|x| u32::try_from(x).ok()).ok_or_else(|| {
+            QappaError::Workload(format!(
+                "{what}: field \"{key}\" must be a non-negative integer"
+            ))
+        }),
     }
 }
 
-fn layer_from_json(v: &Json, idx: usize) -> Result<Layer, String> {
+fn layer_from_json(v: &Json, idx: usize) -> Result<Layer, QappaError> {
     let name = v
         .get("name")
         .as_str()
@@ -169,10 +183,10 @@ fn layer_from_json(v: &Json, idx: usize) -> Result<Layer, String> {
                 || opt_u32(v, "groups", 1, &what)? != 1
                 || opt_u32(v, "rs", 1, &what)? != 1
             {
-                return Err(format!(
+                return Err(QappaError::Workload(format!(
                     "{what}: \"pw\" is a dense 1x1 stride-1 conv; use type \"conv\" \
                      for other strides/kernels/groups"
-                ));
+                )));
             }
             Ok(Layer::pw(
                 &name,
@@ -187,10 +201,10 @@ fn layer_from_json(v: &Json, idx: usize) -> Result<Layer, String> {
             // Depthwise pins k = groups = c; an explicit contradicting
             // value must not be silently overridden.
             if opt_u32(v, "k", c, &what)? != c || opt_u32(v, "groups", c, &what)? != c {
-                return Err(format!(
+                return Err(QappaError::Workload(format!(
                     "{what}: \"dw\" layers have k = groups = c; use type \"grouped\" \
                      for other channel connectivities"
-                ));
+                )));
             }
             Ok(Layer::dw(
                 &name,
@@ -208,10 +222,10 @@ fn layer_from_json(v: &Json, idx: usize) -> Result<Layer, String> {
             // certainly a dropped field — exactly the dense-costing error
             // this loader exists to prevent. Fail loudly.
             if kind == "grouped" && groups < 2 {
-                return Err(format!(
+                return Err(QappaError::Workload(format!(
                     "{what}: type \"grouped\" requires \"groups\" >= 2 \
                      (got {groups}); use type \"conv\" for dense layers"
-                ));
+                )));
             }
             // Built as a struct literal (not Layer::grouped) so bad
             // divisibility reaches validate() as an error, not a
@@ -227,9 +241,9 @@ fn layer_from_json(v: &Json, idx: usize) -> Result<Layer, String> {
                 groups,
             })
         }
-        other => Err(format!(
+        other => Err(QappaError::Workload(format!(
             "{what}: unknown layer type '{other}' (expected conv|grouped|dw|pw|fc)"
-        )),
+        ))),
     }
 }
 
@@ -525,7 +539,7 @@ mod tests {
         assert_eq!(layers.len(), mobilenetv2().len());
         // alias maps to the canonical name
         assert_eq!(load("vgg-16").unwrap().0, "vgg16");
-        let err = load("alexnet").unwrap_err();
+        let err = load("alexnet").unwrap_err().to_string();
         for n in WORKLOAD_NAMES {
             assert!(err.contains(n), "error should list '{n}': {err}");
         }
@@ -579,17 +593,21 @@ mod tests {
         // empty layers
         assert!(from_json(r#"{"layers": []}"#).is_err());
         // unknown type
-        let e = from_json(r#"{"layers": [{"type": "pool", "c": 3}]}"#).unwrap_err();
+        let e = from_json(r#"{"layers": [{"type": "pool", "c": 3}]}"#)
+            .unwrap_err()
+            .to_string();
         assert!(e.contains("pool"), "{e}");
         // missing required field
         let e = from_json(r#"{"layers": [{"type": "conv", "c": 3, "hw": 8, "rs": 3}]}"#)
-            .unwrap_err();
+            .unwrap_err()
+            .to_string();
         assert!(e.contains("\"k\""), "{e}");
         // groups not dividing channels
         let e = from_json(
             r#"{"layers": [{"type": "grouped", "c": 10, "k": 8, "hw": 8, "rs": 3, "groups": 3}]}"#,
         )
-        .unwrap_err();
+        .unwrap_err()
+        .to_string();
         assert!(e.contains("divisible"), "{e}");
     }
 
@@ -601,7 +619,8 @@ mod tests {
         let e = from_json(
             r#"{"layers": [{"type": "conv", "c": 3, "k": 16, "hw": 32, "rs": 3, "stride": "2"}]}"#,
         )
-        .unwrap_err();
+        .unwrap_err()
+        .to_string();
         assert!(e.contains("\"stride\""), "{e}");
         // fractional values are not integers
         assert!(from_json(
@@ -611,15 +630,23 @@ mod tests {
         // "grouped" with groups omitted (or 1) is a dropped-field error,
         // not a silent dense conv
         let e = from_json(r#"{"layers": [{"type": "grouped", "c": 64, "k": 64, "hw": 8, "rs": 3}]}"#)
-            .unwrap_err();
+            .unwrap_err()
+            .to_string();
         assert!(e.contains("groups"), "{e}");
         // dw with a contradicting k must not be silently overridden
         let e = from_json(r#"{"layers": [{"type": "dw", "c": 16, "k": 32, "hw": 8, "rs": 3}]}"#)
-            .unwrap_err();
+            .unwrap_err()
+            .to_string();
         assert!(e.contains("dw"), "{e}");
         // pw with a stride would be silently ignored -> error
         assert!(from_json(
             r#"{"layers": [{"type": "pw", "c": 16, "k": 32, "hw": 8, "stride": 2}]}"#
+        )
+        .is_err());
+        // values past u32::MAX must error, not wrap modulo 2^32
+        // (4294967299 = 2^32 + 3 would otherwise load as c = 3)
+        assert!(from_json(
+            r#"{"layers": [{"type": "conv", "c": 4294967299, "k": 64, "hw": 8, "rs": 3}]}"#
         )
         .is_err());
     }

@@ -180,7 +180,7 @@ fn prop_rtl_light_term_verifies_for_any_width() {
         |&w| {
             qappa::rtl::sim::verify_light_term(w, 60, w as u64)
                 .map(|_| ())
-                .map_err(|e| e)
+                .map_err(|e| e.to_string())
         },
     );
 }
@@ -246,7 +246,7 @@ fn prop_native_fit_interpolates_planted_targets() {
             let x: Vec<f64> = (0..n * d).map(|_| rng.range_f64(-1.0, 1.0)).collect();
             let y = predict_f64(&x, n, d, &coef, degree);
             let w = vec![1.0; n];
-            let fitted = ridge_fit_f64(&x, &y, &w, n, d, 0.0, degree).map_err(|e| e)?;
+            let fitted = ridge_fit_f64(&x, &y, &w, n, d, 0.0, degree).map_err(|e| e.to_string())?;
             let yhat = predict_f64(&x, n, d, &fitted, degree);
             for (a, b) in yhat.iter().zip(&y) {
                 if (a - b).abs() > 1e-4 * b.abs().max(1.0) {

@@ -1,0 +1,164 @@
+//! Integration: the `qappa serve` request loop against one warm session —
+//! a mixed batch of `explore` / `synth` / `analyze` requests through one
+//! session must train the PPA models exactly once (ModelStore counters),
+//! sequentially and under concurrent dispatch.
+
+use qappa::api::{
+    serve, BackendChoice, Qappa, ResponseBody, ServeOptions, ServeResponse, ServeStats,
+    SessionInfo,
+};
+use qappa::config::PeType;
+use qappa::coordinator::DesignSpace;
+use qappa::coordinator::DseOptions;
+use qappa::model::CvConfig;
+use qappa::util::json::Json;
+
+fn tiny_session() -> Qappa {
+    Qappa::builder()
+        .backend(BackendChoice::Native)
+        .options(DseOptions {
+            space: DesignSpace::tiny(),
+            train_per_type: 64,
+            cv: CvConfig { k: 3, degrees: vec![1, 2], lambdas: vec![1e-3, 1e-2], seed: 1 },
+            seed: 7,
+            workers: 4,
+            sigma: 0.02,
+            chunk: 32,
+            topk: 8,
+        })
+        .build()
+}
+
+fn parse_lines(out: &[u8]) -> Vec<ServeResponse> {
+    std::str::from_utf8(out)
+        .expect("utf8 output")
+        .lines()
+        .map(|l| ServeResponse::from_json(&Json::parse(l).expect("response json")).expect("typed"))
+        .collect()
+}
+
+#[test]
+fn mixed_batch_through_one_session_trains_models_once() {
+    let session = tiny_session();
+    let input = concat!(
+        r#"{"id":1,"op":"workloads"}"#, "\n",
+        r#"{"id":2,"op":"synth","params":{"config":{"pe_type":"int16"}}}"#, "\n",
+        r#"{"id":3,"op":"explore","params":{"workloads":["vgg16"]}}"#, "\n",
+        r#"{"id":4,"op":"explore","params":{"workloads":["vgg16"]}}"#, "\n",
+        r#"{"id":5,"op":"analyze","params":{"workload":"vgg16","config":{"pe_type":"lightpe1"}}}"#, "\n",
+        r#"{"id":6,"op":"session"}"#, "\n",
+    );
+    let mut out = Vec::new();
+    let stats =
+        serve(&session, input.as_bytes(), &mut out, &ServeOptions { concurrency: 1 }).unwrap();
+    assert_eq!(stats, ServeStats { requests: 6, ok: 6, errors: 0 });
+
+    let resps = parse_lines(&out);
+    assert_eq!(resps.len(), 6);
+    // sequential serving answers in request order, ids echoed
+    let ids: Vec<u64> = resps.iter().map(|r| r.id.expect("id echoed")).collect();
+    assert_eq!(ids, vec![1, 2, 3, 4, 5, 6]);
+    for r in &resps {
+        assert!(r.result.is_ok(), "request {:?} failed: {:?}", r.id, r.result);
+    }
+
+    // models trained exactly once: the first explore misses 4 (one per PE
+    // type), the repeat explore is 4 cache hits
+    assert_eq!(session.store().misses(), 4, "one training pass per PE type");
+    assert!(session.store().hits() >= 4, "repeat explore served warm");
+
+    // the two explore responses are identical (same warm models)
+    match (&resps[2].result, &resps[3].result) {
+        (Ok(ResponseBody::Explore(a)), Ok(ResponseBody::Explore(b))) => {
+            assert_eq!(a, b, "warm repeat explore must be deterministic");
+            assert_eq!(a.summaries.len(), 1);
+            assert_eq!(a.summaries[0].workload, "vgg16");
+            assert_eq!(a.summaries[0].anchor.pe_type, PeType::Int16);
+        }
+        other => panic!("expected two explore responses, got {other:?}"),
+    }
+
+    // the session op reported the same counters over the wire
+    match &resps[5].result {
+        Ok(ResponseBody::Session(SessionInfo { backend, models_trained, cache_hits, .. })) => {
+            assert_eq!(backend.as_deref(), Some("native"));
+            assert_eq!(*models_trained, 4);
+            assert!(*cache_hits >= 4);
+        }
+        other => panic!("expected a session response, got {other:?}"),
+    }
+}
+
+#[test]
+fn concurrent_dispatch_shares_one_warm_session() {
+    let session = tiny_session();
+    // Two cold explores racing plus cheap requests: in-flight training
+    // dedup must still train each PE-type model exactly once.
+    let input = concat!(
+        r#"{"id":1,"op":"explore","params":{"workloads":["vgg16"]}}"#, "\n",
+        r#"{"id":2,"op":"explore","params":{"workloads":["vgg16"]}}"#, "\n",
+        r#"{"id":3,"op":"workloads"}"#, "\n",
+        r#"{"id":4,"op":"synth","params":{"config":{"pe_type":"fp32"}}}"#, "\n",
+        r#"{"id":5,"op":"analyze","params":{"workload":"mobilenetv2","config":{"pe_type":"int16"}}}"#, "\n",
+        r#"{"id":6,"op":"workloads","params":{"workload":"resnet34"}}"#, "\n",
+    );
+    let mut out = Vec::new();
+    let stats =
+        serve(&session, input.as_bytes(), &mut out, &ServeOptions { concurrency: 4 }).unwrap();
+    assert_eq!(stats, ServeStats { requests: 6, ok: 6, errors: 0 });
+
+    let resps = parse_lines(&out);
+    let mut ids: Vec<u64> = resps.iter().map(|r| r.id.expect("id echoed")).collect();
+    ids.sort_unstable();
+    assert_eq!(ids, vec![1, 2, 3, 4, 5, 6], "every request answered exactly once");
+    for r in &resps {
+        assert!(r.result.is_ok(), "request {:?} failed: {:?}", r.id, r.result);
+    }
+    assert_eq!(
+        session.store().misses(),
+        4,
+        "concurrent cold explores must not retrain (in-flight dedup)"
+    );
+    assert!(session.store().hits() >= 4);
+}
+
+#[test]
+fn malformed_requests_answer_errors_and_never_train() {
+    let session = tiny_session();
+    let input = concat!(
+        "this is not json\n",
+        r#"{"id":9,"op":"nope"}"#, "\n",
+        r#"{"id":10,"op":"explore","params":{"workloads":["alexnet"]}}"#, "\n",
+        r#"{"id":11,"op":"synth","params":{"config":{"pe_type":"int16","pe_rows":0}}}"#, "\n",
+        r#"{"id":12,"op":"session"}"#, "\n",
+    );
+    let mut out = Vec::new();
+    let stats =
+        serve(&session, input.as_bytes(), &mut out, &ServeOptions { concurrency: 1 }).unwrap();
+    assert_eq!(stats.requests, 5);
+    assert_eq!(stats.errors, 4);
+
+    let resps = parse_lines(&out);
+    // unparseable line: protocol error, id unknown
+    assert_eq!(resps[0].id, None);
+    assert_eq!(resps[0].result.as_ref().unwrap_err().kind, "protocol");
+    // unknown op: id echoed, protocol error names the op
+    assert_eq!(resps[1].id, Some(9));
+    let e = resps[1].result.as_ref().unwrap_err();
+    assert_eq!(e.kind, "protocol");
+    assert!(e.message.contains("nope"), "{}", e.message);
+    // unknown workload: classified, lists the built-ins
+    let e = resps[2].result.as_ref().unwrap_err();
+    assert_eq!(e.kind, "workload");
+    assert!(e.message.contains("vgg16"), "{}", e.message);
+    // invalid config: classified
+    assert_eq!(resps[3].result.as_ref().unwrap_err().kind, "config");
+    // the loop survived, nothing trained, backend never started
+    match &resps[4].result {
+        Ok(ResponseBody::Session(info)) => {
+            assert_eq!(info.models_trained, 0);
+            assert_eq!(info.backend, None, "bad requests must not start the backend");
+        }
+        other => panic!("expected session response, got {other:?}"),
+    }
+}

@@ -65,7 +65,12 @@ fn main() {
         let b = NativeBackend::new(7);
         for wl in ["vgg16", "resnet34", "resnet50"] {
             let layers = workloads::by_name(wl).unwrap();
-            let res = run_dse(&b, &layers, wl, &opts).unwrap();
+            // run_dse returns a structured QappaError; keep the workload as
+            // context instead of flattening the error to a bare string.
+            let res = run_dse(&b, &layers, wl, &opts).unwrap_or_else(|e| {
+                eprintln!("error: dse over {wl}: {e}");
+                std::process::exit(1);
+            });
             print!("{wl}: ");
             for ty in ALL_PE_TYPES {
                 let (pa, e) = res.ratios[&ty];

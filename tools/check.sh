@@ -11,7 +11,12 @@ run() {
 
 run cargo build --release
 run cargo test -q
-# fmt/doc are advisory in environments without the components installed
+# clippy/fmt/doc are advisory in environments without the components installed
+if cargo clippy --version >/dev/null 2>&1; then
+    run cargo clippy -q -- -D warnings
+else
+    echo "==> cargo clippy unavailable; skipping lint"
+fi
 if cargo fmt --version >/dev/null 2>&1; then
     run cargo fmt --check
 else
