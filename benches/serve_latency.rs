@@ -37,7 +37,7 @@ fn session() -> Qappa {
 }
 
 fn main() {
-    let explore_req = ExploreRequest { workloads: vec!["resnet34".into()] };
+    let explore_req = ExploreRequest { workloads: vec!["resnet34".into()], precision: None };
     let analyze_req = AnalyzeRequest {
         workload: "resnet34".into(),
         config: AcceleratorConfig::default_with(PeType::LightPe1),

@@ -3,14 +3,19 @@
 //! Sweeps the full paper-scale INT16 grid through the `SweepEngine` at
 //! chunk sizes {256, 1k, 4k} and against the eager baseline (one
 //! whole-grid shard), recording throughput and the peak resident point
-//! count — the speed/memory trade the streaming refactor buys.
+//! count — the speed/memory trade the streaming refactor buys.  A second
+//! section sweeps a 3x3 precision grid through the same engine with the
+//! unified cross-precision model, pinning a perf baseline for the
+//! quantization axes.
 #[path = "common.rs"]
 mod common;
 
-use qappa::config::PeType;
+use qappa::config::{MacKind, PeType, QUANT_NUM_FEATURES};
+use qappa::coordinator::precision::{train_quant_model, PrecisionGrid};
 use qappa::coordinator::sweep::{NamedWorkload, SweepEngine};
 use qappa::coordinator::{DseOptions, ModelStore};
 use qappa::dataflow::Layer;
+use qappa::model::native::NativeBackend;
 use qappa::util::bench::Bench;
 
 fn main() {
@@ -55,5 +60,35 @@ fn main() {
             })
             .print();
         println!("  peak resident points: {peak}");
+    }
+
+    // --- precision-grid sweep: the quantization axes' perf baseline -----
+    let quant_backend = NativeBackend::new(QUANT_NUM_FEATURES);
+    let grid = PrecisionGrid::from_ranges(&[4, 8, 16], &[4, 8, 16], &[], MacKind::IntExact)
+        .expect("precision grid");
+    let qmodel =
+        train_quant_model(&quant_backend, &opts, &grid.types).expect("train unified model");
+    let total = grid.len() * opts.space.len();
+    println!(
+        "\n=== precision-grid sweep: {} cells x {} configs = {} points \
+         (unified {QUANT_NUM_FEATURES}-feature model, backend=native) ===",
+        grid.len(),
+        opts.space.len(),
+        total
+    );
+    for chunk in [1024usize, 4096] {
+        let mut o = opts.clone();
+        o.chunk = chunk;
+        Bench::new(&format!("sweep/precision-grid/chunk={chunk}"))
+            .warmup(1)
+            .samples(3)
+            .run_with_units(total as f64, "configs", || {
+                for ty in &grid.types {
+                    SweepEngine::new(&quant_backend, &o)
+                        .sweep_type(&qmodel, *ty, &wl)
+                        .expect("precision sweep");
+                }
+            })
+            .print();
     }
 }

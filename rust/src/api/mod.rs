@@ -32,6 +32,7 @@ pub use session::{BackendChoice, Qappa, QappaBuilder};
 pub use types::{
     config_from_json, AnalyzeRequest, AnalyzeResponse, CvPoint, ErrorBody, ExploreEntry,
     ExploreRequest, ExploreResponse, ExploreSummary, FitModelReport, FitRequest, FitResponse,
-    LayerCost, RequestBody, ResponseBody, ServeRequest, ServeResponse, SessionInfo, SynthRequest,
-    SynthResponse, WorkloadInfo, WorkloadsRequest, WorkloadsResponse, OPS,
+    LayerCost, PrecisionRequest, RequestBody, ResponseBody, ServeRequest, ServeResponse,
+    SessionInfo, SynthRequest, SynthResponse, WorkloadInfo, WorkloadsRequest, WorkloadsResponse,
+    OPS,
 };

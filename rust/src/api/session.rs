@@ -14,7 +14,7 @@
 //! use qappa::api::{ExploreRequest, Qappa};
 //!
 //! let session = Qappa::builder().build();
-//! let req = ExploreRequest { workloads: vec!["mobilenetv2".into()] };
+//! let req = ExploreRequest { workloads: vec!["mobilenetv2".into()], precision: None };
 //! let resp = session.explore(&req).unwrap(); // trains models on first use
 //! let again = session.explore(&req).unwrap(); // warm: zero training passes
 //! assert_eq!(session.store().misses(), 4);
@@ -27,13 +27,14 @@ use std::sync::{Arc, Mutex, OnceLock};
 use crate::api::error::QappaError;
 use crate::api::types::{
     AnalyzeRequest, AnalyzeResponse, ExploreRequest, ExploreResponse, FitRequest, FitResponse,
-    CvPoint, FitModelReport, LayerCost, SessionInfo, SynthRequest, SynthResponse, WorkloadInfo,
-    WorkloadsRequest, WorkloadsResponse,
+    CvPoint, FitModelReport, LayerCost, PrecisionRequest, SessionInfo, SynthRequest,
+    SynthResponse, WorkloadInfo, WorkloadsRequest, WorkloadsResponse,
 };
-use crate::config::{PeType, ALL_PE_TYPES, NUM_FEATURES};
+use crate::config::{PeType, ALL_PE_TYPES, NUM_FEATURES, QUANT_NUM_FEATURES};
 use crate::coordinator::explorer::{
     run_dse_multi, run_dse_with_store, DseOptions, DseResult, ModelStore, WorkloadSummary,
 };
+use crate::coordinator::precision::run_dse_precision;
 use crate::coordinator::report::{fig2_accuracy, AccuracyRow};
 use crate::coordinator::space::DesignSpace;
 use crate::coordinator::sweep::NamedWorkload;
@@ -164,6 +165,7 @@ impl QappaBuilder {
             opts: self.opts,
             store: ModelStore::new(),
             backend: OnceLock::new(),
+            quant_backend: OnceLock::new(),
             init: Mutex::new(()),
         }
     }
@@ -177,6 +179,10 @@ pub struct Qappa {
     /// Lazily-initialized backend: config-only requests (`synth`,
     /// `analyze`, `workloads`) never pay engine startup.
     backend: OnceLock<AnyBackend>,
+    /// Lazily-initialized extended-feature backend for precision-grid
+    /// sweeps (always native: the AOT artifacts are lowered for the
+    /// 7-feature per-type protocol).
+    quant_backend: OnceLock<NativeBackend>,
     /// Serializes backend initialization (double-checked around the
     /// `OnceLock`), so concurrent first requests start one engine.
     init: Mutex<()>,
@@ -294,15 +300,11 @@ impl Qappa {
         &self,
         req: &ExploreRequest,
     ) -> Result<Vec<WorkloadSummary>, QappaError> {
-        if req.workloads.is_empty() {
-            return Err(QappaError::Workload("explore: empty workload list".into()));
+        let named = self.resolve_workloads(&req.workloads)?;
+        match &req.precision {
+            Some(p) => self.explore_precision(&named, p),
+            None => self.explore_named(&named),
         }
-        let mut named = Vec::with_capacity(req.workloads.len());
-        for spec in &req.workloads {
-            let (name, layers) = workloads::load(spec)?;
-            named.push(NamedWorkload::new(name, layers));
-        }
-        self.explore_named(&named)
     }
 
     /// [`Qappa::explore_summaries`] over already-loaded workloads (the CLI
@@ -318,8 +320,43 @@ impl Qappa {
     }
 
     /// [`Qappa::explore_summaries`], condensed to the wire response.
+    /// Requests carrying a `precision` block route to the precision-grid
+    /// pipeline (one row per precision cell).
     pub fn explore(&self, req: &ExploreRequest) -> Result<ExploreResponse, QappaError> {
         ExploreResponse::from_summaries(&self.explore_summaries(req)?)
+    }
+
+    /// Precision-grid DSE over already-loaded workloads: resolve the
+    /// requested grid, train (or fetch warm) the unified cross-precision
+    /// model on the session's extended-feature native backend, and stream
+    /// every precision cell through the chunked sweep engine.
+    pub fn explore_precision(
+        &self,
+        named: &[NamedWorkload],
+        precision: &PrecisionRequest,
+    ) -> Result<Vec<WorkloadSummary>, QappaError> {
+        if named.is_empty() {
+            return Err(QappaError::Workload("explore: empty workload list".into()));
+        }
+        let grid = precision.resolve()?;
+        let backend = self
+            .quant_backend
+            .get_or_init(|| NativeBackend::new(QUANT_NUM_FEATURES));
+        run_dse_precision(backend, &self.store, named, &self.opts, &grid)
+    }
+
+    /// Resolve workload specs (built-in names or JSON model paths) before
+    /// any backend starts, so a bad spec never pays engine startup.
+    fn resolve_workloads(&self, specs: &[String]) -> Result<Vec<NamedWorkload>, QappaError> {
+        if specs.is_empty() {
+            return Err(QappaError::Workload("explore: empty workload list".into()));
+        }
+        let mut named = Vec::with_capacity(specs.len());
+        for spec in specs {
+            let (name, layers) = workloads::load(spec)?;
+            named.push(NamedWorkload::new(name, layers));
+        }
+        Ok(named)
     }
 
     /// Per-layer latency/energy breakdown of one workload on one config
@@ -333,12 +370,29 @@ impl Qappa {
         let mut rows = Vec::with_capacity(layers.len());
         let mut latency_s = 0.0;
         let mut energy_mj = 0.0;
+        // Per-layer precision overrides re-size the hardware; memoize the
+        // derived (config, energy params) per spec so a mixed-precision
+        // net re-synthesizes each override once, not once per layer.
+        let mut override_hw: Vec<(
+            crate::config::QuantSpec,
+            crate::config::AcceleratorConfig,
+            crate::synth::oracle::EnergyParams,
+        )> = Vec::new();
         for l in &layers {
-            let mapped = crate::dataflow::map_layer(&cfg, &ep, l);
-            let traffic = crate::dataflow::layer_traffic(&cfg, l, &mapped);
-            let perf =
-                crate::dataflow::rs::apply_bandwidth(&cfg, &ep, l, &mapped, traffic.dram_bytes);
-            let e = crate::dataflow::layer_energy(&cfg, &ep, l, &perf, &traffic);
+            let (cfg_l, ep_l) = match l.quant {
+                Some(q) if q != cfg.quant() => {
+                    match override_hw.iter().position(|(spec, _, _)| *spec == q) {
+                        Some(i) => (override_hw[i].1, override_hw[i].2),
+                        None => {
+                            let (c, e) = crate::dataflow::layer_hw(&cfg, &ep, l);
+                            override_hw.push((q, c, e));
+                            (c, e)
+                        }
+                    }
+                }
+                _ => (cfg, ep),
+            };
+            let (perf, traffic, e) = crate::dataflow::layer_cost_at(&cfg_l, &ep_l, l);
             latency_s += perf.latency_s(ep.fmax_mhz);
             energy_mj += e.total_mj();
             rows.push(LayerCost {
@@ -352,6 +406,7 @@ impl Qappa {
                 dram_mj: e.dram_mj,
                 other_mj: e.glb_mj + e.noc_mj + e.leakage_mj,
                 total_mj: e.total_mj(),
+                precision: l.quant.map(|q| PeType::from_spec(q).label()),
             });
         }
         Ok(AnalyzeResponse { workload: name, config: cfg, ppa, layers: rows, latency_s, energy_mj })
@@ -432,7 +487,7 @@ mod tests {
     #[test]
     fn models_train_once_across_queries() {
         let s = tiny_session();
-        let req = ExploreRequest { workloads: vec!["vgg16".into()] };
+        let req = ExploreRequest { workloads: vec!["vgg16".into()], precision: None };
         // first explore trains all four models
         let r1 = s.explore(&req).unwrap();
         assert_eq!(s.store().misses(), 4);
@@ -453,7 +508,7 @@ mod tests {
     fn explore_response_matches_dse_anchor() {
         let s = tiny_session();
         let (name, layers) = workloads::load("vgg16").unwrap();
-        let resp = s.explore(&ExploreRequest { workloads: vec!["vgg16".into()] }).unwrap();
+        let resp = s.explore(&ExploreRequest { workloads: vec!["vgg16".into()], precision: None }).unwrap();
         let res = s.dse(&name, &layers).unwrap();
         assert_eq!(resp.summaries.len(), 1);
         let summary = &resp.summaries[0];
@@ -500,10 +555,80 @@ mod tests {
     }
 
     #[test]
+    fn explore_with_precision_sweeps_the_grid() {
+        let s = tiny_session();
+        let req = ExploreRequest {
+            workloads: vec!["vgg16".into()],
+            precision: Some(PrecisionRequest {
+                act_bits: vec![4, 8],
+                wt_bits: vec![4],
+                ..Default::default()
+            }),
+        };
+        let resp = s.explore(&req).unwrap();
+        // one unified model for the whole grid, not one per cell
+        assert_eq!(s.store().misses(), 1);
+        assert_eq!(resp.summaries.len(), 1);
+        let summary = &resp.summaries[0];
+        assert_eq!(summary.entries.len(), 2, "one row per precision cell");
+        for entry in &summary.entries {
+            assert!(!entry.pe_type.is_preset(), "{:?}", entry.pe_type);
+            assert_eq!(entry.evaluated, s.options().space.len());
+            assert!(entry.frontier > 0);
+        }
+        // warm repeat: zero extra training
+        let again = s.explore(&req).unwrap();
+        assert_eq!(s.store().misses(), 1);
+        assert_eq!(again, resp);
+        // the response round-trips the quant pe_type labels losslessly
+        let j = resp.to_json().to_string();
+        let back = ExploreResponse::from_json(&crate::util::json::Json::parse(&j).unwrap()).unwrap();
+        assert_eq!(back, resp);
+        // a bad precision request classifies as config without training
+        let bad = ExploreRequest {
+            workloads: vec!["vgg16".into()],
+            precision: Some(PrecisionRequest {
+                act_bits: vec![0],
+                wt_bits: vec![4],
+                ..Default::default()
+            }),
+        };
+        assert_eq!(s.explore(&bad).unwrap_err().kind(), "config");
+    }
+
+    #[test]
+    fn analyze_applies_per_layer_precision_overrides() {
+        use crate::config::QuantSpec;
+        let s = tiny_session();
+        let cfg = AcceleratorConfig::default_with(PeType::Int16);
+        // serialize a mixed-precision model to a temp file and analyze it
+        let mut layers = workloads::by_name("mobilenetv1").unwrap();
+        for l in layers.iter_mut().filter(|l| l.is_depthwise()) {
+            l.quant = Some(QuantSpec::int(4, 4));
+        }
+        let dir = std::env::temp_dir().join(format!("qappa_mixed_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("mixed.json");
+        std::fs::write(&path, workloads::to_json("mixed-mnv1", &layers).to_string()).unwrap();
+        let spec = path.to_string_lossy().to_string();
+
+        let mixed = s.analyze(&AnalyzeRequest { workload: spec, config: cfg }).unwrap();
+        let plain = s
+            .analyze(&AnalyzeRequest { workload: "mobilenetv1".into(), config: cfg })
+            .unwrap();
+        assert!(mixed.energy_mj < plain.energy_mj, "INT4 depthwise must cut energy");
+        let dw_rows: Vec<_> =
+            mixed.layers.iter().filter(|l| l.precision.is_some()).collect();
+        assert_eq!(dw_rows.len(), 13, "all depthwise rows carry the override label");
+        assert!(dw_rows.iter().all(|l| l.precision.as_deref() == Some("a4w4p8-int")));
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
     fn bad_requests_classify() {
         let s = tiny_session();
         let e = s
-            .explore(&ExploreRequest { workloads: vec!["alexnet".into()] })
+            .explore(&ExploreRequest { workloads: vec!["alexnet".into()], precision: None })
             .unwrap_err();
         assert_eq!(e.kind(), "workload");
         assert_eq!(s.session_info().backend, None, "bad spec never starts the backend");

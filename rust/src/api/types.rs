@@ -21,8 +21,9 @@
 //!   name the offending field.
 
 use crate::api::error::QappaError;
-use crate::config::{AcceleratorConfig, PeType, ALL_PE_TYPES};
+use crate::config::{AcceleratorConfig, MacKind, PeType};
 use crate::coordinator::explorer::WorkloadSummary;
+use crate::coordinator::precision::PrecisionGrid;
 use crate::dataflow::Layer;
 use crate::synth::oracle::Ppa;
 use crate::util::json::{obj, Json};
@@ -83,7 +84,9 @@ fn pe_type_from_json(v: &Json, what: &str) -> Result<PeType, QappaError> {
         .as_str()
         .ok_or_else(|| proto(format!("{what}: \"pe_type\" must be a string")))?;
     PeType::parse(s).ok_or_else(|| {
-        proto(format!("{what}: unknown pe_type '{s}' (expected fp32|int16|lightpe1|lightpe2)"))
+        proto(format!(
+            "{what}: unknown pe_type '{s}' (expected fp32|int16|lightpe1|lightpe2 or a<act>w<wt>p<psum>[-mac])"
+        ))
     })
 }
 
@@ -308,19 +311,160 @@ impl FitResponse {
 // explore
 // ---------------------------------------------------------------------------
 
+/// Precision axes of an `explore` request: explicit bit-width lists per
+/// operand (`psum_bits` empty = automatic accumulator widths), a MAC
+/// datapath kind, and/or explicit precision selectors by label
+/// (`"a8w4p20-light1"`, `"int16"`).  Resolves to a validated
+/// [`PrecisionGrid`] — width violations are config errors naming the
+/// offending field.
+#[derive(Debug, Clone, PartialEq)]
+pub struct PrecisionRequest {
+    pub act_bits: Vec<u32>,
+    pub wt_bits: Vec<u32>,
+    /// Empty = automatic accumulator widths ([`crate::config::auto_psum`]).
+    pub psum_bits: Vec<u32>,
+    pub mac: MacKind,
+    /// Explicit precision cells by label, appended after the range cross
+    /// product (either source may be empty, not both).
+    pub types: Vec<String>,
+}
+
+impl Default for PrecisionRequest {
+    fn default() -> PrecisionRequest {
+        PrecisionRequest {
+            act_bits: Vec::new(),
+            wt_bits: Vec::new(),
+            psum_bits: Vec::new(),
+            mac: MacKind::IntExact,
+            types: Vec::new(),
+        }
+    }
+}
+
+impl PrecisionRequest {
+    /// Resolve into the validated precision grid the DSE sweeps.
+    pub fn resolve(&self) -> Result<PrecisionGrid, QappaError> {
+        let mut cells = Vec::new();
+        if !self.act_bits.is_empty() || !self.wt_bits.is_empty() {
+            if self.act_bits.is_empty() || self.wt_bits.is_empty() {
+                return Err(QappaError::Config(
+                    "precision: act_bits and wt_bits must both be given for a range grid".into(),
+                ));
+            }
+            cells.extend(
+                PrecisionGrid::from_ranges(&self.act_bits, &self.wt_bits, &self.psum_bits, self.mac)?
+                    .types,
+            );
+        }
+        for label in &self.types {
+            let ty = PeType::parse(label).ok_or_else(|| {
+                QappaError::Config(format!(
+                    "precision: unknown precision '{label}' (expected a preset name or a<act>w<wt>p<psum>[-mac])"
+                ))
+            })?;
+            cells.push(ty);
+        }
+        PrecisionGrid::new(cells)
+    }
+
+    pub fn to_json(&self) -> Json {
+        let bits = |v: &Vec<u32>| Json::Arr(v.iter().map(|&b| num_u(b as u64)).collect());
+        let mut pairs = Vec::new();
+        if !self.act_bits.is_empty() {
+            pairs.push(("act_bits", bits(&self.act_bits)));
+        }
+        if !self.wt_bits.is_empty() {
+            pairs.push(("wt_bits", bits(&self.wt_bits)));
+        }
+        if !self.psum_bits.is_empty() {
+            pairs.push(("psum_bits", bits(&self.psum_bits)));
+        }
+        pairs.push(("mac", Json::Str(self.mac.suffix())));
+        if !self.types.is_empty() {
+            pairs.push((
+                "types",
+                Json::Arr(self.types.iter().map(|t| Json::Str(t.clone())).collect()),
+            ));
+        }
+        obj(pairs)
+    }
+
+    pub fn from_json(v: &Json) -> Result<PrecisionRequest, QappaError> {
+        let what = "explore.precision";
+        if v.as_obj().is_none() {
+            return Err(proto(format!("{what} must be an object")));
+        }
+        let bits_field = |key: &str| -> Result<Vec<u32>, QappaError> {
+            match v.get(key) {
+                Json::Null => Ok(Vec::new()),
+                Json::Arr(items) => {
+                    let mut out = Vec::with_capacity(items.len());
+                    for item in items {
+                        out.push(item.as_usize().and_then(|x| u32::try_from(x).ok()).ok_or_else(
+                            || proto(format!("{what}: \"{key}\" entries must be u32 bit widths")),
+                        )?);
+                    }
+                    Ok(out)
+                }
+                _ => Err(proto(format!("{what}: \"{key}\" must be an array of bit widths"))),
+            }
+        };
+        let mac = match v.get("mac") {
+            Json::Null => MacKind::IntExact,
+            other => {
+                let s = other
+                    .as_str()
+                    .ok_or_else(|| proto(format!("{what}: \"mac\" must be a string")))?;
+                MacKind::parse(&s.to_ascii_lowercase()).ok_or_else(|| {
+                    proto(format!("{what}: unknown mac '{s}' (expected fp|int|light<n>)"))
+                })?
+            }
+        };
+        let mut types = Vec::new();
+        match v.get("types") {
+            Json::Null => {}
+            Json::Arr(items) => {
+                for item in items {
+                    types.push(
+                        item.as_str()
+                            .ok_or_else(|| proto(format!("{what}: \"types\" entries must be strings")))?
+                            .to_string(),
+                    );
+                }
+            }
+            _ => return Err(proto(format!("{what}: \"types\" must be an array of labels"))),
+        }
+        Ok(PrecisionRequest {
+            act_bits: bits_field("act_bits")?,
+            wt_bits: bits_field("wt_bits")?,
+            psum_bits: bits_field("psum_bits")?,
+            mac,
+            types,
+        })
+    }
+}
+
 /// `explore`: design-space exploration over one or more workloads (built-in
-/// names or JSON model file paths) in a single streaming pass.
+/// names or JSON model file paths) in a single streaming pass.  With a
+/// `precision` block the sweep runs over the requested precision grid
+/// (unified cross-precision model, one row per precision cell) instead of
+/// the four preset PE types.
 #[derive(Debug, Clone, PartialEq)]
 pub struct ExploreRequest {
     pub workloads: Vec<String>,
+    pub precision: Option<PrecisionRequest>,
 }
 
 impl ExploreRequest {
     pub fn to_json(&self) -> Json {
-        obj(vec![(
+        let mut pairs = vec![(
             "workloads",
             Json::Arr(self.workloads.iter().map(|w| Json::Str(w.clone())).collect()),
-        )])
+        )];
+        if let Some(p) = &self.precision {
+            pairs.push(("precision", p.to_json()));
+        }
+        obj(pairs)
     }
 
     pub fn from_json(v: &Json) -> Result<ExploreRequest, QappaError> {
@@ -339,7 +483,11 @@ impl ExploreRequest {
         if workloads.is_empty() {
             return Err(proto("explore: \"workloads\" must not be empty"));
         }
-        Ok(ExploreRequest { workloads })
+        let precision = match v.get("precision") {
+            Json::Null => None,
+            other => Some(PrecisionRequest::from_json(other)?),
+        };
+        Ok(ExploreRequest { workloads, precision })
     }
 }
 
@@ -443,13 +591,16 @@ pub struct ExploreResponse {
 }
 
 impl ExploreResponse {
-    /// Condense streaming [`WorkloadSummary`]s into the wire shape.
+    /// Condense streaming [`WorkloadSummary`]s into the wire shape.  The
+    /// entry set follows the summaries' own precision keys (the four
+    /// presets for a classic run — `BTreeMap` order equals the historical
+    /// `ALL_PE_TYPES` order — or the precision grid's cells for a
+    /// precision-grid run).
     pub fn from_summaries(summaries: &[WorkloadSummary]) -> Result<ExploreResponse, QappaError> {
         let mut out = Vec::with_capacity(summaries.len());
         for s in summaries {
-            let mut entries = Vec::with_capacity(ALL_PE_TYPES.len());
-            for ty in ALL_PE_TYPES {
-                let (pa, e) = s.ratios[&ty];
+            let mut entries = Vec::with_capacity(s.ratios.len());
+            for (&ty, &(pa, e)) in &s.ratios {
                 let (pav, ev) = s.ratios_validated[&ty];
                 let st = &s.stats[&ty];
                 let best = s.top_perf_per_area[&ty].first().ok_or_else(|| {
@@ -539,11 +690,15 @@ pub struct LayerCost {
     /// GLB + NoC + leakage energy.
     pub other_mj: f64,
     pub total_mj: f64,
+    /// Precision label when the layer carried a per-layer override
+    /// (mixed-precision networks); absent on the wire otherwise, keeping
+    /// plain `analyze` responses byte-identical.
+    pub precision: Option<String>,
 }
 
 impl LayerCost {
     fn to_json(&self) -> Json {
-        obj(vec![
+        let mut pairs = vec![
             ("name", Json::Str(self.name.clone())),
             ("macs", num_u(self.macs)),
             ("cycles", num_u(self.cycles)),
@@ -554,11 +709,24 @@ impl LayerCost {
             ("dram_mj", Json::Num(self.dram_mj)),
             ("other_mj", Json::Num(self.other_mj)),
             ("total_mj", Json::Num(self.total_mj)),
-        ])
+        ];
+        if let Some(p) = &self.precision {
+            pairs.push(("precision", Json::Str(p.clone())));
+        }
+        obj(pairs)
     }
 
     fn from_json(v: &Json) -> Result<LayerCost, QappaError> {
         let what = "analyze.layers[]";
+        let precision = match v.get("precision") {
+            Json::Null => None,
+            other => Some(
+                other
+                    .as_str()
+                    .ok_or_else(|| proto(format!("{what}: \"precision\" must be a string")))?
+                    .to_string(),
+            ),
+        };
         Ok(LayerCost {
             name: req_str(v, "name", what)?.to_string(),
             macs: req_u64(v, "macs", what)?,
@@ -570,6 +738,7 @@ impl LayerCost {
             dram_mj: req_f64(v, "dram_mj", what)?,
             other_mj: req_f64(v, "other_mj", what)?,
             total_mj: req_f64(v, "total_mj", what)?,
+            precision,
         })
     }
 }
@@ -1104,9 +1273,14 @@ mod tests {
 
     #[test]
     fn explore_types_roundtrip() {
-        let req = ExploreRequest { workloads: vec!["vgg16".into(), "m.json".into()] };
+        let req = ExploreRequest {
+            workloads: vec!["vgg16".into(), "m.json".into()],
+            precision: None,
+        };
         assert_eq!(ExploreRequest::from_json(&roundtrip_json(&req.to_json())).unwrap(), req);
         assert!(ExploreRequest::from_json(&Json::parse(r#"{"workloads": []}"#).unwrap()).is_err());
+        // a plain request serializes without a "precision" key (wire-stable)
+        assert!(!req.to_json().to_string().contains("precision"));
 
         let resp = ExploreResponse {
             summaries: vec![ExploreSummary {
@@ -1133,6 +1307,47 @@ mod tests {
     }
 
     #[test]
+    fn precision_request_roundtrip_and_resolution() {
+        use crate::config::MacKind;
+        let req = ExploreRequest {
+            workloads: vec!["mobilenetv2".into()],
+            precision: Some(PrecisionRequest {
+                act_bits: vec![4, 8],
+                wt_bits: vec![4, 8],
+                psum_bits: vec![],
+                mac: MacKind::IntExact,
+                types: vec!["lightpe1".into()],
+            }),
+        };
+        let back = ExploreRequest::from_json(&roundtrip_json(&req.to_json())).unwrap();
+        assert_eq!(back, req);
+        // resolves to the 2x2 cross product plus the explicit preset
+        let grid = back.precision.as_ref().unwrap().resolve().unwrap();
+        assert_eq!(grid.len(), 5);
+        assert!(grid.types.contains(&PeType::LightPe1));
+        // quant pe_types survive the entry wire format
+        let q = PeType::parse("a4w4p8-int").unwrap();
+        assert_eq!(pe_type_from_json(&pe_type_to_json(q), "t").unwrap(), q);
+
+        // validation failures carry the offending field
+        let bad = PrecisionRequest { act_bits: vec![0], wt_bits: vec![8], ..Default::default() };
+        let e = bad.resolve().unwrap_err();
+        assert_eq!(e.kind(), "config");
+        assert!(e.to_string().contains("act_bits"), "{e}");
+        // one-sided range grids are rejected
+        let half = PrecisionRequest { act_bits: vec![8], ..Default::default() };
+        assert!(half.resolve().unwrap_err().to_string().contains("wt_bits"));
+        // unknown labels are rejected by name
+        let unk = PrecisionRequest { types: vec!["int99x".into()], ..Default::default() };
+        assert!(unk.resolve().unwrap_err().to_string().contains("int99x"));
+        // malformed JSON payloads classify as protocol errors
+        let e = PrecisionRequest::from_json(&Json::parse(r#"{"act_bits": ["x"]}"#).unwrap())
+            .unwrap_err();
+        assert_eq!(e.kind(), "protocol");
+        assert!(PrecisionRequest::from_json(&Json::parse("5").unwrap()).is_err());
+    }
+
+    #[test]
     fn analyze_types_roundtrip() {
         let req = AnalyzeRequest { workload: "resnet50".into(), config: cfg(PeType::Int16) };
         assert_eq!(AnalyzeRequest::from_json(&roundtrip_json(&req.to_json())).unwrap(), req);
@@ -1151,6 +1366,7 @@ mod tests {
                 dram_mj: 0.5,
                 other_mj: 0.0625,
                 total_mj: 0.6875,
+                precision: Some("a4w4p8-int".into()),
             }],
             latency_s: 0.0123,
             energy_mj: 12.5,
@@ -1209,7 +1425,21 @@ mod tests {
             ServeRequest { id: Some(7), body: RequestBody::Session },
             ServeRequest {
                 id: None,
-                body: RequestBody::Explore(ExploreRequest { workloads: vec!["vgg16".into()] }),
+                body: RequestBody::Explore(ExploreRequest {
+                    workloads: vec!["vgg16".into()],
+                    precision: None,
+                }),
+            },
+            ServeRequest {
+                id: Some(9),
+                body: RequestBody::Explore(ExploreRequest {
+                    workloads: vec!["vgg16".into()],
+                    precision: Some(PrecisionRequest {
+                        act_bits: vec![4, 8],
+                        wt_bits: vec![4],
+                        ..Default::default()
+                    }),
+                }),
             },
             ServeRequest {
                 id: Some(1),

@@ -1,94 +1,153 @@
 //! Accelerator configuration types — the axes of QAPPA's design space.
 //!
 //! A configuration fixes the spatial-array accelerator the paper's RTL
-//! generator would emit: PE type (bit precision + datapath style), PE array
-//! geometry, per-PE scratchpad capacities, global buffer size and device
-//! bandwidth.  `features()` produces the 7-vector consumed by the regression
-//! models, in the exact order pinned by `artifacts/manifest.json`.
+//! generator would emit: PE precision ([`QuantSpec`]: operand bit widths +
+//! datapath style, selected through [`PeType`]), PE array geometry, per-PE
+//! scratchpad capacities, global buffer size and device bandwidth.
+//! `features()` produces the 7-vector consumed by the per-type regression
+//! models, in the exact order pinned by `artifacts/manifest.json`;
+//! `features_quant()` appends the precision axes for the unified
+//! cross-precision model (`docs/PRECISION.md`).
+
+pub mod quant;
+
+pub use quant::{auto_psum, MacKind, QuantSpec};
 
 use crate::api::error::QappaError;
 use crate::util::json::{obj, Json};
+use crate::util::prng::hash64;
 
-/// Processing-element type: precision + datapath style.
+/// Processing-element precision selector: a named preset or an arbitrary
+/// [`QuantSpec`].
 ///
-/// * `Fp32`     — IEEE-754 single-precision multiply-accumulate.
-/// * `Int16`    — 16-bit integer MAC (the paper's normalization baseline).
+/// The presets are the paper's four PE types, each resolving to a
+/// [`QuantSpec`] via [`PeType::spec`]:
+///
+/// * `Fp32`     — IEEE-754 single-precision FMA (`a32w32p32-fp`).
+/// * `Int16`    — 16-bit integer MAC, the normalization baseline
+///   (`a16w16p32-int`).
 /// * `LightPe1` — 8-bit activations x 4-bit weights; the multiply is
-///   replaced by **one** shift (LightNN-style sign + power-of-two weight).
+///   replaced by **one** shift (LightNN-style sign + power-of-two weight;
+///   `a8w4p20-light1`).
 /// * `LightPe2` — 8-bit activations x 8-bit weights; **two** shift-add
-///   terms (sum of two signed powers of two).
+///   terms (`a8w8p24-light2`).
+///
+/// `Quant` carries any other width/datapath combination — every consumer
+/// in the crate sizes hardware from the resolved spec, so arbitrary
+/// precisions flow through synthesis, dataflow and the DSE unchanged.
+/// [`PeType::parse`] accepts preset aliases *and* generic spec labels
+/// (`a8w4p20-light1`); [`PeType::from_spec`] canonicalizes specs that
+/// exactly match a preset back to the preset name.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
 pub enum PeType {
     Fp32,
     Int16,
     LightPe1,
     LightPe2,
+    Quant(QuantSpec),
 }
 
 pub const ALL_PE_TYPES: [PeType; 4] =
     [PeType::Fp32, PeType::Int16, PeType::LightPe1, PeType::LightPe2];
 
 impl PeType {
-    pub fn label(self) -> &'static str {
+    /// Resolve to the underlying quantization spec — the single source of
+    /// truth every bit-width consumer reads.
+    pub fn spec(self) -> QuantSpec {
         match self {
-            PeType::Fp32 => "FP32",
-            PeType::Int16 => "INT16",
-            PeType::LightPe1 => "LightPE-1",
-            PeType::LightPe2 => "LightPE-2",
+            PeType::Fp32 => QuantSpec { act_bits: 32, wt_bits: 32, psum_bits: 32, mac: MacKind::Fp },
+            PeType::Int16 => {
+                QuantSpec { act_bits: 16, wt_bits: 16, psum_bits: 32, mac: MacKind::IntExact }
+            }
+            // 8b act shifted by up to 7 (1 or 2 terms) + accumulation margin.
+            PeType::LightPe1 => {
+                QuantSpec { act_bits: 8, wt_bits: 4, psum_bits: 20, mac: MacKind::Lightweight(1) }
+            }
+            PeType::LightPe2 => {
+                QuantSpec { act_bits: 8, wt_bits: 8, psum_bits: 24, mac: MacKind::Lightweight(2) }
+            }
+            PeType::Quant(q) => q,
         }
     }
 
+    /// Wrap a spec, canonicalizing exact preset matches back to the preset
+    /// (so `a16w16p32-int` displays — and hashes — as `INT16`).
+    pub fn from_spec(q: QuantSpec) -> PeType {
+        for t in ALL_PE_TYPES {
+            if t.spec() == q {
+                return t;
+            }
+        }
+        PeType::Quant(q)
+    }
+
+    /// True for the four named presets.
+    pub fn is_preset(self) -> bool {
+        !matches!(self, PeType::Quant(_))
+    }
+
+    pub fn label(self) -> String {
+        match self {
+            PeType::Fp32 => "FP32".to_string(),
+            PeType::Int16 => "INT16".to_string(),
+            PeType::LightPe1 => "LightPE-1".to_string(),
+            PeType::LightPe2 => "LightPE-2".to_string(),
+            PeType::Quant(q) => q.label(),
+        }
+    }
+
+    /// Parse a preset alias (`fp32`, `int16`, `lightpe-1`, …) or a generic
+    /// spec label (`a8w4p20-light1`), case-insensitively.  Width-range
+    /// violations in generic labels parse successfully and are rejected by
+    /// [`QuantSpec::validate`] at the consuming boundary, which names the
+    /// offending field.
     pub fn parse(s: &str) -> Option<PeType> {
         match s.to_ascii_lowercase().as_str() {
             "fp32" => Some(PeType::Fp32),
             "int16" => Some(PeType::Int16),
             "lightpe1" | "lightpe-1" | "light1" => Some(PeType::LightPe1),
             "lightpe2" | "lightpe-2" | "light2" => Some(PeType::LightPe2),
-            _ => None,
+            other => QuantSpec::parse(other).map(PeType::from_spec),
         }
     }
 
     /// Activation operand width in bits.
     pub fn act_bits(self) -> u32 {
-        match self {
-            PeType::Fp32 => 32,
-            PeType::Int16 => 16,
-            PeType::LightPe1 | PeType::LightPe2 => 8,
-        }
+        self.spec().act_bits
     }
 
     /// Weight operand width in bits.
     pub fn wt_bits(self) -> u32 {
-        match self {
-            PeType::Fp32 => 32,
-            PeType::Int16 => 16,
-            PeType::LightPe1 => 4,
-            PeType::LightPe2 => 8,
-        }
+        self.spec().wt_bits
     }
 
     /// Partial-sum (accumulator) width in bits.
     pub fn psum_bits(self) -> u32 {
-        match self {
-            PeType::Fp32 => 32,
-            PeType::Int16 => 32,
-            // 8b act shifted by up to 7 (1 or 2 terms) + accumulation margin.
-            PeType::LightPe1 => 20,
-            PeType::LightPe2 => 24,
-        }
+        self.spec().psum_bits
     }
 
     /// Number of shift-add terms replacing the multiplier (0 = real multiply).
     pub fn shift_terms(self) -> u32 {
-        match self {
-            PeType::Fp32 | PeType::Int16 => 0,
-            PeType::LightPe1 => 1,
-            PeType::LightPe2 => 2,
-        }
+        self.spec().shift_terms()
     }
 
     pub fn is_light(self) -> bool {
         self.shift_terms() > 0
+    }
+
+    /// Stable per-type stream id for seeded sampling.  Presets keep their
+    /// historical discriminant values (0..=3) so every sampled training set
+    /// — and therefore every trained model and DSE report — stays
+    /// bit-identical to the closed-enum era; arbitrary specs hash their
+    /// canonical label.
+    pub(crate) fn stream_id(self) -> u64 {
+        match self {
+            PeType::Fp32 => 0,
+            PeType::Int16 => 1,
+            PeType::LightPe1 => 2,
+            PeType::LightPe2 => 3,
+            PeType::Quant(q) => hash64(q.label().as_bytes()),
+        }
     }
 }
 
@@ -112,6 +171,12 @@ pub struct AcceleratorConfig {
 /// Number of regression features (must match `manifest.json: d`).
 pub const NUM_FEATURES: usize = 7;
 
+/// Feature count of the unified cross-precision model: the 7 base axes
+/// plus [act_bits, wt_bits, psum_bits, shift_terms, mac-kind code].  The
+/// AOT XLA artifacts are lowered for `d = NUM_FEATURES`, so precision-grid
+/// sweeps always run the native backend (see `docs/PRECISION.md`).
+pub const QUANT_NUM_FEATURES: usize = NUM_FEATURES + 5;
+
 impl AcceleratorConfig {
     /// A mid-range Eyeriss-like default used by examples and tests.
     pub fn default_with(pe_type: PeType) -> AcceleratorConfig {
@@ -131,6 +196,19 @@ impl AcceleratorConfig {
         self.pe_rows * self.pe_cols
     }
 
+    /// The configuration's resolved quantization spec — the hot-path read
+    /// every synthesis/dataflow consumer sizes hardware from.
+    pub fn quant(&self) -> QuantSpec {
+        self.pe_type.spec()
+    }
+
+    /// Copy of this configuration with a different precision (used to
+    /// apply per-layer precision overrides and to walk precision axes).
+    pub fn with_pe_type(mut self, pe_type: PeType) -> AcceleratorConfig {
+        self.pe_type = pe_type;
+        self
+    }
+
     /// Regression feature vector (order pinned by `manifest.json:
     /// feature_order` = [pe_rows, pe_cols, glb_kb, spad_ifmap_b,
     /// spad_filter_b, spad_psum_b, bandwidth_gbps]).
@@ -146,8 +224,35 @@ impl AcceleratorConfig {
         ]
     }
 
+    /// Extended feature vector for the unified cross-precision model: the
+    /// 7 base features followed by [act_bits, wt_bits, psum_bits,
+    /// shift_terms, mac-kind code].  One model fitted on these generalizes
+    /// across bit widths instead of training once per PE type.
+    pub fn features_quant(&self) -> [f64; QUANT_NUM_FEATURES] {
+        let base = self.features();
+        let q = self.quant();
+        [
+            base[0],
+            base[1],
+            base[2],
+            base[3],
+            base[4],
+            base[5],
+            base[6],
+            q.act_bits as f64,
+            q.wt_bits as f64,
+            q.psum_bits as f64,
+            q.shift_terms() as f64,
+            q.mac.code(),
+        ]
+    }
+
     /// Validity constraints of the RTL generator.
     pub fn validate(&self) -> Result<(), QappaError> {
+        // Precision first: bit-width violations (0-bit / >64-bit operands,
+        // psum narrower than an operand) are rejected with the offending
+        // field named, at every boundary that calls validate().
+        self.quant().validate()?;
         let err = |m: String| Err(QappaError::Config(m));
         if self.pe_rows == 0 || self.pe_cols == 0 {
             return err(format!("PE array must be non-empty: {}x{}", self.pe_rows, self.pe_cols));
@@ -184,7 +289,7 @@ impl AcceleratorConfig {
 
     pub fn to_json(&self) -> Json {
         obj(vec![
-            ("pe_type", Json::Str(self.pe_type.label().into())),
+            ("pe_type", Json::Str(self.pe_type.label())),
             ("pe_rows", Json::Num(self.pe_rows as f64)),
             ("pe_cols", Json::Num(self.pe_cols as f64)),
             ("glb_kb", Json::Num(self.glb_kb as f64)),
@@ -216,10 +321,81 @@ mod tests {
     #[test]
     fn pe_type_parse_roundtrip() {
         for t in ALL_PE_TYPES {
-            assert_eq!(PeType::parse(t.label()), Some(t));
+            assert_eq!(PeType::parse(&t.label()), Some(t));
         }
         assert_eq!(PeType::parse("lightpe-2"), Some(PeType::LightPe2));
         assert_eq!(PeType::parse("bogus"), None);
+    }
+
+    #[test]
+    fn presets_resolve_to_their_specs_and_back() {
+        // The preset spec table is the single source of truth: the legacy
+        // accessor values are pinned here, and canonicalization maps each
+        // spec back to its preset name.
+        for (t, a, w, p, terms) in [
+            (PeType::Fp32, 32, 32, 32, 0),
+            (PeType::Int16, 16, 16, 32, 0),
+            (PeType::LightPe1, 8, 4, 20, 1),
+            (PeType::LightPe2, 8, 8, 24, 2),
+        ] {
+            let q = t.spec();
+            assert_eq!((q.act_bits, q.wt_bits, q.psum_bits, q.shift_terms()), (a, w, p, terms));
+            assert_eq!((t.act_bits(), t.wt_bits(), t.psum_bits(), t.shift_terms()), (a, w, p, terms));
+            assert_eq!(PeType::from_spec(q), t, "canonicalize {t:?}");
+            assert_eq!(PeType::parse(&q.label()), Some(t), "generic label -> preset");
+            q.validate().unwrap();
+        }
+        // preset stream ids keep the closed-enum discriminants
+        assert_eq!(
+            ALL_PE_TYPES.map(|t| t.stream_id()),
+            [0, 1, 2, 3],
+            "preset sampling streams must stay bit-identical"
+        );
+    }
+
+    #[test]
+    fn quant_pe_types_parse_label_and_json_roundtrip() {
+        let q = QuantSpec::new(6, 3, 14, MacKind::Lightweight(1)).unwrap();
+        let t = PeType::from_spec(q);
+        assert!(!t.is_preset());
+        assert_eq!(t.label(), "a6w3p14-light1");
+        assert_eq!(PeType::parse("A6W3P14-LIGHT1"), Some(t), "case-insensitive");
+        let c = AcceleratorConfig::default_with(t);
+        c.validate().unwrap();
+        let j = c.to_json().to_string();
+        let back = AcceleratorConfig::from_json(&Json::parse(&j).unwrap()).unwrap();
+        assert_eq!(back, c);
+        assert!(c.key().starts_with("a6w3p14-light1:"), "{}", c.key());
+    }
+
+    #[test]
+    fn validate_rejects_bad_bit_widths_at_the_config_boundary() {
+        for (label, field) in [
+            ("a0w8p16-int", "act_bits"),
+            ("a8w0p16-int", "wt_bits"),
+            ("a8w8p0-int", "psum_bits"),
+            ("a65w8p65-int", "act_bits"),
+            ("a16w8p12-int", "psum_bits"),
+        ] {
+            let t = PeType::parse(label).expect(label);
+            let e = AcceleratorConfig::default_with(t).validate().unwrap_err();
+            assert_eq!(e.kind(), "config", "{label}");
+            assert!(e.to_string().contains(field), "{label}: {e}");
+        }
+    }
+
+    #[test]
+    fn features_quant_extends_base_features() {
+        let c = AcceleratorConfig::default_with(PeType::LightPe2);
+        let f = c.features();
+        let fq = c.features_quant();
+        assert_eq!(&fq[..NUM_FEATURES], &f[..]);
+        assert_eq!(fq[7], 8.0); // act
+        assert_eq!(fq[8], 8.0); // wt
+        assert_eq!(fq[9], 24.0); // psum
+        assert_eq!(fq[10], 2.0); // shift terms
+        assert_eq!(fq[11], MacKind::Lightweight(2).code());
+        assert_eq!(QUANT_NUM_FEATURES, 12);
     }
 
     #[test]

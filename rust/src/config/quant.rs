@@ -1,0 +1,308 @@
+//! Parameterized quantization specs — bit precision as a first-class axis.
+//!
+//! QAPPA's premise is that precision is a *design parameter*, not a menu:
+//! a [`QuantSpec`] fixes the activation / weight / partial-sum operand
+//! widths and the MAC datapath style ([`MacKind`]), and every layer of the
+//! stack — gate-level synthesis ([`crate::synth::mac`]), scratchpad word
+//! widths ([`crate::synth::pe`]), traffic and energy accounting
+//! ([`crate::dataflow`]), regression features and the DSE grid
+//! ([`crate::coordinator::precision`]) — is sized from it.  The four
+//! historical PE types (`FP32`, `INT16`, `LightPE-1/2`) are named presets
+//! resolving to `QuantSpec`s (see [`crate::config::PeType::spec`]); any
+//! other width combination is written `a<act>w<wt>p<psum>-<mac>`, e.g.
+//! `a8w4p20-light1` or `a4w4p8-int`.
+//!
+//! Validation is strict at every boundary (builder, config JSON, workload
+//! JSON, precision-grid requests): operand widths must lie in 1..=64 bits
+//! and the partial-sum accumulator may never be narrower than either
+//! operand — violations are [`QappaError::Config`] errors naming the
+//! offending field.
+
+use crate::api::error::QappaError;
+
+/// MAC datapath style of a processing element.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub enum MacKind {
+    /// Floating-point fused multiply-add (mantissa/exponent split derived
+    /// from the operand width; `a32w32p32-fp` is IEEE-754 single).
+    Fp,
+    /// Exact integer multiply-accumulate (Baugh-Wooley array multiplier +
+    /// carry-lookahead accumulator).
+    IntExact,
+    /// LightNN-style shift-add datapath: the weight is encoded as `n`
+    /// signed powers of two, so the multiplier collapses into `n` barrel
+    /// shifts (`LightPE-1` = 1 term, `LightPE-2` = 2 terms).
+    Lightweight(u32),
+}
+
+impl MacKind {
+    /// Canonical label suffix: `fp`, `int`, `light<n>`.
+    pub fn suffix(self) -> String {
+        match self {
+            MacKind::Fp => "fp".to_string(),
+            MacKind::IntExact => "int".to_string(),
+            MacKind::Lightweight(n) => format!("light{n}"),
+        }
+    }
+
+    /// Parse a label suffix (case already lowered by the caller).
+    pub fn parse(s: &str) -> Option<MacKind> {
+        match s {
+            "fp" => Some(MacKind::Fp),
+            "int" => Some(MacKind::IntExact),
+            _ => {
+                let n = s.strip_prefix("light")?;
+                n.parse::<u32>().ok().map(MacKind::Lightweight)
+            }
+        }
+    }
+
+    /// Numeric code for regression features (constant within a single-kind
+    /// precision grid; the standardizer centres constant columns away).
+    pub fn code(self) -> f64 {
+        match self {
+            MacKind::IntExact => 0.0,
+            MacKind::Lightweight(_) => 1.0,
+            MacKind::Fp => 2.0,
+        }
+    }
+
+    /// Shift-add terms replacing the multiplier (0 = real multiply).
+    pub fn shift_terms(self) -> u32 {
+        match self {
+            MacKind::Lightweight(n) => n,
+            _ => 0,
+        }
+    }
+}
+
+/// A fully parameterized PE precision: operand widths + datapath style.
+///
+/// This is the quantization axis of the design space. Construct validated
+/// specs with [`QuantSpec::new`] (the builder boundary); deserialized specs
+/// are re-validated by [`crate::config::AcceleratorConfig::validate`] and
+/// the workload loader.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct QuantSpec {
+    /// Activation operand width, bits.
+    pub act_bits: u32,
+    /// Weight operand width, bits (for lightweight MACs this is the packed
+    /// sign+shift encoding width).
+    pub wt_bits: u32,
+    /// Partial-sum accumulator width, bits (>= both operand widths).
+    pub psum_bits: u32,
+    /// Datapath style.
+    pub mac: MacKind,
+}
+
+/// Generator limit on operand widths, bits.
+pub const MAX_BITS: u32 = 64;
+/// Generator limit on lightweight shift-add terms.
+pub const MAX_SHIFT_TERMS: u32 = 8;
+
+impl QuantSpec {
+    /// Validated constructor — the builder-side boundary check.
+    pub fn new(act_bits: u32, wt_bits: u32, psum_bits: u32, mac: MacKind) -> Result<QuantSpec, QappaError> {
+        let spec = QuantSpec { act_bits, wt_bits, psum_bits, mac };
+        spec.validate()?;
+        Ok(spec)
+    }
+
+    /// Integer spec with an automatic accumulator width.
+    pub fn int(act_bits: u32, wt_bits: u32) -> QuantSpec {
+        QuantSpec {
+            act_bits,
+            wt_bits,
+            psum_bits: auto_psum(act_bits, wt_bits, MacKind::IntExact),
+            mac: MacKind::IntExact,
+        }
+    }
+
+    /// Lightweight (shift-add) spec with an automatic accumulator width.
+    pub fn light(act_bits: u32, wt_bits: u32, terms: u32) -> QuantSpec {
+        let mac = MacKind::Lightweight(terms);
+        QuantSpec { act_bits, wt_bits, psum_bits: auto_psum(act_bits, wt_bits, mac), mac }
+    }
+
+    /// Shift-add terms (0 for multiply datapaths).
+    pub fn shift_terms(&self) -> u32 {
+        self.mac.shift_terms()
+    }
+
+    pub fn is_light(&self) -> bool {
+        self.shift_terms() > 0
+    }
+
+    /// Canonical label: `a<act>w<wt>p<psum>-<mac>`, e.g. `a8w4p20-light1`.
+    pub fn label(&self) -> String {
+        format!("a{}w{}p{}-{}", self.act_bits, self.wt_bits, self.psum_bits, self.mac.suffix())
+    }
+
+    /// Parse the canonical label (case-insensitive). Returns `None` on
+    /// syntax errors; width-range violations are deferred to
+    /// [`QuantSpec::validate`] so boundaries can report the field.
+    pub fn parse(s: &str) -> Option<QuantSpec> {
+        let s = s.to_ascii_lowercase();
+        let rest = s.strip_prefix('a')?;
+        let (act, rest) = split_digits(rest)?;
+        let rest = rest.strip_prefix('w')?;
+        let (wt, rest) = split_digits(rest)?;
+        let rest = rest.strip_prefix('p')?;
+        let (psum, rest) = split_digits(rest)?;
+        let mac = if rest.is_empty() {
+            MacKind::IntExact
+        } else {
+            MacKind::parse(rest.strip_prefix('-')?)?
+        };
+        Some(QuantSpec { act_bits: act, wt_bits: wt, psum_bits: psum, mac })
+    }
+
+    /// Bit-width sanity: operands in 1..=[`MAX_BITS`], accumulator at least
+    /// as wide as both operands, lightweight term count in range. Errors
+    /// name the offending field.
+    pub fn validate(&self) -> Result<(), QappaError> {
+        let err = |m: String| Err(QappaError::Config(m));
+        for (field, bits) in [
+            ("act_bits", self.act_bits),
+            ("wt_bits", self.wt_bits),
+            ("psum_bits", self.psum_bits),
+        ] {
+            if bits == 0 {
+                return err(format!("quant spec: {field} must be >= 1 bit"));
+            }
+            if bits > MAX_BITS {
+                return err(format!("quant spec: {field} = {bits} exceeds the generator limit of {MAX_BITS} bits"));
+            }
+        }
+        if self.psum_bits < self.act_bits {
+            return err(format!(
+                "quant spec: psum_bits = {} narrower than act_bits = {}",
+                self.psum_bits, self.act_bits
+            ));
+        }
+        if self.psum_bits < self.wt_bits {
+            return err(format!(
+                "quant spec: psum_bits = {} narrower than wt_bits = {}",
+                self.psum_bits, self.wt_bits
+            ));
+        }
+        if let MacKind::Lightweight(n) = self.mac {
+            if n == 0 {
+                return err("quant spec: mac = light0 needs at least 1 shift-add term".into());
+            }
+            if n > MAX_SHIFT_TERMS {
+                return err(format!(
+                    "quant spec: mac = light{n} exceeds the generator limit of {MAX_SHIFT_TERMS} shift-add terms"
+                ));
+            }
+        }
+        Ok(())
+    }
+}
+
+/// Automatic accumulator width for a grid cell without an explicit psum
+/// axis: wide enough for the product plus accumulation margin, monotone in
+/// both operand widths, capped at [`MAX_BITS`].
+pub fn auto_psum(act_bits: u32, wt_bits: u32, mac: MacKind) -> u32 {
+    let raw = match mac {
+        // Full-precision product + headroom.
+        MacKind::IntExact => act_bits + wt_bits,
+        // Shifted activation (range ~act-1) + term/accumulation margin.
+        MacKind::Lightweight(n) => 2 * act_bits + 4 + 2 * n.min(MAX_SHIFT_TERMS),
+        // FP accumulates at the operand format's own width.
+        MacKind::Fp => act_bits.max(wt_bits),
+    };
+    raw.max(act_bits.max(wt_bits)).min(MAX_BITS)
+}
+
+/// Split a leading run of ASCII digits; `None` if empty or unparseable.
+fn split_digits(s: &str) -> Option<(u32, &str)> {
+    let end = s.bytes().position(|b| !b.is_ascii_digit()).unwrap_or(s.len());
+    if end == 0 {
+        return None;
+    }
+    s[..end].parse::<u32>().ok().map(|v| (v, &s[end..]))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn label_parse_roundtrip() {
+        for spec in [
+            QuantSpec { act_bits: 8, wt_bits: 4, psum_bits: 20, mac: MacKind::Lightweight(1) },
+            QuantSpec { act_bits: 16, wt_bits: 16, psum_bits: 32, mac: MacKind::IntExact },
+            QuantSpec { act_bits: 32, wt_bits: 32, psum_bits: 32, mac: MacKind::Fp },
+            QuantSpec::int(4, 4),
+            QuantSpec::light(6, 3, 2),
+        ] {
+            let label = spec.label();
+            assert_eq!(QuantSpec::parse(&label), Some(spec), "{label}");
+            // case-insensitive
+            assert_eq!(QuantSpec::parse(&label.to_ascii_uppercase()), Some(spec));
+        }
+        // default mac is int
+        assert_eq!(
+            QuantSpec::parse("a8w8p16"),
+            Some(QuantSpec { act_bits: 8, wt_bits: 8, psum_bits: 16, mac: MacKind::IntExact })
+        );
+        for bad in ["", "a8", "a8w4", "a8w4p", "w4p8a8", "a8w4p20-lightx", "a8w4p20+int", "bogus"] {
+            assert_eq!(QuantSpec::parse(bad), None, "{bad}");
+        }
+    }
+
+    #[test]
+    fn validate_rejects_zero_and_oversized_and_narrow_psum() {
+        // builder boundary: QuantSpec::new rejects with the field named
+        let e = QuantSpec::new(0, 8, 16, MacKind::IntExact).unwrap_err();
+        assert_eq!(e.kind(), "config");
+        assert!(e.to_string().contains("act_bits"), "{e}");
+        let e = QuantSpec::new(8, 0, 16, MacKind::IntExact).unwrap_err();
+        assert!(e.to_string().contains("wt_bits"), "{e}");
+        let e = QuantSpec::new(8, 8, 0, MacKind::IntExact).unwrap_err();
+        assert!(e.to_string().contains("psum_bits"), "{e}");
+        let e = QuantSpec::new(65, 8, 70, MacKind::IntExact).unwrap_err();
+        assert!(e.to_string().contains("act_bits") && e.to_string().contains("64"), "{e}");
+        let e = QuantSpec::new(16, 8, 12, MacKind::IntExact).unwrap_err();
+        assert!(e.to_string().contains("psum_bits") && e.to_string().contains("act_bits"), "{e}");
+        let e = QuantSpec::new(4, 8, 6, MacKind::IntExact).unwrap_err();
+        assert!(e.to_string().contains("wt_bits"), "{e}");
+        let e = QuantSpec::new(8, 4, 20, MacKind::Lightweight(0)).unwrap_err();
+        assert!(e.to_string().contains("light0"), "{e}");
+        assert!(QuantSpec::new(8, 4, 20, MacKind::Lightweight(1)).is_ok());
+        assert!(QuantSpec::new(64, 64, 64, MacKind::IntExact).is_ok());
+    }
+
+    #[test]
+    fn auto_psum_monotone_and_covers_presets_shape() {
+        // int: act+wt (INT16-compatible: 16+16 = 32)
+        assert_eq!(auto_psum(16, 16, MacKind::IntExact), 32);
+        // monotone in each operand axis
+        for w in [2u32, 4, 8, 16, 32] {
+            assert!(auto_psum(w + 1, 8, MacKind::IntExact) >= auto_psum(w, 8, MacKind::IntExact));
+            assert!(auto_psum(8, w + 1, MacKind::IntExact) >= auto_psum(8, w, MacKind::IntExact));
+            assert!(
+                auto_psum(w + 1, 4, MacKind::Lightweight(2)) >= auto_psum(w, 4, MacKind::Lightweight(2))
+            );
+        }
+        // never below the operands, never above the cap
+        for a in [1u32, 7, 33, 64] {
+            for mac in [MacKind::Fp, MacKind::IntExact, MacKind::Lightweight(1)] {
+                let p = auto_psum(a, a, mac);
+                assert!(p >= a && p <= MAX_BITS, "a{a} {mac:?} -> {p}");
+                QuantSpec { act_bits: a, wt_bits: a, psum_bits: p, mac }.validate().unwrap();
+            }
+        }
+    }
+
+    #[test]
+    fn mac_kind_suffix_roundtrip() {
+        for mac in [MacKind::Fp, MacKind::IntExact, MacKind::Lightweight(1), MacKind::Lightweight(3)] {
+            assert_eq!(MacKind::parse(&mac.suffix()), Some(mac));
+        }
+        assert_eq!(MacKind::parse("nope"), None);
+        assert_eq!(MacKind::Lightweight(2).shift_terms(), 2);
+        assert_eq!(MacKind::Fp.shift_terms(), 0);
+    }
+}

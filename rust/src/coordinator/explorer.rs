@@ -132,6 +132,9 @@ pub struct WorkloadSummary {
 #[derive(Default)]
 pub struct ModelStore {
     entries: Mutex<BTreeMap<(PeType, u64), Arc<PpaModel>>>,
+    /// Unified cross-precision models, keyed by (recipe, precision grid)
+    /// hash — one model per grid, shared across workloads and repeat runs.
+    quant_entries: Mutex<BTreeMap<u64, Arc<PpaModel>>>,
     /// Serializes all training through the store (one pass at a time):
     /// concurrent requests for the same (type, recipe) dedupe — the loser
     /// re-checks the cache under this lock and records a hit instead of
@@ -192,6 +195,38 @@ impl ModelStore {
         self.misses.fetch_add(1, Ordering::Relaxed);
         let model = Arc::new(train_one_model(backend, opts, ty)?);
         self.entries.lock().unwrap().insert(key, model.clone());
+        Ok(model)
+    }
+
+    /// Return the cached unified cross-precision model for a precision
+    /// grid, training it on a miss (same recipe hashing, in-flight
+    /// deduplication and hit/miss counters as the per-type path).  The
+    /// backend must be built for `QUANT_NUM_FEATURES` features.
+    pub fn get_or_train_quant(
+        &self,
+        backend: &dyn Backend,
+        opts: &DseOptions,
+        grid: &[PeType],
+    ) -> Result<Arc<PpaModel>, QappaError> {
+        let mut s = format!("{:x}|quant", Self::recipe_hash(backend, opts));
+        for ty in grid {
+            s.push_str(&ty.label());
+            s.push(',');
+        }
+        let key = hash64(s.as_bytes());
+        if let Some(m) = self.quant_entries.lock().unwrap().get(&key) {
+            self.hits.fetch_add(1, Ordering::Relaxed);
+            return Ok(m.clone());
+        }
+        let _training = self.train_lock.lock().unwrap_or_else(|p| p.into_inner());
+        if let Some(m) = self.quant_entries.lock().unwrap().get(&key) {
+            self.hits.fetch_add(1, Ordering::Relaxed);
+            return Ok(m.clone());
+        }
+        self.misses.fetch_add(1, Ordering::Relaxed);
+        let model =
+            Arc::new(crate::coordinator::precision::train_quant_model(backend, opts, grid)?);
+        self.quant_entries.lock().unwrap().insert(key, model.clone());
         Ok(model)
     }
 
@@ -258,7 +293,8 @@ pub fn train_models(
 
 /// The paper's anchor-normalized ratios for one workload, from each type's
 /// best points: predicted, and validated by re-synthesizing the winners.
-fn assemble_ratios(
+/// (Shared with the precision-grid pipeline in `coordinator::precision`.)
+pub(crate) fn assemble_ratios(
     layers: &[Layer],
     sigma: f64,
     anchor: &DsePoint,
@@ -303,7 +339,7 @@ fn assemble_ratios(
 }
 
 /// Pull each type's (best perf/area, best energy) points out of its sweep.
-fn best_points(
+pub(crate) fn best_points(
     sweeps: &BTreeMap<PeType, TypeSweep>,
 ) -> Result<BTreeMap<PeType, (DsePoint, DsePoint)>, QappaError> {
     let mut best = BTreeMap::new();

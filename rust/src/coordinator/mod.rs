@@ -20,6 +20,7 @@
 
 pub mod explorer;
 pub mod pareto;
+pub mod precision;
 pub mod report;
 pub mod space;
 pub mod sweep;
@@ -29,5 +30,6 @@ pub use explorer::{
     ModelStore, WorkloadSummary,
 };
 pub use pareto::{pareto_frontier, IncrementalFrontier};
+pub use precision::{parse_bits_axis, run_dse_precision, train_quant_model, PrecisionGrid};
 pub use space::DesignSpace;
 pub use sweep::{NamedWorkload, SweepEngine, SweepStats};

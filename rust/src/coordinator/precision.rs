@@ -1,0 +1,388 @@
+//! Precision-grid DSE — bit widths as first-class sweep axes.
+//!
+//! The per-type pipeline (`explorer`) trains one regression model per PE
+//! type and sweeps the hardware grid once per type.  This module
+//! generalizes that to *arbitrary* precision grids (QADAM / QUIDAM-style
+//! co-exploration): a [`PrecisionGrid`] expands CLI-style ranges
+//! (`--act-bits 4:16 --wt-bits 2:8`) into validated [`QuantSpec`]s, a
+//! single **unified** model is fitted with the bit widths as regression
+//! features ([`crate::config::AcceleratorConfig::features_quant`]), and
+//! every precision cell streams through the existing chunked
+//! [`SweepEngine`] — sharding, incremental Pareto frontiers and top-k
+//! reservoirs included.  The historical `ALL_PE_TYPES` sweep is the
+//! special case of a 4-entry grid with per-type models.
+//!
+//! The unified model runs on a `QUANT_NUM_FEATURES`-dimension backend
+//! (always the native backend: the AOT XLA artifacts are lowered for the
+//! 7-feature per-type protocol).  See `docs/PRECISION.md`.
+
+use std::collections::BTreeMap;
+
+use crate::api::error::QappaError;
+use crate::config::{auto_psum, MacKind, PeType, QuantSpec, QUANT_NUM_FEATURES};
+use crate::coordinator::explorer::{
+    assemble_ratios, best_points, DseOptions, ModelStore, WorkloadSummary,
+};
+use crate::coordinator::sweep::{trace, NamedWorkload, SweepEngine, TypeSweep};
+use crate::model::{fit_ppa, Backend, PpaModel};
+use crate::synth::oracle::{synthesize_with_sigma, Ppa};
+use crate::util::pool::parallel_map;
+
+/// A validated, order-preserving, deduplicated list of precision cells.
+#[derive(Debug, Clone)]
+pub struct PrecisionGrid {
+    /// Canonicalized precision selectors (presets where specs match).
+    pub types: Vec<PeType>,
+}
+
+impl PrecisionGrid {
+    /// Build from explicit precision selectors; validates every spec
+    /// (bit-width range, psum >= operands) and deduplicates while keeping
+    /// first-seen order.
+    pub fn new(types: Vec<PeType>) -> Result<PrecisionGrid, QappaError> {
+        if types.is_empty() {
+            return Err(QappaError::Config("precision grid: no precision cells".into()));
+        }
+        let mut out: Vec<PeType> = Vec::with_capacity(types.len());
+        for ty in types {
+            let ty = PeType::from_spec(ty.spec());
+            ty.spec()
+                .validate()
+                .map_err(|e| e.context(format!("precision grid cell '{}'", ty.label())))?;
+            if !out.contains(&ty) {
+                out.push(ty);
+            }
+        }
+        Ok(PrecisionGrid { types: out })
+    }
+
+    /// Cross-product of width axes at a fixed MAC kind.  `psum` empty =
+    /// automatic accumulator widths ([`auto_psum`]).
+    pub fn from_ranges(
+        act: &[u32],
+        wt: &[u32],
+        psum: &[u32],
+        mac: MacKind,
+    ) -> Result<PrecisionGrid, QappaError> {
+        if act.is_empty() {
+            return Err(QappaError::Config("precision grid: empty act_bits axis".into()));
+        }
+        if wt.is_empty() {
+            return Err(QappaError::Config("precision grid: empty wt_bits axis".into()));
+        }
+        let mut types = Vec::with_capacity(act.len() * wt.len() * psum.len().max(1));
+        for &a in act {
+            for &w in wt {
+                if psum.is_empty() {
+                    let spec = QuantSpec { act_bits: a, wt_bits: w, psum_bits: auto_psum(a, w, mac), mac };
+                    types.push(PeType::from_spec(spec));
+                } else {
+                    for &p in psum {
+                        types.push(PeType::from_spec(QuantSpec {
+                            act_bits: a,
+                            wt_bits: w,
+                            psum_bits: p,
+                            mac,
+                        }));
+                    }
+                }
+            }
+        }
+        PrecisionGrid::new(types)
+    }
+
+    /// Number of precision cells.
+    pub fn len(&self) -> usize {
+        self.types.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.types.is_empty()
+    }
+}
+
+/// Parse one bit-width axis from its CLI form: a single value (`8`), an
+/// inclusive range (`4:16`), a stepped range (`4:16:4`) or an explicit
+/// comma list (`4,8,16`).
+///
+/// The default range step is 2 bits — `4:16` yields 4, 6, 8, 10, 12, 14,
+/// 16 — matching how precision-search papers walk even widths; the upper
+/// endpoint is always included.
+pub fn parse_bits_axis(s: &str, flag: &str) -> Result<Vec<u32>, QappaError> {
+    let err = |m: String| QappaError::Config(m);
+    let parse_u32 = |tok: &str| -> Result<u32, QappaError> {
+        tok.trim()
+            .parse::<u32>()
+            .map_err(|_| err(format!("--{flag}: cannot parse '{tok}' as a bit width")))
+    };
+    if s.contains(',') {
+        let mut out = Vec::new();
+        for tok in s.split(',').filter(|t| !t.trim().is_empty()) {
+            out.push(parse_u32(tok)?);
+        }
+        if out.is_empty() {
+            return Err(err(format!("--{flag}: empty width list '{s}'")));
+        }
+        return Ok(out);
+    }
+    let parts: Vec<&str> = s.split(':').collect();
+    match parts.as_slice() {
+        [one] => Ok(vec![parse_u32(one)?]),
+        [lo, hi] | [lo, hi, _] => {
+            let lo = parse_u32(lo)?;
+            let hi = parse_u32(hi)?;
+            let step = if let [_, _, st] = parts.as_slice() { parse_u32(st)? } else { 2 };
+            if step == 0 {
+                return Err(err(format!("--{flag}: step must be >= 1 in '{s}'")));
+            }
+            if lo > hi {
+                return Err(err(format!("--{flag}: range '{s}' has lo > hi")));
+            }
+            let mut out = Vec::new();
+            let mut v = lo;
+            while v < hi {
+                out.push(v);
+                v += step;
+            }
+            out.push(hi); // always include the upper endpoint
+            Ok(out)
+        }
+        _ => Err(err(format!("--{flag}: expected N, LO:HI, LO:HI:STEP or a comma list, got '{s}'"))),
+    }
+}
+
+/// Train the unified cross-precision PPA model: oracle samples drawn
+/// across the hardware hull *and* every precision cell, fitted on the
+/// quant-extended feature vector so one model predicts any (hardware,
+/// precision) pair in the grid.
+pub fn train_quant_model(
+    backend: &dyn Backend,
+    opts: &DseOptions,
+    grid: &[PeType],
+) -> Result<PpaModel, QappaError> {
+    if grid.is_empty() {
+        return Err(QappaError::Config("precision grid: no precision cells".into()));
+    }
+    if backend.d() != QUANT_NUM_FEATURES {
+        return Err(QappaError::Backend(format!(
+            "unified precision model needs a {QUANT_NUM_FEATURES}-feature backend, \
+             got d={} ({}); precision sweeps run the native backend",
+            backend.d(),
+            backend.name()
+        )));
+    }
+    let t0 = std::time::Instant::now();
+    // At least a few dozen samples per cell, spread deterministically.
+    let per_cell = (opts.train_per_type / grid.len()).max(48);
+    let mut cfgs = Vec::with_capacity(per_cell * grid.len());
+    for ty in grid {
+        cfgs.extend(opts.space.sample(*ty, per_cell, opts.seed));
+    }
+    let ppas: Vec<Ppa> =
+        parallel_map(&cfgs, opts.workers, |c| synthesize_with_sigma(c, opts.sigma));
+    trace(&format!("train/quant/synth({})", cfgs.len()), t0);
+    let mut feats = Vec::with_capacity(cfgs.len() * QUANT_NUM_FEATURES);
+    let mut targets = Vec::with_capacity(cfgs.len() * 3);
+    for (c, p) in cfgs.iter().zip(&ppas) {
+        feats.extend_from_slice(&c.features_quant());
+        targets.extend_from_slice(&p.as_array());
+    }
+    let t1 = std::time::Instant::now();
+    let model = fit_ppa(backend, &feats, &targets, &opts.cv)
+        .map_err(|e| e.context("unified precision model"))?;
+    trace("train/quant/cv_fit", t1);
+    Ok(model)
+}
+
+/// Precision-grid DSE over one or more workloads: one unified model, one
+/// chunked streaming sweep per precision cell, every workload folded per
+/// shard.  Returns one [`WorkloadSummary`] per workload whose maps are
+/// keyed by the grid's precision cells; ratios are normalized against the
+/// INT16 cell when the grid contains it, otherwise against the grid's
+/// best predicted perf/area point.
+pub fn run_dse_precision(
+    backend: &dyn Backend,
+    store: &ModelStore,
+    workloads: &[NamedWorkload],
+    opts: &DseOptions,
+    grid: &PrecisionGrid,
+) -> Result<Vec<WorkloadSummary>, QappaError> {
+    if workloads.is_empty() {
+        return Err(QappaError::Workload("run_dse_precision: no workloads given".into()));
+    }
+    let model = store.get_or_train_quant(backend, opts, &grid.types)?;
+    let engine = SweepEngine::new(backend, opts);
+
+    // per_wl[w][cell] = TypeSweep
+    let mut per_wl: Vec<BTreeMap<PeType, TypeSweep>> =
+        workloads.iter().map(|_| BTreeMap::new()).collect();
+    for ty in &grid.types {
+        for (w, ts) in engine.sweep_type(&model, *ty, workloads)?.into_iter().enumerate() {
+            per_wl[w].insert(*ty, ts);
+        }
+    }
+
+    let mut out = Vec::with_capacity(workloads.len());
+    for (wl, sweeps) in workloads.iter().zip(per_wl) {
+        let best = best_points(&sweeps)?;
+        let anchor = match best.get(&PeType::Int16) {
+            Some((pa, _)) => pa.clone(),
+            None => best
+                .values()
+                .max_by(|a, b| a.0.perf_per_area.total_cmp(&b.0.perf_per_area))
+                .expect("non-empty precision grid")
+                .0
+                .clone(),
+        };
+        let (ratios, ratios_validated) = assemble_ratios(&wl.layers, opts.sigma, &anchor, &best);
+        let mut frontier = BTreeMap::new();
+        let mut top_pa = BTreeMap::new();
+        let mut top_e = BTreeMap::new();
+        let mut stats = BTreeMap::new();
+        for (ty, ts) in sweeps {
+            frontier.insert(ty, ts.frontier_points());
+            stats.insert(ty, ts.stats);
+            top_pa.insert(ty, ts.top_perf_per_area);
+            top_e.insert(ty, ts.top_energy);
+        }
+        out.push(WorkloadSummary {
+            workload: wl.name.clone(),
+            frontier,
+            top_perf_per_area: top_pa,
+            top_energy: top_e,
+            anchor,
+            ratios,
+            ratios_validated,
+            stats,
+        });
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::QUANT_NUM_FEATURES;
+    use crate::coordinator::space::DesignSpace;
+    use crate::dataflow::Layer;
+    use crate::model::native::NativeBackend;
+    use crate::model::{predict_ppa, CvConfig};
+
+    fn tiny_opts() -> DseOptions {
+        DseOptions {
+            space: DesignSpace::tiny(),
+            train_per_type: 96,
+            cv: CvConfig { k: 3, degrees: vec![1, 2], lambdas: vec![1e-3, 1e-2], seed: 1 },
+            seed: 7,
+            workers: 4,
+            sigma: 0.02,
+            chunk: 16,
+            topk: 4,
+        }
+    }
+
+    fn net() -> Vec<Layer> {
+        vec![Layer::conv("c", 8, 16, 16, 16, 3, 1, 1)]
+    }
+
+    #[test]
+    fn parse_bits_axis_forms() {
+        assert_eq!(parse_bits_axis("8", "act-bits").unwrap(), vec![8]);
+        assert_eq!(parse_bits_axis("4:16", "act-bits").unwrap(), vec![4, 6, 8, 10, 12, 14, 16]);
+        assert_eq!(parse_bits_axis("4:16:4", "act-bits").unwrap(), vec![4, 8, 12, 16]);
+        // upper endpoint always included, even off-step
+        assert_eq!(parse_bits_axis("2:7:2", "wt-bits").unwrap(), vec![2, 4, 6, 7]);
+        assert_eq!(parse_bits_axis("4,8,16", "wt-bits").unwrap(), vec![4, 8, 16]);
+        for bad in ["", "a:b", "8:4", "4:16:0", "1:2:3:4"] {
+            let e = parse_bits_axis(bad, "act-bits").unwrap_err();
+            assert_eq!(e.kind(), "config", "{bad}");
+            assert!(e.to_string().contains("act-bits"), "{bad}: {e}");
+        }
+    }
+
+    #[test]
+    fn grid_from_ranges_validates_and_canonicalizes() {
+        let g = PrecisionGrid::from_ranges(&[8, 16], &[8, 16], &[], MacKind::IntExact).unwrap();
+        assert_eq!(g.len(), 4);
+        // a16w16 with auto psum (= 32) is canonicalized to the INT16 preset
+        assert!(g.types.contains(&PeType::Int16), "{:?}", g.types);
+        // invalid widths are rejected with the cell and field named
+        let e = PrecisionGrid::from_ranges(&[0], &[8], &[], MacKind::IntExact).unwrap_err();
+        assert!(e.to_string().contains("act_bits"), "{e}");
+        let e = PrecisionGrid::from_ranges(&[16], &[8], &[4], MacKind::IntExact).unwrap_err();
+        assert!(e.to_string().contains("psum_bits"), "{e}");
+        // duplicates collapse, order preserved
+        let g2 = PrecisionGrid::new(vec![PeType::Int16, PeType::LightPe1, PeType::Int16]).unwrap();
+        assert_eq!(g2.types, vec![PeType::Int16, PeType::LightPe1]);
+    }
+
+    #[test]
+    fn unified_model_predicts_across_precisions() {
+        let backend = NativeBackend::new(QUANT_NUM_FEATURES);
+        let opts = tiny_opts();
+        let grid =
+            PrecisionGrid::from_ranges(&[4, 8, 16], &[4, 8, 16], &[], MacKind::IntExact).unwrap();
+        let model = train_quant_model(&backend, &opts, &grid.types).unwrap();
+        // holdout across every cell: one model, sane accuracy everywhere
+        let mut rel_err = 0.0;
+        let mut n = 0usize;
+        for ty in &grid.types {
+            let cfgs = opts.space.sample(*ty, 24, 999);
+            let mut feats = Vec::new();
+            for c in &cfgs {
+                feats.extend_from_slice(&c.features_quant());
+            }
+            let preds = predict_ppa(&backend, &model, &feats).unwrap();
+            for (c, pred) in cfgs.iter().zip(&preds) {
+                let truth = synthesize_with_sigma(c, opts.sigma).as_array();
+                for k in 0..3 {
+                    rel_err += ((pred[k] - truth[k]) / truth[k]).abs();
+                    n += 1;
+                }
+            }
+        }
+        rel_err /= n as f64;
+        assert!(rel_err < 0.25, "cross-precision holdout rel err {rel_err}");
+    }
+
+    #[test]
+    fn quant_model_demands_extended_backend() {
+        let narrow = NativeBackend::new(7);
+        let e = train_quant_model(&narrow, &tiny_opts(), &[PeType::Int16]).unwrap_err();
+        assert_eq!(e.kind(), "backend");
+        assert!(e.to_string().contains("native"), "{e}");
+    }
+
+    #[test]
+    fn precision_dse_produces_per_cell_rows_and_monotone_story() {
+        let backend = NativeBackend::new(QUANT_NUM_FEATURES);
+        let opts = tiny_opts();
+        let store = ModelStore::new();
+        let grid = PrecisionGrid::from_ranges(&[4, 16], &[4, 16], &[], MacKind::IntExact).unwrap();
+        let wl = vec![NamedWorkload::new("t", net())];
+        let summaries = run_dse_precision(&backend, &store, &wl, &opts, &grid).unwrap();
+        assert_eq!(store.misses(), 1, "one unified model for the whole grid");
+        assert_eq!(summaries.len(), 1);
+        let s = &summaries[0];
+        assert_eq!(s.ratios.len(), grid.len());
+        for ty in &grid.types {
+            assert!(!s.frontier[ty].is_empty(), "{}", ty.label());
+            assert_eq!(s.stats[ty].evaluated, opts.space.len());
+            assert!(s.top_perf_per_area[ty].first().is_some());
+        }
+        // the INT16 cell anchors the ratios at 1.0
+        assert!((s.ratios[&PeType::Int16].0 - 1.0).abs() < 1e-9);
+        // the 4x4 cell must beat the 16x16 cell on predicted perf/area
+        let a4 = PeType::parse("a4w4p8-int").unwrap();
+        assert!(
+            s.ratios[&a4].0 > s.ratios[&PeType::Int16].0,
+            "a4w4 {} <= int16 {}",
+            s.ratios[&a4].0,
+            s.ratios[&PeType::Int16].0
+        );
+        // warm repeat: no retraining
+        let again = run_dse_precision(&backend, &store, &wl, &opts, &grid).unwrap();
+        assert_eq!(store.misses(), 1);
+        assert_eq!(again[0].anchor.cfg, s.anchor.cfg);
+    }
+}

@@ -145,6 +145,50 @@ pub fn multi_summary_table(summaries: &[WorkloadSummary]) -> Table {
     t
 }
 
+/// Per-precision summary for `qappa explore --act-bits ... --wt-bits ...`:
+/// one row per (workload, precision cell) with the anchor-normalized
+/// ratios, frontier size and best config.  The summaries' maps are keyed
+/// by the precision grid (see `coordinator::precision`), so the row set
+/// follows the grid, not the four presets.
+pub fn precision_summary_table(summaries: &[WorkloadSummary]) -> Table {
+    let mut t = Table::new(&[
+        "workload",
+        "precision",
+        "act",
+        "wt",
+        "psum",
+        "evaluated",
+        "frontier",
+        "perf/area_pred",
+        "perf/area_true",
+        "energy_pred",
+        "energy_true",
+        "best_cfg",
+    ]);
+    for s in summaries {
+        for (ty, &(pa, e)) in &s.ratios {
+            let (pav, ev) = s.ratios_validated[ty];
+            let best = s.top_perf_per_area[ty].first().expect("non-empty reservoir");
+            let q = ty.spec();
+            t.row(vec![
+                s.workload.clone(),
+                ty.label(),
+                q.act_bits.to_string(),
+                q.wt_bits.to_string(),
+                q.psum_bits.to_string(),
+                s.stats[ty].evaluated.to_string(),
+                s.frontier[ty].len().to_string(),
+                format!("{:.2}x", pa),
+                format!("{:.2}x", pav),
+                format!("{:.2}x", e),
+                format!("{:.2}x", ev),
+                best.cfg.key(),
+            ]);
+        }
+    }
+    t
+}
+
 /// One engine-counter row (shared by the single- and multi-workload
 /// stats tables).
 fn stats_row(workload: &str, ty: PeType, st: &crate::coordinator::sweep::SweepStats) -> Vec<String> {
@@ -184,13 +228,20 @@ pub fn dse_stats_table(res: &DseResult) -> Table {
 }
 
 /// Per-layer table for `qappa workloads --workload W`: taxonomy kind,
-/// shape, and the groups-aware MAC count of every layer.
+/// shape, and the groups-aware MAC count of every layer.  When any layer
+/// carries a per-layer precision override, a `precision` column is
+/// appended (mixed-precision networks); plain workloads keep the
+/// historical column set byte-for-byte.
 pub fn workload_table(layers: &[Layer]) -> Table {
-    let mut t = Table::new(&[
-        "layer", "kind", "c", "k", "hw", "rs", "stride", "groups", "MACs_M",
-    ]);
+    let mixed = layers.iter().any(|l| l.quant.is_some());
+    let mut header =
+        vec!["layer", "kind", "c", "k", "hw", "rs", "stride", "groups", "MACs_M"];
+    if mixed {
+        header.push("precision");
+    }
+    let mut t = Table::new(&header);
     for l in layers {
-        t.row(vec![
+        let mut row = vec![
             l.name.clone(),
             l.kind().to_string(),
             l.c.to_string(),
@@ -200,7 +251,14 @@ pub fn workload_table(layers: &[Layer]) -> Table {
             l.stride.to_string(),
             l.groups.to_string(),
             format!("{:.2}", l.macs() as f64 / 1e6),
-        ]);
+        ];
+        if mixed {
+            row.push(match l.quant {
+                Some(q) => crate::config::PeType::from_spec(q).label(),
+                None => "-".to_string(),
+            });
+        }
+        t.row(row);
     }
     t
 }
@@ -326,5 +384,42 @@ mod tests {
         let csv = t.to_csv();
         assert!(csv.contains("dw"), "depthwise kind missing from table");
         assert!(csv.contains("pw"), "pointwise kind missing from table");
+        // no override anywhere -> the historical column set, byte-for-byte
+        assert!(!csv.lines().next().unwrap().contains("precision"));
+    }
+
+    #[test]
+    fn workload_table_shows_precision_column_for_mixed_nets() {
+        use crate::config::QuantSpec;
+        let mut layers = crate::workloads::mobilenetv1();
+        for l in layers.iter_mut().filter(|l| l.is_depthwise()) {
+            l.quant = Some(QuantSpec::int(4, 4));
+        }
+        let t = workload_table(&layers);
+        let csv = t.to_csv();
+        assert!(csv.lines().next().unwrap().contains("precision"));
+        assert!(csv.contains("a4w4p8-int"), "{csv}");
+        assert!(csv.contains(",-"), "non-overridden layers show '-'");
+    }
+
+    #[test]
+    fn precision_summary_table_has_one_row_per_cell() {
+        use crate::config::{MacKind, QUANT_NUM_FEATURES};
+        use crate::coordinator::precision::{run_dse_precision, PrecisionGrid};
+        let backend = NativeBackend::new(QUANT_NUM_FEATURES);
+        let store = crate::coordinator::explorer::ModelStore::new();
+        let grid = PrecisionGrid::from_ranges(&[8, 16], &[8], &[], MacKind::IntExact).unwrap();
+        let named = vec![crate::coordinator::sweep::NamedWorkload::new(
+            "a",
+            vec![crate::dataflow::Layer::conv("c", 8, 16, 16, 16, 3, 1, 1)],
+        )];
+        let mut opts = opts();
+        opts.train_per_type = 96;
+        let summaries = run_dse_precision(&backend, &store, &named, &opts, &grid).unwrap();
+        let t = precision_summary_table(&summaries);
+        assert_eq!(t.len(), grid.len());
+        let csv = t.to_csv();
+        assert!(csv.contains("precision"), "{csv}");
+        assert!(csv.contains("a8w8p16-int"), "{csv}");
     }
 }

@@ -11,7 +11,19 @@
 use crate::config::{AcceleratorConfig, PeType};
 use crate::util::prng::{hash64, Rng};
 
-/// A grid over the accelerator parameters (per PE type).
+/// A grid over the accelerator parameters (per PE type), with an optional
+/// precision axis.
+///
+/// When `quants` is empty (the default and every legacy space), the grid
+/// spans the seven hardware axes and the PE type passed to
+/// [`DesignSpace::nth`] / [`DesignSpace::iter`] / [`DesignSpace::chunks`]
+/// applies to every point — the historical per-type sweep.  When `quants`
+/// is non-empty it becomes the outermost (slowest-varying) grid axis: each
+/// point's precision comes from the axis and the passed PE type is
+/// ignored, so one lazy cursor walks `|quants| x |hardware grid|` points
+/// and shards of any size stream through the sweep engine exactly like the
+/// other axes.  `ALL_PE_TYPES` sweeps are the special case
+/// `quants = ALL_PE_TYPES.to_vec()`.
 #[derive(Debug, Clone)]
 pub struct DesignSpace {
     pub rows: Vec<u32>,
@@ -21,6 +33,8 @@ pub struct DesignSpace {
     pub spad_filter_b: Vec<u32>,
     pub spad_psum_b: Vec<u32>,
     pub bandwidth_gbps: Vec<f64>,
+    /// Optional precision axis (empty = use the per-call PE type).
+    pub quants: Vec<PeType>,
 }
 
 impl Default for DesignSpace {
@@ -38,6 +52,7 @@ impl Default for DesignSpace {
             spad_filter_b: vec![28, 56, 112, 224, 448],
             spad_psum_b: vec![16, 32, 64, 128],
             bandwidth_gbps: vec![2.0, 4.0, 8.0],
+            quants: Vec::new(),
         }
     }
 }
@@ -53,11 +68,19 @@ impl DesignSpace {
             spad_filter_b: vec![224, 448],
             spad_psum_b: vec![64],
             bandwidth_gbps: vec![2.0, 8.0],
+            quants: Vec::new(),
         }
     }
 
-    /// Number of grid points (per PE type).
-    pub fn len(&self) -> usize {
+    /// Copy of this space with a precision axis installed (the quantization
+    /// grid of `docs/PRECISION.md`).
+    pub fn with_quants(mut self, quants: Vec<PeType>) -> DesignSpace {
+        self.quants = quants;
+        self
+    }
+
+    /// Number of hardware grid points (excluding the precision axis).
+    fn base_len(&self) -> usize {
         self.rows.len()
             * self.cols.len()
             * self.glb_kb.len()
@@ -67,18 +90,30 @@ impl DesignSpace {
             * self.bandwidth_gbps.len()
     }
 
+    /// Number of grid points: per PE type when `quants` is empty,
+    /// `|quants| x hardware grid` otherwise.
+    pub fn len(&self) -> usize {
+        self.base_len() * self.quants.len().max(1)
+    }
+
     pub fn is_empty(&self) -> bool {
         self.len() == 0
     }
 
     /// Decode grid index `i` into its config (row-major over the axes:
-    /// rows outermost, bandwidth fastest-varying — the same order the old
-    /// eager `enumerate` produced).  O(1); the basis of the lazy cursor.
+    /// precision axis outermost when present, then rows, bandwidth
+    /// fastest-varying — the same order the old eager `enumerate`
+    /// produced).  O(1); the basis of the lazy cursor.
     pub fn nth(&self, pe_type: PeType, i: usize) -> Option<AcceleratorConfig> {
         if i >= self.len() {
             return None;
         }
-        let mut rem = i;
+        let base = self.base_len();
+        let (pe_type, mut rem) = if self.quants.is_empty() {
+            (pe_type, i)
+        } else {
+            (self.quants[i / base], i % base)
+        };
         let mut digit = |axis_len: usize| -> usize {
             let d = rem % axis_len;
             rem /= axis_len;
@@ -125,6 +160,8 @@ impl DesignSpace {
 
     /// Stable hash of the axis contents — part of the `ModelStore` cache
     /// key, so model reuse is keyed to the exact space that trained it.
+    /// The precision axis only contributes when present, keeping legacy
+    /// spaces' hashes (and therefore cache identities) unchanged.
     pub fn space_hash(&self) -> u64 {
         let mut s = String::new();
         for axis in [
@@ -144,6 +181,13 @@ impl DesignSpace {
         for v in &self.bandwidth_gbps {
             s.push_str(&format!("{:x},", v.to_bits()));
         }
+        if !self.quants.is_empty() {
+            s.push('|');
+            for q in &self.quants {
+                s.push_str(&q.label());
+                s.push(',');
+            }
+        }
         hash64(s.as_bytes())
     }
 
@@ -151,7 +195,7 @@ impl DesignSpace {
     /// the grid (better regression coverage than grid points; the oracle
     /// can synthesize any config).
     pub fn sample(&self, pe_type: PeType, n: usize, seed: u64) -> Vec<AcceleratorConfig> {
-        let mut rng = Rng::new(seed ^ (pe_type as u64).wrapping_mul(0x9e37));
+        let mut rng = Rng::new(seed ^ pe_type.stream_id().wrapping_mul(0x9e37));
         let span_u = |v: &[u32], rng: &mut Rng| -> u32 {
             let lo = *v.iter().min().unwrap();
             let hi = *v.iter().max().unwrap();
@@ -339,6 +383,56 @@ mod tests {
             c.validate().unwrap();
         }
         assert_eq!(a, s.sample(PeType::Int16, 32, 3), "still deterministic");
+    }
+
+    #[test]
+    fn quant_axis_multiplies_grid_and_decodes_outermost() {
+        use crate::config::{QuantSpec, ALL_PE_TYPES};
+        let base = DesignSpace::tiny();
+        let specs = vec![
+            PeType::from_spec(QuantSpec::int(4, 4)),
+            PeType::Int16,
+            PeType::from_spec(QuantSpec::int(8, 8)),
+        ];
+        let s = DesignSpace::tiny().with_quants(specs.clone());
+        assert_eq!(s.len(), 3 * base.len());
+        // outermost axis: the first base.len() points carry specs[0], etc.
+        for (qi, ty) in specs.iter().enumerate() {
+            for off in [0, 1, base.len() - 1] {
+                let c = s.nth(PeType::Fp32, qi * base.len() + off).unwrap();
+                assert_eq!(c.pe_type, *ty, "q{qi} off{off}");
+                // hardware digits match the plain grid at the same offset
+                let plain = base.nth(*ty, off).unwrap();
+                assert_eq!(c, plain);
+                c.validate().unwrap();
+            }
+        }
+        assert!(s.nth(PeType::Fp32, s.len()).is_none());
+        // chunks stream across precision boundaries exactly once
+        let mut seen = Vec::new();
+        for (start, shard) in s.chunks(PeType::Fp32, 7) {
+            assert_eq!(start, seen.len());
+            seen.extend(shard);
+        }
+        assert_eq!(seen.len(), s.len());
+        assert_eq!(seen, s.iter(PeType::Fp32).collect::<Vec<_>>());
+        // the ALL_PE_TYPES sweep is the special case quants = presets
+        let all = DesignSpace::tiny().with_quants(ALL_PE_TYPES.to_vec());
+        assert_eq!(all.len(), 4 * base.len());
+        let mut per_type = Vec::new();
+        for ty in ALL_PE_TYPES {
+            per_type.extend(base.enumerate(ty));
+        }
+        assert_eq!(all.iter(PeType::Fp32).collect::<Vec<_>>(), per_type);
+    }
+
+    #[test]
+    fn quant_axis_contributes_to_space_hash_only_when_present() {
+        let plain = DesignSpace::tiny();
+        let with = DesignSpace::tiny().with_quants(vec![PeType::Int16]);
+        assert_ne!(plain.space_hash(), with.space_hash());
+        let with2 = DesignSpace::tiny().with_quants(vec![PeType::LightPe1]);
+        assert_ne!(with.space_hash(), with2.space_hash());
     }
 
     #[test]

@@ -13,7 +13,7 @@
 //! progress hook (plus `QAPPA_TRACE=1` phase timing) exposes the pipeline.
 
 use crate::api::error::QappaError;
-use crate::config::{AcceleratorConfig, NUM_FEATURES, PeType};
+use crate::config::{AcceleratorConfig, NUM_FEATURES, PeType, QUANT_NUM_FEATURES};
 use crate::coordinator::explorer::{DseOptions, DsePoint};
 use crate::coordinator::pareto::{FrontierEntry, IncrementalFrontier};
 use crate::dataflow::{evaluate_network, Layer};
@@ -255,11 +255,20 @@ impl<'a> SweepEngine<'a> {
             })
             .collect();
 
+        // Feature mode follows the model: the per-type models are fitted on
+        // the 7 base axes, the unified cross-precision model on the
+        // quant-extended vector (bit widths as regression features).
+        let quant_features = model.x_std.d() == QUANT_NUM_FEATURES;
         for (shard_no, (start, shard)) in opts.space.chunks(ty, opts.chunk).enumerate() {
             let t0 = std::time::Instant::now();
-            let mut feats = Vec::with_capacity(shard.len() * NUM_FEATURES);
+            let d = if quant_features { QUANT_NUM_FEATURES } else { NUM_FEATURES };
+            let mut feats = Vec::with_capacity(shard.len() * d);
             for c in &shard {
-                feats.extend_from_slice(&c.features());
+                if quant_features {
+                    feats.extend_from_slice(&c.features_quant());
+                } else {
+                    feats.extend_from_slice(&c.features());
+                }
             }
             let preds = predict_ppa(self.backend, model, &feats)?;
             trace(

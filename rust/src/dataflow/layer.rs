@@ -19,6 +19,7 @@
 //! `groups`-aware.
 
 use crate::api::error::QappaError;
+use crate::config::{AcceleratorConfig, QuantSpec};
 
 /// One layer of a network, in inference shape (batch = 1, as in the
 /// paper's edge-deployment setting).
@@ -44,6 +45,11 @@ pub struct Layer {
     /// reads only `c / groups` input channels; `c` and `k` must both be
     /// divisible by `groups`.
     pub groups: u32,
+    /// Optional per-layer precision override (mixed-precision networks):
+    /// when set, this layer is costed as if the PEs ran at this spec —
+    /// e.g. INT4 depthwise layers mixed with INT8 pointwise layers.
+    /// `None` means the accelerator configuration's own precision.
+    pub quant: Option<QuantSpec>,
 }
 
 impl Layer {
@@ -58,7 +64,7 @@ impl Layer {
         stride: u32,
         pad: u32,
     ) -> Layer {
-        Layer { name: name.into(), c, k, hw, rs, stride, pad, groups: 1 }
+        Layer { name: name.into(), c, k, hw, rs, stride, pad, groups: 1, quant: None }
     }
 
     /// Grouped convolution: input/output channels split into `groups`
@@ -74,24 +80,46 @@ impl Layer {
         groups: u32,
     ) -> Layer {
         debug_assert!(groups > 0 && c % groups == 0 && k % groups == 0);
-        Layer { name: name.into(), c, k, hw, rs, stride, pad, groups }
+        Layer { name: name.into(), c, k, hw, rs, stride, pad, groups, quant: None }
     }
 
     /// Depthwise convolution: one spatial filter per channel
     /// (`groups = c = k`), the MobileNet workhorse.
     pub fn dw(name: &str, c: u32, hw: u32, rs: u32, stride: u32, pad: u32) -> Layer {
-        Layer { name: name.into(), c, k: c, hw, rs, stride, pad, groups: c }
+        Layer { name: name.into(), c, k: c, hw, rs, stride, pad, groups: c, quant: None }
     }
 
     /// Pointwise convolution: dense 1x1, stride 1, no padding — the channel
     /// mixer paired with depthwise layers in separable blocks.
     pub fn pw(name: &str, c: u32, k: u32, hw: u32) -> Layer {
-        Layer { name: name.into(), c, k, hw, rs: 1, stride: 1, pad: 0, groups: 1 }
+        Layer { name: name.into(), c, k, hw, rs: 1, stride: 1, pad: 0, groups: 1, quant: None }
     }
 
     /// Fully-connected layer as a 1x1 conv over a 1x1 "image".
     pub fn fc(name: &str, c_in: u32, c_out: u32) -> Layer {
-        Layer { name: name.into(), c: c_in, k: c_out, hw: 1, rs: 1, stride: 1, pad: 0, groups: 1 }
+        Layer {
+            name: name.into(),
+            c: c_in,
+            k: c_out,
+            hw: 1,
+            rs: 1,
+            stride: 1,
+            pad: 0,
+            groups: 1,
+            quant: None,
+        }
+    }
+
+    /// Attach a per-layer precision override (builder style).
+    pub fn with_precision(mut self, quant: QuantSpec) -> Layer {
+        self.quant = Some(quant);
+        self
+    }
+
+    /// The precision this layer runs at on `cfg`: its own override, or the
+    /// configuration's spec.
+    pub fn effective_quant(&self, cfg: &AcceleratorConfig) -> QuantSpec {
+        self.quant.unwrap_or_else(|| cfg.quant())
     }
 
     /// True for layers built by [`Layer::fc`] (1x1 conv over a 1x1 image).
@@ -154,6 +182,11 @@ impl Layer {
                 self.rs,
                 self.hw + 2 * self.pad
             ));
+        }
+        if let Some(q) = self.quant {
+            // Per-layer precision overrides obey the same bit-width rules
+            // as configurations; keep the layer name as context.
+            q.validate().map_err(|e| e.context(format!("layer '{}'", self.name)))?;
         }
         Ok(())
     }
@@ -262,6 +295,29 @@ mod tests {
         assert_eq!(pw.out_hw(), 56);
         assert_eq!(pw.macs(), 32 * 64 * 56 * 56);
         assert!(!pw.is_fc());
+    }
+
+    #[test]
+    fn precision_override_builds_and_validates() {
+        use crate::config::{MacKind, PeType};
+        let q = QuantSpec::new(4, 4, 12, MacKind::IntExact).unwrap();
+        let l = Layer::dw("dw4", 64, 28, 3, 1, 1).with_precision(q);
+        l.validate().unwrap();
+        assert_eq!(l.quant, Some(q));
+        // effective precision: override wins, else the config's spec
+        let cfg = AcceleratorConfig::default_with(PeType::Int16);
+        assert_eq!(l.effective_quant(&cfg), q);
+        assert_eq!(Layer::dw("dw", 64, 28, 3, 1, 1).effective_quant(&cfg), PeType::Int16.spec());
+        // an invalid override is rejected with the layer named and the
+        // offending field in the message
+        let bad = Layer::pw("pw0", 16, 32, 14)
+            .with_precision(QuantSpec { act_bits: 0, wt_bits: 8, psum_bits: 16, mac: MacKind::IntExact });
+        let e = bad.validate().unwrap_err();
+        assert!(e.to_string().contains("pw0"), "{e}");
+        assert!(e.to_string().contains("act_bits"), "{e}");
+        let narrow = Layer::pw("pwn", 16, 32, 14)
+            .with_precision(QuantSpec { act_bits: 8, wt_bits: 8, psum_bits: 4, mac: MacKind::IntExact });
+        assert!(narrow.validate().unwrap_err().to_string().contains("psum_bits"));
     }
 
     #[test]

@@ -21,8 +21,8 @@ pub use layer::Layer;
 pub use rs::{map_layer, LayerPerf};
 pub use traffic::{layer_traffic, Traffic};
 
-use crate::config::AcceleratorConfig;
-use crate::synth::oracle::EnergyParams;
+use crate::config::{AcceleratorConfig, PeType};
+use crate::synth::oracle::{energy_params, EnergyParams};
 
 /// Aggregate cost of running a whole network once.
 #[derive(Debug, Clone, Copy, Default)]
@@ -41,14 +41,70 @@ pub struct NetworkCost {
     pub dram_bytes: u64,
 }
 
+/// Resolve the (config, energy params) a layer actually runs with: its own
+/// precision override applied to the accelerator (hardware re-sized at the
+/// override spec, clock kept at the array's), or the inputs unchanged.
+/// Derives full array energy parameters on an override — callers looping
+/// over many layers should memoize per spec (as `evaluate_network` and the
+/// session's analyze path do) and feed [`layer_cost_at`].
+pub fn layer_hw(
+    cfg: &AcceleratorConfig,
+    ep: &EnergyParams,
+    layer: &Layer,
+) -> (AcceleratorConfig, EnergyParams) {
+    match layer.quant {
+        Some(q) if q != cfg.quant() => {
+            let cfg_l = cfg.with_pe_type(PeType::from_spec(q));
+            let mut ep_l = energy_params(&cfg_l);
+            // One chip, one clock: the override re-sizes datapaths and
+            // word widths but runs at the array's (possibly predicted)
+            // clock, so latency stays comparable across layers.
+            ep_l.fmax_mhz = ep.fmax_mhz;
+            (cfg_l, ep_l)
+        }
+        _ => (*cfg, *ep),
+    }
+}
+
+/// Cost one layer end-to-end: map, schedule traffic, re-tighten the
+/// bandwidth roofline, price energy.  Applies the layer's precision
+/// override (if any), so `analyze` and the network evaluator agree on
+/// mixed-precision accounting.
+pub fn layer_cost(
+    cfg: &AcceleratorConfig,
+    ep: &EnergyParams,
+    layer: &Layer,
+) -> (LayerPerf, Traffic, EnergyBreakdown) {
+    let (cfg_l, ep_l) = layer_hw(cfg, ep, layer);
+    layer_cost_at(&cfg_l, &ep_l, layer)
+}
+
+/// [`layer_cost`] after override resolution ([`layer_hw`]); callers that
+/// memoize the per-spec hardware skip the re-derivation.
+pub fn layer_cost_at(
+    cfg: &AcceleratorConfig,
+    ep: &EnergyParams,
+    layer: &Layer,
+) -> (LayerPerf, Traffic, EnergyBreakdown) {
+    let mapped = map_layer(cfg, ep, layer);
+    let traffic = layer_traffic(cfg, layer, &mapped);
+    // Re-tighten the bandwidth roofline with the scheduled traffic.
+    let perf = rs::apply_bandwidth(cfg, ep, layer, &mapped, traffic.dram_bytes);
+    let energy = layer_energy(cfg, ep, layer, &perf, &traffic);
+    (perf, traffic, energy)
+}
+
 /// Evaluate a network (list of layers) on a configuration.
 ///
 /// Residual networks repeat identical layer shapes many times (ResNet-34
 /// has 37 layers but only ~24 distinct shapes); since every per-layer cost
 /// is additive, identical layers are evaluated once and scaled by their
 /// multiplicity — exact, and ~1.5-2x faster in the DSE inner loop. The
-/// shape key includes `groups`, so a depthwise layer never aliases a dense
-/// layer of the same (c, k, hw, rs) dimensions.
+/// shape key includes `groups` and the per-layer precision override, so a
+/// depthwise layer never aliases a dense layer of the same (c, k, hw, rs)
+/// dimensions and an INT4 layer never aliases its INT8 twin.  Override
+/// hardware (energy params per distinct spec) is derived once per spec,
+/// not once per layer.
 pub fn evaluate_network(
     cfg: &AcceleratorConfig,
     ep: &EnergyParams,
@@ -65,6 +121,7 @@ pub fn evaluate_network(
                 && l.stride == layer.stride
                 && l.pad == layer.pad
                 && l.groups == layer.groups
+                && l.quant == layer.quant
             {
                 *count += 1;
                 continue 'outer;
@@ -73,18 +130,32 @@ pub fn evaluate_network(
         unique.push((layer, 1));
     }
 
+    // Per-override hardware memo: mixed-precision nets reuse a handful of
+    // specs across many layers, and energy_params re-synthesizes the array.
+    let mut override_hw: Vec<(crate::config::QuantSpec, AcceleratorConfig, EnergyParams)> =
+        Vec::new();
+
     let mut total = NetworkCost::default();
     let mut util_weighted = 0.0;
     for (layer, count) in unique {
-        let mapped = map_layer(cfg, ep, layer);
-        let traffic = layer_traffic(cfg, layer, &mapped);
-        // Re-tighten the bandwidth roofline with the scheduled traffic.
-        let perf = rs::apply_bandwidth(cfg, ep, layer, &mapped, traffic.dram_bytes);
-        let energy = layer_energy(cfg, ep, layer, &perf, &traffic);
+        let (cfg_l, ep_l) = match layer.quant {
+            Some(q) if q != cfg.quant() => {
+                match override_hw.iter().position(|(spec, _, _)| *spec == q) {
+                    Some(i) => (override_hw[i].1, override_hw[i].2),
+                    None => {
+                        let (c, e) = layer_hw(cfg, ep, layer);
+                        override_hw.push((q, c, e));
+                        (c, e)
+                    }
+                }
+            }
+            _ => (*cfg, *ep),
+        };
+        let (perf, traffic, energy) = layer_cost_at(&cfg_l, &ep_l, layer);
         let n = count as f64;
         total.macs += layer.macs() * count;
         total.cycles += perf.cycles * count;
-        total.latency_s += perf.latency_s(ep.fmax_mhz) * n;
+        total.latency_s += perf.latency_s(ep_l.fmax_mhz) * n;
         total.energy_mj += energy.total_mj() * n;
         total.dram_bytes += traffic.dram_bytes * count;
         util_weighted += perf.utilization * (layer.macs() * count) as f64;
@@ -119,6 +190,51 @@ mod tests {
         assert!(cost.latency_s > 0.0);
         assert!(cost.energy_mj > 0.0);
         assert!(cost.avg_utilization > 0.0 && cost.avg_utilization <= 1.0);
+    }
+
+    #[test]
+    fn per_layer_precision_override_changes_cost() {
+        use crate::config::QuantSpec;
+        // An INT4 override on an INT16 array must cut the layer's compute
+        // and DRAM cost; a no-op override (same spec as the config) must be
+        // bit-identical to no override at all.
+        let cfg = AcceleratorConfig::default_with(PeType::Int16);
+        let ep = energy_params(&cfg);
+        let base = Layer::conv("c", 64, 64, 28, 28, 3, 1, 1);
+        let int4 = base.clone().with_precision(QuantSpec::int(4, 4));
+        let noop = base.clone().with_precision(PeType::Int16.spec());
+
+        let (pb, tb, eb) = layer_cost(&cfg, &ep, &base);
+        let (p4, t4, e4) = layer_cost(&cfg, &ep, &int4);
+        let (pn, tn, en) = layer_cost(&cfg, &ep, &noop);
+        assert!(t4.dram_bytes < tb.dram_bytes, "{} >= {}", t4.dram_bytes, tb.dram_bytes);
+        assert!(e4.total_mj() < eb.total_mj());
+        assert_eq!(pn.cycles, pb.cycles);
+        assert_eq!(tn.dram_bytes, tb.dram_bytes);
+        assert_eq!(en.total_mj(), eb.total_mj());
+        assert!(p4.cycles > 0);
+
+        // evaluate_network applies the same overrides (and keeps MACs
+        // precision-independent)
+        let mixed = evaluate_network(&cfg, &ep, &[base.clone(), int4.clone()]);
+        let plain = evaluate_network(&cfg, &ep, &[base.clone(), base.clone()]);
+        assert_eq!(mixed.macs, plain.macs);
+        assert!(mixed.energy_mj < plain.energy_mj);
+        assert!(mixed.dram_bytes < plain.dram_bytes);
+    }
+
+    #[test]
+    fn dedup_keeps_precision_overrides_distinct() {
+        use crate::config::QuantSpec;
+        // Same shape, different precision: the shape-dedup must keep them
+        // apart, or the INT4 copy would be costed at INT16.
+        let cfg = AcceleratorConfig::default_with(PeType::Int16);
+        let ep = energy_params(&cfg);
+        let l16 = Layer::conv("a", 32, 32, 14, 14, 3, 1, 1);
+        let l4 = l16.clone().with_precision(QuantSpec::int(4, 4));
+        let mixed = evaluate_network(&cfg, &ep, &[l16.clone(), l4.clone()]);
+        let twice4 = evaluate_network(&cfg, &ep, &[l4.clone(), l4]);
+        assert!(mixed.energy_mj > twice4.energy_mj);
     }
 
     #[test]

@@ -77,7 +77,7 @@ pub fn map_layer(cfg: &AcceleratorConfig, ep: &EnergyParams, layer: &Layer) -> L
         // Quantization-aware capacity limit: stacking a (c,k) plane keeps
         // one filter row (rs weights) resident per PE, so the filter spad
         // bounds how many planes can stack — narrower weights stack more.
-        let wt_bits = cfg.pe_type.wt_bits() as u64;
+        let wt_bits = cfg.quant().wt_bits as u64;
         let spad_planes = (cfg.spad_filter_b as u64 * 8 / (rs * wt_bits)).max(1);
         let v_stack = (rows / rs_phys).max(1).min(spad_planes); // (c,k) planes stacked
         // horizontal strips of output rows
@@ -100,8 +100,8 @@ pub fn map_layer(cfg: &AcceleratorConfig, ep: &EnergyParams, layer: &Layer) -> L
 
     // Bandwidth roofline against *compulsory* traffic (a lower bound);
     // `apply_bandwidth` re-tightens it with the scheduled traffic.
-    let act_bits = cfg.pe_type.act_bits() as u64;
-    let wt_bits = cfg.pe_type.wt_bits() as u64;
+    let act_bits = cfg.quant().act_bits as u64;
+    let wt_bits = cfg.quant().wt_bits as u64;
     let compulsory_bits = layer.ifmap_elems() * act_bits
         + layer.filter_elems() * wt_bits
         + layer.ofmap_elems() * act_bits;

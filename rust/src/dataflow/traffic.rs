@@ -51,9 +51,9 @@ fn ceil_div_f(a: f64, b: f64) -> u64 {
 
 /// Compute the traffic for one mapped layer.
 pub fn layer_traffic(cfg: &AcceleratorConfig, layer: &Layer, perf: &LayerPerf) -> Traffic {
-    let t = cfg.pe_type;
-    let act_bits = t.act_bits() as u64;
-    let wt_bits = t.wt_bits() as u64;
+    let q = cfg.quant();
+    let act_bits = q.act_bits as u64;
+    let wt_bits = q.wt_bits as u64;
     let glb_bits = cfg.glb_kb as u64 * 1024 * 8;
 
     let ifmap_bits = layer.ifmap_elems() * act_bits;
@@ -100,7 +100,7 @@ pub fn layer_traffic(cfg: &AcceleratorConfig, layer: &Layer, perf: &LayerPerf) -
     // Psum spill: the psum spad must hold one output-row segment
     // (out_hw-wide at psum precision). If it can't, partial sums spill to
     // the GLB once per missing segment (read + write).
-    let psum_bits = t.psum_bits() as u64;
+    let psum_bits = q.psum_bits as u64;
     let seg_need = layer.out_hw().min(cfg.pe_cols) as u64 * psum_bits;
     let seg_have = (cfg.spad_psum_b as u64 * 8).max(1);
     let psum_segments = seg_need.div_ceil(seg_have);
@@ -117,7 +117,7 @@ pub fn layer_traffic(cfg: &AcceleratorConfig, layer: &Layer, perf: &LayerPerf) -
         0
     };
 
-    let glb_word = cfg.pe_type.act_bits().max(8) as u64;
+    let glb_word = q.act_bits.max(8) as u64;
     let glb_bits_moved = 2 * (dram_ifmap_bits + dram_filter_bits + dram_ofmap_bits)
         + spad_refill_bits
         + psum_spill_bits

@@ -22,13 +22,14 @@
 //! fallback.
 
 use qappa::api::{
-    AnalyzeRequest, BackendChoice, FitRequest, Qappa, QappaError, ServeOptions, SynthRequest,
-    WorkloadsRequest, WorkloadsResponse,
+    AnalyzeRequest, BackendChoice, FitRequest, PrecisionRequest, Qappa, QappaError, ServeOptions,
+    SynthRequest, WorkloadsRequest, WorkloadsResponse,
 };
-use qappa::config::{AcceleratorConfig, PeType};
+use qappa::config::{AcceleratorConfig, MacKind, PeType};
+use qappa::coordinator::precision::parse_bits_axis;
 use qappa::coordinator::report::{
     dse_scatter_table, dse_stats_table, dse_summary_table, fig2_table, multi_summary_table,
-    sweep_stats_table, workload_table,
+    precision_summary_table, sweep_stats_table, workload_table,
 };
 use qappa::coordinator::{DseOptions, NamedWorkload};
 use qappa::util::cli::Args;
@@ -100,6 +101,14 @@ SUBCOMMANDS
                                          a comma list sweeps all workloads in
                                          one streaming pass (models trained
                                          once, cross-workload summary table)
+            [--act-bits A --wt-bits W [--psum-bits P|auto] [--mac M]
+             --precision SPEC,SPEC,...]  precision-grid DSE: sweep arbitrary
+                                         bit widths (ranges LO:HI[:STEP] or
+                                         comma lists; --mac fp|int|light<n>)
+                                         and/or explicit precision labels
+                                         through one unified cross-precision
+                                         model, one report row per precision
+                                         cell (docs/PRECISION.md)
   figures   [--all --backend ... --out DIR]
                                          regenerate every figure into CSVs
   rtl       --pe-type T [--out FILE]     emit generated Verilog
@@ -131,8 +140,13 @@ per-shard predict and dataflow evaluation).
 // ---------------------------------------------------------------------------
 
 fn parse_config(args: &Args) -> Result<AcceleratorConfig, QappaError> {
-    let ty = PeType::parse(args.require("pe-type")?)
-        .ok_or_else(|| QappaError::Config("unknown --pe-type (fp32|int16|lightpe1|lightpe2)".into()))?;
+    let ty = PeType::parse(args.require("pe-type")?).ok_or_else(|| {
+        QappaError::Config(
+            "unknown --pe-type (fp32|int16|lightpe1|lightpe2 or a<act>w<wt>p<psum>[-mac], \
+             e.g. a8w4p20-light1)"
+                .into(),
+        )
+    })?;
     let mut cfg = AcceleratorConfig::default_with(ty);
     cfg.pe_rows = args.get("rows", cfg.pe_rows)?;
     cfg.pe_cols = args.get("cols", cfg.pe_cols)?;
@@ -238,11 +252,106 @@ fn sanitize_name(name: &str) -> String {
         .collect()
 }
 
+/// Collect the precision-grid flags (`--act-bits --wt-bits --psum-bits
+/// --mac --precision`); `None` when the run is a classic per-type sweep.
+fn parse_precision_flags(args: &Args) -> Result<Option<PrecisionRequest>, QappaError> {
+    let act = args.opt("act-bits").map(str::to_string);
+    let wt = args.opt("wt-bits").map(str::to_string);
+    let psum = args.opt("psum-bits").map(str::to_string);
+    let mac = args.opt("mac").map(str::to_string);
+    let types = args.opt("precision").map(str::to_string);
+    if act.is_none() && wt.is_none() && psum.is_none() && mac.is_none() && types.is_none() {
+        return Ok(None);
+    }
+    let mut req = PrecisionRequest::default();
+    if let Some(s) = act {
+        req.act_bits = parse_bits_axis(&s, "act-bits")?;
+    }
+    if let Some(s) = wt {
+        req.wt_bits = parse_bits_axis(&s, "wt-bits")?;
+    }
+    if let Some(s) = psum {
+        if !s.eq_ignore_ascii_case("auto") {
+            req.psum_bits = parse_bits_axis(&s, "psum-bits")?;
+        }
+    }
+    if let Some(s) = mac {
+        req.mac = MacKind::parse(&s.to_ascii_lowercase()).ok_or_else(|| {
+            QappaError::Config(format!("--mac: unknown datapath '{s}' (expected fp|int|light<n>)"))
+        })?;
+    }
+    if let Some(s) = types {
+        req.types = s
+            .split(',')
+            .map(str::trim)
+            .filter(|t| !t.is_empty())
+            .map(str::to_string)
+            .collect();
+    }
+    Ok(Some(req))
+}
+
+/// `qappa explore --act-bits 4:16 --wt-bits 2:8 [...]`: precision-grid DSE
+/// through the chunked sweep engine, one report row per precision cell.
+fn cmd_dse_precision(
+    args: &Args,
+    specs: &[&str],
+    precision: PrecisionRequest,
+) -> Result<(), QappaError> {
+    let mut named = Vec::with_capacity(specs.len());
+    for spec in specs {
+        let (name, layers) = workloads::load(spec)?;
+        named.push(NamedWorkload::new(name, layers));
+    }
+    let grid = precision.resolve()?;
+    let session = session_from(args)?;
+    let out = args.opt("out").map(str::to_string);
+    if args.flag("scatter") || args.flag("stats") {
+        return Err(QappaError::Config(
+            "--scatter/--stats are not available for precision-grid runs yet".into(),
+        ));
+    }
+    args.finish()?;
+
+    let t0 = std::time::Instant::now();
+    let summaries = session.explore_precision(&named, &precision)?;
+    let dt = t0.elapsed().as_secs_f64();
+
+    println!(
+        "Precision-grid DSE over {} workload(s) — {} precision cells x {} configs, \
+         chunk={}, backend=native (unified {}-feature model), {:.2}s",
+        named.len(),
+        grid.len(),
+        session.options().space.len(),
+        session.options().chunk,
+        qappa::config::QUANT_NUM_FEATURES,
+        dt
+    );
+    for s in &summaries {
+        println!("anchor[{}]: {}", s.workload, s.anchor.cfg.key());
+    }
+    print!("{}", precision_summary_table(&summaries).render());
+    println!(
+        "[store] models trained: {} (cache hits: {})",
+        session.store().misses(),
+        session.store().hits()
+    );
+    if let Some(dir) = out {
+        let path = format!("{dir}/precision_summary.csv");
+        write_csv(&precision_summary_table(&summaries), &path)?;
+        println!("wrote {path}");
+    }
+    Ok(())
+}
+
 fn cmd_dse(args: &Args) -> Result<(), QappaError> {
     let spec = args.require("workload")?.to_string();
     let specs: Vec<&str> = spec.split(',').map(str::trim).filter(|s| !s.is_empty()).collect();
     if specs.is_empty() {
         return Err(QappaError::Workload("--workload: empty workload list".into()));
+    }
+    if let Some(precision) = parse_precision_flags(args)? {
+        return cmd_dse_precision(args, &specs, precision);
     }
     if specs.len() > 1 {
         return cmd_dse_multi(args, &specs);
@@ -438,12 +547,19 @@ fn cmd_analyze(args: &Args) -> Result<(), QappaError> {
         resp.ppa.fmax_mhz,
         resp.ppa.area_mm2
     );
-    let mut t = Table::new(&[
+    // Mixed-precision workloads get a precision column; plain runs keep
+    // the historical table byte-for-byte.
+    let mixed = resp.layers.iter().any(|l| l.precision.is_some());
+    let mut header = vec![
         "layer", "MACs_M", "cycles_k", "util", "stall_%", "dram_MB",
         "energy_mJ", "E_compute", "E_dram", "E_other",
-    ]);
+    ];
+    if mixed {
+        header.push("precision");
+    }
+    let mut t = Table::new(&header);
     for l in &resp.layers {
-        t.row(vec![
+        let mut row = vec![
             l.name.clone(),
             format!("{:.1}", l.macs as f64 / 1e6),
             format!("{:.0}", l.cycles as f64 / 1e3),
@@ -454,7 +570,11 @@ fn cmd_analyze(args: &Args) -> Result<(), QappaError> {
             format!("{:.3}", l.compute_mj),
             format!("{:.3}", l.dram_mj),
             format!("{:.3}", l.other_mj),
-        ]);
+        ];
+        if mixed {
+            row.push(l.precision.clone().unwrap_or_else(|| "-".to_string()));
+        }
+        t.row(row);
     }
     print!("{}", t.render());
     println!(

@@ -42,7 +42,7 @@ pub const REF_UTILIZATION: f64 = 0.85;
 fn noc_interface(cfg: &AcceleratorConfig) -> GateCounts {
     // Per-PE bus interface: tag match + FIFO slot + drivers, scaled by
     // operand width.
-    let w = cfg.pe_type.act_bits() as u64;
+    let w = cfg.quant().act_bits as u64;
     let per_pe = GateCounts {
         dff: 2 * w,
         mux2: 2 * w,
@@ -123,8 +123,9 @@ impl ArraySynth {
         // scale with the operand precision (act + weight), so quantized
         // PEs draw proportionally less buffer/NoC power — the
         // quantization-aware part of the power report.
-        let word_bits = self.pe.pe_type.act_bits() as f64;
-        let op_bits = (self.pe.pe_type.act_bits() + self.pe.pe_type.wt_bits()) as f64;
+        let q = self.pe.pe_type.spec();
+        let word_bits = q.act_bits as f64;
+        let op_bits = (q.act_bits + q.wt_bits) as f64;
         let glb_nw = (self.glb.access_energy_fj
             + WIRE_FJ_PER_BIT_MM * self.avg_wire_mm * word_bits)
             * GLB_ACCESS_PER_MAC

@@ -1,16 +1,25 @@
-//! Gate-level MAC datapath generators — one per PE type.
+//! Gate-level MAC datapath generators, parameterized by [`QuantSpec`].
 //!
 //! Each generator composes the standard-cell library into the arithmetic
 //! structure the paper's RTL generator would emit, returning gate counts and
-//! the combinational critical path.  The LightPE datapaths follow LightNN
-//! (Ding et al. 2018): the weight is encoded as one (LightPE-1) or two
-//! (LightPE-2) signed powers of two, so the multiplier collapses into a
-//! barrel shifter (+ an extra adder for the second term).
+//! the combinational critical path.  The datapaths are sized entirely from
+//! the quantization spec — multiplier dimensions from the operand widths,
+//! accumulators and shifters from the psum width, FP mantissa/exponent
+//! split from the format width — so *any* `a<act>w<wt>p<psum>-<mac>`
+//! precision synthesizes, not just the four presets.  The LightNN shift-add
+//! datapaths (Ding et al. 2018) encode the weight as `n` signed powers of
+//! two, so the multiplier collapses into `n` barrel shifts (+ carry-save
+//! merges for the extra terms).
+//!
+//! For the preset specs the generic builders emit exactly the gate
+//! structure (and therefore bit-identical PPA) of the historical
+//! hand-written FP32/INT16/LightPE generators — pinned by
+//! `tests/golden_presets.rs`.
 //!
 //! The same structural recipes are elaborated into real gate netlists by
 //! `crate::rtl::netlist`; a cross-check test there asserts the counts agree.
 
-use crate::config::PeType;
+use crate::config::{MacKind, PeType, QuantSpec};
 use crate::synth::gates::{GateCounts, GateLib};
 
 /// A synthesized combinational/pipelined block.
@@ -182,25 +191,64 @@ fn pipelined(pe_type: PeType, datapath: Block, out_width: u32, activity: f64) ->
     }
 }
 
-/// Build the MAC unit for a PE type.
+/// Build the MAC unit for a precision selector (preset or arbitrary spec).
 pub fn mac_unit(lib: &GateLib, pe_type: PeType) -> MacUnit {
-    match pe_type {
-        PeType::Fp32 => fp32_mac(lib),
-        PeType::Int16 => int16_mac(lib),
-        PeType::LightPe1 => light_mac(lib, PeType::LightPe1),
-        PeType::LightPe2 => light_mac(lib, PeType::LightPe2),
+    mac_unit_spec(lib, pe_type, pe_type.spec())
+}
+
+/// Build the MAC unit directly from a quantization spec.
+pub fn mac_unit_spec(lib: &GateLib, pe_type: PeType, q: QuantSpec) -> MacUnit {
+    match q.mac {
+        MacKind::Fp => fp_mac(lib, pe_type, q),
+        MacKind::IntExact => int_mac(lib, pe_type, q),
+        MacKind::Lightweight(_) => light_mac(lib, pe_type, q),
     }
 }
 
-/// IEEE-754 single-precision fused multiply-add.
-fn fp32_mac(lib: &GateLib) -> MacUnit {
-    let mant_mult = array_multiplier(lib, 24, 24);
-    let exp_add = ripple_adder(lib, 8);
-    let align = barrel_shifter(lib, 48, 6);
-    let mant_add = cla_adder(lib, 48);
-    let lzc = leading_zero_count(lib, 48);
-    let norm = barrel_shifter(lib, 48, 6);
-    let round = ripple_adder(lib, 12);
+/// ceil(log2(n)) for shifter/lookahead staging (n >= 1 -> >= 1 stage).
+fn log2_stages(n: u32) -> u32 {
+    let mut stages = 0u32;
+    while (1u64 << stages) < n as u64 {
+        stages += 1;
+    }
+    stages.max(1)
+}
+
+/// Floating-point fused multiply-add, sized from the format width
+/// (`max(act, wt)`): IEEE-style exponent split, mantissa multiplier with
+/// hidden bit, double-width align/normalize shifters.  At `a32w32p32-fp`
+/// this is exactly the historical FP32 FMA datapath.
+fn fp_mac(lib: &GateLib, pe_type: PeType, q: QuantSpec) -> MacUnit {
+    let w = q.act_bits.max(q.wt_bits);
+    // IEEE-style exponent widths: 5 (half) / 8 (single) / 11 (double).
+    let exp = if w <= 16 {
+        5
+    } else if w <= 32 {
+        8
+    } else {
+        11
+    };
+    // Mantissa including the hidden bit (w=32 -> 24).  The exponent field
+    // widens in steps at the format boundaries, so the raw `w - exp` dips
+    // there; flooring at the previous format's mantissa keeps datapath
+    // cost monotone in the operand width (pinned by the precision
+    // property tests) without moving any of the standard formats.
+    let mant_at = |w: u32, exp: u32| (w - w.min(exp)).max(2);
+    let mant = if w <= 16 {
+        mant_at(w, 5)
+    } else if w <= 32 {
+        mant_at(w, 8).max(mant_at(16, 5))
+    } else {
+        mant_at(w, 11).max(mant_at(32, 8))
+    };
+    let wide = 2 * mant; // product / alignment width
+    let mant_mult = array_multiplier(lib, mant, mant);
+    let exp_add = ripple_adder(lib, exp);
+    let align = barrel_shifter(lib, wide, log2_stages(wide));
+    let mant_add = cla_adder(lib, wide);
+    let lzc = leading_zero_count(lib, wide);
+    let norm = barrel_shifter(lib, wide, log2_stages(wide));
+    let round = ripple_adder(lib, mant / 2);
     // Exception/sign/flag logic.
     let misc = Block {
         counts: GateCounts { nand2: 220, inv: 90, or2: 60, ..Default::default() },
@@ -215,50 +263,59 @@ fn fp32_mac(lib: &GateLib) -> MacUnit {
         .then(&round)
         .then(&misc);
     // Multiplier arrays toggle heavily; FP datapath average ~0.25.
-    pipelined(PeType::Fp32, datapath, 32, 0.25)
+    pipelined(pe_type, datapath, q.psum_bits, 0.25)
 }
 
-/// 16-bit integer MAC with a 32-bit accumulator.
-fn int16_mac(lib: &GateLib) -> MacUnit {
-    let mult = array_multiplier(lib, 16, 16);
-    let acc = cla_adder(lib, 32);
+/// Exact integer MAC: `act x wt` Baugh-Wooley array multiplier feeding a
+/// psum-wide carry-lookahead accumulator (INT16 = `a16w16p32-int`).
+fn int_mac(lib: &GateLib, pe_type: PeType, q: QuantSpec) -> MacUnit {
+    let mult = array_multiplier(lib, q.act_bits, q.wt_bits);
+    let acc = cla_adder(lib, q.psum_bits);
     let datapath = mult.then(&acc);
-    pipelined(PeType::Int16, datapath, 32, 0.28)
+    pipelined(pe_type, datapath, q.psum_bits, 0.28)
 }
 
-/// LightNN shift-add MAC: 8-bit activation, weight encoded as
-/// `shift_terms` signed powers of two; accumulator width from the PE type.
-fn light_mac(lib: &GateLib, pe_type: PeType) -> MacUnit {
-    debug_assert!(pe_type.is_light());
-    let acc_w = pe_type.psum_bits();
+/// LightNN shift-add MAC: the weight is encoded as `shift_terms` signed
+/// powers of two; shift range covers the activation width, accumulator
+/// width from the spec.
+fn light_mac(lib: &GateLib, pe_type: PeType, q: QuantSpec) -> MacUnit {
+    debug_assert!(q.is_light());
+    let acc_w = q.psum_bits;
+    let terms = q.shift_terms();
+    // Barrel stages cover shifts 0..act_bits-1 (8b act -> 3 stages).
+    let shift_stages = log2_stages(q.act_bits);
     // Weight decode: split the packed weight into per-term (sign, shift).
     let decode = Block {
         counts: GateCounts { nand2: 12, inv: 6, ..Default::default() },
         crit_path_ps: 2.0 * lib.nand2.delay_ps,
     };
-    // One shifted term: 3-stage barrel shift (range 0..7) widened to the
-    // accumulator, then a conditional negate for the sign.
-    let term = barrel_shifter(lib, acc_w, 3).then(&cond_negate(lib, acc_w));
+    // One shifted term: barrel shift widened to the accumulator, then a
+    // conditional negate for the sign.
+    let term = barrel_shifter(lib, acc_w, shift_stages).then(&cond_negate(lib, acc_w));
     let mut datapath = decode.then(&term);
-    if pe_type.shift_terms() == 2 {
-        // Second term is generated in parallel; the two terms and the
-        // incoming psum merge through a 3:2 carry-save stage (one FA row)
-        // before the single carry-propagate accumulator below — so the
-        // second term costs area but almost no latency.
-        let term2 = barrel_shifter(lib, acc_w, 3).then(&cond_negate(lib, acc_w));
+    for _ in 1..terms {
+        // Extra terms are generated in parallel; each merges with the
+        // running partial through a 3:2 carry-save stage (one FA row)
+        // before the single carry-propagate accumulator below — so extra
+        // terms cost area but almost no latency.
+        let term_n = barrel_shifter(lib, acc_w, shift_stages).then(&cond_negate(lib, acc_w));
         let csa = Block {
             counts: GateCounts { fa: acc_w as u64, ..Default::default() },
             crit_path_ps: lib.fa.delay_ps,
         };
-        datapath = datapath.beside(&term2).then(&csa);
+        datapath = datapath.beside(&term_n).then(&csa);
     }
     // Accumulate into the partial sum.
     let datapath = datapath.then(&cla_adder(lib, acc_w));
-    // Shift networks toggle sparsely compared to multiplier arrays; in
-    // LightPE-2 the second term is gated off for the ~40% of LightNN
-    // weights that one power-of-two already represents, lowering the
-    // average node activity further.
-    let activity = if pe_type.shift_terms() == 2 { 0.15 } else { 0.18 };
+    // Shift networks toggle sparsely compared to multiplier arrays; with
+    // more terms the extra shifters are gated off for the weights that
+    // fewer powers of two already represent, lowering the average node
+    // activity (LightPE-1 = 0.18, LightPE-2 = 0.15).
+    let activity = match terms {
+        1 => 0.18,
+        2 => 0.15,
+        n => (0.15 - 0.01 * (n as f64 - 2.0)).max(0.05),
+    };
     pipelined(pe_type, datapath, acc_w, activity)
 }
 
@@ -361,5 +418,95 @@ mod tests {
         let lp = mac_unit(&l, PeType::LightPe1);
         assert!(fp.pipeline_stages > lp.pipeline_stages);
         assert!(lp.pipeline_stages >= 1);
+    }
+
+    #[test]
+    fn preset_specs_reproduce_legacy_datapaths_exactly() {
+        // The tentpole identity: building each preset through the generic
+        // spec-driven path must give bit-identical gate counts, critical
+        // paths, stages and activity to the historical hand-written
+        // generators (reconstructed here from the public combinators).
+        let l = lib();
+
+        // legacy INT16: 16x16 multiplier + 32b CLA, out 32, activity 0.28
+        let legacy_i16 = array_multiplier(&l, 16, 16).then(&cla_adder(&l, 32));
+        let i16 = mac_unit(&l, PeType::Int16);
+        assert_eq!(i16.crit_path_ps, legacy_i16.crit_path_ps);
+        assert_eq!(i16.pipeline_stages, (legacy_i16.crit_path_ps / 900.0).ceil() as u32);
+        let mut want = legacy_i16.counts;
+        want.dff += 32 * 3 / 2 * (i16.pipeline_stages as u64 - 1) + 32;
+        assert_eq!(i16.counts, want);
+        assert_eq!(i16.activity, 0.28);
+
+        // legacy FP32: 24x24 mantissa mult || 8b exp add, 48b align/add/
+        // lzc/norm, 12b round, misc block
+        let misc = Block {
+            counts: GateCounts { nand2: 220, inv: 90, or2: 60, ..Default::default() },
+            crit_path_ps: 2.0 * l.nand2.delay_ps,
+        };
+        let legacy_fp = array_multiplier(&l, 24, 24)
+            .beside(&ripple_adder(&l, 8))
+            .then(&barrel_shifter(&l, 48, 6))
+            .then(&cla_adder(&l, 48))
+            .then(&leading_zero_count(&l, 48))
+            .then(&barrel_shifter(&l, 48, 6))
+            .then(&ripple_adder(&l, 12))
+            .then(&misc);
+        let fp = mac_unit(&l, PeType::Fp32);
+        assert_eq!(fp.crit_path_ps, legacy_fp.crit_path_ps);
+        assert_eq!(fp.activity, 0.25);
+
+        // legacy LightPE-1/2: decode + 3-stage barrel terms + CSA merge +
+        // CLA accumulate at the preset accumulator width
+        for (t, acc_w, terms, activity) in
+            [(PeType::LightPe1, 20u32, 1u32, 0.18), (PeType::LightPe2, 24, 2, 0.15)]
+        {
+            let decode = Block {
+                counts: GateCounts { nand2: 12, inv: 6, ..Default::default() },
+                crit_path_ps: 2.0 * l.nand2.delay_ps,
+            };
+            let term = barrel_shifter(&l, acc_w, 3).then(&cond_negate(&l, acc_w));
+            let mut legacy = decode.then(&term);
+            if terms == 2 {
+                let term2 = barrel_shifter(&l, acc_w, 3).then(&cond_negate(&l, acc_w));
+                let csa = Block {
+                    counts: GateCounts { fa: acc_w as u64, ..Default::default() },
+                    crit_path_ps: l.fa.delay_ps,
+                };
+                legacy = legacy.beside(&term2).then(&csa);
+            }
+            let legacy = legacy.then(&cla_adder(&l, acc_w));
+            let got = mac_unit(&l, t);
+            assert_eq!(got.crit_path_ps, legacy.crit_path_ps, "{t:?}");
+            assert_eq!(got.activity, activity, "{t:?}");
+            let mut want = legacy.counts;
+            want.dff += acc_w as u64 * 3 / 2 * (got.pipeline_stages as u64 - 1) + acc_w as u64;
+            assert_eq!(got.counts, want, "{t:?}");
+        }
+    }
+
+    #[test]
+    fn arbitrary_precision_macs_synthesize_and_scale() {
+        let l = lib();
+        // 4-bit int MAC must be far cheaper than INT16
+        let q4 = crate::config::QuantSpec::new(4, 4, 12, crate::config::MacKind::IntExact).unwrap();
+        let m4 = mac_unit_spec(&l, PeType::from_spec(q4), q4);
+        let m16 = mac_unit(&l, PeType::Int16);
+        assert!(m4.area_um2(&l) < m16.area_um2(&l) / 3.0);
+        assert!(m4.energy_per_mac_fj(&l) < m16.energy_per_mac_fj(&l) / 3.0);
+        // a 3-term lightweight MAC costs more than the 2-term preset at the
+        // same widths
+        let q3 = crate::config::QuantSpec::new(8, 12, 24, crate::config::MacKind::Lightweight(3)).unwrap();
+        let m3 = mac_unit_spec(&l, PeType::from_spec(q3), q3);
+        let m2 = mac_unit(&l, PeType::LightPe2);
+        assert!(m3.area_um2(&l) > m2.area_um2(&l));
+        // fp16 sits well below fp32
+        let qh = crate::config::QuantSpec::new(16, 16, 16, crate::config::MacKind::Fp).unwrap();
+        let mh = mac_unit_spec(&l, PeType::from_spec(qh), qh);
+        let mf = mac_unit(&l, PeType::Fp32);
+        assert!(mh.area_um2(&l) < mf.area_um2(&l));
+        for m in [&m4, &m3, &mh] {
+            assert!(m.fmax_mhz() > 100.0 && m.pipeline_stages >= 1);
+        }
     }
 }

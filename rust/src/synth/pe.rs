@@ -5,9 +5,9 @@
 //! precision-configurable MAC, plus a small control FSM and operand/result
 //! registers.
 
-use crate::config::{AcceleratorConfig, PeType};
+use crate::config::{AcceleratorConfig, PeType, QuantSpec};
 use crate::synth::gates::{GateCounts, GateLib};
-use crate::synth::mac::{mac_unit, MacUnit};
+use crate::synth::mac::{mac_unit_spec, MacUnit};
 use crate::synth::sram::{storage, SramMacro};
 
 /// Synthesized view of one PE.
@@ -23,29 +23,32 @@ pub struct PeSynth {
 }
 
 /// Control overhead: address counters, FSM, handshake — roughly constant
-/// per PE in the paper's generator.
-fn control_block(pe_type: PeType) -> GateCounts {
+/// per PE in the paper's generator, with operand steering sized by the
+/// activation width.
+fn control_block(q: QuantSpec) -> GateCounts {
     GateCounts {
         dff: 55,
         nand2: 150,
         inv: 70,
-        mux2: 32 + pe_type.act_bits() as u64, // operand steering
+        mux2: 32 + q.act_bits as u64, // operand steering
         ..Default::default()
     }
 }
 
-/// Assemble (and "synthesize") one PE for a configuration.
+/// Assemble (and "synthesize") one PE for a configuration.  Every width —
+/// MAC datapath, scratchpad word granularity, operand steering — is sized
+/// from the config's resolved [`QuantSpec`].
 pub fn synthesize_pe(lib: &GateLib, cfg: &AcceleratorConfig) -> PeSynth {
-    let t = cfg.pe_type;
+    let q = cfg.quant();
     PeSynth {
-        pe_type: t,
-        mac: mac_unit(lib, t),
+        pe_type: cfg.pe_type,
+        mac: mac_unit_spec(lib, cfg.pe_type, q),
         // Scratchpad capacities are *bytes of storage hardware*; the word
-        // width (= access granularity) follows the PE type's precision.
-        spad_ifmap: storage(cfg.spad_ifmap_b as u64, t.act_bits()),
-        spad_filter: storage(cfg.spad_filter_b as u64, t.wt_bits()),
-        spad_psum: storage(cfg.spad_psum_b as u64, t.psum_bits()),
-        ctrl: control_block(t),
+        // width (= access granularity) follows the spec's operand widths.
+        spad_ifmap: storage(cfg.spad_ifmap_b as u64, q.act_bits),
+        spad_filter: storage(cfg.spad_filter_b as u64, q.wt_bits),
+        spad_psum: storage(cfg.spad_psum_b as u64, q.psum_bits),
+        ctrl: control_block(q),
     }
 }
 

@@ -118,6 +118,24 @@ pub fn gen_layer(rng: &mut Rng) -> crate::dataflow::Layer {
     }
 }
 
+/// Draw a random, always-valid quantization spec spanning every MAC kind:
+/// operands in 2..=32 bits, accumulator at least as wide as both operands
+/// (the [`crate::config::QuantSpec::validate`] invariants hold by
+/// construction).
+pub fn gen_quant_spec(rng: &mut Rng) -> crate::config::QuantSpec {
+    use crate::config::{MacKind, QuantSpec};
+    let mac = match rng.below(3) {
+        0 => MacKind::IntExact,
+        1 => MacKind::Lightweight(1 + gen_u32(rng, 0, 2)),
+        _ => MacKind::Fp,
+    };
+    let act_bits = gen_u32(rng, 2, 32);
+    let wt_bits = gen_u32(rng, 2, 32);
+    let floor = act_bits.max(wt_bits);
+    let psum_bits = gen_u32(rng, floor, (2 * floor + 8).min(64));
+    QuantSpec { act_bits, wt_bits, psum_bits, mac }
+}
+
 /// Draw a random accelerator configuration from sane generator bounds.
 pub fn gen_config(rng: &mut Rng) -> crate::config::AcceleratorConfig {
     use crate::config::{AcceleratorConfig, ALL_PE_TYPES};
@@ -172,6 +190,24 @@ mod tests {
         for _ in 0..200 {
             gen_config(&mut rng).validate().expect("generated config valid");
         }
+    }
+
+    #[test]
+    fn gen_quant_spec_is_valid_and_covers_kinds() {
+        use crate::config::MacKind;
+        let mut rng = Rng::new(21);
+        let mut kinds = std::collections::BTreeSet::new();
+        for _ in 0..400 {
+            let q = gen_quant_spec(&mut rng);
+            q.validate().expect("generated spec valid");
+            assert!(q.psum_bits >= q.act_bits && q.psum_bits >= q.wt_bits);
+            kinds.insert(match q.mac {
+                MacKind::Fp => "fp",
+                MacKind::IntExact => "int",
+                MacKind::Lightweight(_) => "light",
+            });
+        }
+        assert_eq!(kinds.len(), 3, "generator must cover all MAC kinds: {kinds:?}");
     }
 
     #[test]

@@ -106,6 +106,9 @@ pub fn from_json_value(v: &Json) -> Result<(String, Vec<Layer>), QappaError> {
 
 /// Serialize a workload into the same JSON schema [`from_json`] reads
 /// (round-trip tested). Useful for exporting the built-ins as templates.
+/// Layers carrying a per-layer precision override serialize it as a
+/// `"precision"` label; plain layers omit the field, keeping the schema
+/// byte-identical for single-precision models.
 pub fn to_json(name: &str, layers: &[Layer]) -> Json {
     let num = |x: u32| Json::Num(x as f64);
     let arr = layers
@@ -136,6 +139,9 @@ pub fn to_json(name: &str, layers: &[Layer]) -> Json {
                     pairs.push(("pad", num(l.pad)));
                     pairs.push(("groups", num(l.groups)));
                 }
+            }
+            if let Some(q) = l.quant {
+                pairs.push(("precision", Json::Str(crate::config::PeType::from_spec(q).label())));
             }
             obj(pairs)
         })
@@ -173,6 +179,40 @@ fn layer_from_json(v: &Json, idx: usize) -> Result<Layer, QappaError> {
         .unwrap_or_else(|| format!("layer{idx}"));
     let kind = v.get("type").as_str().unwrap_or("conv");
     let what = format!("layer {idx} ('{name}')");
+    // Optional per-layer precision override: a preset name or a generic
+    // spec label. Width-range violations surface through Layer::validate
+    // (called by the loader) with the offending field named.
+    let quant = match v.get("precision") {
+        Json::Null => None,
+        other => {
+            let s = other.as_str().ok_or_else(|| {
+                QappaError::Workload(format!("{what}: field \"precision\" must be a string"))
+            })?;
+            Some(
+                crate::config::PeType::parse(s)
+                    .ok_or_else(|| {
+                        QappaError::Workload(format!(
+                            "{what}: unknown precision '{s}' (expected a preset name or a<act>w<wt>p<psum>[-mac])"
+                        ))
+                    })?
+                    .spec(),
+            )
+        }
+    };
+    let layer = layer_shape_from_json(v, kind, &name, &what)?;
+    Ok(match quant {
+        Some(q) => layer.with_precision(q),
+        None => layer,
+    })
+}
+
+fn layer_shape_from_json(
+    v: &Json,
+    kind: &str,
+    name: &str,
+    what: &str,
+) -> Result<Layer, QappaError> {
+    let name = name.to_string();
     match kind {
         "fc" => Ok(Layer::fc(&name, req_u32(v, "c", &what)?, req_u32(v, "k", &what)?)),
         "pw" => {
@@ -239,6 +279,7 @@ fn layer_from_json(v: &Json, idx: usize) -> Result<Layer, QappaError> {
                 stride: opt_u32(v, "stride", 1, &what)?,
                 pad: opt_u32(v, "pad", rs / 2, &what)?,
                 groups,
+                quant: None,
             })
         }
         other => Err(QappaError::Workload(format!(
@@ -582,6 +623,65 @@ mod tests {
         assert_eq!(layers[1].name, "layer1");
         assert_eq!(layers[3].groups, 4);
         assert!(layers[4].is_fc());
+    }
+
+    #[test]
+    fn per_layer_precision_round_trips_through_json() {
+        use crate::config::{PeType, QuantSpec};
+        // overrides on every layer kind survive serialize -> parse
+        let layers = vec![
+            Layer::conv("c", 3, 16, 32, 32, 3, 2, 1).with_precision(QuantSpec::int(8, 8)),
+            Layer::dw("d", 16, 16, 3, 1, 1).with_precision(QuantSpec::int(4, 4)),
+            Layer::pw("p", 16, 32, 16).with_precision(PeType::LightPe1.spec()),
+            Layer::fc("f", 512, 10), // no override
+        ];
+        let text = to_json("mixed", &layers).to_string();
+        assert!(text.contains("\"precision\""));
+        assert!(text.contains("LightPE-1"), "preset-matching specs use preset labels: {text}");
+        let (name, back) = from_json(&text).unwrap();
+        assert_eq!(name, "mixed");
+        assert_eq!(back, layers, "override values must survive the round trip");
+        assert_eq!(back[3].quant, None, "absent field stays None");
+
+        // parse side: preset names and generic labels both load
+        let (_, parsed) = from_json(
+            r#"{"layers": [
+                {"type": "dw", "c": 16, "hw": 16, "rs": 3, "precision": "int16"},
+                {"type": "fc", "c": 64, "k": 10, "precision": "a6w3p12-light1"}
+            ]}"#,
+        )
+        .unwrap();
+        assert_eq!(parsed[0].quant, Some(PeType::Int16.spec()));
+        assert_eq!(parsed[1].quant.unwrap().label(), "a6w3p12-light1");
+    }
+
+    #[test]
+    fn precision_field_is_validated_at_the_json_boundary() {
+        // unknown label -> error naming the value
+        let e = from_json(
+            r#"{"layers": [{"type": "fc", "c": 8, "k": 8, "precision": "int99x"}]}"#,
+        )
+        .unwrap_err()
+        .to_string();
+        assert!(e.contains("int99x"), "{e}");
+        // non-string -> error naming the field
+        let e = from_json(r#"{"layers": [{"type": "fc", "c": 8, "k": 8, "precision": 8}]}"#)
+            .unwrap_err()
+            .to_string();
+        assert!(e.contains("precision"), "{e}");
+        // syntactically valid spec with bad widths -> rejected by
+        // Layer::validate with the offending field named
+        for (label, field) in [
+            ("a0w8p16-int", "act_bits"),
+            ("a70w8p70-int", "act_bits"),
+            ("a16w8p8-int", "psum_bits"),
+        ] {
+            let text = format!(
+                r#"{{"layers": [{{"type": "fc", "c": 8, "k": 8, "precision": "{label}"}}]}}"#
+            );
+            let e = from_json(&text).unwrap_err().to_string();
+            assert!(e.contains(field), "{label}: {e}");
+        }
     }
 
     #[test]

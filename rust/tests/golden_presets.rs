@@ -1,0 +1,197 @@
+//! Golden snapshot tests for the four legacy PE presets.
+//!
+//! The parameterized-`QuantSpec` refactor must reproduce the closed-enum
+//! era bit-for-bit.  Two golden layers pin that:
+//!
+//! * `golden/presets_expected.json` — **checked in**, integer-exact
+//!   expectations (preset spec table, MAC datapath gate counts / critical
+//!   paths / pipeline depths, built-in workload MAC totals) independently
+//!   derived from the documented model, so a drift in either the spec
+//!   table or the generic datapath builders fails loudly;
+//! * `golden/ppa_presets.json` and `golden/dse_tiny_summary.csv` —
+//!   **blessed snapshots** of the full floating-point PPA / DSE report
+//!   surface.  Missing files are written from the current build (and the
+//!   test passes with a notice); present files must match byte-for-byte.
+//!   Set `QAPPA_BLESS=1` to re-bless after a deliberate model change.
+
+use std::path::PathBuf;
+
+use qappa::config::{AcceleratorConfig, ALL_PE_TYPES};
+use qappa::coordinator::report::dse_summary_table;
+use qappa::coordinator::{run_dse, DseOptions};
+use qappa::dataflow::Layer;
+use qappa::model::native::NativeBackend;
+use qappa::model::CvConfig;
+use qappa::synth::gates::GateLib;
+use qappa::synth::mac::mac_unit;
+use qappa::synth::{synthesize, synthesize_clean};
+use qappa::util::json::{obj, Json};
+use qappa::workloads;
+
+/// Locate the golden directory relative to the crate manifest (the repo
+/// layout keeps integration tests under `rust/tests/`).
+fn golden_dir() -> PathBuf {
+    let manifest = PathBuf::from(env!("CARGO_MANIFEST_DIR"));
+    for candidate in [manifest.join("rust/tests/golden"), manifest.join("tests/golden")] {
+        if candidate.exists() {
+            return candidate;
+        }
+    }
+    // First run in a layout without the checked-in dir: create next to the
+    // manifest so blessed snapshots have a stable home.
+    let dir = manifest.join("rust/tests/golden");
+    std::fs::create_dir_all(&dir).expect("create golden dir");
+    dir
+}
+
+fn load_golden(name: &str) -> Option<Json> {
+    let path = golden_dir().join(name);
+    let text = std::fs::read_to_string(&path).ok()?;
+    Some(Json::parse(&text).unwrap_or_else(|e| panic!("golden {name}: {e}")))
+}
+
+/// Bless-or-compare a text snapshot: write when absent (or QAPPA_BLESS=1),
+/// byte-compare otherwise.
+fn bless_or_compare(name: &str, current: &str) {
+    let path = golden_dir().join(name);
+    let bless = std::env::var_os("QAPPA_BLESS").is_some() || !path.exists();
+    if bless {
+        std::fs::write(&path, current).expect("write golden snapshot");
+        eprintln!("[golden] blessed {}", path.display());
+        return;
+    }
+    let expected = std::fs::read_to_string(&path).expect("read golden snapshot");
+    assert_eq!(
+        current,
+        expected,
+        "golden snapshot {name} drifted; rerun with QAPPA_BLESS=1 only for a deliberate model change"
+    );
+}
+
+#[test]
+fn preset_spec_table_and_mac_datapaths_match_checked_in_golden() {
+    let golden = load_golden("presets_expected.json")
+        .expect("checked-in golden presets_expected.json must exist");
+    let lib = GateLib::freepdk45();
+    let gate_fields = [
+        "inv", "nand2", "nor2", "and2", "or2", "xor2", "mux2", "fa", "ha", "dff",
+    ];
+    for ty in ALL_PE_TYPES {
+        let label = ty.label();
+        let want = golden.get("presets").get(&label);
+        assert!(want.as_obj().is_some(), "golden entry for {label}");
+        let q = ty.spec();
+        assert_eq!(q.act_bits as usize, want.get("act_bits").as_usize().unwrap(), "{label} act");
+        assert_eq!(q.wt_bits as usize, want.get("wt_bits").as_usize().unwrap(), "{label} wt");
+        assert_eq!(q.psum_bits as usize, want.get("psum_bits").as_usize().unwrap(), "{label} psum");
+        assert_eq!(
+            q.shift_terms() as usize,
+            want.get("shift_terms").as_usize().unwrap(),
+            "{label} terms"
+        );
+
+        let mac = mac_unit(&lib, ty);
+        // Critical paths are integer-valued (sums of integer cell delays),
+        // so exact equality is the right assertion.
+        assert_eq!(
+            mac.crit_path_ps,
+            want.get("crit_path_ps").as_usize().unwrap() as f64,
+            "{label} critical path"
+        );
+        assert_eq!(
+            mac.pipeline_stages as usize,
+            want.get("pipeline_stages").as_usize().unwrap(),
+            "{label} pipeline depth"
+        );
+        let got = [
+            mac.counts.inv,
+            mac.counts.nand2,
+            mac.counts.nor2,
+            mac.counts.and2,
+            mac.counts.or2,
+            mac.counts.xor2,
+            mac.counts.mux2,
+            mac.counts.fa,
+            mac.counts.ha,
+            mac.counts.dff,
+        ];
+        for (field, g) in gate_fields.iter().zip(got) {
+            let w = want.get("gates").get(field).as_usize().unwrap_or(0) as u64;
+            assert_eq!(g, w, "{label} gate count '{field}'");
+        }
+    }
+}
+
+#[test]
+fn builtin_workload_mac_totals_match_checked_in_golden() {
+    let golden = load_golden("presets_expected.json")
+        .expect("checked-in golden presets_expected.json must exist");
+    for name in workloads::WORKLOAD_NAMES {
+        let macs: u64 = workloads::by_name(name).unwrap().iter().map(|l| l.macs()).sum();
+        let want = golden.get("workload_macs").get(name).as_usize().unwrap() as u64;
+        assert_eq!(macs, want, "{name} MAC total drifted");
+    }
+}
+
+#[test]
+fn golden_preset_ppa_snapshot_is_stable() {
+    // Full floating-point PPA surface of `qappa synth` for each preset at
+    // the default config: jittered and jitter-free triples, serialized
+    // with shortest-round-trip f64 formatting so byte equality == bit
+    // equality.
+    let mut entries = Vec::new();
+    for ty in ALL_PE_TYPES {
+        let cfg = AcceleratorConfig::default_with(ty);
+        let noisy = synthesize(&cfg);
+        let clean = synthesize_clean(&cfg);
+        entries.push((
+            ty.label(),
+            obj(vec![
+                ("config", Json::Str(cfg.key())),
+                (
+                    "synthesized",
+                    obj(vec![
+                        ("power_mw", Json::Num(noisy.power_mw)),
+                        ("fmax_mhz", Json::Num(noisy.fmax_mhz)),
+                        ("area_mm2", Json::Num(noisy.area_mm2)),
+                    ]),
+                ),
+                (
+                    "jitter_free",
+                    obj(vec![
+                        ("power_mw", Json::Num(clean.power_mw)),
+                        ("fmax_mhz", Json::Num(clean.fmax_mhz)),
+                        ("area_mm2", Json::Num(clean.area_mm2)),
+                    ]),
+                ),
+            ]),
+        ));
+    }
+    let snapshot = obj(entries.iter().map(|(k, v)| (k.as_str(), v.clone())).collect()).to_string();
+    bless_or_compare("ppa_presets.json", &snapshot);
+}
+
+#[test]
+fn golden_tiny_dse_summary_snapshot_is_stable() {
+    // End-to-end pipeline golden: train -> sweep -> ratios -> report for a
+    // small deterministic run; pins the whole `explore` surface (model
+    // selection, sweep order, tie-breaks, anchor choice, table rendering).
+    let backend = NativeBackend::new(7);
+    let opts = DseOptions {
+        space: qappa::coordinator::DesignSpace::tiny(),
+        train_per_type: 64,
+        cv: CvConfig { k: 3, degrees: vec![1, 2], lambdas: vec![1e-3, 1e-2], seed: 1 },
+        seed: 7,
+        workers: 4,
+        sigma: 0.02,
+        chunk: 16,
+        topk: 8,
+    };
+    let layers = vec![
+        Layer::conv("c1", 3, 16, 32, 32, 3, 1, 1),
+        Layer::conv("c2", 16, 32, 16, 16, 3, 1, 1),
+        Layer::fc("fc", 512, 10),
+    ];
+    let res = run_dse(&backend, &layers, "golden-tiny", &opts).expect("tiny dse");
+    bless_or_compare("dse_tiny_summary.csv", &dse_summary_table(&res).to_csv());
+}

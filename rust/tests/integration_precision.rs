@@ -1,0 +1,276 @@
+//! Precision-axis property and round-trip tests.
+//!
+//! Pins the quantization-parameterization invariants across subsystems:
+//! monotonicity of synthesized cost in every bit-width axis, accumulator
+//! validity enforcement at each boundary, streaming/serial equivalence of
+//! precision-grid sweeps at any chunk size, and per-layer precision
+//! overrides surviving the workload-JSON -> API -> report path.
+
+use qappa::api::{config_from_json, Qappa, WorkloadsRequest, WorkloadsResponse};
+use qappa::config::{
+    AcceleratorConfig, MacKind, PeType, QuantSpec, QUANT_NUM_FEATURES,
+};
+use qappa::coordinator::precision::train_quant_model;
+use qappa::coordinator::report::workload_table;
+use qappa::coordinator::sweep::{NamedWorkload, SweepEngine};
+use qappa::coordinator::{DesignSpace, DseOptions};
+use qappa::dataflow::Layer;
+use qappa::model::native::NativeBackend;
+use qappa::model::CvConfig;
+use qappa::synth::gates::GateLib;
+use qappa::synth::pe::synthesize_pe;
+use qappa::testkit::{forall, gen_quant_spec, gen_u32};
+use qappa::util::json::Json;
+use qappa::util::prng::Rng;
+use qappa::workloads;
+
+/// PE-level cost of a spec at a fixed mid-range geometry: (area um2,
+/// energy/MAC fJ, power mW at a fixed 500 MHz reference clock).  Power is
+/// compared at a *fixed* clock because each design's own fmax moves with
+/// pipeline-stage quantization; the physical monotonicity claim is about
+/// hardware cost per operation, not the free-running operating point.
+fn pe_cost(spec: QuantSpec) -> (f64, f64, f64) {
+    let lib = GateLib::freepdk45();
+    let cfg = AcceleratorConfig::default_with(PeType::from_spec(spec));
+    let pe = synthesize_pe(&lib, &cfg);
+    let area = pe.area_um2(&lib);
+    let energy = pe.energy_per_mac_fj(&lib);
+    // fJ * MHz = nW; 500 MHz reference.
+    let power_mw = (energy * 500.0 + pe.leakage_nw(&lib)) / 1e6;
+    (area, energy, power_mw)
+}
+
+#[test]
+fn prop_area_and_power_monotone_in_every_bit_width_axis() {
+    forall(
+        "PE area/energy/power non-decreasing per bit-width axis",
+        150,
+        31,
+        |rng: &mut Rng| {
+            let spec = gen_quant_spec(rng);
+            let axis = rng.below(3);
+            let delta = gen_u32(rng, 1, 4);
+            (spec, axis, delta)
+        },
+        |&(spec, axis, delta)| {
+            let mut wider = spec;
+            match axis {
+                0 => wider.act_bits += delta,
+                1 => wider.wt_bits += delta,
+                _ => wider.psum_bits += delta,
+            }
+            if wider.validate().is_err() {
+                return Ok(()); // stepped out of the valid region; vacuous
+            }
+            let (a0, e0, p0) = pe_cost(spec);
+            let (a1, e1, p1) = pe_cost(wider);
+            if a1 < a0 {
+                return Err(format!("area {a1} < {a0} ({spec:?} axis {axis} +{delta})"));
+            }
+            if e1 < e0 {
+                return Err(format!("energy {e1} < {e0} ({spec:?} axis {axis} +{delta})"));
+            }
+            if p1 < p0 {
+                return Err(format!("power {p1} < {p0} ({spec:?} axis {axis} +{delta})"));
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_generated_specs_always_satisfy_psum_invariant() {
+    forall(
+        "generator respects psum >= operands; violations reject",
+        200,
+        33,
+        gen_quant_spec,
+        |&spec| {
+            spec.validate().map_err(|e| e.to_string())?;
+            if spec.psum_bits < spec.act_bits.max(spec.wt_bits) {
+                return Err(format!("generator emitted narrow psum: {spec:?}"));
+            }
+            // shrinking the accumulator below either operand must reject,
+            // naming psum_bits
+            let mut narrow = spec;
+            narrow.psum_bits = spec.act_bits.max(spec.wt_bits).saturating_sub(1);
+            if narrow.psum_bits > 0 {
+                match narrow.validate() {
+                    Ok(()) => return Err(format!("narrow psum accepted: {narrow:?}")),
+                    Err(e) => {
+                        if !e.to_string().contains("psum_bits") {
+                            return Err(format!("error must name psum_bits: {e}"));
+                        }
+                    }
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+fn quant_opts(chunk: usize) -> DseOptions {
+    DseOptions {
+        space: DesignSpace::tiny(),
+        train_per_type: 96,
+        cv: CvConfig { k: 3, degrees: vec![1, 2], lambdas: vec![1e-3, 1e-2], seed: 1 },
+        seed: 7,
+        workers: 4,
+        sigma: 0.02,
+        chunk,
+        topk: 8,
+    }
+}
+
+#[test]
+fn precision_grid_parallel_sweep_matches_serial_at_any_chunk_size() {
+    // One combined pass over the quants-axis grid must be bit-identical at
+    // every chunk size, and identical to sweeping the cells serially one
+    // at a time — the streaming==eager guarantee extended to the
+    // precision axis.
+    let specs = vec![
+        PeType::parse("a4w4p8-int").unwrap(),
+        PeType::Int16,
+        PeType::parse("a8w8p16-int").unwrap(),
+    ];
+    let backend = NativeBackend::new(QUANT_NUM_FEATURES);
+    let base = quant_opts(0);
+    let model = train_quant_model(&backend, &base, &specs).unwrap();
+    let wl = vec![NamedWorkload::new("t", vec![Layer::conv("c", 8, 16, 16, 16, 3, 1, 1)])];
+
+    let combined = |chunk: usize| {
+        let mut opts = quant_opts(chunk);
+        opts.space = DesignSpace::tiny().with_quants(specs.clone());
+        SweepEngine::new(&backend, &opts)
+            .retain_all(true)
+            // the passed type is ignored when the quants axis is set
+            .sweep_type(&model, PeType::Fp32, &wl)
+            .unwrap()
+            .remove(0)
+    };
+    let reference = combined(0);
+    let ref_pa: Vec<f64> = reference
+        .points
+        .as_ref()
+        .unwrap()
+        .iter()
+        .map(|p| p.perf_per_area)
+        .collect();
+    assert_eq!(ref_pa.len(), 3 * DesignSpace::tiny().len());
+    for chunk in [1usize, 7, 64, 1000] {
+        let ts = combined(chunk);
+        let pa: Vec<f64> =
+            ts.points.as_ref().unwrap().iter().map(|p| p.perf_per_area).collect();
+        assert_eq!(pa, ref_pa, "chunk={chunk} point stream diverged");
+        assert_eq!(
+            ts.frontier_indices(),
+            reference.frontier_indices(),
+            "chunk={chunk} frontier diverged"
+        );
+        assert_eq!(
+            ts.best_perf_per_area().unwrap().cfg,
+            reference.best_perf_per_area().unwrap().cfg
+        );
+        assert_eq!(ts.best_energy().unwrap().cfg, reference.best_energy().unwrap().cfg);
+    }
+
+    // serial: one plain-space sweep per cell, concatenated in grid order
+    let serial_opts = quant_opts(16);
+    let engine = SweepEngine::new(&backend, &serial_opts).retain_all(true);
+    let mut serial_pa = Vec::new();
+    for spec in &specs {
+        let ts = engine.sweep_type(&model, *spec, &wl).unwrap().remove(0);
+        serial_pa.extend(ts.points.as_ref().unwrap().iter().map(|p| p.perf_per_area));
+    }
+    assert_eq!(serial_pa, ref_pa, "serial per-cell sweep diverged from the combined pass");
+}
+
+#[test]
+fn pe_type_parse_and_preset_round_trips() {
+    // presets: label round trip + case-insensitive aliases
+    for ty in qappa::config::ALL_PE_TYPES {
+        assert_eq!(PeType::parse(&ty.label()), Some(ty));
+        assert_eq!(PeType::parse(&ty.label().to_ascii_lowercase()), Some(ty));
+        assert_eq!(PeType::parse(&ty.label().to_ascii_uppercase()), Some(ty));
+    }
+    for (alias, ty) in [
+        ("LIGHTPE-1", PeType::LightPe1),
+        ("LightPe2", PeType::LightPe2),
+        ("Fp32", PeType::Fp32),
+        ("INT16", PeType::Int16),
+        ("A16W16P32-INT", PeType::Int16),
+        ("a8w4p20-light1", PeType::LightPe1),
+    ] {
+        assert_eq!(PeType::parse(alias), Some(ty), "{alias}");
+    }
+    // generic specs round trip through label -> parse -> label
+    let q = PeType::parse("a10w6p22-light2").unwrap();
+    assert_eq!(q.label(), "a10w6p22-light2");
+    assert!(!q.is_preset());
+
+    // unknown names reject at the JSON config boundary with an
+    // actionable error naming the value and the accepted grammar
+    let bad = Json::parse(r#"{"pe_type": "int99x"}"#).unwrap();
+    let e = config_from_json(&bad).unwrap_err();
+    assert_eq!(e.kind(), "protocol");
+    let msg = e.to_string();
+    assert!(msg.contains("int99x"), "{msg}");
+    assert!(msg.contains("fp32|int16|lightpe1|lightpe2"), "{msg}");
+    assert!(msg.contains("a<act>w<wt>p<psum>"), "{msg}");
+
+    // syntactically-valid but out-of-range specs reject via validate with
+    // the offending field named
+    let zero = Json::parse(r#"{"pe_type": "a0w4p8-int"}"#).unwrap();
+    let e = config_from_json(&zero).unwrap_err();
+    assert_eq!(e.kind(), "config");
+    assert!(e.to_string().contains("act_bits"), "{e}");
+}
+
+#[test]
+fn per_layer_overrides_survive_json_api_and_report_round_trips() {
+    // Build a mixed-precision model file: INT4 depthwise + LightPE-1 head.
+    let mut layers = workloads::mobilenetv2();
+    let int4 = QuantSpec::new(4, 4, 12, MacKind::IntExact).unwrap();
+    for l in layers.iter_mut().filter(|l| l.is_depthwise()) {
+        l.quant = Some(int4);
+    }
+    let head = layers.len() - 2;
+    layers[head].quant = Some(PeType::LightPe1.spec());
+    let text = workloads::to_json("mixed-mnv2", &layers).to_string();
+
+    // JSON ingestion preserves every override
+    let (name, parsed) = workloads::from_json(&text).unwrap();
+    assert_eq!(name, "mixed-mnv2");
+    assert_eq!(parsed, layers);
+
+    // API round trip: workloads detail -> wire JSON -> parse -> equal
+    let dir = std::env::temp_dir().join(format!("qappa_prec_{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("mixed-mnv2.json");
+    std::fs::write(&path, &text).unwrap();
+    let session = Qappa::builder().build();
+    let req = WorkloadsRequest { workload: Some(path.to_string_lossy().to_string()) };
+    let resp = session.workloads(&req).unwrap();
+    let wire = resp.to_json().to_string();
+    let back = WorkloadsResponse::from_json(&Json::parse(&wire).unwrap()).unwrap();
+    match (&resp, &back) {
+        (
+            WorkloadsResponse::Detail { layers: a, .. },
+            WorkloadsResponse::Detail { layers: b, .. },
+        ) => {
+            assert_eq!(a, b, "overrides must survive the wire round trip");
+            assert_eq!(a, &layers);
+        }
+        other => panic!("expected detail responses, got {other:?}"),
+    }
+
+    // report: the layer table grows a precision column naming the
+    // overrides, with '-' for inherit-from-config rows
+    let table = workload_table(&parsed).to_csv();
+    let header = table.lines().next().unwrap().to_string();
+    assert!(header.ends_with("precision"), "{header}");
+    assert!(table.contains("a4w4p12-int"), "{table}");
+    assert!(table.contains("LightPE-1"), "{table}");
+    assert!(table.contains(",-"), "{table}");
+    std::fs::remove_file(&path).ok();
+}

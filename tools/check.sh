@@ -11,6 +11,10 @@ run() {
 
 run cargo build --release
 run cargo test -q
+# Golden-snapshot gate: the 4 legacy PE presets must stay bit-identical to
+# the checked-in expectations (tests/golden_presets.rs). Run explicitly so
+# a drift is called out by name even when the full suite is skipped.
+run cargo test -q golden
 # clippy/fmt/doc are advisory in environments without the components installed
 if cargo clippy --version >/dev/null 2>&1; then
     run cargo clippy -q -- -D warnings
