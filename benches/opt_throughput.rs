@@ -1,0 +1,73 @@
+//! Bench: guided-optimizer throughput (evaluations/sec) and search quality
+//! (hypervolume vs budget) on the paper-scale space x MobileNetV1.
+//!
+//! Runs NSGA-II and the random baseline at increasing evaluation budgets
+//! through one warm unified cross-precision model, reporting evals/s plus
+//! the final archive hypervolume per (strategy, budget) cell — the
+//! hypervolume-vs-budget curve is the optimizer's perf trajectory, emitted
+//! machine-readable via `QAPPA_BENCH_JSON` (tools/bench.sh ->
+//! `BENCH_opt.json`).
+
+use qappa::config::ALL_PE_TYPES;
+use qappa::coordinator::{DseOptions, ModelStore};
+use qappa::model::native::NativeBackend;
+use qappa::opt::{
+    run_optimize, Constraints, Objective, OptOptions, OptProblem, SearchSpace, StrategyKind,
+};
+use qappa::util::bench::{Bench, BenchReport};
+use qappa::workloads;
+
+fn main() {
+    let backend = NativeBackend::new(qappa::config::QUANT_NUM_FEATURES);
+    let mut opts = DseOptions::default();
+    opts.train_per_type = 192;
+    let store = ModelStore::new();
+    let palette = ALL_PE_TYPES.to_vec();
+    let model = store
+        .get_or_train_quant(&backend, &opts, &palette)
+        .expect("train unified model");
+    let layers = workloads::mobilenetv1();
+
+    println!(
+        "=== guided optimizer: {} hw points x {} precision cells, {} layers (mobilenetv1) ===",
+        opts.space.len(),
+        palette.len(),
+        layers.len()
+    );
+    let mut report = BenchReport::new();
+    for budget in [1000usize, 4000] {
+        for kind in [StrategyKind::Nsga2, StrategyKind::Random] {
+            let label = kind.label();
+            let mut hv = 0.0f64;
+            let mut evals = 0usize;
+            let mut frontier = 0usize;
+            let r = Bench::new(&format!("opt/{label}/budget={budget}"))
+                .warmup(0)
+                .samples(3)
+                .run_with_units(budget as f64, "evals", || {
+                    let search = SearchSpace::new(&opts.space, palette.clone(), &layers, true)
+                        .expect("search space");
+                    let problem = OptProblem {
+                        search,
+                        objectives: [Objective::PerfPerArea, Objective::Energy],
+                        constraints: Constraints::default(),
+                    };
+                    let oopts =
+                        OptOptions { strategy: kind, budget, pop: 64, seed: 7 };
+                    let res = run_optimize(&backend, &model, &problem, &oopts, opts.workers)
+                        .expect("optimize");
+                    hv = res.hypervolume;
+                    evals = res.evaluated;
+                    frontier = res.frontier.len();
+                });
+            r.print();
+            println!("  hypervolume {hv:.6e}, frontier {frontier}, {evals} evals");
+            report.push(&r);
+            report.metric(&format!("hypervolume/{label}/budget={budget}"), hv);
+            report.metric(&format!("frontier/{label}/budget={budget}"), frontier as f64);
+        }
+    }
+    if let Some(path) = report.write_if_requested().expect("write bench json") {
+        println!("wrote {path}");
+    }
+}

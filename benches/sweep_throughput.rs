@@ -16,9 +16,10 @@ use qappa::coordinator::sweep::{NamedWorkload, SweepEngine};
 use qappa::coordinator::{DseOptions, ModelStore};
 use qappa::dataflow::Layer;
 use qappa::model::native::NativeBackend;
-use qappa::util::bench::Bench;
+use qappa::util::bench::{Bench, BenchReport};
 
 fn main() {
+    let mut report = BenchReport::new();
     let backend = common::AnyBackend::auto();
     let mut opts = DseOptions::default();
     opts.train_per_type = 192;
@@ -48,7 +49,7 @@ fn main() {
             format!("chunk={chunk}")
         };
         let mut peak = 0usize;
-        Bench::new(&format!("sweep/{label}"))
+        let r = Bench::new(&format!("sweep/{label}"))
             .warmup(1)
             .samples(5)
             .run_with_units(o.space.len() as f64, "configs", || {
@@ -57,8 +58,10 @@ fn main() {
                     .expect("sweep")
                     .remove(0);
                 peak = ts.stats.peak_resident;
-            })
-            .print();
+            });
+        r.print();
+        report.push(&r);
+        report.metric(&format!("peak_resident/{label}"), peak as f64);
         println!("  peak resident points: {peak}");
     }
 
@@ -79,7 +82,7 @@ fn main() {
     for chunk in [1024usize, 4096] {
         let mut o = opts.clone();
         o.chunk = chunk;
-        Bench::new(&format!("sweep/precision-grid/chunk={chunk}"))
+        let r = Bench::new(&format!("sweep/precision-grid/chunk={chunk}"))
             .warmup(1)
             .samples(3)
             .run_with_units(total as f64, "configs", || {
@@ -88,7 +91,14 @@ fn main() {
                         .sweep_type(&qmodel, *ty, &wl)
                         .expect("precision sweep");
                 }
-            })
-            .print();
+            });
+        r.print();
+        report.push(&r);
+    }
+
+    // Measurement mode: QAPPA_BENCH_JSON=path emits the machine-readable
+    // trajectory (tools/bench.sh -> BENCH_sweep.json).
+    if let Some(path) = report.write_if_requested().expect("write bench json") {
+        println!("wrote {path}");
     }
 }

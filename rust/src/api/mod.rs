@@ -29,10 +29,11 @@ pub mod types;
 pub use error::QappaError;
 pub use serve::{dispatch, handle_line, serve, ServeOptions, ServeStats};
 pub use session::{BackendChoice, Qappa, QappaBuilder};
+pub use crate::opt::objective::Constraints;
 pub use types::{
     config_from_json, AnalyzeRequest, AnalyzeResponse, CvPoint, ErrorBody, ExploreEntry,
     ExploreRequest, ExploreResponse, ExploreSummary, FitModelReport, FitRequest, FitResponse,
-    LayerCost, PrecisionRequest, RequestBody, ResponseBody, ServeRequest, ServeResponse,
-    SessionInfo, SynthRequest, SynthResponse, WorkloadInfo, WorkloadsRequest, WorkloadsResponse,
-    OPS,
+    LayerCost, OptPoint, OptimizeRequest, OptimizeResponse, PrecisionRequest, RequestBody,
+    ResponseBody, ServeRequest, ServeResponse, SessionInfo, SynthRequest, SynthResponse,
+    WorkloadInfo, WorkloadsRequest, WorkloadsResponse, OPS,
 };

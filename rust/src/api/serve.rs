@@ -56,6 +56,7 @@ pub fn dispatch(session: &Qappa, body: &RequestBody) -> Result<ResponseBody, Qap
         RequestBody::Synth(r) => session.synth(r).map(ResponseBody::Synth),
         RequestBody::Fit(r) => session.fit(r).map(ResponseBody::Fit),
         RequestBody::Explore(r) => session.explore(r).map(ResponseBody::Explore),
+        RequestBody::Optimize(r) => session.optimize(r).map(ResponseBody::Optimize),
         RequestBody::Analyze(r) => session.analyze(r).map(ResponseBody::Analyze),
         RequestBody::Workloads(r) => session.workloads(r).map(ResponseBody::Workloads),
         RequestBody::Session => Ok(ResponseBody::Session(session.session_info())),

@@ -27,20 +27,24 @@ use std::sync::{Arc, Mutex, OnceLock};
 use crate::api::error::QappaError;
 use crate::api::types::{
     AnalyzeRequest, AnalyzeResponse, ExploreRequest, ExploreResponse, FitRequest, FitResponse,
-    CvPoint, FitModelReport, LayerCost, PrecisionRequest, SessionInfo, SynthRequest,
-    SynthResponse, WorkloadInfo, WorkloadsRequest, WorkloadsResponse,
+    CvPoint, FitModelReport, LayerCost, OptPoint, OptimizeRequest, OptimizeResponse,
+    PrecisionRequest, SessionInfo, SynthRequest, SynthResponse, WorkloadInfo, WorkloadsRequest,
+    WorkloadsResponse,
 };
 use crate::config::{PeType, ALL_PE_TYPES, NUM_FEATURES, QUANT_NUM_FEATURES};
 use crate::coordinator::explorer::{
     run_dse_multi, run_dse_with_store, DseOptions, DseResult, ModelStore, WorkloadSummary,
 };
-use crate::coordinator::precision::run_dse_precision;
+use crate::coordinator::precision::{run_dse_precision, PrecisionGrid};
 use crate::coordinator::report::{fig2_accuracy, AccuracyRow};
 use crate::coordinator::space::DesignSpace;
 use crate::coordinator::sweep::NamedWorkload;
 use crate::dataflow::Layer;
 use crate::model::native::NativeBackend;
 use crate::model::{Backend, CvConfig};
+use crate::opt::{
+    resolve_objectives, run_optimize, OptOptions, OptProblem, SearchSpace, StrategyKind,
+};
 use crate::runtime::{ArtifactRuntime, Engine, XlaBackend};
 use crate::workloads;
 
@@ -345,6 +349,90 @@ impl Qappa {
         run_dse_precision(backend, &self.store, named, &self.opts, &grid)
     }
 
+    /// Guided multi-objective search over (hardware config, per-layer
+    /// precision) for one workload — the `optimize` op / `qappa optimize`
+    /// subcommand (`docs/OPTIMIZER.md`).
+    ///
+    /// The search space is the session's hardware [`DesignSpace`] crossed
+    /// with a precision palette (the request's `precision` block, or the
+    /// four presets), pruned by the `min_bits` constraint.  Evaluations
+    /// run through the unified cross-precision model fetched from the
+    /// session's `ModelStore` — guided search shares one training pass
+    /// with `explore` runs over the same palette — and the same
+    /// predict → dataflow pipeline as the streaming sweep.  Identical
+    /// (request, session recipe, seed) inputs reproduce the frontier
+    /// bit-for-bit, whether issued here, over `serve`, or via the CLI.
+    pub fn optimize(&self, req: &OptimizeRequest) -> Result<OptimizeResponse, QappaError> {
+        // Cheap validation first: a bad request never pays workload
+        // loading or training.
+        let objectives = resolve_objectives(&req.objectives)?;
+        req.constraints.validate()?;
+        let strategy = match &req.strategy {
+            Some(s) => StrategyKind::parse(s)?,
+            None => StrategyKind::Nsga2,
+        };
+        let budget = req.budget.unwrap_or(20_000);
+        if budget == 0 {
+            return Err(QappaError::Config("optimize: budget must be >= 1".into()));
+        }
+        let (name, layers) = workloads::load(&req.workload)?;
+
+        // Precision palette: requested grid or the four presets, pruned by
+        // the min-bits accuracy floor.
+        let grid = match &req.precision {
+            Some(p) => p.resolve()?,
+            None => PrecisionGrid::new(ALL_PE_TYPES.to_vec())?,
+        };
+        let mut palette = grid.types;
+        if let Some(b) = req.constraints.min_bits {
+            palette.retain(|t| t.act_bits() >= b && t.wt_bits() >= b);
+            if palette.is_empty() {
+                return Err(QappaError::Config(format!(
+                    "optimize: min_bits = {b} leaves no cell in the precision palette"
+                )));
+            }
+        }
+        let per_layer = req.per_layer.unwrap_or(palette.len() > 1);
+
+        let backend = self
+            .quant_backend
+            .get_or_init(|| NativeBackend::new(QUANT_NUM_FEATURES));
+        let model = self.store.get_or_train_quant(backend, &self.opts, &palette)?;
+        let search = SearchSpace::new(&self.opts.space, palette, &layers, per_layer)?;
+        let problem = OptProblem { search, objectives, constraints: req.constraints };
+        let oopts = OptOptions {
+            strategy,
+            budget,
+            pop: req.pop.unwrap_or(64),
+            seed: req.seed.unwrap_or(self.opts.seed),
+        };
+        let result = run_optimize(backend, &model, &problem, &oopts, self.opts.workers)?;
+
+        let frontier = result
+            .frontier
+            .iter()
+            .map(|f| OptPoint {
+                config: f.point.cfg,
+                objectives: f.objs.to_vec(),
+                throughput: f.point.throughput,
+                energy_mj: f.point.energy_mj,
+                ppa: f.point.ppa,
+                precision: f.precision.clone(),
+            })
+            .collect();
+        Ok(OptimizeResponse {
+            workload: name,
+            strategy: result.strategy.to_string(),
+            objectives: objectives.iter().map(|o| o.label().to_string()).collect(),
+            evaluated: result.evaluated,
+            budget,
+            ref_point: result.ref_point.to_vec(),
+            hypervolume: result.hypervolume,
+            frontier,
+            generations: result.generations,
+        })
+    }
+
     /// Resolve workload specs (built-in names or JSON model paths) before
     /// any backend starts, so a bad spec never pays engine startup.
     fn resolve_workloads(&self, specs: &[String]) -> Result<Vec<NamedWorkload>, QappaError> {
@@ -622,6 +710,68 @@ mod tests {
         assert_eq!(dw_rows.len(), 13, "all depthwise rows carry the override label");
         assert!(dw_rows.iter().all(|l| l.precision.as_deref() == Some("a4w4p8-int")));
         std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn optimize_trains_once_and_is_deterministic_per_seed() {
+        use crate::api::types::{OptimizeRequest, PrecisionRequest};
+        let s = tiny_session();
+        let req = OptimizeRequest {
+            workload: "mobilenetv1".into(),
+            budget: Some(80),
+            pop: Some(16),
+            seed: Some(5),
+            precision: Some(PrecisionRequest {
+                types: vec!["int16".into(), "a4w4p8-int".into()],
+                ..Default::default()
+            }),
+            ..Default::default()
+        };
+        let a = s.optimize(&req).unwrap();
+        assert_eq!(s.store().misses(), 1, "one unified model for the palette");
+        assert_eq!(a.workload, "mobilenetv1");
+        assert_eq!(a.strategy, "nsga2");
+        assert_eq!(a.objectives, vec!["perf/area".to_string(), "energy".to_string()]);
+        assert!(a.evaluated <= 80);
+        assert!(!a.frontier.is_empty());
+        assert!(a.hypervolume > 0.0);
+        // frontier members carry per-layer precision labels
+        let n_layers = workloads::mobilenetv1().len();
+        for p in &a.frontier {
+            assert_eq!(p.precision.len(), n_layers);
+        }
+        // warm repeat with the same seed: zero retraining, identical result
+        let b = s.optimize(&req).unwrap();
+        assert_eq!(s.store().misses(), 1);
+        assert_eq!(a, b, "same seed must reproduce the frontier bit-for-bit");
+        // responses round-trip the wire losslessly
+        let j = a.to_json().to_string();
+        let back = crate::api::types::OptimizeResponse::from_json(
+            &crate::util::json::Json::parse(&j).unwrap(),
+        )
+        .unwrap();
+        assert_eq!(back, a);
+        // bad requests classify without touching the trained state
+        let bad = OptimizeRequest {
+            workload: "mobilenetv1".into(),
+            objectives: vec!["bogus".into(), "energy".into()],
+            ..Default::default()
+        };
+        assert_eq!(s.optimize(&bad).unwrap_err().kind(), "config");
+        let zero = OptimizeRequest {
+            workload: "mobilenetv1".into(),
+            budget: Some(0),
+            ..Default::default()
+        };
+        assert!(s.optimize(&zero).unwrap_err().to_string().contains("budget"));
+        // min_bits prunes the palette; an impossible floor errors by name
+        let floor = OptimizeRequest {
+            workload: "mobilenetv1".into(),
+            constraints: crate::opt::Constraints { min_bits: Some(99), ..Default::default() },
+            ..Default::default()
+        };
+        assert!(s.optimize(&floor).unwrap_err().to_string().contains("min_bits"));
+        assert_eq!(s.store().misses(), 1, "bad requests never train");
     }
 
     #[test]

@@ -25,6 +25,8 @@ use crate::config::{AcceleratorConfig, MacKind, PeType};
 use crate::coordinator::explorer::WorkloadSummary;
 use crate::coordinator::precision::PrecisionGrid;
 use crate::dataflow::Layer;
+use crate::opt::engine::GenStat;
+use crate::opt::objective::Constraints;
 use crate::synth::oracle::Ppa;
 use crate::util::json::{obj, Json};
 use crate::workloads;
@@ -649,6 +651,354 @@ impl ExploreResponse {
 }
 
 // ---------------------------------------------------------------------------
+// optimize
+// ---------------------------------------------------------------------------
+
+fn opt_usize(v: &Json, key: &str, what: &str) -> Result<Option<usize>, QappaError> {
+    match v.get(key) {
+        Json::Null => Ok(None),
+        other => other.as_usize().map(Some).ok_or_else(|| {
+            proto(format!("{what}: field \"{key}\" must be a non-negative integer"))
+        }),
+    }
+}
+
+fn opt_f64(v: &Json, key: &str, what: &str) -> Result<Option<f64>, QappaError> {
+    match v.get(key) {
+        Json::Null => Ok(None),
+        other => other
+            .as_f64()
+            .map(Some)
+            .ok_or_else(|| proto(format!("{what}: field \"{key}\" must be a number"))),
+    }
+}
+
+fn opt_bool(v: &Json, key: &str, what: &str) -> Result<Option<bool>, QappaError> {
+    match v.get(key) {
+        Json::Null => Ok(None),
+        other => other
+            .as_bool()
+            .map(Some)
+            .ok_or_else(|| proto(format!("{what}: field \"{key}\" must be a boolean"))),
+    }
+}
+
+fn str_list(v: &Json, key: &str, what: &str) -> Result<Vec<String>, QappaError> {
+    match v.get(key) {
+        Json::Null => Ok(Vec::new()),
+        Json::Arr(items) => {
+            let mut out = Vec::with_capacity(items.len());
+            for item in items {
+                out.push(
+                    item.as_str()
+                        .ok_or_else(|| {
+                            proto(format!("{what}: \"{key}\" entries must be strings"))
+                        })?
+                        .to_string(),
+                );
+            }
+            Ok(out)
+        }
+        _ => Err(proto(format!("{what}: \"{key}\" must be an array of strings"))),
+    }
+}
+
+fn constraints_to_json(c: &Constraints) -> Json {
+    let mut pairs = Vec::new();
+    if let Some(x) = c.max_area_mm2 {
+        pairs.push(("max_area_mm2", Json::Num(x)));
+    }
+    if let Some(x) = c.max_power_mw {
+        pairs.push(("max_power_mw", Json::Num(x)));
+    }
+    if let Some(x) = c.max_latency_ms {
+        pairs.push(("max_latency_ms", Json::Num(x)));
+    }
+    if let Some(b) = c.min_bits {
+        pairs.push(("min_bits", num_u(b as u64)));
+    }
+    obj(pairs)
+}
+
+fn constraints_from_json(v: &Json, what: &str) -> Result<Constraints, QappaError> {
+    if matches!(v, Json::Null) {
+        return Ok(Constraints::default());
+    }
+    if v.as_obj().is_none() {
+        return Err(proto(format!("{what}: \"constraints\" must be an object")));
+    }
+    let min_bits = match v.get("min_bits") {
+        Json::Null => None,
+        other => Some(
+            other
+                .as_usize()
+                .and_then(|x| u32::try_from(x).ok())
+                .ok_or_else(|| proto(format!("{what}: \"min_bits\" must be a u32 integer")))?,
+        ),
+    };
+    Ok(Constraints {
+        max_area_mm2: opt_f64(v, "max_area_mm2", what)?,
+        max_power_mw: opt_f64(v, "max_power_mw", what)?,
+        max_latency_ms: opt_f64(v, "max_latency_ms", what)?,
+        min_bits,
+    })
+}
+
+/// `optimize`: guided multi-objective search over (hardware config,
+/// per-layer precision) for one workload, under hard constraints and an
+/// evaluation budget (`docs/OPTIMIZER.md`).  Empty `objectives` means the
+/// classic pair `["perf/area", "energy"]`; absent knobs default in the
+/// session (strategy `nsga2`, budget 20000, population 64, seed = the
+/// session seed, per-layer assignment on when the palette offers a
+/// choice).
+#[derive(Debug, Clone, PartialEq, Default)]
+pub struct OptimizeRequest {
+    pub workload: String,
+    /// Exactly two objective names once resolved (empty = default pair).
+    pub objectives: Vec<String>,
+    pub constraints: Constraints,
+    /// `nsga2` (default) | `random` | `hillclimb`.
+    pub strategy: Option<String>,
+    /// Distinct-evaluation budget.
+    pub budget: Option<usize>,
+    /// Population / batch size.
+    pub pop: Option<usize>,
+    /// Search seed (default: the session's DSE seed).
+    pub seed: Option<u64>,
+    /// Per-layer precision assignment (default: on when the palette has
+    /// more than one cell).
+    pub per_layer: Option<bool>,
+    /// Precision palette (same schema as `explore`); absent = the four
+    /// preset PE types.
+    pub precision: Option<PrecisionRequest>,
+}
+
+impl OptimizeRequest {
+    pub fn to_json(&self) -> Json {
+        let mut pairs = vec![("workload", Json::Str(self.workload.clone()))];
+        if !self.objectives.is_empty() {
+            pairs.push((
+                "objectives",
+                Json::Arr(self.objectives.iter().map(|o| Json::Str(o.clone())).collect()),
+            ));
+        }
+        if !self.constraints.is_empty() {
+            pairs.push(("constraints", constraints_to_json(&self.constraints)));
+        }
+        if let Some(s) = &self.strategy {
+            pairs.push(("strategy", Json::Str(s.clone())));
+        }
+        if let Some(b) = self.budget {
+            pairs.push(("budget", num_u(b as u64)));
+        }
+        if let Some(p) = self.pop {
+            pairs.push(("pop", num_u(p as u64)));
+        }
+        if let Some(s) = self.seed {
+            pairs.push(("seed", num_u(s)));
+        }
+        if let Some(p) = self.per_layer {
+            pairs.push(("per_layer", Json::Bool(p)));
+        }
+        if let Some(p) = &self.precision {
+            pairs.push(("precision", p.to_json()));
+        }
+        obj(pairs)
+    }
+
+    pub fn from_json(v: &Json) -> Result<OptimizeRequest, QappaError> {
+        let what = "optimize";
+        let strategy = match v.get("strategy") {
+            Json::Null => None,
+            other => Some(
+                other
+                    .as_str()
+                    .ok_or_else(|| proto(format!("{what}: \"strategy\" must be a string")))?
+                    .to_string(),
+            ),
+        };
+        let precision = match v.get("precision") {
+            Json::Null => None,
+            other => Some(PrecisionRequest::from_json(other)?),
+        };
+        Ok(OptimizeRequest {
+            workload: req_str(v, "workload", what)?.to_string(),
+            objectives: str_list(v, "objectives", what)?,
+            constraints: constraints_from_json(v.get("constraints"), what)?,
+            strategy,
+            budget: opt_usize(v, "budget", what)?,
+            pop: opt_usize(v, "pop", what)?,
+            seed: opt_usize(v, "seed", what)?.map(|x| x as u64),
+            per_layer: opt_bool(v, "per_layer", what)?,
+            precision,
+        })
+    }
+}
+
+/// One frontier member of an [`OptimizeResponse`].
+#[derive(Debug, Clone, PartialEq)]
+pub struct OptPoint {
+    pub config: AcceleratorConfig,
+    /// Minimized objective values, request order.
+    pub objectives: Vec<f64>,
+    /// Inferences/s on the workload.
+    pub throughput: f64,
+    /// Energy per inference, mJ.
+    pub energy_mj: f64,
+    /// Predicted array PPA.
+    pub ppa: Ppa,
+    /// Precision labels: one per layer (mixed designs), or a single
+    /// uniform label.
+    pub precision: Vec<String>,
+}
+
+impl OptPoint {
+    fn to_json(&self) -> Json {
+        obj(vec![
+            ("config", self.config.to_json()),
+            (
+                "objectives",
+                Json::Arr(self.objectives.iter().map(|&x| Json::Num(x)).collect()),
+            ),
+            ("throughput", Json::Num(self.throughput)),
+            ("energy_mj", Json::Num(self.energy_mj)),
+            ("ppa", ppa_to_json(&self.ppa)),
+            (
+                "precision",
+                Json::Arr(self.precision.iter().map(|p| Json::Str(p.clone())).collect()),
+            ),
+        ])
+    }
+
+    fn from_json(v: &Json) -> Result<OptPoint, QappaError> {
+        let what = "optimize.frontier[]";
+        let objectives = v
+            .get("objectives")
+            .as_f64_vec()
+            .ok_or_else(|| proto(format!("{what}: missing \"objectives\" number array")))?;
+        Ok(OptPoint {
+            config: config_from_json(v.get("config"))?,
+            objectives,
+            throughput: req_f64(v, "throughput", what)?,
+            energy_mj: req_f64(v, "energy_mj", what)?,
+            ppa: ppa_from_json(v.get("ppa"), "optimize.ppa")?,
+            precision: str_list(v, "precision", what)?,
+        })
+    }
+}
+
+fn gen_stat_to_json(g: &GenStat) -> Json {
+    obj(vec![
+        ("generation", num_u(g.generation as u64)),
+        ("evaluated", num_u(g.evaluated as u64)),
+        ("frontier", num_u(g.frontier as u64)),
+        ("hypervolume", Json::Num(g.hypervolume)),
+        ("best", Json::Arr(vec![Json::Num(g.best[0]), Json::Num(g.best[1])])),
+    ])
+}
+
+fn gen_stat_from_json(v: &Json) -> Result<GenStat, QappaError> {
+    let what = "optimize.generations[]";
+    let best = v
+        .get("best")
+        .as_f64_vec()
+        .filter(|b| b.len() == 2)
+        .ok_or_else(|| proto(format!("{what}: \"best\" must be a 2-number array")))?;
+    Ok(GenStat {
+        generation: req_usize(v, "generation", what)?,
+        evaluated: req_usize(v, "evaluated", what)?,
+        frontier: req_usize(v, "frontier", what)?,
+        hypervolume: req_f64(v, "hypervolume", what)?,
+        best: [best[0], best[1]],
+    })
+}
+
+/// `optimize` result: the feasible Pareto frontier found within budget,
+/// generation-by-generation convergence stats and the run's hypervolume
+/// (w.r.t. `ref_point`, the reference corner fixed after the first batch).
+#[derive(Debug, Clone, PartialEq)]
+pub struct OptimizeResponse {
+    pub workload: String,
+    pub strategy: String,
+    /// Canonical objective names, request order.
+    pub objectives: Vec<String>,
+    /// Distinct evaluations spent.
+    pub evaluated: usize,
+    /// The requested budget (spend cap).
+    pub budget: usize,
+    /// Reference corner in minimized-objective space.
+    pub ref_point: Vec<f64>,
+    /// Final archive hypervolume w.r.t. `ref_point`.
+    pub hypervolume: f64,
+    /// Frontier sorted by the first objective ascending.
+    pub frontier: Vec<OptPoint>,
+    pub generations: Vec<GenStat>,
+}
+
+impl OptimizeResponse {
+    pub fn to_json(&self) -> Json {
+        obj(vec![
+            ("workload", Json::Str(self.workload.clone())),
+            ("strategy", Json::Str(self.strategy.clone())),
+            (
+                "objectives",
+                Json::Arr(self.objectives.iter().map(|o| Json::Str(o.clone())).collect()),
+            ),
+            ("evaluated", num_u(self.evaluated as u64)),
+            ("budget", num_u(self.budget as u64)),
+            (
+                "ref_point",
+                Json::Arr(self.ref_point.iter().map(|&x| Json::Num(x)).collect()),
+            ),
+            ("hypervolume", Json::Num(self.hypervolume)),
+            (
+                "frontier",
+                Json::Arr(self.frontier.iter().map(|p| p.to_json()).collect()),
+            ),
+            (
+                "generations",
+                Json::Arr(self.generations.iter().map(gen_stat_to_json).collect()),
+            ),
+        ])
+    }
+
+    pub fn from_json(v: &Json) -> Result<OptimizeResponse, QappaError> {
+        let what = "optimize";
+        let frontier_arr = v
+            .get("frontier")
+            .as_arr()
+            .ok_or_else(|| proto(format!("{what}: missing \"frontier\" array")))?;
+        let mut frontier = Vec::with_capacity(frontier_arr.len());
+        for p in frontier_arr {
+            frontier.push(OptPoint::from_json(p)?);
+        }
+        let gen_arr = v
+            .get("generations")
+            .as_arr()
+            .ok_or_else(|| proto(format!("{what}: missing \"generations\" array")))?;
+        let mut generations = Vec::with_capacity(gen_arr.len());
+        for g in gen_arr {
+            generations.push(gen_stat_from_json(g)?);
+        }
+        let ref_point = v
+            .get("ref_point")
+            .as_f64_vec()
+            .ok_or_else(|| proto(format!("{what}: missing \"ref_point\" number array")))?;
+        Ok(OptimizeResponse {
+            workload: req_str(v, "workload", what)?.to_string(),
+            strategy: req_str(v, "strategy", what)?.to_string(),
+            objectives: str_list(v, "objectives", what)?,
+            evaluated: req_usize(v, "evaluated", what)?,
+            budget: req_usize(v, "budget", what)?,
+            ref_point,
+            hypervolume: req_f64(v, "hypervolume", what)?,
+            frontier,
+            generations,
+        })
+    }
+}
+
+// ---------------------------------------------------------------------------
 // analyze
 // ---------------------------------------------------------------------------
 
@@ -1003,13 +1353,15 @@ pub enum RequestBody {
     Synth(SynthRequest),
     Fit(FitRequest),
     Explore(ExploreRequest),
+    Optimize(OptimizeRequest),
     Analyze(AnalyzeRequest),
     Workloads(WorkloadsRequest),
     Session,
 }
 
 /// Every op name, in help/docs order.
-pub const OPS: [&str; 6] = ["synth", "fit", "explore", "analyze", "workloads", "session"];
+pub const OPS: [&str; 7] =
+    ["synth", "fit", "explore", "optimize", "analyze", "workloads", "session"];
 
 impl RequestBody {
     pub fn op(&self) -> &'static str {
@@ -1017,6 +1369,7 @@ impl RequestBody {
             RequestBody::Synth(_) => "synth",
             RequestBody::Fit(_) => "fit",
             RequestBody::Explore(_) => "explore",
+            RequestBody::Optimize(_) => "optimize",
             RequestBody::Analyze(_) => "analyze",
             RequestBody::Workloads(_) => "workloads",
             RequestBody::Session => "session",
@@ -1028,6 +1381,7 @@ impl RequestBody {
             "synth" => Ok(RequestBody::Synth(SynthRequest::from_json(params)?)),
             "fit" => Ok(RequestBody::Fit(FitRequest::from_json(params)?)),
             "explore" => Ok(RequestBody::Explore(ExploreRequest::from_json(params)?)),
+            "optimize" => Ok(RequestBody::Optimize(OptimizeRequest::from_json(params)?)),
             "analyze" => Ok(RequestBody::Analyze(AnalyzeRequest::from_json(params)?)),
             "workloads" => Ok(RequestBody::Workloads(WorkloadsRequest::from_json(params)?)),
             "session" => Ok(RequestBody::Session),
@@ -1043,6 +1397,7 @@ impl RequestBody {
             RequestBody::Synth(r) => r.to_json(),
             RequestBody::Fit(r) => r.to_json(),
             RequestBody::Explore(r) => r.to_json(),
+            RequestBody::Optimize(r) => r.to_json(),
             RequestBody::Analyze(r) => r.to_json(),
             RequestBody::Workloads(r) => r.to_json(),
             RequestBody::Session => obj(vec![]),
@@ -1101,6 +1456,7 @@ pub enum ResponseBody {
     Synth(SynthResponse),
     Fit(FitResponse),
     Explore(ExploreResponse),
+    Optimize(OptimizeResponse),
     Analyze(AnalyzeResponse),
     Workloads(WorkloadsResponse),
     Session(SessionInfo),
@@ -1112,6 +1468,7 @@ impl ResponseBody {
             ResponseBody::Synth(_) => "synth",
             ResponseBody::Fit(_) => "fit",
             ResponseBody::Explore(_) => "explore",
+            ResponseBody::Optimize(_) => "optimize",
             ResponseBody::Analyze(_) => "analyze",
             ResponseBody::Workloads(_) => "workloads",
             ResponseBody::Session(_) => "session",
@@ -1123,6 +1480,7 @@ impl ResponseBody {
             ResponseBody::Synth(r) => r.to_json(),
             ResponseBody::Fit(r) => r.to_json(),
             ResponseBody::Explore(r) => r.to_json(),
+            ResponseBody::Optimize(r) => r.to_json(),
             ResponseBody::Analyze(r) => r.to_json(),
             ResponseBody::Workloads(r) => r.to_json(),
             ResponseBody::Session(r) => r.to_json(),
@@ -1134,6 +1492,7 @@ impl ResponseBody {
             "synth" => Ok(ResponseBody::Synth(SynthResponse::from_json(result)?)),
             "fit" => Ok(ResponseBody::Fit(FitResponse::from_json(result)?)),
             "explore" => Ok(ResponseBody::Explore(ExploreResponse::from_json(result)?)),
+            "optimize" => Ok(ResponseBody::Optimize(OptimizeResponse::from_json(result)?)),
             "analyze" => Ok(ResponseBody::Analyze(AnalyzeResponse::from_json(result)?)),
             "workloads" => Ok(ResponseBody::Workloads(WorkloadsResponse::from_json(result)?)),
             "session" => Ok(ResponseBody::Session(SessionInfo::from_json(result)?)),
@@ -1348,6 +1707,91 @@ mod tests {
     }
 
     #[test]
+    fn optimize_types_roundtrip() {
+        // minimal request: only the workload travels
+        let bare = OptimizeRequest { workload: "mobilenetv1".into(), ..Default::default() };
+        let line = bare.to_json().to_string();
+        assert_eq!(OptimizeRequest::from_json(&roundtrip_json(&bare.to_json())).unwrap(), bare);
+        for absent in ["objectives", "constraints", "strategy", "budget", "precision"] {
+            assert!(!line.contains(absent), "bare request leaked \"{absent}\": {line}");
+        }
+
+        // fully-specified request
+        let full = OptimizeRequest {
+            workload: "m.json".into(),
+            objectives: vec!["latency".into(), "energy".into()],
+            constraints: Constraints {
+                max_area_mm2: Some(2.5),
+                max_power_mw: Some(300.0),
+                max_latency_ms: None,
+                min_bits: Some(4),
+            },
+            strategy: Some("nsga2".into()),
+            budget: Some(20_000),
+            pop: Some(64),
+            seed: Some(7),
+            per_layer: Some(true),
+            precision: Some(PrecisionRequest {
+                act_bits: vec![4, 8],
+                wt_bits: vec![4, 8],
+                ..Default::default()
+            }),
+        };
+        assert_eq!(OptimizeRequest::from_json(&roundtrip_json(&full.to_json())).unwrap(), full);
+
+        // malformed payloads are protocol errors naming the field
+        let e = OptimizeRequest::from_json(&Json::parse(r#"{"objectives": []}"#).unwrap())
+            .unwrap_err();
+        assert_eq!(e.kind(), "protocol");
+        assert!(e.to_string().contains("workload"), "{e}");
+        let e = OptimizeRequest::from_json(
+            &Json::parse(r#"{"workload": "vgg16", "budget": "many"}"#).unwrap(),
+        )
+        .unwrap_err();
+        assert!(e.to_string().contains("budget"), "{e}");
+        let e = OptimizeRequest::from_json(
+            &Json::parse(r#"{"workload": "vgg16", "constraints": {"min_bits": "four"}}"#).unwrap(),
+        )
+        .unwrap_err();
+        assert!(e.to_string().contains("min_bits"), "{e}");
+        let e = OptimizeRequest::from_json(
+            &Json::parse(r#"{"workload": "vgg16", "objectives": 5}"#).unwrap(),
+        )
+        .unwrap_err();
+        assert!(e.to_string().contains("objectives"), "{e}");
+
+        // response round-trip
+        let resp = OptimizeResponse {
+            workload: "mobilenetv1".into(),
+            strategy: "nsga2".into(),
+            objectives: vec!["perf/area".into(), "energy".into()],
+            evaluated: 480,
+            budget: 500,
+            ref_point: vec![0.125, 7.5],
+            hypervolume: 0.8125,
+            frontier: vec![OptPoint {
+                config: cfg(PeType::LightPe1),
+                objectives: vec![0.0625, 3.25],
+                throughput: 812.5,
+                energy_mj: 3.25,
+                ppa: Ppa { power_mw: 212.5, fmax_mhz: 900.0, area_mm2: 1.75 },
+                precision: vec!["a4w4p8-int".into(), "LightPE-1".into()],
+            }],
+            generations: vec![crate::opt::engine::GenStat {
+                generation: 0,
+                evaluated: 64,
+                frontier: 9,
+                hypervolume: 0.5,
+                best: [0.0625, 3.25],
+            }],
+        };
+        assert_eq!(
+            OptimizeResponse::from_json(&roundtrip_json(&resp.to_json())).unwrap(),
+            resp
+        );
+    }
+
+    #[test]
     fn analyze_types_roundtrip() {
         let req = AnalyzeRequest { workload: "resnet50".into(), config: cfg(PeType::Int16) };
         assert_eq!(AnalyzeRequest::from_json(&roundtrip_json(&req.to_json())).unwrap(), req);
@@ -1439,6 +1883,20 @@ mod tests {
                         wt_bits: vec![4],
                         ..Default::default()
                     }),
+                }),
+            },
+            ServeRequest {
+                id: Some(12),
+                body: RequestBody::Optimize(OptimizeRequest {
+                    workload: "mobilenetv1".into(),
+                    objectives: vec!["lat".into(), "energy".into()],
+                    constraints: Constraints {
+                        max_area_mm2: Some(2.5),
+                        ..Default::default()
+                    },
+                    budget: Some(500),
+                    seed: Some(3),
+                    ..Default::default()
                 }),
             },
             ServeRequest {

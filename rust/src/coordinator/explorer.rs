@@ -256,6 +256,9 @@ pub fn train_one_model(
     opts: &DseOptions,
     ty: PeType,
 ) -> Result<PpaModel, QappaError> {
+    // A degenerate space (empty axis) must fail with the axis named, not
+    // panic inside `sample`.
+    opts.space.validate()?;
     let t0 = std::time::Instant::now();
     let cfgs = opts.space.sample(ty, opts.train_per_type, opts.seed);
     let ppas: Vec<Ppa> = parallel_map(&cfgs, opts.workers, |c| {

@@ -29,7 +29,7 @@ pub use explorer::{
     run_dse, run_dse_multi, run_dse_with_store, DseOptions, DsePoint, DseResult,
     ModelStore, WorkloadSummary,
 };
-pub use pareto::{pareto_frontier, IncrementalFrontier};
+pub use pareto::{hypervolume, pareto_frontier, IncrementalFrontier};
 pub use precision::{parse_bits_axis, run_dse_precision, train_quant_model, PrecisionGrid};
 pub use space::DesignSpace;
-pub use sweep::{NamedWorkload, SweepEngine, SweepStats};
+pub use sweep::{predict_configs, NamedWorkload, SweepEngine, SweepStats};

@@ -42,6 +42,45 @@ pub fn dominates(a: (f64, f64), b: (f64, f64)) -> bool {
     a.0 >= b.0 && a.1 <= b.1 && (a.0 > b.0 || a.1 < b.1)
 }
 
+/// Scalar quality of a point set: the 2-D hypervolume (area) dominated by
+/// the set's Pareto frontier relative to a reference corner, under the
+/// frontier convention of this module (maximize the first coordinate,
+/// minimize the second).
+///
+/// `ref_point = (rx, ry)` is the anti-optimal corner: `rx` a lower bound on
+/// the first coordinate, `ry` an upper bound on the second.  Points that do
+/// not strictly improve on the corner (or carry a NaN) contribute nothing;
+/// the union-of-rectangles area is computed over the frontier only, so
+/// inserting a dominated point can never change the result.  This is the
+/// optimizer's convergence currency (`crate::opt`): guided-search quality
+/// is measured as recovered hypervolume versus the exhaustive sweep.
+pub fn hypervolume(points: &[(f64, f64)], ref_point: (f64, f64)) -> f64 {
+    let (rx, ry) = ref_point;
+    let pts: Vec<(f64, f64)> = points
+        .iter()
+        .copied()
+        .filter(|&(x, y)| !x.is_nan() && !y.is_nan() && x > rx && y < ry)
+        .collect();
+    if pts.is_empty() {
+        return 0.0;
+    }
+    let mut front: Vec<(f64, f64)> =
+        pareto_frontier(&pts).into_iter().map(|i| pts[i]).collect();
+    // Sweep strips right-to-left: sorted by the maximize-axis descending,
+    // each frontier point adds the strip between the previous (worse)
+    // minimize-axis level and its own.
+    front.sort_by(|a, b| b.0.total_cmp(&a.0));
+    let mut hv = 0.0;
+    let mut prev_y = ry;
+    for (x, y) in front {
+        if y < prev_y {
+            hv += (x - rx) * (prev_y - y);
+            prev_y = y;
+        }
+    }
+    hv
+}
+
 /// One (perf/area, energy) frontier entry with an arbitrary payload (a grid
 /// index, a full `DsePoint`, ...).
 #[derive(Debug, Clone)]
@@ -107,6 +146,16 @@ impl<T> IncrementalFrontier<T> {
 
     pub fn into_entries(self) -> Vec<FrontierEntry<T>> {
         self.entries
+    }
+
+    /// Hypervolume dominated by the current frontier relative to
+    /// `ref_point` (see [`hypervolume`]); since the frontier already equals
+    /// the batch frontier of everything pushed, this is the streaming view
+    /// of the same scalar.
+    pub fn hypervolume(&self, ref_point: (f64, f64)) -> f64 {
+        let pts: Vec<(f64, f64)> =
+            self.entries.iter().map(|e| (e.perf_per_area, e.energy)).collect();
+        hypervolume(&pts, ref_point)
     }
 }
 
@@ -274,6 +323,117 @@ mod tests {
                         || f.iter().any(|&i| pts[i] == q);
                     if !covered {
                         return Err(format!("point {j} not covered by frontier"));
+                    }
+                }
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn hypervolume_known_values() {
+        // one point: a single rectangle
+        assert_eq!(hypervolume(&[(2.0, 1.0)], (0.0, 3.0)), 4.0);
+        // staircase of two incomparable points: two strips
+        // (3,2) adds (3-0)*(4-2)=6; (1,1) adds (1-0)*(2-1)=1
+        let pts = [(3.0, 2.0), (1.0, 1.0)];
+        assert_eq!(hypervolume(&pts, (0.0, 4.0)), 7.0);
+        // dominated points contribute nothing
+        let with_dom = [(3.0, 2.0), (1.0, 1.0), (0.5, 3.9), (2.0, 2.0)];
+        assert_eq!(hypervolume(&with_dom, (0.0, 4.0)), 7.0);
+        // points outside the reference corner are clipped away entirely
+        assert_eq!(hypervolume(&[(0.5, 5.0)], (1.0, 4.0)), 0.0);
+        // empty set / NaN-only set
+        assert_eq!(hypervolume(&[], (0.0, 1.0)), 0.0);
+        assert_eq!(hypervolume(&[(f64::NAN, 0.5)], (0.0, 1.0)), 0.0);
+    }
+
+    #[test]
+    fn property_hypervolume_dominated_insertion_never_increases() {
+        // Inserting a point dominated by an existing member must leave the
+        // hypervolume exactly unchanged (the satellite acceptance bound is
+        // "never increases"; for a dominated point the area is identical).
+        testkit::forall(
+            "hv dominated insertion",
+            200,
+            29,
+            |rng: &mut Rng| {
+                let n = 1 + rng.below(30);
+                let pts: Vec<(f64, f64)> = (0..n)
+                    .map(|_| (rng.range_f64(0.1, 10.0), rng.range_f64(0.1, 10.0)))
+                    .collect();
+                // a point weakly dominated by a random member
+                let (x, y) = pts[rng.below(n)];
+                let dom = (x - rng.range_f64(0.0, x), y + rng.range_f64(0.0, 2.0));
+                (pts, dom)
+            },
+            |(pts, dom)| {
+                let r = (0.0, 13.0);
+                let before = hypervolume(pts, r);
+                let mut with = pts.clone();
+                with.push(*dom);
+                let after = hypervolume(&with, r);
+                if after > before + 1e-12 {
+                    return Err(format!("hv grew on dominated insert: {before} -> {after}"));
+                }
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn property_hypervolume_permutation_invariant() {
+        testkit::forall(
+            "hv permutation invariance",
+            200,
+            31,
+            |rng: &mut Rng| {
+                let n = 1 + rng.below(40);
+                let pts: Vec<(f64, f64)> = (0..n)
+                    .map(|_| (rng.range_f64(0.0, 8.0), rng.range_f64(0.0, 8.0)))
+                    .collect();
+                let mut shuffled = pts.clone();
+                rng.shuffle(&mut shuffled);
+                (pts, shuffled)
+            },
+            |(pts, shuffled)| {
+                let r = (-1.0, 9.0);
+                let a = hypervolume(pts, r);
+                let b = hypervolume(shuffled, r);
+                if (a - b).abs() > 1e-9 * a.abs().max(1.0) {
+                    return Err(format!("hv not permutation invariant: {a} vs {b}"));
+                }
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn property_hypervolume_incremental_matches_batch() {
+        // The streaming frontier's hypervolume must equal the batch
+        // hypervolume of the full point set at every prefix length.
+        testkit::forall(
+            "hv incremental == batch",
+            150,
+            37,
+            |rng: &mut Rng| {
+                let n = 1 + rng.below(40);
+                (0..n)
+                    .map(|_| (rng.below(12) as f64, rng.below(12) as f64))
+                    .collect::<Vec<_>>()
+            },
+            |pts| {
+                let r = (-0.5, 12.5);
+                let mut inc = IncrementalFrontier::new();
+                for (i, &(x, y)) in pts.iter().enumerate() {
+                    inc.push(x, y, i);
+                    let batch = hypervolume(&pts[..=i], r);
+                    let stream = inc.hypervolume(r);
+                    if (batch - stream).abs() > 1e-9 * batch.abs().max(1.0) {
+                        return Err(format!(
+                            "prefix {}: incremental hv {stream} != batch hv {batch}",
+                            i + 1
+                        ));
                     }
                 }
                 Ok(())

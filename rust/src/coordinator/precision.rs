@@ -171,6 +171,7 @@ pub fn train_quant_model(
             backend.name()
         )));
     }
+    opts.space.validate()?;
     let t0 = std::time::Instant::now();
     // At least a few dozen samples per cell, spread deterministically.
     let per_cell = (opts.train_per_type / grid.len()).max(48);

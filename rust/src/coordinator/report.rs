@@ -1,6 +1,7 @@
 //! Figure / table regeneration (paper §4).
 
 use crate::api::error::QappaError;
+use crate::api::types::OptimizeResponse;
 use crate::config::{PeType, ALL_PE_TYPES};
 use crate::coordinator::explorer::{DseOptions, DseResult, WorkloadSummary};
 use crate::dataflow::Layer;
@@ -185,6 +186,88 @@ pub fn precision_summary_table(summaries: &[WorkloadSummary]) -> Table {
                 best.cfg.key(),
             ]);
         }
+    }
+    t
+}
+
+/// Compact description of a frontier member's precision assignment: the
+/// single label for a uniform design, otherwise the distinct labels with
+/// their layer counts (`a4w4p8-int x9 + INT16 x19`), first-seen order.
+fn precision_cell(labels: &[String]) -> String {
+    if labels.is_empty() {
+        return "-".to_string();
+    }
+    let mut counts: Vec<(&str, usize)> = Vec::new();
+    for l in labels {
+        match counts.iter().position(|(name, _)| *name == l.as_str()) {
+            Some(i) => counts[i].1 += 1,
+            None => counts.push((l.as_str(), 1)),
+        }
+    }
+    if counts.len() == 1 {
+        return counts[0].0.to_string();
+    }
+    counts
+        .iter()
+        .map(|(name, n)| format!("{name} x{n}"))
+        .collect::<Vec<_>>()
+        .join(" + ")
+}
+
+/// Frontier report for `qappa optimize`: one row per frontier member,
+/// sorted as the response is (first objective ascending), with the raw
+/// metrics and the precision assignment.
+pub fn opt_frontier_table(resp: &OptimizeResponse) -> Table {
+    let obj0 = format!("{}(min)", resp.objectives.first().map(String::as_str).unwrap_or("obj0"));
+    let obj1 = format!("{}(min)", resp.objectives.get(1).map(String::as_str).unwrap_or("obj1"));
+    let mut t = Table::new(&[
+        "#",
+        obj0.as_str(),
+        obj1.as_str(),
+        "thrpt_inf_s",
+        "energy_mJ",
+        "area_mm2",
+        "power_mW",
+        "precision",
+        "config",
+    ]);
+    for (i, p) in resp.frontier.iter().enumerate() {
+        t.row(vec![
+            (i + 1).to_string(),
+            fmt_g(p.objectives.first().copied().unwrap_or(f64::NAN)),
+            fmt_g(p.objectives.get(1).copied().unwrap_or(f64::NAN)),
+            format!("{:.2}", p.throughput),
+            format!("{:.4}", p.energy_mj),
+            format!("{:.4}", p.ppa.area_mm2),
+            format!("{:.2}", p.ppa.power_mw),
+            precision_cell(&p.precision),
+            p.config.key(),
+        ]);
+    }
+    t
+}
+
+/// Convergence report for `qappa optimize`: the per-generation spend /
+/// frontier-size / hypervolume trajectory (hypervolume is measured against
+/// the run's fixed reference corner).
+pub fn opt_convergence_table(resp: &OptimizeResponse) -> Table {
+    let mut t = Table::new(&[
+        "generation",
+        "evaluated",
+        "frontier",
+        "hypervolume",
+        "best_obj0",
+        "best_obj1",
+    ]);
+    for g in &resp.generations {
+        t.row(vec![
+            g.generation.to_string(),
+            g.evaluated.to_string(),
+            g.frontier.to_string(),
+            fmt_g(g.hypervolume),
+            fmt_g(g.best[0]),
+            fmt_g(g.best[1]),
+        ]);
     }
     t
 }
@@ -400,6 +483,69 @@ mod tests {
         assert!(csv.lines().next().unwrap().contains("precision"));
         assert!(csv.contains("a4w4p8-int"), "{csv}");
         assert!(csv.contains(",-"), "non-overridden layers show '-'");
+    }
+
+    #[test]
+    fn opt_tables_render_frontier_and_convergence() {
+        use crate::api::types::{OptPoint, OptimizeResponse};
+        use crate::config::{AcceleratorConfig, PeType};
+        use crate::opt::engine::GenStat;
+        use crate::synth::oracle::Ppa;
+        let resp = OptimizeResponse {
+            workload: "mnv1".into(),
+            strategy: "nsga2".into(),
+            objectives: vec!["perf/area".into(), "energy".into()],
+            evaluated: 96,
+            budget: 100,
+            ref_point: vec![0.5, 8.0],
+            hypervolume: 1.25,
+            frontier: vec![
+                OptPoint {
+                    config: AcceleratorConfig::default_with(PeType::LightPe1),
+                    objectives: vec![0.25, 4.0],
+                    throughput: 400.0,
+                    energy_mj: 4.0,
+                    ppa: Ppa { power_mw: 210.0, fmax_mhz: 900.0, area_mm2: 1.5 },
+                    precision: vec!["LightPE-1".into(); 3],
+                },
+                OptPoint {
+                    config: AcceleratorConfig::default_with(PeType::Int16),
+                    objectives: vec![0.4, 3.0],
+                    throughput: 250.0,
+                    energy_mj: 3.0,
+                    ppa: Ppa { power_mw: 300.0, fmax_mhz: 800.0, area_mm2: 2.5 },
+                    precision: vec!["a4w4p8-int".into(), "INT16".into(), "INT16".into()],
+                },
+            ],
+            generations: vec![
+                GenStat {
+                    generation: 0,
+                    evaluated: 32,
+                    frontier: 4,
+                    hypervolume: 0.75,
+                    best: [0.3, 3.5],
+                },
+                GenStat {
+                    generation: 1,
+                    evaluated: 96,
+                    frontier: 7,
+                    hypervolume: 1.25,
+                    best: [0.25, 3.0],
+                },
+            ],
+        };
+        let t = opt_frontier_table(&resp);
+        assert_eq!(t.len(), 2);
+        let csv = t.to_csv();
+        assert!(csv.lines().next().unwrap().contains("perf/area(min)"), "{csv}");
+        // uniform assignment collapses to one label; mixed shows counts
+        assert!(csv.contains("LightPE-1"), "{csv}");
+        assert!(csv.contains("a4w4p8-int x1 + INT16 x2"), "{csv}");
+        let c = opt_convergence_table(&resp);
+        assert_eq!(c.len(), 2);
+        assert!(c.to_csv().contains("hypervolume"));
+        // empty precision renders a placeholder, not a panic
+        assert_eq!(super::precision_cell(&[]), "-");
     }
 
     #[test]

@@ -8,6 +8,7 @@
 //! [`DesignSpace::enumerate`] is kept as a thin `iter().collect()` shim
 //! for tests and small spaces.
 
+use crate::api::error::QappaError;
 use crate::config::{AcceleratorConfig, PeType};
 use crate::util::prng::{hash64, Rng};
 
@@ -100,10 +101,51 @@ impl DesignSpace {
         self.len() == 0
     }
 
+    /// Structural sanity of the axis lists: every hardware axis must be
+    /// non-empty (a zero-length axis makes the whole grid empty — and
+    /// would make [`DesignSpace::sample`] panic).  Errors name the
+    /// offending axis, so a mis-built space fails loudly at the boundary
+    /// instead of silently yielding nothing.
+    pub fn validate(&self) -> Result<(), QappaError> {
+        for (axis, len) in [
+            ("rows", self.rows.len()),
+            ("cols", self.cols.len()),
+            ("glb_kb", self.glb_kb.len()),
+            ("spad_ifmap_b", self.spad_ifmap_b.len()),
+            ("spad_filter_b", self.spad_filter_b.len()),
+            ("spad_psum_b", self.spad_psum_b.len()),
+            ("bandwidth_gbps", self.bandwidth_gbps.len()),
+        ] {
+            if len == 0 {
+                return Err(QappaError::Config(format!(
+                    "design space: axis '{axis}' is empty (every hardware axis needs \
+                     at least one value)"
+                )));
+            }
+        }
+        Ok(())
+    }
+
+    /// Checked variant of [`DesignSpace::nth`]: a degenerate space (empty
+    /// axis) and a past-the-end index both return a structured
+    /// [`QappaError`] naming the problem, instead of the iterator-protocol
+    /// `None` the lazy cursor uses internally.
+    pub fn nth_checked(&self, pe_type: PeType, i: usize) -> Result<AcceleratorConfig, QappaError> {
+        self.validate()?;
+        self.nth(pe_type, i).ok_or_else(|| {
+            QappaError::Config(format!(
+                "design space: index {i} out of range (grid has {} points)",
+                self.len()
+            ))
+        })
+    }
+
     /// Decode grid index `i` into its config (row-major over the axes:
     /// precision axis outermost when present, then rows, bandwidth
     /// fastest-varying — the same order the old eager `enumerate`
-    /// produced).  O(1); the basis of the lazy cursor.
+    /// produced).  O(1); the basis of the lazy cursor.  Returns `None`
+    /// past the end (use [`DesignSpace::nth_checked`] for a structured
+    /// error instead).
     pub fn nth(&self, pe_type: PeType, i: usize) -> Option<AcceleratorConfig> {
         if i >= self.len() {
             return None;
@@ -445,6 +487,61 @@ mod tests {
         let mut c = DesignSpace::tiny();
         c.bandwidth_gbps[0] += 0.5;
         assert_ne!(a.space_hash(), c.space_hash());
+    }
+
+    #[test]
+    fn nth_checked_errors_past_the_end_with_the_grid_size() {
+        let s = DesignSpace::tiny();
+        // in range: agrees with the raw decoder
+        assert_eq!(s.nth_checked(PeType::Int16, 0).unwrap(), s.nth(PeType::Int16, 0).unwrap());
+        let last = s.len() - 1;
+        assert_eq!(
+            s.nth_checked(PeType::Int16, last).unwrap(),
+            s.nth(PeType::Int16, last).unwrap()
+        );
+        // past the end: structured config error naming index and size
+        let e = s.nth_checked(PeType::Int16, s.len()).unwrap_err();
+        assert_eq!(e.kind(), "config");
+        let msg = e.to_string();
+        assert!(msg.contains(&s.len().to_string()), "{msg}");
+        assert!(msg.contains("out of range"), "{msg}");
+    }
+
+    #[test]
+    fn zero_length_axis_is_a_structured_error_not_a_silent_none() {
+        let mut s = DesignSpace::tiny();
+        s.glb_kb.clear();
+        assert!(s.is_empty());
+        let e = s.validate().unwrap_err();
+        assert_eq!(e.kind(), "config");
+        assert!(e.to_string().contains("glb_kb"), "{e}");
+        // nth_checked reports the degenerate axis, not a bare out-of-range
+        let e = s.nth_checked(PeType::Fp32, 0).unwrap_err();
+        assert!(e.to_string().contains("glb_kb"), "{e}");
+        // every axis is covered by name
+        for (clear, name) in [
+            (0usize, "rows"),
+            (1, "cols"),
+            (2, "spad_ifmap_b"),
+            (3, "spad_filter_b"),
+            (4, "spad_psum_b"),
+            (5, "bandwidth_gbps"),
+        ] {
+            let mut s = DesignSpace::tiny();
+            match clear {
+                0 => s.rows.clear(),
+                1 => s.cols.clear(),
+                2 => s.spad_ifmap_b.clear(),
+                3 => s.spad_filter_b.clear(),
+                4 => s.spad_psum_b.clear(),
+                _ => s.bandwidth_gbps.clear(),
+            }
+            let e = s.validate().unwrap_err();
+            assert!(e.to_string().contains(name), "axis {name}: {e}");
+        }
+        // a healthy space validates
+        DesignSpace::default().validate().unwrap();
+        DesignSpace::tiny().validate().unwrap();
     }
 
     #[test]

@@ -170,6 +170,33 @@ impl TypeSweep {
     }
 }
 
+/// Batch-predict the PPA of a set of configs through `model` — the predict
+/// stage of the streaming pipeline, shared by grid shards
+/// ([`SweepEngine::sweep_type`]) and the guided optimizer's population
+/// batches ([`crate::opt`]).  The feature encoding follows the model: the
+/// per-type models are fitted on the 7 base axes, the unified
+/// cross-precision model on the quant-extended vector.
+pub fn predict_configs(
+    backend: &dyn Backend,
+    model: &PpaModel,
+    cfgs: &[AcceleratorConfig],
+) -> Result<Vec<Ppa>, QappaError> {
+    let quant_features = model.x_std.d() == QUANT_NUM_FEATURES;
+    let d = if quant_features { QUANT_NUM_FEATURES } else { NUM_FEATURES };
+    let mut feats = Vec::with_capacity(cfgs.len() * d);
+    for c in cfgs {
+        if quant_features {
+            feats.extend_from_slice(&c.features_quant());
+        } else {
+            feats.extend_from_slice(&c.features());
+        }
+    }
+    Ok(predict_ppa(backend, model, &feats)?
+        .into_iter()
+        .map(Ppa::from_array)
+        .collect())
+}
+
 /// Evaluate one predicted config on a workload.
 pub fn eval_point(cfg: &AcceleratorConfig, ppa: Ppa, layers: &[Layer]) -> DsePoint {
     // Energy coefficients are structural (jitter-free); the clock the
@@ -255,33 +282,20 @@ impl<'a> SweepEngine<'a> {
             })
             .collect();
 
-        // Feature mode follows the model: the per-type models are fitted on
-        // the 7 base axes, the unified cross-precision model on the
-        // quant-extended vector (bit widths as regression features).
-        let quant_features = model.x_std.d() == QUANT_NUM_FEATURES;
         for (shard_no, (start, shard)) in opts.space.chunks(ty, opts.chunk).enumerate() {
             let t0 = std::time::Instant::now();
-            let d = if quant_features { QUANT_NUM_FEATURES } else { NUM_FEATURES };
-            let mut feats = Vec::with_capacity(shard.len() * d);
-            for c in &shard {
-                if quant_features {
-                    feats.extend_from_slice(&c.features_quant());
-                } else {
-                    feats.extend_from_slice(&c.features());
-                }
-            }
-            let preds = predict_ppa(self.backend, model, &feats)?;
+            let preds = predict_configs(self.backend, model, &shard)?;
             trace(
                 &format!("sweep/{}/shard{shard_no}/predict({})", ty.label(), shard.len()),
                 t0,
             );
-            let items: Vec<(AcceleratorConfig, [f64; 3])> =
+            let items: Vec<(AcceleratorConfig, Ppa)> =
                 shard.into_iter().zip(preds).collect();
             let workers = workers_for(items.len(), opts.workers, 32);
             for (w, wl) in workloads.iter().enumerate() {
                 let t1 = std::time::Instant::now();
                 let pts: Vec<DsePoint> = parallel_map(&items, workers, |(cfg, ppa)| {
-                    eval_point(cfg, Ppa::from_array(*ppa), &wl.layers)
+                    eval_point(cfg, *ppa, &wl.layers)
                 });
                 trace(
                     &format!(

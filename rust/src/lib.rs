@@ -31,6 +31,7 @@
 //! | [`model`]      | §3.4 | PPA regression: features, native baseline, CV driver |
 //! | [`runtime`]    | §3.4 | PJRT artifact loading + batched execution engine |
 //! | [`coordinator`]| §4   | streaming DSE pipeline (sharded sweeps, model cache, incremental Pareto), figure reports (Figs. 2-5) |
+//! | [`opt`]        | —    | guided multi-objective optimizer: constraint-driven NSGA-II / random / hill-climb search over hardware x per-layer precision (`docs/OPTIMIZER.md`) |
 //! | [`util`]       | —    | json / prng / stats / cli / thread-pool substrates |
 //! | [`testkit`]    | —    | property-testing mini-framework (proptest stand-in) with config/layer generators |
 //!
@@ -60,6 +61,7 @@ pub mod config;
 pub mod coordinator;
 pub mod dataflow;
 pub mod model;
+pub mod opt;
 pub mod rtl;
 pub mod runtime;
 pub mod synth;

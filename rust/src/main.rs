@@ -11,6 +11,8 @@
 //! * `fig2`      — model-accuracy reproduction (actual vs estimated)
 //! * `dse` / `explore` — full design-space exploration for a workload
 //!   (built-in name or JSON model file; Fig 3-5)
+//! * `optimize`  — guided multi-objective search over hardware x per-layer
+//!   precision under constraints and a budget (docs/OPTIMIZER.md)
 //! * `figures`   — regenerate all paper figures into `figures/*.csv`
 //! * `rtl`       — emit generated Verilog for a configuration
 //! * `verify`    — run the gate-level simulator against golden models
@@ -22,22 +24,24 @@
 //! fallback.
 
 use qappa::api::{
-    AnalyzeRequest, BackendChoice, FitRequest, PrecisionRequest, Qappa, QappaError, ServeOptions,
-    SynthRequest, WorkloadsRequest, WorkloadsResponse,
+    AnalyzeRequest, BackendChoice, Constraints, FitRequest, OptimizeRequest, PrecisionRequest,
+    Qappa, QappaError, ServeOptions, SynthRequest, WorkloadsRequest, WorkloadsResponse,
 };
 use qappa::config::{AcceleratorConfig, MacKind, PeType};
 use qappa::coordinator::precision::parse_bits_axis;
 use qappa::coordinator::report::{
     dse_scatter_table, dse_stats_table, dse_summary_table, fig2_table, multi_summary_table,
-    precision_summary_table, sweep_stats_table, workload_table,
+    opt_convergence_table, opt_frontier_table, precision_summary_table, sweep_stats_table,
+    workload_table,
 };
-use qappa::coordinator::{DseOptions, NamedWorkload};
+use qappa::coordinator::{DesignSpace, DseOptions, NamedWorkload};
 use qappa::util::cli::Args;
 use qappa::util::table::Table;
 use qappa::workloads;
 
 fn main() {
-    let args = match Args::from_env(&["help", "all", "clean", "quiet", "scatter", "stats"]) {
+    let flags = ["help", "all", "clean", "quiet", "scatter", "stats", "uniform"];
+    let args = match Args::from_env(&flags) {
         Ok(a) => a,
         Err(e) => {
             eprintln!("error: {e}");
@@ -68,6 +72,7 @@ fn dispatch(sub: &str, args: &Args) -> Option<Result<(), QappaError>> {
         "fit" => cmd_fit(args),
         "fig2" | "accuracy" => cmd_fig2(args),
         "dse" | "explore" => cmd_dse(args),
+        "optimize" => cmd_optimize(args),
         "figures" => cmd_figures(args),
         "rtl" => cmd_rtl(args),
         "verify" => cmd_verify(args),
@@ -109,6 +114,18 @@ SUBCOMMANDS
                                          through one unified cross-precision
                                          model, one report row per precision
                                          cell (docs/PRECISION.md)
+  optimize  --workload W [--objectives O1,O2 --budget N --pop N --strategy
+            nsga2|random|hillclimb --max-area-mm2 X --max-power-mw X
+            --max-latency-ms X --min-bits B --uniform
+            --precision SPEC,... | --act-bits/--wt-bits/... --out DIR]
+                                         guided multi-objective search over
+                                         hardware x per-layer precision:
+                                         NSGA-II under an evaluation budget
+                                         and hard constraints, frontier +
+                                         convergence report
+                                         (docs/OPTIMIZER.md); objectives:
+                                         latency, energy, area, power,
+                                         perf/area, perf/energy, edp
   figures   [--all --backend ... --out DIR]
                                          regenerate every figure into CSVs
   rtl       --pe-type T [--out FILE]     emit generated Verilog
@@ -130,6 +147,12 @@ WORKLOADS (--workload W)
 
 Artifacts: set QAPPA_ARTIFACTS or run from the repo root (default:
 ./artifacts). `--backend native` needs no artifacts.
+
+Design space: `--space default|tiny` picks the swept hardware grid
+(paper-scale by default; `tiny` is the 64-point smoke grid).
+
+Progress/stats lines ([store], [engine], [trace]) go to stderr, so piped
+stdout is always a parseable report.
 
 Tracing: set QAPPA_TRACE=1 to print per-phase wall times (training,
 per-shard predict and dataflow evaluation).
@@ -160,7 +183,7 @@ fn parse_config(args: &Args) -> Result<AcceleratorConfig, QappaError> {
 }
 
 /// Build a session from the model/backend flags (`--backend --train --k
-/// --seed --workers --sigma --chunk --topk`), defaults from
+/// --seed --workers --sigma --chunk --topk --space`), defaults from
 /// [`DseOptions::default`].  The backend starts lazily on first use.
 fn session_from(args: &Args) -> Result<Qappa, QappaError> {
     let d = DseOptions::default();
@@ -172,6 +195,17 @@ fn session_from(args: &Args) -> Result<Qappa, QappaError> {
         .sigma(args.get("sigma", d.sigma)?)
         .chunk(args.get("chunk", d.chunk)?)
         .topk(args.get("topk", d.topk)?);
+    if let Some(space) = args.opt("space") {
+        b = b.space(match space {
+            "default" | "paper" => DesignSpace::default(),
+            "tiny" => DesignSpace::tiny(),
+            other => {
+                return Err(QappaError::Config(format!(
+                    "--space: unknown design space '{other}' (expected default|tiny)"
+                )))
+            }
+        });
+    }
     if let Some(choice) = args.opt("backend") {
         b = b.backend(BackendChoice::parse(choice)?);
     }
@@ -331,7 +365,8 @@ fn cmd_dse_precision(
         println!("anchor[{}]: {}", s.workload, s.anchor.cfg.key());
     }
     print!("{}", precision_summary_table(&summaries).render());
-    println!(
+    // Progress/stats to stderr: piped stdout stays a parseable report.
+    eprintln!(
         "[store] models trained: {} (cache hits: {})",
         session.store().misses(),
         session.store().hits()
@@ -384,7 +419,8 @@ fn cmd_dse(args: &Args) -> Result<(), QappaError> {
     if let Some(engine) = session.engine() {
         let s = &engine.stats;
         use std::sync::atomic::Ordering::Relaxed;
-        println!(
+        // Progress/stats to stderr: piped stdout stays a parseable report.
+        eprintln!(
             "[engine] predict: {} rows in {} batches ({} padded rows), fit: {}, loss: {}",
             s.predict_rows.load(Relaxed),
             s.predict_batches.load(Relaxed),
@@ -451,7 +487,8 @@ fn cmd_dse_multi(args: &Args, specs: &[&str]) -> Result<(), QappaError> {
         );
     }
     print!("{}", multi_summary_table(&summaries).render());
-    println!(
+    // Progress/stats to stderr: piped stdout stays a parseable report.
+    eprintln!(
         "[store] models trained: {} (cache hits: {})",
         session.store().misses(),
         session.store().hits()
@@ -461,7 +498,7 @@ fn cmd_dse_multi(args: &Args, specs: &[&str]) -> Result<(), QappaError> {
         .flat_map(|s| s.stats.values().map(|st| st.peak_resident))
         .max()
         .unwrap_or(0);
-    println!(
+    eprintln!(
         "[engine] peak resident points: {} of {} evaluated per (type, workload)",
         peak,
         session.options().space.len()
@@ -473,6 +510,97 @@ fn cmd_dse_multi(args: &Args, specs: &[&str]) -> Result<(), QappaError> {
         let path = format!("{dir}/multi_summary.csv");
         write_csv(&multi_summary_table(&summaries), &path)?;
         println!("wrote {path}");
+    }
+    Ok(())
+}
+
+/// Optional typed flag: absent -> `None`, present-but-unparseable -> error
+/// naming the flag.
+fn flag_opt<T: std::str::FromStr>(args: &Args, name: &str) -> Result<Option<T>, QappaError> {
+    match args.opt(name) {
+        None => Ok(None),
+        Some(s) => s
+            .parse::<T>()
+            .map(Some)
+            .map_err(|_| QappaError::Config(format!("--{name}: cannot parse '{s}'"))),
+    }
+}
+
+/// `qappa optimize`: guided multi-objective search over hardware x
+/// per-layer precision (docs/OPTIMIZER.md).  Thin client of
+/// [`Qappa::optimize`] — the CLI, the serve loop and library callers all
+/// produce identical frontiers for identical seeds.
+fn cmd_optimize(args: &Args) -> Result<(), QappaError> {
+    let workload = args.require("workload")?.to_string();
+    let objectives: Vec<String> = args
+        .opt("objectives")
+        .map(|s| {
+            s.split(',')
+                .map(str::trim)
+                .filter(|o| !o.is_empty())
+                .map(str::to_string)
+                .collect()
+        })
+        .unwrap_or_default();
+    let precision = parse_precision_flags(args)?;
+    let req = OptimizeRequest {
+        workload,
+        objectives,
+        constraints: Constraints {
+            max_area_mm2: flag_opt(args, "max-area-mm2")?,
+            max_power_mw: flag_opt(args, "max-power-mw")?,
+            max_latency_ms: flag_opt(args, "max-latency-ms")?,
+            min_bits: flag_opt(args, "min-bits")?,
+        },
+        strategy: args.opt("strategy").map(str::to_string),
+        budget: flag_opt(args, "budget")?,
+        pop: flag_opt(args, "pop")?,
+        // --seed already feeds the session recipe; the request falls back
+        // to the session seed, so one flag drives both.
+        seed: None,
+        per_layer: if args.flag("uniform") { Some(false) } else { None },
+        precision,
+    };
+    let session = session_from(args)?;
+    let out = args.opt("out").map(str::to_string);
+    args.finish()?;
+
+    let t0 = std::time::Instant::now();
+    let resp = session.optimize(&req)?;
+    let dt = t0.elapsed().as_secs_f64();
+
+    println!(
+        "Guided optimize over {} — strategy={}, objectives=[{}], {} evaluations (budget {})",
+        resp.workload,
+        resp.strategy,
+        resp.objectives.join(", "),
+        resp.evaluated,
+        resp.budget
+    );
+    println!(
+        "frontier: {} points, hypervolume {:.6e} (ref [{}, {}])",
+        resp.frontier.len(),
+        resp.hypervolume,
+        resp.ref_point.first().copied().unwrap_or(f64::NAN),
+        resp.ref_point.get(1).copied().unwrap_or(f64::NAN)
+    );
+    print!("{}", opt_frontier_table(&resp).render());
+    println!("convergence:");
+    print!("{}", opt_convergence_table(&resp).render());
+    // Progress/stats to stderr: piped stdout stays a parseable report.
+    eprintln!(
+        "[store] models trained: {} (cache hits: {}); {:.2}s",
+        session.store().misses(),
+        session.store().hits(),
+        dt
+    );
+    if let Some(dir) = out {
+        let frontier_path = format!("{dir}/optimize_frontier.csv");
+        write_csv(&opt_frontier_table(&resp), &frontier_path)?;
+        println!("wrote {frontier_path}");
+        let conv_path = format!("{dir}/optimize_convergence.csv");
+        write_csv(&opt_convergence_table(&resp), &conv_path)?;
+        println!("wrote {conv_path}");
     }
     Ok(())
 }

@@ -1,0 +1,1043 @@
+//! The guided-search engine: budgeted, seeded multi-objective optimization
+//! over (hardware config, per-layer precision) genomes.
+//!
+//! Three strategies sit behind one [`Strategy`] trait:
+//!
+//! * [`Nsga2`] — NSGA-II-style evolutionary search: binary tournament on
+//!   (constraint-domination rank, crowding distance), uniform crossover and
+//!   step/resample mutation over the [`SearchSpace`] genes, elitist
+//!   environmental selection from the parent+child union.
+//! * [`RandomSearch`] — uniform sampling, the honesty baseline.
+//! * [`HillClimb`] — restarted local search over ±1 axis neighbors with a
+//!   random-weight scalarization per restart.
+//!
+//! Every evaluation is batched through the same predict → dataflow pipeline
+//! the streaming sweep uses ([`predict_configs`] + [`eval_point`] over the
+//! thread pool), deduplicated by genome key, and folded into one global
+//! [`IncrementalFrontier`] archive of feasible points.  Budget counts
+//! **distinct** evaluations; cache hits are free.  Everything is driven by
+//! one [`crate::util::prng::Rng`] stream, so a (strategy, budget, seed)
+//! triple reproduces its frontier bit-for-bit.
+
+use std::collections::HashMap;
+
+use crate::api::error::QappaError;
+use crate::config::AcceleratorConfig;
+use crate::coordinator::explorer::DsePoint;
+use crate::coordinator::pareto::IncrementalFrontier;
+use crate::coordinator::sweep::{eval_point, predict_configs, trace};
+use crate::dataflow::Layer;
+use crate::model::{Backend, PpaModel};
+use crate::opt::genome::{Genome, SearchSpace};
+use crate::opt::objective::{Constraints, Objective};
+use crate::synth::oracle::Ppa;
+use crate::util::pool::{parallel_map, workers_for};
+use crate::util::prng::Rng;
+
+/// Which search strategy drives a run.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum StrategyKind {
+    Nsga2,
+    Random,
+    HillClimb,
+}
+
+impl StrategyKind {
+    pub fn label(self) -> &'static str {
+        match self {
+            StrategyKind::Nsga2 => "nsga2",
+            StrategyKind::Random => "random",
+            StrategyKind::HillClimb => "hillclimb",
+        }
+    }
+
+    pub fn parse(s: &str) -> Result<StrategyKind, QappaError> {
+        match s.to_ascii_lowercase().as_str() {
+            "nsga2" | "nsga-ii" | "nsga" => Ok(StrategyKind::Nsga2),
+            "random" => Ok(StrategyKind::Random),
+            "hillclimb" | "hill-climb" | "hc" => Ok(StrategyKind::HillClimb),
+            other => Err(QappaError::Config(format!(
+                "unknown strategy '{other}' (expected nsga2|random|hillclimb)"
+            ))),
+        }
+    }
+}
+
+/// One guided-search problem: the domain plus what "better" means.
+pub struct OptProblem<'a> {
+    pub search: SearchSpace<'a>,
+    /// Two minimized objectives (see [`crate::opt::objective`]).
+    pub objectives: [Objective; 2],
+    pub constraints: Constraints,
+}
+
+/// Engine knobs.
+#[derive(Debug, Clone, Copy)]
+pub struct OptOptions {
+    pub strategy: StrategyKind,
+    /// Distinct-evaluation budget (the hard spend cap).
+    pub budget: usize,
+    /// Population size (NSGA-II) / batch size (random).
+    pub pop: usize,
+    pub seed: u64,
+}
+
+impl Default for OptOptions {
+    fn default() -> OptOptions {
+        OptOptions { strategy: StrategyKind::Nsga2, budget: 20_000, pop: 64, seed: 42 }
+    }
+}
+
+/// One evaluated genome: the pipeline's design point plus the problem's
+/// view of it.
+#[derive(Debug, Clone)]
+pub struct EvalRecord {
+    pub point: DsePoint,
+    /// Minimized objective values, problem order.
+    pub objs: [f64; 2],
+    /// Total normalized constraint violation (0 = feasible).
+    pub violation: f64,
+}
+
+/// Per-generation (or per-round) convergence snapshot.
+#[derive(Debug, Clone, PartialEq)]
+pub struct GenStat {
+    pub generation: usize,
+    /// Distinct evaluations spent so far.
+    pub evaluated: usize,
+    /// Archive (global frontier) size.
+    pub frontier: usize,
+    /// Archive hypervolume w.r.t. the run's fixed reference corner.
+    pub hypervolume: f64,
+    /// Best (minimum) value seen per objective among feasible points.
+    pub best: [f64; 2],
+}
+
+/// One frontier member of a finished run.
+#[derive(Debug, Clone)]
+pub struct FrontierPoint {
+    pub genome: Genome,
+    pub point: DsePoint,
+    /// Minimized objective values, problem order.
+    pub objs: [f64; 2],
+    /// Precision labels (one per layer, or a single uniform label).
+    pub precision: Vec<String>,
+}
+
+/// Result of one guided-search run.
+pub struct OptResult {
+    pub strategy: &'static str,
+    /// Distinct evaluations spent.
+    pub evaluated: usize,
+    /// The run's reference corner in minimized-objective space (fixed
+    /// after the first batch; hypervolumes are measured against it).
+    pub ref_point: [f64; 2],
+    /// Final archive hypervolume.
+    pub hypervolume: f64,
+    /// Global feasible frontier, sorted by the first objective ascending.
+    pub frontier: Vec<FrontierPoint>,
+    pub generations: Vec<GenStat>,
+}
+
+// ---------------------------------------------------------------------------
+// evaluator
+// ---------------------------------------------------------------------------
+
+enum Slot {
+    Cached(Vec<u32>),
+    Fresh(usize),
+    /// Over budget — not evaluated.
+    Skipped,
+}
+
+/// Batched, cached, budget-capped evaluation of genomes, folding every
+/// feasible point into the global frontier archive.
+pub struct Evaluator<'a> {
+    backend: &'a dyn Backend,
+    model: &'a PpaModel,
+    problem: &'a OptProblem<'a>,
+    workers: usize,
+    budget: usize,
+    cache: HashMap<Vec<u32>, EvalRecord>,
+    /// Distinct evaluations spent.
+    pub evaluated: usize,
+    /// Global feasible frontier in transformed coordinates
+    /// (`(-objs[0], objs[1])` — maximize/minimize form of the shared
+    /// [`IncrementalFrontier`]).
+    pub archive: IncrementalFrontier<(Genome, DsePoint)>,
+    /// Fixed after the first batch (see [`Evaluator::freeze_ref`]).
+    ref_point: Option<[f64; 2]>,
+    max_feasible: Option<[f64; 2]>,
+    max_all: [f64; 2],
+    best: [f64; 2],
+}
+
+impl<'a> Evaluator<'a> {
+    pub fn new(
+        backend: &'a dyn Backend,
+        model: &'a PpaModel,
+        problem: &'a OptProblem<'a>,
+        workers: usize,
+        budget: usize,
+    ) -> Evaluator<'a> {
+        Evaluator {
+            backend,
+            model,
+            problem,
+            workers,
+            budget,
+            cache: HashMap::new(),
+            evaluated: 0,
+            archive: IncrementalFrontier::new(),
+            ref_point: None,
+            max_feasible: None,
+            max_all: [f64::NEG_INFINITY; 2],
+            best: [f64::INFINITY; 2],
+        }
+    }
+
+    pub fn remaining(&self) -> usize {
+        self.budget - self.evaluated.min(self.budget)
+    }
+
+    /// The problem under optimization (for external [`Strategy`] impls).
+    pub fn problem(&self) -> &'a OptProblem<'a> {
+        self.problem
+    }
+
+    pub fn best(&self) -> [f64; 2] {
+        self.best
+    }
+
+    /// Evaluate a batch: cached genomes are free, fresh genomes spend
+    /// budget (first-come within the batch) and genomes beyond the budget
+    /// come back `None`.  One predict call per batch, dataflow evaluation
+    /// over the thread pool — the same pipeline shape as a sweep shard.
+    pub fn eval_batch(
+        &mut self,
+        genomes: &[Genome],
+    ) -> Result<Vec<Option<EvalRecord>>, QappaError> {
+        let mut fresh: Vec<Genome> = Vec::new();
+        let mut fresh_keys: HashMap<Vec<u32>, usize> = HashMap::new();
+        let mut plan: Vec<Slot> = Vec::with_capacity(genomes.len());
+        let budget_left = self.remaining();
+        for g in genomes {
+            let key = g.key();
+            if self.cache.contains_key(&key) {
+                plan.push(Slot::Cached(key));
+                continue;
+            }
+            // copy the index out so the map borrow ends before the insert
+            let dup = fresh_keys.get(&key).copied();
+            if let Some(i) = dup {
+                plan.push(Slot::Fresh(i));
+            } else if fresh.len() >= budget_left {
+                plan.push(Slot::Skipped);
+            } else {
+                fresh_keys.insert(key, fresh.len());
+                plan.push(Slot::Fresh(fresh.len()));
+                fresh.push(g.clone());
+            }
+        }
+
+        let mut records: Vec<EvalRecord> = Vec::with_capacity(fresh.len());
+        if !fresh.is_empty() {
+            let t0 = std::time::Instant::now();
+            let decoded: Vec<(AcceleratorConfig, Vec<Layer>)> =
+                fresh.iter().map(|g| self.problem.search.decode(g)).collect();
+            let cfgs: Vec<AcceleratorConfig> = decoded.iter().map(|(c, _)| *c).collect();
+            let ppas = predict_configs(self.backend, self.model, &cfgs)?;
+            let items: Vec<(AcceleratorConfig, Ppa, Vec<Layer>)> = decoded
+                .into_iter()
+                .zip(ppas)
+                .map(|((c, l), p)| (c, p, l))
+                .collect();
+            let workers = workers_for(items.len(), self.workers, 4);
+            let pts: Vec<DsePoint> = parallel_map(&items, workers, |(cfg, ppa, layers)| {
+                eval_point(cfg, *ppa, layers)
+            });
+            trace(&format!("opt/eval_batch({})", pts.len()), t0);
+            for (g, p) in fresh.iter().zip(pts) {
+                let objs = [
+                    self.problem.objectives[0].value(&p),
+                    self.problem.objectives[1].value(&p),
+                ];
+                let violation = self.problem.constraints.violation(&p);
+                for k in 0..2 {
+                    if objs[k].is_finite() {
+                        self.max_all[k] = self.max_all[k].max(objs[k]);
+                    }
+                }
+                if violation == 0.0 {
+                    let mf = self.max_feasible.get_or_insert([f64::NEG_INFINITY; 2]);
+                    for k in 0..2 {
+                        if objs[k].is_finite() {
+                            mf[k] = mf[k].max(objs[k]);
+                            self.best[k] = self.best[k].min(objs[k]);
+                        }
+                    }
+                    self.archive.push(-objs[0], objs[1], (g.clone(), p.clone()));
+                }
+                let rec = EvalRecord { point: p, objs, violation };
+                self.cache.insert(g.key(), rec.clone());
+                records.push(rec);
+            }
+            self.evaluated += fresh.len();
+        }
+
+        Ok(plan
+            .into_iter()
+            .map(|slot| match slot {
+                Slot::Cached(key) => Some(self.cache[&key].clone()),
+                Slot::Fresh(i) => Some(records[i].clone()),
+                Slot::Skipped => None,
+            })
+            .collect())
+    }
+
+    /// Fix the reference corner from everything evaluated so far (feasible
+    /// maxima when any exist, otherwise all points), with a 25% margin so
+    /// later, slightly-worse frontier entries still contribute.  No-op
+    /// after the first call: per-generation hypervolumes share one corner.
+    pub fn freeze_ref(&mut self) {
+        if self.ref_point.is_some() {
+            return;
+        }
+        let base = self.max_feasible.unwrap_or(self.max_all);
+        let r = |x: f64| if x.is_finite() && x > 0.0 { 1.25 * x } else { 1.0 };
+        self.ref_point = Some([r(base[0]), r(base[1])]);
+    }
+
+    /// The run's reference corner (freezing it now if needed).
+    pub fn ref_point(&mut self) -> [f64; 2] {
+        self.freeze_ref();
+        self.ref_point.expect("ref point frozen")
+    }
+
+    /// Archive hypervolume w.r.t. the fixed reference corner.
+    pub fn hypervolume(&mut self) -> f64 {
+        let r = self.ref_point();
+        self.archive.hypervolume((-r[0], r[1]))
+    }
+
+    /// Convergence snapshot for the current state.  With no feasible point
+    /// seen yet, `best` falls back to the reference corner (the wire
+    /// format carries finite numbers only).
+    pub fn snapshot(&mut self, generation: usize) -> GenStat {
+        let r = self.ref_point();
+        let pick = |x: f64, fallback: f64| if x.is_finite() { x } else { fallback };
+        GenStat {
+            generation,
+            evaluated: self.evaluated,
+            frontier: self.archive.len(),
+            hypervolume: self.hypervolume(),
+            best: [pick(self.best[0], r[0]), pick(self.best[1], r[1])],
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// dominance / ranking helpers (NSGA-II)
+// ---------------------------------------------------------------------------
+
+/// Deb's constraint-domination: feasible beats infeasible, less-violating
+/// beats more-violating, and among feasible points plain Pareto dominance
+/// on the minimized objectives.
+pub fn constrained_dominates(a: &EvalRecord, b: &EvalRecord) -> bool {
+    if a.violation == 0.0 && b.violation > 0.0 {
+        return true;
+    }
+    if a.violation > 0.0 {
+        return b.violation > 0.0 && a.violation < b.violation;
+    }
+    a.objs[0] <= b.objs[0]
+        && a.objs[1] <= b.objs[1]
+        && (a.objs[0] < b.objs[0] || a.objs[1] < b.objs[1])
+}
+
+/// Fast non-dominated sort; returns each index's front rank (0 = best).
+fn nondominated_ranks(recs: &[&EvalRecord]) -> Vec<usize> {
+    let n = recs.len();
+    let mut dominated_by = vec![0usize; n];
+    let mut dominates_list: Vec<Vec<usize>> = vec![Vec::new(); n];
+    for i in 0..n {
+        for j in (i + 1)..n {
+            if constrained_dominates(recs[i], recs[j]) {
+                dominates_list[i].push(j);
+                dominated_by[j] += 1;
+            } else if constrained_dominates(recs[j], recs[i]) {
+                dominates_list[j].push(i);
+                dominated_by[i] += 1;
+            }
+        }
+    }
+    let mut rank = vec![0usize; n];
+    let mut front: Vec<usize> = (0..n).filter(|&i| dominated_by[i] == 0).collect();
+    let mut level = 0;
+    while !front.is_empty() {
+        let mut next = Vec::new();
+        for &i in &front {
+            rank[i] = level;
+            for &j in &dominates_list[i] {
+                dominated_by[j] -= 1;
+                if dominated_by[j] == 0 {
+                    next.push(j);
+                }
+            }
+        }
+        level += 1;
+        front = next;
+    }
+    rank
+}
+
+/// Crowding distance per index, computed within each front.
+fn crowding_distances(recs: &[&EvalRecord], ranks: &[usize]) -> Vec<f64> {
+    let n = recs.len();
+    let mut dist = vec![0.0f64; n];
+    let max_rank = ranks.iter().copied().max().unwrap_or(0);
+    for level in 0..=max_rank {
+        let mut front: Vec<usize> = (0..n).filter(|&i| ranks[i] == level).collect();
+        if front.len() <= 2 {
+            for &i in &front {
+                dist[i] = f64::INFINITY;
+            }
+            continue;
+        }
+        for k in 0..2 {
+            front.sort_by(|&a, &b| recs[a].objs[k].total_cmp(&recs[b].objs[k]));
+            let lo = recs[front[0]].objs[k];
+            let hi = recs[front[front.len() - 1]].objs[k];
+            dist[front[0]] = f64::INFINITY;
+            dist[front[front.len() - 1]] = f64::INFINITY;
+            let span = hi - lo;
+            if span <= 0.0 || !span.is_finite() {
+                continue;
+            }
+            for w in 1..front.len() - 1 {
+                let gap = recs[front[w + 1]].objs[k] - recs[front[w - 1]].objs[k];
+                dist[front[w]] += gap / span;
+            }
+        }
+    }
+    dist
+}
+
+// ---------------------------------------------------------------------------
+// strategies
+// ---------------------------------------------------------------------------
+
+/// A search strategy: spends the evaluator's budget, records convergence.
+pub trait Strategy {
+    fn name(&self) -> &'static str;
+    fn run(&self, ev: &mut Evaluator, rng: &mut Rng) -> Result<Vec<GenStat>, QappaError>;
+}
+
+/// NSGA-II-style evolutionary search (see the module docs).
+pub struct Nsga2 {
+    pub pop: usize,
+}
+
+impl Nsga2 {
+    fn tournament<'p>(
+        rng: &mut Rng,
+        pop: &'p [(Genome, EvalRecord)],
+        ranks: &[usize],
+        crowd: &[f64],
+    ) -> &'p Genome {
+        let i = rng.below(pop.len());
+        let j = rng.below(pop.len());
+        let win = if ranks[i] != ranks[j] {
+            if ranks[i] < ranks[j] { i } else { j }
+        } else if crowd[i] != crowd[j] {
+            if crowd[i] > crowd[j] { i } else { j }
+        } else {
+            i
+        };
+        &pop[win].0
+    }
+
+    /// Elitist environmental selection: best `k` of the union by
+    /// (rank, crowding), deterministic under ties via the stable index
+    /// order.
+    fn select_next(
+        union: Vec<(Genome, EvalRecord)>,
+        k: usize,
+    ) -> Vec<(Genome, EvalRecord)> {
+        let recs: Vec<&EvalRecord> = union.iter().map(|(_, r)| r).collect();
+        let ranks = nondominated_ranks(&recs);
+        let crowd = crowding_distances(&recs, &ranks);
+        let mut order: Vec<usize> = (0..union.len()).collect();
+        order.sort_by(|&a, &b| {
+            ranks[a]
+                .cmp(&ranks[b])
+                .then(crowd[b].total_cmp(&crowd[a]))
+                .then(a.cmp(&b))
+        });
+        order.truncate(k);
+        let keep: std::collections::BTreeSet<usize> = order.into_iter().collect();
+        union
+            .into_iter()
+            .enumerate()
+            .filter_map(|(i, item)| keep.contains(&i).then_some(item))
+            .collect()
+    }
+}
+
+impl Strategy for Nsga2 {
+    fn name(&self) -> &'static str {
+        "nsga2"
+    }
+
+    fn run(&self, ev: &mut Evaluator, rng: &mut Rng) -> Result<Vec<GenStat>, QappaError> {
+        let pop_size = self.pop.max(8);
+        // Initial population: deterministic grid-corner anchors per
+        // palette cell, random fill for diversity.
+        let mut init = ev.problem.search.corner_seeds();
+        init.truncate(pop_size);
+        while init.len() < pop_size {
+            init.push(ev.problem.search.random(rng));
+        }
+        let recs = ev.eval_batch(&init)?;
+        let mut pop: Vec<(Genome, EvalRecord)> = init
+            .into_iter()
+            .zip(recs)
+            .filter_map(|(g, r)| r.map(|r| (g, r)))
+            .collect();
+        ev.freeze_ref();
+        let mut stats = vec![ev.snapshot(0)];
+        if pop.is_empty() {
+            return Ok(stats);
+        }
+
+        let mut generation = 0usize;
+        let mut stall = 0usize;
+        while ev.remaining() > 0 && stall < 5 {
+            generation += 1;
+            let spent_before = ev.evaluated;
+            let recs: Vec<&EvalRecord> = pop.iter().map(|(_, r)| r).collect();
+            let ranks = nondominated_ranks(&recs);
+            let crowd = crowding_distances(&recs, &ranks);
+            let mut children: Vec<Genome> = Vec::with_capacity(pop_size);
+            while children.len() < pop_size {
+                let a = Self::tournament(rng, &pop, &ranks, &crowd).clone();
+                let b = Self::tournament(rng, &pop, &ranks, &crowd).clone();
+                let (mut c1, mut c2) = if rng.f64() < 0.9 {
+                    ev.problem.search.crossover(&a, &b, rng)
+                } else {
+                    (a, b)
+                };
+                ev.problem.search.mutate(&mut c1, rng);
+                ev.problem.search.mutate(&mut c2, rng);
+                children.push(c1);
+                if children.len() < pop_size {
+                    children.push(c2);
+                }
+            }
+            let child_recs = ev.eval_batch(&children)?;
+            let mut union = pop;
+            union.extend(
+                children
+                    .into_iter()
+                    .zip(child_recs)
+                    .filter_map(|(g, r)| r.map(|r| (g, r))),
+            );
+            pop = Self::select_next(union, pop_size);
+            stats.push(ev.snapshot(generation));
+            if ev.evaluated == spent_before {
+                stall += 1; // a whole generation of cache hits
+            } else {
+                stall = 0;
+            }
+        }
+        Ok(stats)
+    }
+}
+
+/// Uniform random sampling at the same budget — the baseline every guided
+/// strategy has to beat.
+pub struct RandomSearch {
+    pub batch: usize,
+}
+
+impl Strategy for RandomSearch {
+    fn name(&self) -> &'static str {
+        "random"
+    }
+
+    fn run(&self, ev: &mut Evaluator, rng: &mut Rng) -> Result<Vec<GenStat>, QappaError> {
+        let batch = self.batch.max(8);
+        let mut stats = Vec::new();
+        let mut round = 0usize;
+        let mut stall = 0usize;
+        while ev.remaining() > 0 && stall < 5 {
+            let spent_before = ev.evaluated;
+            let genomes: Vec<Genome> = (0..batch.min(ev.remaining().max(1)))
+                .map(|_| ev.problem.search.random(rng))
+                .collect();
+            ev.eval_batch(&genomes)?;
+            ev.freeze_ref();
+            stats.push(ev.snapshot(round));
+            round += 1;
+            if ev.evaluated == spent_before {
+                stall += 1; // the whole batch was already cached
+            } else {
+                stall = 0;
+            }
+        }
+        Ok(stats)
+    }
+}
+
+/// Restarted hill climbing: each restart scalarizes the two objectives
+/// with a random weight, then walks ±1-step hardware neighbors (plus a few
+/// precision tweaks) as long as the scalar improves.
+pub struct HillClimb {
+    pub batch: usize,
+}
+
+impl HillClimb {
+    fn score(rec: &EvalRecord, w: f64, r: [f64; 2]) -> f64 {
+        if rec.violation > 0.0 {
+            return 1e12 * (1.0 + rec.violation);
+        }
+        w * rec.objs[0] / r[0] + (1.0 - w) * rec.objs[1] / r[1]
+    }
+
+    fn neighbors(search: &SearchSpace, g: &Genome, rng: &mut Rng) -> Vec<Genome> {
+        let lens = search.axis_lens();
+        let mut out = Vec::new();
+        for i in 0..lens.len() {
+            if g.hw[i] > 0 {
+                let mut n = g.clone();
+                n.hw[i] -= 1;
+                out.push(n);
+            }
+            if g.hw[i] + 1 < lens[i] {
+                let mut n = g.clone();
+                n.hw[i] += 1;
+                out.push(n);
+            }
+        }
+        let pal = search.palette.len();
+        if pal > 1 {
+            for _ in 0..4usize.min(g.prec.len()) {
+                let mut n = g.clone();
+                let i = rng.below(n.prec.len());
+                n.prec[i] = rng.below(pal);
+                out.push(n);
+            }
+        }
+        out
+    }
+}
+
+impl Strategy for HillClimb {
+    fn name(&self) -> &'static str {
+        "hillclimb"
+    }
+
+    fn run(&self, ev: &mut Evaluator, rng: &mut Rng) -> Result<Vec<GenStat>, QappaError> {
+        // Seed batch fixes the reference corner and provides start points.
+        let mut seeds = ev.problem.search.corner_seeds();
+        seeds.truncate(self.batch.max(8));
+        while seeds.len() < self.batch.max(8) {
+            seeds.push(ev.problem.search.random(rng));
+        }
+        let seed_recs = ev.eval_batch(&seeds)?;
+        ev.freeze_ref();
+        let r = ev.ref_point();
+        let mut stats = vec![ev.snapshot(0)];
+        let mut restart = 0usize;
+        let mut pool: Vec<(Genome, EvalRecord)> = seeds
+            .into_iter()
+            .zip(seed_recs)
+            .filter_map(|(g, rec)| rec.map(|rec| (g, rec)))
+            .collect();
+        if pool.is_empty() {
+            return Ok(stats);
+        }
+        let mut stall = 0usize;
+        while ev.remaining() > 0 && stall < 5 {
+            restart += 1;
+            let spent_before = ev.evaluated;
+            let w = rng.f64();
+            // start from the pool's best under this restart's weights
+            let (mut cur_g, mut cur_rec) = pool
+                .iter()
+                .min_by(|a, b| Self::score(&a.1, w, r).total_cmp(&Self::score(&b.1, w, r)))
+                .cloned()
+                .expect("non-empty pool");
+            loop {
+                let neigh = Self::neighbors(&ev.problem.search, &cur_g, rng);
+                if neigh.is_empty() || ev.remaining() == 0 {
+                    break;
+                }
+                let recs = ev.eval_batch(&neigh)?;
+                let mut best: Option<(usize, f64)> = None;
+                for (i, rec) in recs.iter().enumerate() {
+                    if let Some(rec) = rec {
+                        let s = Self::score(rec, w, r);
+                        let better = match best {
+                            None => true,
+                            Some((_, bs)) => s < bs,
+                        };
+                        if better {
+                            best = Some((i, s));
+                        }
+                    }
+                }
+                match best {
+                    Some((i, s)) if s < Self::score(&cur_rec, w, r) => {
+                        cur_g = neigh[i].clone();
+                        cur_rec = recs[i].clone().expect("scored record exists");
+                    }
+                    _ => break, // local optimum under these weights
+                }
+            }
+            pool.push((cur_g, cur_rec));
+            stats.push(ev.snapshot(restart));
+            if ev.remaining() > 0 {
+                // diversify the pool with a fresh random start
+                let g = ev.problem.search.random(rng);
+                if let Some(rec) = ev.eval_batch(std::slice::from_ref(&g))?.remove(0) {
+                    pool.push((g, rec));
+                }
+            }
+            if ev.evaluated == spent_before {
+                stall += 1; // a whole restart of cache hits: domain exhausted
+            } else {
+                stall = 0;
+            }
+        }
+        Ok(stats)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// entry point
+// ---------------------------------------------------------------------------
+
+/// Run one guided search: dispatch the configured strategy, then lift the
+/// evaluator's archive into the sorted frontier report.
+pub fn run_optimize(
+    backend: &dyn Backend,
+    model: &PpaModel,
+    problem: &OptProblem,
+    opts: &OptOptions,
+    workers: usize,
+) -> Result<OptResult, QappaError> {
+    if opts.budget == 0 {
+        return Err(QappaError::Config("optimize: budget must be >= 1".into()));
+    }
+    problem.constraints.validate()?;
+    let mut ev = Evaluator::new(backend, model, problem, workers, opts.budget);
+    let mut rng = Rng::new(opts.seed);
+    let strategy: Box<dyn Strategy> = match opts.strategy {
+        StrategyKind::Nsga2 => Box::new(Nsga2 { pop: opts.pop }),
+        StrategyKind::Random => Box::new(RandomSearch { batch: opts.pop }),
+        StrategyKind::HillClimb => Box::new(HillClimb { batch: opts.pop.min(16) }),
+    };
+    let generations = strategy.run(&mut ev, &mut rng)?;
+    let ref_point = ev.ref_point();
+    let hypervolume = ev.hypervolume();
+    let evaluated = ev.evaluated;
+    let mut frontier: Vec<FrontierPoint> = ev
+        .archive
+        .into_entries()
+        .into_iter()
+        .map(|e| {
+            let (genome, point) = e.payload;
+            let objs = [
+                problem.objectives[0].value(&point),
+                problem.objectives[1].value(&point),
+            ];
+            let precision = problem.search.precision_labels(&genome);
+            FrontierPoint { genome, point, objs, precision }
+        })
+        .collect();
+    frontier.sort_by(|a, b| {
+        a.objs[0]
+            .total_cmp(&b.objs[0])
+            .then(a.objs[1].total_cmp(&b.objs[1]))
+    });
+    Ok(OptResult {
+        strategy: strategy.name(),
+        evaluated,
+        ref_point,
+        hypervolume,
+        frontier,
+        generations,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{ALL_PE_TYPES, QUANT_NUM_FEATURES};
+    use crate::coordinator::explorer::{DseOptions, ModelStore};
+    use crate::coordinator::space::DesignSpace;
+    use crate::model::native::NativeBackend;
+    use crate::model::CvConfig;
+
+    fn tiny_opts() -> DseOptions {
+        DseOptions {
+            space: DesignSpace::tiny(),
+            train_per_type: 96,
+            cv: CvConfig { k: 3, degrees: vec![1, 2], lambdas: vec![1e-3, 1e-2], seed: 1 },
+            seed: 7,
+            workers: 4,
+            sigma: 0.02,
+            chunk: 64,
+            topk: 4,
+        }
+    }
+
+    fn layers() -> Vec<Layer> {
+        vec![
+            Layer::conv("c1", 3, 16, 32, 32, 3, 1, 1),
+            Layer::dw("dw", 16, 16, 3, 1, 1),
+            Layer::pw("pw", 16, 32, 16),
+            Layer::fc("fc", 512, 10),
+        ]
+    }
+
+    fn setup() -> (NativeBackend, ModelStore, DseOptions) {
+        (NativeBackend::new(QUANT_NUM_FEATURES), ModelStore::new(), tiny_opts())
+    }
+
+    fn run(
+        backend: &NativeBackend,
+        model: &PpaModel,
+        opts: &DseOptions,
+        ls: &[Layer],
+        oopts: &OptOptions,
+        constraints: Constraints,
+    ) -> OptResult {
+        let search =
+            SearchSpace::new(&opts.space, ALL_PE_TYPES.to_vec(), ls, true).unwrap();
+        let problem = OptProblem {
+            search,
+            objectives: [Objective::PerfPerArea, Objective::Energy],
+            constraints,
+        };
+        run_optimize(backend, model, &problem, oopts, opts.workers).unwrap()
+    }
+
+    #[test]
+    fn nsga2_respects_budget_and_is_seed_deterministic() {
+        let (backend, store, opts) = setup();
+        let model = store
+            .get_or_train_quant(&backend, &opts, &ALL_PE_TYPES.to_vec())
+            .unwrap();
+        let ls = layers();
+        let oopts = OptOptions { strategy: StrategyKind::Nsga2, budget: 120, pop: 24, seed: 5 };
+        let a = run(&backend, &model, &opts, &ls, &oopts, Constraints::default());
+        assert!(a.evaluated <= 120, "budget exceeded: {}", a.evaluated);
+        assert!(a.evaluated >= 20, "initial population must be evaluated");
+        assert!(!a.frontier.is_empty());
+        assert!(a.hypervolume > 0.0);
+        assert!(!a.generations.is_empty());
+        // convergence stats are monotone in spend and hypervolume
+        for w in a.generations.windows(2) {
+            assert!(w[1].evaluated >= w[0].evaluated);
+            assert!(w[1].hypervolume >= w[0].hypervolume - 1e-12);
+        }
+        // same seed, bit-identical run
+        let b = run(&backend, &model, &opts, &ls, &oopts, Constraints::default());
+        assert_eq!(a.evaluated, b.evaluated);
+        assert_eq!(a.hypervolume, b.hypervolume);
+        assert_eq!(a.frontier.len(), b.frontier.len());
+        for (x, y) in a.frontier.iter().zip(&b.frontier) {
+            assert_eq!(x.genome, y.genome);
+            assert_eq!(x.objs, y.objs);
+            assert_eq!(x.point.cfg, y.point.cfg);
+        }
+        // a different seed explores differently
+        let c = run(
+            &backend,
+            &model,
+            &opts,
+            &ls,
+            &OptOptions { seed: 6, ..oopts },
+            Constraints::default(),
+        );
+        assert!(
+            c.hypervolume != a.hypervolume || c.evaluated != a.evaluated
+                || c.frontier.len() != a.frontier.len()
+        );
+    }
+
+    #[test]
+    fn frontier_is_mutually_nondominated_and_sorted() {
+        let (backend, store, opts) = setup();
+        let model = store
+            .get_or_train_quant(&backend, &opts, &ALL_PE_TYPES.to_vec())
+            .unwrap();
+        let ls = layers();
+        let oopts = OptOptions { strategy: StrategyKind::Nsga2, budget: 100, pop: 20, seed: 3 };
+        let res = run(&backend, &model, &opts, &ls, &oopts, Constraints::default());
+        for (i, a) in res.frontier.iter().enumerate() {
+            for (j, b) in res.frontier.iter().enumerate() {
+                if i == j {
+                    continue;
+                }
+                let dom = a.objs[0] <= b.objs[0]
+                    && a.objs[1] <= b.objs[1]
+                    && (a.objs[0] < b.objs[0] || a.objs[1] < b.objs[1]);
+                assert!(!dom, "frontier member {j} dominated by {i}");
+            }
+        }
+        for w in res.frontier.windows(2) {
+            assert!(w[0].objs[0] <= w[1].objs[0], "frontier sorted by objective 0");
+        }
+    }
+
+    #[test]
+    fn constraints_exclude_infeasible_points_from_the_frontier() {
+        let (backend, store, opts) = setup();
+        let model = store
+            .get_or_train_quant(&backend, &opts, &ALL_PE_TYPES.to_vec())
+            .unwrap();
+        let ls = layers();
+        let oopts = OptOptions { strategy: StrategyKind::Nsga2, budget: 100, pop: 20, seed: 9 };
+        // unconstrained run to pick a binding area bound
+        let free = run(&backend, &model, &opts, &ls, &oopts, Constraints::default());
+        let areas: Vec<f64> = free.frontier.iter().map(|f| f.point.ppa.area_mm2).collect();
+        let max_area = areas.iter().cloned().fold(f64::MIN, f64::max);
+        let min_area = areas.iter().cloned().fold(f64::MAX, f64::min);
+        let bound = 0.5 * (min_area + max_area);
+        let constrained = run(
+            &backend,
+            &model,
+            &opts,
+            &ls,
+            &oopts,
+            Constraints { max_area_mm2: Some(bound), ..Default::default() },
+        );
+        assert!(!constrained.frontier.is_empty());
+        for f in &constrained.frontier {
+            assert!(
+                f.point.ppa.area_mm2 <= bound,
+                "frontier point violates area bound: {} > {bound}",
+                f.point.ppa.area_mm2
+            );
+        }
+        // an impossible bound yields an empty frontier, not a panic
+        let impossible = run(
+            &backend,
+            &model,
+            &opts,
+            &ls,
+            &oopts,
+            Constraints { max_area_mm2: Some(1e-6), ..Default::default() },
+        );
+        assert!(impossible.frontier.is_empty());
+        assert_eq!(impossible.hypervolume, 0.0);
+    }
+
+    #[test]
+    fn all_strategies_run_behind_the_common_trait() {
+        let (backend, store, opts) = setup();
+        let model = store
+            .get_or_train_quant(&backend, &opts, &ALL_PE_TYPES.to_vec())
+            .unwrap();
+        let ls = layers();
+        for kind in [StrategyKind::Nsga2, StrategyKind::Random, StrategyKind::HillClimb] {
+            let oopts = OptOptions { strategy: kind, budget: 60, pop: 16, seed: 13 };
+            let res = run(&backend, &model, &opts, &ls, &oopts, Constraints::default());
+            assert_eq!(res.strategy, kind.label());
+            assert!(res.evaluated <= 60, "{:?}", kind);
+            assert!(!res.frontier.is_empty(), "{:?}", kind);
+            assert!(res.hypervolume > 0.0, "{:?}", kind);
+        }
+        // strategy parsing round-trips
+        for kind in [StrategyKind::Nsga2, StrategyKind::Random, StrategyKind::HillClimb] {
+            assert_eq!(StrategyKind::parse(kind.label()).unwrap(), kind);
+        }
+        assert!(StrategyKind::parse("sa").is_err());
+    }
+
+    #[test]
+    fn budget_zero_and_bad_constraints_are_config_errors() {
+        let (backend, store, opts) = setup();
+        let model = store
+            .get_or_train_quant(&backend, &opts, &ALL_PE_TYPES.to_vec())
+            .unwrap();
+        let ls = layers();
+        let search =
+            SearchSpace::new(&opts.space, ALL_PE_TYPES.to_vec(), &ls, true).unwrap();
+        let problem = OptProblem {
+            search,
+            objectives: [Objective::PerfPerArea, Objective::Energy],
+            constraints: Constraints::default(),
+        };
+        let e = run_optimize(
+            &backend,
+            &model,
+            &problem,
+            &OptOptions { budget: 0, ..Default::default() },
+            2,
+        )
+        .unwrap_err();
+        assert_eq!(e.kind(), "config");
+        assert!(e.to_string().contains("budget"), "{e}");
+        let search =
+            SearchSpace::new(&opts.space, ALL_PE_TYPES.to_vec(), &ls, true).unwrap();
+        let problem = OptProblem {
+            search,
+            objectives: [Objective::PerfPerArea, Objective::Energy],
+            constraints: Constraints { max_power_mw: Some(-3.0), ..Default::default() },
+        };
+        let e = run_optimize(&backend, &model, &problem, &OptOptions::default(), 2)
+            .unwrap_err();
+        assert!(e.to_string().contains("max_power_mw"), "{e}");
+    }
+
+    #[test]
+    fn nondominated_sort_and_crowding_are_sane() {
+        fn rec(o0: f64, o1: f64, v: f64) -> EvalRecord {
+            let cfg = crate::config::AcceleratorConfig::default_with(
+                crate::config::PeType::Int16,
+            );
+            EvalRecord {
+                point: DsePoint {
+                    cfg,
+                    ppa: Ppa { power_mw: 1.0, fmax_mhz: 1.0, area_mm2: 1.0 },
+                    throughput: 1.0,
+                    perf_per_area: 1.0,
+                    energy_mj: 1.0,
+                    utilization: 1.0,
+                },
+                objs: [o0, o1],
+                violation: v,
+            }
+        }
+        // feasible dominates infeasible; violation orders infeasible
+        assert!(constrained_dominates(&rec(9.0, 9.0, 0.0), &rec(1.0, 1.0, 0.5)));
+        assert!(constrained_dominates(&rec(9.0, 9.0, 0.1), &rec(1.0, 1.0, 0.5)));
+        assert!(!constrained_dominates(&rec(1.0, 1.0, 0.5), &rec(9.0, 9.0, 0.0)));
+        // feasible Pareto semantics
+        assert!(constrained_dominates(&rec(1.0, 1.0, 0.0), &rec(1.0, 2.0, 0.0)));
+        assert!(!constrained_dominates(&rec(1.0, 1.0, 0.0), &rec(1.0, 1.0, 0.0)));
+        let pool = [
+            rec(1.0, 4.0, 0.0), // front 0
+            rec(2.0, 2.0, 0.0), // front 0
+            rec(4.0, 1.0, 0.0), // front 0
+            rec(3.0, 3.0, 0.0), // dominated by (2,2): front 1
+            rec(0.0, 0.0, 2.0), // infeasible: ranked below feasible
+        ];
+        let refs: Vec<&EvalRecord> = pool.iter().collect();
+        let ranks = nondominated_ranks(&refs);
+        assert_eq!(ranks[0], 0);
+        assert_eq!(ranks[1], 0);
+        assert_eq!(ranks[2], 0);
+        assert_eq!(ranks[3], 1);
+        assert!(ranks[4] > ranks[3], "infeasible ranks below every feasible front");
+        let crowd = crowding_distances(&refs, &ranks);
+        // boundary members of the first front are infinitely crowded
+        assert!(crowd[0].is_infinite());
+        assert!(crowd[2].is_infinite());
+        assert!(crowd[1].is_finite() && crowd[1] > 0.0);
+    }
+}

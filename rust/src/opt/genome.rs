@@ -1,0 +1,501 @@
+//! Genome encoding of one (hardware config, per-layer precision) candidate
+//! and the variation operators the search engine breeds with.
+//!
+//! A [`Genome`] is pure index space: seven digits selecting one value per
+//! [`DesignSpace`] hardware axis, plus a precision vector of indices into a
+//! validated palette of [`PeType`] cells — one index per layer when
+//! per-layer assignment is on, a single index for a uniform design.
+//! [`SearchSpace::decode`] lowers a genome to the concrete
+//! [`AcceleratorConfig`] + override-carrying layer list that the existing
+//! predict → dataflow pipeline evaluates.
+//!
+//! In per-layer mode the array is provisioned for the **widest** assigned
+//! spec (element-wise max over operand/accumulator widths, the most
+//! expensive datapath kind present): the predicted area/power are those of
+//! hardware that can actually run every layer, so a genome cannot game an
+//! area constraint by declaring a narrow array and running wide layers.
+
+use crate::api::error::QappaError;
+use crate::config::{AcceleratorConfig, MacKind, PeType, QuantSpec};
+use crate::coordinator::space::DesignSpace;
+use crate::dataflow::Layer;
+use crate::util::prng::Rng;
+
+/// Number of hardware axes in a genome (mirrors the [`DesignSpace`] axes).
+pub const HW_GENES: usize = 7;
+
+/// One candidate design: hardware axis digits + precision assignment.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Genome {
+    /// Indices into the design-space axes, in order: rows, cols, glb_kb,
+    /// spad_ifmap_b, spad_filter_b, spad_psum_b, bandwidth_gbps.
+    pub hw: [usize; HW_GENES],
+    /// Palette indices: length 1 (uniform precision) or one per layer.
+    pub prec: Vec<usize>,
+}
+
+impl Genome {
+    /// Stable dedup/cache key.
+    pub fn key(&self) -> Vec<u32> {
+        let mut k = Vec::with_capacity(HW_GENES + self.prec.len());
+        k.extend(self.hw.iter().map(|&i| i as u32));
+        k.extend(self.prec.iter().map(|&i| i as u32));
+        k
+    }
+}
+
+/// The decoded search domain: hardware axes x precision palette x layers.
+pub struct SearchSpace<'a> {
+    space: &'a DesignSpace,
+    /// Validated precision cells the genome indexes into.
+    pub palette: Vec<PeType>,
+    /// The workload being optimized for.
+    pub layers: &'a [Layer],
+    /// One precision gene per layer (mixed precision) vs a single gene.
+    pub per_layer: bool,
+}
+
+impl<'a> SearchSpace<'a> {
+    /// Build a search space, validating the hardware axes (structured
+    /// errors for empty axes — see [`DesignSpace::validate`]), the palette
+    /// and the workload.
+    pub fn new(
+        space: &'a DesignSpace,
+        palette: Vec<PeType>,
+        layers: &'a [Layer],
+        per_layer: bool,
+    ) -> Result<SearchSpace<'a>, QappaError> {
+        space.validate()?;
+        // The optimizer owns the precision axis through the palette; a
+        // quants-extended space (the exhaustive sweep's construction)
+        // would be silently ignored by decode(), so reject it loudly.
+        if !space.quants.is_empty() {
+            return Err(QappaError::Config(
+                "optimize: the design space must not carry a quants axis — \
+                 precision is searched through the palette"
+                    .into(),
+            ));
+        }
+        if palette.is_empty() {
+            return Err(QappaError::Config("optimize: empty precision palette".into()));
+        }
+        for ty in &palette {
+            ty.spec()
+                .validate()
+                .map_err(|e| e.context(format!("optimize: palette cell '{}'", ty.label())))?;
+        }
+        if layers.is_empty() {
+            return Err(QappaError::Workload("optimize: workload has no layers".into()));
+        }
+        Ok(SearchSpace { space, palette, layers, per_layer })
+    }
+
+    /// Lengths of the seven hardware axes, genome order.
+    pub fn axis_lens(&self) -> [usize; HW_GENES] {
+        [
+            self.space.rows.len(),
+            self.space.cols.len(),
+            self.space.glb_kb.len(),
+            self.space.spad_ifmap_b.len(),
+            self.space.spad_filter_b.len(),
+            self.space.spad_psum_b.len(),
+            self.space.bandwidth_gbps.len(),
+        ]
+    }
+
+    /// Precision gene count: one per layer in per-layer mode (when the
+    /// palette offers a choice), a single gene otherwise.
+    pub fn prec_len(&self) -> usize {
+        if self.per_layer && self.palette.len() > 1 {
+            self.layers.len()
+        } else {
+            1
+        }
+    }
+
+    /// Total genes (mutation-rate denominator).
+    pub fn genes(&self) -> usize {
+        HW_GENES + self.prec_len()
+    }
+
+    /// Size of the uniform-precision grid this space embeds (hardware grid
+    /// x palette) — the exhaustive-sweep baseline the optimizer is
+    /// measured against.  The full per-layer space is `|hw| x
+    /// |palette|^|layers|` and is never materialized.
+    pub fn uniform_grid_len(&self) -> usize {
+        self.space.len().max(1) * self.palette.len()
+    }
+
+    /// Uniformly random genome.
+    pub fn random(&self, rng: &mut Rng) -> Genome {
+        let lens = self.axis_lens();
+        let mut hw = [0usize; HW_GENES];
+        for (g, &len) in hw.iter_mut().zip(lens.iter()) {
+            *g = rng.below(len);
+        }
+        let prec = (0..self.prec_len()).map(|_| rng.below(self.palette.len())).collect();
+        Genome { hw, prec }
+    }
+
+    /// Deterministic seeds covering the corners of the embedded uniform
+    /// grid: for each palette cell, the all-minimum, all-maximum and
+    /// mid-index hardware points at uniform precision.  Seeding the
+    /// population with these anchors the search at the extremes each
+    /// objective is pulled toward.
+    pub fn corner_seeds(&self) -> Vec<Genome> {
+        let lens = self.axis_lens();
+        let prec_len = self.prec_len();
+        let mut out = Vec::with_capacity(3 * self.palette.len());
+        for cell in 0..self.palette.len() {
+            for pick in 0..3usize {
+                let mut hw = [0usize; HW_GENES];
+                for (g, &len) in hw.iter_mut().zip(lens.iter()) {
+                    *g = match pick {
+                        0 => 0,
+                        1 => len - 1,
+                        _ => len / 2,
+                    };
+                }
+                out.push(Genome { hw, prec: vec![cell; prec_len] });
+            }
+        }
+        out
+    }
+
+    /// The widest spec the genome assigns anywhere — the precision the
+    /// array is provisioned (and therefore priced) at.
+    fn array_type(&self, prec: &[usize]) -> PeType {
+        if prec.len() == 1 {
+            return self.palette[prec[0]];
+        }
+        let mut act = 0u32;
+        let mut wt = 0u32;
+        let mut psum = 0u32;
+        let mut mac = MacKind::IntExact;
+        let mut mac_code = f64::NEG_INFINITY;
+        let mut light_terms = 0u32;
+        for &i in prec {
+            let q = self.palette[i].spec();
+            act = act.max(q.act_bits);
+            wt = wt.max(q.wt_bits);
+            psum = psum.max(q.psum_bits);
+            if let MacKind::Lightweight(n) = q.mac {
+                light_terms = light_terms.max(n);
+            }
+            if q.mac.code() > mac_code {
+                mac_code = q.mac.code();
+                mac = q.mac;
+            }
+        }
+        // The priciest lightweight variant present, if lightweight won.
+        if let MacKind::Lightweight(_) = mac {
+            mac = MacKind::Lightweight(light_terms.max(1));
+        }
+        PeType::from_spec(QuantSpec { act_bits: act, wt_bits: wt, psum_bits: psum, mac })
+    }
+
+    /// Lower a genome to the concrete design the pipeline evaluates: the
+    /// accelerator config (array at the widest assigned spec) and the
+    /// layer list with per-layer precision overrides installed.  Any
+    /// precision overrides the source workload carried are replaced by the
+    /// genome's assignment (the optimizer owns the precision axis).
+    pub fn decode(&self, g: &Genome) -> (AcceleratorConfig, Vec<Layer>) {
+        let array = self.array_type(&g.prec);
+        let cfg = AcceleratorConfig {
+            pe_type: array,
+            pe_rows: self.space.rows[g.hw[0]],
+            pe_cols: self.space.cols[g.hw[1]],
+            glb_kb: self.space.glb_kb[g.hw[2]],
+            spad_ifmap_b: self.space.spad_ifmap_b[g.hw[3]],
+            spad_filter_b: self.space.spad_filter_b[g.hw[4]],
+            spad_psum_b: self.space.spad_psum_b[g.hw[5]],
+            bandwidth_gbps: self.space.bandwidth_gbps[g.hw[6]],
+        };
+        let array_spec = cfg.quant();
+        let mut layers = self.layers.to_vec();
+        if g.prec.len() == 1 {
+            for l in layers.iter_mut() {
+                l.quant = None;
+            }
+        } else {
+            for (l, &i) in layers.iter_mut().zip(&g.prec) {
+                let spec = self.palette[i].spec();
+                l.quant = if spec == array_spec { None } else { Some(spec) };
+            }
+        }
+        (cfg, layers)
+    }
+
+    /// Per-layer precision labels of a genome (report surface): one label
+    /// per layer in per-layer mode, a single label for a uniform design.
+    pub fn precision_labels(&self, g: &Genome) -> Vec<String> {
+        g.prec.iter().map(|&i| self.palette[i].label()).collect()
+    }
+
+    /// Uniform crossover: each gene swaps between the children with
+    /// probability 1/2.
+    pub fn crossover(&self, a: &Genome, b: &Genome, rng: &mut Rng) -> (Genome, Genome) {
+        let mut c1 = a.clone();
+        let mut c2 = b.clone();
+        for i in 0..HW_GENES {
+            if rng.f64() < 0.5 {
+                std::mem::swap(&mut c1.hw[i], &mut c2.hw[i]);
+            }
+        }
+        let n = c1.prec.len().min(c2.prec.len());
+        for i in 0..n {
+            if rng.f64() < 0.5 {
+                std::mem::swap(&mut c1.prec[i], &mut c2.prec[i]);
+            }
+        }
+        (c1, c2)
+    }
+
+    /// Mutate in place: each gene flips with probability `1/genes`; half
+    /// of the flips take a ±1 step along the axis (local refinement on the
+    /// smooth PPA landscape), half resample uniformly (escape hatch).  If
+    /// the pass changed nothing, one random gene is forced so a child is
+    /// never a clone of its parent.
+    pub fn mutate(&self, g: &mut Genome, rng: &mut Rng) {
+        let lens = self.axis_lens();
+        let pm = 1.0 / self.genes() as f64;
+        let mut changed = false;
+        for i in 0..HW_GENES {
+            if rng.f64() < pm {
+                changed |= self.mutate_gene(&mut g.hw[i], lens[i], rng);
+            }
+        }
+        let pal = self.palette.len();
+        for gene in g.prec.iter_mut() {
+            if rng.f64() < pm {
+                changed |= self.mutate_gene(gene, pal, rng);
+            }
+        }
+        if !changed {
+            // Force one flip so a child is never a parent clone — unless
+            // every gene sits on a length-1 axis (a fully degenerate
+            // domain), in which case there is nothing to move.
+            let movable = lens.iter().any(|&l| l > 1) || (pal > 1 && !g.prec.is_empty());
+            while movable && !changed {
+                let pick = rng.below(HW_GENES + g.prec.len());
+                changed = if pick < HW_GENES {
+                    self.mutate_gene(&mut g.hw[pick], lens[pick], rng)
+                } else {
+                    self.mutate_gene(&mut g.prec[pick - HW_GENES], pal, rng)
+                };
+            }
+        }
+    }
+
+    /// One gene flip; returns whether the value actually moved.
+    fn mutate_gene(&self, gene: &mut usize, len: usize, rng: &mut Rng) -> bool {
+        if len <= 1 {
+            return false;
+        }
+        let old = *gene;
+        if rng.f64() < 0.5 {
+            // ±1 step, clamped to the axis
+            *gene = if rng.f64() < 0.5 {
+                gene.saturating_sub(1)
+            } else {
+                (*gene + 1).min(len - 1)
+            };
+        } else {
+            *gene = rng.below(len);
+        }
+        *gene != old
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::ALL_PE_TYPES;
+
+    fn layers() -> Vec<Layer> {
+        vec![
+            Layer::conv("c1", 3, 16, 32, 32, 3, 1, 1),
+            Layer::dw("dw", 16, 16, 3, 1, 1),
+            Layer::fc("fc", 256, 10),
+        ]
+    }
+
+    fn space() -> DesignSpace {
+        DesignSpace::tiny()
+    }
+
+    #[test]
+    fn random_genomes_decode_to_valid_designs() {
+        let s = space();
+        let ls = layers();
+        let search = SearchSpace::new(&s, ALL_PE_TYPES.to_vec(), &ls, true).unwrap();
+        let mut rng = Rng::new(7);
+        for _ in 0..200 {
+            let g = search.random(&mut rng);
+            assert_eq!(g.prec.len(), ls.len());
+            let (cfg, decoded) = search.decode(&g);
+            cfg.validate().unwrap();
+            assert_eq!(decoded.len(), ls.len());
+            // every override stays within the palette's specs
+            for l in &decoded {
+                if let Some(q) = l.quant {
+                    assert!(ALL_PE_TYPES.iter().any(|t| t.spec() == q));
+                    assert_ne!(q, cfg.quant(), "override equal to the array spec must be None");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn decode_is_deterministic_and_keyed() {
+        let s = space();
+        let ls = layers();
+        let search = SearchSpace::new(&s, ALL_PE_TYPES.to_vec(), &ls, true).unwrap();
+        let mut rng = Rng::new(3);
+        let g = search.random(&mut rng);
+        let (c1, l1) = search.decode(&g);
+        let (c2, l2) = search.decode(&g);
+        assert_eq!(c1, c2);
+        assert_eq!(l1, l2);
+        assert_eq!(g.key(), g.clone().key());
+        let h = search.random(&mut rng);
+        if g != h {
+            assert_ne!(g.key(), h.key());
+        }
+    }
+
+    #[test]
+    fn array_is_provisioned_for_the_widest_assigned_spec() {
+        let s = space();
+        let ls = layers();
+        let palette = vec![
+            PeType::from_spec(QuantSpec::int(4, 4)),
+            PeType::Int16,
+            PeType::LightPe1,
+        ];
+        let search = SearchSpace::new(&s, palette, &ls, true).unwrap();
+        // all layers at INT4 -> array is the INT4 cell
+        let g = Genome { hw: [0; HW_GENES], prec: vec![0, 0, 0] };
+        let (cfg, _) = search.decode(&g);
+        assert_eq!(cfg.quant(), QuantSpec::int(4, 4));
+        // mixing INT4 with INT16 -> array widens to cover INT16
+        let g = Genome { hw: [0; HW_GENES], prec: vec![0, 1, 0] };
+        let (cfg, dec) = search.decode(&g);
+        assert!(cfg.quant().act_bits >= 16 && cfg.quant().psum_bits >= 32);
+        // the INT4 layers carry overrides, the INT16 layer matches the array
+        assert!(dec[0].quant.is_some() && dec[2].quant.is_some());
+        // mixing in a lightweight cell promotes the datapath kind
+        let g = Genome { hw: [0; HW_GENES], prec: vec![0, 1, 2] };
+        let (cfg, _) = search.decode(&g);
+        assert!(cfg.quant().is_light());
+        assert!(cfg.quant().act_bits >= 16);
+        cfg.validate().unwrap();
+    }
+
+    #[test]
+    fn uniform_mode_uses_one_gene_and_no_overrides() {
+        let s = space();
+        let ls = layers();
+        let search = SearchSpace::new(&s, ALL_PE_TYPES.to_vec(), &ls, false).unwrap();
+        assert_eq!(search.prec_len(), 1);
+        let mut rng = Rng::new(5);
+        let g = search.random(&mut rng);
+        assert_eq!(g.prec.len(), 1);
+        let (cfg, dec) = search.decode(&g);
+        assert_eq!(cfg.pe_type, search.palette[g.prec[0]]);
+        assert!(dec.iter().all(|l| l.quant.is_none()));
+        // single-cell palettes degenerate to one gene even per-layer
+        let one = SearchSpace::new(&s, vec![PeType::Int16], &ls, true).unwrap();
+        assert_eq!(one.prec_len(), 1);
+        assert_eq!(one.uniform_grid_len(), s.len());
+    }
+
+    #[test]
+    fn variation_operators_stay_in_range_and_are_seeded() {
+        let s = space();
+        let ls = layers();
+        let search = SearchSpace::new(&s, ALL_PE_TYPES.to_vec(), &ls, true).unwrap();
+        let lens = search.axis_lens();
+        let mut rng = Rng::new(11);
+        let a = search.random(&mut rng);
+        let b = search.random(&mut rng);
+        let (c1, c2) = search.crossover(&a, &b, &mut rng);
+        for c in [&c1, &c2] {
+            for (i, &g) in c.hw.iter().enumerate() {
+                assert!(g < lens[i]);
+            }
+            for &p in &c.prec {
+                assert!(p < search.palette.len());
+            }
+        }
+        // crossover conserves the multiset of genes per position
+        for i in 0..HW_GENES {
+            let mut before = [a.hw[i], b.hw[i]];
+            let mut after = [c1.hw[i], c2.hw[i]];
+            before.sort_unstable();
+            after.sort_unstable();
+            assert_eq!(before, after);
+        }
+        // mutation always changes something and stays in range
+        for seed in 0..50u64 {
+            let mut rng = Rng::new(seed);
+            let mut g = search.random(&mut rng);
+            let orig = g.clone();
+            search.mutate(&mut g, &mut rng);
+            assert_ne!(g, orig, "seed {seed}: mutation must move the genome");
+            for (i, &d) in g.hw.iter().enumerate() {
+                assert!(d < lens[i]);
+            }
+            for &p in &g.prec {
+                assert!(p < search.palette.len());
+            }
+        }
+        // same seed, same stream
+        let mut r1 = Rng::new(99);
+        let mut r2 = Rng::new(99);
+        assert_eq!(search.random(&mut r1), search.random(&mut r2));
+    }
+
+    #[test]
+    fn corner_seeds_cover_extremes_per_cell() {
+        let s = space();
+        let ls = layers();
+        let search = SearchSpace::new(&s, ALL_PE_TYPES.to_vec(), &ls, true).unwrap();
+        let seeds = search.corner_seeds();
+        assert_eq!(seeds.len(), 3 * search.palette.len());
+        let lens = search.axis_lens();
+        for g in &seeds {
+            assert!(g.prec.iter().all(|&p| p == g.prec[0]), "seeds are uniform-precision");
+            let (cfg, _) = search.decode(g);
+            cfg.validate().unwrap();
+            for (i, &d) in g.hw.iter().enumerate() {
+                assert!(d < lens[i]);
+            }
+        }
+        // the all-min and all-max corners are present
+        assert!(seeds.iter().any(|g| g.hw.iter().all(|&d| d == 0)));
+        assert!(seeds
+            .iter()
+            .any(|g| g.hw.iter().zip(lens.iter()).all(|(&d, &l)| d == l - 1)));
+    }
+
+    #[test]
+    fn empty_inputs_are_structured_errors() {
+        let s = space();
+        let ls = layers();
+        let e = SearchSpace::new(&s, Vec::new(), &ls, true).unwrap_err();
+        assert_eq!(e.kind(), "config");
+        let empty: Vec<Layer> = Vec::new();
+        let e = SearchSpace::new(&s, ALL_PE_TYPES.to_vec(), &empty, true).unwrap_err();
+        assert_eq!(e.kind(), "workload");
+        let mut bad = DesignSpace::tiny();
+        bad.rows.clear();
+        let e = SearchSpace::new(&bad, ALL_PE_TYPES.to_vec(), &ls, true).unwrap_err();
+        assert!(e.to_string().contains("rows"), "{e}");
+        // a quants-extended space is rejected, not silently ignored
+        let quanted = DesignSpace::tiny().with_quants(ALL_PE_TYPES.to_vec());
+        let e = SearchSpace::new(&quanted, ALL_PE_TYPES.to_vec(), &ls, true).unwrap_err();
+        assert_eq!(e.kind(), "config");
+        assert!(e.to_string().contains("quants"), "{e}");
+    }
+}

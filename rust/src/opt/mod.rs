@@ -1,0 +1,39 @@
+//! Guided multi-objective optimization — constraint-driven search over
+//! hardware × per-layer precision.
+//!
+//! The exhaustive DSE ([`crate::coordinator`]) widens with every axis: the
+//! precision grid alone multiplies the hardware grid into millions of
+//! cells, and the per-layer assignment space (`|palette|^|layers|`) cannot
+//! be enumerated at all.  This subsystem searches that joint space under a
+//! fixed evaluation budget instead:
+//!
+//! * [`objective`] — named objectives (latency, energy, area, power,
+//!   perf/area, perf/energy, EDP), canonicalized to minimize, plus hard
+//!   constraints (`area_mm2 <= X`, `power_mw <= X`, `latency <= X ms`,
+//!   `min bits >= b`) evaluated off the existing dataflow cost struct;
+//! * [`genome`] — the (hardware axes × per-layer precision) encoding and
+//!   its seeded variation operators;
+//! * [`engine`] — NSGA-II-style evolutionary search with random-sampling
+//!   and hill-climb baselines behind a common [`Strategy`] trait, batching
+//!   every evaluation through the streaming sweep's predict → dataflow
+//!   pipeline and folding feasible points into one
+//!   [`crate::coordinator::pareto::IncrementalFrontier`] archive whose
+//!   [`hypervolume`](crate::coordinator::pareto::hypervolume) is the
+//!   convergence currency.
+//!
+//! Sessions expose the subsystem as [`crate::api::Qappa::optimize`]
+//! (`qappa optimize` on the CLI, the `optimize` op over `qappa serve`);
+//! models come from the session's `ModelStore`, so guided search shares
+//! training passes with every other query.  Grammar, strategy comparison
+//! and budget guidance: `docs/OPTIMIZER.md`.
+
+pub mod engine;
+pub mod genome;
+pub mod objective;
+
+pub use engine::{
+    run_optimize, EvalRecord, Evaluator, FrontierPoint, GenStat, HillClimb, Nsga2,
+    OptOptions, OptProblem, OptResult, RandomSearch, Strategy, StrategyKind,
+};
+pub use genome::{Genome, SearchSpace};
+pub use objective::{resolve_objectives, Constraints, Objective, ALL_OBJECTIVES};

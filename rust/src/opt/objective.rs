@@ -1,0 +1,289 @@
+//! Named objectives and hard constraints for the guided optimizer.
+//!
+//! Every objective is canonicalized to a **minimized** scalar read off the
+//! already-evaluated [`DsePoint`] (the `dataflow::evaluate_network` cost
+//! struct flows through [`crate::coordinator::sweep::eval_point`]), so the
+//! search engine never needs to know which direction a metric improves in:
+//! smaller is always better.  Pareto dominance is invariant under the
+//! per-objective monotone transforms used here (e.g. `perf/area` is
+//! minimized as its reciprocal), so the frontier the engine reports is the
+//! frontier of the raw metrics.
+//!
+//! Constraints are *hard*: a point violating any of them is excluded from
+//! the frontier archive outright, and NSGA-II ranks infeasible points below
+//! every feasible one (Deb's constraint-domination), ordered by total
+//! normalized violation so the population still climbs toward feasibility.
+//! `min_bits` is a genome-level constraint — it prunes the precision
+//! palette before the search starts rather than penalizing evaluations
+//! (see [`crate::api::session::Qappa::optimize`]).
+
+use crate::api::error::QappaError;
+use crate::coordinator::explorer::DsePoint;
+
+/// A named optimization objective, canonicalized to minimize.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Objective {
+    /// End-to-end latency, seconds per inference.
+    Latency,
+    /// Energy per inference, mJ.
+    Energy,
+    /// Array area, mm².
+    Area,
+    /// Array power, mW.
+    Power,
+    /// Throughput per mm², minimized as its reciprocal.
+    PerfPerArea,
+    /// Throughput per mJ, minimized as its reciprocal (numerically the
+    /// energy-delay product — `1 / (perf/energy) = energy x latency`).
+    PerfPerEnergy,
+    /// Energy-delay product, mJ·s.
+    Edp,
+}
+
+/// Every objective, in help/docs order.
+pub const ALL_OBJECTIVES: [Objective; 7] = [
+    Objective::Latency,
+    Objective::Energy,
+    Objective::Area,
+    Objective::Power,
+    Objective::PerfPerArea,
+    Objective::PerfPerEnergy,
+    Objective::Edp,
+];
+
+impl Objective {
+    /// Canonical name (the wire/CLI identity).
+    pub fn label(self) -> &'static str {
+        match self {
+            Objective::Latency => "latency",
+            Objective::Energy => "energy",
+            Objective::Area => "area",
+            Objective::Power => "power",
+            Objective::PerfPerArea => "perf/area",
+            Objective::PerfPerEnergy => "perf/energy",
+            Objective::Edp => "edp",
+        }
+    }
+
+    /// Parse a name or alias, case-insensitively.  Unknown names are
+    /// config errors listing the vocabulary.
+    pub fn parse(s: &str) -> Result<Objective, QappaError> {
+        match s.to_ascii_lowercase().as_str() {
+            "latency" | "lat" => Ok(Objective::Latency),
+            "energy" => Ok(Objective::Energy),
+            "area" => Ok(Objective::Area),
+            "power" => Ok(Objective::Power),
+            "perf/area" | "perf_per_area" | "perfarea" => Ok(Objective::PerfPerArea),
+            "perf/energy" | "perf_per_energy" | "perfenergy" => Ok(Objective::PerfPerEnergy),
+            "edp" => Ok(Objective::Edp),
+            other => Err(QappaError::Config(format!(
+                "unknown objective '{other}' (expected {})",
+                ALL_OBJECTIVES.map(|o| o.label()).join("|")
+            ))),
+        }
+    }
+
+    /// The minimized scalar for one evaluated design point.
+    pub fn value(self, p: &DsePoint) -> f64 {
+        let latency_s = 1.0 / p.throughput.max(1e-300);
+        match self {
+            Objective::Latency => latency_s,
+            Objective::Energy => p.energy_mj,
+            Objective::Area => p.ppa.area_mm2,
+            Objective::Power => p.ppa.power_mw,
+            Objective::PerfPerArea => 1.0 / p.perf_per_area.max(1e-300),
+            Objective::PerfPerEnergy | Objective::Edp => p.energy_mj * latency_s,
+        }
+    }
+}
+
+/// Resolve a list of objective names into the engine's two-objective form.
+/// An empty list means the paper's classic pair (perf/area, energy).
+pub fn resolve_objectives(names: &[String]) -> Result<[Objective; 2], QappaError> {
+    if names.is_empty() {
+        return Ok([Objective::PerfPerArea, Objective::Energy]);
+    }
+    if names.len() != 2 {
+        return Err(QappaError::Config(format!(
+            "optimize: exactly two objectives are required (got {}); \
+             available: {}",
+            names.len(),
+            ALL_OBJECTIVES.map(|o| o.label()).join(", ")
+        )));
+    }
+    let a = Objective::parse(&names[0])?;
+    let b = Objective::parse(&names[1])?;
+    // Distinct by *value*, not just by name: `perf/energy` and `edp`
+    // minimize the same scalar, so pairing them would silently collapse
+    // the search into a single objective.
+    let canonical = |o: Objective| match o {
+        Objective::Edp => Objective::PerfPerEnergy,
+        other => other,
+    };
+    if canonical(a) == canonical(b) {
+        return Err(QappaError::Config(format!(
+            "optimize: objectives must be distinct (got '{}' and '{}', which \
+             minimize the same quantity)",
+            a.label(),
+            b.label()
+        )));
+    }
+    Ok([a, b])
+}
+
+/// Hard constraints on the search.  `max_*` bounds are evaluated on each
+/// design point; `min_bits` prunes the precision palette up front.
+#[derive(Debug, Clone, Copy, PartialEq, Default)]
+pub struct Constraints {
+    /// `area_mm2 <= X` on the (predicted) array area.
+    pub max_area_mm2: Option<f64>,
+    /// `power_mw <= X` on the (predicted) array power.
+    pub max_power_mw: Option<f64>,
+    /// `latency <= X` milliseconds per inference.
+    pub max_latency_ms: Option<f64>,
+    /// Every precision cell in the palette must have `act_bits >= b` and
+    /// `wt_bits >= b` (an accuracy floor: the optimizer may not quantize
+    /// below it).
+    pub min_bits: Option<u32>,
+}
+
+impl Constraints {
+    pub fn is_empty(&self) -> bool {
+        self.max_area_mm2.is_none()
+            && self.max_power_mw.is_none()
+            && self.max_latency_ms.is_none()
+            && self.min_bits.is_none()
+    }
+
+    /// Bounds must be positive; errors name the field.
+    pub fn validate(&self) -> Result<(), QappaError> {
+        for (field, v) in [
+            ("max_area_mm2", self.max_area_mm2),
+            ("max_power_mw", self.max_power_mw),
+            ("max_latency_ms", self.max_latency_ms),
+        ] {
+            if let Some(x) = v {
+                if !(x > 0.0) {
+                    return Err(QappaError::Config(format!(
+                        "optimize: constraint {field} must be a positive number (got {x})"
+                    )));
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// Total normalized violation of the evaluated bounds: 0 when every
+    /// constraint holds, otherwise the sum of relative excesses — the
+    /// constraint-domination key NSGA-II ranks infeasible points by.
+    /// (`min_bits` never contributes: it is enforced on the palette.)
+    pub fn violation(&self, p: &DsePoint) -> f64 {
+        let mut v = 0.0;
+        if let Some(x) = self.max_area_mm2 {
+            v += ((p.ppa.area_mm2 - x) / x).max(0.0);
+        }
+        if let Some(x) = self.max_power_mw {
+            v += ((p.ppa.power_mw - x) / x).max(0.0);
+        }
+        if let Some(x) = self.max_latency_ms {
+            let lat_ms = 1e3 / p.throughput.max(1e-300);
+            v += ((lat_ms - x) / x).max(0.0);
+        }
+        v
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{AcceleratorConfig, PeType};
+    use crate::synth::oracle::Ppa;
+
+    fn point(power_mw: f64, area_mm2: f64, throughput: f64, energy_mj: f64) -> DsePoint {
+        DsePoint {
+            cfg: AcceleratorConfig::default_with(PeType::Int16),
+            ppa: Ppa { power_mw, fmax_mhz: 800.0, area_mm2 },
+            throughput,
+            perf_per_area: throughput / area_mm2,
+            energy_mj,
+            utilization: 0.8,
+        }
+    }
+
+    #[test]
+    fn objective_values_canonicalize_to_minimize() {
+        let p = point(250.0, 2.0, 100.0, 5.0);
+        assert!((Objective::Latency.value(&p) - 0.01).abs() < 1e-12);
+        assert_eq!(Objective::Energy.value(&p), 5.0);
+        assert_eq!(Objective::Area.value(&p), 2.0);
+        assert_eq!(Objective::Power.value(&p), 250.0);
+        assert!((Objective::PerfPerArea.value(&p) - 2.0 / 100.0).abs() < 1e-12);
+        // perf/energy inverse == EDP: energy x latency
+        assert!((Objective::PerfPerEnergy.value(&p) - 0.05).abs() < 1e-12);
+        assert_eq!(Objective::PerfPerEnergy.value(&p), Objective::Edp.value(&p));
+        // better points score lower on every objective
+        let better = point(200.0, 1.5, 150.0, 4.0);
+        for o in ALL_OBJECTIVES {
+            assert!(o.value(&better) < o.value(&p), "{}", o.label());
+        }
+    }
+
+    #[test]
+    fn objective_parse_roundtrip_and_aliases() {
+        for o in ALL_OBJECTIVES {
+            assert_eq!(Objective::parse(o.label()).unwrap(), o);
+            assert_eq!(Objective::parse(&o.label().to_ascii_uppercase()).unwrap(), o);
+        }
+        assert_eq!(Objective::parse("lat").unwrap(), Objective::Latency);
+        assert_eq!(Objective::parse("perf_per_area").unwrap(), Objective::PerfPerArea);
+        let e = Objective::parse("bogus").unwrap_err();
+        assert_eq!(e.kind(), "config");
+        assert!(e.to_string().contains("perf/area"), "{e}");
+    }
+
+    #[test]
+    fn resolve_objectives_defaults_and_rejects() {
+        assert_eq!(
+            resolve_objectives(&[]).unwrap(),
+            [Objective::PerfPerArea, Objective::Energy]
+        );
+        let two = resolve_objectives(&["lat".into(), "energy".into()]).unwrap();
+        assert_eq!(two, [Objective::Latency, Objective::Energy]);
+        let e = resolve_objectives(&["lat".into()]).unwrap_err();
+        assert!(e.to_string().contains("exactly two"), "{e}");
+        let e = resolve_objectives(&["energy".into(), "energy".into()]).unwrap_err();
+        assert!(e.to_string().contains("distinct"), "{e}");
+        // value-aliased pair: perf/energy and edp minimize the same scalar
+        let e = resolve_objectives(&["perf/energy".into(), "edp".into()]).unwrap_err();
+        assert!(e.to_string().contains("distinct"), "{e}");
+        assert!(resolve_objectives(&["lat".into(), "nope".into()]).is_err());
+    }
+
+    #[test]
+    fn constraint_violation_is_zero_when_satisfied_and_scales_with_excess() {
+        let c = Constraints {
+            max_area_mm2: Some(2.5),
+            max_power_mw: Some(300.0),
+            max_latency_ms: Some(20.0),
+            min_bits: Some(4),
+        };
+        c.validate().unwrap();
+        // satisfied on every axis
+        assert_eq!(c.violation(&point(250.0, 2.0, 100.0, 5.0)), 0.0);
+        // area 25% over budget
+        let v = c.violation(&point(250.0, 3.125, 100.0, 5.0));
+        assert!((v - 0.25).abs() < 1e-12, "{v}");
+        // violations on several axes sum
+        let v2 = c.violation(&point(600.0, 5.0, 10.0, 5.0));
+        assert!(v2 > 1.0, "{v2}");
+        // no constraints: everything feasible
+        assert_eq!(Constraints::default().violation(&point(1e9, 1e9, 1e-9, 1e9)), 0.0);
+        assert!(Constraints::default().is_empty());
+        assert!(!c.is_empty());
+        // non-positive bounds are config errors naming the field
+        let bad = Constraints { max_area_mm2: Some(0.0), ..Default::default() };
+        let e = bad.validate().unwrap_err();
+        assert_eq!(e.kind(), "config");
+        assert!(e.to_string().contains("max_area_mm2"), "{e}");
+    }
+}

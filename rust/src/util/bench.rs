@@ -6,6 +6,7 @@
 
 use std::time::Instant;
 
+use crate::util::json::Json;
 use crate::util::stats::Summary;
 
 /// One benchmark run.
@@ -105,6 +106,82 @@ impl BenchResult {
         println!("{}", self.report());
         self
     }
+
+    /// Machine-readable form for measurement mode (`tools/bench.sh`).
+    pub fn to_json(&self) -> Json {
+        let s = &self.summary;
+        let mut pairs = vec![
+            ("name".to_string(), Json::Str(self.name.clone())),
+            ("samples".to_string(), Json::Num(s.n as f64)),
+            ("min_s".to_string(), Json::Num(s.min)),
+            ("p50_s".to_string(), Json::Num(s.p50)),
+            ("p95_s".to_string(), Json::Num(s.p95)),
+            ("mean_s".to_string(), Json::Num(s.mean)),
+        ];
+        if let Some((units, unit_name)) = self.units {
+            pairs.push(("units".to_string(), Json::Num(units)));
+            pairs.push(("unit".to_string(), Json::Str(unit_name.to_string())));
+            pairs.push(("throughput_per_s".to_string(), Json::Num(units / s.p50)));
+        }
+        Json::Obj(pairs.into_iter().collect())
+    }
+}
+
+/// Measurement-mode collector: benches push their [`BenchResult`]s (plus
+/// free-form scalar metrics like hypervolume-vs-budget) and, when the
+/// `QAPPA_BENCH_JSON` environment variable names a path, one JSON document
+/// is written there — the machine-readable perf trajectory `tools/bench.sh`
+/// emits and CI uploads as an artifact.
+#[derive(Default)]
+pub struct BenchReport {
+    results: Vec<BenchResult>,
+    metrics: Vec<(String, f64)>,
+}
+
+impl BenchReport {
+    pub fn new() -> BenchReport {
+        BenchReport::default()
+    }
+
+    pub fn push(&mut self, r: &BenchResult) {
+        self.results.push(r.clone());
+    }
+
+    /// Record a free-form scalar (e.g. `hypervolume/nsga2/budget=1000`).
+    pub fn metric(&mut self, name: &str, value: f64) {
+        self.metrics.push((name.to_string(), value));
+    }
+
+    pub fn to_json(&self) -> Json {
+        let results = Json::Arr(self.results.iter().map(|r| r.to_json()).collect());
+        let metrics = Json::Obj(
+            self.metrics
+                .iter()
+                .map(|(k, v)| (k.clone(), Json::Num(*v)))
+                .collect(),
+        );
+        Json::Obj(
+            [
+                ("results".to_string(), results),
+                ("metrics".to_string(), metrics),
+            ]
+            .into_iter()
+            .collect(),
+        )
+    }
+
+    /// Write the JSON document to `$QAPPA_BENCH_JSON` if set (no-op
+    /// otherwise), returning the path written.
+    pub fn write_if_requested(&self) -> std::io::Result<Option<String>> {
+        match std::env::var_os("QAPPA_BENCH_JSON") {
+            None => Ok(None),
+            Some(path) => {
+                let path = path.to_string_lossy().to_string();
+                std::fs::write(&path, format!("{}\n", self.to_json()))?;
+                Ok(Some(path))
+            }
+        }
+    }
 }
 
 #[cfg(test)]
@@ -132,6 +209,35 @@ mod tests {
             .samples(3)
             .run_with_units(100.0, "items", || std::thread::sleep(std::time::Duration::from_micros(50)));
         assert!(r.report().contains("items/s"));
+    }
+
+    #[test]
+    fn bench_report_collects_results_and_metrics_as_json() {
+        let r = Bench::new("unitful")
+            .warmup(0)
+            .samples(3)
+            .run_with_units(50.0, "evals", || std::hint::black_box(1 + 1));
+        let mut report = BenchReport::new();
+        report.push(&r);
+        report.push(&Bench::new("plain").warmup(0).samples(2).run(|| ()));
+        report.metric("hypervolume/nsga2/budget=100", 1.25);
+        let j = report.to_json();
+        let results = j.get("results").as_arr().expect("results array");
+        assert_eq!(results.len(), 2);
+        assert_eq!(results[0].get("name").as_str(), Some("unitful"));
+        assert_eq!(results[0].get("unit").as_str(), Some("evals"));
+        assert!(results[0].get("throughput_per_s").as_f64().unwrap() > 0.0);
+        assert_eq!(results[0].get("samples").as_f64(), Some(3.0));
+        // plain results omit the throughput fields
+        assert!(results[1].get("unit").as_str().is_none());
+        assert_eq!(
+            j.get("metrics").get("hypervolume/nsga2/budget=100").as_f64(),
+            Some(1.25)
+        );
+        // the document round-trips through the JSON writer/parser
+        let text = j.to_string();
+        let back = Json::parse(&text).expect("parse bench json");
+        assert_eq!(back.get("results").as_arr().unwrap().len(), 2);
     }
 
     #[test]

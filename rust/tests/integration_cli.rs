@@ -1,0 +1,121 @@
+//! Integration: the `qappa` binary's stream discipline and CLI/API parity.
+//!
+//! * Progress/stats lines (`[store]`, `[engine]`, `[trace]`) must go to
+//!   stderr so piped stdout stays a parseable report — pinned here by
+//!   running `explore` with `QAPPA_TRACE=1` and asserting stdout carries
+//!   only report content.
+//! * `qappa optimize` is a thin client of the session facade: its stdout
+//!   must contain the exact frontier table an equivalent typed
+//!   [`Qappa::optimize`] call renders.
+//!
+//! The binary path comes from `CARGO_BIN_EXE_qappa` (set by cargo for
+//! integration tests of a crate with the `qappa` bin target); the tests
+//! skip with a notice if the harness doesn't provide it.
+
+use std::process::Command;
+
+use qappa::api::{BackendChoice, OptimizeRequest, Qappa};
+use qappa::coordinator::report::opt_frontier_table;
+use qappa::coordinator::DesignSpace;
+
+fn qappa_bin() -> Option<&'static str> {
+    let bin = option_env!("CARGO_BIN_EXE_qappa");
+    if bin.is_none() {
+        eprintln!("[skip] CARGO_BIN_EXE_qappa not set; CLI smoke tests need the bin target");
+    }
+    bin
+}
+
+#[test]
+fn explore_stdout_stays_parseable_with_progress_on_stderr() {
+    let Some(bin) = qappa_bin() else { return };
+    // Multi-workload explore on the tiny space: exercises the [store] and
+    // [engine] progress lines, with tracing forced on.
+    let out = Command::new(bin)
+        .args([
+            "explore",
+            "--workload",
+            "examples/tiny_mobilenet.json,mobilenetv1",
+            "--space",
+            "tiny",
+            "--train",
+            "48",
+            "--backend",
+            "native",
+        ])
+        .env("QAPPA_TRACE", "1")
+        .output()
+        .expect("run qappa explore");
+    assert!(out.status.success(), "explore failed: {out:?}");
+    let stdout = String::from_utf8(out.stdout).expect("utf8 stdout");
+    let stderr = String::from_utf8(out.stderr).expect("utf8 stderr");
+    // stdout: report content only — no progress/stats/trace lines
+    for marker in ["[store]", "[engine]", "[trace]", "[qappa]"] {
+        assert!(
+            !stdout.contains(marker),
+            "progress marker {marker} leaked into stdout:\n{stdout}"
+        );
+    }
+    // the report itself did land on stdout
+    assert!(stdout.contains("perf/area_pred"), "summary table missing:\n{stdout}");
+    assert!(stdout.contains("tiny-mobilenet"), "workload rows missing:\n{stdout}");
+    // and the progress/tracing went to stderr
+    assert!(stderr.contains("[store]"), "stderr lost the store counters:\n{stderr}");
+    assert!(stderr.contains("[trace]"), "QAPPA_TRACE output missing from stderr:\n{stderr}");
+}
+
+#[test]
+fn optimize_cli_renders_the_session_frontier_byte_for_byte() {
+    let Some(bin) = qappa_bin() else { return };
+    let out = Command::new(bin)
+        .args([
+            "optimize",
+            "--workload",
+            "examples/tiny_mobilenet.json",
+            "--space",
+            "tiny",
+            "--train",
+            "48",
+            "--budget",
+            "60",
+            "--pop",
+            "16",
+            "--backend",
+            "native",
+            "--precision",
+            "int16,a4w4p8-int",
+        ])
+        .output()
+        .expect("run qappa optimize");
+    assert!(out.status.success(), "optimize failed: {out:?}");
+    let stdout = String::from_utf8(out.stdout).expect("utf8 stdout");
+    let stderr = String::from_utf8(out.stderr).expect("utf8 stderr");
+    assert!(stdout.contains("hypervolume"), "header missing:\n{stdout}");
+    assert!(!stdout.contains("[store]"), "progress leaked into stdout:\n{stdout}");
+    assert!(stderr.contains("[store]"), "store counters missing from stderr");
+
+    // An equivalent typed session call must render the exact same
+    // frontier table the CLI printed (identical seeds => identical
+    // frontiers across entry points).
+    let session = Qappa::builder()
+        .backend(BackendChoice::Native)
+        .space(DesignSpace::tiny())
+        .train_per_type(48)
+        .build();
+    let req = OptimizeRequest {
+        workload: "examples/tiny_mobilenet.json".into(),
+        budget: Some(60),
+        pop: Some(16),
+        precision: Some(qappa::api::PrecisionRequest {
+            types: vec!["int16".into(), "a4w4p8-int".into()],
+            ..Default::default()
+        }),
+        ..Default::default()
+    };
+    let resp = session.optimize(&req).unwrap();
+    let table = opt_frontier_table(&resp).render();
+    assert!(
+        stdout.contains(&table),
+        "CLI frontier table diverged from the session render.\nexpected:\n{table}\nstdout:\n{stdout}"
+    );
+}

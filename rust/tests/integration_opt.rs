@@ -1,0 +1,228 @@
+//! Integration: the guided optimizer versus the exhaustive sweep.
+//!
+//! The acceptance experiment of the optimizer subsystem: on a mid-scale
+//! hardware space x the four preset precision cells x MobileNetV1, seeded
+//! NSGA-II with a budget under 5% of the uniform (hardware x precision)
+//! grid must recover at least 90% of the exhaustive sweep's Pareto
+//! hypervolume, beat the random baseline at equal budget, and reproduce
+//! its frontier bit-for-bit under the same seed.  A second test pins the
+//! serve/session identity: the `optimize` op over the wire and the typed
+//! session call produce byte-identical frontier reports for the same seed.
+
+use qappa::api::{handle_line, OptimizeRequest, PrecisionRequest, Qappa, ResponseBody};
+use qappa::api::BackendChoice;
+use qappa::config::{ALL_PE_TYPES, QUANT_NUM_FEATURES};
+use qappa::coordinator::pareto::hypervolume;
+use qappa::coordinator::report::{opt_convergence_table, opt_frontier_table};
+use qappa::coordinator::sweep::{NamedWorkload, SweepEngine};
+use qappa::coordinator::{DesignSpace, DseOptions, ModelStore};
+use qappa::model::native::NativeBackend;
+use qappa::model::CvConfig;
+use qappa::opt::{
+    run_optimize, Constraints, Objective, OptOptions, OptProblem, OptResult, SearchSpace,
+    StrategyKind,
+};
+use qappa::workloads;
+
+/// A mid-scale subset of the paper axes: 1280 hardware points, so the
+/// uniform (hardware x 4 presets) grid has 5120 cells and the exhaustive
+/// sweep stays test-sized.
+fn mid_space() -> DesignSpace {
+    DesignSpace {
+        rows: vec![8, 12, 16, 24],
+        cols: vec![8, 14, 20, 28],
+        glb_kb: vec![32, 64, 108, 256, 512],
+        spad_ifmap_b: vec![24, 96],
+        spad_filter_b: vec![56, 224],
+        spad_psum_b: vec![32, 128],
+        bandwidth_gbps: vec![2.0, 8.0],
+        quants: Vec::new(),
+    }
+}
+
+fn mid_opts() -> DseOptions {
+    DseOptions {
+        space: mid_space(),
+        train_per_type: 128,
+        cv: CvConfig { k: 3, degrees: vec![1, 2], lambdas: vec![1e-3, 1e-2], seed: 1 },
+        seed: 7,
+        workers: 4,
+        sigma: 0.02,
+        chunk: 512,
+        topk: 8,
+    }
+}
+
+fn guided(
+    backend: &NativeBackend,
+    model: &qappa::model::PpaModel,
+    opts: &DseOptions,
+    layers: &[qappa::dataflow::Layer],
+    strategy: StrategyKind,
+    budget: usize,
+    seed: u64,
+) -> OptResult {
+    let search =
+        SearchSpace::new(&opts.space, ALL_PE_TYPES.to_vec(), layers, true).unwrap();
+    let problem = OptProblem {
+        search,
+        objectives: [Objective::PerfPerArea, Objective::Energy],
+        constraints: Constraints::default(),
+    };
+    let oopts = OptOptions { strategy, budget, pop: 50, seed };
+    run_optimize(backend, model, &problem, &oopts, opts.workers).unwrap()
+}
+
+fn frontier_pairs(res: &OptResult) -> Vec<(f64, f64)> {
+    res.frontier
+        .iter()
+        .map(|f| (f.point.perf_per_area, f.point.energy_mj))
+        .collect()
+}
+
+#[test]
+fn nsga2_recovers_exhaustive_hypervolume_within_five_percent_budget() {
+    let opts = mid_opts();
+    let backend = NativeBackend::new(QUANT_NUM_FEATURES);
+    let store = ModelStore::new();
+    let palette = ALL_PE_TYPES.to_vec();
+    let model = store.get_or_train_quant(&backend, &opts, &palette).unwrap();
+    let layers = workloads::mobilenetv1();
+
+    // Exhaustive baseline: one streaming pass over the precision-extended
+    // grid (the quants axis makes precision the outermost grid digit).
+    let mut ex_opts = opts.clone();
+    ex_opts.space = mid_space().with_quants(palette.clone());
+    let uniform_grid = ex_opts.space.len();
+    assert_eq!(uniform_grid, 5120);
+    let sweep = SweepEngine::new(&backend, &ex_opts)
+        .sweep_type(
+            &model,
+            qappa::config::PeType::Int16, // ignored: the quants axis rules
+            &[NamedWorkload::new("mobilenetv1", layers.clone())],
+        )
+        .unwrap()
+        .remove(0);
+    assert_eq!(sweep.stats.evaluated, uniform_grid);
+    let exhaustive: Vec<(f64, f64)> = sweep
+        .frontier
+        .iter()
+        .map(|e| (e.perf_per_area, e.energy))
+        .collect();
+    assert!(!exhaustive.is_empty());
+
+    // Guided search: budget below 5% of the uniform grid.
+    let budget = 250;
+    assert!((budget as f64) < 0.05 * uniform_grid as f64);
+    let nsga = guided(&backend, &model, &opts, &layers, StrategyKind::Nsga2, budget, 11);
+    assert!(nsga.evaluated <= budget, "budget overrun: {}", nsga.evaluated);
+    let rand = guided(&backend, &model, &opts, &layers, StrategyKind::Random, budget, 11);
+    assert!(rand.evaluated <= budget);
+
+    // One shared reference corner over every frontier involved.
+    let g_pts = frontier_pairs(&nsga);
+    let r_pts = frontier_pairs(&rand);
+    let max_energy = exhaustive
+        .iter()
+        .chain(&g_pts)
+        .chain(&r_pts)
+        .map(|&(_, e)| e)
+        .fold(f64::MIN, f64::max);
+    let ref_point = (0.0, 1.25 * max_energy);
+    let hv_ex = hypervolume(&exhaustive, ref_point);
+    let hv_guided = hypervolume(&g_pts, ref_point);
+    let hv_rand = hypervolume(&r_pts, ref_point);
+    assert!(hv_ex > 0.0);
+
+    // Acceptance: >= 90% of the exhaustive hypervolume at < 5% of the
+    // evaluations (the per-layer search space the optimizer actually
+    // roams — |hw| x |palette|^|layers| — is astronomically larger still).
+    assert!(
+        hv_guided >= 0.90 * hv_ex,
+        "guided hypervolume {hv_guided:.6e} < 90% of exhaustive {hv_ex:.6e} \
+         ({:.1}%)",
+        100.0 * hv_guided / hv_ex
+    );
+    // The random baseline is strictly worse at equal budget.
+    assert!(
+        hv_rand < hv_guided,
+        "random baseline {hv_rand:.6e} not beaten by nsga2 {hv_guided:.6e}"
+    );
+
+    // Same seed => bit-identical frontier (the byte-identical report is
+    // pinned at the session/serve layer below).
+    let again = guided(&backend, &model, &opts, &layers, StrategyKind::Nsga2, budget, 11);
+    assert_eq!(nsga.evaluated, again.evaluated);
+    assert_eq!(nsga.hypervolume, again.hypervolume);
+    let render = |r: &OptResult| -> String {
+        r.frontier
+            .iter()
+            .map(|f| {
+                format!(
+                    "{}|{:?}|{:?}|{}",
+                    f.point.cfg.key(),
+                    f.objs,
+                    f.genome.hw,
+                    f.precision.join(",")
+                )
+            })
+            .collect::<Vec<_>>()
+            .join("\n")
+    };
+    assert_eq!(render(&nsga), render(&again), "same seed must reproduce the frontier");
+}
+
+#[test]
+fn optimize_over_serve_matches_the_typed_session_call() {
+    let session = Qappa::builder()
+        .backend(BackendChoice::Native)
+        .space(DesignSpace::tiny())
+        .train_per_type(64)
+        .cv(CvConfig { k: 3, degrees: vec![1, 2], lambdas: vec![1e-3, 1e-2], seed: 1 })
+        .seed(7)
+        .workers(4)
+        .sigma(0.02)
+        .chunk(32)
+        .topk(8)
+        .build();
+    let req = OptimizeRequest {
+        workload: "mobilenetv2".into(),
+        objectives: vec!["latency".into(), "energy".into()],
+        budget: Some(60),
+        pop: Some(16),
+        seed: Some(9),
+        precision: Some(PrecisionRequest {
+            types: vec!["int16".into(), "a4w4p8-int".into()],
+            ..Default::default()
+        }),
+        ..Default::default()
+    };
+    let typed = session.optimize(&req).unwrap();
+    assert_eq!(typed.objectives, vec!["latency".to_string(), "energy".to_string()]);
+    assert!(!typed.frontier.is_empty());
+
+    // The same request over the serve wire, against the same session.
+    let line = format!(
+        r#"{{"id":5,"op":"optimize","params":{}}}"#,
+        req.to_json()
+    );
+    let resp = handle_line(&session, &line);
+    assert_eq!(resp.id, Some(5));
+    let wire = match resp.result {
+        Ok(ResponseBody::Optimize(r)) => r,
+        other => panic!("expected an optimize response, got {other:?}"),
+    };
+    assert_eq!(wire, typed, "serve and session must agree for identical seeds");
+
+    // Byte-identical frontier report, both layers.
+    assert_eq!(
+        opt_frontier_table(&wire).to_csv(),
+        opt_frontier_table(&typed).to_csv()
+    );
+    assert_eq!(
+        opt_convergence_table(&wire).to_csv(),
+        opt_convergence_table(&typed).to_csv()
+    );
+    // and the unified model trained exactly once across both runs
+    assert_eq!(session.store().misses(), 1);
+}

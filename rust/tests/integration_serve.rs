@@ -4,8 +4,8 @@
 //! sequentially and under concurrent dispatch.
 
 use qappa::api::{
-    serve, BackendChoice, Qappa, ResponseBody, ServeOptions, ServeResponse, ServeStats,
-    SessionInfo,
+    serve, BackendChoice, OptimizeResponse, Qappa, ResponseBody, ServeOptions, ServeResponse,
+    ServeStats, SessionInfo,
 };
 use qappa::config::PeType;
 use qappa::coordinator::DesignSpace;
@@ -120,6 +120,101 @@ fn concurrent_dispatch_shares_one_warm_session() {
         "concurrent cold explores must not retrain (in-flight dedup)"
     );
     assert!(session.store().hits() >= 4);
+}
+
+#[test]
+fn concurrent_optimize_and_explore_share_one_session() {
+    // Long-running optimize requests dispatched concurrently with explore
+    // on one session: every id answered exactly once, identical optimize
+    // requests agree (determinism under concurrent dispatch), and the
+    // model caches dedupe — 4 per-type models for explore + 1 unified
+    // model for the optimize palette, no matter the interleaving.
+    let session = tiny_session();
+    let opt_params = r#"{"workload":"vgg16","budget":50,"pop":16,"seed":3,"precision":{"types":["int16","a4w4p8-int"]}}"#;
+    let input = format!(
+        concat!(
+            r#"{{"id":1,"op":"optimize","params":{p}}}"#, "\n",
+            r#"{{"id":2,"op":"explore","params":{{"workloads":["vgg16"]}}}}"#, "\n",
+            r#"{{"id":3,"op":"optimize","params":{p}}}"#, "\n",
+            r#"{{"id":4,"op":"workloads"}}"#, "\n",
+            r#"{{"id":5,"op":"session"}}"#, "\n",
+        ),
+        p = opt_params
+    );
+    let mut out = Vec::new();
+    let stats =
+        serve(&session, input.as_bytes(), &mut out, &ServeOptions { concurrency: 4 }).unwrap();
+    assert_eq!(stats, ServeStats { requests: 5, ok: 5, errors: 0 });
+
+    let resps = parse_lines(&out);
+    let mut ids: Vec<u64> = resps.iter().map(|r| r.id.expect("id echoed")).collect();
+    ids.sort_unstable();
+    assert_eq!(ids, vec![1, 2, 3, 4, 5], "id correlation preserved out of order");
+
+    let opt_of = |id: u64| -> &OptimizeResponse {
+        match &resps.iter().find(|r| r.id == Some(id)).unwrap().result {
+            Ok(ResponseBody::Optimize(r)) => r,
+            other => panic!("request {id}: expected optimize, got {other:?}"),
+        }
+    };
+    let a = opt_of(1);
+    let b = opt_of(3);
+    assert_eq!(a, b, "identical optimize requests must agree under concurrency");
+    assert!(!a.frontier.is_empty());
+    assert!(a.evaluated <= 50);
+    // explore answered too
+    assert!(matches!(
+        resps.iter().find(|r| r.id == Some(2)).unwrap().result,
+        Ok(ResponseBody::Explore(_))
+    ));
+    // 4 per-type models (explore) + 1 unified palette model (optimize)
+    assert_eq!(session.store().misses(), 5, "in-flight dedup across op kinds");
+}
+
+#[test]
+fn optimize_error_paths_classify_and_keep_the_loop_alive() {
+    let session = tiny_session();
+    let input = concat!(
+        // malformed params: budget is not an integer -> protocol
+        r#"{"id":20,"op":"optimize","params":{"workload":"vgg16","budget":"many"}}"#, "\n",
+        // missing workload -> protocol
+        r#"{"id":21,"op":"optimize","params":{"objectives":["lat","energy"]}}"#, "\n",
+        // unknown objective -> config (request parsed, semantics rejected)
+        r#"{"id":22,"op":"optimize","params":{"workload":"vgg16","objectives":["speed","energy"]}}"#, "\n",
+        // unknown strategy -> config
+        r#"{"id":23,"op":"optimize","params":{"workload":"vgg16","strategy":"annealing"}}"#, "\n",
+        // cancelled-by-budget: a zero budget is rejected up front -> config
+        r#"{"id":24,"op":"optimize","params":{"workload":"vgg16","budget":0}}"#, "\n",
+        // impossible min_bits floor -> config naming the constraint
+        r#"{"id":25,"op":"optimize","params":{"workload":"vgg16","constraints":{"min_bits":99}}}"#, "\n",
+        // the loop survives to answer a healthy request
+        r#"{"id":26,"op":"workloads"}"#, "\n",
+    );
+    let mut out = Vec::new();
+    let stats =
+        serve(&session, input.as_bytes(), &mut out, &ServeOptions { concurrency: 1 }).unwrap();
+    assert_eq!(stats.requests, 7);
+    assert_eq!(stats.errors, 6);
+
+    let resps = parse_lines(&out);
+    let err_of = |i: usize| resps[i].result.as_ref().unwrap_err();
+    assert_eq!(resps[0].id, Some(20));
+    assert_eq!(err_of(0).kind, "protocol");
+    assert!(err_of(0).message.contains("budget"), "{}", err_of(0).message);
+    assert_eq!(err_of(1).kind, "protocol");
+    assert!(err_of(1).message.contains("workload"), "{}", err_of(1).message);
+    assert_eq!(err_of(2).kind, "config");
+    assert!(err_of(2).message.contains("speed"), "{}", err_of(2).message);
+    assert_eq!(err_of(3).kind, "config");
+    assert!(err_of(3).message.contains("annealing"), "{}", err_of(3).message);
+    assert_eq!(err_of(4).kind, "config");
+    assert!(err_of(4).message.contains("budget"), "{}", err_of(4).message);
+    assert_eq!(err_of(5).kind, "config");
+    assert!(err_of(5).message.contains("min_bits"), "{}", err_of(5).message);
+    assert!(resps[6].result.is_ok(), "loop must survive optimize errors");
+    // nothing trained, backend never started
+    assert_eq!(session.store().misses(), 0);
+    assert_eq!(session.session_info().backend, None);
 }
 
 #[test]

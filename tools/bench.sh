@@ -1,0 +1,34 @@
+#!/usr/bin/env bash
+# Measurement mode: run the perf benches and emit machine-readable
+# BENCH_*.json documents (sweep throughput + peak-resident counters,
+# optimizer evals/s + hypervolume-vs-budget) at the repo root.  CI uploads
+# them as artifacts, so the repo accumulates a perf trajectory per commit.
+#
+# Usage: tools/bench.sh [--sweep-only|--opt-only]
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+if ! command -v cargo >/dev/null 2>&1; then
+    echo "bench.sh: cargo unavailable; skipping measurement run" >&2
+    exit 0
+fi
+
+run_bench() {
+    local bench="$1" out="$2"
+    echo "==> cargo bench --bench $bench  (-> $out)"
+    QAPPA_BENCH_JSON="$PWD/$out" cargo bench --bench "$bench"
+    test -s "$out" || { echo "bench.sh: $out was not written" >&2; exit 1; }
+}
+
+mode="${1:-all}"
+case "$mode" in
+    --sweep-only) run_bench sweep_throughput BENCH_sweep.json ;;
+    --opt-only)   run_bench opt_throughput BENCH_opt.json ;;
+    all)
+        run_bench sweep_throughput BENCH_sweep.json
+        run_bench opt_throughput BENCH_opt.json
+        ;;
+    *) echo "bench.sh: unknown mode '$mode' (expected --sweep-only|--opt-only)" >&2; exit 2 ;;
+esac
+
+echo "OK: bench measurement artifacts written"
