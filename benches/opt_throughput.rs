@@ -41,6 +41,7 @@ fn main() {
             let mut hv = 0.0f64;
             let mut evals = 0usize;
             let mut frontier = 0usize;
+            let mut memo = qappa::dataflow::MemoStats::default();
             let r = Bench::new(&format!("opt/{label}/budget={budget}"))
                 .warmup(0)
                 .samples(3)
@@ -52,19 +53,35 @@ fn main() {
                         objectives: [Objective::PerfPerArea, Objective::Energy],
                         constraints: Constraints::default(),
                     };
-                    let oopts =
-                        OptOptions { strategy: kind, budget, pop: 64, seed: 7 };
+                    let oopts = OptOptions {
+                        strategy: kind,
+                        budget,
+                        pop: 64,
+                        seed: 7,
+                        ..Default::default()
+                    };
                     let res = run_optimize(&backend, &model, &problem, &oopts, opts.workers)
                         .expect("optimize");
                     hv = res.hypervolume;
                     evals = res.evaluated;
                     frontier = res.frontier.len();
+                    memo = res.memo;
                 });
+            let lookups = memo.cost_hits + memo.cost_misses;
+            let hit_rate =
+                if lookups > 0 { memo.cost_hits as f64 / lookups as f64 } else { 0.0 };
             r.print();
-            println!("  hypervolume {hv:.6e}, frontier {frontier}, {evals} evals");
+            println!(
+                "  hypervolume {hv:.6e}, frontier {frontier}, {evals} evals, \
+                 memo {}/{} hits ({:.0}%)",
+                memo.cost_hits,
+                lookups,
+                100.0 * hit_rate
+            );
             report.push(&r);
             report.metric(&format!("hypervolume/{label}/budget={budget}"), hv);
             report.metric(&format!("frontier/{label}/budget={budget}"), frontier as f64);
+            report.metric(&format!("memo_hit_rate/{label}/budget={budget}"), hit_rate);
         }
     }
     if let Some(path) = report.write_if_requested().expect("write bench json") {

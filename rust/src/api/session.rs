@@ -405,6 +405,7 @@ impl Qappa {
             budget,
             pop: req.pop.unwrap_or(64),
             seed: req.seed.unwrap_or(self.opts.seed),
+            ..Default::default()
         };
         let result = run_optimize(backend, &model, &problem, &oopts, self.opts.workers)?;
 
@@ -430,6 +431,7 @@ impl Qappa {
             hypervolume: result.hypervolume,
             frontier,
             generations: result.generations,
+            memo: result.memo,
         })
     }
 

@@ -24,7 +24,7 @@ use crate::api::error::QappaError;
 use crate::config::{AcceleratorConfig, MacKind, PeType};
 use crate::coordinator::explorer::WorkloadSummary;
 use crate::coordinator::precision::PrecisionGrid;
-use crate::dataflow::Layer;
+use crate::dataflow::{Layer, MemoStats};
 use crate::opt::engine::GenStat;
 use crate::opt::objective::Constraints;
 use crate::synth::oracle::Ppa;
@@ -933,6 +933,10 @@ pub struct OptimizeResponse {
     /// Frontier sorted by the first objective ascending.
     pub frontier: Vec<OptPoint>,
     pub generations: Vec<GenStat>,
+    /// Evaluation-memo counters (layer-cost + synthesis caches).  Optional
+    /// on the wire for compatibility: absent means all-zero (a legacy-path
+    /// run, or a peer predating the field).
+    pub memo: MemoStats,
 }
 
 impl OptimizeResponse {
@@ -959,6 +963,15 @@ impl OptimizeResponse {
                 "generations",
                 Json::Arr(self.generations.iter().map(gen_stat_to_json).collect()),
             ),
+            (
+                "memo",
+                obj(vec![
+                    ("cost_hits", num_u(self.memo.cost_hits)),
+                    ("cost_misses", num_u(self.memo.cost_misses)),
+                    ("synth_hits", num_u(self.memo.synth_hits)),
+                    ("synth_misses", num_u(self.memo.synth_misses)),
+                ]),
+            ),
         ])
     }
 
@@ -984,6 +997,15 @@ impl OptimizeResponse {
             .get("ref_point")
             .as_f64_vec()
             .ok_or_else(|| proto(format!("{what}: missing \"ref_point\" number array")))?;
+        // Optional for wire compatibility: absent → all-zero counters.
+        let m = v.get("memo");
+        let count = |key: &str| m.get(key).as_f64().unwrap_or(0.0) as u64;
+        let memo = MemoStats {
+            cost_hits: count("cost_hits"),
+            cost_misses: count("cost_misses"),
+            synth_hits: count("synth_hits"),
+            synth_misses: count("synth_misses"),
+        };
         Ok(OptimizeResponse {
             workload: req_str(v, "workload", what)?.to_string(),
             strategy: req_str(v, "strategy", what)?.to_string(),
@@ -994,6 +1016,7 @@ impl OptimizeResponse {
             hypervolume: req_f64(v, "hypervolume", what)?,
             frontier,
             generations,
+            memo,
         })
     }
 }
@@ -1784,11 +1807,25 @@ mod tests {
                 hypervolume: 0.5,
                 best: [0.0625, 3.25],
             }],
+            memo: MemoStats {
+                cost_hits: 1200,
+                cost_misses: 340,
+                synth_hits: 470,
+                synth_misses: 10,
+            },
         };
         assert_eq!(
             OptimizeResponse::from_json(&roundtrip_json(&resp.to_json())).unwrap(),
             resp
         );
+        // a memo-less payload (older peer) parses to all-zero counters
+        let mut legacy = resp.to_json();
+        if let Json::Obj(o) = &mut legacy {
+            o.remove("memo");
+        }
+        let parsed = OptimizeResponse::from_json(&legacy).unwrap();
+        assert_eq!(parsed.memo, MemoStats::default());
+        assert_eq!(parsed.frontier, resp.frontier);
     }
 
     #[test]

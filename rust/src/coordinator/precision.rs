@@ -197,7 +197,10 @@ pub fn train_quant_model(
 
 /// Precision-grid DSE over one or more workloads: one unified model, one
 /// chunked streaming sweep per precision cell, every workload folded per
-/// shard.  Returns one [`WorkloadSummary`] per workload whose maps are
+/// shard.  One [`SweepEngine`] serves every cell, so its synthesis and
+/// layer-cost memos stay warm across the grid — the per-cell
+/// `SweepStats` memo counters are cumulative snapshots in sweep order.
+/// Returns one [`WorkloadSummary`] per workload whose maps are
 /// keyed by the grid's precision cells; ratios are normalized against the
 /// INT16 cell when the grid contains it, otherwise against the grid's
 /// best predicted perf/area point.
@@ -385,5 +388,36 @@ mod tests {
         let again = run_dse_precision(&backend, &store, &wl, &opts, &grid).unwrap();
         assert_eq!(store.misses(), 1);
         assert_eq!(again[0].anchor.cfg, s.anchor.cfg);
+    }
+
+    #[test]
+    fn precision_dse_memo_stays_warm_across_cells() {
+        // One engine serves every precision cell, so the synthesis memo
+        // keeps warming: the per-cell counters are cumulative snapshots in
+        // sweep order, and shared GLB macros make later cells hit.
+        let backend = NativeBackend::new(QUANT_NUM_FEATURES);
+        let opts = tiny_opts();
+        let store = ModelStore::new();
+        let grid = PrecisionGrid::from_ranges(&[4, 16], &[4, 16], &[], MacKind::IntExact).unwrap();
+        let wl = vec![NamedWorkload::new("t", net())];
+        let s = run_dse_precision(&backend, &store, &wl, &opts, &grid)
+            .unwrap()
+            .remove(0);
+        let first = s.stats[&grid.types[0]];
+        let last = s.stats[grid.types.last().unwrap()];
+        // one synthesis-memo lookup per config per cell, cumulative
+        assert_eq!(first.synth_hits + first.synth_misses, opts.space.len() as u64);
+        assert_eq!(
+            last.synth_hits + last.synth_misses,
+            (grid.len() * opts.space.len()) as u64
+        );
+        // monotone growth and real sharing between cells
+        assert!(last.synth_hits >= first.synth_hits);
+        assert!(last.synth_misses >= first.synth_misses);
+        assert!(last.synth_hits > 0, "no cross-config synth reuse");
+        assert!(
+            last.synth_misses < last.synth_hits + last.synth_misses,
+            "memo never hit across the grid"
+        );
     }
 }

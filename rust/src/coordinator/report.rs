@@ -533,6 +533,7 @@ mod tests {
                     best: [0.25, 3.0],
                 },
             ],
+            memo: Default::default(),
         };
         let t = opt_frontier_table(&resp);
         assert_eq!(t.len(), 2);

@@ -16,9 +16,12 @@ use crate::api::error::QappaError;
 use crate::config::{AcceleratorConfig, NUM_FEATURES, PeType, QUANT_NUM_FEATURES};
 use crate::coordinator::explorer::{DseOptions, DsePoint};
 use crate::coordinator::pareto::{FrontierEntry, IncrementalFrontier};
-use crate::dataflow::{evaluate_network, Layer};
+use crate::dataflow::{
+    evaluate_network, evaluate_network_prepared, EvalContext, Layer, MemoStats,
+    PreparedWorkload,
+};
 use crate::model::{predict_ppa, Backend, PpaModel};
-use crate::synth::oracle::{energy_params, Ppa};
+use crate::synth::oracle::{energy_params, EnergyParams, Ppa};
 use crate::util::pool::{parallel_map, workers_for};
 
 /// Phase-timing hook: set `QAPPA_TRACE=1` to print per-phase wall times.
@@ -26,6 +29,14 @@ pub(crate) fn trace(phase: &str, t0: std::time::Instant) {
     if std::env::var_os("QAPPA_TRACE").is_some() {
         eprintln!("[trace] {phase}: {:.1} ms", t0.elapsed().as_secs_f64() * 1e3);
     }
+}
+
+/// `QAPPA_LEGACY_EVAL=1` forces the pre-SoA per-point evaluation path —
+/// the test oracle the equivalence suite (and a cautious user) compares
+/// the hot path against.  Results are bit-identical either way; only
+/// speed differs.
+pub(crate) fn legacy_eval_env() -> bool {
+    std::env::var_os("QAPPA_LEGACY_EVAL").is_some()
 }
 
 /// A workload with its display name, as swept by the engine.
@@ -119,6 +130,25 @@ pub struct SweepStats {
     pub peak_frontier: usize,
     /// Final reservoir occupancy (both reservoirs summed, <= 2 x top-k).
     pub reservoir_len: usize,
+    /// Layer-cost memo hits — cumulative over the owning engine's
+    /// lifetime at snapshot time (the memo is sweep-wide: one engine
+    /// reused across precision cells keeps warming it).
+    pub cost_hits: u64,
+    /// Layer-cost memo misses (cumulative, see `cost_hits`).
+    pub cost_misses: u64,
+    /// Synthesis memo (`energy_params`) hits (cumulative).
+    pub synth_hits: u64,
+    /// Synthesis memo misses (cumulative).
+    pub synth_misses: u64,
+}
+
+impl SweepStats {
+    fn record_memo(&mut self, m: MemoStats) {
+        self.cost_hits = m.cost_hits;
+        self.cost_misses = m.cost_misses;
+        self.synth_hits = m.synth_hits;
+        self.synth_misses = m.synth_misses;
+    }
 }
 
 /// Per-shard progress snapshot handed to the [`SweepEngine::on_shard`] hook.
@@ -181,6 +211,20 @@ pub fn predict_configs(
     model: &PpaModel,
     cfgs: &[AcceleratorConfig],
 ) -> Result<Vec<Ppa>, QappaError> {
+    if legacy_eval_env() {
+        predict_configs_legacy(backend, model, cfgs)
+    } else {
+        predict_configs_soa(backend, model, cfgs)
+    }
+}
+
+/// The pre-SoA form: one flat feature slab in input order.  Kept as the
+/// equivalence-suite oracle (`QAPPA_LEGACY_EVAL=1` routes here).
+pub fn predict_configs_legacy(
+    backend: &dyn Backend,
+    model: &PpaModel,
+    cfgs: &[AcceleratorConfig],
+) -> Result<Vec<Ppa>, QappaError> {
     let quant_features = model.x_std.d() == QUANT_NUM_FEATURES;
     let d = if quant_features { QUANT_NUM_FEATURES } else { NUM_FEATURES };
     let mut feats = Vec::with_capacity(cfgs.len() * d);
@@ -197,6 +241,49 @@ pub fn predict_configs(
         .collect())
 }
 
+/// Structure-of-arrays predict: configs are grouped by shared PE recipe
+/// (resolved precision spec), each group predicted as one contiguous batch
+/// through the backend's column-wise pass, and results scattered back to
+/// input order.  Standardization, prediction and de-standardization are
+/// all row-independent, so grouping cannot change any output — results
+/// are bit-identical to [`predict_configs_legacy`] (pinned by
+/// `tests/integration_soa.rs`).  Grid shards are single-recipe already;
+/// the grouping pays off on the optimizer's mixed-recipe populations.
+pub fn predict_configs_soa(
+    backend: &dyn Backend,
+    model: &PpaModel,
+    cfgs: &[AcceleratorConfig],
+) -> Result<Vec<Ppa>, QappaError> {
+    let quant_features = model.x_std.d() == QUANT_NUM_FEATURES;
+    let d = if quant_features { QUANT_NUM_FEATURES } else { NUM_FEATURES };
+    // Group config indices by PE recipe, first-seen order.
+    let mut groups: Vec<(PeType, Vec<usize>)> = Vec::new();
+    for (i, c) in cfgs.iter().enumerate() {
+        match groups.iter_mut().find(|(t, _)| *t == c.pe_type) {
+            Some((_, ix)) => ix.push(i),
+            None => groups.push((c.pe_type, vec![i])),
+        }
+    }
+    let mut out = vec![Ppa { power_mw: 0.0, fmax_mhz: 0.0, area_mm2: 0.0 }; cfgs.len()];
+    let mut feats = Vec::new();
+    for (_, ix) in &groups {
+        feats.clear();
+        feats.reserve(ix.len() * d);
+        for &i in ix {
+            if quant_features {
+                feats.extend_from_slice(&cfgs[i].features_quant());
+            } else {
+                feats.extend_from_slice(&cfgs[i].features());
+            }
+        }
+        let preds = predict_ppa(backend, model, &feats)?;
+        for (&i, row) in ix.iter().zip(preds) {
+            out[i] = Ppa::from_array(row);
+        }
+    }
+    Ok(out)
+}
+
 /// Evaluate one predicted config on a workload.
 pub fn eval_point(cfg: &AcceleratorConfig, ppa: Ppa, layers: &[Layer]) -> DsePoint {
     // Energy coefficients are structural (jitter-free); the clock the
@@ -205,6 +292,33 @@ pub fn eval_point(cfg: &AcceleratorConfig, ppa: Ppa, layers: &[Layer]) -> DsePoi
     let mut ep = energy_params(cfg);
     ep.fmax_mhz = ppa.fmax_mhz.max(1.0);
     let cost = evaluate_network(cfg, &ep, layers);
+    let throughput = 1.0 / cost.latency_s.max(1e-12);
+    let energy_mj = ppa.power_mw * cost.latency_s; // mW x s = mJ
+    DsePoint {
+        cfg: *cfg,
+        ppa,
+        throughput,
+        perf_per_area: throughput / ppa.area_mm2.max(1e-9),
+        energy_mj,
+        utilization: cost.avg_utilization,
+    }
+}
+
+/// [`eval_point`] with the per-point synthesis and workload-dedup work
+/// hoisted out: the caller supplies the memoized `EnergyParams` (identical
+/// bits to `energy_params(cfg)`, see [`crate::synth::cache::SynthMemo`])
+/// and the pre-deduplicated workload, and the per-layer mapping runs
+/// through the sweep-wide layer-cost memo.  Bit-identical to
+/// [`eval_point`]; pinned by `tests/integration_soa.rs`.
+pub fn eval_point_prepared(
+    cfg: &AcceleratorConfig,
+    ppa: Ppa,
+    mut ep: EnergyParams,
+    prep: &PreparedWorkload,
+    ctx: &EvalContext,
+) -> DsePoint {
+    ep.fmax_mhz = ppa.fmax_mhz.max(1.0);
+    let cost = evaluate_network_prepared(cfg, &ep, prep, ctx);
     let throughput = 1.0 / cost.latency_s.max(1e-12);
     let energy_mj = ppa.power_mw * cost.latency_s; // mW x s = mJ
     DsePoint {
@@ -234,12 +348,27 @@ pub struct SweepEngine<'a> {
     backend: &'a dyn Backend,
     opts: &'a DseOptions,
     retain_all: bool,
+    /// Per-point legacy evaluation (the pre-SoA oracle).  Defaults to the
+    /// `QAPPA_LEGACY_EVAL` env; the builder overrides it for in-process
+    /// equivalence tests where env mutation would race.
+    legacy: bool,
+    /// Sweep-wide memo state: synthesis derivations and layer costs are
+    /// cached across shards, workloads and (when one engine is reused,
+    /// as the precision DSE does) precision cells.
+    ctx: EvalContext,
     progress: Option<Box<dyn Fn(&ShardProgress) + 'a>>,
 }
 
 impl<'a> SweepEngine<'a> {
     pub fn new(backend: &'a dyn Backend, opts: &'a DseOptions) -> SweepEngine<'a> {
-        SweepEngine { backend, opts, retain_all: false, progress: None }
+        SweepEngine {
+            backend,
+            opts,
+            retain_all: false,
+            legacy: legacy_eval_env(),
+            ctx: EvalContext::new(),
+            progress: None,
+        }
     }
 
     /// Keep every evaluated point (the eager-compatible path; memory goes
@@ -247,6 +376,18 @@ impl<'a> SweepEngine<'a> {
     pub fn retain_all(mut self, yes: bool) -> SweepEngine<'a> {
         self.retain_all = yes;
         self
+    }
+
+    /// Force the legacy per-point evaluation path (the test oracle),
+    /// independent of `QAPPA_LEGACY_EVAL`.
+    pub fn legacy(mut self, yes: bool) -> SweepEngine<'a> {
+        self.legacy = yes;
+        self
+    }
+
+    /// Snapshot the engine's cumulative memo counters.
+    pub fn memo_stats(&self) -> MemoStats {
+        self.ctx.stats()
     }
 
     /// Install a per-shard progress hook.
@@ -282,6 +423,12 @@ impl<'a> SweepEngine<'a> {
             })
             .collect();
 
+        // Dedup each workload's repeated layer shapes once per sweep, not
+        // once per (config, workload) evaluation — the O(L²) first-seen
+        // scan leaves the hot loop.
+        let preps: Vec<PreparedWorkload> =
+            workloads.iter().map(|wl| PreparedWorkload::new(&wl.layers)).collect();
+
         for (shard_no, (start, shard)) in opts.space.chunks(ty, opts.chunk).enumerate() {
             let t0 = std::time::Instant::now();
             let preds = predict_configs(self.backend, model, &shard)?;
@@ -289,13 +436,34 @@ impl<'a> SweepEngine<'a> {
                 &format!("sweep/{}/shard{shard_no}/predict({})", ty.label(), shard.len()),
                 t0,
             );
-            let items: Vec<(AcceleratorConfig, Ppa)> =
-                shard.into_iter().zip(preds).collect();
+            // Fast path: derive the shard's energy coefficients up front
+            // through the synthesis memo (one derivation per distinct
+            // PE recipe / GLB size, not per config); legacy path derives
+            // them per point inside `eval_point`.
+            let t0 = std::time::Instant::now();
+            let eps: Vec<Option<EnergyParams>> = if self.legacy {
+                vec![None; shard.len()]
+            } else {
+                shard.iter().map(|c| Some(self.ctx.synth.energy_params_with(c))).collect()
+            };
+            trace(
+                &format!("sweep/{}/shard{shard_no}/synth({})", ty.label(), shard.len()),
+                t0,
+            );
+            let items: Vec<(AcceleratorConfig, Ppa, Option<EnergyParams>)> = shard
+                .into_iter()
+                .zip(preds)
+                .zip(eps)
+                .map(|((cfg, ppa), ep)| (cfg, ppa, ep))
+                .collect();
             let workers = workers_for(items.len(), opts.workers, 32);
             for (w, wl) in workloads.iter().enumerate() {
                 let t1 = std::time::Instant::now();
-                let pts: Vec<DsePoint> = parallel_map(&items, workers, |(cfg, ppa)| {
-                    eval_point(cfg, *ppa, &wl.layers)
+                let pts: Vec<DsePoint> = parallel_map(&items, workers, |(cfg, ppa, ep)| {
+                    match ep {
+                        Some(ep) => eval_point_prepared(cfg, *ppa, *ep, &preps[w], &self.ctx),
+                        None => eval_point(cfg, *ppa, &wl.layers),
+                    }
                 });
                 trace(
                     &format!(
@@ -346,6 +514,7 @@ impl<'a> SweepEngine<'a> {
             .map(|(wl, mut acc)| {
                 acc.stats.frontier_len = acc.frontier.len();
                 acc.stats.reservoir_len = acc.top_pa.len() + acc.top_e.len();
+                acc.stats.record_memo(self.ctx.stats());
                 TypeSweep {
                     pe_type: ty,
                     workload: wl.name.clone(),
@@ -544,6 +713,62 @@ mod tests {
         // and the retained set is a sliver of the grid
         assert!(ts.stats.peak_resident * 10 < ts.stats.evaluated);
         assert!(!ts.frontier.is_empty());
+    }
+
+    #[test]
+    fn fast_path_bit_identical_to_legacy_and_warms_memo() {
+        // The SoA/memoized pipeline must be byte-for-byte the old per-point
+        // path, including a workload with repeated shapes and a mixed
+        // per-layer precision override (the override-hardware branch).
+        let backend = NativeBackend::new(7);
+        let opts = opts_with(16, 8);
+        let models = train_models(&backend, &opts).unwrap();
+        let mixed = vec![
+            Layer::conv("c0", 8, 16, 16, 16, 3, 1, 1),
+            Layer::conv("c1", 8, 16, 16, 16, 3, 1, 1), // repeated shape, dedups
+            Layer::dw("dw", 16, 16, 3, 1, 1)
+                .with_precision(crate::config::QuantSpec::int(4, 8)),
+        ];
+        // The second workload shares the conv shape — every config's memo
+        // entry from workload 0 is hit again under workload 1.
+        let wl = vec![
+            NamedWorkload::new("mix", mixed),
+            NamedWorkload::new("shared", net()),
+        ];
+        for ty in ALL_PE_TYPES {
+            let fast_engine = SweepEngine::new(&backend, &opts).retain_all(true);
+            let fast = fast_engine.sweep_type(&models[&ty], ty, &wl).unwrap();
+            let memo = fast_engine.memo_stats();
+            let slow = SweepEngine::new(&backend, &opts)
+                .retain_all(true)
+                .legacy(true)
+                .sweep_type(&models[&ty], ty, &wl)
+                .unwrap();
+            for (f, s) in fast.iter().zip(&slow) {
+                let a = f.points.as_ref().unwrap();
+                let b = s.points.as_ref().unwrap();
+                assert_eq!(a.len(), b.len(), "{ty:?}/{}", f.workload);
+                for (p, q) in a.iter().zip(b) {
+                    assert_eq!(p.cfg, q.cfg, "{ty:?}");
+                    assert_eq!(p.throughput.to_bits(), q.throughput.to_bits(), "{ty:?}");
+                    assert_eq!(
+                        p.perf_per_area.to_bits(),
+                        q.perf_per_area.to_bits(),
+                        "{ty:?}"
+                    );
+                    assert_eq!(p.energy_mj.to_bits(), q.energy_mj.to_bits(), "{ty:?}");
+                    assert_eq!(p.utilization.to_bits(), q.utilization.to_bits(), "{ty:?}");
+                }
+                assert_eq!(f.frontier_indices(), s.frontier_indices(), "{ty:?}");
+                // Legacy path records no memo traffic.
+                assert_eq!(s.stats.cost_hits + s.stats.cost_misses, 0, "{ty:?}");
+            }
+            // Memo actually engaged: shared shapes and recipes must hit.
+            assert!(memo.cost_hits > 0, "{ty:?}: no layer-cost hits");
+            assert!(memo.synth_hits > 0, "{ty:?}: no synth hits");
+            assert_eq!(fast[0].stats.cost_hits, memo.cost_hits);
+            assert_eq!(fast[0].stats.synth_misses, memo.synth_misses);
+        }
     }
 
     #[test]

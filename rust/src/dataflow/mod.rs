@@ -21,7 +21,12 @@ pub use layer::Layer;
 pub use rs::{map_layer, LayerPerf};
 pub use traffic::{layer_traffic, Traffic};
 
-use crate::config::{AcceleratorConfig, PeType};
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+
+use crate::config::{AcceleratorConfig, PeType, QuantSpec};
+use crate::synth::cache::SynthMemo;
 use crate::synth::oracle::{energy_params, EnergyParams};
 
 /// Aggregate cost of running a whole network once.
@@ -168,6 +173,234 @@ pub fn evaluate_network(
     total
 }
 
+// ---------------------------------------------------------------------------
+// Hot path: prepared workloads + the sweep-wide layer-cost memo
+// ---------------------------------------------------------------------------
+
+/// A workload with the shape-dedup of [`evaluate_network`] hoisted out of
+/// the per-config inner loop.  A sweep evaluates the same layer list for
+/// tens of thousands of configs; the first-seen grouping is identical
+/// every time, so the engine builds it once per (workload, sweep) and
+/// streams configs through [`evaluate_network_prepared`].
+#[derive(Debug, Clone)]
+pub struct PreparedWorkload {
+    /// (layer, multiplicity) in first-seen order — exactly the grouping
+    /// `evaluate_network` derives, so the accumulation order (and every
+    /// float) matches the unprepared path bit-for-bit.
+    unique: Vec<(Layer, u64)>,
+}
+
+impl PreparedWorkload {
+    pub fn new(layers: &[Layer]) -> PreparedWorkload {
+        let mut unique: Vec<(Layer, u64)> = Vec::with_capacity(layers.len());
+        'outer: for layer in layers {
+            for (l, count) in unique.iter_mut() {
+                if l.c == layer.c
+                    && l.k == layer.k
+                    && l.hw == layer.hw
+                    && l.rs == layer.rs
+                    && l.stride == layer.stride
+                    && l.pad == layer.pad
+                    && l.groups == layer.groups
+                    && l.quant == layer.quant
+                {
+                    *count += 1;
+                    continue 'outer;
+                }
+            }
+            unique.push((layer.clone(), 1));
+        }
+        PreparedWorkload { unique }
+    }
+
+    /// Distinct layer shapes after dedup.
+    pub fn distinct(&self) -> usize {
+        self.unique.len()
+    }
+}
+
+/// Memo key: every input [`layer_cost_at`] reads.  The config fields plus
+/// the clock pin the energy params exactly — callers derive `ep` from the
+/// config via `energy_params` (possibly with the predicted `fmax_mhz`
+/// substituted), so (config fields, fmax) determines every other `ep`
+/// field.  The layer key is the full cost-relevant shape (`name` is
+/// excluded: it never enters the cost model); `quant` is included even
+/// though callers resolve overrides first, keeping the key conservative.
+#[derive(Debug, Clone, PartialEq, Eq, Hash)]
+struct CostKey {
+    pe_type: PeType,
+    pe_rows: u32,
+    pe_cols: u32,
+    glb_kb: u32,
+    spad_ifmap_b: u32,
+    spad_filter_b: u32,
+    spad_psum_b: u32,
+    bandwidth_bits: u64,
+    fmax_bits: u64,
+    c: u32,
+    k: u32,
+    hw: u32,
+    rs: u32,
+    stride: u32,
+    pad: u32,
+    groups: u32,
+    quant: Option<QuantSpec>,
+}
+
+impl CostKey {
+    fn new(cfg: &AcceleratorConfig, ep: &EnergyParams, layer: &Layer) -> CostKey {
+        CostKey {
+            pe_type: cfg.pe_type,
+            pe_rows: cfg.pe_rows,
+            pe_cols: cfg.pe_cols,
+            glb_kb: cfg.glb_kb,
+            spad_ifmap_b: cfg.spad_ifmap_b,
+            spad_filter_b: cfg.spad_filter_b,
+            spad_psum_b: cfg.spad_psum_b,
+            bandwidth_bits: cfg.bandwidth_gbps.to_bits(),
+            fmax_bits: ep.fmax_mhz.to_bits(),
+            c: layer.c,
+            k: layer.k,
+            hw: layer.hw,
+            rs: layer.rs,
+            stride: layer.stride,
+            pad: layer.pad,
+            groups: layer.groups,
+            quant: layer.quant,
+        }
+    }
+}
+
+/// Insertion cap: a runaway sweep (every key distinct) stops growing the
+/// map here and keeps computing cold — correctness never depends on a hit.
+const COST_MEMO_MAX_ENTRIES: usize = 262_144;
+
+/// Sweep-wide layer-cost memo keyed by (resolved config, clock, layer
+/// shape).  Thread-safe: the sweep's dataflow phase runs on a thread pool.
+#[derive(Default)]
+pub struct CostMemo {
+    map: Mutex<HashMap<CostKey, (LayerPerf, Traffic, EnergyBreakdown)>>,
+    hits: AtomicU64,
+    misses: AtomicU64,
+}
+
+impl CostMemo {
+    pub fn new() -> CostMemo {
+        CostMemo::default()
+    }
+
+    /// (hits, misses); their sum equals the number of
+    /// [`CostMemo::layer_cost_cached`] calls.
+    pub fn counters(&self) -> (u64, u64) {
+        (self.hits.load(Ordering::Relaxed), self.misses.load(Ordering::Relaxed))
+    }
+
+    /// [`layer_cost_at`] through the memo: a hit returns the cached
+    /// triple (bit-identical — the cached value *is* a previous cold
+    /// result for an identical key), a miss computes and caches.
+    pub fn layer_cost_cached(
+        &self,
+        cfg: &AcceleratorConfig,
+        ep: &EnergyParams,
+        layer: &Layer,
+    ) -> (LayerPerf, Traffic, EnergyBreakdown) {
+        let key = CostKey::new(cfg, ep, layer);
+        if let Some(v) = self.map.lock().unwrap().get(&key) {
+            self.hits.fetch_add(1, Ordering::Relaxed);
+            return *v;
+        }
+        self.misses.fetch_add(1, Ordering::Relaxed);
+        // Compute outside the lock; a racing double-insert writes the
+        // identical value.
+        let v = layer_cost_at(cfg, ep, layer);
+        let mut map = self.map.lock().unwrap();
+        if map.len() < COST_MEMO_MAX_ENTRIES {
+            map.insert(key, v);
+        }
+        v
+    }
+}
+
+/// Hit/miss counters of both hot-path memos, as surfaced through
+/// `SweepStats` and the optimizer's `[engine]` stderr line.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct MemoStats {
+    pub cost_hits: u64,
+    pub cost_misses: u64,
+    pub synth_hits: u64,
+    pub synth_misses: u64,
+}
+
+/// Shared evaluation context: the synthesis memo feeding `energy_params`
+/// and the layer-cost memo.  One context spans a whole sweep (the
+/// `SweepEngine` owns one) or a whole optimizer run.
+#[derive(Default)]
+pub struct EvalContext {
+    pub synth: SynthMemo,
+    pub costs: CostMemo,
+}
+
+impl EvalContext {
+    pub fn new() -> EvalContext {
+        EvalContext::default()
+    }
+
+    pub fn stats(&self) -> MemoStats {
+        let (cost_hits, cost_misses) = self.costs.counters();
+        let (synth_hits, synth_misses) = self.synth.counters();
+        MemoStats { cost_hits, cost_misses, synth_hits, synth_misses }
+    }
+}
+
+/// [`evaluate_network`] over a [`PreparedWorkload`] with both memos
+/// applied.  The accumulation replicates `evaluate_network` operation-for-
+/// operation (same first-seen order, same per-layer arithmetic), and the
+/// memos return bit-identical values to cold computation, so this is
+/// bit-exact against the legacy path — pinned by tests here and by
+/// `tests/integration_soa.rs`.
+pub fn evaluate_network_prepared(
+    cfg: &AcceleratorConfig,
+    ep: &EnergyParams,
+    prep: &PreparedWorkload,
+    ctx: &EvalContext,
+) -> NetworkCost {
+    let mut override_hw: Vec<(QuantSpec, AcceleratorConfig, EnergyParams)> = Vec::new();
+    let mut total = NetworkCost::default();
+    let mut util_weighted = 0.0;
+    for (layer, count) in &prep.unique {
+        let (cfg_l, ep_l) = match layer.quant {
+            Some(q) if q != cfg.quant() => {
+                match override_hw.iter().position(|(spec, _, _)| *spec == q) {
+                    Some(i) => (override_hw[i].1, override_hw[i].2),
+                    None => {
+                        let cfg_q = cfg.with_pe_type(PeType::from_spec(q));
+                        let mut ep_q = ctx.synth.energy_params_with(&cfg_q);
+                        ep_q.fmax_mhz = ep.fmax_mhz;
+                        override_hw.push((q, cfg_q, ep_q));
+                        (cfg_q, ep_q)
+                    }
+                }
+            }
+            _ => (*cfg, *ep),
+        };
+        let (perf, traffic, energy) = ctx.costs.layer_cost_cached(&cfg_l, &ep_l, layer);
+        let count = *count;
+        let n = count as f64;
+        total.macs += layer.macs() * count;
+        total.cycles += perf.cycles * count;
+        total.latency_s += perf.latency_s(ep_l.fmax_mhz) * n;
+        total.energy_mj += energy.total_mj() * n;
+        total.dram_bytes += traffic.dram_bytes * count;
+        util_weighted += perf.utilization * (layer.macs() * count) as f64;
+    }
+    total.avg_utilization = if total.macs > 0 {
+        util_weighted / total.macs as f64
+    } else {
+        0.0
+    };
+    total
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -250,5 +483,130 @@ mod tests {
         let twice_dw = evaluate_network(&cfg, &ep, &[dw.clone(), dw.clone()]);
         assert_eq!(mixed.macs, dense.macs() + dw.macs());
         assert!(mixed.cycles > twice_dw.cycles);
+    }
+
+    fn assert_cost_bits_equal(a: &NetworkCost, b: &NetworkCost) {
+        assert_eq!(a.macs, b.macs);
+        assert_eq!(a.cycles, b.cycles);
+        assert_eq!(a.dram_bytes, b.dram_bytes);
+        assert_eq!(a.latency_s.to_bits(), b.latency_s.to_bits(), "latency drifted");
+        assert_eq!(a.energy_mj.to_bits(), b.energy_mj.to_bits(), "energy drifted");
+        assert_eq!(
+            a.avg_utilization.to_bits(),
+            b.avg_utilization.to_bits(),
+            "utilization drifted"
+        );
+    }
+
+    #[test]
+    fn prepared_evaluation_bit_identical_to_legacy_including_mixed_precision() {
+        use crate::config::QuantSpec;
+        let ctx = EvalContext::new();
+        let layers = vec![
+            Layer::conv("a", 3, 16, 32, 32, 3, 1, 1),
+            Layer::conv("b", 16, 32, 16, 16, 3, 1, 1),
+            Layer::conv("b2", 16, 32, 16, 16, 3, 1, 1), // repeated shape
+            Layer::dw("dw", 32, 16, 3, 1, 1).with_precision(QuantSpec::int(4, 8)),
+            Layer::fc("fc", 256, 10),
+        ];
+        let prep = PreparedWorkload::new(&layers);
+        assert_eq!(prep.distinct(), 4);
+        for ty in crate::config::ALL_PE_TYPES {
+            let cfg = AcceleratorConfig::default_with(ty);
+            let mut ep = energy_params(&cfg);
+            ep.fmax_mhz = 917.0; // a predicted clock, as the sweep substitutes
+            let legacy = evaluate_network(&cfg, &ep, &layers);
+            // Run twice: the second pass is all memo hits and must not drift.
+            let cold = evaluate_network_prepared(&cfg, &ep, &prep, &ctx);
+            let warm = evaluate_network_prepared(&cfg, &ep, &prep, &ctx);
+            assert_cost_bits_equal(&legacy, &cold);
+            assert_cost_bits_equal(&legacy, &warm);
+        }
+        let s = ctx.stats();
+        assert!(s.cost_hits > 0, "second pass must hit the layer-cost memo");
+        assert!(s.synth_hits > 0, "override hardware must hit the synth memo");
+    }
+
+    #[test]
+    fn cost_memo_hit_equals_cold_compute_for_random_spec_layer_pairs() {
+        use crate::testkit::{forall, gen_config, gen_layer, gen_quant_spec};
+        let memo = CostMemo::new();
+        forall(
+            "layer-cost memo hit == cold compute",
+            60,
+            93,
+            |rng| {
+                let mut cfg = gen_config(rng);
+                if rng.f64() < 0.5 {
+                    cfg.pe_type = PeType::from_spec(gen_quant_spec(rng));
+                }
+                (cfg, gen_layer(rng))
+            },
+            |(cfg, layer)| {
+                let ep = energy_params(cfg);
+                let cold = layer_cost_at(cfg, &ep, layer);
+                let first = memo.layer_cost_cached(cfg, &ep, layer);
+                let second = memo.layer_cost_cached(cfg, &ep, layer);
+                for (tag, got) in [("miss", &first), ("hit", &second)] {
+                    if got.0.cycles != cold.0.cycles
+                        || got.1.dram_bytes != cold.1.dram_bytes
+                        || got.2.total_mj().to_bits() != cold.2.total_mj().to_bits()
+                        || got.0.utilization.to_bits() != cold.0.utilization.to_bits()
+                    {
+                        return Err(format!("memo {tag} diverged from cold compute"));
+                    }
+                }
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn cost_memo_distinct_keys_never_collide() {
+        // A depthwise layer and a grouped layer engineered to share the
+        // exact MAC count must still occupy distinct memo entries.
+        let dw = Layer::dw("dw", 64, 28, 3, 1, 1);
+        let grp = Layer::grouped("g", 64, 8, 28, 3, 1, 1, 8);
+        assert_eq!(dw.macs(), grp.macs(), "test premise: equal flop counts");
+        let cfg = AcceleratorConfig::default_with(PeType::Int16);
+        let ep = energy_params(&cfg);
+        let memo = CostMemo::new();
+        let a = memo.layer_cost_cached(&cfg, &ep, &dw);
+        let b = memo.layer_cost_cached(&cfg, &ep, &grp);
+        assert_eq!(memo.counters(), (0, 2), "both shapes must miss separately");
+        assert!(
+            a.0.cycles != b.0.cycles || a.1.dram_bytes != b.1.dram_bytes,
+            "distinct shapes must cost differently"
+        );
+        // Repeat lookups hit their own entries, never each other's.
+        let a2 = memo.layer_cost_cached(&cfg, &ep, &dw);
+        let b2 = memo.layer_cost_cached(&cfg, &ep, &grp);
+        assert_eq!(memo.counters(), (2, 2));
+        assert_eq!(a.0.cycles, a2.0.cycles);
+        assert_eq!(b.0.cycles, b2.0.cycles);
+        assert_eq!(a.2.total_mj().to_bits(), a2.2.total_mj().to_bits());
+        assert_eq!(b.2.total_mj().to_bits(), b2.2.total_mj().to_bits());
+    }
+
+    #[test]
+    fn cost_memo_counters_sum_to_total_lookups() {
+        use crate::testkit::{gen_config, gen_layer};
+        use crate::util::prng::Rng;
+        let memo = CostMemo::new();
+        let mut rng = Rng::new(17);
+        let mut lookups = 0u64;
+        for _ in 0..40 {
+            let cfg = gen_config(&mut rng);
+            let ep = energy_params(&cfg);
+            let layer = gen_layer(&mut rng);
+            // 1-3 lookups per pair so repeats generate genuine hits.
+            for _ in 0..(1 + rng.below(3)) {
+                memo.layer_cost_cached(&cfg, &ep, &layer);
+                lookups += 1;
+            }
+        }
+        let (hits, misses) = memo.counters();
+        assert_eq!(hits + misses, lookups, "hits + misses must equal lookups");
+        assert!(hits > 0 && misses > 0, "exercise both paths: {hits}/{misses}");
     }
 }

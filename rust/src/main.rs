@@ -34,7 +34,7 @@ use qappa::coordinator::report::{
     opt_convergence_table, opt_frontier_table, precision_summary_table, sweep_stats_table,
     workload_table,
 };
-use qappa::coordinator::{DesignSpace, DseOptions, NamedWorkload};
+use qappa::coordinator::{DesignSpace, DseOptions, NamedWorkload, SweepStats};
 use qappa::util::cli::Args;
 use qappa::util::table::Table;
 use qappa::workloads;
@@ -351,15 +351,15 @@ fn cmd_dse_precision(
     let summaries = session.explore_precision(&named, &precision)?;
     let dt = t0.elapsed().as_secs_f64();
 
+    // Wall time and chunk size go to stderr: the stdout report is
+    // deterministic for a fixed seed, byte-for-byte across --chunk values.
     println!(
         "Precision-grid DSE over {} workload(s) — {} precision cells x {} configs, \
-         chunk={}, backend=native (unified {}-feature model), {:.2}s",
+         backend=native (unified {}-feature model)",
         named.len(),
         grid.len(),
         session.options().space.len(),
-        session.options().chunk,
         qappa::config::QUANT_NUM_FEATURES,
-        dt
     );
     for s in &summaries {
         println!("anchor[{}]: {}", s.workload, s.anchor.cfg.key());
@@ -367,16 +367,43 @@ fn cmd_dse_precision(
     print!("{}", precision_summary_table(&summaries).render());
     // Progress/stats to stderr: piped stdout stays a parseable report.
     eprintln!(
-        "[store] models trained: {} (cache hits: {})",
+        "[store] models trained: {} (cache hits: {}); chunk={}, {:.2}s",
         session.store().misses(),
-        session.store().hits()
+        session.store().hits(),
+        session.options().chunk,
+        dt
     );
+    let (ch, cm, sh, sm) =
+        memo_totals(summaries.iter().flat_map(|s| s.stats.values()));
+    memo_line(ch, cm, sh, sm);
     if let Some(dir) = out {
         let path = format!("{dir}/precision_summary.csv");
         write_csv(&precision_summary_table(&summaries), &path)?;
         println!("wrote {path}");
     }
     Ok(())
+}
+
+/// Final memo counters of one engine run.  Per-cell `SweepStats`
+/// snapshots are cumulative over the engine's lifetime, so the run total
+/// is the per-counter maximum — summing would multi-count shared state.
+fn memo_totals<'a>(stats: impl Iterator<Item = &'a SweepStats>) -> (u64, u64, u64, u64) {
+    let mut t = (0u64, 0u64, 0u64, 0u64);
+    for s in stats {
+        t.0 = t.0.max(s.cost_hits);
+        t.1 = t.1.max(s.cost_misses);
+        t.2 = t.2.max(s.synth_hits);
+        t.3 = t.3.max(s.synth_misses);
+    }
+    t
+}
+
+/// The `[engine]` memo stderr line shared by the explore/optimize paths.
+fn memo_line(cost_hits: u64, cost_misses: u64, synth_hits: u64, synth_misses: u64) {
+    eprintln!(
+        "[engine] layer-cost memo: {cost_hits} hits / {cost_misses} misses; \
+         synth memo: {synth_hits} hits / {synth_misses} misses"
+    );
 }
 
 fn cmd_dse(args: &Args) -> Result<(), QappaError> {
@@ -403,19 +430,23 @@ fn cmd_dse(args: &Args) -> Result<(), QappaError> {
     let res = session.dse(&wl, &layers)?;
     let dt = t0.elapsed().as_secs_f64();
 
+    // Wall time goes to stderr: the stdout report is deterministic for a
+    // fixed seed, byte-for-byte across --chunk values.
     println!(
-        "DSE over {} ({} layers) — {} configs/type, backend={}, {:.2}s",
+        "DSE over {} ({} layers) — {} configs/type, backend={}",
         wl,
         layers.len(),
         session.options().space.len(),
         backend_name,
-        dt
     );
     println!("anchor (best INT16 perf/area): {}", res.anchor.cfg.key());
     print!("{}", dse_summary_table(&res).render());
     if want_stats {
         print!("{}", dse_stats_table(&res).render());
     }
+    eprintln!("[store] dse wall time: {dt:.2}s");
+    let (ch, cm, sh, sm) = memo_totals(res.stats.values());
+    memo_line(ch, cm, sh, sm);
     if let Some(engine) = session.engine() {
         let s = &engine.stats;
         use std::sync::atomic::Ordering::Relaxed;
@@ -469,15 +500,15 @@ fn cmd_dse_multi(args: &Args, specs: &[&str]) -> Result<(), QappaError> {
     let summaries = session.explore_named(&named)?;
     let dt = t0.elapsed().as_secs_f64();
 
+    // Wall time and chunk size go to stderr: the stdout report is
+    // deterministic for a fixed seed, byte-for-byte across --chunk values.
     println!(
-        "DSE over {} workloads ({}) — {} configs/type, chunk={}, top-k={}, backend={}, {:.2}s",
+        "DSE over {} workloads ({}) — {} configs/type, top-k={}, backend={}",
         named.len(),
         named.iter().map(|w| w.name.as_str()).collect::<Vec<_>>().join(", "),
         session.options().space.len(),
-        session.options().chunk,
         session.options().topk,
         backend_name,
-        dt
     );
     for s in &summaries {
         println!(
@@ -489,9 +520,11 @@ fn cmd_dse_multi(args: &Args, specs: &[&str]) -> Result<(), QappaError> {
     print!("{}", multi_summary_table(&summaries).render());
     // Progress/stats to stderr: piped stdout stays a parseable report.
     eprintln!(
-        "[store] models trained: {} (cache hits: {})",
+        "[store] models trained: {} (cache hits: {}); chunk={}, {:.2}s",
         session.store().misses(),
-        session.store().hits()
+        session.store().hits(),
+        session.options().chunk,
+        dt
     );
     let peak = summaries
         .iter()
@@ -503,6 +536,9 @@ fn cmd_dse_multi(args: &Args, specs: &[&str]) -> Result<(), QappaError> {
         peak,
         session.options().space.len()
     );
+    let (ch, cm, sh, sm) =
+        memo_totals(summaries.iter().flat_map(|s| s.stats.values()));
+    memo_line(ch, cm, sh, sm);
     if want_stats {
         print!("{}", sweep_stats_table(&summaries).render());
     }
@@ -593,6 +629,12 @@ fn cmd_optimize(args: &Args) -> Result<(), QappaError> {
         session.store().misses(),
         session.store().hits(),
         dt
+    );
+    memo_line(
+        resp.memo.cost_hits,
+        resp.memo.cost_misses,
+        resp.memo.synth_hits,
+        resp.memo.synth_misses,
     );
     if let Some(dir) = out {
         let frontier_path = format!("{dir}/optimize_frontier.csv");

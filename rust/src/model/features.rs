@@ -47,6 +47,18 @@ pub fn num_features(d: usize, degree: usize) -> usize {
 /// Expand one standardized feature row into its P monomials.
 pub fn expand_row(x: &[f64], degree: usize, idx: &[Vec<usize>]) -> Vec<f64> {
     let mut out = Vec::with_capacity(1 + idx.len());
+    expand_row_into(x, degree, idx, &mut out);
+    out
+}
+
+/// [`expand_row`] into a caller-owned buffer (cleared first), so batch
+/// loops — the Gram accumulation and the hot-path predict — expand
+/// thousands of rows without a per-row allocation.  The monomial values
+/// are computed by the identical multiply chain, so results are
+/// bit-identical to [`expand_row`].
+pub fn expand_row_into(x: &[f64], degree: usize, idx: &[Vec<usize>], out: &mut Vec<f64>) {
+    out.clear();
+    out.reserve(1 + idx.len());
     out.push(1.0);
     for tup in idx {
         let mut v = 1.0;
@@ -56,7 +68,6 @@ pub fn expand_row(x: &[f64], degree: usize, idx: &[Vec<usize>]) -> Vec<f64> {
         out.push(v);
     }
     debug_assert_eq!(out.len(), num_features(x.len(), degree));
-    out
 }
 
 /// Column-wise standardizer: z = (x - mean) / std.
@@ -174,6 +185,16 @@ mod tests {
         let f = expand_row(&[2.0, 3.0], 2, &idx);
         // [1, x0, x1, x0², x0x1, x1²]
         assert_eq!(f, vec![1.0, 2.0, 3.0, 4.0, 6.0, 9.0]);
+    }
+
+    #[test]
+    fn expand_row_into_reuses_buffer_and_matches_expand_row() {
+        let idx = monomial_indices(3, 3);
+        let mut buf = vec![99.0; 4]; // stale contents must be cleared
+        for row in [[0.5, -1.25, 2.0], [3.0, 0.0, -0.5]] {
+            expand_row_into(&row, 3, &idx, &mut buf);
+            assert_eq!(buf, expand_row(&row, 3, &idx));
+        }
     }
 
     #[test]

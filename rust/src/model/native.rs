@@ -6,7 +6,7 @@
 //! fallback backend when `artifacts/` is absent.
 
 use crate::api::error::QappaError;
-use crate::model::features::{expand_row, monomial_indices};
+use crate::model::features::{expand_row, expand_row_into, monomial_indices};
 use crate::model::{Backend, M};
 
 /// Dense column-major-free little matrix helper (row-major).
@@ -69,13 +69,14 @@ pub fn gram_f64(
     let mut gram = vec![0.0; p * p];
     let mut rhs = vec![0.0; p * M];
     let mut n_eff = 0.0;
+    let mut f = Vec::new();
     for r in 0..n {
         let wi = w[r];
         if wi == 0.0 {
             continue;
         }
         n_eff += wi;
-        let f = expand_row(&x[r * d..(r + 1) * d], degree, &idx);
+        expand_row_into(&x[r * d..(r + 1) * d], degree, &idx, &mut f);
         for i in 0..p {
             let fwi = f[i] * wi;
             for j in i..p {
@@ -131,7 +132,9 @@ pub fn ridge_fit_f64(
     solve_from_gram_f64(&g, &c, n_eff, lam, p)
 }
 
-/// Prediction on expanded features (f64 core).
+/// Prediction on expanded features (f64 core), one row at a time.  Kept
+/// as the readable reference implementation and the bit-exactness oracle
+/// for [`predict_f64_batch`] (the hot-path form).
 pub fn predict_f64(x: &[f64], n: usize, d: usize, coef: &[f64], degree: usize) -> Vec<f64> {
     let idx = monomial_indices(d, degree);
     let p = 1 + idx.len();
@@ -145,6 +148,45 @@ pub fn predict_f64(x: &[f64], n: usize, d: usize, coef: &[f64], degree: usize) -
                 acc += f[i] * coef[i * M + c];
             }
             out[r * M + c] = acc;
+        }
+    }
+    out
+}
+
+/// Structure-of-arrays prediction: one pass per monomial *column* over the
+/// whole batch instead of one feature expansion per row.  No per-row
+/// allocation (a single `n`-length scratch column is reused), sequential
+/// access to `coef`, and the accumulation for each `(row, target)` output
+/// still happens in monomial-index-ascending order with identically
+/// computed monomial values — so the result is bit-identical to
+/// [`predict_f64`] (pinned by a test below).
+pub fn predict_f64_batch(x: &[f64], n: usize, d: usize, coef: &[f64], degree: usize) -> Vec<f64> {
+    let idx = monomial_indices(d, degree);
+    let p = 1 + idx.len();
+    assert_eq!(coef.len(), p * M, "coef shape");
+    let mut out = vec![0.0; n * M];
+    // Constant column (monomial 0 is the intercept, value 1.0 per row).
+    for r in 0..n {
+        for c in 0..M {
+            out[r * M + c] += coef[c];
+        }
+    }
+    let mut col = vec![0.0; n];
+    for (t, tup) in idx.iter().enumerate() {
+        let i = t + 1;
+        for (r, v) in col.iter_mut().enumerate() {
+            let row = &x[r * d..(r + 1) * d];
+            let mut m = 1.0;
+            for &j in tup {
+                m *= row[j];
+            }
+            *v = m;
+        }
+        for c in 0..M {
+            let k = coef[i * M + c];
+            for r in 0..n {
+                out[r * M + c] += col[r] * k;
+            }
         }
     }
     out
@@ -226,7 +268,8 @@ impl Backend for NativeBackend {
         coef: &[f32],
         degree: usize,
     ) -> Result<Vec<f32>, QappaError> {
-        Ok(predict_f64(&to_f64(x), n, self.d, &to_f64(coef), degree)
+        // Column-wise SoA form; bit-identical to the per-row reference.
+        Ok(predict_f64_batch(&to_f64(x), n, self.d, &to_f64(coef), degree)
             .into_iter()
             .map(|v| v as f32)
             .collect())
@@ -363,5 +406,22 @@ mod tests {
         let x = vec![0.5f32; 7 * 9];
         let out = b.predict(&x, 9, &coef, 2).unwrap();
         assert_eq!(out.len(), 9 * M);
+    }
+
+    #[test]
+    fn batch_predict_bit_identical_to_per_row_reference() {
+        let mut rng = Rng::new(77);
+        for (n, d, degree) in [(1usize, 7usize, 2usize), (9, 7, 3), (257, 12, 2), (64, 3, 1)] {
+            let idx = monomial_indices(d, degree);
+            let p = 1 + idx.len();
+            let coef: Vec<f64> = (0..p * M).map(|_| rng.gauss()).collect();
+            let x: Vec<f64> = (0..n * d).map(|_| rng.range_f64(-2.0, 2.0)).collect();
+            let row_wise = predict_f64(&x, n, d, &coef, degree);
+            let col_wise = predict_f64_batch(&x, n, d, &coef, degree);
+            assert_eq!(row_wise.len(), col_wise.len());
+            for (i, (a, b)) in row_wise.iter().zip(&col_wise).enumerate() {
+                assert_eq!(a.to_bits(), b.to_bits(), "element {i}: {a} vs {b}");
+            }
+        }
     }
 }

@@ -12,9 +12,11 @@
 //!   random-weight scalarization per restart.
 //!
 //! Every evaluation is batched through the same predict → dataflow pipeline
-//! the streaming sweep uses ([`predict_configs`] + [`eval_point`] over the
-//! thread pool), deduplicated by genome key, and folded into one global
-//! [`IncrementalFrontier`] archive of feasible points.  Budget counts
+//! the streaming sweep uses ([`predict_configs_soa`] + [`eval_point_prepared`]
+//! over the thread pool, with the legacy per-point oracle behind
+//! `QAPPA_LEGACY_EVAL` / [`OptOptions::legacy_eval`]), deduplicated by
+//! genome key, and folded into one global [`IncrementalFrontier`] archive
+//! of feasible points.  Budget counts
 //! **distinct** evaluations; cache hits are free.  Everything is driven by
 //! one [`crate::util::prng::Rng`] stream, so a (strategy, budget, seed)
 //! triple reproduces its frontier bit-for-bit.
@@ -25,12 +27,15 @@ use crate::api::error::QappaError;
 use crate::config::AcceleratorConfig;
 use crate::coordinator::explorer::DsePoint;
 use crate::coordinator::pareto::IncrementalFrontier;
-use crate::coordinator::sweep::{eval_point, predict_configs, trace};
-use crate::dataflow::Layer;
+use crate::coordinator::sweep::{
+    eval_point, eval_point_prepared, legacy_eval_env, predict_configs_legacy,
+    predict_configs_soa, trace,
+};
+use crate::dataflow::{EvalContext, Layer, MemoStats, PreparedWorkload};
 use crate::model::{Backend, PpaModel};
 use crate::opt::genome::{Genome, SearchSpace};
 use crate::opt::objective::{Constraints, Objective};
-use crate::synth::oracle::Ppa;
+use crate::synth::oracle::{EnergyParams, Ppa};
 use crate::util::pool::{parallel_map, workers_for};
 use crate::util::prng::Rng;
 
@@ -80,11 +85,21 @@ pub struct OptOptions {
     /// Population size (NSGA-II) / batch size (random).
     pub pop: usize,
     pub seed: u64,
+    /// Force the legacy per-point evaluation path (the pre-SoA oracle the
+    /// equivalence suite compares against).  `QAPPA_LEGACY_EVAL=1` has the
+    /// same effect; results are bit-identical either way.
+    pub legacy_eval: bool,
 }
 
 impl Default for OptOptions {
     fn default() -> OptOptions {
-        OptOptions { strategy: StrategyKind::Nsga2, budget: 20_000, pop: 64, seed: 42 }
+        OptOptions {
+            strategy: StrategyKind::Nsga2,
+            budget: 20_000,
+            pop: 64,
+            seed: 42,
+            legacy_eval: false,
+        }
     }
 }
 
@@ -137,6 +152,8 @@ pub struct OptResult {
     /// Global feasible frontier, sorted by the first objective ascending.
     pub frontier: Vec<FrontierPoint>,
     pub generations: Vec<GenStat>,
+    /// Evaluation-memo counters for the run (all zero on the legacy path).
+    pub memo: MemoStats,
 }
 
 // ---------------------------------------------------------------------------
@@ -170,6 +187,11 @@ pub struct Evaluator<'a> {
     max_feasible: Option<[f64; 2]>,
     max_all: [f64; 2],
     best: [f64; 2],
+    /// Per-point legacy evaluation (the pre-SoA oracle).
+    legacy: bool,
+    /// Run-wide memo state: synthesis derivations and layer costs cached
+    /// across batches and generations.
+    ctx: EvalContext,
 }
 
 impl<'a> Evaluator<'a> {
@@ -193,7 +215,21 @@ impl<'a> Evaluator<'a> {
             max_feasible: None,
             max_all: [f64::NEG_INFINITY; 2],
             best: [f64::INFINITY; 2],
+            legacy: legacy_eval_env(),
+            ctx: EvalContext::new(),
         }
+    }
+
+    /// Force the legacy per-point evaluation path (the test oracle),
+    /// independent of `QAPPA_LEGACY_EVAL`.
+    pub fn legacy(mut self, yes: bool) -> Evaluator<'a> {
+        self.legacy = yes;
+        self
+    }
+
+    /// Snapshot the evaluator's cumulative memo counters.
+    pub fn memo_stats(&self) -> MemoStats {
+        self.ctx.stats()
     }
 
     pub fn remaining(&self) -> usize {
@@ -246,16 +282,40 @@ impl<'a> Evaluator<'a> {
             let decoded: Vec<(AcceleratorConfig, Vec<Layer>)> =
                 fresh.iter().map(|g| self.problem.search.decode(g)).collect();
             let cfgs: Vec<AcceleratorConfig> = decoded.iter().map(|(c, _)| *c).collect();
-            let ppas = predict_configs(self.backend, self.model, &cfgs)?;
-            let items: Vec<(AcceleratorConfig, Ppa, Vec<Layer>)> = decoded
-                .into_iter()
-                .zip(ppas)
-                .map(|((c, l), p)| (c, p, l))
-                .collect();
+            // Populations mix PE recipes, so the SoA predict groups them
+            // into per-recipe batches (bit-identical, see sweep.rs).
+            let ppas = if self.legacy {
+                predict_configs_legacy(self.backend, self.model, &cfgs)?
+            } else {
+                predict_configs_soa(self.backend, self.model, &cfgs)?
+            };
+            // Fast path: memoized synthesis derivation + per-genome layer
+            // dedup up front (synth counters stay deterministic: the memo
+            // is touched sequentially here, never inside the thread pool).
+            let prepared: Vec<Option<(EnergyParams, PreparedWorkload)>> = if self.legacy {
+                decoded.iter().map(|_| None).collect()
+            } else {
+                decoded
+                    .iter()
+                    .map(|(c, l)| {
+                        Some((self.ctx.synth.energy_params_with(c), PreparedWorkload::new(l)))
+                    })
+                    .collect()
+            };
+            let items: Vec<(AcceleratorConfig, Ppa, Vec<Layer>, Option<(EnergyParams, PreparedWorkload)>)> =
+                decoded
+                    .into_iter()
+                    .zip(ppas)
+                    .zip(prepared)
+                    .map(|(((c, l), p), pr)| (c, p, l, pr))
+                    .collect();
             let workers = workers_for(items.len(), self.workers, 4);
-            let pts: Vec<DsePoint> = parallel_map(&items, workers, |(cfg, ppa, layers)| {
-                eval_point(cfg, *ppa, layers)
-            });
+            let ctx = &self.ctx;
+            let pts: Vec<DsePoint> =
+                parallel_map(&items, workers, |(cfg, ppa, layers, pr)| match pr {
+                    Some((ep, prep)) => eval_point_prepared(cfg, *ppa, *ep, prep, ctx),
+                    None => eval_point(cfg, *ppa, layers),
+                });
             trace(&format!("opt/eval_batch({})", pts.len()), t0);
             for (g, p) in fresh.iter().zip(pts) {
                 let objs = [
@@ -731,7 +791,8 @@ pub fn run_optimize(
         return Err(QappaError::Config("optimize: budget must be >= 1".into()));
     }
     problem.constraints.validate()?;
-    let mut ev = Evaluator::new(backend, model, problem, workers, opts.budget);
+    let mut ev = Evaluator::new(backend, model, problem, workers, opts.budget)
+        .legacy(opts.legacy_eval || legacy_eval_env());
     let mut rng = Rng::new(opts.seed);
     let strategy: Box<dyn Strategy> = match opts.strategy {
         StrategyKind::Nsga2 => Box::new(Nsga2 { pop: opts.pop }),
@@ -742,6 +803,7 @@ pub fn run_optimize(
     let ref_point = ev.ref_point();
     let hypervolume = ev.hypervolume();
     let evaluated = ev.evaluated;
+    let memo = ev.memo_stats();
     let mut frontier: Vec<FrontierPoint> = ev
         .archive
         .into_entries()
@@ -768,6 +830,7 @@ pub fn run_optimize(
         hypervolume,
         frontier,
         generations,
+        memo,
     })
 }
 
@@ -831,7 +894,13 @@ mod tests {
             .get_or_train_quant(&backend, &opts, &ALL_PE_TYPES.to_vec())
             .unwrap();
         let ls = layers();
-        let oopts = OptOptions { strategy: StrategyKind::Nsga2, budget: 120, pop: 24, seed: 5 };
+        let oopts = OptOptions {
+            strategy: StrategyKind::Nsga2,
+            budget: 120,
+            pop: 24,
+            seed: 5,
+            ..Default::default()
+        };
         let a = run(&backend, &model, &opts, &ls, &oopts, Constraints::default());
         assert!(a.evaluated <= 120, "budget exceeded: {}", a.evaluated);
         assert!(a.evaluated >= 20, "initial population must be evaluated");
@@ -875,7 +944,13 @@ mod tests {
             .get_or_train_quant(&backend, &opts, &ALL_PE_TYPES.to_vec())
             .unwrap();
         let ls = layers();
-        let oopts = OptOptions { strategy: StrategyKind::Nsga2, budget: 100, pop: 20, seed: 3 };
+        let oopts = OptOptions {
+            strategy: StrategyKind::Nsga2,
+            budget: 100,
+            pop: 20,
+            seed: 3,
+            ..Default::default()
+        };
         let res = run(&backend, &model, &opts, &ls, &oopts, Constraints::default());
         for (i, a) in res.frontier.iter().enumerate() {
             for (j, b) in res.frontier.iter().enumerate() {
@@ -900,7 +975,13 @@ mod tests {
             .get_or_train_quant(&backend, &opts, &ALL_PE_TYPES.to_vec())
             .unwrap();
         let ls = layers();
-        let oopts = OptOptions { strategy: StrategyKind::Nsga2, budget: 100, pop: 20, seed: 9 };
+        let oopts = OptOptions {
+            strategy: StrategyKind::Nsga2,
+            budget: 100,
+            pop: 20,
+            seed: 9,
+            ..Default::default()
+        };
         // unconstrained run to pick a binding area bound
         let free = run(&backend, &model, &opts, &ls, &oopts, Constraints::default());
         let areas: Vec<f64> = free.frontier.iter().map(|f| f.point.ppa.area_mm2).collect();
@@ -944,7 +1025,8 @@ mod tests {
             .unwrap();
         let ls = layers();
         for kind in [StrategyKind::Nsga2, StrategyKind::Random, StrategyKind::HillClimb] {
-            let oopts = OptOptions { strategy: kind, budget: 60, pop: 16, seed: 13 };
+            let oopts =
+                OptOptions { strategy: kind, budget: 60, pop: 16, seed: 13, ..Default::default() };
             let res = run(&backend, &model, &opts, &ls, &oopts, Constraints::default());
             assert_eq!(res.strategy, kind.label());
             assert!(res.evaluated <= 60, "{:?}", kind);
@@ -992,6 +1074,47 @@ mod tests {
         let e = run_optimize(&backend, &model, &problem, &OptOptions::default(), 2)
             .unwrap_err();
         assert!(e.to_string().contains("max_power_mw"), "{e}");
+    }
+
+    #[test]
+    fn memoized_search_bit_identical_to_legacy_and_reports_memo() {
+        // The memoized SoA pipeline must reproduce the legacy per-point
+        // run bit-for-bit (same seed, same budget): same spend, same
+        // hypervolume, same frontier genomes/objectives/configs.
+        let (backend, store, opts) = setup();
+        let model = store
+            .get_or_train_quant(&backend, &opts, &ALL_PE_TYPES.to_vec())
+            .unwrap();
+        let ls = layers();
+        for kind in [StrategyKind::Nsga2, StrategyKind::Random, StrategyKind::HillClimb] {
+            let fast_opts =
+                OptOptions { strategy: kind, budget: 80, pop: 16, seed: 21, ..Default::default() };
+            let slow_opts = OptOptions { legacy_eval: true, ..fast_opts };
+            let fast = run(&backend, &model, &opts, &ls, &fast_opts, Constraints::default());
+            let slow = run(&backend, &model, &opts, &ls, &slow_opts, Constraints::default());
+            assert_eq!(fast.evaluated, slow.evaluated, "{kind:?}");
+            assert_eq!(
+                fast.hypervolume.to_bits(),
+                slow.hypervolume.to_bits(),
+                "{kind:?}"
+            );
+            assert_eq!(fast.ref_point[0].to_bits(), slow.ref_point[0].to_bits());
+            assert_eq!(fast.ref_point[1].to_bits(), slow.ref_point[1].to_bits());
+            assert_eq!(fast.frontier.len(), slow.frontier.len(), "{kind:?}");
+            for (x, y) in fast.frontier.iter().zip(&slow.frontier) {
+                assert_eq!(x.genome, y.genome, "{kind:?}");
+                assert_eq!(x.objs[0].to_bits(), y.objs[0].to_bits(), "{kind:?}");
+                assert_eq!(x.objs[1].to_bits(), y.objs[1].to_bits(), "{kind:?}");
+                assert_eq!(x.point.cfg, y.point.cfg, "{kind:?}");
+            }
+            assert_eq!(fast.generations, slow.generations, "{kind:?}");
+            // The fast run exercised the memo; the legacy run never did.
+            assert!(
+                fast.memo.synth_hits + fast.memo.synth_misses > 0,
+                "{kind:?}: memo untouched"
+            );
+            assert_eq!(slow.memo, MemoStats::default(), "{kind:?}");
+        }
     }
 
     #[test]

@@ -39,7 +39,7 @@ pub const GLB_ACCESS_PER_MAC: f64 = 0.05;
 /// reports synthesis power at a nominal testbench activity).
 pub const REF_UTILIZATION: f64 = 0.85;
 
-fn noc_interface(cfg: &AcceleratorConfig) -> GateCounts {
+pub(crate) fn noc_interface(cfg: &AcceleratorConfig) -> GateCounts {
     // Per-PE bus interface: tag match + FIFO slot + drivers, scaled by
     // operand width.
     let w = cfg.quant().act_bits as u64;
@@ -53,7 +53,7 @@ fn noc_interface(cfg: &AcceleratorConfig) -> GateCounts {
     per_pe.scaled(cfg.num_pes() as u64)
 }
 
-fn dma_engine(cfg: &AcceleratorConfig) -> GateCounts {
+pub(crate) fn dma_engine(cfg: &AcceleratorConfig) -> GateCounts {
     // Descriptor FSM + burst counters + bus width registers; modestly
     // scaled by bandwidth (wider interfaces for higher BW).
     let lanes = (cfg.bandwidth_gbps / 2.0).ceil().max(1.0) as u64;
@@ -66,7 +66,7 @@ fn dma_engine(cfg: &AcceleratorConfig) -> GateCounts {
     }
 }
 
-fn top_control(cfg: &AcceleratorConfig) -> GateCounts {
+pub(crate) fn top_control(cfg: &AcceleratorConfig) -> GateCounts {
     // Layer sequencer + config registers; grows slowly with array size.
     let pes = cfg.num_pes() as u64;
     GateCounts {

@@ -1,0 +1,222 @@
+//! Synthesis memo for the evaluation hot path.
+//!
+//! `energy_params` re-runs full PE gate synthesis and the GLB macro model
+//! per call, but both are pure functions of a handful of config fields:
+//! the PE side depends only on (resolved `QuantSpec`, scratchpad bytes)
+//! and the GLB macro only on `glb_kb`.  [`SynthMemo`] caches those two
+//! components — the expensive parts — and recomposes the remaining
+//! arithmetic in exactly the order `energy_params` uses, so the memoized
+//! result is bit-identical to a cold `energy_params` call (pinned by
+//! tests here and by the SoA equivalence suite).
+//!
+//! Hit/miss counters feed `SweepStats` and the optimizer's `[engine]`
+//! stderr line; one lookup is counted per [`SynthMemo::energy_params_with`]
+//! call, a hit meaning every cached component was already present.
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+
+use crate::config::{AcceleratorConfig, PeType};
+use crate::synth::array::{dma_engine, noc_interface, top_control, WIRE_FJ_PER_BIT_MM};
+use crate::synth::gates::GateLib;
+use crate::synth::oracle::EnergyParams;
+use crate::synth::pe::synthesize_pe;
+use crate::synth::sram::{storage, SramMacro, DRAM_FJ_PER_BIT};
+
+/// The four scalars the energy model needs from one synthesized PE.
+/// Caching these (rather than the full `PeSynth`) keeps the entries tiny
+/// and forces every derived value through the same method calls
+/// `energy_params` makes, so the floats agree bit-for-bit.
+#[derive(Debug, Clone, Copy)]
+struct PeDerived {
+    area_um2: f64,
+    energy_per_mac_fj: f64,
+    leakage_nw: f64,
+    fmax_mhz: f64,
+}
+
+/// PE synthesis key: everything `synthesize_pe` reads from the config.
+type PeKey = (PeType, u32, u32, u32);
+
+/// Thread-safe cache over the synthesis-derived inputs of `energy_params`.
+pub struct SynthMemo {
+    lib: GateLib,
+    pe: Mutex<HashMap<PeKey, PeDerived>>,
+    glb: Mutex<HashMap<u32, SramMacro>>,
+    hits: AtomicU64,
+    misses: AtomicU64,
+}
+
+impl Default for SynthMemo {
+    fn default() -> Self {
+        SynthMemo::new()
+    }
+}
+
+impl SynthMemo {
+    pub fn new() -> SynthMemo {
+        SynthMemo {
+            lib: GateLib::freepdk45(),
+            pe: Mutex::new(HashMap::new()),
+            glb: Mutex::new(HashMap::new()),
+            hits: AtomicU64::new(0),
+            misses: AtomicU64::new(0),
+        }
+    }
+
+    /// (hits, misses) so far; `hits + misses` equals the number of
+    /// `energy_params_with` calls.
+    pub fn counters(&self) -> (u64, u64) {
+        (self.hits.load(Ordering::Relaxed), self.misses.load(Ordering::Relaxed))
+    }
+
+    fn pe_derived(&self, cfg: &AcceleratorConfig) -> (PeDerived, bool) {
+        let key: PeKey =
+            (cfg.pe_type, cfg.spad_ifmap_b, cfg.spad_filter_b, cfg.spad_psum_b);
+        if let Some(d) = self.pe.lock().unwrap().get(&key) {
+            return (*d, true);
+        }
+        // Synthesize outside the lock; a racing double-insert writes the
+        // identical value (pure function of the key).
+        let pe = synthesize_pe(&self.lib, cfg);
+        let d = PeDerived {
+            area_um2: pe.area_um2(&self.lib),
+            energy_per_mac_fj: pe.energy_per_mac_fj(&self.lib),
+            leakage_nw: pe.leakage_nw(&self.lib),
+            fmax_mhz: pe.fmax_mhz(),
+        };
+        self.pe.lock().unwrap().insert(key, d);
+        (d, false)
+    }
+
+    fn glb_macro(&self, glb_kb: u32) -> (SramMacro, bool) {
+        if let Some(m) = self.glb.lock().unwrap().get(&glb_kb) {
+            return (*m, true);
+        }
+        let m = storage(glb_kb as u64 * 1024, 64);
+        self.glb.lock().unwrap().insert(glb_kb, m);
+        (m, false)
+    }
+
+    /// Memoized `energy_params`: bit-identical to
+    /// [`crate::synth::oracle::energy_params`] on every field.
+    pub fn energy_params_with(&self, cfg: &AcceleratorConfig) -> EnergyParams {
+        let (pe, pe_hit) = self.pe_derived(cfg);
+        let (glb, glb_hit) = self.glb_macro(cfg.glb_kb);
+        if pe_hit && glb_hit {
+            self.hits.fetch_add(1, Ordering::Relaxed);
+        } else {
+            self.misses.fetch_add(1, Ordering::Relaxed);
+        }
+
+        // Recomposition mirrors `synthesize_array` + `energy_params`
+        // operation-for-operation so the floats cannot drift.
+        let mut infra = noc_interface(cfg);
+        infra.add(&dma_engine(cfg));
+        infra.add(&top_control(cfg));
+        let leak_nw = pe.leakage_nw * cfg.num_pes() as f64
+            + glb.leak_nw
+            + self.lib.leakage_nw(&infra);
+
+        let pe_mm = (pe.area_um2 / 1e6).sqrt();
+        let span_mm = pe_mm * (cfg.pe_rows as f64 + cfg.pe_cols as f64) / 2.0;
+        let avg_wire_mm = (span_mm / 2.0).max(0.05);
+        let margin = 1.0 - 0.003 * (cfg.pe_rows + cfg.pe_cols) as f64;
+        let fmax_mhz = pe.fmax_mhz * margin.max(0.7);
+
+        EnergyParams {
+            mac_with_spads_fj: pe.energy_per_mac_fj,
+            glb_access_fj: glb.access_energy_fj,
+            glb_word_bits: 64,
+            wire_fj_per_bit: WIRE_FJ_PER_BIT_MM * avg_wire_mm,
+            dram_fj_per_bit: DRAM_FJ_PER_BIT,
+            leakage_mw: leak_nw / 1e6,
+            fmax_mhz,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::PeType;
+    use crate::synth::oracle::energy_params;
+    use crate::testkit::{forall, gen_config, gen_quant_spec};
+
+    fn assert_bit_identical(a: &EnergyParams, b: &EnergyParams) -> Result<(), String> {
+        let pairs = [
+            ("mac_with_spads_fj", a.mac_with_spads_fj, b.mac_with_spads_fj),
+            ("glb_access_fj", a.glb_access_fj, b.glb_access_fj),
+            ("wire_fj_per_bit", a.wire_fj_per_bit, b.wire_fj_per_bit),
+            ("dram_fj_per_bit", a.dram_fj_per_bit, b.dram_fj_per_bit),
+            ("leakage_mw", a.leakage_mw, b.leakage_mw),
+            ("fmax_mhz", a.fmax_mhz, b.fmax_mhz),
+        ];
+        for (name, x, y) in pairs {
+            if x.to_bits() != y.to_bits() {
+                return Err(format!("{name}: {x} != {y}"));
+            }
+        }
+        if a.glb_word_bits != b.glb_word_bits {
+            return Err("glb_word_bits differ".into());
+        }
+        Ok(())
+    }
+
+    #[test]
+    fn memoized_params_bit_identical_to_cold_for_presets_and_random_specs() {
+        let memo = SynthMemo::new();
+        forall(
+            "memoized energy_params == cold energy_params",
+            150,
+            41,
+            |rng| {
+                let mut cfg = gen_config(rng);
+                // Half the cases swap in an arbitrary-precision spec so the
+                // memo is exercised beyond the 4 presets.
+                if rng.f64() < 0.5 {
+                    cfg.pe_type = PeType::from_spec(gen_quant_spec(rng));
+                }
+                cfg
+            },
+            |cfg| assert_bit_identical(&memo.energy_params_with(cfg), &energy_params(cfg)),
+        );
+    }
+
+    #[test]
+    fn repeat_lookups_hit_and_counters_sum_to_lookups() {
+        let memo = SynthMemo::new();
+        let cfg = crate::config::AcceleratorConfig::default_with(PeType::Int16);
+        let a = memo.energy_params_with(&cfg);
+        assert_eq!(memo.counters(), (0, 1), "cold call must miss");
+        let b = memo.energy_params_with(&cfg);
+        assert_eq!(memo.counters(), (1, 1), "warm call must hit");
+        assert_bit_identical(&a, &b).unwrap();
+
+        // Same PE recipe, different GLB: the GLB component misses.
+        let mut bigger = cfg;
+        bigger.glb_kb += 64;
+        memo.energy_params_with(&bigger);
+        let (h, m) = memo.counters();
+        assert_eq!((h, m), (1, 2));
+        assert_eq!(h + m, 3, "hits + misses must equal total lookups");
+    }
+
+    #[test]
+    fn distinct_pe_recipes_do_not_collide() {
+        // Same spad bytes, different resolved spec — and vice versa — must
+        // produce distinct cached results.
+        let memo = SynthMemo::new();
+        let a = crate::config::AcceleratorConfig::default_with(PeType::Int16);
+        let mut b = a;
+        b.pe_type = PeType::LightPe1;
+        let ea = memo.energy_params_with(&a);
+        let eb = memo.energy_params_with(&b);
+        assert!(ea.mac_with_spads_fj != eb.mac_with_spads_fj);
+        let mut c = a;
+        c.spad_filter_b *= 2;
+        let ec = memo.energy_params_with(&c);
+        assert!(ea.mac_with_spads_fj != ec.mac_with_spads_fj);
+    }
+}

@@ -15,6 +15,7 @@
 //! logic simulator verifies cannot drift apart.
 
 pub mod array;
+pub mod cache;
 pub mod gates;
 pub mod mac;
 pub mod oracle;

@@ -64,6 +64,90 @@ fn explore_stdout_stays_parseable_with_progress_on_stderr() {
     assert!(stderr.contains("[trace]"), "QAPPA_TRACE output missing from stderr:\n{stderr}");
 }
 
+/// Runs `explore` on the tiny space with the given chunk size, optionally
+/// forcing the legacy per-point evaluation path, and returns raw stdout.
+fn explore_stdout(bin: &str, chunk: &str, legacy: bool) -> Vec<u8> {
+    let mut cmd = Command::new(bin);
+    cmd.args([
+        "explore",
+        "--workload",
+        "examples/tiny_mobilenet.json,mobilenetv1",
+        "--space",
+        "tiny",
+        "--train",
+        "48",
+        "--backend",
+        "native",
+        "--chunk",
+        chunk,
+    ]);
+    if legacy {
+        cmd.env("QAPPA_LEGACY_EVAL", "1");
+    }
+    let out = cmd.output().expect("run qappa explore");
+    assert!(out.status.success(), "explore (chunk={chunk}) failed: {out:?}");
+    out.stdout
+}
+
+#[test]
+fn explore_stdout_is_byte_identical_across_chunk_sizes_and_eval_paths() {
+    let Some(bin) = qappa_bin() else { return };
+    // The stdout report is a function of (workloads, space, seed) only:
+    // chunk size and the SoA-vs-legacy evaluation path are performance
+    // knobs, and wall-time/chunk diagnostics live on stderr.  Same seed
+    // must mean byte-identical stdout.
+    let base = explore_stdout(bin, "7", false);
+    let chunked = explore_stdout(bin, "256", false);
+    assert_eq!(
+        base, chunked,
+        "explore stdout diverged between --chunk 7 and --chunk 256"
+    );
+    let legacy = explore_stdout(bin, "7", true);
+    assert_eq!(
+        base, legacy,
+        "explore stdout diverged between the SoA and legacy evaluation paths"
+    );
+}
+
+#[test]
+fn optimize_stdout_is_byte_identical_with_legacy_eval() {
+    let Some(bin) = qappa_bin() else { return };
+    let run = |legacy: bool| -> Vec<u8> {
+        let mut cmd = Command::new(bin);
+        cmd.args([
+            "optimize",
+            "--workload",
+            "examples/tiny_mobilenet.json",
+            "--space",
+            "tiny",
+            "--train",
+            "48",
+            "--budget",
+            "60",
+            "--pop",
+            "16",
+            "--backend",
+            "native",
+            "--precision",
+            "int16,a4w4p8-int",
+        ]);
+        if legacy {
+            cmd.env("QAPPA_LEGACY_EVAL", "1");
+        }
+        let out = cmd.output().expect("run qappa optimize");
+        assert!(out.status.success(), "optimize (legacy={legacy}) failed: {out:?}");
+        out.stdout
+    };
+    // The memoized fast path is pinned bit-exact against the per-point
+    // oracle at the engine layer (opt::engine tests, tests/integration_soa);
+    // this pins the same guarantee end-to-end at the process boundary.
+    assert_eq!(
+        run(false),
+        run(true),
+        "optimize stdout diverged between the SoA and legacy evaluation paths"
+    );
+}
+
 #[test]
 fn optimize_cli_renders_the_session_frontier_byte_for_byte() {
     let Some(bin) = qappa_bin() else { return };

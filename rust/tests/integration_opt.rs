@@ -69,7 +69,7 @@ fn guided(
         objectives: [Objective::PerfPerArea, Objective::Energy],
         constraints: Constraints::default(),
     };
-    let oopts = OptOptions { strategy, budget, pop: 50, seed };
+    let oopts = OptOptions { strategy, budget, pop: 50, seed, ..Default::default() };
     run_optimize(backend, model, &problem, &oopts, opts.workers).unwrap()
 }
 

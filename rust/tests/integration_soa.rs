@@ -1,0 +1,223 @@
+//! Equivalence suite: the SoA fast path versus the per-point oracle.
+//!
+//! The evaluation hot path was restructured (structure-of-arrays batch
+//! prediction, memoized synthesis, sweep-wide layer-cost memo) with one
+//! invariant: **bit-identical results**.  The legacy per-point path is kept
+//! precisely so these tests can compare against it — via the programmatic
+//! `SweepEngine::legacy` / `OptOptions::legacy_eval` switches (the
+//! `QAPPA_LEGACY_EVAL` env serves the same role at the process boundary,
+//! pinned in `tests/integration_cli.rs`).
+//!
+//! Coverage, per the refactor's acceptance list:
+//! * batch predict: SoA recipe-grouped vs the legacy flat slab, on
+//!   mixed-recipe config lists (all presets + random `QuantSpec`s);
+//! * the sweep engine across chunk sizes {1, 7, 256, 4096}, over a
+//!   precision-extended grid and mixed per-layer precision workloads;
+//! * the guided optimizer under every strategy's default entry point.
+
+use qappa::config::{PeType, QuantSpec, ALL_PE_TYPES, QUANT_NUM_FEATURES};
+use qappa::coordinator::sweep::{
+    predict_configs_legacy, predict_configs_soa, NamedWorkload, SweepEngine, TypeSweep,
+};
+use qappa::coordinator::{DesignSpace, DseOptions, ModelStore};
+use qappa::dataflow::Layer;
+use qappa::model::native::NativeBackend;
+use qappa::model::CvConfig;
+use qappa::opt::{
+    run_optimize, Constraints, Objective, OptOptions, OptProblem, SearchSpace, StrategyKind,
+};
+use qappa::testkit::{gen_config, gen_quant_spec};
+use qappa::util::prng::Rng;
+
+fn opts_with(chunk: usize) -> DseOptions {
+    DseOptions {
+        space: DesignSpace::tiny(),
+        train_per_type: 64,
+        cv: CvConfig { k: 3, degrees: vec![1, 2], lambdas: vec![1e-3, 1e-2], seed: 1 },
+        seed: 7,
+        workers: 4,
+        sigma: 0.02,
+        chunk,
+        topk: 8,
+    }
+}
+
+/// A small net with mixed per-layer precision: one full-precision conv, a
+/// repeat of its shape pinned to int4/8 (exercising the mixed-precision
+/// override branch of the prepared evaluator), and a depthwise layer.
+fn mixed_net() -> Vec<Layer> {
+    vec![
+        Layer::conv("c0", 8, 16, 16, 16, 3, 1, 1),
+        Layer::conv("c1", 8, 16, 16, 16, 3, 1, 1).with_precision(QuantSpec::int(4, 8)),
+        Layer::dw("dw", 16, 16, 3, 1, 1),
+    ]
+}
+
+#[test]
+fn soa_predict_is_bit_identical_to_the_legacy_slab_on_mixed_recipes() {
+    let backend = NativeBackend::new(QUANT_NUM_FEATURES);
+    let opts = opts_with(64);
+    let store = ModelStore::new();
+    let palette = ALL_PE_TYPES.to_vec();
+    let model = store.get_or_train_quant(&backend, &opts, &palette).unwrap();
+
+    // Interleave preset-recipe configs with arbitrary-precision ones so the
+    // SoA grouping actually has to gather and scatter across recipes.
+    let mut rng = Rng::new(33);
+    let mut cfgs = Vec::new();
+    for i in 0..96usize {
+        let mut c = gen_config(&mut rng);
+        if i % 3 == 0 {
+            c.pe_type = PeType::from_spec(gen_quant_spec(&mut rng));
+        }
+        cfgs.push(c);
+    }
+
+    let soa = predict_configs_soa(&backend, &model, &cfgs).unwrap();
+    let legacy = predict_configs_legacy(&backend, &model, &cfgs).unwrap();
+    assert_eq!(soa.len(), legacy.len());
+    for (i, (a, b)) in soa.iter().zip(&legacy).enumerate() {
+        assert_eq!(a.power_mw.to_bits(), b.power_mw.to_bits(), "power_mw row {i}");
+        assert_eq!(a.fmax_mhz.to_bits(), b.fmax_mhz.to_bits(), "fmax_mhz row {i}");
+        assert_eq!(a.area_mm2.to_bits(), b.area_mm2.to_bits(), "area_mm2 row {i}");
+    }
+}
+
+/// Canonical bit-level rendering of a sweep result, used both to compare
+/// fast-vs-oracle and to pin chunk-size invariance.
+fn render(sweeps: &[TypeSweep]) -> String {
+    let mut s = String::new();
+    for ts in sweeps {
+        s.push_str(&format!("== {} ==\n", ts.workload));
+        for (i, p) in ts.points.as_ref().expect("retain_all").iter().enumerate() {
+            s.push_str(&format!(
+                "{i} {} {:016x} {:016x} {:016x} {:016x} {:016x} {:016x} {:016x}\n",
+                p.cfg.key(),
+                p.ppa.power_mw.to_bits(),
+                p.ppa.fmax_mhz.to_bits(),
+                p.ppa.area_mm2.to_bits(),
+                p.throughput.to_bits(),
+                p.perf_per_area.to_bits(),
+                p.energy_mj.to_bits(),
+                p.utilization.to_bits(),
+            ));
+        }
+        s.push_str(&format!("frontier {:?}\n", ts.frontier_indices()));
+        for p in ts.top_perf_per_area.iter().chain(&ts.top_energy) {
+            s.push_str(&format!("top {}\n", p.cfg.key()));
+        }
+    }
+    s
+}
+
+#[test]
+fn sweep_fast_path_matches_the_per_point_oracle_across_chunk_sizes() {
+    let backend = NativeBackend::new(QUANT_NUM_FEATURES);
+    let palette = ALL_PE_TYPES.to_vec();
+    let store = ModelStore::new();
+    let model = store.get_or_train_quant(&backend, &opts_with(64), &palette).unwrap();
+
+    // Precision-extended grid: the four presets plus two random (but
+    // seed-fixed) arbitrary-precision recipes.
+    let mut rng = Rng::new(7);
+    let mut quants = palette.clone();
+    quants.push(PeType::from_spec(gen_quant_spec(&mut rng)));
+    quants.push(PeType::from_spec(gen_quant_spec(&mut rng)));
+
+    // Two workloads sharing a layer shape, so the sweep-wide layer-cost
+    // memo crosses workload boundaries; the first mixes per-layer precision.
+    let wls = vec![
+        NamedWorkload::new("mixed", mixed_net()),
+        NamedWorkload::new("plain", vec![Layer::conv("c", 8, 16, 16, 16, 3, 1, 1)]),
+    ];
+
+    let mut canonical: Option<String> = None;
+    for chunk in [1usize, 7, 256, 4096] {
+        let mut opts = opts_with(chunk);
+        opts.space = DesignSpace::tiny().with_quants(quants.clone());
+
+        let fast_engine = SweepEngine::new(&backend, &opts).retain_all(true);
+        let fast = fast_engine.sweep_type(&model, PeType::Int16, &wls).unwrap();
+        let memo = fast_engine.memo_stats();
+        let slow_engine =
+            SweepEngine::new(&backend, &opts).retain_all(true).legacy(true);
+        let slow = slow_engine.sweep_type(&model, PeType::Int16, &wls).unwrap();
+
+        assert_eq!(
+            render(&fast),
+            render(&slow),
+            "fast path diverged from the per-point oracle at chunk={chunk}"
+        );
+        // The fast path actually ran memoized (and the oracle did not).
+        assert!(memo.synth_hits + memo.synth_misses > 0, "synth memo never consulted");
+        assert!(memo.cost_hits > 0, "layer-cost memo never hit across workloads");
+        assert_eq!(slow_engine.memo_stats(), Default::default());
+
+        // Chunking is a performance knob only: every chunk size must
+        // produce the same bits.
+        match &canonical {
+            None => canonical = Some(render(&fast)),
+            Some(c) => assert_eq!(c, &render(&fast), "results changed at chunk={chunk}"),
+        }
+    }
+}
+
+#[test]
+fn optimizer_fast_path_matches_the_per_point_oracle_for_every_strategy() {
+    let backend = NativeBackend::new(QUANT_NUM_FEATURES);
+    let opts = opts_with(64);
+    let store = ModelStore::new();
+    let palette = ALL_PE_TYPES.to_vec();
+    let model = store.get_or_train_quant(&backend, &opts, &palette).unwrap();
+    let layers = mixed_net();
+
+    for kind in [StrategyKind::Nsga2, StrategyKind::Random, StrategyKind::HillClimb] {
+        let run = |legacy_eval: bool| {
+            let search =
+                SearchSpace::new(&opts.space, palette.clone(), &layers, true).unwrap();
+            let problem = OptProblem {
+                search,
+                objectives: [Objective::PerfPerArea, Objective::Energy],
+                constraints: Constraints::default(),
+            };
+            let oopts = OptOptions {
+                strategy: kind,
+                budget: 60,
+                pop: 16,
+                seed: 5,
+                legacy_eval,
+                ..Default::default()
+            };
+            run_optimize(&backend, &model, &problem, &oopts, opts.workers).unwrap()
+        };
+        let fast = run(false);
+        let slow = run(true);
+        assert_eq!(fast.evaluated, slow.evaluated, "{kind:?}");
+        assert_eq!(
+            fast.hypervolume.to_bits(),
+            slow.hypervolume.to_bits(),
+            "{kind:?} hypervolume diverged"
+        );
+        let sig = |r: &qappa::opt::OptResult| -> Vec<String> {
+            r.frontier
+                .iter()
+                .map(|f| {
+                    format!(
+                        "{}|{:x}|{:x}|{:?}|{}",
+                        f.point.cfg.key(),
+                        f.objs[0].to_bits(),
+                        f.objs[1].to_bits(),
+                        f.genome.hw,
+                        f.precision.join(",")
+                    )
+                })
+                .collect()
+        };
+        assert_eq!(sig(&fast), sig(&slow), "{kind:?} frontier diverged");
+        assert!(
+            fast.memo.synth_hits + fast.memo.synth_misses > 0,
+            "{kind:?}: fast path never consulted the synth memo"
+        );
+        assert_eq!(slow.memo, Default::default(), "{kind:?}: oracle must not memoize");
+    }
+}

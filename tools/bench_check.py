@@ -1,0 +1,160 @@
+#!/usr/bin/env python3
+"""Perf-regression gate over the machine-readable bench artifacts.
+
+`tools/bench.sh` emits BENCH_*.json documents ({"results": [...],
+"metrics": {...}}, see rust/src/util/bench.rs).  This script compares the
+`throughput_per_s` of every named bench result against the checked-in
+baseline (tools/bench_baseline.json) and exits nonzero when any bench
+regresses past the tolerance band.
+
+    bench_check.py --check [opts] BENCH_sweep.json BENCH_opt.json
+    bench_check.py --bless [opts] BENCH_sweep.json BENCH_opt.json
+
+`--check` semantics:
+  * fresh < (1 - tolerance) * baseline   -> REGRESSION (exit 1)
+  * fresh > (1 + tolerance) * baseline   -> IMPROVED (pass; re-bless to
+    ratchet the baseline forward)
+  * bench missing from the baseline      -> NEW (pass with a notice; the
+    bootstrap baseline is empty until someone blesses on stable hardware)
+  * baseline entry missing from fresh    -> GONE (pass with a notice)
+
+A human-readable comparison table is written to the report path (default
+bench_check_report.txt) for CI to upload next to the raw JSON.
+
+`--bless` rewrites the baseline from the given fresh artifacts.  Bless on
+quiet, representative hardware only — the tolerance band absorbs runner
+noise, not a laptop-vs-CI hardware gap.
+
+Stdlib only; no third-party dependencies.
+"""
+
+import argparse
+import json
+import os
+import sys
+
+DEFAULT_BASELINE = os.path.join(os.path.dirname(__file__), "bench_baseline.json")
+DEFAULT_TOLERANCE = 0.30
+
+
+def load_results(paths):
+    """name -> throughput_per_s, merged across bench artifacts."""
+    out = {}
+    for path in paths:
+        with open(path) as f:
+            doc = json.load(f)
+        for r in doc.get("results", []):
+            name = r.get("name")
+            thrpt = r.get("throughput_per_s")
+            if name is None or thrpt is None:
+                continue  # timing-only benches carry no throughput to gate
+            out[name] = {"throughput_per_s": float(thrpt), "source": os.path.basename(path)}
+    return out
+
+
+def load_baseline(path):
+    if not os.path.exists(path):
+        return {"tolerance": DEFAULT_TOLERANCE, "entries": {}}
+    with open(path) as f:
+        doc = json.load(f)
+    doc.setdefault("tolerance", DEFAULT_TOLERANCE)
+    doc.setdefault("entries", {})
+    return doc
+
+
+def bless(args):
+    fresh = load_results(args.files)
+    doc = {
+        "comment": "Blessed bench throughputs (tools/bench.sh --bless). "
+        "The --check gate fails when a bench drops more than `tolerance` "
+        "below its entry here.",
+        "tolerance": args.tolerance,
+        "entries": dict(sorted(fresh.items())),
+    }
+    with open(args.baseline, "w") as f:
+        json.dump(doc, f, indent=2)
+        f.write("\n")
+    print(f"bench_check: blessed {len(fresh)} benches -> {args.baseline}")
+    return 0
+
+
+def check(args):
+    fresh = load_results(args.files)
+    baseline = load_baseline(args.baseline)
+    tol = args.tolerance if args.tolerance is not None else baseline["tolerance"]
+    entries = baseline["entries"]
+
+    rows = []
+    failures = 0
+    for name in sorted(set(fresh) | set(entries)):
+        if name not in entries:
+            rows.append((name, None, fresh[name]["throughput_per_s"], "NEW"))
+            continue
+        if name not in fresh:
+            rows.append((name, entries[name]["throughput_per_s"], None, "GONE"))
+            continue
+        base = entries[name]["throughput_per_s"]
+        now = fresh[name]["throughput_per_s"]
+        ratio = now / base if base > 0 else float("inf")
+        if ratio < 1.0 - tol:
+            verdict = "REGRESSION"
+            failures += 1
+        elif ratio > 1.0 + tol:
+            verdict = "IMPROVED"
+        else:
+            verdict = "ok"
+        rows.append((name, base, now, verdict))
+
+    lines = [f"bench_check: tolerance ±{tol:.0%}, baseline {args.baseline}"]
+    lines.append(f"{'bench':<44} {'baseline':>12} {'fresh':>12} {'ratio':>7}  verdict")
+    for name, base, now, verdict in rows:
+        b = f"{base:.1f}" if base is not None else "-"
+        n = f"{now:.1f}" if now is not None else "-"
+        r = f"{now / base:.2f}x" if base and now else "-"
+        lines.append(f"{name:<44} {b:>12} {n:>12} {r:>7}  {verdict}")
+    if not rows:
+        lines.append("(no throughput-bearing bench results found)")
+    if not entries:
+        lines.append(
+            "baseline is empty (bootstrap): run `tools/bench.sh --bless` on "
+            "representative hardware to arm the gate"
+        )
+    report = "\n".join(lines) + "\n"
+    sys.stdout.write(report)
+    if args.report:
+        with open(args.report, "w") as f:
+            f.write(report)
+
+    if failures:
+        print(
+            f"bench_check: FAIL — {failures} bench(es) regressed past "
+            f"{tol:.0%}; if intentional, re-bless with tools/bench.sh --bless",
+            file=sys.stderr,
+        )
+        return 1
+    print("bench_check: OK")
+    return 0
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    mode = ap.add_mutually_exclusive_group(required=True)
+    mode.add_argument("--check", action="store_true", help="gate fresh results against the baseline")
+    mode.add_argument("--bless", action="store_true", help="rewrite the baseline from fresh results")
+    ap.add_argument("--baseline", default=DEFAULT_BASELINE)
+    ap.add_argument(
+        "--tolerance",
+        type=float,
+        default=None,
+        help=f"allowed fractional drop (default: baseline file's, else {DEFAULT_TOLERANCE})",
+    )
+    ap.add_argument("--report", default="bench_check_report.txt", help="comparison report path ('' to skip)")
+    ap.add_argument("files", nargs="+", help="BENCH_*.json artifacts to read")
+    args = ap.parse_args()
+    if args.bless and args.tolerance is None:
+        args.tolerance = DEFAULT_TOLERANCE
+    sys.exit(bless(args) if args.bless else check(args))
+
+
+if __name__ == "__main__":
+    main()

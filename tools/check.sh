@@ -15,6 +15,11 @@ run cargo test -q
 # the checked-in expectations (tests/golden_presets.rs). Run explicitly so
 # a drift is called out by name even when the full suite is skipped.
 run cargo test -q golden
+# SoA-vs-oracle equivalence gate: the memoized fast path must stay
+# bit-identical to the legacy per-point evaluator (tests/integration_soa.rs,
+# plus the cross-chunk/legacy-env determinism pins in integration_cli.rs).
+# Run explicitly so a divergence is called out by name.
+run cargo test -q --test integration_soa
 # clippy/fmt/doc are advisory in environments without the components installed
 if cargo clippy --version >/dev/null 2>&1; then
     run cargo clippy -q -- -D warnings
