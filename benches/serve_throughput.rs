@@ -1,0 +1,141 @@
+//! Bench: concurrent TCP serve throughput vs sequential stdio sessions.
+//!
+//! The acceptance bar for the network serve path: `qappa loadgen` against
+//! one warm TCP server (4 connections x 25 lockstep requests, models
+//! trained once per process) must sustain at least 4x the throughput of 4
+//! sequential cold stdio sessions answering the same request mix — the
+//! multiplexing + shared-store win over per-client processes.
+//!
+//! Emits `BENCH_serve.json` through the `BenchReport` sink when
+//! `QAPPA_BENCH_JSON` is set; `tools/bench_check.py` gates
+//! `serve/p99_ms` (lower is better) and the loadgen throughput
+//! (higher is better) against `tools/bench_baseline.json`.
+
+use std::sync::Arc;
+
+use qappa::api::{
+    run_loadgen, serve, BackendChoice, ExploreRequest, LoadgenOptions, Qappa, RequestBody,
+    RequestMix, ServeOptions, ServeRequest, TcpServer, TransportOptions,
+};
+use qappa::coordinator::{DesignSpace, DseOptions};
+use qappa::model::CvConfig;
+use qappa::util::bench::{Bench, BenchReport};
+
+const CONNECTIONS: usize = 4;
+const REQUESTS: usize = 25;
+
+fn session() -> Qappa {
+    Qappa::builder()
+        .backend(BackendChoice::Native)
+        .options(DseOptions {
+            space: DesignSpace::tiny(),
+            train_per_type: 64,
+            cv: CvConfig { k: 3, degrees: vec![1, 2], lambdas: vec![1e-3, 1e-2], seed: 1 },
+            seed: 7,
+            workers: qappa::util::pool::default_workers(),
+            sigma: 0.02,
+            chunk: 32,
+            topk: 8,
+        })
+        .build()
+}
+
+/// The stdio baseline: 4 sequential `qappa serve` sessions, each a fresh
+/// process in miniature (new session, models retrained), answering the
+/// same explore mix the loadgen connections send.
+fn stdio_sequential_sessions() -> f64 {
+    let mut batch = String::new();
+    for k in 0..REQUESTS {
+        let req = ServeRequest {
+            id: Some(k as u64),
+            body: RequestBody::Explore(ExploreRequest {
+                workloads: vec!["vgg16".into()],
+                precision: None,
+            }),
+        };
+        batch.push_str(&req.to_json().to_string());
+        batch.push('\n');
+    }
+    let t0 = std::time::Instant::now();
+    for _ in 0..CONNECTIONS {
+        let cold = session();
+        let stats = serve(
+            &cold,
+            batch.as_bytes(),
+            std::io::sink(),
+            &ServeOptions { concurrency: 1 },
+        )
+        .expect("stdio serve");
+        assert_eq!(stats.errors, 0);
+    }
+    let dt = t0.elapsed().as_secs_f64();
+    (CONNECTIONS * REQUESTS) as f64 / dt
+}
+
+fn main() {
+    let mut report = BenchReport::new();
+    let units = (CONNECTIONS * REQUESTS) as f64;
+
+    // ---------------------------------------------------------------- TCP
+    let session = Arc::new(session());
+    let mut server = TcpServer::bind(session.clone(), "127.0.0.1:0", TransportOptions::default())
+        .expect("bind");
+    let addr = server.local_addr().to_string();
+    println!(
+        "=== serve throughput: {CONNECTIONS} connections x {REQUESTS} requests, \
+         tiny space, backend=native ==="
+    );
+
+    let opts = LoadgenOptions {
+        connections: CONNECTIONS,
+        requests: REQUESTS,
+        mix: RequestMix::Explore,
+        ..Default::default()
+    };
+    let mut last = None;
+    let r = Bench::new(&format!("serve/tcp_loadgen({CONNECTIONS}x{REQUESTS})"))
+        .warmup(1)
+        .samples(5)
+        .run_with_units(units, "req", || {
+            let rep = run_loadgen(&addr, &opts).expect("loadgen");
+            assert_eq!(rep.errors, 0, "loadgen must run error-free");
+            last = Some(rep);
+        });
+    r.print();
+    report.push(&r);
+    let rep = last.expect("loadgen report");
+    println!(
+        "loadgen: {:.1} req/s, p50 {:.2} ms, p99 {:.2} ms (max {:.2} ms)",
+        rep.throughput_per_s, rep.p50_ms, rep.p99_ms, rep.max_ms
+    );
+    report.metric("serve/p50_ms", rep.p50_ms);
+    report.metric("serve/p99_ms", rep.p99_ms);
+    report.metric("serve/loadgen_throughput_per_s", rep.throughput_per_s);
+
+    // Trained exactly once per process, no matter how many connections,
+    // warmups and samples hit the server.
+    assert_eq!(session.store().misses(), 4, "models must train once per process");
+
+    server.shutdown();
+
+    // -------------------------------------------------------------- stdio
+    // The baseline is intentionally *one* measurement, not a Bench loop: 4
+    // cold sessions retrain 16 models as a real 4-process client would.
+    let stdio_per_s = stdio_sequential_sessions();
+    println!("stdio baseline: {stdio_per_s:.1} req/s (4 sequential cold sessions)");
+    report.metric("serve/stdio_cold_4_sessions_per_s", stdio_per_s);
+
+    let speedup = rep.throughput_per_s / stdio_per_s;
+    println!("speedup vs stdio: {speedup:.1}x");
+    report.metric("serve/speedup_vs_stdio", speedup);
+    assert!(
+        speedup >= 4.0,
+        "warm TCP serve must sustain >= 4x the sequential stdio baseline \
+         (got {speedup:.2}x: {:.1} vs {stdio_per_s:.1} req/s)",
+        rep.throughput_per_s
+    );
+
+    if let Some(path) = report.write_if_requested().expect("write bench json") {
+        println!("wrote {path}");
+    }
+}

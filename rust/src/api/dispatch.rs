@@ -1,0 +1,353 @@
+//! Admission control, request coalescing and cancellation — the dispatch
+//! layer between a transport (TCP connections, `api::transport`) and the
+//! shared [`Qappa`] session.
+//!
+//! Three concerns live here, none of which the stdio loop needs:
+//!
+//! * **Bounded admission.**  `max_inflight` caps the requests being worked
+//!   at once across every connection; past the cap a request is *shed*
+//!   with a structured `protocol` error instead of queueing without bound
+//!   (the client sees the error immediately and may retry, instead of a
+//!   timeout it can't attribute).
+//! * **Coalescing.**  Identical in-flight read-only requests (`explore`,
+//!   `fit`, `analyze` with byte-identical params) are collapsed into one
+//!   evaluation: the first caller becomes the *leader* and runs the query,
+//!   followers block on the flight and share the leader's answer.  Sound
+//!   because these ops are deterministic functions of (params, session
+//!   recipe) — the repo's bit-for-bit reproducibility guarantee — and it
+//!   amortizes one batched `predict_configs_soa` pass across clients.
+//! * **Cancellation.**  Each connection hands its [`CancelToken`] down so
+//!   a client that vanishes mid-`optimize` stops burning evaluation budget
+//!   (the engine exits at the next batch boundary).
+//!
+//! Shed diagnostics go to stderr (`[serve]` prefix); the wire carries only
+//! JSON responses — the stdout/wire-purity convention of `docs/SERVE.md`.
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+
+use crate::api::error::QappaError;
+use crate::api::serve;
+use crate::api::session::Qappa;
+use crate::api::types::{ErrorBody, RequestBody, ResponseBody, ServeRequest, ServeResponse};
+use crate::opt::CancelToken;
+use crate::util::json::Json;
+
+/// Knobs of the dispatch layer.
+#[derive(Debug, Clone, Copy)]
+pub struct DispatchOptions {
+    /// Requests being worked at once, across all connections; past this
+    /// the dispatcher sheds with a `protocol` error.
+    pub max_inflight: usize,
+    /// Collapse identical in-flight read-only requests into one pass.
+    pub coalesce: bool,
+}
+
+impl Default for DispatchOptions {
+    fn default() -> DispatchOptions {
+        DispatchOptions { max_inflight: 64, coalesce: true }
+    }
+}
+
+/// Counter snapshot of one dispatcher (see [`Dispatcher::stats`]).
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct DispatchStats {
+    pub requests: usize,
+    pub ok: usize,
+    pub errors: usize,
+    /// Requests refused at the admission gate.
+    pub shed: usize,
+    /// Followers answered from a leader's in-flight evaluation.
+    pub coalesced: usize,
+    /// Optimize runs stopped by a fired [`CancelToken`].
+    pub cancelled: usize,
+}
+
+/// One in-flight coalescable evaluation: followers wait on `cv` until the
+/// leader publishes into `done`.
+struct Flight {
+    done: Mutex<Option<Result<ResponseBody, ErrorBody>>>,
+    cv: Condvar,
+}
+
+#[derive(Default)]
+struct Counters {
+    requests: AtomicUsize,
+    ok: AtomicUsize,
+    errors: AtomicUsize,
+    shed: AtomicUsize,
+    coalesced: AtomicUsize,
+    cancelled: AtomicUsize,
+}
+
+/// The shared dispatch layer: every connection calls
+/// [`Dispatcher::handle_line`] with its own [`CancelToken`].
+pub struct Dispatcher {
+    session: Arc<Qappa>,
+    opts: DispatchOptions,
+    inflight: AtomicUsize,
+    flights: Mutex<HashMap<String, Arc<Flight>>>,
+    counters: Counters,
+}
+
+/// Decrements the in-flight gauge on every exit path.
+struct Admitted<'a>(&'a AtomicUsize);
+
+impl Drop for Admitted<'_> {
+    fn drop(&mut self) {
+        self.0.fetch_sub(1, Ordering::SeqCst);
+    }
+}
+
+impl Dispatcher {
+    pub fn new(session: Arc<Qappa>, opts: DispatchOptions) -> Dispatcher {
+        Dispatcher {
+            session,
+            opts,
+            inflight: AtomicUsize::new(0),
+            flights: Mutex::new(HashMap::new()),
+            counters: Counters::default(),
+        }
+    }
+
+    pub fn options(&self) -> DispatchOptions {
+        self.opts
+    }
+
+    pub fn session(&self) -> &Qappa {
+        &self.session
+    }
+
+    pub fn stats(&self) -> DispatchStats {
+        DispatchStats {
+            requests: self.counters.requests.load(Ordering::SeqCst),
+            ok: self.counters.ok.load(Ordering::SeqCst),
+            errors: self.counters.errors.load(Ordering::SeqCst),
+            shed: self.counters.shed.load(Ordering::SeqCst),
+            coalesced: self.counters.coalesced.load(Ordering::SeqCst),
+            cancelled: self.counters.cancelled.load(Ordering::SeqCst),
+        }
+    }
+
+    /// Count a request a transport rejected before dispatch (oversized
+    /// frame): it still shows up in `requests`/`errors` totals.
+    pub(crate) fn note_rejected(&self) {
+        self.counters.requests.fetch_add(1, Ordering::SeqCst);
+        self.counters.errors.fetch_add(1, Ordering::SeqCst);
+    }
+
+    /// Parse and answer one request line against the admission gate, the
+    /// coalescing map and the caller's cancel token.  Mirrors
+    /// [`serve::handle_line`]'s never-panic contract: every input answers
+    /// with a response carrying the caller's id when one was parseable.
+    pub fn handle_line(&self, line: &str, cancel: &CancelToken) -> ServeResponse {
+        self.counters.requests.fetch_add(1, Ordering::SeqCst);
+        let v = match Json::parse(line) {
+            Ok(v) => v,
+            Err(e) => {
+                self.counters.errors.fetch_add(1, Ordering::SeqCst);
+                let e = QappaError::from(e);
+                return ServeResponse { id: None, result: Err(ErrorBody::from(&e)) };
+            }
+        };
+        let id = v.get("id").as_usize().map(|x| x as u64);
+        let req = match ServeRequest::from_json(&v) {
+            Ok(req) => req,
+            Err(e) => {
+                self.counters.errors.fetch_add(1, Ordering::SeqCst);
+                return ServeResponse { id, result: Err(ErrorBody::from(&e)) };
+            }
+        };
+
+        // Admission gate: admit-then-check keeps the gauge race-free
+        // without a lock on the hot path.
+        let prev = self.inflight.fetch_add(1, Ordering::SeqCst);
+        let guard = Admitted(&self.inflight);
+        if prev >= self.opts.max_inflight {
+            drop(guard);
+            self.counters.shed.fetch_add(1, Ordering::SeqCst);
+            self.counters.errors.fetch_add(1, Ordering::SeqCst);
+            eprintln!(
+                "[serve] shed {} request: {} in flight (max {})",
+                req.body.op(),
+                prev,
+                self.opts.max_inflight
+            );
+            let e = QappaError::Protocol(format!(
+                "admission: server at capacity ({} requests in flight, max {}); retry later",
+                prev, self.opts.max_inflight
+            ));
+            return ServeResponse { id: req.id, result: Err(ErrorBody::from(&e)) };
+        }
+
+        let result = self.handle_body(&req.body, cancel);
+        if result.is_ok() {
+            self.counters.ok.fetch_add(1, Ordering::SeqCst);
+        } else {
+            self.counters.errors.fetch_add(1, Ordering::SeqCst);
+        }
+        drop(guard);
+        ServeResponse { id: req.id, result }
+    }
+
+    fn handle_body(
+        &self,
+        body: &RequestBody,
+        cancel: &CancelToken,
+    ) -> Result<ResponseBody, ErrorBody> {
+        match body {
+            RequestBody::Optimize(r) => {
+                match self.session.optimize_cancellable(r, cancel) {
+                    Ok(resp) => Ok(ResponseBody::Optimize(resp)),
+                    Err(e) => {
+                        if cancel.is_cancelled() {
+                            self.counters.cancelled.fetch_add(1, Ordering::SeqCst);
+                        }
+                        Err(ErrorBody::from(&e))
+                    }
+                }
+            }
+            RequestBody::Explore(_) | RequestBody::Fit(_) | RequestBody::Analyze(_)
+                if self.opts.coalesce =>
+            {
+                self.coalesced_dispatch(body)
+            }
+            other => serve::dispatch(&self.session, other).map_err(|e| ErrorBody::from(&e)),
+        }
+    }
+
+    /// Single-flight: one leader evaluates per distinct (op, params) key;
+    /// followers arriving while the flight is open share its result.
+    fn coalesced_dispatch(&self, body: &RequestBody) -> Result<ResponseBody, ErrorBody> {
+        let key = format!("{}|{}", body.op(), body.params_to_json());
+        let (flight, leader) = {
+            let mut flights = self.flights.lock().unwrap_or_else(|p| p.into_inner());
+            match flights.get(&key) {
+                Some(f) => (f.clone(), false),
+                None => {
+                    let f = Arc::new(Flight { done: Mutex::new(None), cv: Condvar::new() });
+                    flights.insert(key.clone(), f.clone());
+                    (f, true)
+                }
+            }
+        };
+        if leader {
+            let result =
+                serve::dispatch(&self.session, body).map_err(|e| ErrorBody::from(&e));
+            // Unregister before publishing: a request arriving after this
+            // point starts a fresh flight instead of reading a settled one.
+            self.flights.lock().unwrap_or_else(|p| p.into_inner()).remove(&key);
+            let mut done = flight.done.lock().unwrap_or_else(|p| p.into_inner());
+            *done = Some(result.clone());
+            flight.cv.notify_all();
+            result
+        } else {
+            self.counters.coalesced.fetch_add(1, Ordering::SeqCst);
+            let mut done = flight.done.lock().unwrap_or_else(|p| p.into_inner());
+            while done.is_none() {
+                done = flight.cv.wait(done).unwrap_or_else(|p| p.into_inner());
+            }
+            done.clone().expect("flight published")
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::api::session::BackendChoice;
+    use crate::api::types::WorkloadsResponse;
+
+    fn dispatcher(opts: DispatchOptions) -> Dispatcher {
+        let s = Arc::new(Qappa::builder().backend(BackendChoice::Native).build());
+        Dispatcher::new(s, opts)
+    }
+
+    #[test]
+    fn plain_request_round_trips_and_counts() {
+        let d = dispatcher(DispatchOptions::default());
+        let cancel = CancelToken::new();
+        let resp = d.handle_line("{\"id\":3,\"op\":\"workloads\"}", &cancel);
+        assert_eq!(resp.id, Some(3));
+        assert!(matches!(resp.result, Ok(ResponseBody::Workloads(WorkloadsResponse::List(_)))));
+        let st = d.stats();
+        assert_eq!((st.requests, st.ok, st.errors, st.shed), (1, 1, 0, 0));
+    }
+
+    #[test]
+    fn malformed_lines_answer_protocol_errors() {
+        let d = dispatcher(DispatchOptions::default());
+        let cancel = CancelToken::new();
+        let resp = d.handle_line("not json", &cancel);
+        assert_eq!(resp.id, None);
+        assert_eq!(resp.result.unwrap_err().kind, "protocol");
+        let resp = d.handle_line("{\"id\":9,\"op\":\"nope\"}", &cancel);
+        assert_eq!(resp.id, Some(9), "id echoed even for an unknown op");
+        assert_eq!(d.stats().errors, 2);
+    }
+
+    #[test]
+    fn zero_capacity_sheds_everything() {
+        let d = dispatcher(DispatchOptions { max_inflight: 0, coalesce: true });
+        let cancel = CancelToken::new();
+        let resp = d.handle_line("{\"id\":1,\"op\":\"session\"}", &cancel);
+        assert_eq!(resp.id, Some(1), "shed responses still correlate by id");
+        let e = resp.result.unwrap_err();
+        assert_eq!(e.kind, "protocol");
+        assert!(e.message.contains("at capacity"), "{}", e.message);
+        let st = d.stats();
+        assert_eq!((st.shed, st.errors, st.ok), (1, 1, 0));
+        assert_eq!(d.inflight.load(Ordering::SeqCst), 0, "shed must release the gauge");
+    }
+
+    #[test]
+    fn followers_share_a_leaders_flight() {
+        let d = Arc::new(dispatcher(DispatchOptions::default()));
+        let line = "{\"id\":5,\"op\":\"analyze\",\"params\":{\"workload\":\"mobilenetv2\",\
+                    \"config\":{\"pe_type\":\"int16\"}}}";
+        // Pre-register the flight under the same key the dispatcher would
+        // compute, so the thread below is deterministically a follower.
+        let req = ServeRequest::parse_line(line).unwrap();
+        let key = format!("{}|{}", req.body.op(), req.body.params_to_json());
+        let flight = Arc::new(Flight { done: Mutex::new(None), cv: Condvar::new() });
+        d.flights
+            .lock()
+            .unwrap()
+            .insert(key.clone(), flight.clone());
+
+        let follower = {
+            let d = d.clone();
+            let line = line.to_string();
+            std::thread::spawn(move || d.handle_line(&line, &CancelToken::new()))
+        };
+        // Publish a sentinel error as the "leader's" answer.
+        std::thread::sleep(std::time::Duration::from_millis(20));
+        let sentinel = ErrorBody { kind: "model".into(), message: "sentinel".into() };
+        {
+            let mut done = flight.done.lock().unwrap();
+            *done = Some(Err(sentinel.clone()));
+            flight.cv.notify_all();
+        }
+        let resp = follower.join().unwrap();
+        assert_eq!(resp.id, Some(5));
+        assert_eq!(resp.result.unwrap_err(), sentinel, "follower got the flight's answer");
+        assert_eq!(d.stats().coalesced, 1);
+    }
+
+    #[test]
+    fn coalescing_off_bypasses_the_flight_map() {
+        let d = dispatcher(DispatchOptions { max_inflight: 64, coalesce: false });
+        let cancel = CancelToken::new();
+        // An invalid analyze config answers a typed error straight from the
+        // session — no flight is ever registered.
+        let resp = d.handle_line(
+            "{\"id\":2,\"op\":\"analyze\",\"params\":{\"workload\":\"mobilenetv2\",\
+             \"config\":{\"pe_type\":\"bogus\"}}}",
+            &cancel,
+        );
+        assert!(resp.result.is_err());
+        assert!(d.flights.lock().unwrap().is_empty());
+        assert_eq!(d.stats().coalesced, 0);
+    }
+}

@@ -1,0 +1,358 @@
+//! `qappa loadgen` — the built-in load generator that pins serve
+//! throughput: N connections × M lockstep requests against a TCP server,
+//! reporting latency percentiles and saturation throughput.
+//!
+//! Each connection is one thread speaking the JSON-lines protocol in
+//! request/response lockstep (send, wait for the echo-correlated reply,
+//! repeat), so per-request latency is exact and the concurrency level is
+//! precisely the connection count.  The aggregate report feeds
+//! `BENCH_serve.json` (via `benches/serve_throughput.rs`) and the CI
+//! load-smoke step; thresholds live in `tools/bench_baseline.json`.
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::TcpStream;
+use std::sync::{Arc, Barrier};
+use std::time::{Duration, Instant};
+
+use crate::api::error::QappaError;
+use crate::api::types::{
+    AnalyzeRequest, ExploreRequest, RequestBody, ServeRequest, ServeResponse,
+};
+use crate::config::{AcceleratorConfig, PeType};
+use crate::util::json::{obj, Json};
+use crate::util::stats::percentile;
+
+/// Which request stream each connection sends.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum RequestMix {
+    /// Warm-cache `explore` queries (the serve hot path).
+    Explore,
+    /// Config-only `analyze` queries (no model, no backend).
+    Analyze,
+    /// Rotate explore / analyze / session.
+    Mixed,
+}
+
+impl RequestMix {
+    pub fn parse(s: &str) -> Result<RequestMix, QappaError> {
+        match s.to_ascii_lowercase().as_str() {
+            "explore" => Ok(RequestMix::Explore),
+            "analyze" => Ok(RequestMix::Analyze),
+            "mixed" => Ok(RequestMix::Mixed),
+            other => Err(QappaError::Config(format!(
+                "loadgen: unknown mix '{other}' (expected explore|analyze|mixed)"
+            ))),
+        }
+    }
+
+    pub fn label(self) -> &'static str {
+        match self {
+            RequestMix::Explore => "explore",
+            RequestMix::Analyze => "analyze",
+            RequestMix::Mixed => "mixed",
+        }
+    }
+
+    /// The k-th request body of this mix (every body is deterministic, so
+    /// a server run under loadgen is reproducible).
+    fn body(self, k: usize) -> RequestBody {
+        let explore = || {
+            RequestBody::Explore(ExploreRequest {
+                workloads: vec!["vgg16".into()],
+                precision: None,
+            })
+        };
+        let analyze = || {
+            RequestBody::Analyze(AnalyzeRequest {
+                workload: "mobilenetv2".into(),
+                config: AcceleratorConfig::default_with(PeType::Int16),
+            })
+        };
+        match self {
+            RequestMix::Explore => explore(),
+            RequestMix::Analyze => analyze(),
+            RequestMix::Mixed => match k % 3 {
+                0 => explore(),
+                1 => analyze(),
+                _ => RequestBody::Session,
+            },
+        }
+    }
+}
+
+/// Knobs of one loadgen run.
+#[derive(Debug, Clone, Copy)]
+pub struct LoadgenOptions {
+    pub connections: usize,
+    /// Requests per connection.
+    pub requests: usize,
+    pub mix: RequestMix,
+    /// Issue one untimed `explore` first so training happens outside the
+    /// measured window (off = cold measurement).
+    pub warmup: bool,
+    /// How long to keep retrying the initial connect (the server may
+    /// still be binding).
+    pub connect_timeout_ms: u64,
+}
+
+impl Default for LoadgenOptions {
+    fn default() -> LoadgenOptions {
+        LoadgenOptions {
+            connections: 4,
+            requests: 25,
+            mix: RequestMix::Explore,
+            warmup: true,
+            connect_timeout_ms: 5000,
+        }
+    }
+}
+
+/// Aggregate result of one run (JSON shape: [`LoadgenReport::to_json`]).
+#[derive(Debug, Clone, PartialEq)]
+pub struct LoadgenReport {
+    pub connections: usize,
+    pub requests: usize,
+    pub ok: usize,
+    pub errors: usize,
+    pub elapsed_s: f64,
+    /// Completed requests per wall-clock second across all connections.
+    pub throughput_per_s: f64,
+    pub p50_ms: f64,
+    pub p95_ms: f64,
+    pub p99_ms: f64,
+    pub max_ms: f64,
+}
+
+impl LoadgenReport {
+    pub fn to_json(&self) -> Json {
+        obj(vec![
+            ("connections", Json::Num(self.connections as f64)),
+            ("requests", Json::Num(self.requests as f64)),
+            ("ok", Json::Num(self.ok as f64)),
+            ("errors", Json::Num(self.errors as f64)),
+            ("elapsed_s", Json::Num(self.elapsed_s)),
+            ("throughput_per_s", Json::Num(self.throughput_per_s)),
+            ("p50_ms", Json::Num(self.p50_ms)),
+            ("p95_ms", Json::Num(self.p95_ms)),
+            ("p99_ms", Json::Num(self.p99_ms)),
+            ("max_ms", Json::Num(self.max_ms)),
+        ])
+    }
+}
+
+fn connect_with_retry(addr: &str, timeout: Duration) -> Result<TcpStream, QappaError> {
+    let deadline = Instant::now() + timeout;
+    loop {
+        match TcpStream::connect(addr) {
+            Ok(s) => return Ok(s),
+            Err(e) if Instant::now() >= deadline => {
+                return Err(QappaError::io(format!("connecting to {addr}"), e));
+            }
+            Err(_) => std::thread::sleep(Duration::from_millis(10)),
+        }
+    }
+}
+
+/// One lockstep exchange: send, wait for the reply, verify the id echo.
+/// Returns whether the reply was `ok`.
+fn round_trip(
+    writer: &mut TcpStream,
+    reader: &mut BufReader<TcpStream>,
+    line: &mut String,
+    id: u64,
+    body: RequestBody,
+) -> Result<bool, QappaError> {
+    let req = ServeRequest { id: Some(id), body };
+    writeln!(writer, "{}", req.to_json())
+        .and_then(|_| writer.flush())
+        .map_err(|e| QappaError::io("writing request", e))?;
+    line.clear();
+    let n = reader
+        .read_line(line)
+        .map_err(|e| QappaError::io("reading response", e))?;
+    if n == 0 {
+        return Err(QappaError::Protocol("server closed the connection".into()));
+    }
+    let resp = ServeResponse::from_json(&Json::parse(line)?)?;
+    if resp.id != Some(id) {
+        return Err(QappaError::Protocol(format!(
+            "response id {:?} does not echo request id {id}",
+            resp.id
+        )));
+    }
+    Ok(resp.result.is_ok())
+}
+
+/// One connection's lockstep loop: returns (latencies in ms, ok, errors).
+fn run_connection(
+    addr: &str,
+    conn: usize,
+    opts: &LoadgenOptions,
+    start: &Barrier,
+) -> Result<(Vec<f64>, usize, usize), QappaError> {
+    let mut line = String::new();
+    // Connect and warm up *before* the barrier, but reach the barrier on
+    // every path — a connection that fails setup must not deadlock the
+    // stopwatch and its peers.
+    let ready = (|| -> Result<(TcpStream, BufReader<TcpStream>), QappaError> {
+        let stream =
+            connect_with_retry(addr, Duration::from_millis(opts.connect_timeout_ms))?;
+        let mut writer = stream
+            .try_clone()
+            .map_err(|e| QappaError::io("cloning loadgen socket", e))?;
+        let mut reader = BufReader::new(stream);
+        if opts.warmup {
+            // Untimed: absorbs training (one connection pays it, the rest
+            // hit the in-flight dedup / warm store) before timing starts.
+            round_trip(
+                &mut writer,
+                &mut reader,
+                &mut line,
+                (conn as u64 + 1) * 1_000_000_000,
+                RequestBody::Explore(ExploreRequest {
+                    workloads: vec!["vgg16".into()],
+                    precision: None,
+                }),
+            )?;
+        }
+        Ok((writer, reader))
+    })();
+    start.wait();
+    let (mut writer, mut reader) = ready?;
+
+    let mut latencies = Vec::with_capacity(opts.requests);
+    let (mut ok, mut errors) = (0usize, 0usize);
+    for k in 0..opts.requests {
+        let id = (conn as u64) * 1_000_000 + k as u64;
+        let t0 = Instant::now();
+        if round_trip(&mut writer, &mut reader, &mut line, id, opts.mix.body(k))? {
+            ok += 1;
+        } else {
+            errors += 1;
+        }
+        latencies.push(t0.elapsed().as_secs_f64() * 1e3);
+    }
+    Ok((latencies, ok, errors))
+}
+
+/// Run the generator against a listening server and aggregate the report.
+pub fn run_loadgen(addr: &str, opts: &LoadgenOptions) -> Result<LoadgenReport, QappaError> {
+    let connections = opts.connections.max(1);
+    let requests = opts.requests.max(1);
+    let opts = LoadgenOptions { connections, requests, ..*opts };
+    // +1: the aggregator thread holds the stopwatch, started only once
+    // every connection is connected and warmed.
+    let start = Arc::new(Barrier::new(connections + 1));
+    let mut handles = Vec::with_capacity(connections);
+    for conn in 0..connections {
+        let addr = addr.to_string();
+        let start = start.clone();
+        handles.push(std::thread::spawn(move || {
+            run_connection(&addr, conn, &opts, &start)
+        }));
+    }
+    start.wait();
+    let t0 = Instant::now();
+    let mut latencies: Vec<f64> = Vec::with_capacity(connections * requests);
+    let (mut ok, mut errors) = (0usize, 0usize);
+    for h in handles {
+        let (l, o, e) = h
+            .join()
+            .map_err(|_| QappaError::Protocol("loadgen connection thread panicked".into()))??;
+        latencies.extend(l);
+        ok += o;
+        errors += e;
+    }
+    let elapsed_s = t0.elapsed().as_secs_f64().max(1e-9);
+    let total = latencies.len();
+    let max_ms = latencies.iter().cloned().fold(0.0, f64::max);
+    Ok(LoadgenReport {
+        connections,
+        requests: total,
+        ok,
+        errors,
+        elapsed_s,
+        throughput_per_s: total as f64 / elapsed_s,
+        p50_ms: percentile(&latencies, 50.0),
+        p95_ms: percentile(&latencies, 95.0),
+        p99_ms: percentile(&latencies, 99.0),
+        max_ms,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::api::session::{BackendChoice, Qappa};
+    use crate::api::transport::{TcpServer, TransportOptions};
+    use crate::coordinator::space::DesignSpace;
+    use crate::model::CvConfig;
+
+    #[test]
+    fn mix_parses_and_rotates() {
+        assert_eq!(RequestMix::parse("Mixed").unwrap(), RequestMix::Mixed);
+        assert!(RequestMix::parse("nope").is_err());
+        let ops: Vec<&str> =
+            (0..4).map(|k| RequestMix::Mixed.body(k).op()).collect();
+        assert_eq!(ops, ["explore", "analyze", "session", "explore"]);
+    }
+
+    #[test]
+    fn report_round_trips_to_json() {
+        let r = LoadgenReport {
+            connections: 4,
+            requests: 100,
+            ok: 100,
+            errors: 0,
+            elapsed_s: 0.5,
+            throughput_per_s: 200.0,
+            p50_ms: 1.5,
+            p95_ms: 3.0,
+            p99_ms: 4.0,
+            max_ms: 9.0,
+        };
+        let v = r.to_json();
+        assert_eq!(v.get("throughput_per_s").as_f64(), Some(200.0));
+        assert_eq!(v.get("p99_ms").as_f64(), Some(4.0));
+        assert_eq!(v.get("errors").as_f64(), Some(0.0));
+    }
+
+    #[test]
+    fn loadgen_drives_a_live_server_error_free() {
+        let session = Arc::new(
+            Qappa::builder()
+                .backend(BackendChoice::Native)
+                .space(DesignSpace::tiny())
+                .train_per_type(64)
+                .cv(CvConfig { k: 3, degrees: vec![1, 2], lambdas: vec![1e-3, 1e-2], seed: 1 })
+                .seed(7)
+                .workers(4)
+                .sigma(0.02)
+                .chunk(32)
+                .topk(8)
+                .build(),
+        );
+        let mut server =
+            TcpServer::bind(session.clone(), "127.0.0.1:0", TransportOptions::default())
+                .unwrap();
+        let addr = server.local_addr().to_string();
+        let report = run_loadgen(
+            &addr,
+            &LoadgenOptions {
+                connections: 3,
+                requests: 5,
+                mix: RequestMix::Mixed,
+                ..Default::default()
+            },
+        )
+        .unwrap();
+        assert_eq!(report.requests, 15);
+        assert_eq!(report.errors, 0);
+        assert!(report.throughput_per_s > 0.0);
+        assert!(report.p50_ms <= report.p99_ms && report.p99_ms <= report.max_ms);
+        // warm-up plus every explore in the mix: exactly one training pass
+        // (4 models) for the whole process.
+        assert_eq!(session.store().misses(), 4, "models trained once across connections");
+        server.shutdown();
+    }
+}

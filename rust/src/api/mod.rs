@@ -17,18 +17,32 @@
 //!   through [`crate::util::json`] (schemas in `docs/API.md`).
 //! * [`serve`] — the `qappa serve` JSON-lines request loop: concurrent
 //!   requests dispatched against one shared session.
+//! * [`transport`] + [`dispatch`] — the network serve path
+//!   (`qappa serve --listen`): a std-only TCP listener multiplexing
+//!   per-connection JSON-lines sessions over one shared dispatcher with
+//!   bounded admission, request coalescing and per-connection
+//!   cancellation (`docs/SERVE.md`).
+//! * [`loadgen`] — the built-in load generator (`qappa loadgen`) that
+//!   pins serve throughput in `BENCH_serve.json`.
 //!
 //! [`error::QappaError`] is the crate-wide structured error every fallible
 //! public API returns (re-exported at the crate root).
 
+pub mod dispatch;
 pub mod error;
+pub mod loadgen;
 pub mod serve;
 pub mod session;
+pub mod transport;
 pub mod types;
 
+pub use dispatch::{DispatchOptions, DispatchStats, Dispatcher};
 pub use error::QappaError;
+pub use loadgen::{run_loadgen, LoadgenOptions, LoadgenReport, RequestMix};
 pub use serve::{dispatch, handle_line, serve, ServeOptions, ServeStats};
-pub use session::{BackendChoice, Qappa, QappaBuilder};
+pub use session::{process_store, BackendChoice, Qappa, QappaBuilder};
+pub use transport::{ServerStats, TcpServer, TransportOptions};
+pub use crate::opt::CancelToken;
 pub use crate::opt::objective::Constraints;
 pub use types::{
     config_from_json, AnalyzeRequest, AnalyzeResponse, CvPoint, ErrorBody, ExploreEntry,

@@ -19,7 +19,6 @@
 //! dynamic batcher coalesces concurrent predict traffic.
 
 use std::io::{BufRead, Write};
-use std::sync::mpsc::{sync_channel, TrySendError};
 use std::sync::Mutex;
 
 use crate::api::error::QappaError;
@@ -27,6 +26,7 @@ use crate::api::session::Qappa;
 use crate::api::types::{ErrorBody, RequestBody, ResponseBody, ServeRequest, ServeResponse};
 use crate::util::json::Json;
 use crate::util::pool::default_workers;
+use crate::util::queue::BoundedQueue;
 
 /// Options for one serve loop.
 #[derive(Debug, Clone)]
@@ -124,53 +124,42 @@ pub fn serve<R: BufRead, W: Write + Send>(
     } else {
         // Bounded queue: the producer reads at most O(workers) lines ahead
         // of the dispatchers, so a huge piped batch never balloons memory.
-        let (tx, rx) = sync_channel::<String>(workers * 2);
-        let rx = Mutex::new(rx);
+        // A worker that dies on a write failure (downstream closed the
+        // pipe) closes the queue, which wakes a producer blocked on the
+        // full queue — the explicit shutdown signal that used to be a 1 ms
+        // `try_send`/sleep poll loop.
+        let queue: BoundedQueue<String> = BoundedQueue::new(workers * 2);
         let worker_err: Mutex<Option<QappaError>> = Mutex::new(None);
         std::thread::scope(|scope| -> Result<(), QappaError> {
             for _ in 0..workers {
                 scope.spawn(|| loop {
-                    // Hold the receiver lock while waiting: exactly one
-                    // worker blocks in recv, the rest queue on the mutex —
-                    // same semantics as a shared MPMC pop.
-                    let next = rx.lock().unwrap_or_else(|p| p.into_inner()).recv();
-                    let Ok(line) = next else { break };
+                    let Some(line) = queue.pop() else { break };
                     if let Err(e) = emit(&handle_line(session, &line)) {
                         let mut slot = worker_err.lock().unwrap_or_else(|p| p.into_inner());
                         if slot.is_none() {
                             *slot = Some(e);
                         }
+                        queue.close(); // dead-worker abort: wake the producer
                         break;
                     }
                 });
             }
-            'produce: for line in reader.lines() {
-                let line = line.map_err(|e| QappaError::io("reading request", e))?;
-                if line.trim().is_empty() {
-                    continue;
-                }
-                // Enqueue with a poll loop instead of a blocking send: if
-                // every worker has died on a write failure (downstream
-                // closed the pipe), a blocking send on the full queue
-                // would hang forever; here the death check runs between
-                // attempts and aborts the read loop instead.
-                let mut pending = line;
-                loop {
-                    if worker_err.lock().unwrap_or_else(|p| p.into_inner()).is_some() {
-                        break 'produce;
+            let produced = (|| -> Result<(), QappaError> {
+                for line in reader.lines() {
+                    let line = line.map_err(|e| QappaError::io("reading request", e))?;
+                    if line.trim().is_empty() {
+                        continue;
                     }
-                    match tx.try_send(pending) {
-                        Ok(()) => break,
-                        Err(TrySendError::Full(l)) => {
-                            pending = l;
-                            std::thread::sleep(std::time::Duration::from_millis(1));
-                        }
-                        Err(TrySendError::Disconnected(_)) => break 'produce,
+                    if queue.push(line).is_err() {
+                        break; // a worker died and closed the queue
                     }
                 }
-            }
-            drop(tx); // close the queue; workers drain and exit
-            Ok(())
+                Ok(())
+            })();
+            // Close unconditionally (also on a read error), so blocked
+            // workers drain the tail and the scope can join.
+            queue.close();
+            produced
         })?;
         if let Some(e) = worker_err.into_inner().unwrap_or_else(|p| p.into_inner()) {
             return Err(e);
@@ -245,6 +234,38 @@ not json\n\
         // the loop survived to answer the good request
         assert_eq!(resps[3].id, Some(11));
         assert!(resps[3].result.is_ok());
+    }
+
+    /// A writer whose every write fails — the downstream-closed-the-pipe
+    /// case that kills every worker.
+    struct FailWriter;
+
+    impl std::io::Write for FailWriter {
+        fn write(&mut self, _buf: &[u8]) -> std::io::Result<usize> {
+            Err(std::io::Error::new(std::io::ErrorKind::BrokenPipe, "sink closed"))
+        }
+
+        fn flush(&mut self) -> std::io::Result<()> {
+            Ok(())
+        }
+    }
+
+    #[test]
+    fn dead_workers_unblock_a_full_queue() {
+        let s = session();
+        // Far more requests than the bounded queue holds, against a writer
+        // that fails every write: all workers die on their first response
+        // while the producer is blocked on the full queue.  The close()
+        // signal must wake it so serve() terminates with the worker's
+        // error instead of hanging (the old poll loop's job, minus the
+        // busy-wait).
+        let mut input = String::new();
+        for id in 0..64u64 {
+            input.push_str(&format!("{{\"id\":{id},\"op\":\"session\"}}\n"));
+        }
+        let err = serve(&s, input.as_bytes(), FailWriter, &ServeOptions { concurrency: 2 })
+            .unwrap_err();
+        assert_eq!(err.kind(), "io");
     }
 
     #[test]

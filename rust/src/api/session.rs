@@ -5,10 +5,18 @@
 //! started, so config-only requests never spin up the XLA engine), the DSE
 //! options (training recipe, design space, sharding) and a shared
 //! [`ModelStore`] — which is what makes QAPPA's economics work as a
-//! service: models train **once per session** and every subsequent
+//! service: models train **once per store** and every subsequent
 //! `explore`/`fit` query is answered from the warm cache in the time of a
 //! sweep, not a training pass.  All methods take `&self` and the session is
 //! `Sync`, so one session can serve concurrent requests (`api::serve`).
+//!
+//! The store is an `Arc`: by default each session gets a fresh one, but
+//! [`QappaBuilder::store`] injects a shared handle so several sessions —
+//! e.g. one per TCP connection — reuse each other's training passes, and
+//! [`process_store`] is the process-wide instance the network server uses
+//! so models train once per *process* (`docs/SERVE.md`).  Store keys cover
+//! the full training recipe, so sessions with different recipes can share
+//! one store without collisions.
 //!
 //! ```no_run
 //! use qappa::api::{ExploreRequest, Qappa};
@@ -43,7 +51,8 @@ use crate::dataflow::Layer;
 use crate::model::native::NativeBackend;
 use crate::model::{Backend, CvConfig};
 use crate::opt::{
-    resolve_objectives, run_optimize, OptOptions, OptProblem, SearchSpace, StrategyKind,
+    resolve_objectives, run_optimize_cancellable, CancelToken, OptOptions, OptProblem,
+    SearchSpace, StrategyKind,
 };
 use crate::runtime::{ArtifactRuntime, Engine, XlaBackend};
 use crate::workloads;
@@ -103,6 +112,17 @@ impl AnyBackend {
 pub struct QappaBuilder {
     choice: BackendChoice,
     opts: DseOptions,
+    store: Option<Arc<ModelStore>>,
+}
+
+/// The process-wide shared [`ModelStore`]: sessions built with
+/// `.store(process_store())` train each model exactly once per process no
+/// matter how many sessions come and go (the TCP serve path,
+/// `docs/SERVE.md`).  Keys cover the whole training recipe, so mixing
+/// recipes is safe.
+pub fn process_store() -> Arc<ModelStore> {
+    static STORE: OnceLock<Arc<ModelStore>> = OnceLock::new();
+    STORE.get_or_init(|| Arc::new(ModelStore::new())).clone()
 }
 
 impl QappaBuilder {
@@ -163,11 +183,18 @@ impl QappaBuilder {
         self
     }
 
+    /// Share a model store with other sessions (e.g. [`process_store`]):
+    /// training passes done by any holder are warm hits for all of them.
+    pub fn store(mut self, store: Arc<ModelStore>) -> QappaBuilder {
+        self.store = Some(store);
+        self
+    }
+
     pub fn build(self) -> Qappa {
         Qappa {
             choice: self.choice,
             opts: self.opts,
-            store: ModelStore::new(),
+            store: self.store.unwrap_or_default(),
             backend: OnceLock::new(),
             quant_backend: OnceLock::new(),
             init: Mutex::new(()),
@@ -179,7 +206,7 @@ impl QappaBuilder {
 pub struct Qappa {
     choice: BackendChoice,
     opts: DseOptions,
-    store: ModelStore,
+    store: Arc<ModelStore>,
     /// Lazily-initialized backend: config-only requests (`synth`,
     /// `analyze`, `workloads`) never pay engine startup.
     backend: OnceLock<AnyBackend>,
@@ -206,6 +233,12 @@ impl Qappa {
     /// `hits()` the passes avoided.
     pub fn store(&self) -> &ModelStore {
         &self.store
+    }
+
+    /// A shareable handle on the session's model cache (what
+    /// [`QappaBuilder::store`] accepts).
+    pub fn store_handle(&self) -> Arc<ModelStore> {
+        self.store.clone()
     }
 
     /// The XLA engine, if the session runs one and it has started.
@@ -363,6 +396,18 @@ impl Qappa {
     /// (request, session recipe, seed) inputs reproduce the frontier
     /// bit-for-bit, whether issued here, over `serve`, or via the CLI.
     pub fn optimize(&self, req: &OptimizeRequest) -> Result<OptimizeResponse, QappaError> {
+        self.optimize_cancellable(req, &CancelToken::new())
+    }
+
+    /// [`Qappa::optimize`] with a cooperative cancellation handle: when
+    /// `cancel` fires the search stops at the next batch boundary and the
+    /// run answers a `protocol` error (the network server cancels this way
+    /// when a client drops mid-optimize — see `docs/SERVE.md`).
+    pub fn optimize_cancellable(
+        &self,
+        req: &OptimizeRequest,
+        cancel: &CancelToken,
+    ) -> Result<OptimizeResponse, QappaError> {
         // Cheap validation first: a bad request never pays workload
         // loading or training.
         let objectives = resolve_objectives(&req.objectives)?;
@@ -407,7 +452,11 @@ impl Qappa {
             seed: req.seed.unwrap_or(self.opts.seed),
             ..Default::default()
         };
-        let result = run_optimize(backend, &model, &problem, &oopts, self.opts.workers)?;
+        let result =
+            run_optimize_cancellable(backend, &model, &problem, &oopts, self.opts.workers, cancel)?;
+        if cancel.is_cancelled() {
+            return Err(QappaError::Protocol("optimize: run cancelled".into()));
+        }
 
         let frontier = result
             .frontier
@@ -592,6 +641,59 @@ mod tests {
         let info = s.session_info();
         assert_eq!(info.backend.as_deref(), Some("native"));
         assert_eq!(info.models_trained, 4);
+    }
+
+    #[test]
+    fn sessions_sharing_a_store_train_once() {
+        let shared = Arc::new(ModelStore::new());
+        let a = Qappa::builder()
+            .backend(BackendChoice::Native)
+            .space(DesignSpace::tiny())
+            .train_per_type(64)
+            .cv(CvConfig { k: 3, degrees: vec![1, 2], lambdas: vec![1e-3, 1e-2], seed: 1 })
+            .seed(7)
+            .workers(4)
+            .sigma(0.02)
+            .chunk(32)
+            .topk(8)
+            .store(shared.clone())
+            .build();
+        let b = Qappa::builder()
+            .backend(BackendChoice::Native)
+            .space(DesignSpace::tiny())
+            .train_per_type(64)
+            .cv(CvConfig { k: 3, degrees: vec![1, 2], lambdas: vec![1e-3, 1e-2], seed: 1 })
+            .seed(7)
+            .workers(4)
+            .sigma(0.02)
+            .chunk(32)
+            .topk(8)
+            .store(shared.clone())
+            .build();
+        let req = ExploreRequest { workloads: vec!["vgg16".into()], precision: None };
+        let r1 = a.explore(&req).unwrap();
+        assert_eq!(shared.misses(), 4, "first session trains all four models");
+        let r2 = b.explore(&req).unwrap();
+        assert_eq!(shared.misses(), 4, "second session answers warm from the shared store");
+        assert!(shared.hits() >= 4);
+        assert_eq!(r1, r2, "same recipe + shared store -> identical answers");
+    }
+
+    #[test]
+    fn cancelled_optimize_answers_protocol_error() {
+        use crate::api::types::OptimizeRequest;
+        let s = tiny_session();
+        let cancel = CancelToken::new();
+        cancel.cancel();
+        let req = OptimizeRequest {
+            workload: "mobilenetv1".into(),
+            budget: Some(80),
+            pop: Some(16),
+            ..Default::default()
+        };
+        let err = s.optimize_cancellable(&req, &cancel).unwrap_err();
+        assert_eq!(err.kind(), "protocol");
+        assert!(err.to_string().contains("cancelled"));
     }
 
     #[test]

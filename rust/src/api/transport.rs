@@ -1,0 +1,429 @@
+//! The TCP transport for `qappa serve --listen`: a std-only listener
+//! multiplexing per-connection JSON-lines sessions over one shared
+//! [`Dispatcher`] (and through it one shared session + `ModelStore`, so
+//! models train once per *process* no matter how many clients connect).
+//!
+//! Lifecycle of a connection (full protocol: `docs/SERVE.md`):
+//!
+//! * accepted while under `max_connections`; past the cap the server
+//!   writes one `protocol` error line and closes (connection shedding);
+//! * framed as newline-delimited JSON with a `max_line_bytes` bound — an
+//!   oversized line is *consumed* (through its newline), answered with a
+//!   `protocol` error, and the stream keeps going;
+//! * dispatched by a small per-connection worker pool over a
+//!   [`BoundedQueue`], so one slow request doesn't stall the socket read
+//!   and responses may arrive out of order (clients correlate by `id`);
+//! * cancelled cooperatively when the client vanishes: reader EOF outside
+//!   a server-initiated drain fires the connection's [`CancelToken`],
+//!   stopping in-flight `optimize` runs at their next batch boundary;
+//! * drained gracefully on [`TcpServer::shutdown`]: the listener stops,
+//!   every live socket's read half is shut down (readers see EOF, the
+//!   token does *not* fire), queued work completes and responses flush.
+//!
+//! Diagnostics go to stderr with a `[serve]` prefix; sockets carry only
+//! JSON response lines.
+
+use std::io::{self, BufRead, BufReader, Write};
+use std::net::{Shutdown, SocketAddr, TcpListener, TcpStream, ToSocketAddrs};
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+
+use crate::api::dispatch::{DispatchOptions, DispatchStats, Dispatcher};
+use crate::api::error::QappaError;
+use crate::api::session::Qappa;
+use crate::api::types::{ErrorBody, ServeResponse};
+use crate::opt::CancelToken;
+use crate::util::queue::BoundedQueue;
+
+/// Knobs of the TCP transport.
+#[derive(Debug, Clone, Copy)]
+pub struct TransportOptions {
+    /// Concurrent connections; past this new sockets are shed with one
+    /// `protocol` error line.
+    pub max_connections: usize,
+    /// Worker threads per connection (out-of-order responses when > 1).
+    pub concurrency: usize,
+    /// Longest accepted request line in bytes; longer frames answer a
+    /// `protocol` error without buffering the payload.
+    pub max_line_bytes: usize,
+    /// The shared dispatch layer's knobs (admission, coalescing).
+    pub dispatch: DispatchOptions,
+}
+
+impl Default for TransportOptions {
+    fn default() -> TransportOptions {
+        TransportOptions {
+            max_connections: 64,
+            concurrency: 2,
+            max_line_bytes: 1 << 20,
+            dispatch: DispatchOptions::default(),
+        }
+    }
+}
+
+/// Counter snapshot of one server (see [`TcpServer::stats`]).
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct ServerStats {
+    /// Connections accepted and served (sheds excluded).
+    pub connections: usize,
+    /// Connections live right now.
+    pub active: usize,
+    /// Sockets refused at the connection cap.
+    pub shed_connections: usize,
+    pub dispatch: DispatchStats,
+}
+
+struct Shared {
+    shutdown: AtomicBool,
+    accepted: AtomicUsize,
+    active: AtomicUsize,
+    shed: AtomicUsize,
+    /// Read-half handles of live connections, for the drain broadcast.
+    conns: Mutex<Vec<(u64, TcpStream)>>,
+    /// Joinable handles of live + finished connection threads.
+    threads: Mutex<Vec<JoinHandle<()>>>,
+}
+
+/// One frame off the socket.
+#[derive(Debug, PartialEq, Eq)]
+pub(crate) enum Frame {
+    Line(String),
+    /// A line longer than the bound: consumed through its newline,
+    /// carrying the byte count actually seen.
+    Oversized(usize),
+    Eof,
+}
+
+/// Read one newline-delimited frame without ever buffering more than
+/// `max` payload bytes (an attacker can't balloon memory with one giant
+/// line — the tail is counted and discarded, not stored).
+pub(crate) fn read_bounded_line<R: BufRead>(r: &mut R, max: usize) -> io::Result<Frame> {
+    let mut buf: Vec<u8> = Vec::new();
+    let mut oversized: Option<usize> = None;
+    loop {
+        let (sep, used, grow) = {
+            let chunk = match r.fill_buf() {
+                Ok(c) => c,
+                Err(e) if e.kind() == io::ErrorKind::Interrupted => continue,
+                Err(e) => return Err(e),
+            };
+            if chunk.is_empty() {
+                // EOF: an unterminated tail still counts as a frame.
+                return Ok(match oversized {
+                    Some(n) => Frame::Oversized(n),
+                    None if buf.is_empty() => Frame::Eof,
+                    None => Frame::Line(String::from_utf8_lossy(&buf).into_owned()),
+                });
+            }
+            match chunk.iter().position(|&b| b == b'\n') {
+                Some(pos) => (true, pos + 1, chunk[..pos].to_vec()),
+                None => (false, chunk.len(), chunk.to_vec()),
+            }
+        };
+        match oversized {
+            Some(ref mut n) => *n += grow.len(),
+            None if buf.len() + grow.len() > max => {
+                oversized = Some(buf.len() + grow.len());
+                buf.clear();
+            }
+            None => buf.extend_from_slice(&grow),
+        }
+        r.consume(used);
+        if sep {
+            return Ok(match oversized {
+                Some(n) => Frame::Oversized(n),
+                None => Frame::Line(String::from_utf8_lossy(&buf).into_owned()),
+            });
+        }
+    }
+}
+
+fn write_line(stream: &Mutex<TcpStream>, resp: &ServeResponse) -> io::Result<()> {
+    let mut w = stream.lock().unwrap_or_else(|p| p.into_inner());
+    writeln!(w, "{}", resp.to_json()).and_then(|_| w.flush())
+}
+
+/// The per-connection loop: frame, dispatch over a bounded queue, write.
+fn handle_connection(
+    conn_id: u64,
+    stream: TcpStream,
+    dispatcher: &Dispatcher,
+    shared: &Shared,
+    opts: &TransportOptions,
+) {
+    let cancel = CancelToken::new();
+    let reader = match stream.try_clone() {
+        Ok(s) => s,
+        Err(e) => {
+            eprintln!("[serve] conn #{conn_id}: clone failed: {e}");
+            return;
+        }
+    };
+    let writer = Mutex::new(stream);
+    let workers = opts.concurrency.max(1);
+    let queue: BoundedQueue<String> = BoundedQueue::new(workers * 2);
+
+    std::thread::scope(|scope| {
+        for _ in 0..workers {
+            scope.spawn(|| loop {
+                let Some(line) = queue.pop() else { break };
+                if cancel.is_cancelled() {
+                    continue; // client abandoned the tail; drop it
+                }
+                let resp = dispatcher.handle_line(&line, &cancel);
+                if write_line(&writer, &resp).is_err() {
+                    // Client gone: abandon outstanding work on this
+                    // connection and stop taking more.
+                    cancel.cancel();
+                    queue.close();
+                    break;
+                }
+            });
+        }
+
+        let mut reader = BufReader::new(reader);
+        loop {
+            match read_bounded_line(&mut reader, opts.max_line_bytes) {
+                Ok(Frame::Eof) | Err(_) => break,
+                Ok(Frame::Line(l)) => {
+                    if l.trim().is_empty() {
+                        continue;
+                    }
+                    if queue.push(l).is_err() {
+                        break; // workers died (write side closed)
+                    }
+                }
+                Ok(Frame::Oversized(seen)) => {
+                    dispatcher.note_rejected();
+                    let e = QappaError::Protocol(format!(
+                        "oversized request line: {seen} bytes (max {})",
+                        opts.max_line_bytes
+                    ));
+                    let resp = ServeResponse { id: None, result: Err(ErrorBody::from(&e)) };
+                    if write_line(&writer, &resp).is_err() {
+                        break;
+                    }
+                }
+            }
+        }
+        // EOF semantics: a client that goes away abandons its outstanding
+        // requests; a server-initiated drain (shutdown flag set before the
+        // forced EOF) lets them finish and flush.
+        if !shared.shutdown.load(Ordering::SeqCst) {
+            cancel.cancel();
+        }
+        queue.close();
+    });
+}
+
+/// A running `qappa serve --listen` endpoint.  Dropping the server shuts
+/// it down (drain semantics — see [`TcpServer::shutdown`]).
+pub struct TcpServer {
+    addr: SocketAddr,
+    dispatcher: Arc<Dispatcher>,
+    shared: Arc<Shared>,
+    opts: TransportOptions,
+    accept: Option<JoinHandle<()>>,
+}
+
+impl TcpServer {
+    /// Bind `addr` (e.g. `127.0.0.1:0` for an ephemeral port) and start
+    /// accepting in a background thread.
+    pub fn bind(
+        session: Arc<Qappa>,
+        addr: impl ToSocketAddrs,
+        opts: TransportOptions,
+    ) -> Result<TcpServer, QappaError> {
+        let listener =
+            TcpListener::bind(addr).map_err(|e| QappaError::io("binding listener", e))?;
+        let local = listener
+            .local_addr()
+            .map_err(|e| QappaError::io("resolving listener address", e))?;
+        let dispatcher = Arc::new(Dispatcher::new(session, opts.dispatch));
+        let shared = Arc::new(Shared {
+            shutdown: AtomicBool::new(false),
+            accepted: AtomicUsize::new(0),
+            active: AtomicUsize::new(0),
+            shed: AtomicUsize::new(0),
+            conns: Mutex::new(Vec::new()),
+            threads: Mutex::new(Vec::new()),
+        });
+        let accept = {
+            let dispatcher = dispatcher.clone();
+            let shared = shared.clone();
+            std::thread::spawn(move || accept_loop(listener, dispatcher, shared, opts))
+        };
+        eprintln!("[serve] listening on {local}");
+        Ok(TcpServer { addr: local, dispatcher, shared, opts, accept: Some(accept) })
+    }
+
+    pub fn local_addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    pub fn options(&self) -> TransportOptions {
+        self.opts
+    }
+
+    pub fn stats(&self) -> ServerStats {
+        ServerStats {
+            connections: self.shared.accepted.load(Ordering::SeqCst),
+            active: self.shared.active.load(Ordering::SeqCst),
+            shed_connections: self.shared.shed.load(Ordering::SeqCst),
+            dispatch: self.dispatcher.stats(),
+        }
+    }
+
+    /// Graceful drain: stop accepting, force EOF on every live reader
+    /// (in-flight and queued requests still complete and flush — the
+    /// cancel tokens do **not** fire), then join every thread.  Idempotent.
+    pub fn shutdown(&mut self) {
+        let Some(accept) = self.accept.take() else { return };
+        self.shared.shutdown.store(true, Ordering::SeqCst);
+        // Unblock the accept loop with a throwaway self-connection.
+        let _ = TcpStream::connect(self.addr);
+        let _ = accept.join();
+        // Force EOF on live connections: readers stop, tails drain.
+        for (_, conn) in self.shared.conns.lock().unwrap_or_else(|p| p.into_inner()).iter() {
+            let _ = conn.shutdown(Shutdown::Read);
+        }
+        let threads: Vec<JoinHandle<()>> = {
+            let mut t = self.shared.threads.lock().unwrap_or_else(|p| p.into_inner());
+            t.drain(..).collect()
+        };
+        for t in threads {
+            let _ = t.join();
+        }
+        eprintln!("[serve] drained: {:?}", self.stats().dispatch);
+    }
+}
+
+impl Drop for TcpServer {
+    fn drop(&mut self) {
+        self.shutdown();
+    }
+}
+
+fn accept_loop(
+    listener: TcpListener,
+    dispatcher: Arc<Dispatcher>,
+    shared: Arc<Shared>,
+    opts: TransportOptions,
+) {
+    let mut next_id: u64 = 0;
+    loop {
+        let stream = match listener.accept() {
+            Ok((s, _)) => s,
+            Err(e) => {
+                if shared.shutdown.load(Ordering::SeqCst) {
+                    break;
+                }
+                eprintln!("[serve] accept failed: {e}");
+                continue;
+            }
+        };
+        if shared.shutdown.load(Ordering::SeqCst) {
+            break; // the wake-up self-connection, or a straggler
+        }
+        if shared.active.load(Ordering::SeqCst) >= opts.max_connections {
+            shed_connection(stream, &shared, opts.max_connections);
+            continue;
+        }
+        let conn_id = next_id;
+        next_id += 1;
+        shared.accepted.fetch_add(1, Ordering::SeqCst);
+        shared.active.fetch_add(1, Ordering::SeqCst);
+        if let Ok(clone) = stream.try_clone() {
+            shared
+                .conns
+                .lock()
+                .unwrap_or_else(|p| p.into_inner())
+                .push((conn_id, clone));
+        }
+        let handle = {
+            let dispatcher = dispatcher.clone();
+            let shared = shared.clone();
+            std::thread::spawn(move || {
+                handle_connection(conn_id, stream, &dispatcher, &shared, &opts);
+                shared.active.fetch_sub(1, Ordering::SeqCst);
+                shared
+                    .conns
+                    .lock()
+                    .unwrap_or_else(|p| p.into_inner())
+                    .retain(|(id, _)| *id != conn_id);
+            })
+        };
+        shared.threads.lock().unwrap_or_else(|p| p.into_inner()).push(handle);
+    }
+}
+
+/// Refuse a socket at the connection cap: one structured error line, then
+/// close — the client learns *why* instead of hanging in a backlog.
+fn shed_connection(mut stream: TcpStream, shared: &Shared, max: usize) {
+    shared.shed.fetch_add(1, Ordering::SeqCst);
+    eprintln!("[serve] shed connection: {max} already active");
+    let e = QappaError::Protocol(format!(
+        "admission: server at connection capacity (max {max}); retry later"
+    ));
+    let resp = ServeResponse { id: None, result: Err(ErrorBody::from(&e)) };
+    let _ = writeln!(stream, "{}", resp.to_json()).and_then(|_| stream.flush());
+    let _ = stream.shutdown(Shutdown::Both);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::api::session::BackendChoice;
+    use std::io::Cursor;
+
+    #[test]
+    fn bounded_reader_frames_lines_and_eof() {
+        let mut r = Cursor::new(b"alpha\nbeta\n".to_vec());
+        assert_eq!(read_bounded_line(&mut r, 64).unwrap(), Frame::Line("alpha".into()));
+        assert_eq!(read_bounded_line(&mut r, 64).unwrap(), Frame::Line("beta".into()));
+        assert_eq!(read_bounded_line(&mut r, 64).unwrap(), Frame::Eof);
+    }
+
+    #[test]
+    fn bounded_reader_counts_and_skips_oversized_lines() {
+        let mut input = vec![b'x'; 100];
+        input.push(b'\n');
+        input.extend_from_slice(b"ok\n");
+        let mut r = Cursor::new(input);
+        assert_eq!(read_bounded_line(&mut r, 10).unwrap(), Frame::Oversized(100));
+        // the stream recovers at the next frame
+        assert_eq!(read_bounded_line(&mut r, 10).unwrap(), Frame::Line("ok".into()));
+        assert_eq!(read_bounded_line(&mut r, 10).unwrap(), Frame::Eof);
+    }
+
+    #[test]
+    fn bounded_reader_takes_an_unterminated_tail() {
+        let mut r = Cursor::new(b"tail".to_vec());
+        assert_eq!(read_bounded_line(&mut r, 64).unwrap(), Frame::Line("tail".into()));
+        assert_eq!(read_bounded_line(&mut r, 64).unwrap(), Frame::Eof);
+    }
+
+    #[test]
+    fn server_answers_a_round_trip_and_drains() {
+        let session = Arc::new(Qappa::builder().backend(BackendChoice::Native).build());
+        let mut server =
+            TcpServer::bind(session, "127.0.0.1:0", TransportOptions::default()).unwrap();
+        let mut client = TcpStream::connect(server.local_addr()).unwrap();
+        writeln!(client, "{{\"id\":42,\"op\":\"workloads\"}}").unwrap();
+        client.flush().unwrap();
+        let mut reader = BufReader::new(client.try_clone().unwrap());
+        let mut line = String::new();
+        reader.read_line(&mut line).unwrap();
+        let resp =
+            ServeResponse::from_json(&crate::util::json::Json::parse(&line).unwrap()).unwrap();
+        assert_eq!(resp.id, Some(42));
+        assert!(resp.result.is_ok());
+        drop(client);
+        server.shutdown();
+        let st = server.stats();
+        assert_eq!(st.connections, 1);
+        assert_eq!(st.active, 0);
+        assert_eq!((st.dispatch.requests, st.dispatch.ok), (1, 1));
+    }
+}

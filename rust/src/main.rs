@@ -17,15 +17,22 @@
 //! * `rtl`       — emit generated Verilog for a configuration
 //! * `verify`    — run the gate-level simulator against golden models
 //! * `workloads` — print the layer tables and MAC totals
-//! * `serve`     — JSON-lines request loop on stdin/stdout (docs/API.md)
+//! * `serve`     — JSON-lines request loop on stdin/stdout, or a concurrent
+//!   TCP endpoint with `--listen` (docs/API.md, docs/SERVE.md)
+//! * `loadgen`   — drive a serve endpoint with N lockstep connections and
+//!   print a latency/throughput report (docs/SERVE.md)
 //!
 //! Backend: `--backend xla` (default if `artifacts/` is present) drives the
 //! AOT-compiled PJRT artifacts; `--backend native` uses the pure-Rust
 //! fallback.
 
+use std::sync::Arc;
+
 use qappa::api::{
-    AnalyzeRequest, BackendChoice, Constraints, FitRequest, OptimizeRequest, PrecisionRequest,
-    Qappa, QappaError, ServeOptions, SynthRequest, WorkloadsRequest, WorkloadsResponse,
+    process_store, run_loadgen, AnalyzeRequest, BackendChoice, Constraints, DispatchOptions,
+    FitRequest, LoadgenOptions, OptimizeRequest, PrecisionRequest, Qappa, QappaBuilder,
+    QappaError, RequestMix, ServeOptions, SynthRequest, TcpServer, TransportOptions,
+    WorkloadsRequest, WorkloadsResponse,
 };
 use qappa::config::{AcceleratorConfig, MacKind, PeType};
 use qappa::coordinator::precision::parse_bits_axis;
@@ -40,7 +47,8 @@ use qappa::util::table::Table;
 use qappa::workloads;
 
 fn main() {
-    let flags = ["help", "all", "clean", "quiet", "scatter", "stats", "uniform"];
+    let flags =
+        ["help", "all", "clean", "cold", "no-coalesce", "quiet", "scatter", "stats", "uniform"];
     let args = match Args::from_env(&flags) {
         Ok(a) => a,
         Err(e) => {
@@ -79,6 +87,7 @@ fn dispatch(sub: &str, args: &Args) -> Option<Result<(), QappaError>> {
         "workloads" => cmd_workloads(args),
         "analyze" => cmd_analyze(args),
         "serve" => cmd_serve(args),
+        "loadgen" => cmd_loadgen(args),
         "help" => {
             args.finish().ok();
             print!("{}", HELP);
@@ -134,11 +143,28 @@ SUBCOMMANDS
   analyze   --workload W --pe-type T [config flags as in synth]
                                          per-layer latency/energy breakdown
   serve     [--backend ... --train N --concurrency N]
+            [--listen HOST:PORT --max-connections N --max-inflight N
+             --max-line-bytes B --no-coalesce]
                                          JSON-lines request loop on
                                          stdin/stdout against one warm
                                          session (models trained once across
                                          all requests); protocol and worked
-                                         examples in docs/API.md
+                                         examples in docs/API.md.
+                                         --listen serves TCP clients
+                                         concurrently over one shared model
+                                         store (bounded admission, request
+                                         coalescing, per-connection
+                                         cancellation; EOF on stdin drains
+                                         and exits) — docs/SERVE.md
+  loadgen   [--addr HOST:PORT | session flags] [--connections N --requests M
+            --mix explore|analyze|mixed --cold --connect-timeout-ms T]
+                                         drive a serve endpoint with N
+                                         lockstep connections x M requests,
+                                         print one JSON line with latency
+                                         percentiles and throughput (spawns
+                                         an in-process server when --addr is
+                                         absent; --cold skips the untimed
+                                         warm-up request) — docs/SERVE.md
 
 WORKLOADS (--workload W)
   Built-in: vgg16, resnet34, resnet50, mobilenetv1, mobilenetv2.
@@ -186,6 +212,12 @@ fn parse_config(args: &Args) -> Result<AcceleratorConfig, QappaError> {
 /// --seed --workers --sigma --chunk --topk --space`), defaults from
 /// [`DseOptions::default`].  The backend starts lazily on first use.
 fn session_from(args: &Args) -> Result<Qappa, QappaError> {
+    Ok(builder_from(args)?.build())
+}
+
+/// The flag parsing behind [`session_from`], exposed so the network serve
+/// path can inject the process-wide shared store before building.
+fn builder_from(args: &Args) -> Result<QappaBuilder, QappaError> {
     let d = DseOptions::default();
     let mut b = Qappa::builder()
         .train_per_type(args.get("train", d.train_per_type)?)
@@ -209,7 +241,7 @@ fn session_from(args: &Args) -> Result<Qappa, QappaError> {
     if let Some(choice) = args.opt("backend") {
         b = b.backend(BackendChoice::parse(choice)?);
     }
-    Ok(b.build())
+    Ok(b)
 }
 
 fn write_csv(t: &Table, path: &str) -> Result<(), QappaError> {
@@ -783,6 +815,9 @@ fn cmd_workloads(args: &Args) -> Result<(), QappaError> {
 }
 
 fn cmd_serve(args: &Args) -> Result<(), QappaError> {
+    if let Some(listen) = args.opt("listen").map(str::to_string) {
+        return cmd_serve_listen(args, &listen);
+    }
     let session = session_from(args)?;
     let opts = ServeOptions {
         concurrency: args.get("concurrency", ServeOptions::default().concurrency)?,
@@ -802,5 +837,101 @@ fn cmd_serve(args: &Args) -> Result<(), QappaError> {
         session.store().misses(),
         session.store().hits()
     );
+    Ok(())
+}
+
+/// `qappa serve --listen HOST:PORT`: the concurrent TCP endpoint.  Blocks
+/// until EOF on stdin (Ctrl-D, or the spawning harness closing the pipe),
+/// then drains gracefully — in-flight requests complete and flush before
+/// the process exits (docs/SERVE.md).
+fn cmd_serve_listen(args: &Args, listen: &str) -> Result<(), QappaError> {
+    let td = TransportOptions::default();
+    let session = Arc::new(builder_from(args)?.store(process_store()).build());
+    let opts = TransportOptions {
+        max_connections: args.get("max-connections", td.max_connections)?,
+        concurrency: args.get("concurrency", td.concurrency)?,
+        max_line_bytes: args.get("max-line-bytes", td.max_line_bytes)?,
+        dispatch: DispatchOptions {
+            max_inflight: args.get("max-inflight", td.dispatch.max_inflight)?,
+            coalesce: !args.flag("no-coalesce"),
+        },
+    };
+    args.finish()?;
+    let mut server = TcpServer::bind(session.clone(), listen, opts)?;
+    eprintln!(
+        "[qappa] serving JSON-lines over TCP on {} (max {} connections, {} in flight, \
+         coalescing {}); EOF on stdin drains and exits — docs/SERVE.md",
+        server.local_addr(),
+        opts.max_connections,
+        opts.dispatch.max_inflight,
+        if opts.dispatch.coalesce { "on" } else { "off" }
+    );
+    // Park until the operator (or spawning harness) closes stdin.
+    let _ = std::io::copy(&mut std::io::stdin().lock(), &mut std::io::sink());
+    server.shutdown();
+    let st = server.stats();
+    eprintln!(
+        "[qappa] served {} connections ({} shed), {} requests ({} ok, {} errors, \
+         {} shed, {} coalesced, {} cancelled); models trained: {} (cache hits: {})",
+        st.connections,
+        st.shed_connections,
+        st.dispatch.requests,
+        st.dispatch.ok,
+        st.dispatch.errors,
+        st.dispatch.shed,
+        st.dispatch.coalesced,
+        st.dispatch.cancelled,
+        session.store().misses(),
+        session.store().hits()
+    );
+    Ok(())
+}
+
+/// `qappa loadgen`: N lockstep connections x M requests against a serve
+/// endpoint; stdout is exactly one JSON report line (everything else goes
+/// to stderr), and a run with request errors exits nonzero.
+fn cmd_loadgen(args: &Args) -> Result<(), QappaError> {
+    let ld = LoadgenOptions::default();
+    let opts = LoadgenOptions {
+        connections: args.get("connections", ld.connections)?,
+        requests: args.get("requests", ld.requests)?,
+        mix: RequestMix::parse(args.opt("mix").unwrap_or("explore"))?,
+        warmup: !args.flag("cold"),
+        connect_timeout_ms: args.get("connect-timeout-ms", ld.connect_timeout_ms)?,
+    };
+    let report = match args.opt("addr").map(str::to_string) {
+        Some(addr) => {
+            args.finish()?;
+            run_loadgen(&addr, &opts)?
+        }
+        None => {
+            // No --addr: spin an in-process server on an ephemeral port so
+            // `qappa loadgen` works standalone (session flags apply).
+            let session = Arc::new(builder_from(args)?.store(process_store()).build());
+            args.finish()?;
+            let mut server =
+                TcpServer::bind(session, "127.0.0.1:0", TransportOptions::default())?;
+            let report = run_loadgen(&server.local_addr().to_string(), &opts)?;
+            server.shutdown();
+            report
+        }
+    };
+    println!("{}", report.to_json());
+    eprintln!(
+        "[qappa] loadgen: {} connections x {} requests ({}), {:.1} req/s, \
+         p50 {:.2} ms, p99 {:.2} ms",
+        report.connections,
+        opts.requests,
+        opts.mix.label(),
+        report.throughput_per_s,
+        report.p50_ms,
+        report.p99_ms
+    );
+    if report.errors > 0 {
+        return Err(QappaError::Protocol(format!(
+            "loadgen: {} of {} requests failed",
+            report.errors, report.requests
+        )));
+    }
     Ok(())
 }

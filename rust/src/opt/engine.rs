@@ -22,6 +22,8 @@
 //! triple reproduces its frontier bit-for-bit.
 
 use std::collections::HashMap;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
 
 use crate::api::error::QappaError;
 use crate::config::AcceleratorConfig;
@@ -38,6 +40,29 @@ use crate::opt::objective::{Constraints, Objective};
 use crate::synth::oracle::{EnergyParams, Ppa};
 use crate::util::pool::{parallel_map, workers_for};
 use crate::util::prng::Rng;
+
+/// A cooperative cancellation handle for a guided-search run.  Cloning
+/// shares the flag; any holder may [`CancelToken::cancel`], and the engine
+/// observes it between evaluation batches (via [`Evaluator::remaining`],
+/// the loop condition every strategy polls), so a cancelled run stops at
+/// the next batch boundary without poisoning shared state.  The network
+/// server fires this when a client drops mid-optimize.
+#[derive(Debug, Clone, Default)]
+pub struct CancelToken(Arc<AtomicBool>);
+
+impl CancelToken {
+    pub fn new() -> CancelToken {
+        CancelToken::default()
+    }
+
+    pub fn cancel(&self) {
+        self.0.store(true, Ordering::Relaxed);
+    }
+
+    pub fn is_cancelled(&self) -> bool {
+        self.0.load(Ordering::Relaxed)
+    }
+}
 
 /// Which search strategy drives a run.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -189,6 +214,9 @@ pub struct Evaluator<'a> {
     best: [f64; 2],
     /// Per-point legacy evaluation (the pre-SoA oracle).
     legacy: bool,
+    /// Cooperative cancellation: when fired, `remaining()` reports 0 and
+    /// every strategy's budget loop exits at its next batch boundary.
+    cancel: CancelToken,
     /// Run-wide memo state: synthesis derivations and layer costs cached
     /// across batches and generations.
     ctx: EvalContext,
@@ -216,6 +244,7 @@ impl<'a> Evaluator<'a> {
             max_all: [f64::NEG_INFINITY; 2],
             best: [f64::INFINITY; 2],
             legacy: legacy_eval_env(),
+            cancel: CancelToken::new(),
             ctx: EvalContext::new(),
         }
     }
@@ -227,12 +256,21 @@ impl<'a> Evaluator<'a> {
         self
     }
 
+    /// Attach a cancellation handle (shared with whoever may fire it).
+    pub fn with_cancel(mut self, cancel: &CancelToken) -> Evaluator<'a> {
+        self.cancel = cancel.clone();
+        self
+    }
+
     /// Snapshot the evaluator's cumulative memo counters.
     pub fn memo_stats(&self) -> MemoStats {
         self.ctx.stats()
     }
 
     pub fn remaining(&self) -> usize {
+        if self.cancel.is_cancelled() {
+            return 0;
+        }
         self.budget - self.evaluated.min(self.budget)
     }
 
@@ -787,12 +825,28 @@ pub fn run_optimize(
     opts: &OptOptions,
     workers: usize,
 ) -> Result<OptResult, QappaError> {
+    run_optimize_cancellable(backend, model, problem, opts, workers, &CancelToken::new())
+}
+
+/// [`run_optimize`] with a cooperative [`CancelToken`]: when the token
+/// fires the strategies exit at their next batch boundary and the partial
+/// archive is lifted into an ordinary (smaller) result — the caller decides
+/// whether a cancelled partial answer is an error.
+pub fn run_optimize_cancellable(
+    backend: &dyn Backend,
+    model: &PpaModel,
+    problem: &OptProblem,
+    opts: &OptOptions,
+    workers: usize,
+    cancel: &CancelToken,
+) -> Result<OptResult, QappaError> {
     if opts.budget == 0 {
         return Err(QappaError::Config("optimize: budget must be >= 1".into()));
     }
     problem.constraints.validate()?;
     let mut ev = Evaluator::new(backend, model, problem, workers, opts.budget)
-        .legacy(opts.legacy_eval || legacy_eval_env());
+        .legacy(opts.legacy_eval || legacy_eval_env())
+        .with_cancel(cancel);
     let mut rng = Rng::new(opts.seed);
     let strategy: Box<dyn Strategy> = match opts.strategy {
         StrategyKind::Nsga2 => Box::new(Nsga2 { pop: opts.pop }),
@@ -885,6 +939,40 @@ mod tests {
             constraints,
         };
         run_optimize(backend, model, &problem, oopts, opts.workers).unwrap()
+    }
+
+    #[test]
+    fn cancelled_token_stops_a_run_before_any_evaluation() {
+        let (backend, store, opts) = setup();
+        let model = store
+            .get_or_train_quant(&backend, &opts, &ALL_PE_TYPES.to_vec())
+            .unwrap();
+        let ls = layers();
+        let search =
+            SearchSpace::new(&opts.space, ALL_PE_TYPES.to_vec(), &ls, true).unwrap();
+        let problem = OptProblem {
+            search,
+            objectives: [Objective::PerfPerArea, Objective::Energy],
+            constraints: Constraints::default(),
+        };
+        let oopts = OptOptions {
+            strategy: StrategyKind::Nsga2,
+            budget: 120,
+            pop: 24,
+            seed: 5,
+            ..Default::default()
+        };
+        let cancel = CancelToken::new();
+        cancel.cancel();
+        // Already-fired token: the run returns an ordinary (empty) result
+        // without spending a single evaluation — the batch planner sees
+        // remaining() == 0 and skips everything.
+        let r = run_optimize_cancellable(
+            &backend, &model, &problem, &oopts, opts.workers, &cancel,
+        )
+        .unwrap();
+        assert_eq!(r.evaluated, 0);
+        assert!(r.frontier.is_empty());
     }
 
     #[test]

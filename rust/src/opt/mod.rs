@@ -32,8 +32,9 @@ pub mod genome;
 pub mod objective;
 
 pub use engine::{
-    run_optimize, EvalRecord, Evaluator, FrontierPoint, GenStat, HillClimb, Nsga2,
-    OptOptions, OptProblem, OptResult, RandomSearch, Strategy, StrategyKind,
+    run_optimize, run_optimize_cancellable, CancelToken, EvalRecord, Evaluator,
+    FrontierPoint, GenStat, HillClimb, Nsga2, OptOptions, OptProblem, OptResult,
+    RandomSearch, Strategy, StrategyKind,
 };
 pub use genome::{Genome, SearchSpace};
 pub use objective::{resolve_objectives, Constraints, Objective, ALL_OBJECTIVES};

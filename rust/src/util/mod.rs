@@ -6,5 +6,6 @@ pub mod cli;
 pub mod json;
 pub mod pool;
 pub mod prng;
+pub mod queue;
 pub mod stats;
 pub mod table;

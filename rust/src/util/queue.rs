@@ -1,0 +1,185 @@
+//! A blocking bounded MPMC queue with explicit close semantics — the
+//! dispatch substrate for the serve loops (std has no bounded channel whose
+//! *send* side can be woken by the receive side).
+//!
+//! `std::sync::mpsc::sync_channel` blocks a full `send` until a receiver
+//! makes room, but if every receiver has died the sender hangs forever;
+//! the old serve loop worked around that with a 1 ms `try_send`/sleep poll
+//! (busy-waiting one core whenever dispatch lagged the reader).  This queue
+//! replaces the poll with condvars plus a `close()` that either side may
+//! call: a closed queue rejects new pushes immediately (waking any blocked
+//! producer) while letting consumers drain what was already queued.
+//!
+//! Semantics:
+//!
+//! * [`BoundedQueue::push`] blocks while the queue is full; returns
+//!   `Err(item)` once the queue is closed (the item is handed back so the
+//!   producer can decide what to do with it).
+//! * [`BoundedQueue::pop`] blocks while the queue is empty; returns `None`
+//!   only when the queue is closed **and** drained — close is a shutdown
+//!   signal, not a data-loss event.
+//! * [`BoundedQueue::close`] is idempotent and wakes every waiter on both
+//!   sides.
+
+use std::collections::VecDeque;
+use std::sync::{Condvar, Mutex};
+
+struct Inner<T> {
+    items: VecDeque<T>,
+    closed: bool,
+}
+
+/// See the module docs.
+pub struct BoundedQueue<T> {
+    cap: usize,
+    inner: Mutex<Inner<T>>,
+    not_full: Condvar,
+    not_empty: Condvar,
+}
+
+impl<T> BoundedQueue<T> {
+    /// A queue holding at most `cap` items (`cap` is clamped to >= 1).
+    pub fn new(cap: usize) -> BoundedQueue<T> {
+        BoundedQueue {
+            cap: cap.max(1),
+            inner: Mutex::new(Inner { items: VecDeque::new(), closed: false }),
+            not_full: Condvar::new(),
+            not_empty: Condvar::new(),
+        }
+    }
+
+    /// Blocking enqueue.  Returns `Err(item)` if the queue is (or becomes,
+    /// while waiting for room) closed.
+    pub fn push(&self, item: T) -> Result<(), T> {
+        let mut inner = self.inner.lock().unwrap_or_else(|p| p.into_inner());
+        loop {
+            if inner.closed {
+                return Err(item);
+            }
+            if inner.items.len() < self.cap {
+                inner.items.push_back(item);
+                self.not_empty.notify_one();
+                return Ok(());
+            }
+            inner = self.not_full.wait(inner).unwrap_or_else(|p| p.into_inner());
+        }
+    }
+
+    /// Blocking dequeue.  Returns `None` only once the queue is closed and
+    /// every queued item has been drained.
+    pub fn pop(&self) -> Option<T> {
+        let mut inner = self.inner.lock().unwrap_or_else(|p| p.into_inner());
+        loop {
+            if let Some(item) = inner.items.pop_front() {
+                self.not_full.notify_one();
+                return Some(item);
+            }
+            if inner.closed {
+                return None;
+            }
+            inner = self.not_empty.wait(inner).unwrap_or_else(|p| p.into_inner());
+        }
+    }
+
+    /// Close the queue: pushes fail from now on, pops drain the remainder.
+    /// Wakes every blocked producer and consumer; idempotent.
+    pub fn close(&self) {
+        let mut inner = self.inner.lock().unwrap_or_else(|p| p.into_inner());
+        inner.closed = true;
+        self.not_full.notify_all();
+        self.not_empty.notify_all();
+    }
+
+    pub fn is_closed(&self) -> bool {
+        self.inner.lock().unwrap_or_else(|p| p.into_inner()).closed
+    }
+
+    pub fn len(&self) -> usize {
+        self.inner.lock().unwrap_or_else(|p| p.into_inner()).items.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::Arc;
+    use std::time::Duration;
+
+    #[test]
+    fn fifo_within_capacity() {
+        let q = BoundedQueue::new(4);
+        for i in 0..4 {
+            q.push(i).unwrap();
+        }
+        assert_eq!(q.len(), 4);
+        for i in 0..4 {
+            assert_eq!(q.pop(), Some(i));
+        }
+        assert!(q.is_empty());
+    }
+
+    #[test]
+    fn close_drains_then_ends() {
+        let q = BoundedQueue::new(8);
+        q.push(1).unwrap();
+        q.push(2).unwrap();
+        q.close();
+        assert_eq!(q.push(3), Err(3), "closed queue rejects pushes");
+        assert_eq!(q.pop(), Some(1), "close does not drop queued items");
+        assert_eq!(q.pop(), Some(2));
+        assert_eq!(q.pop(), None);
+    }
+
+    #[test]
+    fn close_wakes_a_blocked_producer() {
+        let q = Arc::new(BoundedQueue::new(1));
+        q.push(0u32).unwrap(); // full
+        let producer = {
+            let q = q.clone();
+            std::thread::spawn(move || q.push(1))
+        };
+        // Let the producer block on the full queue, then close from the
+        // consumer side: the push must return instead of hanging (this is
+        // the dead-worker abort path of the serve loop).
+        std::thread::sleep(Duration::from_millis(20));
+        q.close();
+        assert_eq!(producer.join().unwrap(), Err(1));
+    }
+
+    #[test]
+    fn close_wakes_a_blocked_consumer() {
+        let q: Arc<BoundedQueue<u32>> = Arc::new(BoundedQueue::new(1));
+        let consumer = {
+            let q = q.clone();
+            std::thread::spawn(move || q.pop())
+        };
+        std::thread::sleep(Duration::from_millis(20));
+        q.close();
+        assert_eq!(consumer.join().unwrap(), None);
+    }
+
+    #[test]
+    fn producer_consumer_under_pressure() {
+        let q = Arc::new(BoundedQueue::new(2));
+        let n = 500u32;
+        let producer = {
+            let q = q.clone();
+            std::thread::spawn(move || {
+                for i in 0..n {
+                    q.push(i).unwrap();
+                }
+                q.close();
+            })
+        };
+        let mut got = Vec::new();
+        while let Some(i) = q.pop() {
+            got.push(i);
+        }
+        producer.join().unwrap();
+        assert_eq!(got, (0..n).collect::<Vec<_>>());
+    }
+}

@@ -149,6 +149,49 @@ fn optimize_stdout_is_byte_identical_with_legacy_eval() {
 }
 
 #[test]
+fn loadgen_stdout_is_exactly_one_json_report_line() {
+    let Some(bin) = qappa_bin() else { return };
+    // Self-spawn mode: loadgen binds its own ephemeral TCP server, drives
+    // it, and must print exactly one machine-readable report line on
+    // stdout — every `[serve]`/`[qappa]` diagnostic belongs to stderr.
+    let out = Command::new(bin)
+        .args([
+            "loadgen",
+            "--backend",
+            "native",
+            "--space",
+            "tiny",
+            "--train",
+            "48",
+            "--connections",
+            "2",
+            "--requests",
+            "3",
+            "--mix",
+            "mixed",
+        ])
+        .output()
+        .expect("run qappa loadgen");
+    assert!(out.status.success(), "loadgen failed: {out:?}");
+    let stdout = String::from_utf8(out.stdout).expect("utf8 stdout");
+    let stderr = String::from_utf8(out.stderr).expect("utf8 stderr");
+    for marker in ["[serve]", "[store]", "[engine]", "[trace]", "[qappa]"] {
+        assert!(
+            !stdout.contains(marker),
+            "diagnostic marker {marker} leaked into stdout:\n{stdout}"
+        );
+    }
+    let lines: Vec<&str> = stdout.lines().collect();
+    assert_eq!(lines.len(), 1, "stdout must be exactly one report line:\n{stdout}");
+    let report = qappa::util::json::Json::parse(lines[0]).expect("report line must be JSON");
+    assert_eq!(report.get("requests").as_usize(), Some(6));
+    assert_eq!(report.get("errors").as_usize(), Some(0));
+    assert!(report.get("throughput_per_s").as_f64().unwrap_or(0.0) > 0.0);
+    // The transport's lifecycle diagnostics did land on stderr.
+    assert!(stderr.contains("[serve] listening"), "serve banner missing from stderr:\n{stderr}");
+}
+
+#[test]
 fn optimize_cli_renders_the_session_frontier_byte_for_byte() {
     let Some(bin) = qappa_bin() else { return };
     let out = Command::new(bin)

@@ -1,0 +1,262 @@
+//! Integration: the TCP transport (`qappa serve --listen`) end to end —
+//! concurrent clients correlated by id over one shared `ModelStore`
+//! (models train once per process), malformed and oversized frames
+//! answered without killing the stream, client disconnect cancelling an
+//! in-flight `optimize`, admission shedding at both the connection and
+//! the in-flight caps, and wire purity (sockets carry only JSON response
+//! lines).
+
+use std::io::{BufRead, BufReader, Read, Write};
+use std::net::TcpStream;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use qappa::api::{
+    BackendChoice, DispatchOptions, Qappa, ServeResponse, TcpServer, TransportOptions,
+};
+use qappa::coordinator::{DesignSpace, DseOptions};
+use qappa::model::CvConfig;
+use qappa::util::json::Json;
+
+fn tiny_session() -> Qappa {
+    Qappa::builder()
+        .backend(BackendChoice::Native)
+        .options(DseOptions {
+            space: DesignSpace::tiny(),
+            train_per_type: 64,
+            cv: CvConfig { k: 3, degrees: vec![1, 2], lambdas: vec![1e-3, 1e-2], seed: 1 },
+            seed: 7,
+            workers: 4,
+            sigma: 0.02,
+            chunk: 32,
+            topk: 8,
+        })
+        .build()
+}
+
+fn bind(session: Arc<Qappa>, opts: TransportOptions) -> TcpServer {
+    TcpServer::bind(session, "127.0.0.1:0", opts).expect("bind ephemeral port")
+}
+
+/// Connect, returning a (writer, buffered reader) pair over one socket.
+fn client(server: &TcpServer) -> (TcpStream, BufReader<TcpStream>) {
+    let stream = TcpStream::connect(server.local_addr()).expect("connect");
+    let reader = BufReader::new(stream.try_clone().expect("clone"));
+    (stream, reader)
+}
+
+/// Read one line and parse it as a typed response — every byte a server
+/// socket carries must survive this (the wire-purity contract).
+fn read_response(reader: &mut BufReader<TcpStream>) -> ServeResponse {
+    let mut line = String::new();
+    let n = reader.read_line(&mut line).expect("read response line");
+    assert!(n > 0, "server closed the connection unexpectedly");
+    ServeResponse::from_json(&Json::parse(&line).expect("socket line must be JSON"))
+        .expect("socket line must be a typed response")
+}
+
+#[test]
+fn concurrent_clients_correlate_by_id_and_train_once() {
+    let session = Arc::new(tiny_session());
+    let mut server = bind(session.clone(), TransportOptions::default());
+    let addr = server.local_addr();
+
+    let handles: Vec<_> = (0..3u64)
+        .map(|c| {
+            std::thread::spawn(move || {
+                let stream = TcpStream::connect(addr).expect("connect");
+                let mut writer = stream.try_clone().expect("clone");
+                let mut reader = BufReader::new(stream);
+                for k in 0..4u64 {
+                    let id = c * 100 + k;
+                    let req = if k % 2 == 0 {
+                        format!(
+                            "{{\"id\":{id},\"op\":\"explore\",\
+                             \"params\":{{\"workloads\":[\"vgg16\"]}}}}"
+                        )
+                    } else {
+                        format!("{{\"id\":{id},\"op\":\"workloads\"}}")
+                    };
+                    writeln!(writer, "{req}").expect("write");
+                    writer.flush().expect("flush");
+                    let resp = read_response(&mut reader);
+                    assert_eq!(resp.id, Some(id), "response echoes this client's id");
+                    assert!(resp.result.is_ok(), "request {id} failed");
+                }
+            })
+        })
+        .collect();
+    for h in handles {
+        h.join().expect("client thread");
+    }
+
+    server.shutdown();
+    let st = server.stats();
+    assert_eq!(st.connections, 3);
+    assert_eq!(st.active, 0, "drain leaves no live connections");
+    assert_eq!((st.dispatch.requests, st.dispatch.ok), (12, 12));
+    // Three clients, six explores — one training pass (4 models) for the
+    // whole process.
+    assert_eq!(session.store().misses(), 4, "models train once per process");
+    // Even with maximal coalescing the second explore round dispatches
+    // once more: 4 warm lookups at minimum.
+    assert!(session.store().hits() >= 4, "later explores hit the shared store");
+}
+
+#[test]
+fn malformed_and_oversized_frames_answer_errors_and_the_stream_survives() {
+    let session = Arc::new(Qappa::builder().backend(BackendChoice::Native).build());
+    let mut server = bind(
+        session,
+        TransportOptions { max_line_bytes: 256, ..TransportOptions::default() },
+    );
+    let (mut writer, mut reader) = client(&server);
+
+    // Malformed JSON: a protocol error with a null id.
+    writeln!(writer, "this is not json").unwrap();
+    writer.flush().unwrap();
+    let resp = read_response(&mut reader);
+    assert_eq!(resp.id, None);
+    assert_eq!(resp.result.unwrap_err().kind, "protocol");
+
+    // Oversized frame: consumed, reported with the byte count, stream alive.
+    let huge = "x".repeat(400);
+    writeln!(writer, "{huge}").unwrap();
+    writer.flush().unwrap();
+    let resp = read_response(&mut reader);
+    assert_eq!(resp.id, None);
+    let e = resp.result.unwrap_err();
+    assert_eq!(e.kind, "protocol");
+    assert!(e.message.contains("oversized"), "{}", e.message);
+    assert!(e.message.contains("max 256"), "{}", e.message);
+
+    // The same connection still answers real requests afterwards.
+    writeln!(writer, "{{\"id\":7,\"op\":\"workloads\"}}").unwrap();
+    writer.flush().unwrap();
+    let resp = read_response(&mut reader);
+    assert_eq!(resp.id, Some(7));
+    assert!(resp.result.is_ok());
+
+    // Wire purity: exactly one response line per request, nothing else,
+    // then EOF once the server drains.
+    server.shutdown();
+    let mut rest = String::new();
+    reader.read_to_string(&mut rest).unwrap();
+    assert!(rest.is_empty(), "no extra bytes after the responses: {rest:?}");
+    let st = server.stats();
+    assert_eq!(st.dispatch.requests, 3);
+    assert_eq!((st.dispatch.ok, st.dispatch.errors), (1, 2));
+}
+
+#[test]
+fn client_disconnect_cancels_an_inflight_optimize() {
+    let session = Arc::new(tiny_session());
+    let mut server = bind(session.clone(), TransportOptions::default());
+
+    // Warm the store first so the optimize below is in its search loop
+    // (the cancellable region) rather than still training.
+    {
+        let (mut writer, mut reader) = client(&server);
+        writeln!(writer, "{{\"id\":1,\"op\":\"explore\",\"params\":{{\"workloads\":[\"vgg16\"]}}}}")
+            .unwrap();
+        writer.flush().unwrap();
+        assert!(read_response(&mut reader).result.is_ok());
+    }
+
+    // A budget far past what the test should ever evaluate: only
+    // cancellation can end this run promptly.
+    let (mut writer, reader) = client(&server);
+    writeln!(
+        writer,
+        "{{\"id\":2,\"op\":\"optimize\",\"params\":{{\"workload\":\"mobilenetv1\",\
+         \"budget\":200000,\"pop\":32}}}}"
+    )
+    .unwrap();
+    writer.flush().unwrap();
+    std::thread::sleep(Duration::from_millis(300)); // let the run start
+    drop(writer);
+    drop(reader); // full disconnect: the connection reader sees EOF
+
+    let deadline = Instant::now() + Duration::from_secs(120);
+    while server.stats().dispatch.cancelled < 1 {
+        assert!(
+            Instant::now() < deadline,
+            "optimize was not cancelled after disconnect: {:?}",
+            server.stats().dispatch
+        );
+        std::thread::sleep(Duration::from_millis(50));
+    }
+
+    // The server survives and keeps answering fresh connections.
+    let (mut writer, mut reader) = client(&server);
+    writeln!(writer, "{{\"id\":3,\"op\":\"workloads\"}}").unwrap();
+    writer.flush().unwrap();
+    let resp = read_response(&mut reader);
+    assert_eq!(resp.id, Some(3));
+    assert!(resp.result.is_ok());
+    server.shutdown();
+}
+
+#[test]
+fn connection_cap_sheds_excess_clients_with_a_structured_error() {
+    let session = Arc::new(Qappa::builder().backend(BackendChoice::Native).build());
+    let mut server = bind(
+        session,
+        TransportOptions { max_connections: 1, ..TransportOptions::default() },
+    );
+
+    // First client occupies the only slot (a completed round trip proves
+    // its registration happened before the second connect).
+    let (mut writer, mut reader) = client(&server);
+    writeln!(writer, "{{\"id\":1,\"op\":\"workloads\"}}").unwrap();
+    writer.flush().unwrap();
+    assert!(read_response(&mut reader).result.is_ok());
+
+    // Second client is shed with one protocol error line, then EOF.
+    let (_w2, mut r2) = client(&server);
+    let resp = read_response(&mut r2);
+    assert_eq!(resp.id, None);
+    let e = resp.result.unwrap_err();
+    assert_eq!(e.kind, "protocol");
+    assert!(e.message.contains("connection capacity"), "{}", e.message);
+    let mut rest = String::new();
+    r2.read_to_string(&mut rest).unwrap();
+    assert!(rest.is_empty(), "shed socket closes after the error line");
+
+    // The occupant is unaffected.
+    writeln!(writer, "{{\"id\":2,\"op\":\"session\"}}").unwrap();
+    writer.flush().unwrap();
+    assert!(read_response(&mut reader).result.is_ok());
+
+    server.shutdown();
+    let st = server.stats();
+    assert_eq!(st.connections, 1, "sheds are not counted as served connections");
+    assert_eq!(st.shed_connections, 1);
+}
+
+#[test]
+fn inflight_cap_sheds_requests_but_keeps_the_connection() {
+    let session = Arc::new(Qappa::builder().backend(BackendChoice::Native).build());
+    let opts = TransportOptions {
+        dispatch: DispatchOptions { max_inflight: 0, coalesce: true },
+        ..TransportOptions::default()
+    };
+    let mut server = bind(session, opts);
+    let (mut writer, mut reader) = client(&server);
+
+    for id in 1..=3u64 {
+        writeln!(writer, "{{\"id\":{id},\"op\":\"workloads\"}}").unwrap();
+        writer.flush().unwrap();
+        let resp = read_response(&mut reader);
+        assert_eq!(resp.id, Some(id), "shed responses still correlate by id");
+        let e = resp.result.unwrap_err();
+        assert_eq!(e.kind, "protocol");
+        assert!(e.message.contains("at capacity"), "{}", e.message);
+    }
+
+    server.shutdown();
+    let st = server.stats();
+    assert_eq!(st.dispatch.shed, 3);
+    assert_eq!(st.dispatch.ok, 0);
+    assert_eq!(st.connections, 1, "request shedding never drops the connection");
+}

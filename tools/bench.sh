@@ -1,16 +1,18 @@
 #!/usr/bin/env bash
 # Measurement mode: run the perf benches and emit machine-readable
 # BENCH_*.json documents (sweep throughput + peak-resident counters,
-# optimizer evals/s + hypervolume-vs-budget + memo hit rates) at the repo
-# root.  CI uploads them as artifacts, so the repo accumulates a perf
-# trajectory per commit.
+# optimizer evals/s + hypervolume-vs-budget + memo hit rates, concurrent
+# serve latency percentiles + loadgen throughput) at the repo root.  CI
+# uploads them as artifacts, so the repo accumulates a perf trajectory per
+# commit.
 #
-# Usage: tools/bench.sh [--sweep-only|--opt-only|--check|--bless]
+# Usage: tools/bench.sh [--sweep-only|--opt-only|--serve-only|--check|--bless]
 #
-#   --check   run both benches, then gate the fresh throughputs against the
-#             checked-in tools/bench_baseline.json (tools/bench_check.py);
-#             exits nonzero on a perf regression past the tolerance band.
-#   --bless   run both benches, then rewrite the baseline from the fresh
+#   --check   run all benches, then gate the fresh throughputs and serve
+#             latency metrics against the checked-in
+#             tools/bench_baseline.json (tools/bench_check.py); exits
+#             nonzero on a perf regression past the tolerance band.
+#   --bless   run all benches, then rewrite the baseline from the fresh
 #             results — do this on quiet, representative hardware when a
 #             perf change is intentional.
 set -euo pipefail
@@ -34,21 +36,23 @@ bench_check() {
         echo "bench.sh: python3 unavailable; skipping baseline $mode" >&2
         return 0
     fi
-    python3 tools/bench_check.py "$mode" BENCH_sweep.json BENCH_opt.json
+    python3 tools/bench_check.py "$mode" BENCH_sweep.json BENCH_opt.json BENCH_serve.json
 }
 
 mode="${1:-all}"
 case "$mode" in
     --sweep-only) run_bench sweep_throughput BENCH_sweep.json ;;
     --opt-only)   run_bench opt_throughput BENCH_opt.json ;;
+    --serve-only) run_bench serve_throughput BENCH_serve.json ;;
     all|--check|--bless)
         run_bench sweep_throughput BENCH_sweep.json
         run_bench opt_throughput BENCH_opt.json
+        run_bench serve_throughput BENCH_serve.json
         if [ "$mode" = --check ]; then bench_check --check; fi
         if [ "$mode" = --bless ]; then bench_check --bless; fi
         ;;
     *)
-        echo "bench.sh: unknown mode '$mode' (expected --sweep-only|--opt-only|--check|--bless)" >&2
+        echo "bench.sh: unknown mode '$mode' (expected --sweep-only|--opt-only|--serve-only|--check|--bless)" >&2
         exit 2
         ;;
 esac

@@ -3,16 +3,24 @@
 
 `tools/bench.sh` emits BENCH_*.json documents ({"results": [...],
 "metrics": {...}}, see rust/src/util/bench.rs).  This script compares the
-`throughput_per_s` of every named bench result against the checked-in
-baseline (tools/bench_baseline.json) and exits nonzero when any bench
-regresses past the tolerance band.
+`throughput_per_s` of every named bench result AND every gateable scalar
+metric against the checked-in baseline (tools/bench_baseline.json) and
+exits nonzero when anything regresses past the tolerance band.
 
-    bench_check.py --check [opts] BENCH_sweep.json BENCH_opt.json
-    bench_check.py --bless [opts] BENCH_sweep.json BENCH_opt.json
+    bench_check.py --check [opts] BENCH_sweep.json BENCH_opt.json BENCH_serve.json
+    bench_check.py --bless [opts] BENCH_sweep.json BENCH_opt.json BENCH_serve.json
+
+Metric direction is inferred from the name suffix:
+  * `*_per_s`  -> higher is better (like result throughputs); regression
+    when fresh < (1 - tolerance) * baseline
+  * `*_ms`     -> lower is better (latency percentiles such as
+    `serve/p99_ms`); regression when fresh > (1 + tolerance) * baseline
+  * anything else (ratios, hypervolumes, hit rates) is informational:
+    recorded when blessing, never gated.
 
 `--check` semantics:
-  * fresh < (1 - tolerance) * baseline   -> REGRESSION (exit 1)
-  * fresh > (1 + tolerance) * baseline   -> IMPROVED (pass; re-bless to
+  * regression past the tolerance band   -> REGRESSION (exit 1)
+  * better than baseline past the band   -> IMPROVED (pass; re-bless to
     ratchet the baseline forward)
   * bench missing from the baseline      -> NEW (pass with a notice; the
     bootstrap baseline is empty until someone blesses on stable hardware)
@@ -52,6 +60,30 @@ def load_results(paths):
     return out
 
 
+def metric_direction(name):
+    """'up' (higher is better), 'down' (lower is better), or None (info)."""
+    if name.endswith("_per_s"):
+        return "up"
+    if name.endswith("_ms"):
+        return "down"
+    return None
+
+
+def load_metrics(paths):
+    """metric name -> value, merged across bench artifacts."""
+    out = {}
+    for path in paths:
+        with open(path) as f:
+            doc = json.load(f)
+        metrics = doc.get("metrics", {})
+        if not isinstance(metrics, dict):
+            continue
+        for name, value in metrics.items():
+            if isinstance(value, (int, float)):
+                out[name] = {"value": float(value), "source": os.path.basename(path)}
+    return out
+
+
 def load_baseline(path):
     if not os.path.exists(path):
         return {"tolerance": DEFAULT_TOLERANCE, "entries": {}}
@@ -59,30 +91,39 @@ def load_baseline(path):
         doc = json.load(f)
     doc.setdefault("tolerance", DEFAULT_TOLERANCE)
     doc.setdefault("entries", {})
+    doc.setdefault("metrics", {})
     return doc
 
 
 def bless(args):
     fresh = load_results(args.files)
+    metrics = load_metrics(args.files)
     doc = {
-        "comment": "Blessed bench throughputs (tools/bench.sh --bless). "
-        "The --check gate fails when a bench drops more than `tolerance` "
-        "below its entry here.",
+        "comment": "Blessed bench numbers (tools/bench.sh --bless). The "
+        "--check gate fails when a result throughput or a *_per_s metric "
+        "drops more than `tolerance` below its entry here, or when a *_ms "
+        "latency metric rises more than `tolerance` above it.",
         "tolerance": args.tolerance,
         "entries": dict(sorted(fresh.items())),
+        "metrics": dict(sorted(metrics.items())),
     }
     with open(args.baseline, "w") as f:
         json.dump(doc, f, indent=2)
         f.write("\n")
-    print(f"bench_check: blessed {len(fresh)} benches -> {args.baseline}")
+    print(
+        f"bench_check: blessed {len(fresh)} benches and {len(metrics)} "
+        f"metrics -> {args.baseline}"
+    )
     return 0
 
 
 def check(args):
     fresh = load_results(args.files)
+    fresh_metrics = load_metrics(args.files)
     baseline = load_baseline(args.baseline)
     tol = args.tolerance if args.tolerance is not None else baseline["tolerance"]
     entries = baseline["entries"]
+    base_metrics = baseline["metrics"]
 
     rows = []
     failures = 0
@@ -100,6 +141,32 @@ def check(args):
             verdict = "REGRESSION"
             failures += 1
         elif ratio > 1.0 + tol:
+            verdict = "IMPROVED"
+        else:
+            verdict = "ok"
+        rows.append((name, base, now, verdict))
+
+    for name in sorted(set(fresh_metrics) | set(base_metrics)):
+        direction = metric_direction(name)
+        if direction is None:
+            if name in fresh_metrics:
+                rows.append((name, None, fresh_metrics[name]["value"], "info"))
+            continue
+        if name not in base_metrics:
+            rows.append((name, None, fresh_metrics[name]["value"], "NEW"))
+            continue
+        if name not in fresh_metrics:
+            rows.append((name, base_metrics[name]["value"], None, "GONE"))
+            continue
+        base = base_metrics[name]["value"]
+        now = fresh_metrics[name]["value"]
+        ratio = now / base if base > 0 else float("inf")
+        worse = ratio < 1.0 - tol if direction == "up" else ratio > 1.0 + tol
+        better = ratio > 1.0 + tol if direction == "up" else ratio < 1.0 - tol
+        if worse:
+            verdict = "REGRESSION"
+            failures += 1
+        elif better:
             verdict = "IMPROVED"
         else:
             verdict = "ok"
