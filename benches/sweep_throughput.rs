@@ -121,6 +121,46 @@ fn main() {
         );
     }
 
+    // --- LLM decode sweep: transformer layers through the same engine ---
+    // Decode-shaped opt-1.3b (matmul m=1 + attention vs a 2048-token KV
+    // cache) exercises the bandwidth-bound corner of the dataflow model;
+    // points/s here is the planning rate for LLM accelerator sweeps.
+    let llm = vec![NamedWorkload::new(
+        "opt-1.3b/decode",
+        qappa::workloads::shape_for_phase(
+            &qappa::workloads::opt_1p3b(),
+            qappa::workloads::Phase::Decode,
+            2048,
+        ),
+    )];
+    println!(
+        "\n=== llm decode sweep: {} configs x opt-1.3b decode (ctx 2048) ===",
+        opts.space.len()
+    );
+    {
+        let mut o = opts.clone();
+        o.chunk = 1024;
+        let engine = SweepEngine::new(backend.get(), &o);
+        let r = Bench::new("sweep/llm_sweep_points_per_s")
+            .warmup(1)
+            .samples(3)
+            .run_with_units(o.space.len() as f64, "points", || {
+                engine.sweep_type(&model, PeType::Int16, &llm).expect("llm sweep");
+            });
+        let m = engine.memo_stats();
+        let lookups = m.cost_hits + m.cost_misses;
+        let hit_rate =
+            if lookups > 0 { m.cost_hits as f64 / lookups as f64 } else { 0.0 };
+        r.print();
+        report.push(&r);
+        report.metric("memo_hit_rate/llm-decode", hit_rate);
+        println!(
+            "  layer-cost memo {}/{} hits ({:.0}%)",
+            m.cost_hits, lookups,
+            100.0 * hit_rate
+        );
+    }
+
     // Measurement mode: QAPPA_BENCH_JSON=path emits the machine-readable
     // trajectory (tools/bench.sh -> BENCH_sweep.json).
     if let Some(path) = report.write_if_requested().expect("write bench json") {

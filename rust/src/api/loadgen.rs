@@ -63,10 +63,10 @@ impl RequestMix {
             })
         };
         let analyze = || {
-            RequestBody::Analyze(AnalyzeRequest {
-                workload: "mobilenetv2".into(),
-                config: AcceleratorConfig::default_with(PeType::Int16),
-            })
+            RequestBody::Analyze(AnalyzeRequest::new(
+                "mobilenetv2",
+                AcceleratorConfig::default_with(PeType::Int16),
+            ))
         };
         match self {
             RequestMix::Explore => explore(),

@@ -47,7 +47,8 @@ pub use crate::opt::objective::Constraints;
 pub use types::{
     config_from_json, AnalyzeRequest, AnalyzeResponse, CvPoint, ErrorBody, ExploreEntry,
     ExploreRequest, ExploreResponse, ExploreSummary, FitModelReport, FitRequest, FitResponse,
-    LayerCost, OptPoint, OptimizeRequest, OptimizeResponse, PrecisionRequest, RequestBody,
+    LayerCost, OptPoint, OptimizeRequest, OptimizeResponse, PhaseSummary, PrecisionRequest,
+    RequestBody,
     ResponseBody, ServeRequest, ServeResponse, SessionInfo, SynthRequest, SynthResponse,
     WorkloadInfo, WorkloadsRequest, WorkloadsResponse, OPS,
 };

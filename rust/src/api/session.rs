@@ -36,8 +36,8 @@ use crate::api::error::QappaError;
 use crate::api::types::{
     AnalyzeRequest, AnalyzeResponse, ExploreRequest, ExploreResponse, FitRequest, FitResponse,
     CvPoint, FitModelReport, LayerCost, OptPoint, OptimizeRequest, OptimizeResponse,
-    PrecisionRequest, SessionInfo, SynthRequest, SynthResponse, WorkloadInfo, WorkloadsRequest,
-    WorkloadsResponse,
+    PhaseSummary, PrecisionRequest, SessionInfo, SynthRequest, SynthResponse, WorkloadInfo,
+    WorkloadsRequest, WorkloadsResponse,
 };
 use crate::config::{PeType, ALL_PE_TYPES, NUM_FEATURES, QUANT_NUM_FEATURES};
 use crate::coordinator::explorer::{
@@ -56,6 +56,42 @@ use crate::opt::{
 };
 use crate::runtime::{ArtifactRuntime, Engine, XlaBackend};
 use crate::workloads;
+use crate::workloads::{has_transformer_ops, shape_for_phase, Phase, DEFAULT_CTX};
+
+/// Resolve a request's `phase`/`ctx` pair against a loaded workload.
+///
+/// Either flag on a pure-CNN workload is a workload error (phase shaping
+/// is meaningless there, and silently ignoring it would misreport costs).
+/// `ctx` without `phase` shapes prefill at that context; `phase` without
+/// `ctx` uses [`DEFAULT_CTX`].  Returns the layers shaped for display
+/// (`both` displays prefill — the evaluable half; the decode half travels
+/// in the phase summary) plus the parsed pair when either flag was set.
+fn resolve_phase(
+    what: &str,
+    name: &str,
+    layers: Vec<Layer>,
+    phase: &Option<String>,
+    ctx: Option<u32>,
+) -> Result<(Vec<Layer>, Option<(Phase, u32)>), QappaError> {
+    if phase.is_none() && ctx.is_none() {
+        return Ok((layers, None));
+    }
+    if !has_transformer_ops(&layers) {
+        return Err(QappaError::Workload(format!(
+            "{what}: \"phase\"/\"ctx\" apply to transformer workloads only \
+             ('{name}' has no matmul/attention layers)"
+        )));
+    }
+    let phase = match phase {
+        Some(p) => Phase::parse(p)?,
+        None => Phase::Prefill,
+    };
+    let ctx = ctx.unwrap_or(DEFAULT_CTX);
+    if ctx == 0 {
+        return Err(QappaError::Workload(format!("{what}: \"ctx\" must be > 0")));
+    }
+    Ok((shape_for_phase(&layers, phase, ctx), Some((phase, ctx))))
+}
 
 /// Which regression backend a session drives.
 #[derive(Debug, Clone, PartialEq, Eq, Default)]
@@ -421,6 +457,16 @@ impl Qappa {
             return Err(QappaError::Config("optimize: budget must be >= 1".into()));
         }
         let (name, layers) = workloads::load(&req.workload)?;
+        // Phase shaping: the optimizer needs one evaluable shape, so
+        // `both` is rejected — pick the serving regime to optimize for.
+        let (layers, phased) = resolve_phase("optimize", &name, layers, &req.phase, req.ctx)?;
+        if matches!(phased, Some((Phase::Both, _))) {
+            return Err(QappaError::Config(
+                "optimize: phase must be 'prefill' or 'decode' (a composed 'both' \
+                 workload has no single evaluable shape)"
+                    .into(),
+            ));
+        }
 
         // Precision palette: requested grid or the four presets, pruned by
         // the min-bits accuracy floor.
@@ -502,6 +548,7 @@ impl Qappa {
     /// (analytical models only; no training).
     pub fn analyze(&self, req: &AnalyzeRequest) -> Result<AnalyzeResponse, QappaError> {
         let (name, layers) = workloads::load(&req.workload)?;
+        let (layers, phased) = resolve_phase("analyze", &name, layers, &req.phase, req.ctx)?;
         req.config.validate()?;
         let cfg = req.config;
         let ep = crate::synth::oracle::energy_params(&cfg);
@@ -546,9 +593,52 @@ impl Qappa {
                 other_mj: e.glb_mj + e.noc_mj + e.leakage_mj,
                 total_mj: e.total_mj(),
                 precision: l.quant.map(|q| PeType::from_spec(q).label()),
+                kv_bytes: (traffic.dram_kv_bytes > 0).then_some(traffic.dram_kv_bytes),
             });
         }
-        Ok(AnalyzeResponse { workload: name, config: cfg, ppa, layers: rows, latency_s, energy_mj })
+        // Per-phase summary: evaluate the prefill and decode shapes of the
+        // *original* workload and compose per the requested phase.  Uses
+        // the same override-aware network evaluator as the sweep path, so
+        // the composition laws (`both` = prefill + ctx decode steps) hold
+        // exactly at the NetworkCost level.
+        let phase = phased.map(|(phase, ctx)| {
+            let (_, base) = workloads::load(&req.workload).expect("already loaded");
+            let pre_cost = crate::dataflow::evaluate_network(
+                &cfg,
+                &ep,
+                &shape_for_phase(&base, Phase::Prefill, ctx),
+            );
+            let dec_cost = crate::dataflow::evaluate_network(
+                &cfg,
+                &ep,
+                &shape_for_phase(&base, Phase::Decode, ctx),
+            );
+            let total = match phase {
+                Phase::Prefill => pre_cost.clone(),
+                Phase::Decode => dec_cost.clone(),
+                Phase::Both => pre_cost.add(&dec_cost.scale(ctx as u64)),
+            };
+            PhaseSummary {
+                phase: phase.label().to_string(),
+                ctx,
+                prefill_latency_s: pre_cost.latency_s,
+                prefill_energy_mj: pre_cost.energy_mj,
+                decode_latency_s: dec_cost.latency_s,
+                decode_energy_mj: dec_cost.energy_mj,
+                kv_dram_bytes: dec_cost.dram_kv_bytes,
+                total_latency_s: total.latency_s,
+                total_energy_mj: total.energy_mj,
+            }
+        });
+        Ok(AnalyzeResponse {
+            workload: name,
+            config: cfg,
+            ppa,
+            layers: rows,
+            latency_s,
+            energy_mj,
+            phase,
+        })
     }
 
     /// List built-in workloads, or detail one spec.
@@ -718,10 +808,10 @@ mod tests {
     fn analyze_and_workloads_are_config_only() {
         let s = tiny_session();
         let resp = s
-            .analyze(&AnalyzeRequest {
-                workload: "mobilenetv2".into(),
-                config: AcceleratorConfig::default_with(PeType::LightPe1),
-            })
+            .analyze(&AnalyzeRequest::new(
+                "mobilenetv2",
+                AcceleratorConfig::default_with(PeType::LightPe1),
+            ))
             .unwrap();
         assert_eq!(resp.workload, "mobilenetv2");
         assert_eq!(resp.layers.len(), workloads::mobilenetv2().len());
@@ -744,6 +834,61 @@ mod tests {
             other => panic!("expected detail, got {other:?}"),
         }
         assert_eq!(s.store().misses(), 0, "no training for analytical queries");
+    }
+
+    #[test]
+    fn analyze_phases_compose_and_gate_on_transformer_workloads() {
+        let s = tiny_session();
+        let cfg = AcceleratorConfig::default_with(PeType::Int16);
+        let req = |phase: &str, ctx: u32| AnalyzeRequest {
+            workload: "opt-1.3b".into(),
+            config: cfg,
+            phase: Some(phase.into()),
+            ctx: Some(ctx),
+        };
+        let pre = s.analyze(&req("prefill", 512)).unwrap();
+        let dec = s.analyze(&req("decode", 512)).unwrap();
+        let both = s.analyze(&req("both", 512)).unwrap();
+        let p = pre.phase.as_ref().unwrap();
+        let d = dec.phase.as_ref().unwrap();
+        let b = both.phase.as_ref().unwrap();
+        assert_eq!((p.phase.as_str(), p.ctx), ("prefill", 512));
+        // the summary is phase-symmetric: prefill/decode halves agree
+        // across requests, only the total picks the requested phase
+        assert_eq!(p.prefill_latency_s.to_bits(), d.prefill_latency_s.to_bits());
+        assert_eq!(p.kv_dram_bytes, d.kv_dram_bytes);
+        assert_eq!(p.total_latency_s.to_bits(), p.prefill_latency_s.to_bits());
+        assert_eq!(d.total_latency_s.to_bits(), d.decode_latency_s.to_bits());
+        // a decode step is far cheaper than the whole prompt, but streams
+        // the full KV cache
+        assert!(d.total_latency_s < p.total_latency_s);
+        assert!(d.kv_dram_bytes > 0);
+        // composition law: both = prefill + ctx decode steps
+        let want = p.total_latency_s + 512.0 * d.total_latency_s;
+        assert!(
+            (b.total_latency_s - want).abs() < 1e-12 * want,
+            "{} != {want}",
+            b.total_latency_s
+        );
+        let want_e = p.total_energy_mj + 512.0 * d.total_energy_mj;
+        assert!((b.total_energy_mj - want_e).abs() < 1e-12 * want_e);
+        // decode rows surface per-layer KV traffic; CNN rows never do
+        assert!(dec.layers.iter().any(|l| l.kv_bytes.is_some()));
+        let total: f64 = dec.layers.iter().map(|l| l.total_mj).sum();
+        assert!((total - dec.energy_mj).abs() < 1e-9 * total.max(1.0));
+        // phase flags are rejected on pure-CNN workloads
+        let e = s
+            .analyze(&AnalyzeRequest {
+                workload: "vgg16".into(),
+                config: cfg,
+                phase: Some("decode".into()),
+                ctx: None,
+            })
+            .unwrap_err();
+        assert!(e.to_string().contains("transformer"), "{e}");
+        let e = s.analyze(&req("training", 64)).unwrap_err();
+        assert!(e.to_string().contains("prefill|decode|both"), "{e}");
+        assert_eq!(s.store().misses(), 0, "phased analyze stays analytical");
     }
 
     #[test]
@@ -804,10 +949,8 @@ mod tests {
         std::fs::write(&path, workloads::to_json("mixed-mnv1", &layers).to_string()).unwrap();
         let spec = path.to_string_lossy().to_string();
 
-        let mixed = s.analyze(&AnalyzeRequest { workload: spec, config: cfg }).unwrap();
-        let plain = s
-            .analyze(&AnalyzeRequest { workload: "mobilenetv1".into(), config: cfg })
-            .unwrap();
+        let mixed = s.analyze(&AnalyzeRequest::new(spec, cfg)).unwrap();
+        let plain = s.analyze(&AnalyzeRequest::new("mobilenetv1", cfg)).unwrap();
         assert!(mixed.energy_mj < plain.energy_mj, "INT4 depthwise must cut energy");
         let dw_rows: Vec<_> =
             mixed.layers.iter().filter(|l| l.precision.is_some()).collect();

@@ -77,6 +77,31 @@ fn opt_u32(v: &Json, key: &str, default: u32, what: &str) -> Result<u32, QappaEr
     }
 }
 
+/// Optional string field: absent -> `None`, present-but-non-string -> error.
+fn opt_str(v: &Json, key: &str, what: &str) -> Result<Option<String>, QappaError> {
+    match v.get(key) {
+        Json::Null => Ok(None),
+        other => Ok(Some(
+            other
+                .as_str()
+                .ok_or_else(|| proto(format!("{what}: \"{key}\" must be a string")))?
+                .to_string(),
+        )),
+    }
+}
+
+/// Optional u32 field: absent -> `None`, present-but-malformed -> error.
+fn opt_u32_nullable(v: &Json, key: &str, what: &str) -> Result<Option<u32>, QappaError> {
+    match v.get(key) {
+        Json::Null => Ok(None),
+        other => other
+            .as_usize()
+            .and_then(|x| u32::try_from(x).ok())
+            .map(Some)
+            .ok_or_else(|| proto(format!("{what}: field \"{key}\" must be a u32 integer"))),
+    }
+}
+
 fn pe_type_to_json(ty: PeType) -> Json {
     Json::Str(ty.label().into())
 }
@@ -771,6 +796,13 @@ pub struct OptimizeRequest {
     /// Precision palette (same schema as `explore`); absent = the four
     /// preset PE types.
     pub precision: Option<PrecisionRequest>,
+    /// Inference phase for transformer workloads (`prefill` or `decode`;
+    /// `both` is rejected — pick the phase to optimize for).  Absent =
+    /// the workload's built-in shape; an error on pure-CNN workloads.
+    pub phase: Option<String>,
+    /// Context length for phase shaping (default
+    /// [`workloads::transformer::DEFAULT_CTX`]).
+    pub ctx: Option<u32>,
 }
 
 impl OptimizeRequest {
@@ -803,6 +835,12 @@ impl OptimizeRequest {
         if let Some(p) = &self.precision {
             pairs.push(("precision", p.to_json()));
         }
+        if let Some(p) = &self.phase {
+            pairs.push(("phase", Json::Str(p.clone())));
+        }
+        if let Some(c) = self.ctx {
+            pairs.push(("ctx", num_u(c as u64)));
+        }
         obj(pairs)
     }
 
@@ -831,6 +869,8 @@ impl OptimizeRequest {
             seed: opt_usize(v, "seed", what)?.map(|x| x as u64),
             per_layer: opt_bool(v, "per_layer", what)?,
             precision,
+            phase: opt_str(v, "phase", what)?,
+            ctx: opt_u32_nullable(v, "ctx", what)?,
         })
     }
 }
@@ -1031,20 +1071,42 @@ impl OptimizeResponse {
 pub struct AnalyzeRequest {
     pub workload: String,
     pub config: AcceleratorConfig,
+    /// Inference phase for transformer workloads (`prefill|decode|both`);
+    /// absent keeps the workload's built-in shape and is required to stay
+    /// absent for pure-CNN workloads.  Serialized only when set, so plain
+    /// `analyze` requests stay byte-identical on the wire.
+    pub phase: Option<String>,
+    /// Context length for phase shaping (default
+    /// [`workloads::transformer::DEFAULT_CTX`]).
+    pub ctx: Option<u32>,
 }
 
 impl AnalyzeRequest {
+    /// Phase-less request (the CNN-era constructor shape).
+    pub fn new(workload: impl Into<String>, config: AcceleratorConfig) -> AnalyzeRequest {
+        AnalyzeRequest { workload: workload.into(), config, phase: None, ctx: None }
+    }
+
     pub fn to_json(&self) -> Json {
-        obj(vec![
+        let mut pairs = vec![
             ("workload", Json::Str(self.workload.clone())),
             ("config", self.config.to_json()),
-        ])
+        ];
+        if let Some(p) = &self.phase {
+            pairs.push(("phase", Json::Str(p.clone())));
+        }
+        if let Some(c) = self.ctx {
+            pairs.push(("ctx", num_u(c as u64)));
+        }
+        obj(pairs)
     }
 
     pub fn from_json(v: &Json) -> Result<AnalyzeRequest, QappaError> {
         Ok(AnalyzeRequest {
             workload: req_str(v, "workload", "analyze")?.to_string(),
             config: config_from_json(v.get("config"))?,
+            phase: opt_str(v, "phase", "analyze")?,
+            ctx: opt_u32_nullable(v, "ctx", "analyze")?,
         })
     }
 }
@@ -1067,6 +1129,9 @@ pub struct LayerCost {
     /// (mixed-precision networks); absent on the wire otherwise, keeping
     /// plain `analyze` responses byte-identical.
     pub precision: Option<String>,
+    /// KV-cache DRAM bytes (attention layers); absent on the wire when
+    /// zero, keeping CNN responses byte-identical.
+    pub kv_bytes: Option<u64>,
 }
 
 impl LayerCost {
@@ -1086,19 +1151,20 @@ impl LayerCost {
         if let Some(p) = &self.precision {
             pairs.push(("precision", Json::Str(p.clone())));
         }
+        if let Some(kv) = self.kv_bytes {
+            pairs.push(("kv_bytes", num_u(kv)));
+        }
         obj(pairs)
     }
 
     fn from_json(v: &Json) -> Result<LayerCost, QappaError> {
         let what = "analyze.layers[]";
-        let precision = match v.get("precision") {
+        let precision = opt_str(v, "precision", what)?;
+        let kv_bytes = match v.get("kv_bytes") {
             Json::Null => None,
-            other => Some(
-                other
-                    .as_str()
-                    .ok_or_else(|| proto(format!("{what}: \"precision\" must be a string")))?
-                    .to_string(),
-            ),
+            other => Some(other.as_usize().ok_or_else(|| {
+                proto(format!("{what}: \"kv_bytes\" must be a non-negative integer"))
+            })? as u64),
         };
         Ok(LayerCost {
             name: req_str(v, "name", what)?.to_string(),
@@ -1112,6 +1178,63 @@ impl LayerCost {
             other_mj: req_f64(v, "other_mj", what)?,
             total_mj: req_f64(v, "total_mj", what)?,
             precision,
+            kv_bytes,
+        })
+    }
+}
+
+/// Per-phase latency/energy summary attached to transformer `analyze`
+/// responses; absent for CNN workloads (and on the wire), keeping those
+/// responses byte-identical.  `decode_*` fields are per decode step;
+/// `total_*` compose the requested phase (`both` = prefill + `ctx` decode
+/// steps).
+#[derive(Debug, Clone, PartialEq)]
+pub struct PhaseSummary {
+    /// Requested phase label (`prefill|decode|both`).
+    pub phase: String,
+    /// Context length the workload was shaped at.
+    pub ctx: u32,
+    /// Whole-prompt prefill latency, seconds.
+    pub prefill_latency_s: f64,
+    pub prefill_energy_mj: f64,
+    /// Single-token decode-step latency, seconds.
+    pub decode_latency_s: f64,
+    pub decode_energy_mj: f64,
+    /// KV-cache DRAM bytes streamed per decode step.
+    pub kv_dram_bytes: u64,
+    /// Latency of the requested phase (both = prefill + ctx decode steps).
+    pub total_latency_s: f64,
+    pub total_energy_mj: f64,
+}
+
+impl PhaseSummary {
+    fn to_json(&self) -> Json {
+        obj(vec![
+            ("phase", Json::Str(self.phase.clone())),
+            ("ctx", num_u(self.ctx as u64)),
+            ("prefill_latency_s", Json::Num(self.prefill_latency_s)),
+            ("prefill_energy_mj", Json::Num(self.prefill_energy_mj)),
+            ("decode_latency_s", Json::Num(self.decode_latency_s)),
+            ("decode_energy_mj", Json::Num(self.decode_energy_mj)),
+            ("kv_dram_bytes", num_u(self.kv_dram_bytes)),
+            ("total_latency_s", Json::Num(self.total_latency_s)),
+            ("total_energy_mj", Json::Num(self.total_energy_mj)),
+        ])
+    }
+
+    fn from_json(v: &Json) -> Result<PhaseSummary, QappaError> {
+        let what = "analyze.phase";
+        Ok(PhaseSummary {
+            phase: req_str(v, "phase", what)?.to_string(),
+            ctx: opt_u32_nullable(v, "ctx", what)?
+                .ok_or_else(|| proto(format!("{what}: missing field \"ctx\"")))?,
+            prefill_latency_s: req_f64(v, "prefill_latency_s", what)?,
+            prefill_energy_mj: req_f64(v, "prefill_energy_mj", what)?,
+            decode_latency_s: req_f64(v, "decode_latency_s", what)?,
+            decode_energy_mj: req_f64(v, "decode_energy_mj", what)?,
+            kv_dram_bytes: req_u64(v, "kv_dram_bytes", what)?,
+            total_latency_s: req_f64(v, "total_latency_s", what)?,
+            total_energy_mj: req_f64(v, "total_energy_mj", what)?,
         })
     }
 }
@@ -1124,22 +1247,30 @@ pub struct AnalyzeResponse {
     pub config: AcceleratorConfig,
     pub ppa: Ppa,
     pub layers: Vec<LayerCost>,
-    /// End-to-end latency, seconds per inference.
+    /// End-to-end latency, seconds per inference.  For phased transformer
+    /// analyses this is the *displayed* shape's latency (prefill for
+    /// `both`); see `phase` for the per-phase composition.
     pub latency_s: f64,
     /// End-to-end energy, mJ per inference.
     pub energy_mj: f64,
+    /// Per-phase summary; present iff the request carried a `phase`.
+    pub phase: Option<PhaseSummary>,
 }
 
 impl AnalyzeResponse {
     pub fn to_json(&self) -> Json {
-        obj(vec![
+        let mut pairs = vec![
             ("workload", Json::Str(self.workload.clone())),
             ("config", self.config.to_json()),
             ("ppa", ppa_to_json(&self.ppa)),
             ("layers", Json::Arr(self.layers.iter().map(|l| l.to_json()).collect())),
             ("latency_s", Json::Num(self.latency_s)),
             ("energy_mj", Json::Num(self.energy_mj)),
-        ])
+        ];
+        if let Some(p) = &self.phase {
+            pairs.push(("phase", p.to_json()));
+        }
+        obj(pairs)
     }
 
     pub fn from_json(v: &Json) -> Result<AnalyzeResponse, QappaError> {
@@ -1151,6 +1282,10 @@ impl AnalyzeResponse {
         for l in arr {
             layers.push(LayerCost::from_json(l)?);
         }
+        let phase = match v.get("phase") {
+            Json::Null => None,
+            other => Some(PhaseSummary::from_json(other)?),
+        };
         Ok(AnalyzeResponse {
             workload: req_str(v, "workload", "analyze")?.to_string(),
             config: config_from_json(v.get("config"))?,
@@ -1158,6 +1293,7 @@ impl AnalyzeResponse {
             layers,
             latency_s: req_f64(v, "latency_s", "analyze")?,
             energy_mj: req_f64(v, "energy_mj", "analyze")?,
+            phase,
         })
     }
 }
@@ -1759,6 +1895,8 @@ mod tests {
                 wt_bits: vec![4, 8],
                 ..Default::default()
             }),
+            phase: None,
+            ctx: None,
         };
         assert_eq!(OptimizeRequest::from_json(&roundtrip_json(&full.to_json())).unwrap(), full);
 
@@ -1830,8 +1968,11 @@ mod tests {
 
     #[test]
     fn analyze_types_roundtrip() {
-        let req = AnalyzeRequest { workload: "resnet50".into(), config: cfg(PeType::Int16) };
+        let req = AnalyzeRequest::new("resnet50", cfg(PeType::Int16));
         assert_eq!(AnalyzeRequest::from_json(&roundtrip_json(&req.to_json())).unwrap(), req);
+        // phase-less requests stay byte-identical to the CNN-era wire shape
+        let line = req.to_json().to_string();
+        assert!(!line.contains("phase") && !line.contains("ctx"), "{line}");
         let resp = AnalyzeResponse {
             workload: "resnet50".into(),
             config: cfg(PeType::Int16),
@@ -1848,13 +1989,95 @@ mod tests {
                 other_mj: 0.0625,
                 total_mj: 0.6875,
                 precision: Some("a4w4p8-int".into()),
+                kv_bytes: None,
             }],
             latency_s: 0.0123,
             energy_mj: 12.5,
+            phase: None,
         };
         assert_eq!(
             AnalyzeResponse::from_json(&roundtrip_json(&resp.to_json())).unwrap(),
             resp
+        );
+        let out = resp.to_json().to_string();
+        assert!(!out.contains("kv_bytes") && !out.contains("\"phase\""), "{out}");
+    }
+
+    #[test]
+    fn analyze_phase_fields_roundtrip() {
+        let req = AnalyzeRequest {
+            workload: "llama2-7b".into(),
+            config: cfg(PeType::Int16),
+            phase: Some("decode".into()),
+            ctx: Some(2048),
+        };
+        assert_eq!(AnalyzeRequest::from_json(&roundtrip_json(&req.to_json())).unwrap(), req);
+        // malformed phase/ctx are protocol errors naming the field
+        let e = AnalyzeRequest::from_json(
+            &Json::parse(r#"{"workload": "llama2-7b", "config": {"pe_type": "int16"}, "ctx": -3}"#)
+                .unwrap(),
+        )
+        .unwrap_err();
+        assert!(e.to_string().contains("\"ctx\""), "{e}");
+        let e = AnalyzeRequest::from_json(
+            &Json::parse(r#"{"workload": "llama2-7b", "config": {"pe_type": "int16"}, "phase": 7}"#)
+                .unwrap(),
+        )
+        .unwrap_err();
+        assert!(e.to_string().contains("\"phase\""), "{e}");
+
+        let resp = AnalyzeResponse {
+            workload: "llama2-7b".into(),
+            config: cfg(PeType::Int16),
+            ppa: Ppa { power_mw: 250.5, fmax_mhz: 800.0, area_mm2: 2.75 },
+            layers: vec![LayerCost {
+                name: "blk0.attn".into(),
+                macs: 536_870_912,
+                cycles: 98_304,
+                stall_cycles: 1_024,
+                utilization: 0.25,
+                dram_bytes: 4_194_304,
+                compute_mj: 0.125,
+                dram_mj: 0.5,
+                other_mj: 0.0625,
+                total_mj: 0.6875,
+                precision: None,
+                kv_bytes: Some(2_097_152),
+            }],
+            latency_s: 0.0123,
+            energy_mj: 12.5,
+            phase: Some(PhaseSummary {
+                phase: "both".into(),
+                ctx: 2048,
+                prefill_latency_s: 0.75,
+                prefill_energy_mj: 640.0,
+                decode_latency_s: 0.0015,
+                decode_energy_mj: 1.25,
+                kv_dram_bytes: 2_097_152,
+                total_latency_s: 3.822,
+                total_energy_mj: 3200.0,
+            }),
+        };
+        assert_eq!(
+            AnalyzeResponse::from_json(&roundtrip_json(&resp.to_json())).unwrap(),
+            resp
+        );
+    }
+
+    #[test]
+    fn optimize_phase_fields_roundtrip() {
+        let bare = OptimizeRequest { workload: "opt-1.3b".into(), ..Default::default() };
+        let line = bare.to_json().to_string();
+        assert!(!line.contains("phase") && !line.contains("ctx"), "{line}");
+        let phased = OptimizeRequest {
+            workload: "opt-1.3b".into(),
+            phase: Some("decode".into()),
+            ctx: Some(1024),
+            ..Default::default()
+        };
+        assert_eq!(
+            OptimizeRequest::from_json(&roundtrip_json(&phased.to_json())).unwrap(),
+            phased
         );
     }
 
@@ -1947,10 +2170,7 @@ mod tests {
             },
             ServeRequest {
                 id: Some(4),
-                body: RequestBody::Analyze(AnalyzeRequest {
-                    workload: "vgg16".into(),
-                    config: cfg(PeType::LightPe1),
-                }),
+                body: RequestBody::Analyze(AnalyzeRequest::new("vgg16", cfg(PeType::LightPe1))),
             },
         ];
         for req in reqs {

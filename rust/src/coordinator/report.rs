@@ -313,12 +313,19 @@ pub fn dse_stats_table(res: &DseResult) -> Table {
 /// Per-layer table for `qappa workloads --workload W`: taxonomy kind,
 /// shape, and the groups-aware MAC count of every layer.  When any layer
 /// carries a per-layer precision override, a `precision` column is
-/// appended (mixed-precision networks); plain workloads keep the
-/// historical column set byte-for-byte.
+/// appended (mixed-precision networks); transformer workloads (any
+/// matmul/attention layer) get `shape` and `KV_KB` columns.  Plain CNN
+/// workloads keep the historical column set byte-for-byte.
 pub fn workload_table(layers: &[Layer]) -> Table {
+    use crate::dataflow::Op;
     let mixed = layers.iter().any(|l| l.quant.is_some());
+    let transformer = layers.iter().any(|l| l.is_transformer());
     let mut header =
         vec!["layer", "kind", "c", "k", "hw", "rs", "stride", "groups", "MACs_M"];
+    if transformer {
+        header.push("shape");
+        header.push("KV_KB");
+    }
     if mixed {
         header.push("precision");
     }
@@ -335,6 +342,22 @@ pub fn workload_table(layers: &[Layer]) -> Table {
             l.groups.to_string(),
             format!("{:.2}", l.macs() as f64 / 1e6),
         ];
+        if transformer {
+            row.push(match l.op {
+                Op::Matmul { m, k, n } => format!("m{m}xk{k}xn{n}"),
+                Op::Attention { heads, head_dim, seq_q, seq_kv } => {
+                    format!("h{heads}xd{head_dim}xq{seq_q}xkv{seq_kv}")
+                }
+                Op::Conv => "-".to_string(),
+            });
+            // KV cache residency per layer at the layer's activation
+            // width (override, else the 16-bit baseline operand).
+            let act_bits = l.quant.map(|q| q.act_bits).unwrap_or(16) as u64;
+            row.push(match l.kv_elems() {
+                0 => "-".to_string(),
+                kv => format!("{:.1}", (kv * act_bits) as f64 / 8.0 / 1e3),
+            });
+        }
         if mixed {
             row.push(match l.quant {
                 Some(q) => crate::config::PeType::from_spec(q).label(),
@@ -483,6 +506,45 @@ mod tests {
         assert!(csv.lines().next().unwrap().contains("precision"));
         assert!(csv.contains("a4w4p8-int"), "{csv}");
         assert!(csv.contains(",-"), "non-overridden layers show '-'");
+        // a pure-CNN net never grows the transformer columns
+        assert!(!csv.lines().next().unwrap().contains("shape"));
+        assert!(!csv.lines().next().unwrap().contains("KV_KB"));
+    }
+
+    #[test]
+    fn workload_table_shows_shape_and_kv_for_transformers() {
+        use crate::workloads::{shape_for_phase, Phase};
+        let layers = shape_for_phase(&crate::workloads::opt_1p3b(), Phase::Decode, 2048);
+        let t = workload_table(&layers);
+        let csv = t.to_csv();
+        let header = csv.lines().next().unwrap();
+        assert!(header.contains("shape") && header.contains("KV_KB"), "{header}");
+        assert!(csv.contains("matmul"), "{csv}");
+        assert!(csv.contains("attention"), "{csv}");
+        // attention rows carry the qkv shape and a nonzero KV footprint;
+        // matmul rows show '-' in the KV column
+        assert!(csv.contains("q1xkv2048"), "{csv}");
+        assert!(csv.contains("m1xk"), "{csv}");
+        let attn = csv
+            .lines()
+            .find(|l| l.contains("attention"))
+            .expect("attention row");
+        let kv_kb: f64 = attn.split(',').nth(10).unwrap().parse().unwrap();
+        assert!(kv_kb > 0.0, "{attn}");
+
+        // rendered (aligned) output sizes the name column to the longest
+        // dotted name (blk0.attn.qkv style), so `kind` starts at the same
+        // offset on every line
+        let rendered = t.render();
+        assert!(rendered.contains("blk0.attn.qkv"), "{rendered}");
+        let name_w = layers
+            .iter()
+            .map(|l| l.name.len())
+            .max()
+            .unwrap()
+            .max("layer".len());
+        let header_line = rendered.lines().next().unwrap();
+        assert_eq!(header_line.find("kind"), Some(name_w + 2), "{header_line}");
     }
 
     #[test]

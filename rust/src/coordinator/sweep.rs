@@ -40,6 +40,11 @@ pub(crate) fn legacy_eval_env() -> bool {
 }
 
 /// A workload with its display name, as swept by the engine.
+///
+/// Layers are taken as-is: phase shaping for transformer workloads
+/// (prefill vs decode, see [`crate::workloads::shape_for_phase`]) happens
+/// upstream in the session layer, so the engine always sweeps a concrete
+/// already-shaped layer list.
 #[derive(Debug, Clone)]
 pub struct NamedWorkload {
     pub name: String,

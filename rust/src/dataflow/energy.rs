@@ -47,6 +47,8 @@ pub fn layer_energy(
     let compute_mj = layer.macs() as f64 * ep.mac_with_spads_fj * FJ_TO_MJ;
     let glb_mj = traffic.glb_accesses as f64 * ep.glb_access_fj * FJ_TO_MJ;
     let noc_mj = traffic.noc_bits as f64 * ep.wire_fj_per_bit * FJ_TO_MJ;
+    // `dram_bytes` already folds in the KV-cache class (attention layers),
+    // so decode-phase energy prices KV reads at the DRAM rate for free.
     let dram_mj = traffic.dram_bytes as f64 * 8.0 * ep.dram_fj_per_bit * FJ_TO_MJ;
     // mW x s = mJ.
     let leakage_mj = ep.leakage_mw * perf.latency_s(ep.fmax_mhz);
@@ -108,6 +110,33 @@ mod tests {
         // Compute energy is proportional to MACs: exactly c=64x less.
         assert!((edw.compute_mj * 64.0 - ed.compute_mj).abs() < 1e-9 * ed.compute_mj.max(1.0));
         assert!(edw.total_mj() < ed.total_mj());
+    }
+
+    #[test]
+    fn kv_cache_traffic_priced_at_dram_rate() {
+        // Two decode-shaped attention layers differing only in context
+        // length: the DRAM energy delta must equal the KV byte delta at
+        // the DRAM per-bit rate (everything else about the layers' DRAM
+        // volume is identical).
+        let cfg = AcceleratorConfig::default_with(PeType::Int16);
+        let ep = energy_params(&cfg);
+        let short = Layer::attention("a", 8, 64, 1, 512);
+        let long = Layer::attention("a", 8, 64, 1, 2048);
+        let es = energy_for(&cfg, &short);
+        let el = energy_for(&cfg, &long);
+        let perf_s = map_layer(&cfg, &ep, &short);
+        let perf_l = map_layer(&cfg, &ep, &long);
+        let ts = layer_traffic(&cfg, &short, &perf_s);
+        let tl = layer_traffic(&cfg, &long, &perf_l);
+        assert!(tl.dram_kv_bytes > ts.dram_kv_bytes);
+        let expect_delta =
+            (tl.dram_bytes - ts.dram_bytes) as f64 * 8.0 * ep.dram_fj_per_bit * 1e-12;
+        let got_delta = el.dram_mj - es.dram_mj;
+        assert!(
+            (got_delta - expect_delta).abs() < 1e-9 * expect_delta.max(1e-12),
+            "kv energy delta {got_delta} != {expect_delta}"
+        );
+        assert!(el.total_mj() > es.total_mj());
     }
 
     #[test]

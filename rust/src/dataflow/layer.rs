@@ -1,15 +1,17 @@
-//! DNN layer descriptors: dense, grouped and depthwise convolutions plus
-//! fully-connected layers.
+//! DNN layer descriptors: dense, grouped and depthwise convolutions,
+//! fully-connected layers, and transformer matmul/attention operators.
 //!
 //! The taxonomy (see `docs/WORKLOADS.md`):
 //!
-//! | kind      | constructor         | `groups`     | shape notes |
-//! |-----------|---------------------|--------------|-------------|
-//! | `conv`    | [`Layer::conv`]     | 1            | dense convolution |
-//! | `grouped` | [`Layer::grouped`]  | `1 < g < c`  | channels split into `g` independent groups |
-//! | `dw`      | [`Layer::dw`]       | `g == c == k`| depthwise: one filter per channel |
-//! | `pw`      | [`Layer::pw`]       | 1            | pointwise: dense 1x1 convolution |
-//! | `fc`      | [`Layer::fc`]       | 1            | 1x1 conv over a 1x1 "image" |
+//! | kind        | constructor           | `groups`     | shape notes |
+//! |-------------|-----------------------|--------------|-------------|
+//! | `conv`      | [`Layer::conv`]       | 1            | dense convolution |
+//! | `grouped`   | [`Layer::grouped`]    | `1 < g < c`  | channels split into `g` independent groups |
+//! | `dw`        | [`Layer::dw`]         | `g == c == k`| depthwise: one filter per channel |
+//! | `pw`        | [`Layer::pw`]         | 1            | pointwise: dense 1x1 convolution |
+//! | `fc`        | [`Layer::fc`]         | 1            | 1x1 conv over a 1x1 "image" |
+//! | `matmul`    | [`Layer::matmul`]     | 1            | dense `[m x k] . [k x n]` (QKV/FFN projections) |
+//! | `attention` | [`Layer::attention`]  | 1            | scaled-dot-product attention over a KV cache |
 //!
 //! A grouped convolution connects each output channel to only `c / groups`
 //! input channels, so MACs and filter volume shrink by `groups` relative to
@@ -17,9 +19,51 @@
 //! exactly `dense / c`. Costing it as dense would overstate MobileNet-class
 //! networks by ~8-9x, which is why every accounting method here is
 //! `groups`-aware.
+//!
+//! Transformer operators extend the taxonomy through the [`Op`] field:
+//! `matmul` streams `m` activation rows through a resident `[k x n]` weight
+//! matrix (decode evaluates `m = 1`), while `attention` carries no weights
+//! at all — its "filter" is the KV cache, accounted separately through
+//! [`Layer::kv_elems`] so the traffic model can price KV reads as their own
+//! DRAM class. Phase shaping (prefill vs. decode) lives in
+//! `workloads::transformer`.
 
 use crate::api::error::QappaError;
 use crate::config::{AcceleratorConfig, QuantSpec};
+
+/// Operator family of a [`Layer`]. `Conv` covers the whole convolution
+/// taxonomy (dense/grouped/dw/pw/fc — discriminated by the shape fields);
+/// the transformer operators carry their own geometry so decode/prefill
+/// re-shaping never has to reverse-engineer it from conv fields.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Op {
+    /// Convolution family; the layer's shape lives in `c/k/hw/rs/...`.
+    Conv,
+    /// Dense matrix multiply `[m x k] . [k x n]`: transformer QKV/output
+    /// projections and FFN layers. Prefill runs `m = seq` rows; decode
+    /// streams a single row (`m = 1`).
+    Matmul {
+        /// Activation rows (sequence positions evaluated this step).
+        m: u32,
+        /// Reduction width (input features).
+        k: u32,
+        /// Output features.
+        n: u32,
+    },
+    /// Scaled-dot-product attention: per head, `Q.K^T` then `A.V` against
+    /// a KV cache of `seq_kv` positions. The cache itself is priced via
+    /// [`Layer::kv_elems`] as a dedicated traffic class.
+    Attention {
+        /// Attention heads.
+        heads: u32,
+        /// Feature width per head (`d_model = heads * head_dim`).
+        head_dim: u32,
+        /// Query positions evaluated this step (prefill: seq; decode: 1).
+        seq_q: u32,
+        /// Cached key/value positions attended over (the context length).
+        seq_kv: u32,
+    },
+}
 
 /// One layer of a network, in inference shape (batch = 1, as in the
 /// paper's edge-deployment setting).
@@ -50,6 +94,12 @@ pub struct Layer {
     /// e.g. INT4 depthwise layers mixed with INT8 pointwise layers.
     /// `None` means the accelerator configuration's own precision.
     pub quant: Option<QuantSpec>,
+    /// Operator family: [`Op::Conv`] for the whole convolution taxonomy
+    /// (the default for every conv-family constructor), or a transformer
+    /// operator carrying its own geometry. The conv fields of a
+    /// transformer layer are derived by its constructor (`hw = rs = 1`,
+    /// `groups = 1`) so generic shape code stays well-defined.
+    pub op: Op,
 }
 
 impl Layer {
@@ -64,7 +114,7 @@ impl Layer {
         stride: u32,
         pad: u32,
     ) -> Layer {
-        Layer { name: name.into(), c, k, hw, rs, stride, pad, groups: 1, quant: None }
+        Layer { name: name.into(), c, k, hw, rs, stride, pad, groups: 1, quant: None, op: Op::Conv }
     }
 
     /// Grouped convolution: input/output channels split into `groups`
@@ -80,19 +130,19 @@ impl Layer {
         groups: u32,
     ) -> Layer {
         debug_assert!(groups > 0 && c % groups == 0 && k % groups == 0);
-        Layer { name: name.into(), c, k, hw, rs, stride, pad, groups, quant: None }
+        Layer { name: name.into(), c, k, hw, rs, stride, pad, groups, quant: None, op: Op::Conv }
     }
 
     /// Depthwise convolution: one spatial filter per channel
     /// (`groups = c = k`), the MobileNet workhorse.
     pub fn dw(name: &str, c: u32, hw: u32, rs: u32, stride: u32, pad: u32) -> Layer {
-        Layer { name: name.into(), c, k: c, hw, rs, stride, pad, groups: c, quant: None }
+        Layer { name: name.into(), c, k: c, hw, rs, stride, pad, groups: c, quant: None, op: Op::Conv }
     }
 
     /// Pointwise convolution: dense 1x1, stride 1, no padding — the channel
     /// mixer paired with depthwise layers in separable blocks.
     pub fn pw(name: &str, c: u32, k: u32, hw: u32) -> Layer {
-        Layer { name: name.into(), c, k, hw, rs: 1, stride: 1, pad: 0, groups: 1, quant: None }
+        Layer { name: name.into(), c, k, hw, rs: 1, stride: 1, pad: 0, groups: 1, quant: None, op: Op::Conv }
     }
 
     /// Fully-connected layer as a 1x1 conv over a 1x1 "image".
@@ -107,6 +157,43 @@ impl Layer {
             pad: 0,
             groups: 1,
             quant: None,
+            op: Op::Conv,
+        }
+    }
+
+    /// Dense matrix multiply `[m x k] . [k x n]` — transformer projections
+    /// and FFN layers. The carried conv fields mirror the reduction
+    /// (`c = k`, `k = n`) so generic per-channel code stays meaningful.
+    pub fn matmul(name: &str, m: u32, k: u32, n: u32) -> Layer {
+        Layer {
+            name: name.into(),
+            c: k,
+            k: n,
+            hw: 1,
+            rs: 1,
+            stride: 1,
+            pad: 0,
+            groups: 1,
+            quant: None,
+            op: Op::Matmul { m, k, n },
+        }
+    }
+
+    /// Scaled-dot-product attention over a KV cache. Carries
+    /// `c = k = heads * head_dim` (the model width) in the conv fields.
+    pub fn attention(name: &str, heads: u32, head_dim: u32, seq_q: u32, seq_kv: u32) -> Layer {
+        let d_model = heads.saturating_mul(head_dim);
+        Layer {
+            name: name.into(),
+            c: d_model,
+            k: d_model,
+            hw: 1,
+            rs: 1,
+            stride: 1,
+            pad: 0,
+            groups: 1,
+            quant: None,
+            op: Op::Attention { heads, head_dim, seq_q, seq_kv },
         }
     }
 
@@ -123,8 +210,14 @@ impl Layer {
     }
 
     /// True for layers built by [`Layer::fc`] (1x1 conv over a 1x1 image).
+    /// Transformer layers also carry `hw = rs = 1`, so fc is conv-only.
     pub fn is_fc(&self) -> bool {
-        self.hw == 1 && self.rs == 1
+        matches!(self.op, Op::Conv) && self.hw == 1 && self.rs == 1
+    }
+
+    /// True for the transformer operators (`matmul` / `attention`).
+    pub fn is_transformer(&self) -> bool {
+        !matches!(self.op, Op::Conv)
     }
 
     /// True when every channel has its own filter (`groups = c = k`).
@@ -140,6 +233,13 @@ impl Layer {
     /// Taxonomy label used by reports and the JSON schema:
     /// `fc` / `dw` / `grouped` / `pw` / `conv`.
     pub fn kind(&self) -> &'static str {
+        // Transformer ops are discriminated by `op`, not shape, so they
+        // come first; a matmul's carried hw = rs = 1 must not read as fc.
+        match self.op {
+            Op::Matmul { .. } => return "matmul",
+            Op::Attention { .. } => return "attention",
+            Op::Conv => {}
+        }
         // Grouped checks come first: a grouped 1x1 layer at hw = 1 must
         // not be mistaken for (dense) fc, or serialization would drop its
         // `groups` and round-trip to a model with groups-times the MACs.
@@ -163,6 +263,65 @@ impl Layer {
     /// on every ingested layer.
     pub fn validate(&self) -> Result<(), QappaError> {
         let err = |m: String| Err(QappaError::Workload(m));
+        match self.op {
+            Op::Matmul { m, k, n } => {
+                for (field, v) in [("m", m), ("k", k), ("n", n)] {
+                    if v == 0 {
+                        return err(format!(
+                            "layer '{}': matmul field \"{field}\" must be > 0",
+                            self.name
+                        ));
+                    }
+                }
+                if self.c != k || self.k != n {
+                    // Hand-built layers must go through `Layer::matmul` so
+                    // the carried channel fields track the op geometry.
+                    return err(format!(
+                        "layer '{}': matmul field \"k\"/\"n\" mismatch the carried channels \
+                         (c={} vs k={}, k={} vs n={}); build with Layer::matmul",
+                        self.name, self.c, k, self.k, n
+                    ));
+                }
+            }
+            Op::Attention { heads, head_dim, seq_q, seq_kv } => {
+                for (field, v) in
+                    [("heads", heads), ("head_dim", head_dim), ("seq_q", seq_q), ("seq_kv", seq_kv)]
+                {
+                    if v == 0 {
+                        return err(format!(
+                            "layer '{}': attention field \"{field}\" must be > 0",
+                            self.name
+                        ));
+                    }
+                }
+                if seq_kv < seq_q {
+                    return err(format!(
+                        "layer '{}': attention field \"seq_kv\" ({seq_kv}) must cover every \
+                         query position (seq_q={seq_q}); prefill keeps seq_kv = seq_q, \
+                         decode evaluates seq_q = 1",
+                        self.name
+                    ));
+                }
+                let d_model = heads as u64 * head_dim as u64;
+                if self.c as u64 != d_model || self.k as u64 != d_model {
+                    return err(format!(
+                        "layer '{}': attention field \"heads\"*\"head_dim\" ({d_model}) \
+                         mismatches the carried channels (c={}, k={}); build with \
+                         Layer::attention",
+                        self.name, self.c, self.k
+                    ));
+                }
+            }
+            Op::Conv => {}
+        }
+        if self.is_transformer() {
+            // Conv-shape checks below don't apply; the constructors pin
+            // hw = rs = stride = 1, pad = 0, groups = 1.
+            if let Some(q) = self.quant {
+                q.validate().map_err(|e| e.context(format!("layer '{}'", self.name)))?;
+            }
+            return Ok(());
+        }
         if self.c == 0 || self.k == 0 || self.hw == 0 || self.rs == 0 || self.stride == 0 {
             return err(format!("layer '{}': all of c/k/hw/rs/stride must be > 0", self.name));
         }
@@ -199,29 +358,75 @@ impl Layer {
 
     /// Total multiply-accumulates. Each output channel reduces over
     /// `c / groups` input channels, so a depthwise layer (`groups = c`)
-    /// costs `1/c` of its dense counterpart.
+    /// costs `1/c` of its dense counterpart. Attention counts both
+    /// chained matmuls (`Q.K^T` and `A.V`) per head.
     pub fn macs(&self) -> u64 {
-        let e = self.out_hw() as u64;
-        let cin_per_group = (self.c / self.groups.max(1)) as u64;
-        cin_per_group * self.k as u64 * e * e * (self.rs as u64 * self.rs as u64)
+        match self.op {
+            Op::Matmul { m, k, n } => m as u64 * k as u64 * n as u64,
+            Op::Attention { heads, head_dim, seq_q, seq_kv } => {
+                2 * heads as u64 * head_dim as u64 * seq_q as u64 * seq_kv as u64
+            }
+            Op::Conv => {
+                let e = self.out_hw() as u64;
+                let cin_per_group = (self.c / self.groups.max(1)) as u64;
+                cin_per_group * self.k as u64 * e * e * (self.rs as u64 * self.rs as u64)
+            }
+        }
     }
 
-    /// Elements in the input feature map.
+    /// Elements in the input feature map (matmul: the `m` activation rows;
+    /// attention: the query block).
     pub fn ifmap_elems(&self) -> u64 {
-        self.c as u64 * self.hw as u64 * self.hw as u64
+        match self.op {
+            Op::Matmul { m, k, .. } => m as u64 * k as u64,
+            Op::Attention { heads, head_dim, seq_q, .. } => {
+                seq_q as u64 * heads as u64 * head_dim as u64
+            }
+            Op::Conv => self.c as u64 * self.hw as u64 * self.hw as u64,
+        }
     }
 
     /// Elements in all filters: each of the `k` filters spans only its
-    /// group's `c / groups` input channels.
+    /// group's `c / groups` input channels. Attention carries no weights —
+    /// its operand is the KV cache, accounted via [`Layer::kv_elems`].
     pub fn filter_elems(&self) -> u64 {
-        let cin_per_group = (self.c / self.groups.max(1)) as u64;
-        cin_per_group * self.k as u64 * self.rs as u64 * self.rs as u64
+        match self.op {
+            Op::Matmul { k, n, .. } => k as u64 * n as u64,
+            Op::Attention { .. } => 0,
+            Op::Conv => {
+                let cin_per_group = (self.c / self.groups.max(1)) as u64;
+                cin_per_group * self.k as u64 * self.rs as u64 * self.rs as u64
+            }
+        }
     }
 
     /// Elements in the output feature map.
     pub fn ofmap_elems(&self) -> u64 {
-        let e = self.out_hw() as u64;
-        self.k as u64 * e * e
+        match self.op {
+            Op::Matmul { m, n, .. } => m as u64 * n as u64,
+            Op::Attention { heads, head_dim, seq_q, .. } => {
+                seq_q as u64 * heads as u64 * head_dim as u64
+            }
+            Op::Conv => {
+                let e = self.out_hw() as u64;
+                self.k as u64 * e * e
+            }
+        }
+    }
+
+    /// KV-cache elements this layer streams per evaluation: keys + values
+    /// for every cached position (`2 * heads * seq_kv * head_dim`), read
+    /// exactly once per step in a flash-attention-style schedule. Zero for
+    /// every non-attention operator, so folding it into traffic totals is
+    /// identity-safe for CNN workloads. Grows linearly with context
+    /// length — the term that makes decode bandwidth-bound.
+    pub fn kv_elems(&self) -> u64 {
+        match self.op {
+            Op::Attention { heads, head_dim, seq_kv, .. } => {
+                2 * heads as u64 * seq_kv as u64 * head_dim as u64
+            }
+            _ => 0,
+        }
     }
 }
 
@@ -318,6 +523,78 @@ mod tests {
         let narrow = Layer::pw("pwn", 16, 32, 14)
             .with_precision(QuantSpec { act_bits: 8, wt_bits: 8, psum_bits: 4, mac: MacKind::IntExact });
         assert!(narrow.validate().unwrap_err().to_string().contains("psum_bits"));
+    }
+
+    #[test]
+    fn matmul_accounting() {
+        let l = Layer::matmul("blk0.attn.qkv", 128, 2048, 6144);
+        assert_eq!(l.kind(), "matmul");
+        assert!(l.is_transformer() && !l.is_fc());
+        assert_eq!(l.macs(), 128 * 2048 * 6144);
+        assert_eq!(l.ifmap_elems(), 128 * 2048);
+        assert_eq!(l.filter_elems(), 2048 * 6144);
+        assert_eq!(l.ofmap_elems(), 128 * 6144);
+        assert_eq!(l.kv_elems(), 0);
+        l.validate().unwrap();
+        // decode shape: a single streamed row
+        let d = Layer::matmul("d", 1, 2048, 6144);
+        assert_eq!(d.macs(), 2048 * 6144);
+        assert_eq!(d.ifmap_elems(), 2048);
+    }
+
+    #[test]
+    fn attention_accounting() {
+        // 32 heads x 64 dims, prefill over 2048 positions
+        let a = Layer::attention("blk0.attn", 32, 64, 2048, 2048);
+        assert_eq!(a.kind(), "attention");
+        assert!(a.is_transformer());
+        assert_eq!(a.macs(), 2 * 32 * 64 * 2048 * 2048);
+        assert_eq!(a.ifmap_elems(), 2048 * 32 * 64);
+        assert_eq!(a.filter_elems(), 0);
+        assert_eq!(a.ofmap_elems(), 2048 * 32 * 64);
+        assert_eq!(a.kv_elems(), 2 * 32 * 2048 * 64);
+        a.validate().unwrap();
+        // decode: one query over the full cache — same KV bytes per step,
+        // 1/seq the MACs, so arithmetic intensity collapses
+        let d = Layer::attention("d", 32, 64, 1, 2048);
+        assert_eq!(d.kv_elems(), a.kv_elems());
+        assert_eq!(d.macs() * 2048, a.macs());
+        d.validate().unwrap();
+    }
+
+    #[test]
+    fn transformer_validate_names_the_offending_field() {
+        let cases: Vec<(Layer, &str)> = vec![
+            (Layer::matmul("z", 0, 64, 64), "\"m\""),
+            (Layer::matmul("z", 4, 0, 64), "\"k\""),
+            (Layer::matmul("z", 4, 64, 0), "\"n\""),
+            (Layer::attention("z", 0, 64, 4, 4), "\"heads\""),
+            (Layer::attention("z", 4, 0, 4, 4), "\"head_dim\""),
+            (Layer::attention("z", 4, 64, 0, 4), "\"seq_q\""),
+            (Layer::attention("z", 4, 64, 4, 0), "\"seq_kv\""),
+            // KV cache shorter than the query block
+            (Layer::attention("z", 4, 64, 8, 4), "\"seq_kv\""),
+        ];
+        for (l, field) in cases {
+            let e = l.validate().unwrap_err().to_string();
+            assert!(e.contains(field), "expected {field} in: {e}");
+            assert!(e.contains("'z'"), "layer name missing: {e}");
+        }
+        // carried channel fields drifting from the op geometry (k mismatch)
+        let skewed = Layer { c: 65, ..Layer::matmul("skew", 4, 64, 64) };
+        let e = skewed.validate().unwrap_err().to_string();
+        assert!(e.contains("\"k\""), "{e}");
+        let skewed_a = Layer { k: 100, ..Layer::attention("skew", 4, 64, 4, 4) };
+        assert!(skewed_a.validate().is_err());
+        // quant overrides are still validated on transformer ops
+        use crate::config::MacKind;
+        let bad_q = Layer::matmul("q", 4, 64, 64).with_precision(QuantSpec {
+            act_bits: 0,
+            wt_bits: 8,
+            psum_bits: 16,
+            mac: MacKind::IntExact,
+        });
+        assert!(bad_q.validate().unwrap_err().to_string().contains("act_bits"));
     }
 
     #[test]

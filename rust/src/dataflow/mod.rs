@@ -17,7 +17,7 @@ pub mod rs;
 pub mod traffic;
 
 pub use energy::{layer_energy, EnergyBreakdown};
-pub use layer::Layer;
+pub use layer::{Layer, Op};
 pub use rs::{map_layer, LayerPerf};
 pub use traffic::{layer_traffic, Traffic};
 
@@ -44,6 +44,48 @@ pub struct NetworkCost {
     pub avg_utilization: f64,
     /// Total DRAM traffic, bytes.
     pub dram_bytes: u64,
+    /// KV-cache DRAM traffic, bytes (subset of `dram_bytes`; zero for
+    /// CNN workloads).
+    pub dram_kv_bytes: u64,
+}
+
+impl NetworkCost {
+    /// Sum of two evaluations — e.g. prefill plus the decode phase of a
+    /// transformer workload. Utilization recombines MAC-weighted, matching
+    /// how `evaluate_network` averages across layers.
+    pub fn add(&self, other: &NetworkCost) -> NetworkCost {
+        let macs = self.macs + other.macs;
+        let avg_utilization = if macs > 0 {
+            (self.avg_utilization * self.macs as f64
+                + other.avg_utilization * other.macs as f64)
+                / macs as f64
+        } else {
+            0.0
+        };
+        NetworkCost {
+            macs,
+            cycles: self.cycles + other.cycles,
+            latency_s: self.latency_s + other.latency_s,
+            energy_mj: self.energy_mj + other.energy_mj,
+            avg_utilization,
+            dram_bytes: self.dram_bytes + other.dram_bytes,
+            dram_kv_bytes: self.dram_kv_bytes + other.dram_kv_bytes,
+        }
+    }
+
+    /// Cost of running this network `n` times back-to-back — e.g. `ctx`
+    /// decode steps. Utilization is per-step and unchanged by repetition.
+    pub fn scale(&self, n: u64) -> NetworkCost {
+        NetworkCost {
+            macs: self.macs * n,
+            cycles: self.cycles * n,
+            latency_s: self.latency_s * n as f64,
+            energy_mj: self.energy_mj * n as f64,
+            avg_utilization: self.avg_utilization,
+            dram_bytes: self.dram_bytes * n,
+            dram_kv_bytes: self.dram_kv_bytes * n,
+        }
+    }
 }
 
 /// Resolve the (config, energy params) a layer actually runs with: its own
@@ -127,6 +169,7 @@ pub fn evaluate_network(
                 && l.pad == layer.pad
                 && l.groups == layer.groups
                 && l.quant == layer.quant
+                && l.op == layer.op
             {
                 *count += 1;
                 continue 'outer;
@@ -163,6 +206,7 @@ pub fn evaluate_network(
         total.latency_s += perf.latency_s(ep_l.fmax_mhz) * n;
         total.energy_mj += energy.total_mj() * n;
         total.dram_bytes += traffic.dram_bytes * count;
+        total.dram_kv_bytes += traffic.dram_kv_bytes * count;
         util_weighted += perf.utilization * (layer.macs() * count) as f64;
     }
     total.avg_utilization = if total.macs > 0 {
@@ -203,6 +247,7 @@ impl PreparedWorkload {
                     && l.pad == layer.pad
                     && l.groups == layer.groups
                     && l.quant == layer.quant
+                    && l.op == layer.op
                 {
                     *count += 1;
                     continue 'outer;
@@ -245,6 +290,7 @@ struct CostKey {
     pad: u32,
     groups: u32,
     quant: Option<QuantSpec>,
+    op: Op,
 }
 
 impl CostKey {
@@ -267,6 +313,7 @@ impl CostKey {
             pad: layer.pad,
             groups: layer.groups,
             quant: layer.quant,
+            op: layer.op,
         }
     }
 }
@@ -391,6 +438,7 @@ pub fn evaluate_network_prepared(
         total.latency_s += perf.latency_s(ep_l.fmax_mhz) * n;
         total.energy_mj += energy.total_mj() * n;
         total.dram_bytes += traffic.dram_bytes * count;
+        total.dram_kv_bytes += traffic.dram_kv_bytes * count;
         util_weighted += perf.utilization * (layer.macs() * count) as f64;
     }
     total.avg_utilization = if total.macs > 0 {
@@ -489,6 +537,7 @@ mod tests {
         assert_eq!(a.macs, b.macs);
         assert_eq!(a.cycles, b.cycles);
         assert_eq!(a.dram_bytes, b.dram_bytes);
+        assert_eq!(a.dram_kv_bytes, b.dram_kv_bytes);
         assert_eq!(a.latency_s.to_bits(), b.latency_s.to_bits(), "latency drifted");
         assert_eq!(a.energy_mj.to_bits(), b.energy_mj.to_bits(), "energy drifted");
         assert_eq!(
@@ -525,6 +574,60 @@ mod tests {
         let s = ctx.stats();
         assert!(s.cost_hits > 0, "second pass must hit the layer-cost memo");
         assert!(s.synth_hits > 0, "override hardware must hit the synth memo");
+    }
+
+    #[test]
+    fn network_cost_add_and_scale_compose_phases() {
+        let cfg = AcceleratorConfig::default_with(PeType::Int16);
+        let ep = energy_params(&cfg);
+        let prefill = vec![
+            Layer::matmul("qkv", 512, 512, 1536),
+            Layer::attention("attn", 8, 64, 512, 512),
+        ];
+        let decode = vec![
+            Layer::matmul("qkv", 1, 512, 1536),
+            Layer::attention("attn", 8, 64, 1, 512),
+        ];
+        let pre = evaluate_network(&cfg, &ep, &prefill);
+        let dec = evaluate_network(&cfg, &ep, &decode);
+        assert!(pre.dram_kv_bytes > 0 && dec.dram_kv_bytes > 0);
+        // Both = prefill + ctx decode steps, exactly.
+        let ctx = 512u64;
+        let both = pre.add(&dec.scale(ctx));
+        assert_eq!(both.macs, pre.macs + dec.macs * ctx);
+        assert_eq!(both.cycles, pre.cycles + dec.cycles * ctx);
+        assert_eq!(both.dram_kv_bytes, pre.dram_kv_bytes + dec.dram_kv_bytes * ctx);
+        assert!((both.latency_s - (pre.latency_s + dec.latency_s * ctx as f64)).abs() < 1e-12);
+        assert!(both.avg_utilization > 0.0 && both.avg_utilization <= 1.0);
+        // Identity cases (utilization recombination tolerates one ulp of
+        // x * n / n rounding, so compare approximately).
+        let zero = NetworkCost::default();
+        let same = pre.add(&zero);
+        assert_eq!(same.macs, pre.macs);
+        assert_eq!(same.cycles, pre.cycles);
+        assert!((same.avg_utilization - pre.avg_utilization).abs() < 1e-12);
+        assert_eq!(dec.scale(1).cycles, dec.cycles);
+        assert_eq!(dec.scale(0).macs, 0);
+    }
+
+    #[test]
+    fn dedup_never_aliases_phases_or_transformer_ops() {
+        // A decode matmul (m = 1) carries the same conv fields as the fc
+        // layer of identical width and as its prefill twin — the dedup key
+        // must keep all of them distinct via `op`.
+        let cfg = AcceleratorConfig::default_with(PeType::Int16);
+        let ep = energy_params(&cfg);
+        let fc = Layer::fc("fc", 512, 512);
+        let mm1 = Layer::matmul("mm1", 1, 512, 512);
+        let mm128 = Layer::matmul("mm128", 128, 512, 512);
+        let prep = PreparedWorkload::new(&[fc.clone(), mm1.clone(), mm128.clone()]);
+        assert_eq!(prep.distinct(), 3);
+        let cost = evaluate_network(&cfg, &ep, &[fc.clone(), mm1.clone(), mm128.clone()]);
+        assert_eq!(cost.macs, fc.macs() + mm1.macs() + mm128.macs());
+        // Attention decode vs prefill at the same width likewise.
+        let a_pre = Layer::attention("a", 8, 64, 256, 256);
+        let a_dec = Layer::attention("a", 8, 64, 1, 256);
+        assert_eq!(PreparedWorkload::new(&[a_pre, a_dec]).distinct(), 2);
     }
 
     #[test]

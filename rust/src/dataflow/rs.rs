@@ -22,9 +22,17 @@
 //! instead of the dense `c * k`, so a depthwise layer runs `1/c` of the
 //! dense plane passes (and its MAC count shrinks to match — see
 //! [`Layer::macs`]).
+//!
+//! Transformer operators map as dot-product tiles rather than RS planes:
+//! a `matmul` keeps a `[k x n]` weight tile stationary (K across rows, N
+//! across columns, like FC) and streams its `m` activation rows through
+//! it; `attention` runs two chained matmul tilings per head (`Q.K^T` with
+//! the `[head_dim x seq_kv]` key block stationary, then `A.V`), with the
+//! KV-cache bytes joining the compulsory-traffic roofline so a decode
+//! step (`seq_q = 1` against a long cache) lands bandwidth-bound.
 
 use crate::config::AcceleratorConfig;
-use crate::dataflow::layer::Layer;
+use crate::dataflow::layer::{Layer, Op};
 use crate::synth::oracle::EnergyParams;
 
 /// Per-layer mapping/performance result.
@@ -61,7 +69,33 @@ pub fn map_layer(cfg: &AcceleratorConfig, ep: &EnergyParams, layer: &Layer) -> L
     let total_pes = rows * cols;
     let macs = layer.macs();
 
-    let (passes, active_pes) = if layer.is_fc() {
+    let (passes, active_pes) = if let Op::Matmul { k, n, .. } = layer.op {
+        // Weight-stationary: the [k x n] weight matrix tiles K across rows
+        // and N across columns; the m activation rows stream through each
+        // resident tile (m shows up in `macs`, so work conservation below
+        // carries it into cycles).
+        let kd = k as u64;
+        let nd = n as u64;
+        let tile_k = rows.min(kd);
+        let tile_n = cols.min(nd);
+        let passes = kd.div_ceil(tile_k) * nd.div_ceil(tile_n);
+        (passes, (tile_k * tile_n) as f64)
+    } else if let Op::Attention { heads, head_dim, seq_kv, .. } = layer.op {
+        // Two chained matmul tilings per head: Q.K^T keeps the
+        // [head_dim x seq_kv] key block stationary, A.V the
+        // [seq_kv x head_dim] value block; seq_q streams through both
+        // (decode: a single query row).
+        let d = head_dim as u64;
+        let kv = seq_kv as u64;
+        let p_qk = d.div_ceil(rows.min(d)) * kv.div_ceil(cols.min(kv));
+        let a_qk = (rows.min(d) * cols.min(kv)) as f64;
+        let p_av = kv.div_ceil(rows.min(kv)) * d.div_ceil(cols.min(d));
+        let a_av = (rows.min(kv) * cols.min(d)) as f64;
+        let passes = heads as u64 * (p_qk + p_av);
+        // Pass-weighted average occupancy across the two tilings.
+        let active = (p_qk as f64 * a_qk + p_av as f64 * a_av) / (p_qk + p_av) as f64;
+        (passes, active.min(total_pes as f64))
+    } else if layer.is_fc() {
         // K across cols, C across rows; each active PE does one MAC per
         // pass; partial sums reduce down the column.
         let tile_c = rows.min(layer.c as u64);
@@ -102,9 +136,12 @@ pub fn map_layer(cfg: &AcceleratorConfig, ep: &EnergyParams, layer: &Layer) -> L
     // `apply_bandwidth` re-tightens it with the scheduled traffic.
     let act_bits = cfg.quant().act_bits as u64;
     let wt_bits = cfg.quant().wt_bits as u64;
+    // KV-cache reads are compulsory too (keys + values once per step);
+    // zero for every non-attention layer.
     let compulsory_bits = layer.ifmap_elems() * act_bits
         + layer.filter_elems() * wt_bits
-        + layer.ofmap_elems() * act_bits;
+        + layer.ofmap_elems() * act_bits
+        + layer.kv_elems() * act_bits;
     let bytes = compulsory_bits.div_ceil(8);
     with_mem_roofline(cfg, ep, layer, compute_cycles, passes, active_pes, bytes)
 }
@@ -295,6 +332,47 @@ mod tests {
         let pg = map_layer(&cfg, &ep, &grp);
         assert!(pg.compute_cycles < pd.compute_cycles);
         assert!(pg.utilization > 0.0 && pg.utilization <= 1.0);
+    }
+
+    #[test]
+    fn matmul_mapping_tiles_like_weight_stationary() {
+        let (cfg, ep) = setup(PeType::Int16);
+        let l = Layer::matmul("mm", 128, 512, 512);
+        let p = map_layer(&cfg, &ep, &l);
+        // passes = ceil(k/rows)*ceil(n/cols), independent of m
+        let expect = (512u64.div_ceil(cfg.pe_rows as u64))
+            * (512u64.div_ceil(cfg.pe_cols as u64));
+        assert_eq!(p.passes, expect);
+        // work conservation carries the streamed m rows into cycles
+        let capacity = p.cycles as f64 * cfg.num_pes() as f64;
+        assert!(capacity >= l.macs() as f64);
+        assert!(p.utilization > 0.0 && p.utilization <= 1.0);
+        // a decode-shaped matmul (m = 1) does strictly less compute
+        let d = map_layer(&cfg, &ep, &Layer::matmul("mm1", 1, 512, 512));
+        assert!(d.compute_cycles < p.compute_cycles);
+    }
+
+    #[test]
+    fn attention_decode_is_bandwidth_bound_prefill_compute_bound() {
+        let (cfg, ep) = setup(PeType::Int16);
+        let prefill = Layer::attention("a", 16, 64, 1024, 1024);
+        let decode = Layer::attention("a", 16, 64, 1, 1024);
+        let pp = map_layer(&cfg, &ep, &prefill);
+        let pd = map_layer(&cfg, &ep, &decode);
+        for (l, p) in [(&prefill, &pp), (&decode, &pd)] {
+            let capacity = p.cycles as f64 * cfg.num_pes() as f64;
+            assert!(capacity >= l.macs() as f64, "{}", l.name);
+            assert!(p.utilization > 0.0 && p.utilization <= 1.0);
+        }
+        // One query against the full KV cache: the same compulsory KV
+        // bytes buy 1/seq the MACs, so decode stalls on memory while
+        // prefill does not (at the default bandwidth).
+        assert!(pd.stall_cycles > 0, "decode should be bandwidth-bound");
+        assert!(
+            pp.stall_cycles == 0,
+            "prefill should be compute-bound, got {} stall cycles",
+            pp.stall_cycles
+        );
     }
 
     #[test]

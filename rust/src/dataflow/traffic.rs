@@ -17,6 +17,13 @@
 //! [`Layer::filter_elems`] (each filter spans only `c / groups` input
 //! channels), so a depthwise layer moves `1/c` of the dense filter bytes
 //! while its ifmap/ofmap volumes stay unchanged.
+//!
+//! Attention layers add a fourth DRAM class: the KV cache
+//! ([`Layer::kv_elems`], keys + values for every cached position), streamed
+//! once per step flash-attention-style — it never fits a reload schedule,
+//! so it bypasses the resident-schedule choice and lands directly in
+//! `dram_kv_bytes` (and, doubled for write+read, in the GLB count). Zero
+//! for every non-attention layer, keeping CNN traffic byte-identical.
 
 use crate::config::AcceleratorConfig;
 use crate::dataflow::layer::Layer;
@@ -38,6 +45,9 @@ pub struct Traffic {
     pub dram_filter_bytes: u64,
     /// DRAM ofmap bytes (breakdown for reports).
     pub dram_ofmap_bytes: u64,
+    /// DRAM KV-cache bytes (attention layers only; grows with context
+    /// length — the decode-phase bandwidth term).
+    pub dram_kv_bytes: u64,
 }
 
 /// Fraction of the GLB the scheduler allots to ifmaps (rest: filters +
@@ -87,9 +97,13 @@ pub fn layer_traffic(cfg: &AcceleratorConfig, layer: &Layer, perf: &LayerPerf) -
             (cost_b_if as u64, cost_b_wt as u64)
         };
     let dram_ofmap_bits = ofmap_bits; // written once (psums stay on-chip)
+    // KV cache: streamed once per step (flash-attention style), at
+    // activation precision; zero for non-attention layers.
+    let dram_kv_bits = layer.kv_elems() * act_bits;
     let dram_ifmap_bytes = dram_ifmap_bits.div_ceil(8);
     let dram_filter_bytes = dram_filter_bits.div_ceil(8);
     let dram_ofmap_bytes = dram_ofmap_bits.div_ceil(8);
+    let dram_kv_bytes = dram_kv_bits.div_ceil(8);
 
     // ---- GLB level ---------------------------------------------------
     // Every DRAM bit passes through the GLB (write + read), plus RS reuse
@@ -118,7 +132,7 @@ pub fn layer_traffic(cfg: &AcceleratorConfig, layer: &Layer, perf: &LayerPerf) -
     };
 
     let glb_word = q.act_bits.max(8) as u64;
-    let glb_bits_moved = 2 * (dram_ifmap_bits + dram_filter_bits + dram_ofmap_bits)
+    let glb_bits_moved = 2 * (dram_ifmap_bits + dram_filter_bits + dram_ofmap_bits + dram_kv_bits)
         + spad_refill_bits
         + psum_spill_bits
         + ifmap_rereads;
@@ -133,10 +147,11 @@ pub fn layer_traffic(cfg: &AcceleratorConfig, layer: &Layer, perf: &LayerPerf) -
     Traffic {
         glb_accesses,
         noc_bits,
-        dram_bytes: dram_ifmap_bytes + dram_filter_bytes + dram_ofmap_bytes,
+        dram_bytes: dram_ifmap_bytes + dram_filter_bytes + dram_ofmap_bytes + dram_kv_bytes,
         dram_ifmap_bytes,
         dram_filter_bytes,
         dram_ofmap_bytes,
+        dram_kv_bytes,
     }
 }
 
@@ -189,12 +204,44 @@ mod tests {
     #[test]
     fn breakdown_sums_to_total() {
         let cfg = AcceleratorConfig::default_with(PeType::Int16);
-        let l = Layer::conv("c", 64, 64, 56, 56, 3, 1, 1);
-        let t = traffic_for(&cfg, &l);
-        assert_eq!(
-            t.dram_bytes,
-            t.dram_ifmap_bytes + t.dram_filter_bytes + t.dram_ofmap_bytes
-        );
+        for l in [
+            Layer::conv("c", 64, 64, 56, 56, 3, 1, 1),
+            Layer::matmul("mm", 64, 512, 512),
+            Layer::attention("at", 8, 64, 1, 512),
+        ] {
+            let t = traffic_for(&cfg, &l);
+            assert_eq!(
+                t.dram_bytes,
+                t.dram_ifmap_bytes + t.dram_filter_bytes + t.dram_ofmap_bytes + t.dram_kv_bytes,
+                "{}",
+                l.name
+            );
+        }
+    }
+
+    #[test]
+    fn kv_bytes_zero_for_conv_and_matmul() {
+        let cfg = AcceleratorConfig::default_with(PeType::Int16);
+        assert_eq!(traffic_for(&cfg, &Layer::conv("c", 64, 64, 28, 28, 3, 1, 1)).dram_kv_bytes, 0);
+        assert_eq!(traffic_for(&cfg, &Layer::fc("f", 512, 512)).dram_kv_bytes, 0);
+        assert_eq!(traffic_for(&cfg, &Layer::matmul("m", 16, 512, 512)).dram_kv_bytes, 0);
+    }
+
+    #[test]
+    fn kv_traffic_grows_linearly_with_context() {
+        // Per decode step the whole cache is streamed once: KV bytes are
+        // exactly (2 * heads * seq_kv * head_dim) * act_bits / 8.
+        let cfg = AcceleratorConfig::default_with(PeType::Int16);
+        let at = |ctx: u32| Layer::attention("a", 16, 64, 1, ctx);
+        let base = traffic_for(&cfg, &at(256)).dram_kv_bytes;
+        assert_eq!(base, 2 * 16 * 256 * 64 * 16 / 8);
+        for mult in [2u32, 4, 8] {
+            let t = traffic_for(&cfg, &at(256 * mult));
+            assert_eq!(t.dram_kv_bytes, base * mult as u64, "ctx x{mult}");
+        }
+        // and narrower activations shrink the cache proportionally
+        let t8 = traffic_for(&AcceleratorConfig::default_with(PeType::LightPe1), &at(256));
+        assert!(t8.dram_kv_bytes < base);
     }
 
     #[test]

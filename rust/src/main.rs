@@ -126,6 +126,7 @@ SUBCOMMANDS
   optimize  --workload W [--objectives O1,O2 --budget N --pop N --strategy
             nsga2|random|hillclimb --max-area-mm2 X --max-power-mw X
             --max-latency-ms X --min-bits B --uniform
+            --phase prefill|decode --ctx N
             --precision SPEC,... | --act-bits/--wt-bits/... --out DIR]
                                          guided multi-objective search over
                                          hardware x per-layer precision:
@@ -141,7 +142,14 @@ SUBCOMMANDS
   verify    [--vectors N]                gate-level sim vs golden models
   workloads [--workload W]               print layer tables / MAC totals
   analyze   --workload W --pe-type T [config flags as in synth]
-                                         per-layer latency/energy breakdown
+            [--phase prefill|decode|both --ctx N]
+                                         per-layer latency/energy breakdown;
+                                         --phase shapes transformer workloads
+                                         for prefill (ctx-token prompt) or
+                                         decode (1 token vs a ctx-token KV
+                                         cache) and prints a phase summary
+                                         with KV-cache DRAM traffic; 'both'
+                                         composes prefill + ctx x decode
   serve     [--backend ... --train N --concurrency N]
             [--listen HOST:PORT --max-connections N --max-inflight N
              --max-line-bytes B --no-coalesce]
@@ -167,9 +175,11 @@ SUBCOMMANDS
                                          warm-up request) — docs/SERVE.md
 
 WORKLOADS (--workload W)
-  Built-in: vgg16, resnet34, resnet50, mobilenetv1, mobilenetv2.
-  Or a path to a JSON model file (depthwise/grouped convs supported);
-  the schema is documented in docs/WORKLOADS.md.
+  Built-in CNNs: vgg16, resnet34, resnet50, mobilenetv1, mobilenetv2.
+  Built-in transformers: opt-1.3b, llama2-7b (decoder blocks with
+  matmul/attention layers; shape with --phase/--ctx).
+  Or a path to a JSON model file (depthwise/grouped convs and
+  matmul/attention layers supported); schema in docs/WORKLOADS.md.
 
 Artifacts: set QAPPA_ARTIFACTS or run from the repo root (default:
 ./artifacts). `--backend native` needs no artifacts.
@@ -628,6 +638,8 @@ fn cmd_optimize(args: &Args) -> Result<(), QappaError> {
         seed: None,
         per_layer: if args.flag("uniform") { Some(false) } else { None },
         precision,
+        phase: args.opt("phase").map(str::to_string),
+        ctx: flag_opt(args, "ctx")?,
     };
     let session = session_from(args)?;
     let out = args.opt("out").map(str::to_string);
@@ -738,10 +750,12 @@ fn cmd_verify(args: &Args) -> Result<(), QappaError> {
 fn cmd_analyze(args: &Args) -> Result<(), QappaError> {
     let spec = args.require("workload")?.to_string();
     let cfg = parse_config(args)?;
+    let phase = args.opt("phase").map(str::to_string);
+    let ctx = flag_opt(args, "ctx")?;
     args.finish()?;
 
     let session = Qappa::builder().build();
-    let resp = session.analyze(&AnalyzeRequest { workload: spec, config: cfg })?;
+    let resp = session.analyze(&AnalyzeRequest { workload: spec, config: cfg, phase, ctx })?;
     println!(
         "config: {}  ({:.2} mW, {:.0} MHz, {:.3} mm2)",
         resp.config.key(),
@@ -749,13 +763,19 @@ fn cmd_analyze(args: &Args) -> Result<(), QappaError> {
         resp.ppa.fmax_mhz,
         resp.ppa.area_mm2
     );
-    // Mixed-precision workloads get a precision column; plain runs keep
-    // the historical table byte-for-byte.
+    // Mixed-precision workloads get a precision column, phased/transformer
+    // runs arithmetic-intensity and KV columns; plain runs keep the
+    // historical table byte-for-byte.
     let mixed = resp.layers.iter().any(|l| l.precision.is_some());
+    let phased = resp.phase.is_some() || resp.layers.iter().any(|l| l.kv_bytes.is_some());
     let mut header = vec![
         "layer", "MACs_M", "cycles_k", "util", "stall_%", "dram_MB",
         "energy_mJ", "E_compute", "E_dram", "E_other",
     ];
+    if phased {
+        header.push("AI");
+        header.push("KV_MB");
+    }
     if mixed {
         header.push("precision");
     }
@@ -773,6 +793,13 @@ fn cmd_analyze(args: &Args) -> Result<(), QappaError> {
             format!("{:.3}", l.dram_mj),
             format!("{:.3}", l.other_mj),
         ];
+        if phased {
+            row.push(format!("{:.2}", l.macs as f64 / l.dram_bytes.max(1) as f64));
+            row.push(match l.kv_bytes {
+                Some(kv) => format!("{:.2}", kv as f64 / 1e6),
+                None => "-".to_string(),
+            });
+        }
         if mixed {
             row.push(l.precision.clone().unwrap_or_else(|| "-".to_string()));
         }
@@ -785,6 +812,35 @@ fn cmd_analyze(args: &Args) -> Result<(), QappaError> {
         1.0 / resp.latency_s,
         resp.energy_mj
     );
+    if phased {
+        let macs: u64 = resp.layers.iter().map(|l| l.macs).sum();
+        let dram: u64 = resp.layers.iter().map(|l| l.dram_bytes).sum();
+        let kv: u64 = resp.layers.iter().map(|l| l.kv_bytes.unwrap_or(0)).sum();
+        println!(
+            "arithmetic intensity: {:.2} MACs/DRAM-byte; KV-cache traffic: {:.2} MB",
+            macs as f64 / dram.max(1) as f64,
+            kv as f64 / 1e6
+        );
+    }
+    if let Some(p) = &resp.phase {
+        println!(
+            "phase {} @ ctx {}: prefill {:.2} ms / {:.2} mJ; decode {:.3} ms/tok / \
+             {:.3} mJ/tok (KV {:.2} MB/tok)",
+            p.phase,
+            p.ctx,
+            p.prefill_latency_s * 1e3,
+            p.prefill_energy_mj,
+            p.decode_latency_s * 1e3,
+            p.decode_energy_mj,
+            p.kv_dram_bytes as f64 / 1e6
+        );
+        println!(
+            "phase total ({}): {:.2} ms, {:.2} mJ",
+            p.phase,
+            p.total_latency_s * 1e3,
+            p.total_energy_mj
+        );
+    }
     Ok(())
 }
 

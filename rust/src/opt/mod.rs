@@ -24,7 +24,11 @@
 //! Sessions expose the subsystem as [`crate::api::Qappa::optimize`]
 //! (`qappa optimize` on the CLI, the `optimize` op over `qappa serve`);
 //! models come from the session's `ModelStore`, so guided search shares
-//! training passes with every other query.  Grammar, strategy comparison
+//! training passes with every other query.  Transformer workloads are
+//! optimized for one concrete inference phase (`--phase prefill|decode`
+//! with `--ctx`): LLM decode is the bandwidth-bound KV-cache-dominated
+//! regime, so a decode-phase search lands on very different frontiers
+//! than a prefill (compute-bound) one.  Grammar, strategy comparison
 //! and budget guidance: `docs/OPTIMIZER.md`.
 
 pub mod engine;

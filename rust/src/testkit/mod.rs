@@ -82,20 +82,41 @@ pub fn gen_f64(rng: &mut Rng, lo: f64, hi: f64) -> f64 {
     rng.range_f64(lo, hi)
 }
 
+/// Draw a random transformer layer — matmul projections (prefill `m`
+/// spans many rows, decode `m = 1`) and attention over a KV cache with
+/// `seq_q <= seq_kv` — always structurally valid.
+pub fn gen_transformer_layer(rng: &mut Rng) -> crate::dataflow::Layer {
+    use crate::dataflow::Layer;
+    if rng.f64() < 0.5 {
+        // ~1 in 4 matmuls are decode-shaped (single streamed row).
+        let m = if rng.f64() < 0.25 { 1 } else { gen_u32(rng, 2, 512) };
+        Layer::matmul("mm", m, gen_u32(rng, 8, 1024), gen_u32(rng, 8, 1024))
+    } else {
+        let heads = *rng.choice(&[1u32, 2, 4, 8, 16]);
+        let head_dim = *rng.choice(&[16u32, 32, 64, 128]);
+        let seq_kv = gen_u32(rng, 1, 1024);
+        // Decode (seq_q = 1) or prefill-ish (any prefix of the cache).
+        let seq_q = if rng.f64() < 0.5 { 1 } else { gen_u32(rng, 1, seq_kv) };
+        Layer::attention("attn", heads, head_dim, seq_q, seq_kv)
+    }
+}
+
 /// Draw a random DNN layer spanning the full taxonomy — fully-connected,
-/// depthwise, grouped and dense convolutions (see
-/// [`crate::dataflow::Layer`]) — always structurally valid.
+/// depthwise, grouped and dense convolutions plus the transformer kinds
+/// (see [`crate::dataflow::Layer`]) — always structurally valid.
 pub fn gen_layer(rng: &mut Rng) -> crate::dataflow::Layer {
     use crate::dataflow::Layer;
     let roll = rng.f64();
-    if roll < 0.2 {
+    if roll < 0.15 {
+        gen_transformer_layer(rng)
+    } else if roll < 0.3 {
         Layer::fc("fc", gen_u32(rng, 8, 4096), gen_u32(rng, 8, 4096))
-    } else if roll < 0.4 {
+    } else if roll < 0.45 {
         let rs = *rng.choice(&[3u32, 5]);
         let hw = gen_u32(rng, 7, 64).max(rs);
         let c = 4 * gen_u32(rng, 1, 64);
         Layer::dw("dw", c, hw, rs, *rng.choice(&[1u32, 2]), rs / 2)
-    } else if roll < 0.55 {
+    } else if roll < 0.6 {
         let rs = *rng.choice(&[1u32, 3]);
         let hw = gen_u32(rng, 7, 64).max(rs);
         let g = *rng.choice(&[2u32, 4, 8]);
@@ -219,9 +240,80 @@ mod tests {
             l.validate().expect("generated layer valid");
             kinds.insert(l.kind());
         }
-        for kind in ["fc", "dw", "grouped", "conv"] {
+        for kind in ["fc", "dw", "grouped", "conv", "matmul", "attention"] {
             assert!(kinds.contains(kind), "generator never produced '{kind}'");
         }
+    }
+
+    #[test]
+    fn gen_transformer_layer_is_valid_and_covers_both_phases() {
+        use crate::dataflow::layer::Op;
+        let mut rng = Rng::new(13);
+        let (mut decode, mut prefill, mut matmuls) = (0, 0, 0);
+        for _ in 0..400 {
+            let l = gen_transformer_layer(&mut rng);
+            l.validate().expect("generated transformer layer valid");
+            match l.op {
+                Op::Matmul { .. } => matmuls += 1,
+                Op::Attention { seq_q: 1, .. } => decode += 1,
+                Op::Attention { .. } => prefill += 1,
+                Op::Conv => panic!("transformer generator produced conv"),
+            }
+        }
+        assert!(matmuls > 0 && decode > 0 && prefill > 0, "{matmuls}/{decode}/{prefill}");
+    }
+
+    #[test]
+    fn fuzz_malformed_transformer_shapes_name_the_offending_field() {
+        use crate::dataflow::layer::{Layer, Op};
+        forall(
+            "malformed transformer shapes produce field-naming errors",
+            240,
+            31,
+            |rng| {
+                let mut l = gen_transformer_layer(rng);
+                // Mutate one field into an invalid state; record which
+                // field the error must name.
+                let field = match (&mut l.op, rng.below(3) as u32) {
+                    (Op::Matmul { m, .. }, 0) => {
+                        *m = 0;
+                        "m"
+                    }
+                    (Op::Matmul { n, .. }, 1) => {
+                        *n = 0;
+                        "n"
+                    }
+                    (Op::Matmul { .. }, _) => {
+                        l.c += 1; // carried reduction dim out of sync
+                        "k"
+                    }
+                    (Op::Attention { heads, .. }, 0) => {
+                        *heads = 0;
+                        "heads"
+                    }
+                    (Op::Attention { head_dim, .. }, 1) => {
+                        *head_dim = 0;
+                        "head_dim"
+                    }
+                    (Op::Attention { seq_q, seq_kv, .. }, _) => {
+                        *seq_q = *seq_kv + 1; // cache misses query positions
+                        "seq_kv"
+                    }
+                };
+                (l, field)
+            },
+            |(l, field)| {
+                let msg = match l.validate() {
+                    Err(e) => e.to_string(),
+                    Ok(()) => return Err(format!("{l:?} validated despite mutation")),
+                };
+                if msg.contains(&format!("\"{field}\"")) && msg.contains(&l.name) {
+                    Ok(())
+                } else {
+                    Err(format!("error '{msg}' does not name \"{field}\""))
+                }
+            },
+        );
     }
 
     #[test]

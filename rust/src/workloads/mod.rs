@@ -4,8 +4,9 @@
 //!
 //! 1. **Built-in builders** — the paper's three classic CNNs (VGG-16,
 //!    ResNet-34/50) plus the depthwise-separable MobileNetV1/V2 family,
-//!    all at 224x224 inference. Resolve by name with [`by_name`] or
-//!    [`load`].
+//!    all at 224x224 inference, and the transformer decoder stacks
+//!    (`opt-1.3b`, `llama2-7b` — see [`transformer`]). Resolve by name
+//!    with [`by_name`] or [`load`].
 //! 2. **User-supplied JSON** — [`from_json`] ingests an arbitrary network
 //!    from the schema documented in `docs/WORKLOADS.md`, so
 //!    `qappa explore --workload path/to/model.json` evaluates models the
@@ -16,13 +17,26 @@
 //! treats the spec as a JSON file path, and otherwise fails with the full
 //! list of known names.
 
+pub mod transformer;
+
 use crate::api::error::QappaError;
-use crate::dataflow::layer::Layer;
+use crate::dataflow::layer::{Layer, Op};
 use crate::util::json::{obj, Json};
 
+pub use transformer::{
+    has_transformer_ops, llama2_7b, opt_1p3b, shape_for_phase, Phase, DEFAULT_CTX,
+};
+
 /// Canonical names of the built-in workloads, in CLI/help order.
-pub const WORKLOAD_NAMES: [&str; 5] =
-    ["vgg16", "resnet34", "resnet50", "mobilenetv1", "mobilenetv2"];
+pub const WORKLOAD_NAMES: [&str; 7] = [
+    "vgg16",
+    "resnet34",
+    "resnet50",
+    "mobilenetv1",
+    "mobilenetv2",
+    "opt-1.3b",
+    "llama2-7b",
+];
 
 /// Canonical name + builder for a workload alias, if known.
 fn builder(name: &str) -> Option<(&'static str, fn() -> Vec<Layer>)> {
@@ -32,6 +46,8 @@ fn builder(name: &str) -> Option<(&'static str, fn() -> Vec<Layer>)> {
         "resnet50" | "resnet-50" => Some(("resnet50", resnet50)),
         "mobilenetv1" | "mobilenet-v1" | "mobilenet" => Some(("mobilenetv1", mobilenetv1)),
         "mobilenetv2" | "mobilenet-v2" => Some(("mobilenetv2", mobilenetv2)),
+        "opt-1.3b" | "opt1.3b" | "opt-1p3b" => Some(("opt-1.3b", transformer::opt_1p3b)),
+        "llama2-7b" | "llama-2-7b" | "llama2_7b" => Some(("llama2-7b", transformer::llama2_7b)),
         _ => None,
     }
 }
@@ -71,8 +87,9 @@ pub fn load(spec: &str) -> Result<(String, Vec<Layer>), QappaError> {
 /// Parse a workload from JSON text. Returns `(name, layers)`.
 ///
 /// Top level: `{"name": "...", "layers": [ ... ]}`. Each layer object has a
-/// `"type"` of `conv` (default), `grouped`, `dw`, `pw` or `fc`; see
-/// `docs/WORKLOADS.md` for the per-type fields and defaults. Every layer is
+/// `"type"` of `conv` (default), `grouped`, `dw`, `pw`, `fc`, `matmul` or
+/// `attention`; see `docs/WORKLOADS.md` for the per-type fields and
+/// defaults. Every layer is
 /// validated ([`Layer::validate`]) so malformed models fail with the layer
 /// name in the error, not deep inside the dataflow model.
 pub fn from_json(text: &str) -> Result<(String, Vec<Layer>), QappaError> {
@@ -117,27 +134,45 @@ pub fn to_json(name: &str, layers: &[Layer]) -> Json {
             let mut pairs = vec![
                 ("name", Json::Str(l.name.clone())),
                 ("type", Json::Str(l.kind().into())),
-                ("c", num(l.c)),
             ];
-            match l.kind() {
-                "fc" => pairs.push(("k", num(l.k))),
-                "pw" => {
-                    pairs.push(("k", num(l.k)));
-                    pairs.push(("hw", num(l.hw)));
+            // Transformer kinds carry their geometry in `op`, not the conv
+            // fields, so they skip "c" entirely; every conv kind keeps the
+            // original field order (c first) byte-for-byte.
+            match l.op {
+                Op::Matmul { m, k, n } => {
+                    pairs.push(("m", num(m)));
+                    pairs.push(("k", num(k)));
+                    pairs.push(("n", num(n)));
                 }
-                "dw" => {
-                    pairs.push(("hw", num(l.hw)));
-                    pairs.push(("rs", num(l.rs)));
-                    pairs.push(("stride", num(l.stride)));
-                    pairs.push(("pad", num(l.pad)));
+                Op::Attention { heads, head_dim, seq_q, seq_kv } => {
+                    pairs.push(("heads", num(heads)));
+                    pairs.push(("head_dim", num(head_dim)));
+                    pairs.push(("seq_q", num(seq_q)));
+                    pairs.push(("seq_kv", num(seq_kv)));
                 }
-                _ => {
-                    pairs.push(("k", num(l.k)));
-                    pairs.push(("hw", num(l.hw)));
-                    pairs.push(("rs", num(l.rs)));
-                    pairs.push(("stride", num(l.stride)));
-                    pairs.push(("pad", num(l.pad)));
-                    pairs.push(("groups", num(l.groups)));
+                Op::Conv => {
+                    pairs.push(("c", num(l.c)));
+                    match l.kind() {
+                        "fc" => pairs.push(("k", num(l.k))),
+                        "pw" => {
+                            pairs.push(("k", num(l.k)));
+                            pairs.push(("hw", num(l.hw)));
+                        }
+                        "dw" => {
+                            pairs.push(("hw", num(l.hw)));
+                            pairs.push(("rs", num(l.rs)));
+                            pairs.push(("stride", num(l.stride)));
+                            pairs.push(("pad", num(l.pad)));
+                        }
+                        _ => {
+                            pairs.push(("k", num(l.k)));
+                            pairs.push(("hw", num(l.hw)));
+                            pairs.push(("rs", num(l.rs)));
+                            pairs.push(("stride", num(l.stride)));
+                            pairs.push(("pad", num(l.pad)));
+                            pairs.push(("groups", num(l.groups)));
+                        }
+                    }
                 }
             }
             if let Some(q) = l.quant {
@@ -280,10 +315,47 @@ fn layer_shape_from_json(
                 pad: opt_u32(v, "pad", rs / 2, &what)?,
                 groups,
                 quant: None,
+                op: Op::Conv,
             })
         }
+        "matmul" => {
+            // Transformer matmul carries m/k/n only; conv-shape fields
+            // would be silently ignored, so their presence is an error.
+            for f in ["c", "hw", "rs", "stride", "pad", "groups"] {
+                if !matches!(v.get(f), Json::Null) {
+                    return Err(QappaError::Workload(format!(
+                        "{what}: field \"{f}\" is not a \"matmul\" field \
+                         (matmul layers take m/k/n)"
+                    )));
+                }
+            }
+            Ok(Layer::matmul(
+                &name,
+                req_u32(v, "m", what)?,
+                req_u32(v, "k", what)?,
+                req_u32(v, "n", what)?,
+            ))
+        }
+        "attention" => {
+            for f in ["c", "k", "hw", "rs", "stride", "pad", "groups", "m", "n"] {
+                if !matches!(v.get(f), Json::Null) {
+                    return Err(QappaError::Workload(format!(
+                        "{what}: field \"{f}\" is not an \"attention\" field \
+                         (attention layers take heads/head_dim/seq_q/seq_kv)"
+                    )));
+                }
+            }
+            Ok(Layer::attention(
+                &name,
+                req_u32(v, "heads", what)?,
+                req_u32(v, "head_dim", what)?,
+                req_u32(v, "seq_q", what)?,
+                req_u32(v, "seq_kv", what)?,
+            ))
+        }
         other => Err(QappaError::Workload(format!(
-            "{what}: unknown layer type '{other}' (expected conv|grouped|dw|pw|fc)"
+            "{what}: unknown layer type '{other}' \
+             (expected conv|grouped|dw|pw|fc|matmul|attention)"
         ))),
     }
 }
@@ -749,6 +821,73 @@ mod tests {
             r#"{"layers": [{"type": "conv", "c": 4294967299, "k": 64, "hw": 8, "rs": 3}]}"#
         )
         .is_err());
+    }
+
+    #[test]
+    fn transformer_workloads_register_and_alias() {
+        assert_eq!(load("opt-1.3b").unwrap().0, "opt-1.3b");
+        assert_eq!(load("opt1.3b").unwrap().0, "opt-1.3b");
+        assert_eq!(load("llama-2-7b").unwrap().0, "llama2-7b");
+        let (_, layers) = load("llama2-7b").unwrap();
+        assert!(has_transformer_ops(&layers));
+        assert!(!has_transformer_ops(&vgg16()));
+    }
+
+    #[test]
+    fn transformer_layers_parse_from_json() {
+        let text = r#"{
+            "name": "block",
+            "layers": [
+                {"name": "qkv", "type": "matmul", "m": 128, "k": 256, "n": 768},
+                {"name": "attn", "type": "attention", "heads": 4, "head_dim": 64,
+                 "seq_q": 128, "seq_kv": 128, "precision": "int16"},
+                {"type": "fc", "c": 256, "k": 10}
+            ]
+        }"#;
+        let (name, layers) = from_json(text).unwrap();
+        assert_eq!(name, "block");
+        assert_eq!(layers[0], Layer::matmul("qkv", 128, 256, 768));
+        assert_eq!(
+            layers[1],
+            Layer::attention("attn", 4, 64, 128, 128)
+                .with_precision(crate::config::PeType::Int16.spec())
+        );
+        assert!(layers[2].is_fc());
+    }
+
+    #[test]
+    fn transformer_json_is_strict() {
+        // conv-shape fields on a matmul are an error, not ignored
+        let e = from_json(r#"{"layers": [{"type": "matmul", "m": 4, "k": 8, "n": 8, "hw": 32}]}"#)
+            .unwrap_err()
+            .to_string();
+        assert!(e.contains("\"hw\""), "{e}");
+        // missing required fields name the field
+        let e = from_json(r#"{"layers": [{"type": "matmul", "m": 4, "k": 8}]}"#)
+            .unwrap_err()
+            .to_string();
+        assert!(e.contains("\"n\""), "{e}");
+        let e = from_json(
+            r#"{"layers": [{"type": "attention", "heads": 4, "head_dim": 64, "seq_q": 8}]}"#,
+        )
+        .unwrap_err()
+        .to_string();
+        assert!(e.contains("\"seq_kv\""), "{e}");
+        // malformed shapes reach Layer::validate with the field named
+        let e = from_json(
+            r#"{"layers": [{"type": "attention", "heads": 0, "head_dim": 64,
+                 "seq_q": 8, "seq_kv": 8}]}"#,
+        )
+        .unwrap_err()
+        .to_string();
+        assert!(e.contains("\"heads\""), "{e}");
+        let e = from_json(
+            r#"{"layers": [{"type": "attention", "heads": 4, "head_dim": 64,
+                 "seq_q": 16, "seq_kv": 8}]}"#,
+        )
+        .unwrap_err()
+        .to_string();
+        assert!(e.contains("\"seq_kv\""), "{e}");
     }
 
     #[test]

@@ -1,0 +1,239 @@
+//! Transformer/LLM decoder workloads: phase shaping (prefill vs. decode)
+//! and parameterized decoder-block builders.
+//!
+//! A decoder block is expressed with the two transformer layer kinds from
+//! [`crate::dataflow::layer::Op`]:
+//!
+//! * `matmul` — the QKV / output / FFN projections (`[m x k] . [k x n]`,
+//!   weights resident, activations streamed);
+//! * `attention` — scaled-dot-product attention over the KV cache.
+//!
+//! The **phase** model re-shapes the same block for the two serving
+//! regimes:
+//!
+//! * **Prefill** processes the whole prompt at once: matmul `m = ctx`,
+//!   attention `seq_q = seq_kv = ctx`. Lots of MACs per weight/KV byte —
+//!   compute-bound.
+//! * **Decode** emits one token per step: matmul `m = 1`, attention
+//!   `seq_q = 1` against the full `seq_kv = ctx` cache. Every weight and
+//!   KV byte is streamed for a single row of MACs — bandwidth-bound, with
+//!   KV traffic growing linearly in context length.
+//! * **Both** is prefill plus `ctx` decode steps, composed at the
+//!   [`crate::dataflow::NetworkCost`] level (`add`/`scale`) rather than by
+//!   materializing `ctx`-many layer lists.
+//!
+//! Builders ([`opt_1p3b`], [`llama2_7b`], [`transformer`]) emit decoder
+//! blocks only (no embedding/LM-head) in prefill shape at
+//! [`DEFAULT_CTX`]; phase/context shaping is applied downstream by
+//! [`shape_for_phase`]. Per-layer [`crate::config::QuantSpec`] overrides
+//! attach to transformer layers exactly as to conv layers, so the
+//! optimizer can mix precision across QKV/FFN/attention.
+
+use crate::api::error::QappaError;
+use crate::dataflow::layer::{Layer, Op};
+
+/// Default context length for the builders and the `--ctx` flag.
+pub const DEFAULT_CTX: u32 = 2048;
+
+/// Inference phase of a transformer workload.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Phase {
+    /// Process the whole prompt at once (compute-bound).
+    Prefill,
+    /// One token per step against the full KV cache (bandwidth-bound).
+    /// Costs reported per step.
+    Decode,
+    /// Prefill plus `ctx` decode steps, composed additively.
+    Both,
+}
+
+impl Phase {
+    /// Parse a CLI/wire phase label.
+    pub fn parse(s: &str) -> Result<Phase, QappaError> {
+        match s.to_ascii_lowercase().as_str() {
+            "prefill" => Ok(Phase::Prefill),
+            "decode" => Ok(Phase::Decode),
+            "both" => Ok(Phase::Both),
+            other => Err(QappaError::Workload(format!(
+                "unknown phase '{other}' (expected prefill|decode|both)"
+            ))),
+        }
+    }
+
+    /// The canonical label, inverse of [`Phase::parse`].
+    pub fn label(&self) -> &'static str {
+        match self {
+            Phase::Prefill => "prefill",
+            Phase::Decode => "decode",
+            Phase::Both => "both",
+        }
+    }
+}
+
+/// True when the layer list contains any transformer operator — the gate
+/// for `--phase`/`--ctx` (phase shaping is meaningless for pure CNNs).
+pub fn has_transformer_ops(layers: &[Layer]) -> bool {
+    layers.iter().any(Layer::is_transformer)
+}
+
+/// Re-shape a workload for one evaluable phase at context length `ctx`:
+/// matmul `m` becomes the streamed row count (prefill: `ctx`, decode: 1),
+/// attention gets `seq_q` per phase against a `seq_kv = ctx` cache.
+/// Conv-family layers pass through untouched, so hybrid workloads keep
+/// their CNN portion identical across phases.
+///
+/// `Phase::Both` is not an evaluable shape — evaluate prefill and decode
+/// separately and compose with `NetworkCost::add`/`scale` (the session
+/// layer does this); passing it here shapes prefill.
+pub fn shape_for_phase(layers: &[Layer], phase: Phase, ctx: u32) -> Vec<Layer> {
+    let seq_q = match phase {
+        Phase::Decode => 1,
+        Phase::Prefill | Phase::Both => ctx,
+    };
+    layers
+        .iter()
+        .map(|l| {
+            let mut l = l.clone();
+            match l.op {
+                Op::Matmul { k, n, .. } => l.op = Op::Matmul { m: seq_q, k, n },
+                Op::Attention { heads, head_dim, .. } => {
+                    l.op = Op::Attention { heads, head_dim, seq_q, seq_kv: ctx }
+                }
+                Op::Conv => {}
+            }
+            l
+        })
+        .collect()
+}
+
+/// Emit `n_layers` decoder blocks in prefill shape at context `ctx`.
+/// Gated FFNs (Llama-style SwiGLU) add a third FFN projection.
+fn decoder_blocks(
+    d_model: u32,
+    heads: u32,
+    ffn_hidden: u32,
+    n_layers: u32,
+    ctx: u32,
+    gated_ffn: bool,
+) -> Vec<Layer> {
+    debug_assert!(heads > 0 && d_model % heads == 0);
+    let head_dim = d_model / heads;
+    let mut layers = Vec::with_capacity(n_layers as usize * if gated_ffn { 6 } else { 5 });
+    for i in 0..n_layers {
+        let p = format!("blk{i}");
+        layers.push(Layer::matmul(&format!("{p}.attn.qkv"), ctx, d_model, 3 * d_model));
+        layers.push(Layer::attention(&format!("{p}.attn"), heads, head_dim, ctx, ctx));
+        layers.push(Layer::matmul(&format!("{p}.attn.out"), ctx, d_model, d_model));
+        if gated_ffn {
+            layers.push(Layer::matmul(&format!("{p}.ffn.gate"), ctx, d_model, ffn_hidden));
+        }
+        layers.push(Layer::matmul(&format!("{p}.ffn.up"), ctx, d_model, ffn_hidden));
+        layers.push(Layer::matmul(&format!("{p}.ffn.down"), ctx, ffn_hidden, d_model));
+    }
+    layers
+}
+
+/// Generic decoder stack: `n_layers` blocks of width `d_model` with
+/// `heads` attention heads and a non-gated FFN of `d_model * ffn_mult`,
+/// in prefill shape at context `ctx`.
+pub fn transformer(d_model: u32, heads: u32, ffn_mult: u32, n_layers: u32, ctx: u32) -> Vec<Layer> {
+    decoder_blocks(d_model, heads, d_model * ffn_mult, n_layers, ctx, false)
+}
+
+/// OPT-1.3B decoder stack (Zhang et al. 2022): 24 blocks, d_model 2048,
+/// 32 heads, FFN 8192 — ~2.89 TMACs prefill at the default context.
+pub fn opt_1p3b() -> Vec<Layer> {
+    decoder_blocks(2048, 32, 8192, 24, DEFAULT_CTX, false)
+}
+
+/// Llama-2-7B decoder stack (Touvron et al. 2023): 32 blocks, d_model
+/// 4096, 32 heads, gated FFN 11008 — ~14.4 TMACs prefill at the default
+/// context.
+pub fn llama2_7b() -> Vec<Layer> {
+    decoder_blocks(4096, 32, 11008, 32, DEFAULT_CTX, true)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn phase_labels_round_trip() {
+        for p in [Phase::Prefill, Phase::Decode, Phase::Both] {
+            assert_eq!(Phase::parse(p.label()).unwrap(), p);
+        }
+        assert_eq!(Phase::parse("PREFILL").unwrap(), Phase::Prefill);
+        let e = Phase::parse("train").unwrap_err().to_string();
+        assert!(e.contains("train") && e.contains("prefill|decode|both"), "{e}");
+    }
+
+    #[test]
+    fn builders_validate_and_have_expected_structure() {
+        let opt = opt_1p3b();
+        assert_eq!(opt.len(), 24 * 5);
+        let llama = llama2_7b();
+        assert_eq!(llama.len(), 32 * 6);
+        for l in opt.iter().chain(&llama) {
+            l.validate().unwrap_or_else(|e| panic!("{e}"));
+            assert!(l.is_transformer(), "{}", l.name);
+        }
+        assert!(has_transformer_ops(&opt) && has_transformer_ops(&llama));
+        assert_eq!(opt.iter().filter(|l| l.kind() == "attention").count(), 24);
+        assert_eq!(llama.iter().filter(|l| l.kind() == "attention").count(), 32);
+        // generic builder: width/heads/mult knobs flow through
+        let tiny = transformer(256, 4, 4, 2, 128);
+        assert_eq!(tiny.len(), 2 * 5);
+        assert!(matches!(tiny[0].op, Op::Matmul { m: 128, k: 256, n: 768 }));
+        assert!(
+            matches!(tiny[1].op, Op::Attention { heads: 4, head_dim: 64, seq_q: 128, seq_kv: 128 })
+        );
+    }
+
+    #[test]
+    fn builder_mac_totals_match_hand_computation() {
+        // Per block at ctx=2048: qkv 3d^2*ctx + attn 2*d*ctx^2 + out
+        // d^2*ctx + ffn 2*d*ffn*ctx (+ gate d*ffn*ctx when gated).
+        let total = |ls: &[Layer]| ls.iter().map(Layer::macs).sum::<u64>();
+        assert_eq!(total(&opt_1p3b()), 2_886_218_022_912);
+        assert_eq!(total(&llama2_7b()), 14_362_370_637_824);
+    }
+
+    #[test]
+    fn shape_for_phase_rewrites_only_transformer_ops() {
+        let mut layers = transformer(256, 4, 4, 1, 512);
+        layers.push(Layer::fc("head", 256, 32000));
+        let dec = shape_for_phase(&layers, Phase::Decode, 512);
+        assert!(matches!(dec[0].op, Op::Matmul { m: 1, k: 256, n: 768 }));
+        assert!(matches!(
+            dec[1].op,
+            Op::Attention { heads: 4, head_dim: 64, seq_q: 1, seq_kv: 512 }
+        ));
+        assert_eq!(dec.last().unwrap(), layers.last().unwrap(), "conv layers untouched");
+        // prefill at a longer context stretches both m and the cache
+        let pre = shape_for_phase(&layers, Phase::Prefill, 1024);
+        assert!(matches!(pre[0].op, Op::Matmul { m: 1024, .. }));
+        assert!(matches!(pre[1].op, Op::Attention { seq_q: 1024, seq_kv: 1024, .. }));
+        // every reshaped layer still validates (carried fields intact)
+        for l in dec.iter().chain(&pre) {
+            l.validate().unwrap_or_else(|e| panic!("{e}"));
+        }
+        // Both shapes as prefill (the evaluable half of the composition)
+        assert_eq!(shape_for_phase(&layers, Phase::Both, 512), layers);
+    }
+
+    #[test]
+    fn decode_has_fewer_macs_same_kv() {
+        let pre = shape_for_phase(&opt_1p3b(), Phase::Prefill, 1024);
+        let dec = shape_for_phase(&opt_1p3b(), Phase::Decode, 1024);
+        let macs = |ls: &[Layer]| ls.iter().map(Layer::macs).sum::<u64>();
+        let kv = |ls: &[Layer]| ls.iter().map(Layer::kv_elems).sum::<u64>();
+        assert!(macs(&dec) * 512 < macs(&pre), "decode step must be ~1/ctx the MACs");
+        assert_eq!(kv(&dec), kv(&pre), "same cache streamed either phase");
+        // precision overrides survive shaping
+        use crate::config::QuantSpec;
+        let tagged: Vec<Layer> =
+            opt_1p3b().into_iter().map(|l| l.with_precision(QuantSpec::int(4, 4))).collect();
+        let shaped = shape_for_phase(&tagged, Phase::Decode, 256);
+        assert!(shaped.iter().all(|l| l.quant == Some(QuantSpec::int(4, 4))));
+    }
+}

@@ -1,0 +1,172 @@
+//! Integration: the transformer/LLM workload subsystem.
+//!
+//! Pins the serving-phase physics end to end: decode is bandwidth-bound
+//! (arithmetic intensity far below prefill's), KV-cache DRAM traffic grows
+//! linearly in context length, and the composed `both` phase equals
+//! prefill plus `ctx` decode steps at the session layer.  The wire tests
+//! pin serve/session identity for phased `analyze` and `optimize`
+//! requests, including a seeded decode-phase NSGA-II smoke whose frontier
+//! report must be byte-identical across the typed call, a repeat run, and
+//! the serve path — all off one trained model.
+
+use qappa::api::{
+    handle_line, AnalyzeRequest, BackendChoice, OptimizeRequest, Qappa, ResponseBody,
+};
+use qappa::config::{AcceleratorConfig, PeType, QuantSpec};
+use qappa::coordinator::report::opt_frontier_table;
+use qappa::coordinator::DesignSpace;
+use qappa::dataflow::{evaluate_network, NetworkCost};
+use qappa::model::CvConfig;
+use qappa::synth::oracle::energy_params;
+use qappa::workloads::{self, shape_for_phase, Phase};
+
+#[test]
+fn decode_is_bandwidth_bound_and_kv_traffic_is_linear_in_context() {
+    let cfg = AcceleratorConfig::default_with(PeType::Int16);
+    let ep = energy_params(&cfg);
+    let base = workloads::opt_1p3b();
+    let ai = |c: &NetworkCost| c.macs as f64 / c.dram_bytes.max(1) as f64;
+
+    let pre = evaluate_network(&cfg, &ep, &shape_for_phase(&base, Phase::Prefill, 1024));
+    let dec = evaluate_network(&cfg, &ep, &shape_for_phase(&base, Phase::Decode, 1024));
+    assert!(
+        ai(&dec) * 8.0 < ai(&pre),
+        "decode AI {:.3} not well below prefill AI {:.3}",
+        ai(&dec),
+        ai(&pre)
+    );
+    assert!(dec.dram_kv_bytes > 0, "decode must stream the KV cache");
+    assert!(pre.dram_kv_bytes > 0, "prefill attention reads the cache it builds");
+    assert!(
+        dec.dram_kv_bytes <= dec.dram_bytes,
+        "KV traffic is a subset of total DRAM traffic"
+    );
+
+    // One decode step streams the whole cache, so KV bytes are exactly
+    // proportional to context length.
+    let kv = |ctx: u32| {
+        evaluate_network(&cfg, &ep, &shape_for_phase(&base, Phase::Decode, ctx)).dram_kv_bytes
+    };
+    let base_kv = kv(512);
+    assert!(base_kv > 0);
+    assert_eq!(kv(1024), 2 * base_kv, "KV bytes must double with context");
+    assert_eq!(kv(2048), 4 * base_kv, "KV bytes must scale linearly with context");
+}
+
+#[test]
+fn transformer_workloads_roundtrip_through_workload_json() {
+    for name in ["opt-1.3b", "llama2-7b"] {
+        let (canon, layers) = workloads::load(name).unwrap();
+        let text = workloads::to_json(&canon, &layers).to_string();
+        let (name2, parsed) = workloads::from_json(&text).unwrap();
+        assert_eq!(name2, canon);
+        assert_eq!(parsed, layers, "{name} JSON round trip");
+    }
+
+    // per-layer precision overrides survive the round trip on
+    // matmul/attention layers exactly as on conv layers
+    let tagged: Vec<qappa::dataflow::Layer> = workloads::opt_1p3b()
+        .into_iter()
+        .map(|l| l.with_precision(QuantSpec::int(4, 4)))
+        .collect();
+    let text = workloads::to_json("tagged", &tagged).to_string();
+    let (_, parsed) = workloads::from_json(&text).unwrap();
+    assert_eq!(parsed, tagged);
+}
+
+#[test]
+fn phased_analyze_composes_and_matches_over_the_serve_wire() {
+    let session = Qappa::builder().build();
+    let req = |phase: &str| AnalyzeRequest {
+        workload: "opt-1.3b".into(),
+        config: AcceleratorConfig::default_with(PeType::Int16),
+        phase: Some(phase.into()),
+        ctx: Some(512),
+    };
+
+    let both = session.analyze(&req("both")).unwrap();
+    let p = both.phase.as_ref().expect("phased request must return a phase summary");
+    assert_eq!((p.phase.as_str(), p.ctx), ("both", 512));
+    assert!(p.kv_dram_bytes > 0);
+    let lat = p.prefill_latency_s + 512.0 * p.decode_latency_s;
+    let en = p.prefill_energy_mj + 512.0 * p.decode_energy_mj;
+    assert!(
+        (p.total_latency_s - lat).abs() <= 1e-12 * lat,
+        "both latency {} != prefill + ctx*decode {lat}",
+        p.total_latency_s
+    );
+    assert!(
+        (p.total_energy_mj - en).abs() <= 1e-12 * en,
+        "both energy {} != prefill + ctx*decode {en}",
+        p.total_energy_mj
+    );
+    // decode rows carry KV bytes on the wire type
+    let dec = session.analyze(&req("decode")).unwrap();
+    assert!(dec.layers.iter().any(|l| l.kv_bytes.is_some()));
+
+    // the identical request over the serve wire, same session
+    let line = format!(r#"{{"id":3,"op":"analyze","params":{}}}"#, req("both").to_json());
+    let resp = handle_line(&session, &line);
+    assert_eq!(resp.id, Some(3));
+    match resp.result {
+        Ok(ResponseBody::Analyze(wire)) => {
+            assert_eq!(wire, both, "serve and session must agree")
+        }
+        other => panic!("expected an analyze response, got {other:?}"),
+    }
+}
+
+#[test]
+fn seeded_decode_optimize_is_deterministic_across_session_and_serve() {
+    let session = Qappa::builder()
+        .backend(BackendChoice::Native)
+        .space(DesignSpace::tiny())
+        .train_per_type(64)
+        .cv(CvConfig { k: 3, degrees: vec![1, 2], lambdas: vec![1e-3, 1e-2], seed: 1 })
+        .seed(7)
+        .workers(4)
+        .sigma(0.02)
+        .chunk(32)
+        .topk(8)
+        .build();
+    let req = OptimizeRequest {
+        workload: "opt-1.3b".into(),
+        objectives: vec!["latency".into(), "energy".into()],
+        budget: Some(40),
+        pop: Some(12),
+        seed: Some(9),
+        phase: Some("decode".into()),
+        ctx: Some(256),
+        ..Default::default()
+    };
+    let typed = session.optimize(&req).unwrap();
+    assert!(!typed.frontier.is_empty());
+
+    // same seed, same session: bit-identical response
+    let again = session.optimize(&req).unwrap();
+    assert_eq!(again, typed, "same seed must reproduce the decode frontier");
+
+    // the same request over the serve wire
+    let line = format!(r#"{{"id":8,"op":"optimize","params":{}}}"#, req.to_json());
+    let resp = handle_line(&session, &line);
+    assert_eq!(resp.id, Some(8));
+    let wire = match resp.result {
+        Ok(ResponseBody::Optimize(r)) => r,
+        other => panic!("expected an optimize response, got {other:?}"),
+    };
+    assert_eq!(wire, typed, "serve and session must agree for identical seeds");
+    assert_eq!(
+        opt_frontier_table(&wire).to_csv(),
+        opt_frontier_table(&typed).to_csv(),
+        "frontier report must be byte-identical either way"
+    );
+    // one unified model across all three runs
+    assert_eq!(session.store().misses(), 1);
+
+    // gating: `both` has no single evaluable shape; CNNs take no phase
+    let both = OptimizeRequest { phase: Some("both".into()), ..req.clone() };
+    assert_eq!(session.optimize(&both).unwrap_err().kind(), "config");
+    let cnn = OptimizeRequest { workload: "mobilenetv1".into(), ..req.clone() };
+    assert_eq!(session.optimize(&cnn).unwrap_err().kind(), "workload");
+    assert_eq!(session.store().misses(), 1, "rejected requests never train");
+}

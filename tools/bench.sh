@@ -1,8 +1,9 @@
 #!/usr/bin/env bash
 # Measurement mode: run the perf benches and emit machine-readable
-# BENCH_*.json documents (sweep throughput + peak-resident counters,
-# optimizer evals/s + hypervolume-vs-budget + memo hit rates, concurrent
-# serve latency percentiles + loadgen throughput) at the repo root.  CI
+# BENCH_*.json documents (sweep throughput + peak-resident counters +
+# the LLM decode sweep rate [llm_sweep_points_per_s], optimizer evals/s
+# + hypervolume-vs-budget + memo hit rates, concurrent serve latency
+# percentiles + loadgen throughput) at the repo root.  CI
 # uploads them as artifacts, so the repo accumulates a perf trajectory per
 # commit.
 #
