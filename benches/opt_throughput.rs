@@ -50,8 +50,9 @@ fn main() {
                         .expect("search space");
                     let problem = OptProblem {
                         search,
-                        objectives: [Objective::PerfPerArea, Objective::Energy],
+                        objectives: vec![Objective::PerfPerArea, Objective::Energy],
                         constraints: Constraints::default(),
+                        accuracy: None,
                     };
                     let oopts = OptOptions {
                         strategy: kind,
@@ -83,6 +84,53 @@ fn main() {
             report.metric(&format!("frontier/{label}/budget={budget}"), frontier as f64);
             report.metric(&format!("memo_hit_rate/{label}/budget={budget}"), hit_rate);
         }
+    }
+    // Three-objective accuracy search: the per-genome noise-model estimate
+    // rides the scoring loop, so evals/s here gates the accuracy model's
+    // overhead against the classic two-objective path above.
+    println!("=== accuracy objective: latency x energy x accuracy (noise-model proxy) ===");
+    {
+        let budget = 1000usize;
+        let mut hv = 0.0f64;
+        let mut evals = 0usize;
+        let mut frontier = 0usize;
+        let r = Bench::new(&format!("opt/nsga2-accuracy/budget={budget}"))
+            .warmup(0)
+            .samples(3)
+            .run_with_units(budget as f64, "evals", || {
+                let search = SearchSpace::new(&opts.space, palette.clone(), &layers, true)
+                    .expect("search space");
+                let problem = OptProblem {
+                    search,
+                    objectives: vec![
+                        Objective::Latency,
+                        Objective::Energy,
+                        Objective::Accuracy,
+                    ],
+                    constraints: Constraints {
+                        min_accuracy: Some(0.90),
+                        ..Default::default()
+                    },
+                    accuracy: None,
+                };
+                let oopts = OptOptions {
+                    strategy: StrategyKind::Nsga2,
+                    budget,
+                    pop: 64,
+                    seed: 7,
+                    ..Default::default()
+                };
+                let res = run_optimize(&backend, &model, &problem, &oopts, opts.workers)
+                    .expect("optimize");
+                hv = res.hypervolume;
+                evals = res.evaluated;
+                frontier = res.frontier.len();
+            });
+        r.print();
+        println!("  hypervolume {hv:.6e}, frontier {frontier}, {evals} evals");
+        report.push(&r);
+        report.metric(&format!("hypervolume/nsga2-accuracy/budget={budget}"), hv);
+        report.metric(&format!("frontier/nsga2-accuracy/budget={budget}"), frontier as f64);
     }
     if let Some(path) = report.write_if_requested().expect("write bench json") {
         println!("wrote {path}");

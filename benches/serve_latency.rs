@@ -38,10 +38,8 @@ fn session() -> Qappa {
 
 fn main() {
     let explore_req = ExploreRequest { workloads: vec!["resnet34".into()], precision: None };
-    let analyze_req = AnalyzeRequest {
-        workload: "resnet34".into(),
-        config: AcceleratorConfig::default_with(PeType::LightPe1),
-    };
+    let analyze_req =
+        AnalyzeRequest::new("resnet34", AcceleratorConfig::default_with(PeType::LightPe1));
 
     // -------------------------------------------------------------- warm
     let warm = session();

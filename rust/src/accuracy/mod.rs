@@ -1,0 +1,409 @@
+//! Quantization-sensitivity accuracy modeling — the quality axis of the
+//! co-exploration space.
+//!
+//! QAPPA's optimizer searches hardware × per-layer precision, but PPA alone
+//! rewards the degenerate corner: with no accuracy signal, 2-bit weights
+//! everywhere always "win".  QADAM (arXiv:2205.13045) frames the payoff as
+//! Pareto-optimality across *quality and cost*, and QUIDAM
+//! (arXiv:2206.15463) extends the search to choosing the model jointly with
+//! the hardware.  This module supplies the quality signal:
+//!
+//! * [`AccuracyModel`] — a pluggable per-layer quantization-sensitivity
+//!   model.  The default is a QAT-emulation-style noise proxy: quantizing
+//!   an operand to `b` bits injects noise power `∝ 4^-b` (uniform
+//!   quantization SNR halves per bit, i.e. noise power `2^-2b`), each
+//!   layer scales that noise by a structural sensitivity, and the
+//!   MAC-weighted sum composes into a network-level estimate
+//!   `baseline · capacity(width, depth) · exp(-scale · noise)`.
+//! * [`SensitivityTable`] — strict-JSON ingestion of *measured* per-layer
+//!   sensitivities (e.g. from a real QAT sweep), so the proxy is a
+//!   stand-in, not a ceiling.  Parsing mirrors the workload-JSON contract:
+//!   unknown fields, non-positive sensitivities and layer-name mismatches
+//!   are each rejected with an error naming the offending field.
+//!
+//! The estimate is monotone (more bits per layer never decreases it),
+//! permutation-invariant over layer order (it is a weighted sum), and
+//! bounded by `baseline`.  `opt/` consumes it as the `accuracy` maximize
+//! objective and the `min-accuracy` hard constraint; model-side genome
+//! knobs (channel-width / depth multipliers) feed [`AccuracyModel::
+//! estimate_scaled`] through the capacity term.  See `docs/ACCURACY.md`.
+
+use std::collections::BTreeMap;
+
+use crate::api::error::QappaError;
+use crate::config::{MacKind, QuantSpec};
+use crate::dataflow::Layer;
+use crate::util::json::{obj, Json};
+
+/// Default noise→accuracy scale: calibrated so uniform INT4 on a
+/// MobileNet-class net loses ~9% relative accuracy while INT8-activation
+/// datapaths stay within ~5% — the qualitative ordering reported for
+/// LightPE datapaths in the paper's lineage.
+pub const DEFAULT_NOISE_SCALE: f64 = 12.0;
+
+/// Capacity exponents for the model-side knobs: accuracy scales as
+/// `width^WIDTH_EXP · depth^DEPTH_EXP` (EfficientNet-style diminishing
+/// returns; both multipliers live in (0, 1], so capacity ≤ 1).
+pub const WIDTH_EXP: f64 = 0.15;
+/// See [`WIDTH_EXP`].
+pub const DEPTH_EXP: f64 = 0.10;
+
+/// Measured per-layer sensitivity data, as ingested from strict JSON.
+///
+/// Schema (all other fields rejected):
+///
+/// ```json
+/// {
+///   "baseline": 0.709,
+///   "noise_scale": 12.0,
+///   "sensitivity": { "stem": 1.5, "b1.dw": 2.0, "...": 1.0 }
+/// }
+/// ```
+///
+/// `baseline` is the unquantized (float) accuracy in (0, 1]; `noise_scale`
+/// is optional (default [`DEFAULT_NOISE_SCALE`]); `sensitivity` maps every
+/// workload layer name to a positive relative sensitivity.
+#[derive(Debug, Clone, PartialEq)]
+pub struct SensitivityTable {
+    /// Unquantized reference accuracy, in (0, 1].
+    pub baseline: f64,
+    /// Noise→accuracy scale (exponent multiplier).
+    pub noise_scale: f64,
+    /// Per-layer positive sensitivities, keyed by layer name.
+    pub sensitivity: BTreeMap<String, f64>,
+}
+
+fn terr(msg: String) -> QappaError {
+    QappaError::Workload(format!("sensitivity table: {msg}"))
+}
+
+impl SensitivityTable {
+    /// Strict parse from JSON text: unknown fields, missing required
+    /// fields, out-of-range baselines and non-positive sensitivities are
+    /// each errors naming the offending field.
+    pub fn parse(text: &str) -> Result<SensitivityTable, QappaError> {
+        let json = Json::parse(text).map_err(|e| terr(e.to_string()))?;
+        SensitivityTable::from_json(&json)
+    }
+
+    /// Strict decode from a parsed [`Json`] document.
+    pub fn from_json(json: &Json) -> Result<SensitivityTable, QappaError> {
+        let top = json.as_obj().ok_or_else(|| terr("root must be an object".into()))?;
+        for key in top.keys() {
+            if !matches!(key.as_str(), "baseline" | "noise_scale" | "sensitivity") {
+                return Err(terr(format!("unknown field \"{key}\"")));
+            }
+        }
+        let baseline = top
+            .get("baseline")
+            .and_then(Json::as_f64)
+            .ok_or_else(|| terr("field \"baseline\" is required and must be a number".into()))?;
+        if !(baseline.is_finite() && baseline > 0.0 && baseline <= 1.0) {
+            return Err(terr(format!("field \"baseline\" must be in (0, 1], got {baseline}")));
+        }
+        let noise_scale = match top.get("noise_scale") {
+            None => DEFAULT_NOISE_SCALE,
+            Some(v) => {
+                let s = v
+                    .as_f64()
+                    .ok_or_else(|| terr("field \"noise_scale\" must be a number".into()))?;
+                if !(s.is_finite() && s > 0.0) {
+                    return Err(terr(format!(
+                        "field \"noise_scale\" must be a positive number, got {s}"
+                    )));
+                }
+                s
+            }
+        };
+        let sens_obj = top
+            .get("sensitivity")
+            .and_then(Json::as_obj)
+            .ok_or_else(|| terr("field \"sensitivity\" is required and must be an object".into()))?;
+        if sens_obj.is_empty() {
+            return Err(terr("field \"sensitivity\" must not be empty".into()));
+        }
+        let mut sensitivity = BTreeMap::new();
+        for (name, v) in sens_obj {
+            let s = v.as_f64().ok_or_else(|| {
+                terr(format!("field \"sensitivity.{name}\" must be a number"))
+            })?;
+            if !(s.is_finite() && s > 0.0) {
+                return Err(terr(format!(
+                    "field \"sensitivity.{name}\" must be a positive number, got {s}"
+                )));
+            }
+            sensitivity.insert(name.clone(), s);
+        }
+        Ok(SensitivityTable { baseline, noise_scale, sensitivity })
+    }
+
+    /// Compact JSON encoding; [`SensitivityTable::from_json`] round-trips.
+    pub fn to_json(&self) -> Json {
+        let sens = self
+            .sensitivity
+            .iter()
+            .map(|(k, v)| (k.clone(), Json::Num(*v)))
+            .collect::<BTreeMap<_, _>>();
+        obj(vec![
+            ("baseline", Json::Num(self.baseline)),
+            ("noise_scale", Json::Num(self.noise_scale)),
+            ("sensitivity", Json::Obj(sens)),
+        ])
+    }
+
+    /// Validate this table against a workload: every workload layer must
+    /// have an entry and every entry must name a workload layer.  Errors
+    /// name the offending layer/field (mirroring workload-JSON style).
+    pub fn validate_for(&self, layers: &[Layer]) -> Result<(), QappaError> {
+        for l in layers {
+            if !self.sensitivity.contains_key(&l.name) {
+                return Err(terr(format!(
+                    "workload layer '{}' has no entry in field \"sensitivity\"",
+                    l.name
+                )));
+            }
+        }
+        for name in self.sensitivity.keys() {
+            if !layers.iter().any(|l| &l.name == name) {
+                return Err(terr(format!(
+                    "field \"sensitivity.{name}\" does not match any workload layer"
+                )));
+            }
+        }
+        Ok(())
+    }
+}
+
+/// Network-level accuracy estimator over per-layer quantization specs.
+///
+/// Either a structural proxy (sensitivities derived from layer shape) or a
+/// wrapper over a validated measured [`SensitivityTable`] — callers never
+/// branch on which.
+#[derive(Debug, Clone, PartialEq)]
+pub struct AccuracyModel {
+    baseline: f64,
+    noise_scale: f64,
+    /// `None` = structural proxy; `Some` = measured per-layer table.
+    table: Option<BTreeMap<String, f64>>,
+}
+
+impl AccuracyModel {
+    /// The structural proxy: baseline 1.0 (accuracy is reported as the
+    /// fraction of float accuracy retained) and shape-derived
+    /// sensitivities.
+    pub fn proxy() -> AccuracyModel {
+        AccuracyModel { baseline: 1.0, noise_scale: DEFAULT_NOISE_SCALE, table: None }
+    }
+
+    /// Wrap a measured table, validating it covers `layers` exactly.
+    pub fn from_table(
+        table: SensitivityTable,
+        layers: &[Layer],
+    ) -> Result<AccuracyModel, QappaError> {
+        table.validate_for(layers)?;
+        Ok(AccuracyModel {
+            baseline: table.baseline,
+            noise_scale: table.noise_scale,
+            table: Some(table.sensitivity),
+        })
+    }
+
+    /// Unquantized reference accuracy.
+    pub fn baseline(&self) -> f64 {
+        self.baseline
+    }
+
+    /// True when backed by a measured table rather than the proxy.
+    pub fn is_measured(&self) -> bool {
+        self.table.is_some()
+    }
+
+    /// Structural sensitivity of one layer, independent of its position in
+    /// the network (the estimate must be permutation-invariant):
+    /// depthwise layers (no channel mixing to absorb noise) are the most
+    /// fragile, the RGB stem (`c ≤ 3`) and the classifier head amplify
+    /// into few channels, attention is mildly above dense matmuls.
+    pub fn proxy_sensitivity(layer: &Layer) -> f64 {
+        let mut s = 1.0;
+        if layer.is_depthwise() {
+            s *= 2.0;
+        }
+        if layer.c <= 3 {
+            s *= 1.5;
+        }
+        if layer.is_fc() {
+            s *= 1.5;
+        }
+        if matches!(layer.kind(), "attention") {
+            s *= 1.25;
+        }
+        s
+    }
+
+    /// Per-layer sensitivity: the measured entry when backed by a table
+    /// (scaled model variants use a subset of the base layer names, so
+    /// lookups stay covered), else the structural proxy.
+    pub fn sensitivity(&self, layer: &Layer) -> f64 {
+        match &self.table {
+            Some(t) => t.get(&layer.name).copied().unwrap_or_else(|| {
+                AccuracyModel::proxy_sensitivity(layer)
+            }),
+            None => AccuracyModel::proxy_sensitivity(layer),
+        }
+    }
+
+    /// Quantization noise power injected by one PE spec.  Float datapaths
+    /// are the zero-noise reference; integer operands contribute
+    /// `4^-bits` each (noise power `2^-2b`); lightweight shift-add MACs
+    /// cap the *effective* weight precision at `2·terms + 2` bits (each
+    /// signed power-of-two term resolves ~2 bits of the multiplier).
+    pub fn spec_noise(spec: &QuantSpec) -> f64 {
+        fn q(bits: u32) -> f64 {
+            4f64.powi(-(bits.min(512) as i32))
+        }
+        match spec.mac {
+            MacKind::Fp => 0.0,
+            MacKind::IntExact => q(spec.act_bits) + q(spec.wt_bits),
+            MacKind::Lightweight(n) => {
+                q(spec.act_bits) + q(spec.wt_bits.min(2 * n + 2))
+            }
+        }
+    }
+
+    /// Capacity multiplier for the model-side knobs: `width^0.15 ·
+    /// depth^0.10` with both multipliers clamped to (0, 1].
+    pub fn capacity(width_mult: f64, depth_mult: f64) -> f64 {
+        let w = width_mult.clamp(f64::MIN_POSITIVE, 1.0);
+        let d = depth_mult.clamp(f64::MIN_POSITIVE, 1.0);
+        w.powf(WIDTH_EXP) * d.powf(DEPTH_EXP)
+    }
+
+    /// Network-level estimate for a full-size model:
+    /// `baseline · exp(-scale · Σᵢ wᵢ·sᵢ·noise(specᵢ))` with MAC-share
+    /// weights `wᵢ`.  `specs[i]` is the precision layer `i` runs at.
+    pub fn estimate(&self, layers: &[Layer], specs: &[QuantSpec]) -> f64 {
+        self.estimate_scaled(layers, specs, 1.0, 1.0)
+    }
+
+    /// Network-level estimate with model-side knobs applied: the layer
+    /// list is the *scaled variant's* layers and the capacity term prices
+    /// the lost width/depth.
+    pub fn estimate_scaled(
+        &self,
+        layers: &[Layer],
+        specs: &[QuantSpec],
+        width_mult: f64,
+        depth_mult: f64,
+    ) -> f64 {
+        debug_assert_eq!(layers.len(), specs.len());
+        let total: f64 = layers.iter().map(|l| l.macs() as f64).sum();
+        if total <= 0.0 {
+            return self.baseline * AccuracyModel::capacity(width_mult, depth_mult);
+        }
+        let mut noise = 0.0;
+        for (l, spec) in layers.iter().zip(specs) {
+            let w = l.macs() as f64 / total;
+            noise += w * self.sensitivity(l) * AccuracyModel::spec_noise(spec);
+        }
+        self.baseline
+            * AccuracyModel::capacity(width_mult, depth_mult)
+            * (-self.noise_scale * noise).exp()
+    }
+
+    /// Materialize this model's per-layer sensitivities for `layers` as a
+    /// table — the bridge that lets tests pin proxy == table agreement and
+    /// users export the proxy as a starting point for measured data.
+    pub fn to_table(&self, layers: &[Layer]) -> SensitivityTable {
+        let sensitivity = layers
+            .iter()
+            .map(|l| (l.name.clone(), self.sensitivity(l)))
+            .collect::<BTreeMap<_, _>>();
+        SensitivityTable { baseline: self.baseline, noise_scale: self.noise_scale, sensitivity }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::PeType;
+    use crate::workloads;
+
+    fn uniform_specs(layers: &[Layer], spec: QuantSpec) -> Vec<QuantSpec> {
+        vec![spec; layers.len()]
+    }
+
+    #[test]
+    fn float_reference_hits_the_baseline() {
+        let net = workloads::mobilenetv1();
+        let m = AccuracyModel::proxy();
+        let acc = m.estimate(&net, &uniform_specs(&net, PeType::Fp32.spec()));
+        assert!((acc - 1.0).abs() < 1e-12, "{acc}");
+    }
+
+    #[test]
+    fn preset_palette_orders_by_precision() {
+        let net = workloads::mobilenetv1();
+        let m = AccuracyModel::proxy();
+        let acc = |t: PeType| m.estimate(&net, &uniform_specs(&net, t.spec()));
+        let (fp, i16_, l2, l1) = (
+            acc(PeType::Fp32),
+            acc(PeType::Int16),
+            acc(PeType::LightPe2),
+            acc(PeType::LightPe1),
+        );
+        assert!(fp >= i16_ && i16_ > l2 && l2 > l1, "{fp} {i16_} {l2} {l1}");
+        // INT16 is visually lossless, LightPE-1 (4-bit weights) is not.
+        assert!(i16_ > 0.999, "{i16_}");
+        assert!(l1 < 0.99, "{l1}");
+        assert!(l1 > 0.5, "{l1}");
+    }
+
+    #[test]
+    fn capacity_penalizes_slimmer_models() {
+        assert_eq!(AccuracyModel::capacity(1.0, 1.0), 1.0);
+        let slim = AccuracyModel::capacity(0.5, 1.0);
+        let shallow = AccuracyModel::capacity(1.0, 0.5);
+        assert!(slim < 1.0 && shallow < 1.0);
+        assert!(AccuracyModel::capacity(0.5, 0.5) < slim.min(shallow));
+    }
+
+    #[test]
+    fn table_json_round_trips() {
+        let net = workloads::mobilenetv1();
+        let t = AccuracyModel::proxy().to_table(&net);
+        let text = t.to_json().to_string();
+        let back = SensitivityTable::parse(&text).unwrap();
+        assert_eq!(back, t);
+        back.validate_for(&net).unwrap();
+    }
+
+    #[test]
+    fn strict_parse_names_the_offending_field() {
+        let cases = [
+            (r#"{"baseline":0.7,"sensitivity":{"a":1.0},"extra":1}"#, "\"extra\""),
+            (r#"{"sensitivity":{"a":1.0}}"#, "\"baseline\""),
+            (r#"{"baseline":1.7,"sensitivity":{"a":1.0}}"#, "\"baseline\""),
+            (r#"{"baseline":0.7}"#, "\"sensitivity\""),
+            (r#"{"baseline":0.7,"sensitivity":{}}"#, "\"sensitivity\""),
+            (r#"{"baseline":0.7,"sensitivity":{"a":-1.0}}"#, "\"sensitivity.a\""),
+            (r#"{"baseline":0.7,"noise_scale":0,"sensitivity":{"a":1.0}}"#, "\"noise_scale\""),
+        ];
+        for (text, field) in cases {
+            let e = SensitivityTable::parse(text).unwrap_err().to_string();
+            assert!(e.contains(field), "expected {field} in: {e}");
+        }
+    }
+
+    #[test]
+    fn validate_for_names_missing_and_unknown_layers() {
+        let net = workloads::mobilenetv1();
+        let mut t = AccuracyModel::proxy().to_table(&net);
+        t.sensitivity.remove("stem");
+        let e = t.validate_for(&net).unwrap_err().to_string();
+        assert!(e.contains("'stem'"), "{e}");
+        let mut t2 = AccuracyModel::proxy().to_table(&net);
+        t2.sensitivity.insert("ghost".into(), 1.0);
+        let e2 = t2.validate_for(&net).unwrap_err().to_string();
+        assert!(e2.contains("sensitivity.ghost"), "{e2}");
+    }
+}

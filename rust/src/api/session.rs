@@ -32,6 +32,7 @@
 use std::path::PathBuf;
 use std::sync::{Arc, Mutex, OnceLock};
 
+use crate::accuracy::{AccuracyModel, SensitivityTable};
 use crate::api::error::QappaError;
 use crate::api::types::{
     AnalyzeRequest, AnalyzeResponse, ExploreRequest, ExploreResponse, FitRequest, FitResponse,
@@ -51,8 +52,8 @@ use crate::dataflow::Layer;
 use crate::model::native::NativeBackend;
 use crate::model::{Backend, CvConfig};
 use crate::opt::{
-    resolve_objectives, run_optimize_cancellable, CancelToken, OptOptions, OptProblem,
-    SearchSpace, StrategyKind,
+    resolve_objectives, run_optimize_cancellable, CancelToken, Objective, OptOptions,
+    OptProblem, SearchSpace, StrategyKind,
 };
 use crate::runtime::{ArtifactRuntime, Engine, XlaBackend};
 use crate::workloads;
@@ -485,12 +486,55 @@ impl Qappa {
         }
         let per_layer = req.per_layer.unwrap_or(palette.len() > 1);
 
+        // Accuracy model: a measured sensitivity table when the request
+        // embeds one (validated against this workload's layer names so
+        // typos fail loudly), else the engine falls back to the structural
+        // proxy whenever an objective or constraint prices accuracy.
+        let needs_accuracy = objectives.contains(&Objective::Accuracy)
+            || req.constraints.min_accuracy.is_some();
+        let accuracy = match &req.sensitivity {
+            Some(json) => {
+                if !needs_accuracy {
+                    return Err(QappaError::Config(
+                        "optimize: \"sensitivity\" requires an accuracy objective or a \
+                         min_accuracy constraint"
+                            .into(),
+                    ));
+                }
+                Some(AccuracyModel::from_table(SensitivityTable::from_json(json)?, &layers)?)
+            }
+            None => None,
+        };
+
+        // Build the search space (and validate any model knobs) before
+        // training so malformed requests fail without paying a training
+        // pass.
+        let mut search = SearchSpace::new(&self.opts.space, palette.clone(), &layers, per_layer)?;
+        // Model-side knobs: pre-build the scaled variant for every
+        // (width, depth) cell so decode() is a table lookup.  Variants go
+        // through the same phase shaping as the base workload, keeping
+        // their layer lists directly comparable.
+        if !(req.width_mults.is_empty() && req.depth_mults.is_empty()) {
+            let width =
+                if req.width_mults.is_empty() { vec![1.0] } else { req.width_mults.clone() };
+            let depth =
+                if req.depth_mults.is_empty() { vec![1.0] } else { req.depth_mults.clone() };
+            let mut variants = Vec::with_capacity(width.len() * depth.len());
+            for &w in &width {
+                for &d in &depth {
+                    let scaled = workloads::scaled(&name, w, d)?;
+                    let (scaled, _) =
+                        resolve_phase("optimize", &name, scaled, &req.phase, req.ctx)?;
+                    variants.push(scaled);
+                }
+            }
+            search = search.with_model_knobs(width, depth, variants)?;
+        }
+        let problem = OptProblem { search, objectives, constraints: req.constraints, accuracy };
         let backend = self
             .quant_backend
             .get_or_init(|| NativeBackend::new(QUANT_NUM_FEATURES));
         let model = self.store.get_or_train_quant(backend, &self.opts, &palette)?;
-        let search = SearchSpace::new(&self.opts.space, palette, &layers, per_layer)?;
-        let problem = OptProblem { search, objectives, constraints: req.constraints };
         let oopts = OptOptions {
             strategy,
             budget,
@@ -514,12 +558,13 @@ impl Qappa {
                 energy_mj: f.point.energy_mj,
                 ppa: f.point.ppa,
                 precision: f.precision.clone(),
+                accuracy: f.accuracy,
             })
             .collect();
         Ok(OptimizeResponse {
             workload: name,
             strategy: result.strategy.to_string(),
-            objectives: objectives.iter().map(|o| o.label().to_string()).collect(),
+            objectives: problem.objectives.iter().map(|o| o.label().to_string()).collect(),
             evaluated: result.evaluated,
             budget,
             ref_point: result.ref_point.to_vec(),
@@ -630,6 +675,14 @@ impl Qappa {
                 total_energy_mj: total.energy_mj,
             }
         });
+        // Opt-in accuracy estimate: the structural proxy priced at each
+        // layer's effective precision (per-layer override or the config's
+        // uniform spec) — the same estimator the optimizer scores with.
+        let accuracy = (req.accuracy == Some(true)).then(|| {
+            let specs: Vec<crate::config::QuantSpec> =
+                layers.iter().map(|l| l.effective_quant(&cfg)).collect();
+            AccuracyModel::proxy().estimate(&layers, &specs)
+        });
         Ok(AnalyzeResponse {
             workload: name,
             config: cfg,
@@ -638,6 +691,7 @@ impl Qappa {
             latency_s,
             energy_mj,
             phase,
+            accuracy,
         })
     }
 
@@ -845,6 +899,7 @@ mod tests {
             config: cfg,
             phase: Some(phase.into()),
             ctx: Some(ctx),
+            accuracy: None,
         };
         let pre = s.analyze(&req("prefill", 512)).unwrap();
         let dec = s.analyze(&req("decode", 512)).unwrap();
@@ -883,6 +938,7 @@ mod tests {
                 config: cfg,
                 phase: Some("decode".into()),
                 ctx: None,
+                accuracy: None,
             })
             .unwrap_err();
         assert!(e.to_string().contains("transformer"), "{e}");

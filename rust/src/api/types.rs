@@ -742,6 +742,9 @@ fn constraints_to_json(c: &Constraints) -> Json {
     if let Some(b) = c.min_bits {
         pairs.push(("min_bits", num_u(b as u64)));
     }
+    if let Some(a) = c.min_accuracy {
+        pairs.push(("min_accuracy", Json::Num(a)));
+    }
     obj(pairs)
 }
 
@@ -766,6 +769,7 @@ fn constraints_from_json(v: &Json, what: &str) -> Result<Constraints, QappaError
         max_power_mw: opt_f64(v, "max_power_mw", what)?,
         max_latency_ms: opt_f64(v, "max_latency_ms", what)?,
         min_bits,
+        min_accuracy: opt_f64(v, "min_accuracy", what)?,
     })
 }
 
@@ -779,9 +783,22 @@ fn constraints_from_json(v: &Json, what: &str) -> Result<Constraints, QappaError
 #[derive(Debug, Clone, PartialEq, Default)]
 pub struct OptimizeRequest {
     pub workload: String,
-    /// Exactly two objective names once resolved (empty = default pair).
+    /// Two or three objective names once resolved (empty = the default
+    /// pair; a third slot is typically `accuracy`).
     pub objectives: Vec<String>,
     pub constraints: Constraints,
+    /// Measured per-layer quantization-sensitivity table (the JSON schema
+    /// of `docs/ACCURACY.md`), embedded verbatim.  Absent = the built-in
+    /// noise-model proxy whenever accuracy is requested.  Serialized only
+    /// when set, keeping classic requests byte-identical.
+    pub sensitivity: Option<Json>,
+    /// Model width-multiplier axis (channel scaling, each in `(0, 1]`).
+    /// Non-empty adds model-side knobs to the genome; serialized only
+    /// when non-empty.
+    pub width_mults: Vec<f64>,
+    /// Model depth-multiplier axis (block/layer scaling, each in
+    /// `(0, 1]`); same rules as `width_mults`.
+    pub depth_mults: Vec<f64>,
     /// `nsga2` (default) | `random` | `hillclimb`.
     pub strategy: Option<String>,
     /// Distinct-evaluation budget.
@@ -816,6 +833,21 @@ impl OptimizeRequest {
         }
         if !self.constraints.is_empty() {
             pairs.push(("constraints", constraints_to_json(&self.constraints)));
+        }
+        if let Some(t) = &self.sensitivity {
+            pairs.push(("sensitivity", t.clone()));
+        }
+        if !self.width_mults.is_empty() {
+            pairs.push((
+                "width_mults",
+                Json::Arr(self.width_mults.iter().map(|&x| Json::Num(x)).collect()),
+            ));
+        }
+        if !self.depth_mults.is_empty() {
+            pairs.push((
+                "depth_mults",
+                Json::Arr(self.depth_mults.iter().map(|&x| Json::Num(x)).collect()),
+            ));
         }
         if let Some(s) = &self.strategy {
             pairs.push(("strategy", Json::Str(s.clone())));
@@ -859,10 +891,30 @@ impl OptimizeRequest {
             Json::Null => None,
             other => Some(PrecisionRequest::from_json(other)?),
         };
+        let sensitivity = match v.get("sensitivity") {
+            Json::Null => None,
+            other if other.as_obj().is_some() => Some(other.clone()),
+            _ => {
+                return Err(proto(format!(
+                    "{what}: \"sensitivity\" must be a sensitivity-table object"
+                )))
+            }
+        };
+        let mult_axis = |key: &str| -> Result<Vec<f64>, QappaError> {
+            match v.get(key) {
+                Json::Null => Ok(Vec::new()),
+                other => other
+                    .as_f64_vec()
+                    .ok_or_else(|| proto(format!("{what}: \"{key}\" must be a number array"))),
+            }
+        };
         Ok(OptimizeRequest {
             workload: req_str(v, "workload", what)?.to_string(),
             objectives: str_list(v, "objectives", what)?,
             constraints: constraints_from_json(v.get("constraints"), what)?,
+            sensitivity,
+            width_mults: mult_axis("width_mults")?,
+            depth_mults: mult_axis("depth_mults")?,
             strategy,
             budget: opt_usize(v, "budget", what)?,
             pop: opt_usize(v, "pop", what)?,
@@ -890,11 +942,15 @@ pub struct OptPoint {
     /// Precision labels: one per layer (mixed designs), or a single
     /// uniform label.
     pub precision: Vec<String>,
+    /// Estimated top-1 accuracy (fraction of the fp32 baseline); present
+    /// iff the run carried an accuracy objective or constraint.  Absent
+    /// on the wire otherwise, keeping classic responses byte-identical.
+    pub accuracy: Option<f64>,
 }
 
 impl OptPoint {
     fn to_json(&self) -> Json {
-        obj(vec![
+        let mut pairs = vec![
             ("config", self.config.to_json()),
             (
                 "objectives",
@@ -907,7 +963,11 @@ impl OptPoint {
                 "precision",
                 Json::Arr(self.precision.iter().map(|p| Json::Str(p.clone())).collect()),
             ),
-        ])
+        ];
+        if let Some(a) = self.accuracy {
+            pairs.push(("accuracy", Json::Num(a)));
+        }
+        obj(pairs)
     }
 
     fn from_json(v: &Json) -> Result<OptPoint, QappaError> {
@@ -923,6 +983,7 @@ impl OptPoint {
             energy_mj: req_f64(v, "energy_mj", what)?,
             ppa: ppa_from_json(v.get("ppa"), "optimize.ppa")?,
             precision: str_list(v, "precision", what)?,
+            accuracy: opt_f64(v, "accuracy", what)?,
         })
     }
 }
@@ -933,7 +994,7 @@ fn gen_stat_to_json(g: &GenStat) -> Json {
         ("evaluated", num_u(g.evaluated as u64)),
         ("frontier", num_u(g.frontier as u64)),
         ("hypervolume", Json::Num(g.hypervolume)),
-        ("best", Json::Arr(vec![Json::Num(g.best[0]), Json::Num(g.best[1])])),
+        ("best", Json::Arr(g.best.iter().map(|&x| Json::Num(x)).collect())),
     ])
 }
 
@@ -942,14 +1003,14 @@ fn gen_stat_from_json(v: &Json) -> Result<GenStat, QappaError> {
     let best = v
         .get("best")
         .as_f64_vec()
-        .filter(|b| b.len() == 2)
-        .ok_or_else(|| proto(format!("{what}: \"best\" must be a 2-number array")))?;
+        .filter(|b| (2..=3).contains(&b.len()))
+        .ok_or_else(|| proto(format!("{what}: \"best\" must be a 2- or 3-number array")))?;
     Ok(GenStat {
         generation: req_usize(v, "generation", what)?,
         evaluated: req_usize(v, "evaluated", what)?,
         frontier: req_usize(v, "frontier", what)?,
         hypervolume: req_f64(v, "hypervolume", what)?,
-        best: [best[0], best[1]],
+        best,
     })
 }
 
@@ -1079,12 +1140,16 @@ pub struct AnalyzeRequest {
     /// Context length for phase shaping (default
     /// [`workloads::transformer::DEFAULT_CTX`]).
     pub ctx: Option<u32>,
+    /// Opt-in accuracy estimate: `true` attaches the noise-model proxy's
+    /// accuracy prediction to the response.  Serialized only when set, so
+    /// classic requests stay byte-identical on the wire.
+    pub accuracy: Option<bool>,
 }
 
 impl AnalyzeRequest {
     /// Phase-less request (the CNN-era constructor shape).
     pub fn new(workload: impl Into<String>, config: AcceleratorConfig) -> AnalyzeRequest {
-        AnalyzeRequest { workload: workload.into(), config, phase: None, ctx: None }
+        AnalyzeRequest { workload: workload.into(), config, phase: None, ctx: None, accuracy: None }
     }
 
     pub fn to_json(&self) -> Json {
@@ -1098,6 +1163,9 @@ impl AnalyzeRequest {
         if let Some(c) = self.ctx {
             pairs.push(("ctx", num_u(c as u64)));
         }
+        if let Some(a) = self.accuracy {
+            pairs.push(("accuracy", Json::Bool(a)));
+        }
         obj(pairs)
     }
 
@@ -1107,6 +1175,7 @@ impl AnalyzeRequest {
             config: config_from_json(v.get("config"))?,
             phase: opt_str(v, "phase", "analyze")?,
             ctx: opt_u32_nullable(v, "ctx", "analyze")?,
+            accuracy: opt_bool(v, "accuracy", "analyze")?,
         })
     }
 }
@@ -1255,6 +1324,10 @@ pub struct AnalyzeResponse {
     pub energy_mj: f64,
     /// Per-phase summary; present iff the request carried a `phase`.
     pub phase: Option<PhaseSummary>,
+    /// Noise-model accuracy estimate (fraction of the fp32 baseline);
+    /// present iff the request opted in with `accuracy: true`.  Absent on
+    /// the wire otherwise, keeping classic responses byte-identical.
+    pub accuracy: Option<f64>,
 }
 
 impl AnalyzeResponse {
@@ -1269,6 +1342,9 @@ impl AnalyzeResponse {
         ];
         if let Some(p) = &self.phase {
             pairs.push(("phase", p.to_json()));
+        }
+        if let Some(a) = self.accuracy {
+            pairs.push(("accuracy", Json::Num(a)));
         }
         obj(pairs)
     }
@@ -1294,6 +1370,7 @@ impl AnalyzeResponse {
             latency_s: req_f64(v, "latency_s", "analyze")?,
             energy_mj: req_f64(v, "energy_mj", "analyze")?,
             phase,
+            accuracy: opt_f64(v, "accuracy", "analyze")?,
         })
     }
 }
@@ -1884,7 +1961,11 @@ mod tests {
                 max_power_mw: Some(300.0),
                 max_latency_ms: None,
                 min_bits: Some(4),
+                min_accuracy: Some(0.95),
             },
+            sensitivity: None,
+            width_mults: vec![],
+            depth_mults: vec![],
             strategy: Some("nsga2".into()),
             budget: Some(20_000),
             pop: Some(64),
@@ -1937,13 +2018,14 @@ mod tests {
                 energy_mj: 3.25,
                 ppa: Ppa { power_mw: 212.5, fmax_mhz: 900.0, area_mm2: 1.75 },
                 precision: vec!["a4w4p8-int".into(), "LightPE-1".into()],
+                accuracy: None,
             }],
             generations: vec![crate::opt::engine::GenStat {
                 generation: 0,
                 evaluated: 64,
                 frontier: 9,
                 hypervolume: 0.5,
-                best: [0.0625, 3.25],
+                best: vec![0.0625, 3.25],
             }],
             memo: MemoStats {
                 cost_hits: 1200,
@@ -1994,6 +2076,7 @@ mod tests {
             latency_s: 0.0123,
             energy_mj: 12.5,
             phase: None,
+            accuracy: None,
         };
         assert_eq!(
             AnalyzeResponse::from_json(&roundtrip_json(&resp.to_json())).unwrap(),
@@ -2001,6 +2084,7 @@ mod tests {
         );
         let out = resp.to_json().to_string();
         assert!(!out.contains("kv_bytes") && !out.contains("\"phase\""), "{out}");
+        assert!(!out.contains("accuracy"), "{out}");
     }
 
     #[test]
@@ -2010,6 +2094,7 @@ mod tests {
             config: cfg(PeType::Int16),
             phase: Some("decode".into()),
             ctx: Some(2048),
+            accuracy: None,
         };
         assert_eq!(AnalyzeRequest::from_json(&roundtrip_json(&req.to_json())).unwrap(), req);
         // malformed phase/ctx are protocol errors naming the field
@@ -2057,6 +2142,7 @@ mod tests {
                 total_latency_s: 3.822,
                 total_energy_mj: 3200.0,
             }),
+            accuracy: None,
         };
         assert_eq!(
             AnalyzeResponse::from_json(&roundtrip_json(&resp.to_json())).unwrap(),
@@ -2078,6 +2164,98 @@ mod tests {
         assert_eq!(
             OptimizeRequest::from_json(&roundtrip_json(&phased.to_json())).unwrap(),
             phased
+        );
+    }
+
+    #[test]
+    fn optimize_accuracy_fields_roundtrip() {
+        // classic requests never leak the accuracy-era keys
+        let bare = OptimizeRequest { workload: "mobilenetv1".into(), ..Default::default() };
+        let line = bare.to_json().to_string();
+        for absent in ["sensitivity", "width_mults", "depth_mults", "min_accuracy"] {
+            assert!(!line.contains(absent), "bare request leaked \"{absent}\": {line}");
+        }
+
+        // embedded sensitivity table + model knobs + floor travel together
+        let table = Json::parse(
+            r#"{"baseline": 0.7089, "noise_scale": 12.0, "sensitivity": {"conv1": 1.5, "fc": 2.0}}"#,
+        )
+        .unwrap();
+        let req = OptimizeRequest {
+            workload: "mobilenetv1".into(),
+            objectives: vec!["latency".into(), "energy".into(), "accuracy".into()],
+            constraints: Constraints { min_accuracy: Some(0.97), ..Default::default() },
+            sensitivity: Some(table),
+            width_mults: vec![1.0, 0.75],
+            depth_mults: vec![1.0, 0.5],
+            seed: Some(11),
+            ..Default::default()
+        };
+        assert_eq!(OptimizeRequest::from_json(&roundtrip_json(&req.to_json())).unwrap(), req);
+
+        // malformed accuracy-era fields are protocol errors naming the field
+        let e = OptimizeRequest::from_json(
+            &Json::parse(r#"{"workload": "vgg16", "sensitivity": 5}"#).unwrap(),
+        )
+        .unwrap_err();
+        assert!(e.to_string().contains("sensitivity"), "{e}");
+        let e = OptimizeRequest::from_json(
+            &Json::parse(r#"{"workload": "vgg16", "width_mults": "half"}"#).unwrap(),
+        )
+        .unwrap_err();
+        assert!(e.to_string().contains("width_mults"), "{e}");
+        let e = OptimizeRequest::from_json(
+            &Json::parse(r#"{"workload": "vgg16", "constraints": {"min_accuracy": "hi"}}"#)
+                .unwrap(),
+        )
+        .unwrap_err();
+        assert!(e.to_string().contains("min_accuracy"), "{e}");
+
+        // frontier points carry the estimate; generation stats grow a slot
+        let point = OptPoint {
+            config: cfg(PeType::Int16),
+            objectives: vec![0.0625, 3.25, 0.03],
+            throughput: 812.5,
+            energy_mj: 3.25,
+            ppa: Ppa { power_mw: 212.5, fmax_mhz: 900.0, area_mm2: 1.75 },
+            precision: vec!["a8w8p16-int".into()],
+            accuracy: Some(0.97),
+        };
+        assert_eq!(OptPoint::from_json(&roundtrip_json(&point.to_json())).unwrap(), point);
+        let g = crate::opt::engine::GenStat {
+            generation: 2,
+            evaluated: 128,
+            frontier: 12,
+            hypervolume: 0.75,
+            best: vec![0.0625, 3.25, 0.025],
+        };
+        assert_eq!(gen_stat_from_json(&roundtrip_json(&gen_stat_to_json(&g))).unwrap(), g);
+        let e = gen_stat_from_json(
+            &Json::parse(
+                r#"{"generation": 0, "evaluated": 1, "frontier": 1, "hypervolume": 0.5, "best": [1.0]}"#,
+            )
+            .unwrap(),
+        )
+        .unwrap_err();
+        assert!(e.to_string().contains("best"), "{e}");
+
+        // analyze opt-in flag and the response estimate round-trip
+        let mut areq = AnalyzeRequest::new("mobilenetv1", cfg(PeType::Int16));
+        areq.accuracy = Some(true);
+        assert_eq!(AnalyzeRequest::from_json(&roundtrip_json(&areq.to_json())).unwrap(), areq);
+        let aresp = AnalyzeResponse {
+            workload: "mobilenetv1".into(),
+            config: cfg(PeType::Int16),
+            ppa: Ppa { power_mw: 250.5, fmax_mhz: 800.0, area_mm2: 2.75 },
+            layers: vec![],
+            latency_s: 0.0123,
+            energy_mj: 12.5,
+            phase: None,
+            accuracy: Some(0.9991),
+        };
+        assert_eq!(
+            AnalyzeResponse::from_json(&roundtrip_json(&aresp.to_json())).unwrap(),
+            aresp
         );
     }
 

@@ -1,4 +1,6 @@
-//! Pareto-frontier extraction for (maximize perf/area, minimize energy).
+//! Pareto-frontier extraction for (maximize perf/area, minimize energy),
+//! plus an N-objective minimized-space variant ([`IncrementalFrontierNd`],
+//! [`hypervolume_min`]) for the optimizer's 3-objective runs.
 
 /// Return the indices of the Pareto-optimal points among
 /// `(perf_per_area, energy)` pairs: no other point has >= perf/area AND
@@ -156,6 +158,136 @@ impl<T> IncrementalFrontier<T> {
         let pts: Vec<(f64, f64)> =
             self.entries.iter().map(|e| (e.perf_per_area, e.energy)).collect();
         hypervolume(&pts, ref_point)
+    }
+}
+
+/// One frontier entry in N-objective minimized space (every coordinate:
+/// smaller is better), with an arbitrary payload.
+#[derive(Debug, Clone)]
+pub struct FrontierNdEntry<T> {
+    pub objs: Vec<f64>,
+    pub payload: T,
+}
+
+/// True iff `a` weakly dominates `b` in minimized space (`a <= b` on every
+/// axis).  Equal points weakly dominate each other.
+fn weakly_dominates_min(a: &[f64], b: &[f64]) -> bool {
+    a.iter().zip(b).all(|(x, y)| x <= y)
+}
+
+/// Streaming Pareto frontier over N **minimized** objectives — the
+/// 3-objective optimizer's archive.  Semantics mirror
+/// [`IncrementalFrontier`]: weakly-dominated points (including exact
+/// duplicates of a member) are rejected, pushing a point evicts members it
+/// weakly dominates, entries stay in insertion order, and NaN coordinates
+/// are rejected outright.  The 2-objective engine path keeps the original
+/// (maximize, minimize) archive so its hypervolume numbers are untouched.
+#[derive(Debug, Clone)]
+pub struct IncrementalFrontierNd<T> {
+    dim: usize,
+    entries: Vec<FrontierNdEntry<T>>,
+}
+
+impl<T> IncrementalFrontierNd<T> {
+    pub fn new(dim: usize) -> IncrementalFrontierNd<T> {
+        assert!(dim >= 1, "frontier dimension must be >= 1");
+        IncrementalFrontierNd { dim, entries: Vec::new() }
+    }
+
+    /// Offer one minimized point; returns true iff it joined the frontier
+    /// (possibly evicting now-dominated members).
+    pub fn push(&mut self, objs: &[f64], payload: T) -> bool {
+        debug_assert_eq!(objs.len(), self.dim);
+        if objs.len() != self.dim || objs.iter().any(|v| v.is_nan()) {
+            return false;
+        }
+        if self.entries.iter().any(|q| weakly_dominates_min(&q.objs, objs)) {
+            return false;
+        }
+        self.entries.retain(|q| !weakly_dominates_min(objs, &q.objs));
+        self.entries.push(FrontierNdEntry { objs: objs.to_vec(), payload });
+        true
+    }
+
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    /// Members in insertion order.
+    pub fn entries(&self) -> &[FrontierNdEntry<T>] {
+        &self.entries
+    }
+
+    pub fn into_entries(self) -> Vec<FrontierNdEntry<T>> {
+        self.entries
+    }
+
+    /// Hypervolume dominated by the current frontier relative to the
+    /// anti-optimal corner `ref_point` (see [`hypervolume_min`]).
+    pub fn hypervolume(&self, ref_point: &[f64]) -> f64 {
+        let pts: Vec<Vec<f64>> = self.entries.iter().map(|e| e.objs.clone()).collect();
+        hypervolume_min(&pts, ref_point)
+    }
+}
+
+/// Hypervolume of a point set in N-objective **minimized** space: the
+/// volume of the region dominated by the set's Pareto frontier and bounded
+/// by the anti-optimal corner `ref_point` (an upper bound on every
+/// coordinate).  Points that do not strictly improve on the corner on
+/// every axis — or carry a NaN — contribute nothing, and dominated points
+/// never change the result.  Computed by recursive sweep-slicing over the
+/// last axis (exact for any N; the optimizer uses N = 3).
+pub fn hypervolume_min(points: &[Vec<f64>], ref_point: &[f64]) -> f64 {
+    let dim = ref_point.len();
+    let pts: Vec<Vec<f64>> = points
+        .iter()
+        .filter(|p| {
+            p.len() == dim && p.iter().zip(ref_point).all(|(v, r)| !v.is_nan() && v < r)
+        })
+        .cloned()
+        .collect();
+    hv_min_rec(pts, ref_point)
+}
+
+fn hv_min_rec(mut pts: Vec<Vec<f64>>, r: &[f64]) -> f64 {
+    if pts.is_empty() {
+        return 0.0;
+    }
+    match r.len() {
+        0 => 0.0,
+        1 => {
+            let best = pts.iter().map(|p| p[0]).fold(f64::INFINITY, f64::min);
+            r[0] - best
+        }
+        dim => {
+            // Slice along the last axis: between consecutive distinct
+            // levels (and from the last level up to the corner), the
+            // dominated cross-section is the (N-1)-D hypervolume of every
+            // point at or below the slab floor.
+            let k = dim - 1;
+            pts.sort_by(|a, b| a[k].total_cmp(&b[k]));
+            let mut hv = 0.0;
+            let mut i = 0;
+            while i < pts.len() {
+                let z = pts[i][k];
+                let mut j = i + 1;
+                while j < pts.len() && pts[j][k] == z {
+                    j += 1;
+                }
+                let z_next = if j < pts.len() { pts[j][k] } else { r[k] };
+                if z_next > z {
+                    let slice: Vec<Vec<f64>> =
+                        pts[..j].iter().map(|p| p[..k].to_vec()).collect();
+                    hv += (z_next - z) * hv_min_rec(slice, &r[..k]);
+                }
+                i = j;
+            }
+            hv
+        }
     }
 }
 
@@ -435,6 +567,155 @@ mod tests {
                             i + 1
                         ));
                     }
+                }
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn nd_frontier_edge_cases_mirror_the_2d_archive() {
+        let mut f: IncrementalFrontierNd<usize> = IncrementalFrontierNd::new(3);
+        assert!(f.is_empty());
+        assert!(f.push(&[2.0, 3.0, 1.0], 0));
+        // exact duplicate: first-seen wins
+        assert!(!f.push(&[2.0, 3.0, 1.0], 1));
+        // weakly dominated (ties on two axes)
+        assert!(!f.push(&[2.0, 3.0, 2.0], 2));
+        // dominating point evicts
+        assert!(f.push(&[1.0, 3.0, 1.0], 3));
+        assert_eq!(f.len(), 1);
+        assert_eq!(f.entries()[0].payload, 3);
+        // incomparable point joins
+        assert!(f.push(&[5.0, 1.0, 5.0], 4));
+        assert_eq!(f.len(), 2);
+        // NaN never joins
+        assert!(!f.push(&[f64::NAN, 0.0, 0.0], 5));
+        assert_eq!(f.len(), 2);
+    }
+
+    #[test]
+    fn hypervolume_min_known_values() {
+        // one 3-D point: a single box to the corner
+        assert_eq!(hypervolume_min(&[vec![1.0, 1.0, 1.0]], &[2.0, 3.0, 2.0]), 2.0);
+        // two incomparable points with a shared dominated overlap:
+        // vol(A) + vol(B) - vol(A ∩ B) = 16 + 16 - 8 = 24
+        let pts = vec![vec![0.0, 2.0, 0.0], vec![2.0, 0.0, 0.0]];
+        assert_eq!(hypervolume_min(&pts, &[4.0, 4.0, 2.0]), 24.0);
+        // dominated point contributes nothing
+        let with_dom = vec![vec![0.0, 2.0, 0.0], vec![2.0, 0.0, 0.0], vec![3.0, 3.0, 1.0]];
+        assert_eq!(hypervolume_min(&with_dom, &[4.0, 4.0, 2.0]), 24.0);
+        // outside the corner on any axis: clipped away
+        assert_eq!(hypervolume_min(&[vec![1.0, 1.0, 5.0]], &[2.0, 2.0, 2.0]), 0.0);
+        // empty / NaN
+        assert_eq!(hypervolume_min(&[], &[1.0, 1.0, 1.0]), 0.0);
+        assert_eq!(hypervolume_min(&[vec![f64::NAN, 0.0, 0.0]], &[1.0, 1.0, 1.0]), 0.0);
+    }
+
+    #[test]
+    fn hypervolume_min_2d_matches_the_mirrored_classic() {
+        // In 2-D, minimizing x is the classic convention with x negated.
+        testkit::forall(
+            "hv_min 2d == mirrored hv",
+            200,
+            41,
+            |rng: &mut Rng| {
+                let n = 1 + rng.below(30);
+                (0..n)
+                    .map(|_| (rng.range_f64(0.0, 8.0), rng.range_f64(0.0, 8.0)))
+                    .collect::<Vec<_>>()
+            },
+            |pts| {
+                let min_pts: Vec<Vec<f64>> = pts.iter().map(|&(x, y)| vec![x, y]).collect();
+                let a = hypervolume_min(&min_pts, &[9.0, 9.0]);
+                let mirrored: Vec<(f64, f64)> = pts.iter().map(|&(x, y)| (-x, y)).collect();
+                let b = hypervolume(&mirrored, (-9.0, 9.0));
+                if (a - b).abs() > 1e-9 * a.abs().max(1.0) {
+                    return Err(format!("hv_min {a} != mirrored hv {b}"));
+                }
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn property_hypervolume_min_3d_monotone_and_permutation_invariant() {
+        // Adding any point never decreases the dominated volume, and the
+        // result is independent of insertion order.
+        testkit::forall(
+            "hv_min 3d monotone + permutation",
+            150,
+            43,
+            |rng: &mut Rng| {
+                let n = 1 + rng.below(25);
+                let pts: Vec<Vec<f64>> = (0..n)
+                    .map(|_| (0..3).map(|_| rng.below(6) as f64).collect())
+                    .collect();
+                let mut shuffled = pts.clone();
+                rng.shuffle(&mut shuffled);
+                (pts, shuffled)
+            },
+            |(pts, shuffled)| {
+                let r = [6.5, 6.5, 6.5];
+                let full = hypervolume_min(pts, &r);
+                let perm = hypervolume_min(shuffled, &r);
+                if (full - perm).abs() > 1e-9 * full.abs().max(1.0) {
+                    return Err(format!("hv_min not permutation invariant: {full} vs {perm}"));
+                }
+                let mut prev = 0.0;
+                for i in 0..pts.len() {
+                    let hv = hypervolume_min(&pts[..=i], &r);
+                    if hv + 1e-12 < prev {
+                        return Err(format!("hv_min shrank on insert: {prev} -> {hv}"));
+                    }
+                    prev = hv;
+                }
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn property_nd_archive_matches_brute_force_frontier() {
+        // The streaming N-D archive must retain exactly the points no
+        // other point weakly dominates (first-seen among duplicates).
+        testkit::forall(
+            "nd archive == brute force",
+            200,
+            47,
+            |rng: &mut Rng| {
+                let n = 1 + rng.below(40);
+                (0..n)
+                    .map(|_| (0..3).map(|_| rng.below(5) as f64).collect::<Vec<f64>>())
+                    .collect::<Vec<_>>()
+            },
+            |pts| {
+                let mut inc = IncrementalFrontierNd::new(3);
+                for (i, p) in pts.iter().enumerate() {
+                    inc.push(p, i);
+                }
+                let kept: Vec<usize> = inc.entries().iter().map(|e| e.payload).collect();
+                // brute force: i survives iff no j (j != i) weakly
+                // dominates it, except that the first occurrence of a
+                // duplicate group survives its copies.
+                let mut expect = Vec::new();
+                'outer: for (i, p) in pts.iter().enumerate() {
+                    for (j, q) in pts.iter().enumerate() {
+                        if i == j || !weakly_dominates_min(q, p) {
+                            continue;
+                        }
+                        // q == p: only an earlier copy displaces i
+                        if q == p && j > i {
+                            continue;
+                        }
+                        continue 'outer;
+                    }
+                    expect.push(i);
+                }
+                let mut kept_sorted = kept.clone();
+                kept_sorted.sort();
+                if kept_sorted != expect {
+                    return Err(format!("archive {kept_sorted:?} != brute {expect:?}"));
                 }
                 Ok(())
             },

@@ -218,31 +218,50 @@ fn precision_cell(labels: &[String]) -> String {
 /// sorted as the response is (first objective ascending), with the raw
 /// metrics and the precision assignment.
 pub fn opt_frontier_table(resp: &OptimizeResponse) -> Table {
-    let obj0 = format!("{}(min)", resp.objectives.first().map(String::as_str).unwrap_or("obj0"));
-    let obj1 = format!("{}(min)", resp.objectives.get(1).map(String::as_str).unwrap_or("obj1"));
-    let mut t = Table::new(&[
-        "#",
-        obj0.as_str(),
-        obj1.as_str(),
-        "thrpt_inf_s",
-        "energy_mJ",
-        "area_mm2",
-        "power_mW",
-        "precision",
-        "config",
-    ]);
+    // Two objective columns always (the historical shape); a third when
+    // the run searched three.  An accuracy column appears only when some
+    // frontier member carries an estimate, so classic reports stay
+    // byte-identical.
+    let nobj = resp.objectives.len().max(2);
+    let fallback = ["obj0", "obj1", "obj2"];
+    let obj_headers: Vec<String> = (0..nobj)
+        .map(|k| {
+            format!(
+                "{}(min)",
+                resp.objectives
+                    .get(k)
+                    .map(String::as_str)
+                    .unwrap_or(fallback.get(k).copied().unwrap_or("obj"))
+            )
+        })
+        .collect();
+    let with_accuracy = resp.frontier.iter().any(|p| p.accuracy.is_some());
+    let mut header: Vec<&str> = vec!["#"];
+    header.extend(obj_headers.iter().map(String::as_str));
+    header.extend(["thrpt_inf_s", "energy_mJ", "area_mm2", "power_mW"]);
+    if with_accuracy {
+        header.push("accuracy");
+    }
+    header.extend(["precision", "config"]);
+    let mut t = Table::new(&header);
     for (i, p) in resp.frontier.iter().enumerate() {
-        t.row(vec![
-            (i + 1).to_string(),
-            fmt_g(p.objectives.first().copied().unwrap_or(f64::NAN)),
-            fmt_g(p.objectives.get(1).copied().unwrap_or(f64::NAN)),
-            format!("{:.2}", p.throughput),
-            format!("{:.4}", p.energy_mj),
-            format!("{:.4}", p.ppa.area_mm2),
-            format!("{:.2}", p.ppa.power_mw),
-            precision_cell(&p.precision),
-            p.config.key(),
-        ]);
+        let mut row = vec![(i + 1).to_string()];
+        for k in 0..nobj {
+            row.push(fmt_g(p.objectives.get(k).copied().unwrap_or(f64::NAN)));
+        }
+        row.push(format!("{:.2}", p.throughput));
+        row.push(format!("{:.4}", p.energy_mj));
+        row.push(format!("{:.4}", p.ppa.area_mm2));
+        row.push(format!("{:.2}", p.ppa.power_mw));
+        if with_accuracy {
+            row.push(match p.accuracy {
+                Some(a) => format!("{a:.4}"),
+                None => "-".to_string(),
+            });
+        }
+        row.push(precision_cell(&p.precision));
+        row.push(p.config.key());
+        t.row(row);
     }
     t
 }
@@ -251,23 +270,30 @@ pub fn opt_frontier_table(resp: &OptimizeResponse) -> Table {
 /// frontier-size / hypervolume trajectory (hypervolume is measured against
 /// the run's fixed reference corner).
 pub fn opt_convergence_table(resp: &OptimizeResponse) -> Table {
-    let mut t = Table::new(&[
-        "generation",
-        "evaluated",
-        "frontier",
-        "hypervolume",
-        "best_obj0",
-        "best_obj1",
-    ]);
+    // Column count follows the run's objective arity (>= 2, so classic
+    // two-objective reports keep their historical shape byte-for-byte).
+    let nobj = resp
+        .generations
+        .iter()
+        .map(|g| g.best.len())
+        .max()
+        .unwrap_or(resp.objectives.len())
+        .max(2);
+    let best_headers: Vec<String> = (0..nobj).map(|k| format!("best_obj{k}")).collect();
+    let mut header = vec!["generation", "evaluated", "frontier", "hypervolume"];
+    header.extend(best_headers.iter().map(String::as_str));
+    let mut t = Table::new(&header);
     for g in &resp.generations {
-        t.row(vec![
+        let mut row = vec![
             g.generation.to_string(),
             g.evaluated.to_string(),
             g.frontier.to_string(),
             fmt_g(g.hypervolume),
-            fmt_g(g.best[0]),
-            fmt_g(g.best[1]),
-        ]);
+        ];
+        for k in 0..nobj {
+            row.push(g.best.get(k).copied().map(fmt_g).unwrap_or_else(|| "-".to_string()));
+        }
+        t.row(row);
     }
     t
 }
@@ -569,6 +595,7 @@ mod tests {
                     energy_mj: 4.0,
                     ppa: Ppa { power_mw: 210.0, fmax_mhz: 900.0, area_mm2: 1.5 },
                     precision: vec!["LightPE-1".into(); 3],
+                    accuracy: None,
                 },
                 OptPoint {
                     config: AcceleratorConfig::default_with(PeType::Int16),
@@ -577,6 +604,7 @@ mod tests {
                     energy_mj: 3.0,
                     ppa: Ppa { power_mw: 300.0, fmax_mhz: 800.0, area_mm2: 2.5 },
                     precision: vec!["a4w4p8-int".into(), "INT16".into(), "INT16".into()],
+                    accuracy: None,
                 },
             ],
             generations: vec![
@@ -585,14 +613,14 @@ mod tests {
                     evaluated: 32,
                     frontier: 4,
                     hypervolume: 0.75,
-                    best: [0.3, 3.5],
+                    best: vec![0.3, 3.5],
                 },
                 GenStat {
                     generation: 1,
                     evaluated: 96,
                     frontier: 7,
                     hypervolume: 1.25,
-                    best: [0.25, 3.0],
+                    best: vec![0.25, 3.0],
                 },
             ],
             memo: Default::default(),
@@ -601,6 +629,8 @@ mod tests {
         assert_eq!(t.len(), 2);
         let csv = t.to_csv();
         assert!(csv.lines().next().unwrap().contains("perf/area(min)"), "{csv}");
+        // accuracy-free runs keep the classic column set
+        assert!(!csv.lines().next().unwrap().contains("accuracy"), "{csv}");
         // uniform assignment collapses to one label; mixed shows counts
         assert!(csv.contains("LightPE-1"), "{csv}");
         assert!(csv.contains("a4w4p8-int x1 + INT16 x2"), "{csv}");
@@ -609,6 +639,25 @@ mod tests {
         assert!(c.to_csv().contains("hypervolume"));
         // empty precision renders a placeholder, not a panic
         assert_eq!(super::precision_cell(&[]), "-");
+
+        // a three-objective accuracy run grows the matching columns
+        let mut acc = resp.clone();
+        acc.objectives = vec!["latency".into(), "energy".into(), "accuracy".into()];
+        for (p, a) in acc.frontier.iter_mut().zip([0.97, 0.95]) {
+            p.objectives.push(1.0 - a);
+            p.accuracy = Some(a);
+        }
+        for g in &mut acc.generations {
+            g.best.push(0.05);
+        }
+        let ft = opt_frontier_table(&acc);
+        let head = ft.to_csv().lines().next().unwrap().to_string();
+        // both the objective column and the estimate column appear
+        assert!(head.contains("accuracy(min)"), "{head}");
+        assert!(head.matches("accuracy").count() >= 2, "{head}");
+        assert!(ft.to_csv().contains("0.9700"), "{}", ft.to_csv());
+        let ct = opt_convergence_table(&acc);
+        assert!(ct.to_csv().lines().next().unwrap().contains("best_obj2"));
     }
 
     #[test]

@@ -31,7 +31,8 @@
 //! | [`model`]      | §3.4 | PPA regression: features, native baseline, CV driver |
 //! | [`runtime`]    | §3.4 | PJRT artifact loading + batched execution engine |
 //! | [`coordinator`]| §4   | streaming DSE pipeline (sharded sweeps, model cache, incremental Pareto), figure reports (Figs. 2-5) |
-//! | [`opt`]        | —    | guided multi-objective optimizer: constraint-driven NSGA-II / random / hill-climb search over hardware x per-layer precision (`docs/OPTIMIZER.md`) |
+//! | [`opt`]        | —    | guided multi-objective optimizer: constraint-driven NSGA-II / random / hill-climb search over hardware x per-layer precision x model knobs (`docs/OPTIMIZER.md`) |
+//! | [`accuracy`]   | —    | quantization-sensitivity accuracy model: noise-based proxy + measured sensitivity tables, the `accuracy` objective's backend (`docs/ACCURACY.md`) |
 //! | [`util`]       | —    | json / prng / stats / cli / thread-pool substrates |
 //! | [`testkit`]    | —    | property-testing mini-framework (proptest stand-in) with config/layer generators |
 //!
@@ -56,6 +57,7 @@
 //! request died.  Schemas and the wire protocol are documented in
 //! `docs/API.md`.
 
+pub mod accuracy;
 pub mod api;
 pub mod config;
 pub mod coordinator;

@@ -123,27 +123,36 @@ SUBCOMMANDS
                                          through one unified cross-precision
                                          model, one report row per precision
                                          cell (docs/PRECISION.md)
-  optimize  --workload W [--objectives O1,O2 --budget N --pop N --strategy
+  optimize  --workload W [--objectives O1,O2[,O3] --budget N --pop N --strategy
             nsga2|random|hillclimb --max-area-mm2 X --max-power-mw X
-            --max-latency-ms X --min-bits B --uniform
+            --max-latency-ms X --min-bits B --min-accuracy A --uniform
+            --sensitivity FILE --width-mults M,... --depth-mults M,...
             --phase prefill|decode --ctx N
             --precision SPEC,... | --act-bits/--wt-bits/... --out DIR]
                                          guided multi-objective search over
-                                         hardware x per-layer precision:
-                                         NSGA-II under an evaluation budget
-                                         and hard constraints, frontier +
-                                         convergence report
+                                         hardware x model knobs x per-layer
+                                         precision: NSGA-II under an
+                                         evaluation budget and hard
+                                         constraints, frontier + convergence
+                                         report
                                          (docs/OPTIMIZER.md); objectives:
                                          latency, energy, area, power,
-                                         perf/area, perf/energy, edp
+                                         perf/area, perf/energy, edp,
+                                         accuracy (noise-model estimate, or
+                                         a measured --sensitivity table —
+                                         docs/ACCURACY.md); --width-mults /
+                                         --depth-mults add channel-width and
+                                         depth multipliers to the genome
   figures   [--all --backend ... --out DIR]
                                          regenerate every figure into CSVs
   rtl       --pe-type T [--out FILE]     emit generated Verilog
   verify    [--vectors N]                gate-level sim vs golden models
   workloads [--workload W]               print layer tables / MAC totals
   analyze   --workload W --pe-type T [config flags as in synth]
-            [--phase prefill|decode|both --ctx N]
+            [--phase prefill|decode|both --ctx N --accuracy]
                                          per-layer latency/energy breakdown;
+                                         --accuracy appends the noise-model
+                                         accuracy estimate (docs/ACCURACY.md);
                                          --phase shapes transformer workloads
                                          for prefill (ctx-token prompt) or
                                          decode (1 token vs a ctx-token KV
@@ -604,8 +613,25 @@ fn flag_opt<T: std::str::FromStr>(args: &Args, name: &str) -> Result<Option<T>, 
     }
 }
 
-/// `qappa optimize`: guided multi-objective search over hardware x
-/// per-layer precision (docs/OPTIMIZER.md).  Thin client of
+/// Comma-separated multiplier list (`--width-mults 1.0,0.75`); absent ->
+/// empty (no model knob on that axis).
+fn parse_mults(args: &Args, name: &str) -> Result<Vec<f64>, QappaError> {
+    match args.opt(name) {
+        None => Ok(Vec::new()),
+        Some(s) => s
+            .split(',')
+            .map(str::trim)
+            .filter(|v| !v.is_empty())
+            .map(|v| {
+                v.parse::<f64>()
+                    .map_err(|_| QappaError::Config(format!("--{name}: cannot parse '{v}'")))
+            })
+            .collect(),
+    }
+}
+
+/// `qappa optimize`: guided multi-objective search over hardware x model
+/// knobs x per-layer precision (docs/OPTIMIZER.md).  Thin client of
 /// [`Qappa::optimize`] — the CLI, the serve loop and library callers all
 /// produce identical frontiers for identical seeds.
 fn cmd_optimize(args: &Args) -> Result<(), QappaError> {
@@ -621,6 +647,19 @@ fn cmd_optimize(args: &Args) -> Result<(), QappaError> {
         })
         .unwrap_or_default();
     let precision = parse_precision_flags(args)?;
+    // Measured sensitivity table: parse here so a bad path or malformed
+    // JSON errors before any session spins up; schema checks (unknown
+    // fields, layer coverage) stay in the session/accuracy layer.
+    let sensitivity = match args.opt("sensitivity") {
+        None => None,
+        Some(path) => {
+            let text = std::fs::read_to_string(path)
+                .map_err(|e| QappaError::io(format!("reading {path}"), e))?;
+            Some(qappa::util::json::Json::parse(&text).map_err(|e| {
+                QappaError::Config(format!("--sensitivity {path}: {e}"))
+            })?)
+        }
+    };
     let req = OptimizeRequest {
         workload,
         objectives,
@@ -629,7 +668,11 @@ fn cmd_optimize(args: &Args) -> Result<(), QappaError> {
             max_power_mw: flag_opt(args, "max-power-mw")?,
             max_latency_ms: flag_opt(args, "max-latency-ms")?,
             min_bits: flag_opt(args, "min-bits")?,
+            min_accuracy: flag_opt(args, "min-accuracy")?,
         },
+        sensitivity,
+        width_mults: parse_mults(args, "width-mults")?,
+        depth_mults: parse_mults(args, "depth-mults")?,
         strategy: args.opt("strategy").map(str::to_string),
         budget: flag_opt(args, "budget")?,
         pop: flag_opt(args, "pop")?,
@@ -658,11 +701,10 @@ fn cmd_optimize(args: &Args) -> Result<(), QappaError> {
         resp.budget
     );
     println!(
-        "frontier: {} points, hypervolume {:.6e} (ref [{}, {}])",
+        "frontier: {} points, hypervolume {:.6e} (ref [{}])",
         resp.frontier.len(),
         resp.hypervolume,
-        resp.ref_point.first().copied().unwrap_or(f64::NAN),
-        resp.ref_point.get(1).copied().unwrap_or(f64::NAN)
+        resp.ref_point.iter().map(|x| x.to_string()).collect::<Vec<_>>().join(", ")
     );
     print!("{}", opt_frontier_table(&resp).render());
     println!("convergence:");
@@ -752,10 +794,12 @@ fn cmd_analyze(args: &Args) -> Result<(), QappaError> {
     let cfg = parse_config(args)?;
     let phase = args.opt("phase").map(str::to_string);
     let ctx = flag_opt(args, "ctx")?;
+    let accuracy = args.flag("accuracy").then_some(true);
     args.finish()?;
 
     let session = Qappa::builder().build();
-    let resp = session.analyze(&AnalyzeRequest { workload: spec, config: cfg, phase, ctx })?;
+    let resp =
+        session.analyze(&AnalyzeRequest { workload: spec, config: cfg, phase, ctx, accuracy })?;
     println!(
         "config: {}  ({:.2} mW, {:.0} MHz, {:.3} mm2)",
         resp.config.key(),
@@ -840,6 +884,9 @@ fn cmd_analyze(args: &Args) -> Result<(), QappaError> {
             p.total_latency_s * 1e3,
             p.total_energy_mj
         );
+    }
+    if let Some(a) = resp.accuracy {
+        println!("estimated accuracy: {:.4} of the fp32 baseline (docs/ACCURACY.md)", a);
     }
     Ok(())
 }

@@ -25,10 +25,11 @@ use std::collections::HashMap;
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::Arc;
 
+use crate::accuracy::AccuracyModel;
 use crate::api::error::QappaError;
-use crate::config::AcceleratorConfig;
+use crate::config::{AcceleratorConfig, QuantSpec};
 use crate::coordinator::explorer::DsePoint;
-use crate::coordinator::pareto::IncrementalFrontier;
+use crate::coordinator::pareto::{IncrementalFrontier, IncrementalFrontierNd};
 use crate::coordinator::sweep::{
     eval_point, eval_point_prepared, legacy_eval_env, predict_configs_legacy,
     predict_configs_soa, trace,
@@ -96,9 +97,22 @@ impl StrategyKind {
 /// One guided-search problem: the domain plus what "better" means.
 pub struct OptProblem<'a> {
     pub search: SearchSpace<'a>,
-    /// Two minimized objectives (see [`crate::opt::objective`]).
-    pub objectives: [Objective; 2],
+    /// Two or three minimized objectives (see [`crate::opt::objective`]).
+    pub objectives: Vec<Objective>,
     pub constraints: Constraints,
+    /// Accuracy estimator backing the `accuracy` objective and the
+    /// `min_accuracy` constraint; `None` falls back to the structural
+    /// proxy when either is in play.
+    pub accuracy: Option<AccuracyModel>,
+}
+
+impl<'a> OptProblem<'a> {
+    /// Whether any objective or constraint needs a per-genome accuracy
+    /// estimate.
+    pub fn needs_accuracy(&self) -> bool {
+        self.objectives.iter().any(|o| o.needs_accuracy())
+            || self.constraints.min_accuracy.is_some()
+    }
 }
 
 /// Engine knobs.
@@ -133,10 +147,13 @@ impl Default for OptOptions {
 #[derive(Debug, Clone)]
 pub struct EvalRecord {
     pub point: DsePoint,
-    /// Minimized objective values, problem order.
-    pub objs: [f64; 2],
+    /// Minimized objective values, problem order (one per objective).
+    pub objs: Vec<f64>,
     /// Total normalized constraint violation (0 = feasible).
     pub violation: f64,
+    /// Top-1 accuracy estimate in [0, 1]; `Some` only when the problem
+    /// needs accuracy (objective or `min_accuracy` constraint).
+    pub accuracy: Option<f64>,
 }
 
 /// Per-generation (or per-round) convergence snapshot.
@@ -150,7 +167,7 @@ pub struct GenStat {
     /// Archive hypervolume w.r.t. the run's fixed reference corner.
     pub hypervolume: f64,
     /// Best (minimum) value seen per objective among feasible points.
-    pub best: [f64; 2],
+    pub best: Vec<f64>,
 }
 
 /// One frontier member of a finished run.
@@ -158,10 +175,12 @@ pub struct GenStat {
 pub struct FrontierPoint {
     pub genome: Genome,
     pub point: DsePoint,
-    /// Minimized objective values, problem order.
-    pub objs: [f64; 2],
+    /// Minimized objective values, problem order (one per objective).
+    pub objs: Vec<f64>,
     /// Precision labels (one per layer, or a single uniform label).
     pub precision: Vec<String>,
+    /// Accuracy estimate; `Some` only on accuracy-aware runs.
+    pub accuracy: Option<f64>,
 }
 
 /// Result of one guided-search run.
@@ -171,7 +190,7 @@ pub struct OptResult {
     pub evaluated: usize,
     /// The run's reference corner in minimized-objective space (fixed
     /// after the first batch; hypervolumes are measured against it).
-    pub ref_point: [f64; 2],
+    pub ref_point: Vec<f64>,
     /// Final archive hypervolume.
     pub hypervolume: f64,
     /// Global feasible frontier, sorted by the first objective ascending.
@@ -192,6 +211,57 @@ enum Slot {
     Skipped,
 }
 
+/// Frontier payload: the genome, its design point and (on accuracy-aware
+/// runs) the accuracy estimate.
+type ArchivePayload = (Genome, DsePoint, Option<f64>);
+
+/// The global feasible-frontier archive.  Two-objective runs keep the
+/// original transformed-coordinate [`IncrementalFrontier`] (push
+/// `(-objs[0], objs[1])`, hypervolume at `(-r[0], r[1])`) bit-for-bit;
+/// three-objective runs use the N-dimensional minimized-space archive.
+enum Archive {
+    Two(IncrementalFrontier<ArchivePayload>),
+    Many(IncrementalFrontierNd<ArchivePayload>),
+}
+
+impl Archive {
+    fn new(nobj: usize) -> Archive {
+        if nobj == 2 {
+            Archive::Two(IncrementalFrontier::new())
+        } else {
+            Archive::Many(IncrementalFrontierNd::new(nobj))
+        }
+    }
+
+    fn push(&mut self, objs: &[f64], payload: ArchivePayload) -> bool {
+        match self {
+            Archive::Two(f) => f.push(-objs[0], objs[1], payload),
+            Archive::Many(f) => f.push(objs, payload),
+        }
+    }
+
+    fn len(&self) -> usize {
+        match self {
+            Archive::Two(f) => f.len(),
+            Archive::Many(f) => f.len(),
+        }
+    }
+
+    fn hypervolume(&self, r: &[f64]) -> f64 {
+        match self {
+            Archive::Two(f) => f.hypervolume((-r[0], r[1])),
+            Archive::Many(f) => f.hypervolume(r),
+        }
+    }
+
+    fn into_payloads(self) -> Vec<ArchivePayload> {
+        match self {
+            Archive::Two(f) => f.into_entries().into_iter().map(|e| e.payload).collect(),
+            Archive::Many(f) => f.into_entries().into_iter().map(|e| e.payload).collect(),
+        }
+    }
+}
+
 /// Batched, cached, budget-capped evaluation of genomes, folding every
 /// feasible point into the global frontier archive.
 pub struct Evaluator<'a> {
@@ -203,15 +273,17 @@ pub struct Evaluator<'a> {
     cache: HashMap<Vec<u32>, EvalRecord>,
     /// Distinct evaluations spent.
     pub evaluated: usize,
-    /// Global feasible frontier in transformed coordinates
-    /// (`(-objs[0], objs[1])` — maximize/minimize form of the shared
-    /// [`IncrementalFrontier`]).
-    pub archive: IncrementalFrontier<(Genome, DsePoint)>,
+    /// Global feasible frontier (see [`Archive`]).
+    archive: Archive,
+    /// Objective count (2 or 3), cached off the problem.
+    nobj: usize,
+    /// Accuracy estimator, materialized only when the problem needs it.
+    acc_model: Option<AccuracyModel>,
     /// Fixed after the first batch (see [`Evaluator::freeze_ref`]).
-    ref_point: Option<[f64; 2]>,
-    max_feasible: Option<[f64; 2]>,
-    max_all: [f64; 2],
-    best: [f64; 2],
+    ref_point: Option<Vec<f64>>,
+    max_feasible: Option<Vec<f64>>,
+    max_all: Vec<f64>,
+    best: Vec<f64>,
     /// Per-point legacy evaluation (the pre-SoA oracle).
     legacy: bool,
     /// Cooperative cancellation: when fired, `remaining()` reports 0 and
@@ -230,6 +302,12 @@ impl<'a> Evaluator<'a> {
         workers: usize,
         budget: usize,
     ) -> Evaluator<'a> {
+        let nobj = problem.objectives.len();
+        let acc_model = if problem.needs_accuracy() {
+            Some(problem.accuracy.clone().unwrap_or_else(AccuracyModel::proxy))
+        } else {
+            None
+        };
         Evaluator {
             backend,
             model,
@@ -238,11 +316,13 @@ impl<'a> Evaluator<'a> {
             budget,
             cache: HashMap::new(),
             evaluated: 0,
-            archive: IncrementalFrontier::new(),
+            archive: Archive::new(nobj),
+            nobj,
+            acc_model,
             ref_point: None,
             max_feasible: None,
-            max_all: [f64::NEG_INFINITY; 2],
-            best: [f64::INFINITY; 2],
+            max_all: vec![f64::NEG_INFINITY; nobj],
+            best: vec![f64::INFINITY; nobj],
             legacy: legacy_eval_env(),
             cancel: CancelToken::new(),
             ctx: EvalContext::new(),
@@ -279,8 +359,8 @@ impl<'a> Evaluator<'a> {
         self.problem
     }
 
-    pub fn best(&self) -> [f64; 2] {
-        self.best
+    pub fn best(&self) -> &[f64] {
+        &self.best
     }
 
     /// Evaluate a batch: cached genomes are free, fresh genomes spend
@@ -355,28 +435,44 @@ impl<'a> Evaluator<'a> {
                     None => eval_point(cfg, *ppa, layers),
                 });
             trace(&format!("opt/eval_batch({})", pts.len()), t0);
-            for (g, p) in fresh.iter().zip(pts) {
-                let objs = [
-                    self.problem.objectives[0].value(&p),
-                    self.problem.objectives[1].value(&p),
-                ];
-                let violation = self.problem.constraints.violation(&p);
-                for k in 0..2 {
+            let nobj = self.nobj;
+            for ((g, p), (cfg, _, layers, _)) in fresh.iter().zip(pts).zip(items.iter()) {
+                // Accuracy is a genome property (precision assignment +
+                // model knobs), not a pipeline output — estimate it from
+                // the decoded layers' effective specs when the problem
+                // asks for it.
+                let accuracy = self.acc_model.as_ref().map(|am| {
+                    let specs: Vec<QuantSpec> =
+                        layers.iter().map(|l| l.effective_quant(cfg)).collect();
+                    let (w, d) = self.problem.search.model_mults(g);
+                    am.estimate_scaled(layers, &specs, w, d)
+                });
+                let objs: Vec<f64> = self
+                    .problem
+                    .objectives
+                    .iter()
+                    .map(|o| o.value_with(&p, accuracy))
+                    .collect();
+                let violation = self.problem.constraints.violation(&p)
+                    + self.problem.constraints.accuracy_violation(accuracy);
+                for k in 0..nobj {
                     if objs[k].is_finite() {
                         self.max_all[k] = self.max_all[k].max(objs[k]);
                     }
                 }
                 if violation == 0.0 {
-                    let mf = self.max_feasible.get_or_insert([f64::NEG_INFINITY; 2]);
-                    for k in 0..2 {
+                    let mf = self
+                        .max_feasible
+                        .get_or_insert_with(|| vec![f64::NEG_INFINITY; nobj]);
+                    for k in 0..nobj {
                         if objs[k].is_finite() {
                             mf[k] = mf[k].max(objs[k]);
                             self.best[k] = self.best[k].min(objs[k]);
                         }
                     }
-                    self.archive.push(-objs[0], objs[1], (g.clone(), p.clone()));
+                    self.archive.push(&objs, (g.clone(), p.clone(), accuracy));
                 }
-                let rec = EvalRecord { point: p, objs, violation };
+                let rec = EvalRecord { point: p, objs, violation, accuracy };
                 self.cache.insert(g.key(), rec.clone());
                 records.push(rec);
             }
@@ -401,21 +497,21 @@ impl<'a> Evaluator<'a> {
         if self.ref_point.is_some() {
             return;
         }
-        let base = self.max_feasible.unwrap_or(self.max_all);
-        let r = |x: f64| if x.is_finite() && x > 0.0 { 1.25 * x } else { 1.0 };
-        self.ref_point = Some([r(base[0]), r(base[1])]);
+        let base = self.max_feasible.as_ref().unwrap_or(&self.max_all);
+        let r = |x: &f64| if x.is_finite() && *x > 0.0 { 1.25 * x } else { 1.0 };
+        self.ref_point = Some(base.iter().map(r).collect());
     }
 
     /// The run's reference corner (freezing it now if needed).
-    pub fn ref_point(&mut self) -> [f64; 2] {
+    pub fn ref_point(&mut self) -> Vec<f64> {
         self.freeze_ref();
-        self.ref_point.expect("ref point frozen")
+        self.ref_point.clone().expect("ref point frozen")
     }
 
     /// Archive hypervolume w.r.t. the fixed reference corner.
     pub fn hypervolume(&mut self) -> f64 {
         let r = self.ref_point();
-        self.archive.hypervolume((-r[0], r[1]))
+        self.archive.hypervolume(&r)
     }
 
     /// Convergence snapshot for the current state.  With no feasible point
@@ -423,14 +519,24 @@ impl<'a> Evaluator<'a> {
     /// format carries finite numbers only).
     pub fn snapshot(&mut self, generation: usize) -> GenStat {
         let r = self.ref_point();
-        let pick = |x: f64, fallback: f64| if x.is_finite() { x } else { fallback };
+        let best = self
+            .best
+            .iter()
+            .zip(&r)
+            .map(|(&x, &fallback)| if x.is_finite() { x } else { fallback })
+            .collect();
         GenStat {
             generation,
             evaluated: self.evaluated,
             frontier: self.archive.len(),
             hypervolume: self.hypervolume(),
-            best: [pick(self.best[0], r[0]), pick(self.best[1], r[1])],
+            best,
         }
+    }
+
+    /// Consume the evaluator, returning the archive's payloads.
+    fn into_frontier_payloads(self) -> Vec<ArchivePayload> {
+        self.archive.into_payloads()
     }
 }
 
@@ -448,9 +554,16 @@ pub fn constrained_dominates(a: &EvalRecord, b: &EvalRecord) -> bool {
     if a.violation > 0.0 {
         return b.violation > 0.0 && a.violation < b.violation;
     }
-    a.objs[0] <= b.objs[0]
-        && a.objs[1] <= b.objs[1]
-        && (a.objs[0] < b.objs[0] || a.objs[1] < b.objs[1])
+    let mut strictly_less = false;
+    for (x, y) in a.objs.iter().zip(&b.objs) {
+        if x > y {
+            return false;
+        }
+        if x < y {
+            strictly_less = true;
+        }
+    }
+    strictly_less
 }
 
 /// Fast non-dominated sort; returns each index's front rank (0 = best).
@@ -493,6 +606,7 @@ fn nondominated_ranks(recs: &[&EvalRecord]) -> Vec<usize> {
 fn crowding_distances(recs: &[&EvalRecord], ranks: &[usize]) -> Vec<f64> {
     let n = recs.len();
     let mut dist = vec![0.0f64; n];
+    let nobj = recs.first().map_or(0, |r| r.objs.len());
     let max_rank = ranks.iter().copied().max().unwrap_or(0);
     for level in 0..=max_rank {
         let mut front: Vec<usize> = (0..n).filter(|&i| ranks[i] == level).collect();
@@ -502,7 +616,7 @@ fn crowding_distances(recs: &[&EvalRecord], ranks: &[usize]) -> Vec<f64> {
             }
             continue;
         }
-        for k in 0..2 {
+        for k in 0..nobj {
             front.sort_by(|&a, &b| recs[a].objs[k].total_cmp(&recs[b].objs[k]));
             let lo = recs[front[0]].objs[k];
             let hi = recs[front[front.len() - 1]].objs[k];
@@ -687,19 +801,40 @@ impl Strategy for RandomSearch {
     }
 }
 
-/// Restarted hill climbing: each restart scalarizes the two objectives
-/// with a random weight, then walks ±1-step hardware neighbors (plus a few
+/// Restarted hill climbing: each restart scalarizes the objectives with a
+/// random weight vector, then walks ±1-step hardware neighbors (plus a few
 /// precision tweaks) as long as the scalar improves.
 pub struct HillClimb {
     pub batch: usize,
 }
 
 impl HillClimb {
-    fn score(rec: &EvalRecord, w: f64, r: [f64; 2]) -> f64 {
+    /// A random point on the weight simplex: gap lengths between `n - 1`
+    /// sorted uniform cuts of [0, 1].  For two objectives this is a single
+    /// `rng.f64()` draw yielding `[w, 1 - w]` — the exact pre-3-objective
+    /// stream, so seeded two-objective runs are unchanged.
+    fn weights(n: usize, rng: &mut Rng) -> Vec<f64> {
+        let mut cuts: Vec<f64> = (0..n.saturating_sub(1)).map(|_| rng.f64()).collect();
+        cuts.sort_by(|a, b| a.total_cmp(b));
+        let mut w = Vec::with_capacity(n);
+        let mut prev = 0.0;
+        for c in cuts {
+            w.push(c - prev);
+            prev = c;
+        }
+        w.push(1.0 - prev);
+        w
+    }
+
+    fn score(rec: &EvalRecord, w: &[f64], r: &[f64]) -> f64 {
         if rec.violation > 0.0 {
             return 1e12 * (1.0 + rec.violation);
         }
-        w * rec.objs[0] / r[0] + (1.0 - w) * rec.objs[1] / r[1]
+        w.iter()
+            .zip(&rec.objs)
+            .zip(r)
+            .map(|((wi, o), ri)| wi * o / ri)
+            .sum()
     }
 
     fn neighbors(search: &SearchSpace, g: &Genome, rng: &mut Rng) -> Vec<Genome> {
@@ -715,6 +850,21 @@ impl HillClimb {
                 let mut n = g.clone();
                 n.hw[i] += 1;
                 out.push(n);
+            }
+        }
+        if let Some(mk) = &search.model {
+            let mlens = [mk.width.len(), mk.depth.len()];
+            for i in 0..g.model.len().min(2) {
+                if g.model[i] > 0 {
+                    let mut n = g.clone();
+                    n.model[i] -= 1;
+                    out.push(n);
+                }
+                if g.model[i] + 1 < mlens[i] {
+                    let mut n = g.clone();
+                    n.model[i] += 1;
+                    out.push(n);
+                }
             }
         }
         let pal = search.palette.len();
@@ -759,11 +909,13 @@ impl Strategy for HillClimb {
         while ev.remaining() > 0 && stall < 5 {
             restart += 1;
             let spent_before = ev.evaluated;
-            let w = rng.f64();
+            let w = Self::weights(ev.problem.objectives.len(), rng);
             // start from the pool's best under this restart's weights
             let (mut cur_g, mut cur_rec) = pool
                 .iter()
-                .min_by(|a, b| Self::score(&a.1, w, r).total_cmp(&Self::score(&b.1, w, r)))
+                .min_by(|a, b| {
+                    Self::score(&a.1, &w, &r).total_cmp(&Self::score(&b.1, &w, &r))
+                })
                 .cloned()
                 .expect("non-empty pool");
             loop {
@@ -775,7 +927,7 @@ impl Strategy for HillClimb {
                 let mut best: Option<(usize, f64)> = None;
                 for (i, rec) in recs.iter().enumerate() {
                     if let Some(rec) = rec {
-                        let s = Self::score(rec, w, r);
+                        let s = Self::score(rec, &w, &r);
                         let better = match best {
                             None => true,
                             Some((_, bs)) => s < bs,
@@ -786,7 +938,7 @@ impl Strategy for HillClimb {
                     }
                 }
                 match best {
-                    Some((i, s)) if s < Self::score(&cur_rec, w, r) => {
+                    Some((i, s)) if s < Self::score(&cur_rec, &w, &r) => {
                         cur_g = neigh[i].clone();
                         cur_rec = recs[i].clone().expect("scored record exists");
                     }
@@ -843,6 +995,12 @@ pub fn run_optimize_cancellable(
     if opts.budget == 0 {
         return Err(QappaError::Config("optimize: budget must be >= 1".into()));
     }
+    if !(2..=3).contains(&problem.objectives.len()) {
+        return Err(QappaError::Config(format!(
+            "optimize: exactly two or three objectives are required, got {}",
+            problem.objectives.len()
+        )));
+    }
     problem.constraints.validate()?;
     let mut ev = Evaluator::new(backend, model, problem, workers, opts.budget)
         .legacy(opts.legacy_eval || legacy_eval_env())
@@ -859,23 +1017,24 @@ pub fn run_optimize_cancellable(
     let evaluated = ev.evaluated;
     let memo = ev.memo_stats();
     let mut frontier: Vec<FrontierPoint> = ev
-        .archive
-        .into_entries()
+        .into_frontier_payloads()
         .into_iter()
-        .map(|e| {
-            let (genome, point) = e.payload;
-            let objs = [
-                problem.objectives[0].value(&point),
-                problem.objectives[1].value(&point),
-            ];
+        .map(|(genome, point, accuracy)| {
+            let objs: Vec<f64> = problem
+                .objectives
+                .iter()
+                .map(|o| o.value_with(&point, accuracy))
+                .collect();
             let precision = problem.search.precision_labels(&genome);
-            FrontierPoint { genome, point, objs, precision }
+            FrontierPoint { genome, point, objs, precision, accuracy }
         })
         .collect();
     frontier.sort_by(|a, b| {
-        a.objs[0]
-            .total_cmp(&b.objs[0])
-            .then(a.objs[1].total_cmp(&b.objs[1]))
+        let mut ord = std::cmp::Ordering::Equal;
+        for (x, y) in a.objs.iter().zip(&b.objs) {
+            ord = ord.then(x.total_cmp(y));
+        }
+        ord
     });
     Ok(OptResult {
         strategy: strategy.name(),
@@ -935,7 +1094,8 @@ mod tests {
             SearchSpace::new(&opts.space, ALL_PE_TYPES.to_vec(), ls, true).unwrap();
         let problem = OptProblem {
             search,
-            objectives: [Objective::PerfPerArea, Objective::Energy],
+            objectives: vec![Objective::PerfPerArea, Objective::Energy],
+            accuracy: None,
             constraints,
         };
         run_optimize(backend, model, &problem, oopts, opts.workers).unwrap()
@@ -952,7 +1112,8 @@ mod tests {
             SearchSpace::new(&opts.space, ALL_PE_TYPES.to_vec(), &ls, true).unwrap();
         let problem = OptProblem {
             search,
-            objectives: [Objective::PerfPerArea, Objective::Energy],
+            objectives: vec![Objective::PerfPerArea, Objective::Energy],
+            accuracy: None,
             constraints: Constraints::default(),
         };
         let oopts = OptOptions {
@@ -1139,7 +1300,8 @@ mod tests {
             SearchSpace::new(&opts.space, ALL_PE_TYPES.to_vec(), &ls, true).unwrap();
         let problem = OptProblem {
             search,
-            objectives: [Objective::PerfPerArea, Objective::Energy],
+            objectives: vec![Objective::PerfPerArea, Objective::Energy],
+            accuracy: None,
             constraints: Constraints::default(),
         };
         let e = run_optimize(
@@ -1156,7 +1318,8 @@ mod tests {
             SearchSpace::new(&opts.space, ALL_PE_TYPES.to_vec(), &ls, true).unwrap();
         let problem = OptProblem {
             search,
-            objectives: [Objective::PerfPerArea, Objective::Energy],
+            objectives: vec![Objective::PerfPerArea, Objective::Energy],
+            accuracy: None,
             constraints: Constraints { max_power_mw: Some(-3.0), ..Default::default() },
         };
         let e = run_optimize(&backend, &model, &problem, &OptOptions::default(), 2)
@@ -1206,6 +1369,60 @@ mod tests {
     }
 
     #[test]
+    fn three_objective_accuracy_run_is_seeded_and_respects_the_floor() {
+        let (backend, store, opts) = setup();
+        let model = store
+            .get_or_train_quant(&backend, &opts, &ALL_PE_TYPES.to_vec())
+            .unwrap();
+        let ls = layers();
+        let run3 = |seed: u64, constraints: Constraints| {
+            let search =
+                SearchSpace::new(&opts.space, ALL_PE_TYPES.to_vec(), &ls, true).unwrap();
+            let problem = OptProblem {
+                search,
+                objectives: vec![Objective::Latency, Objective::Energy, Objective::Accuracy],
+                constraints,
+                accuracy: None, // structural proxy fallback
+            };
+            let oopts = OptOptions {
+                strategy: StrategyKind::Nsga2,
+                budget: 90,
+                pop: 16,
+                seed,
+                ..Default::default()
+            };
+            run_optimize(&backend, &model, &problem, &oopts, opts.workers).unwrap()
+        };
+        let a = run3(5, Constraints::default());
+        assert_eq!(a.ref_point.len(), 3);
+        assert!(!a.frontier.is_empty());
+        assert!(a.hypervolume > 0.0);
+        for f in &a.frontier {
+            assert_eq!(f.objs.len(), 3);
+            let acc = f.accuracy.expect("accuracy-aware run records accuracy");
+            assert!((0.0..=1.0).contains(&acc));
+            assert!((f.objs[2] - (1.0 - acc)).abs() < 1e-12);
+        }
+        // accuracy actually discriminates: the frontier spans precisions
+        let accs: Vec<u64> = a.frontier.iter().map(|f| f.accuracy.unwrap().to_bits()).collect();
+        assert!(accs.iter().any(|&x| x != accs[0]), "frontier accuracy is constant");
+        // bit-identical under the same seed
+        let b = run3(5, Constraints::default());
+        assert_eq!(a.evaluated, b.evaluated);
+        assert_eq!(a.hypervolume.to_bits(), b.hypervolume.to_bits());
+        assert_eq!(a.frontier.len(), b.frontier.len());
+        for (x, y) in a.frontier.iter().zip(&b.frontier) {
+            assert_eq!(x.genome, y.genome);
+            assert_eq!(x.objs, y.objs);
+        }
+        // a min-accuracy floor is never violated in the returned frontier
+        let floored = run3(5, Constraints { min_accuracy: Some(0.95), ..Default::default() });
+        for f in &floored.frontier {
+            assert!(f.accuracy.unwrap() >= 0.95, "floor violated: {:?}", f.accuracy);
+        }
+    }
+
+    #[test]
     fn nondominated_sort_and_crowding_are_sane() {
         fn rec(o0: f64, o1: f64, v: f64) -> EvalRecord {
             let cfg = crate::config::AcceleratorConfig::default_with(
@@ -1220,8 +1437,9 @@ mod tests {
                     energy_mj: 1.0,
                     utilization: 1.0,
                 },
-                objs: [o0, o1],
+                objs: vec![o0, o1],
                 violation: v,
+                accuracy: None,
             }
         }
         // feasible dominates infeasible; violation orders infeasible

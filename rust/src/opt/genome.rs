@@ -14,6 +14,14 @@
 //! expensive datapath kind present): the predicted area/power are those of
 //! hardware that can actually run every layer, so a genome cannot game an
 //! area constraint by declaring a narrow array and running wide layers.
+//!
+//! With model-side knobs attached ([`SearchSpace::with_model_knobs`]) the
+//! genome additionally carries two *model* genes — indices into a
+//! channel-width multiplier axis and a depth multiplier axis — and decode
+//! swaps in the matching pre-built scaled variant of the workload
+//! (QUIDAM-style joint hardware/model exploration).  Multipliers live in
+//! (0, 1] so every variant's layer names are a subset of the full model's
+//! and measured sensitivity tables stay valid for every variant.
 
 use crate::api::error::QappaError;
 use crate::config::{AcceleratorConfig, MacKind, PeType, QuantSpec};
@@ -24,12 +32,16 @@ use crate::util::prng::Rng;
 /// Number of hardware axes in a genome (mirrors the [`DesignSpace`] axes).
 pub const HW_GENES: usize = 7;
 
-/// One candidate design: hardware axis digits + precision assignment.
+/// One candidate design: hardware axis digits + model knobs + precision
+/// assignment.
 #[derive(Debug, Clone, PartialEq, Eq)]
 pub struct Genome {
     /// Indices into the design-space axes, in order: rows, cols, glb_kb,
     /// spad_ifmap_b, spad_filter_b, spad_psum_b, bandwidth_gbps.
     pub hw: [usize; HW_GENES],
+    /// Model-knob indices: empty without model knobs, else
+    /// `[width_index, depth_index]` into the multiplier axes.
+    pub model: Vec<usize>,
     /// Palette indices: length 1 (uniform precision) or one per layer.
     pub prec: Vec<usize>,
 }
@@ -37,22 +49,48 @@ pub struct Genome {
 impl Genome {
     /// Stable dedup/cache key.
     pub fn key(&self) -> Vec<u32> {
-        let mut k = Vec::with_capacity(HW_GENES + self.prec.len());
+        let mut k = Vec::with_capacity(HW_GENES + self.model.len() + self.prec.len());
         k.extend(self.hw.iter().map(|&i| i as u32));
+        k.extend(self.model.iter().map(|&i| i as u32));
         k.extend(self.prec.iter().map(|&i| i as u32));
         k
     }
 }
 
-/// The decoded search domain: hardware axes x precision palette x layers.
+/// Model-side knob axes: channel-width and depth multipliers plus the
+/// pre-built scaled workload variant for every (width, depth) cell.
+/// Variants are materialized once at construction so decode stays an
+/// index lookup on the search hot path.
+#[derive(Debug, Clone)]
+pub struct ModelKnobs {
+    /// Channel-width multipliers, each in (0, 1].
+    pub width: Vec<f64>,
+    /// Depth multipliers, each in (0, 1].
+    pub depth: Vec<f64>,
+    /// Scaled variants, width-major: `variants[wi * depth.len() + di]`.
+    variants: Vec<Vec<Layer>>,
+}
+
+impl ModelKnobs {
+    /// The variant for one (width index, depth index) cell.
+    pub fn variant(&self, wi: usize, di: usize) -> &[Layer] {
+        &self.variants[wi * self.depth.len() + di]
+    }
+}
+
+/// The decoded search domain: hardware axes x model knobs x precision
+/// palette x layers.
 pub struct SearchSpace<'a> {
     space: &'a DesignSpace,
     /// Validated precision cells the genome indexes into.
     pub palette: Vec<PeType>,
-    /// The workload being optimized for.
+    /// The full-size workload being optimized for (the widest variant when
+    /// model knobs are attached).
     pub layers: &'a [Layer],
     /// One precision gene per layer (mixed precision) vs a single gene.
     pub per_layer: bool,
+    /// Model-side knob axes; `None` = hardware/precision search only.
+    pub model: Option<ModelKnobs>,
 }
 
 impl<'a> SearchSpace<'a> {
@@ -87,7 +125,64 @@ impl<'a> SearchSpace<'a> {
         if layers.is_empty() {
             return Err(QappaError::Workload("optimize: workload has no layers".into()));
         }
-        Ok(SearchSpace { space, palette, layers, per_layer })
+        Ok(SearchSpace { space, palette, layers, per_layer, model: None })
+    }
+
+    /// Attach model-side knobs: multiplier axes plus one pre-built scaled
+    /// variant per (width, depth) cell, width-major.  Multipliers must lie
+    /// in (0, 1] and every variant must be a non-empty sub-model of the
+    /// base workload (no more layers than the base, names drawn from the
+    /// base) so precision genes and sensitivity tables keyed to the base
+    /// stay valid for every variant.
+    pub fn with_model_knobs(
+        mut self,
+        width: Vec<f64>,
+        depth: Vec<f64>,
+        variants: Vec<Vec<Layer>>,
+    ) -> Result<SearchSpace<'a>, QappaError> {
+        let cfg_err = |m: String| Err(QappaError::Config(format!("optimize: {m}")));
+        if width.is_empty() || depth.is_empty() {
+            return cfg_err("model knob axes must not be empty".into());
+        }
+        for (axis, vals) in [("width_mults", &width), ("depth_mults", &depth)] {
+            for &v in vals {
+                if !(v.is_finite() && v > 0.0 && v <= 1.0) {
+                    return cfg_err(format!("{axis} values must lie in (0, 1], got {v}"));
+                }
+            }
+        }
+        if variants.len() != width.len() * depth.len() {
+            return cfg_err(format!(
+                "expected {} scaled variants ({} widths x {} depths), got {}",
+                width.len() * depth.len(),
+                width.len(),
+                depth.len(),
+                variants.len()
+            ));
+        }
+        for (i, v) in variants.iter().enumerate() {
+            if v.is_empty() {
+                return cfg_err(format!("scaled variant {i} has no layers"));
+            }
+            if v.len() > self.layers.len() {
+                return cfg_err(format!(
+                    "scaled variant {i} has {} layers, more than the base workload's {} — \
+                     multipliers must shrink the model",
+                    v.len(),
+                    self.layers.len()
+                ));
+            }
+            for l in v {
+                if !self.layers.iter().any(|b| b.name == l.name) {
+                    return cfg_err(format!(
+                        "scaled variant {i} layer '{}' is not a base workload layer",
+                        l.name
+                    ));
+                }
+            }
+        }
+        self.model = Some(ModelKnobs { width, depth, variants });
+        Ok(self)
     }
 
     /// Lengths of the seven hardware axes, genome order.
@@ -113,9 +208,18 @@ impl<'a> SearchSpace<'a> {
         }
     }
 
+    /// Model gene count: `[width, depth]` when knobs are attached.
+    pub fn model_len(&self) -> usize {
+        if self.model.is_some() {
+            2
+        } else {
+            0
+        }
+    }
+
     /// Total genes (mutation-rate denominator).
     pub fn genes(&self) -> usize {
-        HW_GENES + self.prec_len()
+        HW_GENES + self.model_len() + self.prec_len()
     }
 
     /// Size of the uniform-precision grid this space embeds (hardware grid
@@ -126,15 +230,21 @@ impl<'a> SearchSpace<'a> {
         self.space.len().max(1) * self.palette.len()
     }
 
-    /// Uniformly random genome.
+    /// Uniformly random genome.  Model genes (when knobs are attached) are
+    /// drawn between the hardware digits and the precision vector, so the
+    /// knob-free stream is unchanged.
     pub fn random(&self, rng: &mut Rng) -> Genome {
         let lens = self.axis_lens();
         let mut hw = [0usize; HW_GENES];
         for (g, &len) in hw.iter_mut().zip(lens.iter()) {
             *g = rng.below(len);
         }
+        let model = match &self.model {
+            None => Vec::new(),
+            Some(mk) => vec![rng.below(mk.width.len()), rng.below(mk.depth.len())],
+        };
         let prec = (0..self.prec_len()).map(|_| rng.below(self.palette.len())).collect();
-        Genome { hw, prec }
+        Genome { hw, model, prec }
     }
 
     /// Deterministic seeds covering the corners of the embedded uniform
@@ -145,6 +255,13 @@ impl<'a> SearchSpace<'a> {
     pub fn corner_seeds(&self) -> Vec<Genome> {
         let lens = self.axis_lens();
         let prec_len = self.prec_len();
+        // With model knobs, anchor corner seeds at the *fullest* model
+        // (argmax multiplier on each axis): the accuracy ceiling every
+        // slimmer variant is traded off against.
+        let model = match &self.model {
+            None => Vec::new(),
+            Some(mk) => vec![argmax(&mk.width), argmax(&mk.depth)],
+        };
         let mut out = Vec::with_capacity(3 * self.palette.len());
         for cell in 0..self.palette.len() {
             for pick in 0..3usize {
@@ -156,7 +273,7 @@ impl<'a> SearchSpace<'a> {
                         _ => len / 2,
                     };
                 }
-                out.push(Genome { hw, prec: vec![cell; prec_len] });
+                out.push(Genome { hw, model: model.clone(), prec: vec![cell; prec_len] });
             }
         }
         out
@@ -199,8 +316,19 @@ impl<'a> SearchSpace<'a> {
     /// layer list with per-layer precision overrides installed.  Any
     /// precision overrides the source workload carried are replaced by the
     /// genome's assignment (the optimizer owns the precision axis).
+    ///
+    /// With model knobs attached the genome's model genes pick the scaled
+    /// variant, and only the *active* prefix of the precision vector (one
+    /// gene per variant layer) participates: silent tail genes on a
+    /// depth-reduced variant can neither widen the priced array nor leak
+    /// overrides.
     pub fn decode(&self, g: &Genome) -> (AcceleratorConfig, Vec<Layer>) {
-        let array = self.array_type(&g.prec);
+        let base: &[Layer] = match (&self.model, g.model.as_slice()) {
+            (Some(mk), &[wi, di]) => mk.variant(wi, di),
+            _ => self.layers,
+        };
+        let active = &g.prec[..g.prec.len().min(base.len().max(1))];
+        let array = self.array_type(active);
         let cfg = AcceleratorConfig {
             pe_type: array,
             pe_rows: self.space.rows[g.hw[0]],
@@ -212,18 +340,27 @@ impl<'a> SearchSpace<'a> {
             bandwidth_gbps: self.space.bandwidth_gbps[g.hw[6]],
         };
         let array_spec = cfg.quant();
-        let mut layers = self.layers.to_vec();
-        if g.prec.len() == 1 {
+        let mut layers = base.to_vec();
+        if active.len() == 1 {
             for l in layers.iter_mut() {
                 l.quant = None;
             }
         } else {
-            for (l, &i) in layers.iter_mut().zip(&g.prec) {
+            for (l, &i) in layers.iter_mut().zip(active) {
                 let spec = self.palette[i].spec();
                 l.quant = if spec == array_spec { None } else { Some(spec) };
             }
         }
         (cfg, layers)
+    }
+
+    /// The (width, depth) multipliers a genome selects; `(1.0, 1.0)` when
+    /// no model knobs are attached.
+    pub fn model_mults(&self, g: &Genome) -> (f64, f64) {
+        match (&self.model, g.model.as_slice()) {
+            (Some(mk), &[wi, di]) => (mk.width[wi], mk.depth[di]),
+            _ => (1.0, 1.0),
+        }
     }
 
     /// Per-layer precision labels of a genome (report surface): one label
@@ -240,6 +377,12 @@ impl<'a> SearchSpace<'a> {
         for i in 0..HW_GENES {
             if rng.f64() < 0.5 {
                 std::mem::swap(&mut c1.hw[i], &mut c2.hw[i]);
+            }
+        }
+        let m = c1.model.len().min(c2.model.len());
+        for i in 0..m {
+            if rng.f64() < 0.5 {
+                std::mem::swap(&mut c1.model[i], &mut c2.model[i]);
             }
         }
         let n = c1.prec.len().min(c2.prec.len());
@@ -265,6 +408,18 @@ impl<'a> SearchSpace<'a> {
                 changed |= self.mutate_gene(&mut g.hw[i], lens[i], rng);
             }
         }
+        // Model-knob axis lengths, positional: [width, depth].  Knob-free
+        // genomes have no model genes, so both loops below are no-ops and
+        // the pre-knob random stream is preserved byte-for-byte.
+        let mlens: [usize; 2] = match &self.model {
+            Some(mk) => [mk.width.len(), mk.depth.len()],
+            None => [1, 1],
+        };
+        for (i, gene) in g.model.iter_mut().enumerate() {
+            if rng.f64() < pm {
+                changed |= self.mutate_gene(gene, mlens[i.min(1)], rng);
+            }
+        }
         let pal = self.palette.len();
         for gene in g.prec.iter_mut() {
             if rng.f64() < pm {
@@ -275,13 +430,19 @@ impl<'a> SearchSpace<'a> {
             // Force one flip so a child is never a parent clone — unless
             // every gene sits on a length-1 axis (a fully degenerate
             // domain), in which case there is nothing to move.
-            let movable = lens.iter().any(|&l| l > 1) || (pal > 1 && !g.prec.is_empty());
+            let nmodel = g.model.len();
+            let movable = lens.iter().any(|&l| l > 1)
+                || (0..nmodel).any(|i| mlens[i.min(1)] > 1)
+                || (pal > 1 && !g.prec.is_empty());
             while movable && !changed {
-                let pick = rng.below(HW_GENES + g.prec.len());
+                let pick = rng.below(HW_GENES + nmodel + g.prec.len());
                 changed = if pick < HW_GENES {
                     self.mutate_gene(&mut g.hw[pick], lens[pick], rng)
+                } else if pick < HW_GENES + nmodel {
+                    let mi = pick - HW_GENES;
+                    self.mutate_gene(&mut g.model[mi], mlens[mi.min(1)], rng)
                 } else {
-                    self.mutate_gene(&mut g.prec[pick - HW_GENES], pal, rng)
+                    self.mutate_gene(&mut g.prec[pick - HW_GENES - nmodel], pal, rng)
                 };
             }
         }
@@ -289,22 +450,39 @@ impl<'a> SearchSpace<'a> {
 
     /// One gene flip; returns whether the value actually moved.
     fn mutate_gene(&self, gene: &mut usize, len: usize, rng: &mut Rng) -> bool {
-        if len <= 1 {
-            return false;
-        }
-        let old = *gene;
-        if rng.f64() < 0.5 {
-            // ±1 step, clamped to the axis
-            *gene = if rng.f64() < 0.5 {
-                gene.saturating_sub(1)
-            } else {
-                (*gene + 1).min(len - 1)
-            };
-        } else {
-            *gene = rng.below(len);
-        }
-        *gene != old
+        mutate_index(gene, len, rng)
     }
+}
+
+/// Index of the largest value (first wins ties); callers pass validated
+/// non-empty axes.
+fn argmax(vals: &[f64]) -> usize {
+    let mut best = 0;
+    for (i, &v) in vals.iter().enumerate() {
+        if v > vals[best] {
+            best = i;
+        }
+    }
+    best
+}
+
+/// One index flip on an axis of `len` values; returns whether it moved.
+fn mutate_index(gene: &mut usize, len: usize, rng: &mut Rng) -> bool {
+    if len <= 1 {
+        return false;
+    }
+    let old = *gene;
+    if rng.f64() < 0.5 {
+        // ±1 step, clamped to the axis
+        *gene = if rng.f64() < 0.5 {
+            gene.saturating_sub(1)
+        } else {
+            (*gene + 1).min(len - 1)
+        };
+    } else {
+        *gene = rng.below(len);
+    }
+    *gene != old
 }
 
 #[cfg(test)]
@@ -375,17 +553,17 @@ mod tests {
         ];
         let search = SearchSpace::new(&s, palette, &ls, true).unwrap();
         // all layers at INT4 -> array is the INT4 cell
-        let g = Genome { hw: [0; HW_GENES], prec: vec![0, 0, 0] };
+        let g = Genome { hw: [0; HW_GENES], model: vec![], prec: vec![0, 0, 0] };
         let (cfg, _) = search.decode(&g);
         assert_eq!(cfg.quant(), QuantSpec::int(4, 4));
         // mixing INT4 with INT16 -> array widens to cover INT16
-        let g = Genome { hw: [0; HW_GENES], prec: vec![0, 1, 0] };
+        let g = Genome { hw: [0; HW_GENES], model: vec![], prec: vec![0, 1, 0] };
         let (cfg, dec) = search.decode(&g);
         assert!(cfg.quant().act_bits >= 16 && cfg.quant().psum_bits >= 32);
         // the INT4 layers carry overrides, the INT16 layer matches the array
         assert!(dec[0].quant.is_some() && dec[2].quant.is_some());
         // mixing in a lightweight cell promotes the datapath kind
-        let g = Genome { hw: [0; HW_GENES], prec: vec![0, 1, 2] };
+        let g = Genome { hw: [0; HW_GENES], model: vec![], prec: vec![0, 1, 2] };
         let (cfg, _) = search.decode(&g);
         assert!(cfg.quant().is_light());
         assert!(cfg.quant().act_bits >= 16);
@@ -477,6 +655,129 @@ mod tests {
         assert!(seeds
             .iter()
             .any(|g| g.hw.iter().zip(lens.iter()).all(|(&d, &l)| d == l - 1)));
+    }
+
+    /// Hand-built scaled variants of `layers()` on width [1.0, 0.5] x
+    /// depth [1.0, 0.5], width-major: depth 0.5 drops the middle dw layer,
+    /// width 0.5 halves channels.
+    fn knob_axes() -> (Vec<f64>, Vec<f64>, Vec<Vec<Layer>>) {
+        let full = layers();
+        let shallow = vec![full[0].clone(), full[2].clone()];
+        let slim = vec![
+            Layer::conv("c1", 3, 8, 32, 32, 3, 1, 1),
+            Layer::dw("dw", 8, 16, 3, 1, 1),
+            Layer::fc("fc", 128, 10),
+        ];
+        let slim_shallow = vec![slim[0].clone(), slim[2].clone()];
+        (vec![1.0, 0.5], vec![1.0, 0.5], vec![full, shallow, slim, slim_shallow])
+    }
+
+    #[test]
+    fn with_model_knobs_rejects_bad_axes_and_variants() {
+        let s = space();
+        let ls = layers();
+        let (w, d, vs) = knob_axes();
+        let build = || SearchSpace::new(&s, ALL_PE_TYPES.to_vec(), &ls, true).unwrap();
+        // empty axis
+        let e = build().with_model_knobs(Vec::new(), d.clone(), vs.clone()).unwrap_err();
+        assert!(e.to_string().contains("model knob axes"), "{e}");
+        // out-of-range multipliers name the axis
+        let e = build().with_model_knobs(vec![1.5, 0.5], d.clone(), vs.clone()).unwrap_err();
+        assert!(e.to_string().contains("width_mults"), "{e}");
+        let e = build().with_model_knobs(w.clone(), vec![1.0, 0.0], vs.clone()).unwrap_err();
+        assert!(e.to_string().contains("depth_mults"), "{e}");
+        // wrong variant count
+        let e = build().with_model_knobs(w.clone(), d.clone(), vs[..3].to_vec()).unwrap_err();
+        assert!(e.to_string().contains("4 scaled variants"), "{e}");
+        // empty variant
+        let mut bad = vs.clone();
+        bad[1] = Vec::new();
+        let e = build().with_model_knobs(w.clone(), d.clone(), bad).unwrap_err();
+        assert!(e.to_string().contains("no layers"), "{e}");
+        // a variant larger than the base model
+        let mut bad = vs.clone();
+        bad[1] = [ls.clone(), vec![ls[0].clone()]].concat();
+        let e = build().with_model_knobs(w.clone(), d.clone(), bad).unwrap_err();
+        assert!(e.to_string().contains("more than the base"), "{e}");
+        // a variant layer whose name the base model doesn't have
+        let mut bad = vs.clone();
+        bad[3] = vec![Layer::fc("mystery", 64, 10)];
+        let e = build().with_model_knobs(w, d, bad).unwrap_err();
+        assert!(e.to_string().contains("mystery"), "{e}");
+    }
+
+    #[test]
+    fn model_genes_select_the_variant_and_only_active_precisions_count() {
+        let s = space();
+        let ls = layers();
+        let (w, d, vs) = knob_axes();
+        let palette = vec![PeType::from_spec(QuantSpec::int(4, 4)), PeType::Int16];
+        let search = SearchSpace::new(&s, palette, &ls, true)
+            .unwrap()
+            .with_model_knobs(w, d, vs)
+            .unwrap();
+        assert_eq!(search.model_len(), 2);
+        assert_eq!(search.genes(), HW_GENES + 2 + ls.len());
+        // full model
+        let full = Genome { hw: [0; HW_GENES], model: vec![0, 0], prec: vec![0, 0, 0] };
+        let (_, dec) = search.decode(&full);
+        assert_eq!(dec.len(), 3);
+        assert_eq!(search.model_mults(&full), (1.0, 1.0));
+        // slim + shallow variant: channels halved, dw layer gone
+        let tiny = Genome { hw: [0; HW_GENES], model: vec![1, 1], prec: vec![0, 0, 0] };
+        let (_, dec) = search.decode(&tiny);
+        assert_eq!(dec.len(), 2);
+        assert_eq!(dec[0].name, "c1");
+        assert_eq!(dec[0].k, 8);
+        assert_eq!(dec[1].name, "fc");
+        assert_eq!(search.model_mults(&tiny), (0.5, 0.5));
+        // model genes participate in the dedup key
+        assert_ne!(full.key(), tiny.key());
+        // a tail gene past the variant's layer count cannot widen the array
+        let tail = Genome { hw: [0; HW_GENES], model: vec![0, 1], prec: vec![0, 0, 1] };
+        let (cfg, dec) = search.decode(&tail);
+        assert_eq!(dec.len(), 2);
+        assert_eq!(cfg.quant(), QuantSpec::int(4, 4));
+    }
+
+    #[test]
+    fn knobbed_variation_stays_in_range_and_seeds_the_full_model() {
+        let s = space();
+        let ls = layers();
+        let (w, d, vs) = knob_axes();
+        let search = SearchSpace::new(&s, ALL_PE_TYPES.to_vec(), &ls, true)
+            .unwrap()
+            .with_model_knobs(w, d, vs)
+            .unwrap();
+        // corner seeds anchor at the fullest model (argmax multiplier)
+        for g in search.corner_seeds() {
+            assert_eq!(g.model, vec![0, 0]);
+            search.decode(&g).0.validate().unwrap();
+        }
+        let mut rng = Rng::new(17);
+        for _ in 0..100 {
+            let mut g = search.random(&mut rng);
+            assert_eq!(g.model.len(), 2);
+            assert!(g.model[0] < 2 && g.model[1] < 2);
+            search.mutate(&mut g, &mut rng);
+            assert!(g.model[0] < 2 && g.model[1] < 2);
+            search.decode(&g).0.validate().unwrap();
+        }
+        // crossover conserves the multiset of model genes per position
+        let a = search.random(&mut rng);
+        let b = search.random(&mut rng);
+        let (c1, c2) = search.crossover(&a, &b, &mut rng);
+        for i in 0..2 {
+            let mut before = [a.model[i], b.model[i]];
+            let mut after = [c1.model[i], c2.model[i]];
+            before.sort_unstable();
+            after.sort_unstable();
+            assert_eq!(before, after);
+        }
+        // knob-free spaces still breed model-gene-free genomes
+        let plain = SearchSpace::new(&s, ALL_PE_TYPES.to_vec(), &ls, true).unwrap();
+        assert!(plain.random(&mut rng).model.is_empty());
+        assert_eq!(plain.model_mults(&plain.random(&mut rng)), (1.0, 1.0));
     }
 
     #[test]

@@ -8,11 +8,13 @@
 //! fixed evaluation budget instead:
 //!
 //! * [`objective`] — named objectives (latency, energy, area, power,
-//!   perf/area, perf/energy, EDP), canonicalized to minimize, plus hard
-//!   constraints (`area_mm2 <= X`, `power_mw <= X`, `latency <= X ms`,
-//!   `min bits >= b`) evaluated off the existing dataflow cost struct;
-//! * [`genome`] — the (hardware axes × per-layer precision) encoding and
-//!   its seeded variation operators;
+//!   perf/area, perf/energy, EDP, accuracy), canonicalized to minimize,
+//!   plus hard constraints (`area_mm2 <= X`, `power_mw <= X`,
+//!   `latency <= X ms`, `min bits >= b`, `accuracy >= a`) evaluated off
+//!   the existing dataflow cost struct and the
+//!   [`crate::accuracy::AccuracyModel`] estimate;
+//! * [`genome`] — the (hardware axes × model knobs × per-layer precision)
+//!   encoding and its seeded variation operators;
 //! * [`engine`] — NSGA-II-style evolutionary search with random-sampling
 //!   and hill-climb baselines behind a common [`Strategy`] trait, batching
 //!   every evaluation through the streaming sweep's predict → dataflow
@@ -29,7 +31,8 @@
 //! with `--ctx`): LLM decode is the bandwidth-bound KV-cache-dominated
 //! regime, so a decode-phase search lands on very different frontiers
 //! than a prefill (compute-bound) one.  Grammar, strategy comparison
-//! and budget guidance: `docs/OPTIMIZER.md`.
+//! and budget guidance: `docs/OPTIMIZER.md`; the accuracy objective's
+//! noise model and sensitivity-table schema: `docs/ACCURACY.md`.
 
 pub mod engine;
 pub mod genome;
@@ -40,5 +43,5 @@ pub use engine::{
     FrontierPoint, GenStat, HillClimb, Nsga2, OptOptions, OptProblem, OptResult,
     RandomSearch, Strategy, StrategyKind,
 };
-pub use genome::{Genome, SearchSpace};
+pub use genome::{Genome, ModelKnobs, SearchSpace};
 pub use objective::{resolve_objectives, Constraints, Objective, ALL_OBJECTIVES};

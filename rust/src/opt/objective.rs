@@ -16,6 +16,13 @@
 //! `min_bits` is a genome-level constraint — it prunes the precision
 //! palette before the search starts rather than penalizing evaluations
 //! (see [`crate::api::session::Qappa::optimize`]).
+//!
+//! Two to three objectives are supported.  [`Objective::Accuracy`] is the
+//! odd one out: it is a property of the *genome* (per-layer precision +
+//! model knobs, estimated by [`crate::accuracy::AccuracyModel`]), not of
+//! the evaluated [`DsePoint`], so the engine supplies it separately via
+//! [`Objective::value_with`]; `min_accuracy` is likewise checked through
+//! [`Constraints::accuracy_violation`].
 
 use crate::api::error::QappaError;
 use crate::coordinator::explorer::DsePoint;
@@ -38,10 +45,14 @@ pub enum Objective {
     PerfPerEnergy,
     /// Energy-delay product, mJ·s.
     Edp,
+    /// Estimated network accuracy (maximize), minimized as `1 - accuracy`.
+    /// Computed from the genome's per-layer precisions and model knobs by
+    /// [`crate::accuracy::AccuracyModel`], not from the `DsePoint`.
+    Accuracy,
 }
 
 /// Every objective, in help/docs order.
-pub const ALL_OBJECTIVES: [Objective; 7] = [
+pub const ALL_OBJECTIVES: [Objective; 8] = [
     Objective::Latency,
     Objective::Energy,
     Objective::Area,
@@ -49,6 +60,7 @@ pub const ALL_OBJECTIVES: [Objective; 7] = [
     Objective::PerfPerArea,
     Objective::PerfPerEnergy,
     Objective::Edp,
+    Objective::Accuracy,
 ];
 
 impl Objective {
@@ -62,7 +74,14 @@ impl Objective {
             Objective::PerfPerArea => "perf/area",
             Objective::PerfPerEnergy => "perf/energy",
             Objective::Edp => "edp",
+            Objective::Accuracy => "accuracy",
         }
+    }
+
+    /// True for the one objective read off the genome's accuracy estimate
+    /// instead of the evaluated `DsePoint`.
+    pub fn needs_accuracy(self) -> bool {
+        matches!(self, Objective::Accuracy)
     }
 
     /// Parse a name or alias, case-insensitively.  Unknown names are
@@ -76,6 +95,7 @@ impl Objective {
             "perf/area" | "perf_per_area" | "perfarea" => Ok(Objective::PerfPerArea),
             "perf/energy" | "perf_per_energy" | "perfenergy" => Ok(Objective::PerfPerEnergy),
             "edp" => Ok(Objective::Edp),
+            "accuracy" | "acc" => Ok(Objective::Accuracy),
             other => Err(QappaError::Config(format!(
                 "unknown objective '{other}' (expected {})",
                 ALL_OBJECTIVES.map(|o| o.label()).join("|")
@@ -84,6 +104,8 @@ impl Objective {
     }
 
     /// The minimized scalar for one evaluated design point.
+    /// [`Objective::Accuracy`] cannot be read off a `DsePoint`; the engine
+    /// routes it through [`Objective::value_with`].
     pub fn value(self, p: &DsePoint) -> f64 {
         let latency_s = 1.0 / p.throughput.max(1e-300);
         match self {
@@ -93,42 +115,61 @@ impl Objective {
             Objective::Power => p.ppa.power_mw,
             Objective::PerfPerArea => 1.0 / p.perf_per_area.max(1e-300),
             Objective::PerfPerEnergy | Objective::Edp => p.energy_mj * latency_s,
+            Objective::Accuracy => {
+                debug_assert!(false, "Accuracy must be scored via value_with");
+                1.0
+            }
+        }
+    }
+
+    /// The minimized scalar with the genome's accuracy estimate supplied.
+    /// `Accuracy` minimizes `1 - accuracy`; a missing estimate scores as
+    /// the worst case (accuracy 0) so a wiring bug can never look optimal.
+    pub fn value_with(self, p: &DsePoint, accuracy: Option<f64>) -> f64 {
+        match self {
+            Objective::Accuracy => 1.0 - accuracy.unwrap_or(0.0),
+            other => other.value(p),
         }
     }
 }
 
-/// Resolve a list of objective names into the engine's two-objective form.
-/// An empty list means the paper's classic pair (perf/area, energy).
-pub fn resolve_objectives(names: &[String]) -> Result<[Objective; 2], QappaError> {
+/// Resolve a list of objective names into the engine's form: two or three
+/// distinct objectives.  An empty list means the paper's classic pair
+/// (perf/area, energy).
+pub fn resolve_objectives(names: &[String]) -> Result<Vec<Objective>, QappaError> {
     if names.is_empty() {
-        return Ok([Objective::PerfPerArea, Objective::Energy]);
+        return Ok(vec![Objective::PerfPerArea, Objective::Energy]);
     }
-    if names.len() != 2 {
+    if !(2..=3).contains(&names.len()) {
         return Err(QappaError::Config(format!(
-            "optimize: exactly two objectives are required (got {}); \
+            "optimize: exactly two or three objectives are required (got {}); \
              available: {}",
             names.len(),
             ALL_OBJECTIVES.map(|o| o.label()).join(", ")
         )));
     }
-    let a = Objective::parse(&names[0])?;
-    let b = Objective::parse(&names[1])?;
+    let objs: Vec<Objective> =
+        names.iter().map(|n| Objective::parse(n)).collect::<Result<_, _>>()?;
     // Distinct by *value*, not just by name: `perf/energy` and `edp`
     // minimize the same scalar, so pairing them would silently collapse
-    // the search into a single objective.
+    // the search into fewer objectives.
     let canonical = |o: Objective| match o {
         Objective::Edp => Objective::PerfPerEnergy,
         other => other,
     };
-    if canonical(a) == canonical(b) {
-        return Err(QappaError::Config(format!(
-            "optimize: objectives must be distinct (got '{}' and '{}', which \
-             minimize the same quantity)",
-            a.label(),
-            b.label()
-        )));
+    for i in 0..objs.len() {
+        for j in i + 1..objs.len() {
+            if canonical(objs[i]) == canonical(objs[j]) {
+                return Err(QappaError::Config(format!(
+                    "optimize: objectives must be distinct (got '{}' and '{}', which \
+                     minimize the same quantity)",
+                    objs[i].label(),
+                    objs[j].label()
+                )));
+            }
+        }
     }
-    Ok([a, b])
+    Ok(objs)
 }
 
 /// Hard constraints on the search.  `max_*` bounds are evaluated on each
@@ -142,9 +183,13 @@ pub struct Constraints {
     /// `latency <= X` milliseconds per inference.
     pub max_latency_ms: Option<f64>,
     /// Every precision cell in the palette must have `act_bits >= b` and
-    /// `wt_bits >= b` (an accuracy floor: the optimizer may not quantize
-    /// below it).
+    /// `wt_bits >= b` (a syntactic accuracy floor: the optimizer may not
+    /// quantize below it).
     pub min_bits: Option<u32>,
+    /// `estimated accuracy >= X` on the genome's accuracy estimate — the
+    /// *model-based* accuracy floor.  Evaluated per genome by the engine
+    /// (see [`Constraints::accuracy_violation`]), not off the `DsePoint`.
+    pub min_accuracy: Option<f64>,
 }
 
 impl Constraints {
@@ -153,6 +198,7 @@ impl Constraints {
             && self.max_power_mw.is_none()
             && self.max_latency_ms.is_none()
             && self.min_bits.is_none()
+            && self.min_accuracy.is_none()
     }
 
     /// Bounds must be positive; errors name the field.
@@ -168,6 +214,13 @@ impl Constraints {
                         "optimize: constraint {field} must be a positive number (got {x})"
                     )));
                 }
+            }
+        }
+        if let Some(x) = self.min_accuracy {
+            if !(x > 0.0 && x <= 1.0) {
+                return Err(QappaError::Config(format!(
+                    "optimize: constraint min_accuracy must be in (0, 1] (got {x})"
+                )));
             }
         }
         Ok(())
@@ -190,6 +243,20 @@ impl Constraints {
             v += ((lat_ms - x) / x).max(0.0);
         }
         v
+    }
+
+    /// Normalized `min_accuracy` shortfall for one genome's accuracy
+    /// estimate, on the same relative scale as [`Constraints::violation`].
+    /// A missing estimate under an active floor counts as a full
+    /// violation, so an unwired accuracy model can never pass the gate.
+    pub fn accuracy_violation(&self, accuracy: Option<f64>) -> f64 {
+        match self.min_accuracy {
+            None => 0.0,
+            Some(floor) => {
+                let acc = accuracy.unwrap_or(0.0);
+                ((floor - acc) / floor).max(0.0)
+            }
+        }
     }
 }
 
@@ -221,11 +288,27 @@ mod tests {
         // perf/energy inverse == EDP: energy x latency
         assert!((Objective::PerfPerEnergy.value(&p) - 0.05).abs() < 1e-12);
         assert_eq!(Objective::PerfPerEnergy.value(&p), Objective::Edp.value(&p));
-        // better points score lower on every objective
+        // better points score lower on every point-valued objective
         let better = point(200.0, 1.5, 150.0, 4.0);
         for o in ALL_OBJECTIVES {
+            if o.needs_accuracy() {
+                continue;
+            }
             assert!(o.value(&better) < o.value(&p), "{}", o.label());
         }
+    }
+
+    #[test]
+    fn accuracy_objective_minimizes_one_minus_accuracy() {
+        let p = point(250.0, 2.0, 100.0, 5.0);
+        let o = Objective::Accuracy;
+        assert!(o.needs_accuracy());
+        assert!((o.value_with(&p, Some(0.9)) - 0.1).abs() < 1e-12);
+        assert!(o.value_with(&p, Some(0.95)) < o.value_with(&p, Some(0.9)));
+        // a missing estimate scores as the worst case, never the best
+        assert_eq!(o.value_with(&p, None), 1.0);
+        // point-valued objectives ignore the estimate
+        assert_eq!(Objective::Energy.value_with(&p, Some(0.5)), 5.0);
     }
 
     #[test]
@@ -245,16 +328,26 @@ mod tests {
     fn resolve_objectives_defaults_and_rejects() {
         assert_eq!(
             resolve_objectives(&[]).unwrap(),
-            [Objective::PerfPerArea, Objective::Energy]
+            vec![Objective::PerfPerArea, Objective::Energy]
         );
         let two = resolve_objectives(&["lat".into(), "energy".into()]).unwrap();
-        assert_eq!(two, [Objective::Latency, Objective::Energy]);
+        assert_eq!(two, vec![Objective::Latency, Objective::Energy]);
+        let three =
+            resolve_objectives(&["lat".into(), "energy".into(), "accuracy".into()]).unwrap();
+        assert_eq!(three, vec![Objective::Latency, Objective::Energy, Objective::Accuracy]);
         let e = resolve_objectives(&["lat".into()]).unwrap_err();
-        assert!(e.to_string().contains("exactly two"), "{e}");
+        assert!(e.to_string().contains("two or three"), "{e}");
+        let four: Vec<String> =
+            ["lat", "energy", "area", "power"].map(String::from).to_vec();
+        assert!(resolve_objectives(&four).unwrap_err().to_string().contains("two or three"));
         let e = resolve_objectives(&["energy".into(), "energy".into()]).unwrap_err();
         assert!(e.to_string().contains("distinct"), "{e}");
         // value-aliased pair: perf/energy and edp minimize the same scalar
         let e = resolve_objectives(&["perf/energy".into(), "edp".into()]).unwrap_err();
+        assert!(e.to_string().contains("distinct"), "{e}");
+        // ...including buried inside a triple
+        let e = resolve_objectives(&["edp".into(), "area".into(), "perf/energy".into()])
+            .unwrap_err();
         assert!(e.to_string().contains("distinct"), "{e}");
         assert!(resolve_objectives(&["lat".into(), "nope".into()]).is_err());
     }
@@ -266,6 +359,7 @@ mod tests {
             max_power_mw: Some(300.0),
             max_latency_ms: Some(20.0),
             min_bits: Some(4),
+            min_accuracy: None,
         };
         c.validate().unwrap();
         // satisfied on every axis
@@ -285,5 +379,25 @@ mod tests {
         let e = bad.validate().unwrap_err();
         assert_eq!(e.kind(), "config");
         assert!(e.to_string().contains("max_area_mm2"), "{e}");
+    }
+
+    #[test]
+    fn min_accuracy_floor_validates_and_scores_shortfall() {
+        let c = Constraints { min_accuracy: Some(0.9), ..Default::default() };
+        c.validate().unwrap();
+        assert!(!c.is_empty());
+        assert_eq!(c.accuracy_violation(Some(0.95)), 0.0);
+        assert_eq!(c.accuracy_violation(Some(0.9)), 0.0);
+        let v = c.accuracy_violation(Some(0.45));
+        assert!((v - 0.5).abs() < 1e-12, "{v}");
+        // a missing estimate under an active floor is a full violation
+        assert!((c.accuracy_violation(None) - 1.0).abs() < 1e-12);
+        // no floor: nothing to violate
+        assert_eq!(Constraints::default().accuracy_violation(None), 0.0);
+        for bad in [0.0, -0.5, 1.5] {
+            let c = Constraints { min_accuracy: Some(bad), ..Default::default() };
+            let e = c.validate().unwrap_err();
+            assert!(e.to_string().contains("min_accuracy"), "{e}");
+        }
     }
 }

@@ -550,12 +550,144 @@ pub fn mobilenetv2() -> Vec<Layer> {
     l
 }
 
+// ---------------------------------------------------------------------------
+// scaled variants (model-knob search)
+// ---------------------------------------------------------------------------
+
+/// A channel count scaled by `mult` and rounded to the nearest multiple
+/// of 8 (never below 8) — MobileNet's width-multiplier convention, which
+/// keeps every scaled tensor array-friendly.  Identity at `mult = 1.0`
+/// for the builders' channel counts (all multiples of 8).
+fn scale_ch(c: u32, mult: f64) -> u32 {
+    ((c as f64 * mult / 8.0).round() as u32).max(1) * 8
+}
+
+/// [`mobilenetv1`] under (width, depth) multipliers in (0, 1]: channels
+/// shrink via [`scale_ch`], depth keeps the first
+/// `max(1, round(13 * depth_mult))` separable blocks (trailing blocks
+/// drop, so every scaled layer name exists in the full model).
+/// `(1.0, 1.0)` reproduces [`mobilenetv1`] exactly.
+pub fn mobilenetv1_scaled(width_mult: f64, depth_mult: f64) -> Vec<Layer> {
+    let blocks: [(u32, u32, u32, u32); 13] = [
+        (32, 64, 112, 1),
+        (64, 128, 112, 2),
+        (128, 128, 56, 1),
+        (128, 256, 56, 2),
+        (256, 256, 28, 1),
+        (256, 512, 28, 2),
+        (512, 512, 14, 1),
+        (512, 512, 14, 1),
+        (512, 512, 14, 1),
+        (512, 512, 14, 1),
+        (512, 512, 14, 1),
+        (512, 1024, 14, 2),
+        (1024, 1024, 7, 1),
+    ];
+    let keep = ((13.0 * depth_mult).round() as usize).clamp(1, 13);
+    let mut l = vec![Layer::conv("stem", 3, scale_ch(32, width_mult), 224, 224, 3, 2, 1)];
+    let mut last = scale_ch(32, width_mult);
+    for (i, &(cin, cout, hw, stride)) in blocks.iter().take(keep).enumerate() {
+        let hw_out = if stride == 2 { hw / 2 } else { hw };
+        let (cin, cout) = (scale_ch(cin, width_mult), scale_ch(cout, width_mult));
+        l.push(Layer::dw(&format!("b{}.dw", i + 1), cin, hw, 3, stride, 1));
+        l.push(Layer::pw(&format!("b{}.pw", i + 1), cin, cout, hw_out));
+        last = cout;
+    }
+    l.push(Layer::fc("fc", last, 1000));
+    l
+}
+
+/// [`mobilenetv2`] under (width, depth) multipliers in (0, 1]: channels
+/// shrink via [`scale_ch`], each stage keeps `max(1, round(n *
+/// depth_mult))` of its `n` inverted-residual repeats.  `(1.0, 1.0)`
+/// reproduces [`mobilenetv2`] exactly.
+pub fn mobilenetv2_scaled(width_mult: f64, depth_mult: f64) -> Vec<Layer> {
+    let sc = |c: u32| scale_ch(c, width_mult);
+    let mut l = vec![Layer::conv("stem", 3, sc(32), 224, 224, 3, 2, 1)];
+    let stages: [(u32, u32, u32, u32); 7] = [
+        (1, 16, 1, 1),
+        (6, 24, 2, 2),
+        (6, 32, 3, 2),
+        (6, 64, 4, 2),
+        (6, 96, 3, 1),
+        (6, 160, 3, 2),
+        (6, 320, 1, 1),
+    ];
+    let mut cin = sc(32);
+    let mut hw = 112u32;
+    for (si, &(t, cout, n, s)) in stages.iter().enumerate() {
+        let reps = ((n as f64 * depth_mult).round() as u32).clamp(1, n);
+        for b in 0..reps {
+            let stride = if b == 0 { s } else { 1 };
+            inverted_residual(&mut l, &format!("s{}b{}", si + 1, b + 1), cin, sc(cout), hw, stride, t);
+            if stride == 2 {
+                hw /= 2;
+            }
+            cin = sc(cout);
+        }
+    }
+    l.push(Layer::pw("head", sc(320), sc(1280), 7));
+    l.push(Layer::fc("fc", sc(1280), 1000));
+    l
+}
+
+/// The scaled variant of a built-in workload for model-knob search, with
+/// width and depth multipliers in (0, 1].  Scalable families: the
+/// MobileNets (channel/block scaling) and the transformer decoder stacks
+/// (d_model/FFN/block scaling).  Accepts the same aliases as [`by_name`];
+/// non-scalable workloads are a structured error, not a silent identity.
+pub fn scaled(name: &str, width_mult: f64, depth_mult: f64) -> Result<Vec<Layer>, QappaError> {
+    let canonical = builder(name).map(|(c, _)| c).unwrap_or(name);
+    match canonical {
+        "mobilenetv1" => Ok(mobilenetv1_scaled(width_mult, depth_mult)),
+        "mobilenetv2" => Ok(mobilenetv2_scaled(width_mult, depth_mult)),
+        "opt-1.3b" => Ok(transformer::opt_1p3b_scaled(width_mult, depth_mult)),
+        "llama2-7b" => Ok(transformer::llama2_7b_scaled(width_mult, depth_mult)),
+        other => Err(QappaError::Workload(format!(
+            "workload '{other}' has no scalable builder — width/depth \
+             multipliers are supported for: mobilenetv1, mobilenetv2, \
+             opt-1.3b, llama2-7b"
+        ))),
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
 
     fn gmacs(layers: &[Layer]) -> f64 {
         layers.iter().map(|l| l.macs()).sum::<u64>() as f64 / 1e9
+    }
+
+    #[test]
+    fn scaled_mobilenets_are_identity_at_one_and_shrink_below() {
+        assert_eq!(mobilenetv1_scaled(1.0, 1.0), mobilenetv1());
+        assert_eq!(mobilenetv2_scaled(1.0, 1.0), mobilenetv2());
+        let half = mobilenetv1_scaled(0.5, 0.5);
+        // depth 0.5 keeps round(13 * 0.5) = 7 blocks: stem + 7x(dw,pw) + fc
+        assert_eq!(half.len(), 1 + 7 * 2 + 1);
+        assert_eq!(half[0].k, 16, "stem channels halved");
+        assert_eq!(half.last().unwrap().c, 256, "fc follows the last kept block");
+        let base = mobilenetv1();
+        for l in &half {
+            assert!(base.iter().any(|b| b.name == l.name), "{} not in base", l.name);
+            l.validate().unwrap_or_else(|e| panic!("{e}"));
+        }
+        assert!(gmacs(&half) < 0.5 * gmacs(&base), "width+depth halving cuts MACs");
+        // v2 keeps >= 1 repeat per stage and all channels multiples of 8
+        let thin = mobilenetv2_scaled(0.25, 0.1);
+        for l in &thin {
+            if l.name != "fc" {
+                // classifier output stays 1000-way; everything else 8-aligned
+                assert!(l.k >= 8 && l.k % 8 == 0, "{}: k={}", l.name, l.k);
+            }
+            l.validate().unwrap_or_else(|e| panic!("{e}"));
+            assert!(mobilenetv2().iter().any(|b| b.name == l.name), "{}", l.name);
+        }
+        // dispatch: aliases resolve, non-scalable names are loud errors
+        assert_eq!(scaled("mobilenet-v1", 0.5, 0.5).unwrap(), half);
+        let e = scaled("vgg16", 0.5, 0.5).unwrap_err();
+        assert!(e.to_string().contains("no scalable builder"), "{e}");
     }
 
     #[test]

@@ -153,6 +153,48 @@ pub fn llama2_7b() -> Vec<Layer> {
     decoder_blocks(4096, 32, 11008, 32, DEFAULT_CTX, true)
 }
 
+/// A dimension scaled by `mult` and rounded to the nearest multiple of
+/// `step` (never below one step, never above the original): the width
+/// multiplier convention for model-knob search.  `mult = 1.0` is exact
+/// identity for any `v` divisible by `step`.
+fn scale_dim(v: u32, mult: f64, step: u32) -> u32 {
+    let steps = (v as f64 * mult / step as f64).round() as u32;
+    (steps.max(1) * step).min(v.max(step))
+}
+
+/// Decoder stack scaled by (width, depth) multipliers in (0, 1]:
+/// `d_model` shrinks in steps of `heads` (head count fixed, head_dim
+/// shrinks), the FFN in steps of 8, and the block count to
+/// `max(1, round(n_layers * depth_mult))` — trailing blocks drop, so
+/// every scaled layer name exists in the full stack.
+fn decoder_blocks_scaled(
+    d_model: u32,
+    heads: u32,
+    ffn_hidden: u32,
+    n_layers: u32,
+    ctx: u32,
+    gated_ffn: bool,
+    width_mult: f64,
+    depth_mult: f64,
+) -> Vec<Layer> {
+    let dm = scale_dim(d_model, width_mult, heads);
+    let ffn = scale_dim(ffn_hidden, width_mult, 8);
+    let n = ((n_layers as f64 * depth_mult).round() as u32).clamp(1, n_layers);
+    decoder_blocks(dm, heads, ffn, n, ctx, gated_ffn)
+}
+
+/// [`opt_1p3b`] under (width, depth) multipliers; `(1.0, 1.0)` is the
+/// exact full stack.
+pub fn opt_1p3b_scaled(width_mult: f64, depth_mult: f64) -> Vec<Layer> {
+    decoder_blocks_scaled(2048, 32, 8192, 24, DEFAULT_CTX, false, width_mult, depth_mult)
+}
+
+/// [`llama2_7b`] under (width, depth) multipliers; `(1.0, 1.0)` is the
+/// exact full stack.
+pub fn llama2_7b_scaled(width_mult: f64, depth_mult: f64) -> Vec<Layer> {
+    decoder_blocks_scaled(4096, 32, 11008, 32, DEFAULT_CTX, true, width_mult, depth_mult)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -187,6 +229,32 @@ mod tests {
         assert!(
             matches!(tiny[1].op, Op::Attention { heads: 4, head_dim: 64, seq_q: 128, seq_kv: 128 })
         );
+    }
+
+    #[test]
+    fn scaled_builders_shrink_cleanly_and_are_identity_at_one() {
+        assert_eq!(opt_1p3b_scaled(1.0, 1.0), opt_1p3b());
+        assert_eq!(llama2_7b_scaled(1.0, 1.0), llama2_7b());
+        let half = opt_1p3b_scaled(0.5, 0.5);
+        assert_eq!(half.len(), 12 * 5, "half depth keeps 12 of 24 blocks");
+        // d_model 2048 * 0.5 = 1024, still a multiple of 32 heads
+        assert!(matches!(half[0].op, Op::Matmul { m: DEFAULT_CTX, k: 1024, n: 3072 }));
+        assert!(matches!(half[1].op, Op::Attention { heads: 32, head_dim: 32, .. }));
+        // every scaled name is a full-stack name, and everything validates
+        let base = opt_1p3b();
+        for l in &half {
+            assert!(base.iter().any(|b| b.name == l.name), "{}", l.name);
+            l.validate().unwrap_or_else(|e| panic!("{e}"));
+        }
+        // extreme multipliers stay positive and head-divisible
+        let tiny = llama2_7b_scaled(0.01, 0.01);
+        assert!(!tiny.is_empty());
+        for l in &tiny {
+            if let Op::Attention { heads, head_dim, .. } = l.op {
+                assert!(heads == 32 && head_dim >= 1);
+            }
+            l.validate().unwrap_or_else(|e| panic!("{e}"));
+        }
     }
 
     #[test]

@@ -1,0 +1,422 @@
+//! Integration: the accuracy axis of the co-exploration space.
+//!
+//! Three layers of pinning on top of `accuracy/`'s unit tests:
+//!
+//! * the noise-model **properties** the optimizer relies on — more bits
+//!   never decreases the estimate (strict when a layer does real work),
+//!   layer order is irrelevant, and a table exported from the proxy
+//!   reproduces the proxy bit-for-bit (measured tables are drop-in);
+//! * **strict ingestion at the session boundary** — malformed or
+//!   mismatched sensitivity tables, out-of-range model knobs and
+//!   non-scalable workloads are each rejected with an error naming the
+//!   offending field, before any model trains;
+//! * the **acceptance experiment** — a seeded three-objective
+//!   latency/energy/accuracy NSGA-II run on MobileNetV1 whose mixed
+//!   frontier strictly beats the best uniform-precision configuration on
+//!   at least two objectives at equal evaluation budget, plus a
+//!   `min-accuracy` floor run whose returned frontier never violates the
+//!   floor — and byte-identical determinism for the same seed across the
+//!   typed session call, the serve dispatch line, a TCP round trip, and
+//!   the CLI's frontier/convergence report rendering.
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::TcpStream;
+use std::sync::Arc;
+
+use qappa::accuracy::AccuracyModel;
+use qappa::api::{
+    handle_line, BackendChoice, OptimizeRequest, OptimizeResponse, PrecisionRequest, Qappa,
+    ResponseBody, ServeResponse, TcpServer, TransportOptions,
+};
+use qappa::config::{PeType, QuantSpec, ALL_PE_TYPES};
+use qappa::coordinator::report::{opt_convergence_table, opt_frontier_table};
+use qappa::coordinator::DesignSpace;
+use qappa::dataflow::Layer;
+use qappa::model::CvConfig;
+use qappa::opt::Constraints;
+use qappa::util::json::Json;
+use qappa::workloads;
+
+fn tiny_session() -> Qappa {
+    Qappa::builder()
+        .backend(BackendChoice::Native)
+        .space(DesignSpace::tiny())
+        .train_per_type(64)
+        .cv(CvConfig { k: 3, degrees: vec![1, 2], lambdas: vec![1e-3, 1e-2], seed: 1 })
+        .seed(7)
+        .workers(4)
+        .sigma(0.02)
+        .chunk(32)
+        .topk(8)
+        .build()
+}
+
+fn uniform_specs(layers: &[Layer], spec: QuantSpec) -> Vec<QuantSpec> {
+    vec![spec; layers.len()]
+}
+
+fn three_objectives() -> Vec<String> {
+    vec!["latency".into(), "energy".into(), "accuracy".into()]
+}
+
+// ---------------------------------------------------------------- properties
+
+#[test]
+fn accuracy_estimate_is_monotone_in_operand_bits() {
+    let net = workloads::mobilenetv1();
+    let proxy = AccuracyModel::proxy();
+    let mut table = proxy.to_table(&net);
+    table.baseline = 0.7;
+    let measured = AccuracyModel::from_table(table, &net).unwrap();
+
+    for m in [&proxy, &measured] {
+        // Uniform bit ladder: strictly more accurate at every step, never
+        // above the unquantized baseline.
+        let ladder: Vec<f64> = [2u32, 4, 6, 8, 12, 16]
+            .iter()
+            .map(|&b| m.estimate(&net, &uniform_specs(&net, QuantSpec::int(b, b))))
+            .collect();
+        for w in ladder.windows(2) {
+            assert!(w[0] < w[1], "more bits must strictly help: {ladder:?}");
+        }
+        for &a in &ladder {
+            assert!(a <= m.baseline(), "estimate {a} above baseline {}", m.baseline());
+        }
+
+        // Per-layer monotonicity: bumping any single layer (weights alone,
+        // or both operands) never decreases the estimate — strictly
+        // increases it, since every MobileNetV1 layer does real MACs.
+        let base_specs = uniform_specs(&net, QuantSpec::int(4, 4));
+        let base = m.estimate(&net, &base_specs);
+        for i in 0..net.len() {
+            for bumped_spec in [QuantSpec::int(4, 8), QuantSpec::int(8, 8)] {
+                let mut specs = base_specs.clone();
+                specs[i] = bumped_spec;
+                let bumped = m.estimate(&net, &specs);
+                assert!(
+                    bumped > base,
+                    "bumping layer {} ({}) to {:?} did not help: {bumped} vs {base}",
+                    i,
+                    net[i].name,
+                    bumped_spec
+                );
+            }
+        }
+    }
+
+    // The float datapath is the zero-noise reference: exactly the baseline.
+    let fp = proxy.estimate(&net, &uniform_specs(&net, PeType::Fp32.spec()));
+    assert_eq!(fp, proxy.baseline());
+}
+
+#[test]
+fn accuracy_estimate_is_permutation_invariant_over_layer_order() {
+    let net = workloads::mobilenetv1();
+    let m = AccuracyModel::proxy();
+    // A deliberately non-uniform assignment so reordering actually moves
+    // different (layer, spec) pairs around.
+    let specs: Vec<QuantSpec> = (0..net.len())
+        .map(|i| ALL_PE_TYPES[i % ALL_PE_TYPES.len()].spec())
+        .collect();
+    let base = m.estimate(&net, &specs);
+    assert!(base > 0.0 && base < 1.0);
+
+    let permute = |order: Vec<usize>| {
+        let layers: Vec<Layer> = order.iter().map(|&i| net[i].clone()).collect();
+        let sp: Vec<QuantSpec> = order.iter().map(|&i| specs[i]).collect();
+        m.estimate(&layers, &sp)
+    };
+    let reversed = permute((0..net.len()).rev().collect());
+    let interleaved = permute(
+        (0..net.len()).step_by(2).chain((1..net.len()).step_by(2)).collect(),
+    );
+    for (what, acc) in [("reversed", reversed), ("interleaved", interleaved)] {
+        let rel = (acc - base).abs() / base;
+        assert!(rel < 1e-12, "{what} order moved the estimate: {acc} vs {base}");
+    }
+}
+
+#[test]
+fn table_exported_from_the_proxy_reproduces_the_proxy_exactly() {
+    let net = workloads::mobilenetv1();
+    let proxy = AccuracyModel::proxy();
+
+    // Export -> JSON text -> strict re-parse -> wrap: the full round trip a
+    // user's measured table would take.
+    let table = proxy.to_table(&net);
+    let text = table.to_json().to_string();
+    let reparsed = qappa::accuracy::SensitivityTable::parse(&text).unwrap();
+    assert_eq!(reparsed, table, "sensitivity-table JSON must round-trip");
+    let wrapped = AccuracyModel::from_table(reparsed, &net).unwrap();
+    assert!(wrapped.is_measured() && !proxy.is_measured());
+
+    // Agreement must be exact (bit-identical), not approximate: uniform
+    // presets, a mixed cycle, and single-layer bumps.
+    let mut assignments: Vec<Vec<QuantSpec>> = ALL_PE_TYPES
+        .iter()
+        .map(|&t| uniform_specs(&net, t.spec()))
+        .collect();
+    assignments.push(
+        (0..net.len()).map(|i| ALL_PE_TYPES[i % ALL_PE_TYPES.len()].spec()).collect(),
+    );
+    for i in [0, net.len() / 2, net.len() - 1] {
+        let mut specs = uniform_specs(&net, QuantSpec::int(4, 4));
+        specs[i] = QuantSpec::int(16, 16);
+        assignments.push(specs);
+    }
+    for specs in &assignments {
+        let a = proxy.estimate(&net, specs);
+        let b = wrapped.estimate(&net, specs);
+        assert_eq!(a.to_bits(), b.to_bits(), "proxy {a} != table {b}");
+    }
+    // Baseline scales the whole curve linearly.
+    let mut scaled = proxy.to_table(&net);
+    scaled.baseline = 0.7;
+    let scaled = AccuracyModel::from_table(scaled, &net).unwrap();
+    let specs = uniform_specs(&net, QuantSpec::int(8, 8));
+    let ratio = scaled.estimate(&net, &specs) / proxy.estimate(&net, &specs);
+    assert!((ratio - 0.7).abs() < 1e-12, "{ratio}");
+}
+
+// ------------------------------------------------------- strict ingestion
+
+#[test]
+fn session_rejects_bad_tables_and_knobs_naming_the_field_before_training() {
+    let session = Qappa::builder().backend(BackendChoice::Native).build();
+    let net = workloads::mobilenetv1();
+    let base = AccuracyModel::proxy().to_table(&net);
+    let req = |sensitivity: Option<Json>| OptimizeRequest {
+        workload: "mobilenetv1".into(),
+        objectives: three_objectives(),
+        sensitivity,
+        budget: Some(10),
+        pop: Some(8),
+        seed: Some(1),
+        ..Default::default()
+    };
+    let expect = |r: &OptimizeRequest, kind: &str, needle: &str| {
+        let e = session.optimize(r).unwrap_err();
+        assert_eq!(e.kind(), kind, "{e}");
+        let msg = e.to_string();
+        assert!(msg.contains(needle), "expected {needle:?} in: {msg}");
+    };
+
+    // Unknown top-level field.
+    let mut extra = base.to_json();
+    if let Json::Obj(m) = &mut extra {
+        m.insert("extra".into(), Json::Num(1.0));
+    }
+    expect(&req(Some(extra)), "workload", "\"extra\"");
+
+    // An entry naming no workload layer.
+    let mut ghost = base.clone();
+    ghost.sensitivity.insert("ghost".into(), 1.0);
+    expect(&req(Some(ghost.to_json())), "workload", "sensitivity.ghost");
+
+    // A workload layer with no entry.
+    let mut missing = base.clone();
+    missing.sensitivity.remove("stem");
+    expect(&req(Some(missing.to_json())), "workload", "'stem'");
+
+    // Non-positive sensitivity names the per-layer field.
+    let mut negative = base.clone();
+    negative.sensitivity.insert("stem".into(), -1.0);
+    expect(&req(Some(negative.to_json())), "workload", "sensitivity.stem");
+
+    // The table must be an object at all.
+    expect(&req(Some(Json::Num(5.0))), "workload", "object");
+
+    // A table without anything consuming it is a configuration error, not
+    // a silent no-op.
+    let mut classic = req(Some(base.to_json()));
+    classic.objectives = vec!["latency".into(), "energy".into()];
+    expect(&classic, "config", "requires an accuracy objective");
+
+    // Model knobs: multipliers live in (0, 1]; only scalable workloads
+    // accept them.
+    let mut wide = req(None);
+    wide.width_mults = vec![1.5];
+    expect(&wide, "config", "width_mults");
+    let mut unscalable = req(None);
+    unscalable.workload = "resnet34".into();
+    unscalable.depth_mults = vec![0.5];
+    expect(&unscalable, "workload", "no scalable builder");
+
+    assert_eq!(session.store().misses(), 0, "rejected requests must never train");
+}
+
+// ---------------------------------------------------------- determinism
+
+#[test]
+fn seeded_three_objective_optimize_is_deterministic_across_transports() {
+    let net = workloads::mobilenetv1();
+    let table = AccuracyModel::proxy().to_table(&net);
+    let req = OptimizeRequest {
+        workload: "mobilenetv1".into(),
+        objectives: three_objectives(),
+        constraints: Constraints { min_accuracy: Some(0.85), ..Default::default() },
+        sensitivity: Some(table.to_json()),
+        width_mults: vec![1.0, 0.75],
+        budget: Some(60),
+        pop: Some(16),
+        seed: Some(9),
+        ..Default::default()
+    };
+
+    let session = tiny_session();
+    let typed = session.optimize(&req).unwrap();
+    assert_eq!(typed.objectives, vec!["latency", "energy", "accuracy"]);
+    assert!(!typed.frontier.is_empty());
+    for p in &typed.frontier {
+        assert_eq!(p.objectives.len(), 3);
+        let a = p.accuracy.expect("accuracy runs must report per-point accuracy");
+        assert_eq!(p.objectives[2], 1.0 - a, "third slot is the minimized 1 - accuracy");
+        assert!(a >= 0.85, "floor violated in the returned frontier: {a}");
+    }
+
+    // Same seed, same session.
+    let again = session.optimize(&req).unwrap();
+    assert_eq!(again, typed, "same seed must reproduce the 3-objective frontier");
+
+    // The serve dispatch line (stdio transport), same session.
+    let line = format!(r#"{{"id":5,"op":"optimize","params":{}}}"#, req.to_json());
+    let resp = handle_line(&session, &line);
+    assert_eq!(resp.id, Some(5));
+    let wire = match resp.result {
+        Ok(ResponseBody::Optimize(r)) => r,
+        other => panic!("expected an optimize response, got {other:?}"),
+    };
+    assert_eq!(wire, typed, "serve and session must agree for identical seeds");
+    assert_eq!(session.store().misses(), 1, "one trained model across all three runs");
+
+    // A full TCP round trip against a *fresh* session built from the same
+    // recipe: determinism across processes, not just calls.
+    let remote = Arc::new(tiny_session());
+    let mut server =
+        TcpServer::bind(remote, "127.0.0.1:0", TransportOptions::default()).expect("bind");
+    let stream = TcpStream::connect(server.local_addr()).expect("connect");
+    let mut writer = stream.try_clone().expect("clone");
+    let mut reader = BufReader::new(stream);
+    writeln!(writer, "{line}").unwrap();
+    writer.flush().unwrap();
+    let mut reply = String::new();
+    reader.read_line(&mut reply).expect("read response line");
+    let resp = ServeResponse::from_json(&Json::parse(&reply).expect("JSON line"))
+        .expect("typed response");
+    assert_eq!(resp.id, Some(5));
+    let tcp = match resp.result {
+        Ok(ResponseBody::Optimize(r)) => r,
+        other => panic!("expected an optimize response over TCP, got {other:?}"),
+    };
+    server.shutdown();
+    assert_eq!(tcp, typed, "TCP transport must agree with the typed call");
+
+    // The CLI layer renders these tables: byte-identical reports, with the
+    // accuracy column and third-objective convergence present.
+    let frontier_csv = opt_frontier_table(&typed).to_csv();
+    assert_eq!(opt_frontier_table(&tcp).to_csv(), frontier_csv);
+    assert_eq!(opt_convergence_table(&tcp).to_csv(), opt_convergence_table(&typed).to_csv());
+    assert!(frontier_csv.contains("accuracy"), "report must carry the accuracy column");
+    assert!(opt_convergence_table(&typed).to_csv().contains("best_obj2"));
+}
+
+// ----------------------------------------------------------- acceptance
+
+/// Equal-weight best-compromise point: minimized objectives normalized by
+/// the per-axis maximum over `points`, then the row with the smallest sum.
+fn best_compromise(points: &[&qappa::api::OptPoint]) -> Vec<f64> {
+    let mut maxs = [0.0f64; 3];
+    for p in points {
+        for k in 0..3 {
+            maxs[k] = maxs[k].max(p.objectives[k]);
+        }
+    }
+    for m in &mut maxs {
+        if *m <= 0.0 {
+            *m = 1.0;
+        }
+    }
+    points
+        .iter()
+        .map(|p| {
+            let score: f64 = (0..3).map(|k| p.objectives[k] / maxs[k]).sum();
+            (score, p.objectives.clone())
+        })
+        .min_by(|a, b| a.0.total_cmp(&b.0))
+        .expect("non-empty frontier")
+        .1
+}
+
+#[test]
+fn three_objective_frontier_beats_uniform_precision_baselines_at_equal_budget() {
+    const BUDGET: usize = 240;
+    let session = tiny_session();
+    let base = |precision: Option<PrecisionRequest>, per_layer: Option<bool>| OptimizeRequest {
+        workload: "mobilenetv1".into(),
+        objectives: three_objectives(),
+        budget: Some(BUDGET),
+        pop: Some(24),
+        seed: Some(11),
+        per_layer,
+        precision,
+        ..Default::default()
+    };
+
+    // The co-exploration run: hardware x per-layer precision over the four
+    // preset cells.
+    let mixed = session.optimize(&base(None, None)).unwrap();
+    assert!(mixed.evaluated <= BUDGET);
+    assert!(!mixed.frontier.is_empty());
+
+    // Uniform-precision baselines: one run per preset, hardware-only
+    // search, the same seed and the same evaluation budget.
+    let mut uniform: Vec<OptimizeResponse> = Vec::new();
+    for label in ["fp32", "int16", "lightpe-1", "lightpe-2"] {
+        let req = base(
+            Some(PrecisionRequest { types: vec![label.into()], ..Default::default() }),
+            Some(false),
+        );
+        let resp = session.optimize(&req).unwrap();
+        assert!(resp.evaluated <= BUDGET, "{label} overran the shared budget");
+        assert!(!resp.frontier.is_empty(), "{label} produced no frontier");
+        // A uniform palette has exactly one accuracy level: hardware knobs
+        // cannot move the quantization noise.
+        let acc0 = resp.frontier[0].accuracy.expect("accuracy present").to_bits();
+        for p in &resp.frontier {
+            assert_eq!(p.accuracy.unwrap().to_bits(), acc0, "{label} accuracy drifted");
+        }
+        uniform.push(resp);
+    }
+
+    // The best uniform configuration across all presets: the equal-weight
+    // compromise over every uniform frontier point (normalized per axis).
+    let pool: Vec<&qappa::api::OptPoint> =
+        uniform.iter().flat_map(|r| r.frontier.iter()).collect();
+    let best_uniform = best_compromise(&pool);
+
+    // Acceptance: some mixed-frontier point is strictly better on at least
+    // two of the three minimized objectives.
+    let beaten = mixed.frontier.iter().any(|p| {
+        (0..3).filter(|&k| p.objectives[k] < best_uniform[k]).count() >= 2
+    });
+    assert!(
+        beaten,
+        "no mixed point beat the best uniform config {best_uniform:?} on >= 2 \
+         objectives; mixed frontier: {:?}",
+        mixed.frontier.iter().map(|p| p.objectives.clone()).collect::<Vec<_>>()
+    );
+
+    // The hard floor: a constrained run never returns a violating point.
+    let floor = 0.93;
+    let mut floored = base(None, None);
+    floored.constraints = Constraints { min_accuracy: Some(floor), ..Default::default() };
+    floored.budget = Some(80);
+    floored.pop = Some(16);
+    floored.seed = Some(5);
+    let resp = session.optimize(&floored).unwrap();
+    assert!(!resp.frontier.is_empty(), "feasible designs exist above the floor");
+    for p in &resp.frontier {
+        let a = p.accuracy.expect("constrained runs must report accuracy");
+        assert!(a >= floor, "returned point violates min-accuracy {floor}: {a}");
+    }
+}

@@ -66,8 +66,9 @@ fn guided(
         SearchSpace::new(&opts.space, ALL_PE_TYPES.to_vec(), layers, true).unwrap();
     let problem = OptProblem {
         search,
-        objectives: [Objective::PerfPerArea, Objective::Energy],
+        objectives: vec![Objective::PerfPerArea, Objective::Energy],
         constraints: Constraints::default(),
+        accuracy: None,
     };
     let oopts = OptOptions { strategy, budget, pop: 50, seed, ..Default::default() };
     run_optimize(backend, model, &problem, &oopts, opts.workers).unwrap()

@@ -177,8 +177,9 @@ fn optimizer_fast_path_matches_the_per_point_oracle_for_every_strategy() {
                 SearchSpace::new(&opts.space, palette.clone(), &layers, true).unwrap();
             let problem = OptProblem {
                 search,
-                objectives: [Objective::PerfPerArea, Objective::Energy],
+                objectives: vec![Objective::PerfPerArea, Objective::Energy],
                 constraints: Constraints::default(),
+                accuracy: None,
             };
             let oopts = OptOptions {
                 strategy: kind,

@@ -82,6 +82,7 @@ fn phased_analyze_composes_and_matches_over_the_serve_wire() {
         config: AcceleratorConfig::default_with(PeType::Int16),
         phase: Some(phase.into()),
         ctx: Some(512),
+        accuracy: None,
     };
 
     let both = session.analyze(&req("both")).unwrap();

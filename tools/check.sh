@@ -20,6 +20,27 @@ run cargo test -q golden
 # plus the cross-chunk/legacy-env determinism pins in integration_cli.rs).
 # Run explicitly so a divergence is called out by name.
 run cargo test -q --test integration_soa
+# Golden 3-objective frontier snapshot: the seeded MobileNetV1
+# latency/energy/accuracy frontier CSV (docs/ACCURACY.md) must stay
+# byte-identical across runs on the same tree. Like the float PPA/DSE
+# snapshots, this is a blessed snapshot — it self-seeds on a fresh
+# checkout (first run writes tools/golden/opt_frontier_3obj.csv) and
+# compares byte-exactly afterwards; delete the file to re-bless after an
+# intentional change.
+golden=tools/golden/opt_frontier_3obj.csv
+tmp_out=$(mktemp -d)
+run ./target/release/qappa optimize --workload mobilenetv1 --space tiny \
+    --train 48 --budget 60 --pop 16 --backend native --seed 7 \
+    --objectives latency,energy,accuracy --min-accuracy 0.9 \
+    --out "$tmp_out" > /dev/null
+if [ ! -f "$golden" ]; then
+    mkdir -p "$(dirname "$golden")"
+    cp "$tmp_out/optimize_frontier.csv" "$golden"
+    echo "==> blessed new 3-objective frontier snapshot: $golden"
+else
+    run cmp "$golden" "$tmp_out/optimize_frontier.csv"
+fi
+rm -rf "$tmp_out"
 # clippy/fmt/doc are advisory in environments without the components installed
 if cargo clippy --version >/dev/null 2>&1; then
     run cargo clippy -q -- -D warnings
