@@ -118,6 +118,30 @@ fn main() {
 
     server.shutdown();
 
+    // Attach the process metrics registry to the artifact: serve counters
+    // and the server-side request-latency summary ride along in
+    // BENCH_serve.json.  Names avoid the *_per_s / *_ms gate suffixes on
+    // purpose — these are informational context next to the gated numbers.
+    let snap = qappa::obs::registry().snapshot();
+    for key in [
+        "serve.requests",
+        "serve.ok",
+        "serve.errors",
+        "serve.shed",
+        "serve.coalesced",
+        "serve.connections",
+    ] {
+        if let Some(v) = snap.counters.get(key) {
+            report.metric(&format!("metrics/{key}"), *v as f64);
+        }
+    }
+    if let Some(h) = snap.histograms.get("serve.request_ms") {
+        report.metric("metrics/serve.request_ms.count", h.count as f64);
+        report.metric("metrics/serve.request_ms.p50", h.p50_ms);
+        report.metric("metrics/serve.request_ms.p95", h.p95_ms);
+        report.metric("metrics/serve.request_ms.p99", h.p99_ms);
+    }
+
     // -------------------------------------------------------------- stdio
     // The baseline is intentionally *one* measurement, not a Bench loop: 4
     // cold sessions retrain 16 models as a real 4-process client would.

@@ -20,6 +20,34 @@ use qappa::util::bench::{Bench, BenchReport};
 
 fn main() {
     let mut report = BenchReport::new();
+
+    // Benches measure the untraced hot path, and the disabled trace path
+    // must stay near-free: the sink resolves once (OnceLock), so a
+    // `phase_with` probe is one atomic load with the message closure never
+    // run.  Budget: well under 1 µs per probe (generous — the real cost is
+    // nanoseconds; the bound only catches an accidental per-call env read
+    // or eager format sneaking back in).
+    assert!(
+        !qappa::obs::trace::enabled(),
+        "benches measure the untraced hot path; unset QAPPA_TRACE"
+    );
+    {
+        const PROBES: u32 = 100_000;
+        let t0 = std::time::Instant::now();
+        for _ in 0..PROBES {
+            qappa::obs::trace::phase_with(
+                || -> String { unreachable!("disabled sink must not format") },
+                t0,
+            );
+        }
+        let dt = t0.elapsed();
+        report.metric("trace/disabled_probe_ns", dt.as_nanos() as f64 / PROBES as f64);
+        assert!(
+            dt.as_secs_f64() < 0.1,
+            "disabled-path tracing overhead blew up: {PROBES} probes took {dt:?}"
+        );
+    }
+
     let backend = common::AnyBackend::auto();
     let mut opts = DseOptions::default();
     opts.train_per_type = 192;

@@ -31,6 +31,7 @@ use crate::api::error::QappaError;
 use crate::api::serve;
 use crate::api::session::Qappa;
 use crate::api::types::{ErrorBody, RequestBody, ResponseBody, ServeRequest, ServeResponse};
+use crate::obs;
 use crate::opt::CancelToken;
 use crate::util::json::Json;
 
@@ -91,12 +92,17 @@ pub struct Dispatcher {
     counters: Counters,
 }
 
-/// Decrements the in-flight gauge on every exit path.
-struct Admitted<'a>(&'a AtomicUsize);
+/// Decrements the in-flight gauges (the dispatcher's own and the
+/// registry's `serve.inflight`) on every exit path.
+struct Admitted<'a> {
+    inflight: &'a AtomicUsize,
+    gauge: obs::Gauge,
+}
 
 impl Drop for Admitted<'_> {
     fn drop(&mut self) {
-        self.0.fetch_sub(1, Ordering::SeqCst);
+        self.inflight.fetch_sub(1, Ordering::SeqCst);
+        self.gauge.add(-1.0);
     }
 }
 
@@ -135,13 +141,28 @@ impl Dispatcher {
     pub(crate) fn note_rejected(&self) {
         self.counters.requests.fetch_add(1, Ordering::SeqCst);
         self.counters.errors.fetch_add(1, Ordering::SeqCst);
+        let reg = obs::registry();
+        reg.counter("serve.requests").inc();
+        reg.counter("serve.errors").inc();
     }
 
     /// Parse and answer one request line against the admission gate, the
     /// coalescing map and the caller's cancel token.  Mirrors
     /// [`serve::handle_line`]'s never-panic contract: every input answers
     /// with a response carrying the caller's id when one was parseable.
+    /// Every request feeds the registry: `serve.requests`/`ok`/`errors`
+    /// counters and the `serve.request_ms` latency histogram.
     pub fn handle_line(&self, line: &str, cancel: &CancelToken) -> ServeResponse {
+        let t0 = std::time::Instant::now();
+        let resp = self.handle_line_inner(line, cancel);
+        let reg = obs::registry();
+        reg.histogram("serve.request_ms").record_ms(t0.elapsed().as_secs_f64() * 1e3);
+        reg.counter("serve.requests").inc();
+        reg.counter(if resp.result.is_ok() { "serve.ok" } else { "serve.errors" }).inc();
+        resp
+    }
+
+    fn handle_line_inner(&self, line: &str, cancel: &CancelToken) -> ServeResponse {
         self.counters.requests.fetch_add(1, Ordering::SeqCst);
         let v = match Json::parse(line) {
             Ok(v) => v,
@@ -163,16 +184,22 @@ impl Dispatcher {
         // Admission gate: admit-then-check keeps the gauge race-free
         // without a lock on the hot path.
         let prev = self.inflight.fetch_add(1, Ordering::SeqCst);
-        let guard = Admitted(&self.inflight);
+        let inflight_gauge = obs::registry().gauge("serve.inflight");
+        inflight_gauge.add(1.0);
+        let guard = Admitted { inflight: &self.inflight, gauge: inflight_gauge };
         if prev >= self.opts.max_inflight {
             drop(guard);
             self.counters.shed.fetch_add(1, Ordering::SeqCst);
             self.counters.errors.fetch_add(1, Ordering::SeqCst);
-            eprintln!(
-                "[serve] shed {} request: {} in flight (max {})",
-                req.body.op(),
-                prev,
-                self.opts.max_inflight
+            obs::registry().counter("serve.shed").inc();
+            obs::diag(
+                "serve",
+                format_args!(
+                    "shed {} request: {} in flight (max {})",
+                    req.body.op(),
+                    prev,
+                    self.opts.max_inflight
+                ),
             );
             let e = QappaError::Protocol(format!(
                 "admission: server at capacity ({} requests in flight, max {}); retry later",
@@ -198,11 +225,15 @@ impl Dispatcher {
     ) -> Result<ResponseBody, ErrorBody> {
         match body {
             RequestBody::Optimize(r) => {
+                // Bypasses `serve::dispatch` (cancellable path), so count
+                // the op here to keep `session.ops.*` complete.
+                obs::registry().counter("session.ops.optimize").inc();
                 match self.session.optimize_cancellable(r, cancel) {
                     Ok(resp) => Ok(ResponseBody::Optimize(resp)),
                     Err(e) => {
                         if cancel.is_cancelled() {
                             self.counters.cancelled.fetch_add(1, Ordering::SeqCst);
+                            obs::registry().counter("serve.cancelled").inc();
                         }
                         Err(ErrorBody::from(&e))
                     }
@@ -244,6 +275,7 @@ impl Dispatcher {
             result
         } else {
             self.counters.coalesced.fetch_add(1, Ordering::SeqCst);
+            obs::registry().counter("serve.coalesced").inc();
             let mut done = flight.done.lock().unwrap_or_else(|p| p.into_inner());
             while done.is_none() {
                 done = flight.cv.wait(done).unwrap_or_else(|p| p.into_inner());

@@ -19,8 +19,8 @@ use crate::api::types::{
     AnalyzeRequest, ExploreRequest, RequestBody, ServeRequest, ServeResponse,
 };
 use crate::config::{AcceleratorConfig, PeType};
+use crate::obs::Histogram;
 use crate::util::json::{obj, Json};
-use crate::util::stats::percentile;
 
 /// Which request stream each connection sends.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -265,7 +265,10 @@ pub fn run_loadgen(addr: &str, opts: &LoadgenOptions) -> Result<LoadgenReport, Q
     }
     let elapsed_s = t0.elapsed().as_secs_f64().max(1e-9);
     let total = latencies.len();
-    let max_ms = latencies.iter().cloned().fold(0.0, f64::max);
+    // One quantile implementation for the whole codebase: the shared
+    // log-bucket histogram from `obs` (max is exact; p50/p95/p99 are
+    // rank-interpolated within ≤~4.4%-wide buckets — see obs::metrics).
+    let (p50_ms, p95_ms, p99_ms, max_ms) = latency_quantiles(&latencies);
     Ok(LoadgenReport {
         connections,
         requests: total,
@@ -273,11 +276,22 @@ pub fn run_loadgen(addr: &str, opts: &LoadgenOptions) -> Result<LoadgenReport, Q
         errors,
         elapsed_s,
         throughput_per_s: total as f64 / elapsed_s,
-        p50_ms: percentile(&latencies, 50.0),
-        p95_ms: percentile(&latencies, 95.0),
-        p99_ms: percentile(&latencies, 99.0),
+        p50_ms,
+        p95_ms,
+        p99_ms,
         max_ms,
     })
+}
+
+/// (p50, p95, p99, max) of a latency sample in ms, via the shared obs
+/// histogram so loadgen and the serve-side `serve.request_ms` metric agree
+/// on one quantile definition.
+fn latency_quantiles(latencies: &[f64]) -> (f64, f64, f64, f64) {
+    let h = Histogram::new();
+    for &ms in latencies {
+        h.record_ms(ms);
+    }
+    (h.quantile(50.0), h.quantile(95.0), h.quantile(99.0), h.max_ms())
 }
 
 #[cfg(test)]
@@ -295,6 +309,24 @@ mod tests {
         let ops: Vec<&str> =
             (0..4).map(|k| RequestMix::Mixed.body(k).op()).collect();
         assert_eq!(ops, ["explore", "analyze", "session", "explore"]);
+    }
+
+    #[test]
+    fn latency_quantiles_pin_to_the_exact_sorted_oracle() {
+        use crate::util::stats::percentile;
+        // A skewed latency-like sample: mostly fast, a heavy tail.
+        let mut xs: Vec<f64> = (1..=900).map(|i| 0.5 + i as f64 * 0.01).collect();
+        xs.extend((1..=100).map(|i| 20.0 + i as f64 * 0.5));
+        let (p50, p95, p99, max) = latency_quantiles(&xs);
+        for (est, p) in [(p50, 50.0), (p95, 95.0), (p99, 99.0)] {
+            let exact = percentile(&xs, p);
+            assert!(
+                (est - exact).abs() / exact < 0.10,
+                "p{p}: histogram {est} vs exact {exact}"
+            );
+        }
+        assert_eq!(max, 70.0, "max is exact");
+        assert!(p50 <= p95 && p95 <= p99 && p99 <= max);
     }
 
     #[test]

@@ -42,6 +42,7 @@ pub use loadgen::{run_loadgen, LoadgenOptions, LoadgenReport, RequestMix};
 pub use serve::{dispatch, handle_line, serve, ServeOptions, ServeStats};
 pub use session::{process_store, BackendChoice, Qappa, QappaBuilder};
 pub use transport::{ServerStats, TcpServer, TransportOptions};
+pub use crate::obs::{HistogramSummary, MetricsSnapshot};
 pub use crate::opt::CancelToken;
 pub use crate::opt::objective::Constraints;
 pub use types::{

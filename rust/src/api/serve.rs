@@ -50,8 +50,10 @@ pub struct ServeStats {
     pub errors: usize,
 }
 
-/// Dispatch one typed request against the session.
+/// Dispatch one typed request against the session.  Every op bumps its
+/// `session.ops.<op>` counter in the process-wide metrics registry.
 pub fn dispatch(session: &Qappa, body: &RequestBody) -> Result<ResponseBody, QappaError> {
+    crate::obs::registry().counter(&format!("session.ops.{}", body.op())).inc();
     match body {
         RequestBody::Synth(r) => session.synth(r).map(ResponseBody::Synth),
         RequestBody::Fit(r) => session.fit(r).map(ResponseBody::Fit),
@@ -60,6 +62,7 @@ pub fn dispatch(session: &Qappa, body: &RequestBody) -> Result<ResponseBody, Qap
         RequestBody::Analyze(r) => session.analyze(r).map(ResponseBody::Analyze),
         RequestBody::Workloads(r) => session.workloads(r).map(ResponseBody::Workloads),
         RequestBody::Session => Ok(ResponseBody::Session(session.session_info())),
+        RequestBody::Metrics => Ok(ResponseBody::Metrics(crate::obs::registry().snapshot())),
     }
 }
 

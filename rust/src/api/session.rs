@@ -315,12 +315,15 @@ impl Qappa {
         let engine = Arc::new(Engine::start(&dir).map_err(|e| {
             e.context(format!("starting XLA engine from {}", dir.display()))
         })?);
-        eprintln!(
-            "[qappa] XLA engine up (d={}, B={}, N_fit={}) from {}",
-            engine.d,
-            engine.b_predict,
-            engine.n_fit,
-            dir.display()
+        crate::obs::diag(
+            "qappa",
+            format_args!(
+                "XLA engine up (d={}, B={}, N_fit={}) from {}",
+                engine.d,
+                engine.b_predict,
+                engine.n_fit,
+                dir.display()
+            ),
         );
         Ok(AnyBackend::Xla(XlaBackend::new(engine.clone()), engine))
     }

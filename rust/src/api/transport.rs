@@ -33,6 +33,7 @@ use crate::api::dispatch::{DispatchOptions, DispatchStats, Dispatcher};
 use crate::api::error::QappaError;
 use crate::api::session::Qappa;
 use crate::api::types::{ErrorBody, ServeResponse};
+use crate::obs;
 use crate::opt::CancelToken;
 use crate::util::queue::BoundedQueue;
 
@@ -156,7 +157,7 @@ fn handle_connection(
     let reader = match stream.try_clone() {
         Ok(s) => s,
         Err(e) => {
-            eprintln!("[serve] conn #{conn_id}: clone failed: {e}");
+            obs::diag("serve", format_args!("conn #{conn_id}: clone failed: {e}"));
             return;
         }
     };
@@ -254,7 +255,7 @@ impl TcpServer {
             let shared = shared.clone();
             std::thread::spawn(move || accept_loop(listener, dispatcher, shared, opts))
         };
-        eprintln!("[serve] listening on {local}");
+        obs::diag("serve", format_args!("listening on {local}"));
         Ok(TcpServer { addr: local, dispatcher, shared, opts, accept: Some(accept) })
     }
 
@@ -295,7 +296,7 @@ impl TcpServer {
         for t in threads {
             let _ = t.join();
         }
-        eprintln!("[serve] drained: {:?}", self.stats().dispatch);
+        obs::diag("serve", format_args!("drained: {:?}", self.stats().dispatch));
     }
 }
 
@@ -319,7 +320,7 @@ fn accept_loop(
                 if shared.shutdown.load(Ordering::SeqCst) {
                     break;
                 }
-                eprintln!("[serve] accept failed: {e}");
+                obs::diag("serve", format_args!("accept failed: {e}"));
                 continue;
             }
         };
@@ -334,6 +335,8 @@ fn accept_loop(
         next_id += 1;
         shared.accepted.fetch_add(1, Ordering::SeqCst);
         shared.active.fetch_add(1, Ordering::SeqCst);
+        obs::registry().counter("serve.connections").inc();
+        obs::registry().gauge("serve.connections_active").add(1.0);
         if let Ok(clone) = stream.try_clone() {
             shared
                 .conns
@@ -347,6 +350,7 @@ fn accept_loop(
             std::thread::spawn(move || {
                 handle_connection(conn_id, stream, &dispatcher, &shared, &opts);
                 shared.active.fetch_sub(1, Ordering::SeqCst);
+                obs::registry().gauge("serve.connections_active").add(-1.0);
                 shared
                     .conns
                     .lock()
@@ -362,7 +366,8 @@ fn accept_loop(
 /// close — the client learns *why* instead of hanging in a backlog.
 fn shed_connection(mut stream: TcpStream, shared: &Shared, max: usize) {
     shared.shed.fetch_add(1, Ordering::SeqCst);
-    eprintln!("[serve] shed connection: {max} already active");
+    obs::registry().counter("serve.connections_shed").inc();
+    obs::diag("serve", format_args!("shed connection: {max} already active"));
     let e = QappaError::Protocol(format!(
         "admission: server at connection capacity (max {max}); retry later"
     ));

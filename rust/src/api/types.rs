@@ -25,6 +25,7 @@ use crate::config::{AcceleratorConfig, MacKind, PeType};
 use crate::coordinator::explorer::WorkloadSummary;
 use crate::coordinator::precision::PrecisionGrid;
 use crate::dataflow::{Layer, MemoStats};
+use crate::obs::metrics::MetricsSnapshot;
 use crate::opt::engine::GenStat;
 use crate::opt::objective::Constraints;
 use crate::synth::oracle::Ppa;
@@ -1593,11 +1594,13 @@ pub enum RequestBody {
     Analyze(AnalyzeRequest),
     Workloads(WorkloadsRequest),
     Session,
+    /// Process-wide metrics registry snapshot (`docs/OBSERVABILITY.md`).
+    Metrics,
 }
 
 /// Every op name, in help/docs order.
-pub const OPS: [&str; 7] =
-    ["synth", "fit", "explore", "optimize", "analyze", "workloads", "session"];
+pub const OPS: [&str; 8] =
+    ["synth", "fit", "explore", "optimize", "analyze", "workloads", "session", "metrics"];
 
 impl RequestBody {
     pub fn op(&self) -> &'static str {
@@ -1609,6 +1612,7 @@ impl RequestBody {
             RequestBody::Analyze(_) => "analyze",
             RequestBody::Workloads(_) => "workloads",
             RequestBody::Session => "session",
+            RequestBody::Metrics => "metrics",
         }
     }
 
@@ -1621,6 +1625,7 @@ impl RequestBody {
             "analyze" => Ok(RequestBody::Analyze(AnalyzeRequest::from_json(params)?)),
             "workloads" => Ok(RequestBody::Workloads(WorkloadsRequest::from_json(params)?)),
             "session" => Ok(RequestBody::Session),
+            "metrics" => Ok(RequestBody::Metrics),
             other => Err(proto(format!(
                 "unknown op '{other}' (expected {})",
                 OPS.join("|")
@@ -1637,6 +1642,7 @@ impl RequestBody {
             RequestBody::Analyze(r) => r.to_json(),
             RequestBody::Workloads(r) => r.to_json(),
             RequestBody::Session => obj(vec![]),
+            RequestBody::Metrics => obj(vec![]),
         }
     }
 }
@@ -1696,6 +1702,7 @@ pub enum ResponseBody {
     Analyze(AnalyzeResponse),
     Workloads(WorkloadsResponse),
     Session(SessionInfo),
+    Metrics(MetricsSnapshot),
 }
 
 impl ResponseBody {
@@ -1708,6 +1715,7 @@ impl ResponseBody {
             ResponseBody::Analyze(_) => "analyze",
             ResponseBody::Workloads(_) => "workloads",
             ResponseBody::Session(_) => "session",
+            ResponseBody::Metrics(_) => "metrics",
         }
     }
 
@@ -1720,6 +1728,7 @@ impl ResponseBody {
             ResponseBody::Analyze(r) => r.to_json(),
             ResponseBody::Workloads(r) => r.to_json(),
             ResponseBody::Session(r) => r.to_json(),
+            ResponseBody::Metrics(r) => r.to_json(),
         }
     }
 
@@ -1732,6 +1741,7 @@ impl ResponseBody {
             "analyze" => Ok(ResponseBody::Analyze(AnalyzeResponse::from_json(result)?)),
             "workloads" => Ok(ResponseBody::Workloads(WorkloadsResponse::from_json(result)?)),
             "session" => Ok(ResponseBody::Session(SessionInfo::from_json(result)?)),
+            "metrics" => Ok(ResponseBody::Metrics(MetricsSnapshot::from_json(result)?)),
             other => Err(proto(format!("unknown response op '{other}'"))),
         }
     }

@@ -23,10 +23,12 @@ use crate::api::error::QappaError;
 use crate::config::{AcceleratorConfig, PeType, ALL_PE_TYPES};
 use crate::coordinator::space::DesignSpace;
 use crate::coordinator::sweep::{
-    eval_point, trace, NamedWorkload, SweepEngine, SweepStats, TypeSweep,
+    eval_point, NamedWorkload, SweepEngine, SweepStats, TypeSweep,
 };
 use crate::dataflow::Layer;
 use crate::model::{fit_ppa, Backend, CvConfig, PpaModel};
+use crate::obs;
+use crate::obs::trace::phase_with;
 use crate::synth::oracle::{synthesize_with_sigma, Ppa, JITTER_SIGMA};
 use crate::util::pool::{default_workers, parallel_map};
 use crate::util::prng::hash64;
@@ -151,6 +153,19 @@ impl ModelStore {
         ModelStore::default()
     }
 
+    /// One avoided training pass: bump the store counter and the
+    /// process-wide `store.cache_hits` metric together.
+    fn note_hit(&self) {
+        self.hits.fetch_add(1, Ordering::Relaxed);
+        obs::registry().counter("store.cache_hits").inc();
+    }
+
+    /// One training pass actually run (`store.models_trained`).
+    fn note_miss(&self) {
+        self.misses.fetch_add(1, Ordering::Relaxed);
+        obs::registry().counter("store.models_trained").inc();
+    }
+
     fn recipe_hash(backend: &dyn Backend, opts: &DseOptions) -> u64 {
         let mut s = format!(
             "{:x}|{}|{}|{:x}|{}|{}|{:x}",
@@ -184,15 +199,15 @@ impl ModelStore {
     ) -> Result<Arc<PpaModel>, QappaError> {
         let key = (ty, Self::recipe_hash(backend, opts));
         if let Some(m) = self.entries.lock().unwrap().get(&key) {
-            self.hits.fetch_add(1, Ordering::Relaxed);
+            self.note_hit();
             return Ok(m.clone());
         }
         let _training = self.train_lock.lock().unwrap_or_else(|p| p.into_inner());
         if let Some(m) = self.entries.lock().unwrap().get(&key) {
-            self.hits.fetch_add(1, Ordering::Relaxed);
+            self.note_hit();
             return Ok(m.clone());
         }
-        self.misses.fetch_add(1, Ordering::Relaxed);
+        self.note_miss();
         let model = Arc::new(train_one_model(backend, opts, ty)?);
         self.entries.lock().unwrap().insert(key, model.clone());
         Ok(model)
@@ -215,15 +230,15 @@ impl ModelStore {
         }
         let key = hash64(s.as_bytes());
         if let Some(m) = self.quant_entries.lock().unwrap().get(&key) {
-            self.hits.fetch_add(1, Ordering::Relaxed);
+            self.note_hit();
             return Ok(m.clone());
         }
         let _training = self.train_lock.lock().unwrap_or_else(|p| p.into_inner());
         if let Some(m) = self.quant_entries.lock().unwrap().get(&key) {
-            self.hits.fetch_add(1, Ordering::Relaxed);
+            self.note_hit();
             return Ok(m.clone());
         }
-        self.misses.fetch_add(1, Ordering::Relaxed);
+        self.note_miss();
         let model =
             Arc::new(crate::coordinator::precision::train_quant_model(backend, opts, grid)?);
         self.quant_entries.lock().unwrap().insert(key, model.clone());
@@ -264,7 +279,7 @@ pub fn train_one_model(
     let ppas: Vec<Ppa> = parallel_map(&cfgs, opts.workers, |c| {
         synthesize_with_sigma(c, opts.sigma)
     });
-    trace(&format!("train/{}/synth({})", ty.label(), cfgs.len()), t0);
+    phase_with(|| format!("train/{}/synth({})", ty.label(), cfgs.len()), t0);
     let mut feats = Vec::with_capacity(cfgs.len() * 7);
     let mut targets = Vec::with_capacity(cfgs.len() * 3);
     for (c, p) in cfgs.iter().zip(&ppas) {
@@ -274,7 +289,10 @@ pub fn train_one_model(
     let t1 = std::time::Instant::now();
     let model = fit_ppa(backend, &feats, &targets, &opts.cv)
         .map_err(|e| e.context(ty.label()))?;
-    trace(&format!("train/{}/cv_fit", ty.label()), t1);
+    phase_with(|| format!("train/{}/cv_fit", ty.label()), t1);
+    obs::registry()
+        .histogram("store.train_ms")
+        .record_ms(t0.elapsed().as_secs_f64() * 1e3);
     Ok(model)
 }
 

@@ -23,8 +23,10 @@ use crate::config::{auto_psum, MacKind, PeType, QuantSpec, QUANT_NUM_FEATURES};
 use crate::coordinator::explorer::{
     assemble_ratios, best_points, DseOptions, ModelStore, WorkloadSummary,
 };
-use crate::coordinator::sweep::{trace, NamedWorkload, SweepEngine, TypeSweep};
+use crate::coordinator::sweep::{NamedWorkload, SweepEngine, TypeSweep};
 use crate::model::{fit_ppa, Backend, PpaModel};
+use crate::obs;
+use crate::obs::trace::phase_with;
 use crate::synth::oracle::{synthesize_with_sigma, Ppa};
 use crate::util::pool::parallel_map;
 
@@ -181,7 +183,7 @@ pub fn train_quant_model(
     }
     let ppas: Vec<Ppa> =
         parallel_map(&cfgs, opts.workers, |c| synthesize_with_sigma(c, opts.sigma));
-    trace(&format!("train/quant/synth({})", cfgs.len()), t0);
+    phase_with(|| format!("train/quant/synth({})", cfgs.len()), t0);
     let mut feats = Vec::with_capacity(cfgs.len() * QUANT_NUM_FEATURES);
     let mut targets = Vec::with_capacity(cfgs.len() * 3);
     for (c, p) in cfgs.iter().zip(&ppas) {
@@ -191,7 +193,10 @@ pub fn train_quant_model(
     let t1 = std::time::Instant::now();
     let model = fit_ppa(backend, &feats, &targets, &opts.cv)
         .map_err(|e| e.context("unified precision model"))?;
-    trace("train/quant/cv_fit", t1);
+    phase_with(|| "train/quant/cv_fit".to_string(), t1);
+    obs::registry()
+        .histogram("store.train_ms")
+        .record_ms(t0.elapsed().as_secs_f64() * 1e3);
     Ok(model)
 }
 

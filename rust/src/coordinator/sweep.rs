@@ -21,15 +21,10 @@ use crate::dataflow::{
     PreparedWorkload,
 };
 use crate::model::{predict_ppa, Backend, PpaModel};
+use crate::obs;
+use crate::obs::trace::phase_with;
 use crate::synth::oracle::{energy_params, EnergyParams, Ppa};
 use crate::util::pool::{parallel_map, workers_for};
-
-/// Phase-timing hook: set `QAPPA_TRACE=1` to print per-phase wall times.
-pub(crate) fn trace(phase: &str, t0: std::time::Instant) {
-    if std::env::var_os("QAPPA_TRACE").is_some() {
-        eprintln!("[trace] {phase}: {:.1} ms", t0.elapsed().as_secs_f64() * 1e3);
-    }
-}
 
 /// `QAPPA_LEGACY_EVAL=1` forces the pre-SoA per-point evaluation path —
 /// the test oracle the equivalence suite (and a cautious user) compares
@@ -434,11 +429,22 @@ impl<'a> SweepEngine<'a> {
         let preps: Vec<PreparedWorkload> =
             workloads.iter().map(|wl| PreparedWorkload::new(&wl.layers)).collect();
 
+        // Registry feeds: shard/point counters, per-shard wall time, and
+        // (after the pass) the memo-counter deltas this sweep contributed.
+        let reg = obs::registry();
+        let m_shards = reg.counter("sweep.shards");
+        let m_points = reg.counter("sweep.points_evaluated");
+        let m_shard_ms = reg.histogram("sweep.shard_ms");
+        let memo_before = self.ctx.stats();
+        let mut sweep_span = obs::span("sweep.type");
+        sweep_span.attr("ty", ty.label()).attr("workloads", workloads.len());
+
         for (shard_no, (start, shard)) in opts.space.chunks(ty, opts.chunk).enumerate() {
+            let shard_t0 = std::time::Instant::now();
             let t0 = std::time::Instant::now();
             let preds = predict_configs(self.backend, model, &shard)?;
-            trace(
-                &format!("sweep/{}/shard{shard_no}/predict({})", ty.label(), shard.len()),
+            phase_with(
+                || format!("sweep/{}/shard{shard_no}/predict({})", ty.label(), shard.len()),
                 t0,
             );
             // Fast path: derive the shard's energy coefficients up front
@@ -451,8 +457,8 @@ impl<'a> SweepEngine<'a> {
             } else {
                 shard.iter().map(|c| Some(self.ctx.synth.energy_params_with(c))).collect()
             };
-            trace(
-                &format!("sweep/{}/shard{shard_no}/synth({})", ty.label(), shard.len()),
+            phase_with(
+                || format!("sweep/{}/shard{shard_no}/synth({})", ty.label(), shard.len()),
                 t0,
             );
             let items: Vec<(AcceleratorConfig, Ppa, Option<EnergyParams>)> = shard
@@ -470,13 +476,15 @@ impl<'a> SweepEngine<'a> {
                         None => eval_point(cfg, *ppa, &wl.layers),
                     }
                 });
-                trace(
-                    &format!(
-                        "sweep/{}/shard{shard_no}/dataflow({}, {})",
-                        ty.label(),
-                        pts.len(),
-                        wl.name
-                    ),
+                phase_with(
+                    || {
+                        format!(
+                            "sweep/{}/shard{shard_no}/dataflow({}, {})",
+                            ty.label(),
+                            pts.len(),
+                            wl.name
+                        )
+                    },
                     t1,
                 );
                 let acc = &mut accs[w];
@@ -511,7 +519,23 @@ impl<'a> SweepEngine<'a> {
                     });
                 }
             }
+            m_shards.inc();
+            m_points.add((items.len() * workloads.len()) as u64);
+            m_shard_ms.record_ms(shard_t0.elapsed().as_secs_f64() * 1e3);
         }
+
+        // Memo counters are cumulative per engine; feed only this pass's
+        // contribution so registry totals stay additive across sweeps.
+        let memo_after = self.ctx.stats();
+        reg.counter("sweep.memo.cost_hits")
+            .add(memo_after.cost_hits.saturating_sub(memo_before.cost_hits));
+        reg.counter("sweep.memo.cost_misses")
+            .add(memo_after.cost_misses.saturating_sub(memo_before.cost_misses));
+        reg.counter("sweep.memo.synth_hits")
+            .add(memo_after.synth_hits.saturating_sub(memo_before.synth_hits));
+        reg.counter("sweep.memo.synth_misses")
+            .add(memo_after.synth_misses.saturating_sub(memo_before.synth_misses));
+        drop(sweep_span);
 
         Ok(workloads
             .iter()

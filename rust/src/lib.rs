@@ -29,6 +29,7 @@
 //! | [`dataflow`]   | §3.3 | row-stationary performance / traffic / energy model; groups-aware (dense, grouped, depthwise) |
 //! | [`workloads`]  | §4   | built-in nets (VGG-16, ResNet-34/50, MobileNetV1/V2) + JSON model ingestion |
 //! | [`model`]      | §3.4 | PPA regression: features, native baseline, CV driver |
+//! | [`obs`]        | —    | observability: tracing spans with a pluggable `QAPPA_TRACE` sink + the process-wide metrics registry behind the `metrics` op (`docs/OBSERVABILITY.md`) |
 //! | [`runtime`]    | §3.4 | PJRT artifact loading + batched execution engine |
 //! | [`coordinator`]| §4   | streaming DSE pipeline (sharded sweeps, model cache, incremental Pareto), figure reports (Figs. 2-5) |
 //! | [`opt`]        | —    | guided multi-objective optimizer: constraint-driven NSGA-II / random / hill-climb search over hardware x per-layer precision x model knobs (`docs/OPTIMIZER.md`) |
@@ -63,6 +64,7 @@ pub mod config;
 pub mod coordinator;
 pub mod dataflow;
 pub mod model;
+pub mod obs;
 pub mod opt;
 pub mod rtl;
 pub mod runtime;

@@ -31,8 +31,8 @@ use std::sync::Arc;
 use qappa::api::{
     process_store, run_loadgen, AnalyzeRequest, BackendChoice, Constraints, DispatchOptions,
     FitRequest, LoadgenOptions, OptimizeRequest, PrecisionRequest, Qappa, QappaBuilder,
-    QappaError, RequestMix, ServeOptions, SynthRequest, TcpServer, TransportOptions,
-    WorkloadsRequest, WorkloadsResponse,
+    QappaError, RequestMix, ResponseBody, ServeOptions, ServeResponse, SynthRequest, TcpServer,
+    TransportOptions, WorkloadsRequest, WorkloadsResponse,
 };
 use qappa::config::{AcceleratorConfig, MacKind, PeType};
 use qappa::coordinator::precision::parse_bits_axis;
@@ -88,6 +88,7 @@ fn dispatch(sub: &str, args: &Args) -> Option<Result<(), QappaError>> {
         "analyze" => cmd_analyze(args),
         "serve" => cmd_serve(args),
         "loadgen" => cmd_loadgen(args),
+        "metrics" => cmd_metrics(args),
         "help" => {
             args.finish().ok();
             print!("{}", HELP);
@@ -182,6 +183,12 @@ SUBCOMMANDS
                                          an in-process server when --addr is
                                          absent; --cold skips the untimed
                                          warm-up request) — docs/SERVE.md
+  metrics   [--addr HOST:PORT]           print one JSON snapshot of the
+                                         process-wide metrics registry
+                                         (counters, gauges, latency
+                                         histograms); --addr queries a live
+                                         serve endpoint over the `metrics`
+                                         wire op — docs/OBSERVABILITY.md
 
 WORKLOADS (--workload W)
   Built-in CNNs: vgg16, resnet34, resnet50, mobilenetv1, mobilenetv2.
@@ -200,7 +207,11 @@ Progress/stats lines ([store], [engine], [trace]) go to stderr, so piped
 stdout is always a parseable report.
 
 Tracing: set QAPPA_TRACE=1 to print per-phase wall times (training,
-per-shard predict and dataflow evaluation).
+per-shard predict and dataflow evaluation) to stderr, or QAPPA_TRACE=PATH
+to append JSON-lines span events to PATH (docs/OBSERVABILITY.md).
+
+Stats: `dse`/`explore`/`optimize` accept --stats-json PATH to dump the
+process metrics snapshot after the run ('-' writes one line to stderr).
 ";
 
 // ---------------------------------------------------------------------------
@@ -265,6 +276,22 @@ fn builder_from(args: &Args) -> Result<QappaBuilder, QappaError> {
 
 fn write_csv(t: &Table, path: &str) -> Result<(), QappaError> {
     t.write_csv(path).map_err(|e| QappaError::io(format!("writing {path}"), e))
+}
+
+/// `--stats-json DEST`: dump the process metrics registry snapshot after a
+/// run.  `-` writes one JSON line to stderr (stdout stays a pinned
+/// report); anything else is a file path.
+fn emit_stats_json(dest: Option<&str>) -> Result<(), QappaError> {
+    let Some(dest) = dest else { return Ok(()) };
+    let line = qappa::obs::registry().snapshot().to_json().to_string();
+    if dest == "-" {
+        eprintln!("{line}");
+    } else {
+        std::fs::write(dest, format!("{line}\n"))
+            .map_err(|e| QappaError::io(format!("writing {dest}"), e))?;
+        qappa::obs::diag("qappa", format_args!("wrote metrics snapshot to {dest}"));
+    }
+    Ok(())
 }
 
 // ---------------------------------------------------------------------------
@@ -391,6 +418,7 @@ fn cmd_dse_precision(
     let grid = precision.resolve()?;
     let session = session_from(args)?;
     let out = args.opt("out").map(str::to_string);
+    let stats_json = args.opt("stats-json").map(str::to_string);
     if args.flag("scatter") || args.flag("stats") {
         return Err(QappaError::Config(
             "--scatter/--stats are not available for precision-grid runs yet".into(),
@@ -417,12 +445,15 @@ fn cmd_dse_precision(
     }
     print!("{}", precision_summary_table(&summaries).render());
     // Progress/stats to stderr: piped stdout stays a parseable report.
-    eprintln!(
-        "[store] models trained: {} (cache hits: {}); chunk={}, {:.2}s",
-        session.store().misses(),
-        session.store().hits(),
-        session.options().chunk,
-        dt
+    qappa::obs::diag(
+        "store",
+        format_args!(
+            "models trained: {} (cache hits: {}); chunk={}, {:.2}s",
+            session.store().misses(),
+            session.store().hits(),
+            session.options().chunk,
+            dt
+        ),
     );
     let (ch, cm, sh, sm) =
         memo_totals(summaries.iter().flat_map(|s| s.stats.values()));
@@ -432,6 +463,7 @@ fn cmd_dse_precision(
         write_csv(&precision_summary_table(&summaries), &path)?;
         println!("wrote {path}");
     }
+    emit_stats_json(stats_json.as_deref())?;
     Ok(())
 }
 
@@ -451,9 +483,12 @@ fn memo_totals<'a>(stats: impl Iterator<Item = &'a SweepStats>) -> (u64, u64, u6
 
 /// The `[engine]` memo stderr line shared by the explore/optimize paths.
 fn memo_line(cost_hits: u64, cost_misses: u64, synth_hits: u64, synth_misses: u64) {
-    eprintln!(
-        "[engine] layer-cost memo: {cost_hits} hits / {cost_misses} misses; \
-         synth memo: {synth_hits} hits / {synth_misses} misses"
+    qappa::obs::diag(
+        "engine",
+        format_args!(
+            "layer-cost memo: {cost_hits} hits / {cost_misses} misses; \
+             synth memo: {synth_hits} hits / {synth_misses} misses"
+        ),
     );
 }
 
@@ -472,6 +507,7 @@ fn cmd_dse(args: &Args) -> Result<(), QappaError> {
     let (wl, layers) = workloads::load(specs[0])?;
     let session = session_from(args)?;
     let out = args.opt("out").map(str::to_string);
+    let stats_json = args.opt("stats-json").map(str::to_string);
     let want_scatter = args.flag("scatter");
     let want_stats = args.flag("stats");
     let backend_name = session.backend_name()?;
@@ -495,20 +531,23 @@ fn cmd_dse(args: &Args) -> Result<(), QappaError> {
     if want_stats {
         print!("{}", dse_stats_table(&res).render());
     }
-    eprintln!("[store] dse wall time: {dt:.2}s");
+    qappa::obs::diag("store", format_args!("dse wall time: {dt:.2}s"));
     let (ch, cm, sh, sm) = memo_totals(res.stats.values());
     memo_line(ch, cm, sh, sm);
     if let Some(engine) = session.engine() {
         let s = &engine.stats;
         use std::sync::atomic::Ordering::Relaxed;
         // Progress/stats to stderr: piped stdout stays a parseable report.
-        eprintln!(
-            "[engine] predict: {} rows in {} batches ({} padded rows), fit: {}, loss: {}",
-            s.predict_rows.load(Relaxed),
-            s.predict_batches.load(Relaxed),
-            s.predict_padded_rows.load(Relaxed),
-            s.fit_calls.load(Relaxed),
-            s.loss_calls.load(Relaxed)
+        qappa::obs::diag(
+            "engine",
+            format_args!(
+                "predict: {} rows in {} batches ({} padded rows), fit: {}, loss: {}",
+                s.predict_rows.load(Relaxed),
+                s.predict_batches.load(Relaxed),
+                s.predict_padded_rows.load(Relaxed),
+                s.fit_calls.load(Relaxed),
+                s.loss_calls.load(Relaxed)
+            ),
         );
     }
     if let Some(dir) = out {
@@ -522,6 +561,7 @@ fn cmd_dse(args: &Args) -> Result<(), QappaError> {
             println!("wrote {scatter_path}");
         }
     }
+    emit_stats_json(stats_json.as_deref())?;
     Ok(())
 }
 
@@ -536,6 +576,7 @@ fn cmd_dse_multi(args: &Args, specs: &[&str]) -> Result<(), QappaError> {
     }
     let session = session_from(args)?;
     let out = args.opt("out").map(str::to_string);
+    let stats_json = args.opt("stats-json").map(str::to_string);
     let want_stats = args.flag("stats");
     if args.flag("scatter") {
         return Err(QappaError::Config(
@@ -570,22 +611,28 @@ fn cmd_dse_multi(args: &Args, specs: &[&str]) -> Result<(), QappaError> {
     }
     print!("{}", multi_summary_table(&summaries).render());
     // Progress/stats to stderr: piped stdout stays a parseable report.
-    eprintln!(
-        "[store] models trained: {} (cache hits: {}); chunk={}, {:.2}s",
-        session.store().misses(),
-        session.store().hits(),
-        session.options().chunk,
-        dt
+    qappa::obs::diag(
+        "store",
+        format_args!(
+            "models trained: {} (cache hits: {}); chunk={}, {:.2}s",
+            session.store().misses(),
+            session.store().hits(),
+            session.options().chunk,
+            dt
+        ),
     );
     let peak = summaries
         .iter()
         .flat_map(|s| s.stats.values().map(|st| st.peak_resident))
         .max()
         .unwrap_or(0);
-    eprintln!(
-        "[engine] peak resident points: {} of {} evaluated per (type, workload)",
-        peak,
-        session.options().space.len()
+    qappa::obs::diag(
+        "engine",
+        format_args!(
+            "peak resident points: {} of {} evaluated per (type, workload)",
+            peak,
+            session.options().space.len()
+        ),
     );
     let (ch, cm, sh, sm) =
         memo_totals(summaries.iter().flat_map(|s| s.stats.values()));
@@ -598,6 +645,7 @@ fn cmd_dse_multi(args: &Args, specs: &[&str]) -> Result<(), QappaError> {
         write_csv(&multi_summary_table(&summaries), &path)?;
         println!("wrote {path}");
     }
+    emit_stats_json(stats_json.as_deref())?;
     Ok(())
 }
 
@@ -686,6 +734,7 @@ fn cmd_optimize(args: &Args) -> Result<(), QappaError> {
     };
     let session = session_from(args)?;
     let out = args.opt("out").map(str::to_string);
+    let stats_json = args.opt("stats-json").map(str::to_string);
     args.finish()?;
 
     let t0 = std::time::Instant::now();
@@ -710,11 +759,14 @@ fn cmd_optimize(args: &Args) -> Result<(), QappaError> {
     println!("convergence:");
     print!("{}", opt_convergence_table(&resp).render());
     // Progress/stats to stderr: piped stdout stays a parseable report.
-    eprintln!(
-        "[store] models trained: {} (cache hits: {}); {:.2}s",
-        session.store().misses(),
-        session.store().hits(),
-        dt
+    qappa::obs::diag(
+        "store",
+        format_args!(
+            "models trained: {} (cache hits: {}); {:.2}s",
+            session.store().misses(),
+            session.store().hits(),
+            dt
+        ),
     );
     memo_line(
         resp.memo.cost_hits,
@@ -730,6 +782,7 @@ fn cmd_optimize(args: &Args) -> Result<(), QappaError> {
         write_csv(&opt_convergence_table(&resp), &conv_path)?;
         println!("wrote {conv_path}");
     }
+    emit_stats_json(stats_json.as_deref())?;
     Ok(())
 }
 
@@ -926,19 +979,25 @@ fn cmd_serve(args: &Args) -> Result<(), QappaError> {
         concurrency: args.get("concurrency", ServeOptions::default().concurrency)?,
     };
     args.finish()?;
-    eprintln!(
-        "[qappa] serving JSON-lines requests on stdin (concurrency {}); \
-         protocol: docs/API.md",
-        opts.concurrency.max(1)
+    qappa::obs::diag(
+        "qappa",
+        format_args!(
+            "serving JSON-lines requests on stdin (concurrency {}); \
+             protocol: docs/API.md",
+            opts.concurrency.max(1)
+        ),
     );
     let stats = qappa::api::serve(&session, std::io::stdin().lock(), std::io::stdout(), &opts)?;
-    eprintln!(
-        "[qappa] served {} requests ({} ok, {} errors); models trained: {} (cache hits: {})",
-        stats.requests,
-        stats.ok,
-        stats.errors,
-        session.store().misses(),
-        session.store().hits()
+    qappa::obs::diag(
+        "qappa",
+        format_args!(
+            "served {} requests ({} ok, {} errors); models trained: {} (cache hits: {})",
+            stats.requests,
+            stats.ok,
+            stats.errors,
+            session.store().misses(),
+            session.store().hits()
+        ),
     );
     Ok(())
 }
@@ -961,31 +1020,37 @@ fn cmd_serve_listen(args: &Args, listen: &str) -> Result<(), QappaError> {
     };
     args.finish()?;
     let mut server = TcpServer::bind(session.clone(), listen, opts)?;
-    eprintln!(
-        "[qappa] serving JSON-lines over TCP on {} (max {} connections, {} in flight, \
-         coalescing {}); EOF on stdin drains and exits — docs/SERVE.md",
-        server.local_addr(),
-        opts.max_connections,
-        opts.dispatch.max_inflight,
-        if opts.dispatch.coalesce { "on" } else { "off" }
+    qappa::obs::diag(
+        "qappa",
+        format_args!(
+            "serving JSON-lines over TCP on {} (max {} connections, {} in flight, \
+             coalescing {}); EOF on stdin drains and exits — docs/SERVE.md",
+            server.local_addr(),
+            opts.max_connections,
+            opts.dispatch.max_inflight,
+            if opts.dispatch.coalesce { "on" } else { "off" }
+        ),
     );
     // Park until the operator (or spawning harness) closes stdin.
     let _ = std::io::copy(&mut std::io::stdin().lock(), &mut std::io::sink());
     server.shutdown();
     let st = server.stats();
-    eprintln!(
-        "[qappa] served {} connections ({} shed), {} requests ({} ok, {} errors, \
-         {} shed, {} coalesced, {} cancelled); models trained: {} (cache hits: {})",
-        st.connections,
-        st.shed_connections,
-        st.dispatch.requests,
-        st.dispatch.ok,
-        st.dispatch.errors,
-        st.dispatch.shed,
-        st.dispatch.coalesced,
-        st.dispatch.cancelled,
-        session.store().misses(),
-        session.store().hits()
+    qappa::obs::diag(
+        "qappa",
+        format_args!(
+            "served {} connections ({} shed), {} requests ({} ok, {} errors, \
+             {} shed, {} coalesced, {} cancelled); models trained: {} (cache hits: {})",
+            st.connections,
+            st.shed_connections,
+            st.dispatch.requests,
+            st.dispatch.ok,
+            st.dispatch.errors,
+            st.dispatch.shed,
+            st.dispatch.coalesced,
+            st.dispatch.cancelled,
+            session.store().misses(),
+            session.store().hits()
+        ),
     );
     Ok(())
 }
@@ -1020,15 +1085,18 @@ fn cmd_loadgen(args: &Args) -> Result<(), QappaError> {
         }
     };
     println!("{}", report.to_json());
-    eprintln!(
-        "[qappa] loadgen: {} connections x {} requests ({}), {:.1} req/s, \
-         p50 {:.2} ms, p99 {:.2} ms",
-        report.connections,
-        opts.requests,
-        opts.mix.label(),
-        report.throughput_per_s,
-        report.p50_ms,
-        report.p99_ms
+    qappa::obs::diag(
+        "qappa",
+        format_args!(
+            "loadgen: {} connections x {} requests ({}), {:.1} req/s, \
+             p50 {:.2} ms, p99 {:.2} ms",
+            report.connections,
+            opts.requests,
+            opts.mix.label(),
+            report.throughput_per_s,
+            report.p50_ms,
+            report.p99_ms
+        ),
     );
     if report.errors > 0 {
         return Err(QappaError::Protocol(format!(
@@ -1036,5 +1104,47 @@ fn cmd_loadgen(args: &Args) -> Result<(), QappaError> {
             report.errors, report.requests
         )));
     }
+    Ok(())
+}
+
+/// `qappa metrics`: print one JSON snapshot of the metrics registry on
+/// stdout.  With `--addr` the snapshot comes from a live serve endpoint
+/// via the `metrics` wire op; without it, from this (freshly started)
+/// process — mainly useful for scripting against a server.
+fn cmd_metrics(args: &Args) -> Result<(), QappaError> {
+    let addr = args.opt("addr").map(str::to_string);
+    args.finish()?;
+    let snap = match addr {
+        Some(addr) => {
+            use std::io::{BufRead, BufReader, Write};
+            let mut stream = std::net::TcpStream::connect(&addr)
+                .map_err(|e| QappaError::io(format!("connecting to {addr}"), e))?;
+            writeln!(stream, "{{\"id\":1,\"op\":\"metrics\"}}")
+                .and_then(|_| stream.flush())
+                .map_err(|e| QappaError::io("writing metrics request", e))?;
+            let mut line = String::new();
+            BufReader::new(stream)
+                .read_line(&mut line)
+                .map_err(|e| QappaError::io("reading metrics response", e))?;
+            let resp = ServeResponse::from_json(&qappa::util::json::Json::parse(&line)?)?;
+            match resp.result {
+                Ok(ResponseBody::Metrics(snap)) => snap,
+                Ok(other) => {
+                    return Err(QappaError::Protocol(format!(
+                        "metrics: unexpected '{}' response",
+                        other.op()
+                    )))
+                }
+                Err(e) => {
+                    return Err(QappaError::Protocol(format!(
+                        "metrics: server answered {}: {}",
+                        e.kind, e.message
+                    )))
+                }
+            }
+        }
+        None => qappa::obs::registry().snapshot(),
+    };
+    println!("{snap}", snap = snap.to_json());
     Ok(())
 }

@@ -1,0 +1,476 @@
+//! The process-wide metrics registry: named counters, gauges and
+//! log-scale latency histograms behind `Arc`-shared typed handles.
+//!
+//! One registry per process ([`registry`]) feeds every consumer the same
+//! numbers: the `metrics` wire op, `qappa metrics`, `--stats-json`, the
+//! bench harness.  Handles are cheap to clone and lock-free to update
+//! (`Relaxed` atomics — these are statistics, not synchronization);
+//! registering a name twice returns the same underlying cell, so
+//! subsystems can re-acquire handles by name without coordination.
+//!
+//! Histograms record **milliseconds** into logarithmic buckets (16 per
+//! octave starting at 1 µs → ≤ ~4.4% bucket width over a 1 µs..71 min
+//! range) and estimate p50/p95/p99 by rank interpolation inside the
+//! matching bucket — the one quantile implementation the codebase shares
+//! (loadgen reports come from this type; `util::stats::percentile` is the
+//! exact oracle its tests pin against).  `max` is exact (an atomic
+//! f64-bits max, valid because non-negative IEEE-754 floats order like
+//! their bit patterns).
+//!
+//! [`MetricsSnapshot`] is the stable wire shape:
+//!
+//! ```json
+//! {"counters": {"serve.requests": 40},
+//!  "gauges": {"serve.inflight": 0},
+//!  "histograms": {"serve.request_ms": {"count": 40, "mean_ms": 1.9,
+//!    "p50_ms": 1.7, "p95_ms": 4.1, "p99_ms": 6.0, "max_ms": 6.2}}}
+//! ```
+
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex, OnceLock};
+
+use crate::api::error::QappaError;
+use crate::util::json::{obj, Json};
+
+/// Log-bucket geometry: 16 sub-buckets per octave (ratio 2^(1/16) ≈
+/// 1.0443), bucket 0 anchored at 1 µs; 512 buckets span 32 octaves,
+/// i.e. 1 µs .. ~71.6 minutes before the last bucket saturates.
+const SUB_PER_OCTAVE: f64 = 16.0;
+const NUM_BUCKETS: usize = 512;
+const LO_MS: f64 = 1e-3;
+
+/// A monotone event counter.
+#[derive(Clone)]
+pub struct Counter {
+    cell: Arc<AtomicU64>,
+}
+
+impl Counter {
+    pub fn inc(&self) {
+        self.add(1);
+    }
+
+    pub fn add(&self, n: u64) {
+        self.cell.fetch_add(n, Ordering::Relaxed);
+    }
+
+    pub fn get(&self) -> u64 {
+        self.cell.load(Ordering::Relaxed)
+    }
+}
+
+struct GaugeCell {
+    /// f64 bits; gauges may hold any finite value (hypervolume, in-flight
+    /// depth).
+    bits: AtomicU64,
+}
+
+/// A last-value / up-down instrument storing an `f64`.
+#[derive(Clone)]
+pub struct Gauge {
+    cell: Arc<GaugeCell>,
+}
+
+impl Gauge {
+    pub fn set(&self, v: f64) {
+        self.cell.bits.store(v.to_bits(), Ordering::Relaxed);
+    }
+
+    pub fn add(&self, d: f64) {
+        let _ = self.cell.bits.fetch_update(Ordering::Relaxed, Ordering::Relaxed, |b| {
+            Some((f64::from_bits(b) + d).to_bits())
+        });
+    }
+
+    pub fn get(&self) -> f64 {
+        f64::from_bits(self.cell.bits.load(Ordering::Relaxed))
+    }
+}
+
+struct HistCore {
+    buckets: Vec<AtomicU64>,
+    /// Total microseconds recorded (mean's numerator).
+    sum_us: AtomicU64,
+    /// Exact max as f64 bits (non-negative floats order like u64 bits).
+    max_bits: AtomicU64,
+}
+
+/// A log-scale histogram of millisecond samples.
+#[derive(Clone)]
+pub struct Histogram {
+    core: Arc<HistCore>,
+}
+
+fn bucket_index(ms: f64) -> usize {
+    // Callers normalize NaN/negatives to 0.0 first (`record_ms`), so a
+    // plain comparison is total here.
+    if ms <= LO_MS {
+        return 0;
+    }
+    let idx = ((ms / LO_MS).log2() * SUB_PER_OCTAVE).floor() as usize;
+    idx.min(NUM_BUCKETS - 1)
+}
+
+/// `[lo, hi)` bounds of bucket `i` in milliseconds (bucket 0 reaches down
+/// to 0).
+fn bucket_bounds(i: usize) -> (f64, f64) {
+    let lo = if i == 0 { 0.0 } else { LO_MS * (i as f64 / SUB_PER_OCTAVE).exp2() };
+    let hi = LO_MS * ((i + 1) as f64 / SUB_PER_OCTAVE).exp2();
+    (lo, hi)
+}
+
+/// Rank-interpolated quantile over a bucket snapshot: mirrors
+/// `util::stats::percentile`'s rank convention (`(p/100)·(n-1)`, linear),
+/// resolved to the matching log bucket.  `max_ms` caps the estimate so
+/// p100 returns the exact observed maximum.
+fn quantile_from(buckets: &[u64], total: u64, p: f64, max_ms: f64) -> f64 {
+    if total == 0 {
+        return 0.0;
+    }
+    let rank = (p / 100.0).clamp(0.0, 1.0) * (total - 1) as f64;
+    let mut seen = 0u64;
+    for (i, &c) in buckets.iter().enumerate() {
+        if c == 0 {
+            continue;
+        }
+        // This bucket holds sample ranks [seen, seen + c - 1].
+        if (seen + c - 1) as f64 >= rank {
+            let (lo, hi) = bucket_bounds(i);
+            let frac = ((rank - seen as f64 + 0.5) / c as f64).clamp(0.0, 1.0);
+            return (lo + frac * (hi - lo)).min(max_ms);
+        }
+        seen += c;
+    }
+    max_ms
+}
+
+fn new_hist_core() -> Arc<HistCore> {
+    Arc::new(HistCore {
+        buckets: (0..NUM_BUCKETS).map(|_| AtomicU64::new(0)).collect(),
+        sum_us: AtomicU64::new(0),
+        max_bits: AtomicU64::new(0f64.to_bits()),
+    })
+}
+
+impl Default for Histogram {
+    fn default() -> Histogram {
+        Histogram::new()
+    }
+}
+
+impl Histogram {
+    /// A standalone histogram detached from any registry — for local
+    /// aggregation (loadgen's latency report); process-wide instruments
+    /// come from [`MetricsRegistry::histogram`] instead.
+    pub fn new() -> Histogram {
+        Histogram { core: new_hist_core() }
+    }
+
+    /// Record one sample, in milliseconds (negatives clamp to 0).
+    pub fn record_ms(&self, ms: f64) {
+        let ms = if ms.is_finite() && ms > 0.0 { ms } else { 0.0 };
+        self.core.buckets[bucket_index(ms)].fetch_add(1, Ordering::Relaxed);
+        self.core.sum_us.fetch_add((ms * 1e3).round() as u64, Ordering::Relaxed);
+        self.core.max_bits.fetch_max(ms.to_bits(), Ordering::Relaxed);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.core.buckets.iter().map(|b| b.load(Ordering::Relaxed)).sum()
+    }
+
+    pub fn max_ms(&self) -> f64 {
+        f64::from_bits(self.core.max_bits.load(Ordering::Relaxed))
+    }
+
+    /// Estimate the p-th percentile (0..=100) in milliseconds.
+    pub fn quantile(&self, p: f64) -> f64 {
+        let buckets: Vec<u64> =
+            self.core.buckets.iter().map(|b| b.load(Ordering::Relaxed)).collect();
+        let count: u64 = buckets.iter().sum();
+        quantile_from(&buckets, count, p, self.max_ms())
+    }
+
+    /// One internally-consistent summary: the buckets are copied once, so
+    /// the count and every quantile describe the same sample set even
+    /// while other threads keep recording.
+    pub fn summary(&self) -> HistogramSummary {
+        let buckets: Vec<u64> =
+            self.core.buckets.iter().map(|b| b.load(Ordering::Relaxed)).collect();
+        let count: u64 = buckets.iter().sum();
+        let max_ms = self.max_ms();
+        let mean_ms = if count == 0 {
+            0.0
+        } else {
+            self.core.sum_us.load(Ordering::Relaxed) as f64 / 1e3 / count as f64
+        };
+        HistogramSummary {
+            count,
+            mean_ms,
+            p50_ms: quantile_from(&buckets, count, 50.0, max_ms),
+            p95_ms: quantile_from(&buckets, count, 95.0, max_ms),
+            p99_ms: quantile_from(&buckets, count, 99.0, max_ms),
+            max_ms,
+        }
+    }
+}
+
+/// Wire shape of one histogram: stable field names
+/// `count`/`mean_ms`/`p50_ms`/`p95_ms`/`p99_ms`/`max_ms`.
+#[derive(Debug, Clone, PartialEq, Default)]
+pub struct HistogramSummary {
+    pub count: u64,
+    pub mean_ms: f64,
+    pub p50_ms: f64,
+    pub p95_ms: f64,
+    pub p99_ms: f64,
+    pub max_ms: f64,
+}
+
+impl HistogramSummary {
+    pub fn to_json(&self) -> Json {
+        obj(vec![
+            ("count", Json::Num(self.count as f64)),
+            ("mean_ms", Json::Num(self.mean_ms)),
+            ("p50_ms", Json::Num(self.p50_ms)),
+            ("p95_ms", Json::Num(self.p95_ms)),
+            ("p99_ms", Json::Num(self.p99_ms)),
+            ("max_ms", Json::Num(self.max_ms)),
+        ])
+    }
+
+    pub fn from_json(v: &Json) -> Result<HistogramSummary, QappaError> {
+        let f = |k: &str| -> Result<f64, QappaError> {
+            v.get(k).as_f64().ok_or_else(|| {
+                QappaError::Protocol(format!("metrics histogram: missing \"{k}\""))
+            })
+        };
+        Ok(HistogramSummary {
+            count: f("count")? as u64,
+            mean_ms: f("mean_ms")?,
+            p50_ms: f("p50_ms")?,
+            p95_ms: f("p95_ms")?,
+            p99_ms: f("p99_ms")?,
+            max_ms: f("max_ms")?,
+        })
+    }
+}
+
+/// One consistent point-in-time view of the whole registry — the payload
+/// of the `metrics` wire op and the `--stats-json` flag.
+#[derive(Debug, Clone, PartialEq, Default)]
+pub struct MetricsSnapshot {
+    pub counters: BTreeMap<String, u64>,
+    pub gauges: BTreeMap<String, f64>,
+    pub histograms: BTreeMap<String, HistogramSummary>,
+}
+
+impl MetricsSnapshot {
+    pub fn to_json(&self) -> Json {
+        let map = |m: &BTreeMap<String, f64>| {
+            Json::Obj(m.iter().map(|(k, v)| (k.clone(), Json::Num(*v))).collect())
+        };
+        obj(vec![
+            (
+                "counters",
+                Json::Obj(
+                    self.counters
+                        .iter()
+                        .map(|(k, v)| (k.clone(), Json::Num(*v as f64)))
+                        .collect(),
+                ),
+            ),
+            ("gauges", map(&self.gauges)),
+            (
+                "histograms",
+                Json::Obj(
+                    self.histograms
+                        .iter()
+                        .map(|(k, v)| (k.clone(), v.to_json()))
+                        .collect(),
+                ),
+            ),
+        ])
+    }
+
+    pub fn from_json(v: &Json) -> Result<MetricsSnapshot, QappaError> {
+        let section = |k: &str| -> Result<&BTreeMap<String, Json>, QappaError> {
+            v.get(k)
+                .as_obj()
+                .ok_or_else(|| QappaError::Protocol(format!("metrics: missing \"{k}\" object")))
+        };
+        let mut counters = BTreeMap::new();
+        for (k, val) in section("counters")? {
+            let n = val.as_f64().ok_or_else(|| {
+                QappaError::Protocol(format!("metrics: counter \"{k}\" must be a number"))
+            })?;
+            counters.insert(k.clone(), n as u64);
+        }
+        let mut gauges = BTreeMap::new();
+        for (k, val) in section("gauges")? {
+            let n = val.as_f64().ok_or_else(|| {
+                QappaError::Protocol(format!("metrics: gauge \"{k}\" must be a number"))
+            })?;
+            gauges.insert(k.clone(), n);
+        }
+        let mut histograms = BTreeMap::new();
+        for (k, val) in section("histograms")? {
+            histograms.insert(k.clone(), HistogramSummary::from_json(val)?);
+        }
+        Ok(MetricsSnapshot { counters, gauges, histograms })
+    }
+}
+
+/// The registry: three name → cell maps behind short-lived locks (handle
+/// acquisition and snapshots lock; updates through handles never do).
+#[derive(Default)]
+pub struct MetricsRegistry {
+    counters: Mutex<BTreeMap<String, Arc<AtomicU64>>>,
+    gauges: Mutex<BTreeMap<String, Arc<GaugeCell>>>,
+    hists: Mutex<BTreeMap<String, Arc<HistCore>>>,
+}
+
+impl MetricsRegistry {
+    pub fn new() -> MetricsRegistry {
+        MetricsRegistry::default()
+    }
+
+    /// Counter handle for `name`, creating it at zero on first use.
+    pub fn counter(&self, name: &str) -> Counter {
+        let mut m = self.counters.lock().unwrap_or_else(|p| p.into_inner());
+        let cell = m
+            .entry(name.to_string())
+            .or_insert_with(|| Arc::new(AtomicU64::new(0)))
+            .clone();
+        Counter { cell }
+    }
+
+    /// Gauge handle for `name`, creating it at 0.0 on first use.
+    pub fn gauge(&self, name: &str) -> Gauge {
+        let mut m = self.gauges.lock().unwrap_or_else(|p| p.into_inner());
+        let cell = m
+            .entry(name.to_string())
+            .or_insert_with(|| Arc::new(GaugeCell { bits: AtomicU64::new(0f64.to_bits()) }))
+            .clone();
+        Gauge { cell }
+    }
+
+    /// Histogram handle for `name`, creating it empty on first use.
+    pub fn histogram(&self, name: &str) -> Histogram {
+        let mut m = self.hists.lock().unwrap_or_else(|p| p.into_inner());
+        let core = m.entry(name.to_string()).or_insert_with(new_hist_core).clone();
+        Histogram { core }
+    }
+
+    /// Snapshot every registered instrument.  Counter reads are atomic and
+    /// monotone; each histogram summary is computed from one bucket copy,
+    /// so its count and quantiles are mutually consistent even under
+    /// concurrent recording.
+    pub fn snapshot(&self) -> MetricsSnapshot {
+        let counters: Vec<(String, Arc<AtomicU64>)> = {
+            let m = self.counters.lock().unwrap_or_else(|p| p.into_inner());
+            m.iter().map(|(k, v)| (k.clone(), v.clone())).collect()
+        };
+        let gauges: Vec<(String, Arc<GaugeCell>)> = {
+            let m = self.gauges.lock().unwrap_or_else(|p| p.into_inner());
+            m.iter().map(|(k, v)| (k.clone(), v.clone())).collect()
+        };
+        let hists: Vec<(String, Histogram)> = {
+            let m = self.hists.lock().unwrap_or_else(|p| p.into_inner());
+            m.iter().map(|(k, v)| (k.clone(), Histogram { core: v.clone() })).collect()
+        };
+        MetricsSnapshot {
+            counters: counters
+                .into_iter()
+                .map(|(k, c)| (k, c.load(Ordering::Relaxed)))
+                .collect(),
+            gauges: gauges
+                .into_iter()
+                .map(|(k, g)| (k, f64::from_bits(g.bits.load(Ordering::Relaxed))))
+                .collect(),
+            histograms: hists.into_iter().map(|(k, h)| (k, h.summary())).collect(),
+        }
+    }
+}
+
+/// The process-wide registry every subsystem feeds.
+pub fn registry() -> &'static MetricsRegistry {
+    static REG: OnceLock<MetricsRegistry> = OnceLock::new();
+    REG.get_or_init(MetricsRegistry::new)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::stats::percentile;
+
+    #[test]
+    fn counters_accumulate_and_share_cells_by_name() {
+        let reg = MetricsRegistry::new();
+        let a = reg.counter("t.count");
+        let b = reg.counter("t.count");
+        a.inc();
+        b.add(4);
+        assert_eq!(a.get(), 5, "same name must alias the same cell");
+        assert_eq!(reg.snapshot().counters["t.count"], 5);
+    }
+
+    #[test]
+    fn gauges_hold_floats_and_support_up_down() {
+        let reg = MetricsRegistry::new();
+        let g = reg.gauge("t.gauge");
+        g.set(2.5);
+        g.add(1.0);
+        g.add(-3.0);
+        assert!((g.get() - 0.5).abs() < 1e-12);
+        assert!((reg.snapshot().gauges["t.gauge"] - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn histogram_quantiles_track_the_exact_oracle() {
+        // Uniform 0.1..100 ms: log buckets are ≤4.43% wide, interpolation
+        // across a bucket seam at most doubles that — pin 10% relative.
+        let reg = MetricsRegistry::new();
+        let h = reg.histogram("t.lat");
+        let xs: Vec<f64> = (1..=1000).map(|i| i as f64 * 0.1).collect();
+        for &x in &xs {
+            h.record_ms(x);
+        }
+        let s = h.summary();
+        assert_eq!(s.count, 1000);
+        for (est, p) in [(s.p50_ms, 50.0), (s.p95_ms, 95.0), (s.p99_ms, 99.0)] {
+            let exact = percentile(&xs, p);
+            assert!(
+                (est - exact).abs() / exact < 0.10,
+                "p{p}: est {est} vs exact {exact}"
+            );
+        }
+        assert_eq!(s.max_ms, 100.0, "max is exact, not bucketed");
+        assert!(s.p50_ms <= s.p95_ms && s.p95_ms <= s.p99_ms && s.p99_ms <= s.max_ms);
+    }
+
+    #[test]
+    fn empty_and_degenerate_histograms_are_safe() {
+        let reg = MetricsRegistry::new();
+        let h = reg.histogram("t.empty");
+        let s = h.summary();
+        assert_eq!((s.count, s.p50_ms, s.max_ms), (0, 0.0, 0.0));
+        h.record_ms(f64::NAN); // clamps to 0, must not poison anything
+        h.record_ms(-3.0);
+        let s = h.summary();
+        assert_eq!(s.count, 2);
+        assert_eq!(s.max_ms, 0.0);
+    }
+
+    #[test]
+    fn snapshot_round_trips_through_json() {
+        let reg = MetricsRegistry::new();
+        reg.counter("a.b").add(7);
+        reg.gauge("c.d").set(1.25);
+        let h = reg.histogram("e.f_ms");
+        h.record_ms(3.0);
+        let snap = reg.snapshot();
+        let parsed = Json::parse(&snap.to_json().to_string()).unwrap();
+        assert_eq!(MetricsSnapshot::from_json(&parsed).unwrap(), snap);
+    }
+}

@@ -1,0 +1,31 @@
+//! Unified observability: structured tracing spans and a process-wide
+//! metrics registry, wired through sweep / optimizer / store / serve.
+//!
+//! Two halves, one subsystem:
+//!
+//! * [`trace`] — hierarchical named spans ([`span`]) and phase timings
+//!   ([`trace::phase_with`]) routed to one pluggable sink resolved **once**
+//!   from `QAPPA_TRACE`: unset → disabled (near-zero overhead: one
+//!   `OnceLock` load per call), `1`/`true` → the human stderr format the
+//!   repo has always printed (`[trace] phase: 1.2 ms`), any other value →
+//!   a JSON-lines trace file at that path.  Human diagnostics
+//!   (`[store]`/`[engine]`/`[serve]` progress lines) flow through
+//!   [`trace::diag`] so every subsystem shares one prefix convention and
+//!   stdout stays machine-parseable.
+//! * [`metrics`] — a process-wide registry of named counters, gauges and
+//!   log-scale latency histograms (p50/p95/p99/max), `Arc`-shared typed
+//!   handles, and one stable `snapshot()` JSON shape served by the
+//!   `metrics` wire op and the `--stats-json` CLI flag.
+//!
+//! Metric naming: `subsystem.metric` with dots, e.g. `sweep.shards`,
+//! `opt.evaluations`, `store.cache_hits`, `serve.request_ms`.  The full
+//! scheme, the span model and the wire format live in
+//! `docs/OBSERVABILITY.md`.
+
+pub mod metrics;
+pub mod trace;
+
+pub use metrics::{
+    registry, Counter, Gauge, Histogram, HistogramSummary, MetricsRegistry, MetricsSnapshot,
+};
+pub use trace::{diag, span, Span};

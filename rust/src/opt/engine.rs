@@ -32,10 +32,12 @@ use crate::coordinator::explorer::DsePoint;
 use crate::coordinator::pareto::{IncrementalFrontier, IncrementalFrontierNd};
 use crate::coordinator::sweep::{
     eval_point, eval_point_prepared, legacy_eval_env, predict_configs_legacy,
-    predict_configs_soa, trace,
+    predict_configs_soa,
 };
 use crate::dataflow::{EvalContext, Layer, MemoStats, PreparedWorkload};
 use crate::model::{Backend, PpaModel};
+use crate::obs;
+use crate::obs::trace::phase_with;
 use crate::opt::genome::{Genome, SearchSpace};
 use crate::opt::objective::{Constraints, Objective};
 use crate::synth::oracle::{EnergyParams, Ppa};
@@ -434,7 +436,10 @@ impl<'a> Evaluator<'a> {
                     Some((ep, prep)) => eval_point_prepared(cfg, *ppa, *ep, prep, ctx),
                     None => eval_point(cfg, *ppa, layers),
                 });
-            trace(&format!("opt/eval_batch({})", pts.len()), t0);
+            phase_with(|| format!("opt/eval_batch({})", pts.len()), t0);
+            obs::registry()
+                .histogram("opt.eval_batch_ms")
+                .record_ms(t0.elapsed().as_secs_f64() * 1e3);
             let nobj = self.nobj;
             for ((g, p), (cfg, _, layers, _)) in fresh.iter().zip(pts).zip(items.iter()) {
                 // Accuracy is a genome property (precision assignment +
@@ -478,6 +483,10 @@ impl<'a> Evaluator<'a> {
             }
             self.evaluated += fresh.len();
         }
+        let cached = plan.iter().filter(|s| matches!(s, Slot::Cached(_))).count();
+        let reg = obs::registry();
+        reg.counter("opt.evaluations").add(fresh.len() as u64);
+        reg.counter("opt.cache_hits").add(cached as u64);
 
         Ok(plan
             .into_iter()
@@ -525,6 +534,7 @@ impl<'a> Evaluator<'a> {
             .zip(&r)
             .map(|(&x, &fallback)| if x.is_finite() { x } else { fallback })
             .collect();
+        obs::registry().counter("opt.generations").inc();
         GenStat {
             generation,
             evaluated: self.evaluated,
@@ -1036,6 +1046,9 @@ pub fn run_optimize_cancellable(
         }
         ord
     });
+    let reg = obs::registry();
+    reg.counter("opt.runs").inc();
+    reg.gauge("opt.last_hypervolume").set(hypervolume);
     Ok(OptResult {
         strategy: strategy.name(),
         evaluated,

@@ -1,0 +1,278 @@
+//! Integration: the unified telemetry subsystem — registry concurrency,
+//! histogram quantiles against the exact oracle, and the `metrics` wire op
+//! round-tripping over both transports (stdio serve loop and TCP).
+//!
+//! The metrics registry is process-wide and tests in one binary share it,
+//! so every assertion here is presence / monotonicity / `>=`, never exact
+//! equality against a global counter.
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::TcpStream;
+use std::sync::Arc;
+
+use qappa::api::{
+    serve, BackendChoice, MetricsSnapshot, Qappa, ResponseBody, ServeOptions, ServeRequest,
+    ServeResponse, TcpServer, TransportOptions,
+};
+use qappa::coordinator::{DesignSpace, DseOptions};
+use qappa::model::CvConfig;
+use qappa::obs::{registry, MetricsRegistry};
+use qappa::util::json::Json;
+use qappa::util::stats::percentile;
+
+fn tiny_session() -> Qappa {
+    Qappa::builder()
+        .backend(BackendChoice::Native)
+        .options(DseOptions {
+            space: DesignSpace::tiny(),
+            train_per_type: 64,
+            cv: CvConfig { k: 3, degrees: vec![1, 2], lambdas: vec![1e-3, 1e-2], seed: 1 },
+            seed: 7,
+            workers: 4,
+            sigma: 0.02,
+            chunk: 32,
+            topk: 8,
+        })
+        .build()
+}
+
+// ---------------------------------------------------------------- registry
+
+#[test]
+fn parallel_increments_land_exactly_once_each() {
+    let reg = MetricsRegistry::new();
+    const THREADS: usize = 8;
+    const PER: usize = 10_000;
+    std::thread::scope(|scope| {
+        for _ in 0..THREADS {
+            let c = reg.counter("t.parallel");
+            let g = reg.gauge("t.updown");
+            let h = reg.histogram("t.lat");
+            scope.spawn(move || {
+                for i in 0..PER {
+                    c.inc();
+                    g.add(1.0);
+                    g.add(-1.0);
+                    h.record_ms(0.5 + (i % 100) as f64 * 0.01);
+                }
+            });
+        }
+    });
+    let snap = reg.snapshot();
+    assert_eq!(snap.counters["t.parallel"], (THREADS * PER) as u64);
+    assert_eq!(snap.gauges["t.updown"], 0.0, "balanced up/down nets to zero");
+    let h = &snap.histograms["t.lat"];
+    assert_eq!(h.count, (THREADS * PER) as u64);
+    assert!(h.p50_ms > 0.0 && h.p50_ms <= h.max_ms);
+}
+
+#[test]
+fn concurrent_snapshots_stay_consistent_and_monotone() {
+    let reg = MetricsRegistry::new();
+    let c = reg.counter("t.mono");
+    let h = reg.histogram("t.mono_ms");
+    std::thread::scope(|scope| {
+        let writer = {
+            let c = c.clone();
+            let h = h.clone();
+            scope.spawn(move || {
+                for i in 0..50_000u64 {
+                    c.inc();
+                    h.record_ms(1.0 + (i % 7) as f64);
+                }
+            })
+        };
+        let mut last = 0u64;
+        let mut last_h = 0u64;
+        while !writer.is_finished() {
+            let snap = reg.snapshot();
+            let now = snap.counters["t.mono"];
+            assert!(now >= last, "counter snapshots must be monotone ({now} < {last})");
+            last = now;
+            let hs = &snap.histograms["t.mono_ms"];
+            assert!(hs.count >= last_h, "histogram counts must be monotone");
+            last_h = hs.count;
+            // Internal consistency under concurrent recording: quantiles
+            // are computed from the same bucket copy as the count, so an
+            // in-range count implies in-range quantiles.
+            if hs.count > 0 {
+                assert!(hs.p50_ms <= hs.p95_ms && hs.p95_ms <= hs.p99_ms);
+                assert!(hs.p99_ms <= hs.max_ms + 1e-9);
+            }
+        }
+    });
+    let snap = reg.snapshot();
+    assert_eq!(snap.counters["t.mono"], 50_000);
+    assert_eq!(snap.histograms["t.mono_ms"].count, 50_000);
+}
+
+#[test]
+fn histogram_quantiles_match_the_sorted_oracle_on_known_shapes() {
+    // Three distributions: uniform, geometric-ish spread, heavy tail.
+    let shapes: Vec<Vec<f64>> = vec![
+        (1..=500).map(|i| i as f64 * 0.2).collect(),
+        (0..400).map(|i| 0.05 * 1.02f64.powi(i)).collect(),
+        // Heavy tail: 2% of samples 17x above the body.  The tail mass is
+        // deliberately below 1-p for every pinned quantile: a rank that
+        // falls *in the gap* between body and tail is interpolated across
+        // the cliff by the exact oracle, which no bucketed histogram can
+        // reproduce (p50/p95 land in the body, p99 inside the tail).
+        {
+            let mut xs: Vec<f64> = (1..=980).map(|i| 1.0 + i as f64 * 0.002).collect();
+            xs.extend((1..=20).map(|i| 50.0 + i as f64));
+            xs
+        },
+    ];
+    let reg = MetricsRegistry::new();
+    for (n, xs) in shapes.iter().enumerate() {
+        let h = reg.histogram(&format!("t.shape{n}"));
+        for &x in xs {
+            h.record_ms(x);
+        }
+        let s = h.summary();
+        assert_eq!(s.count, xs.len() as u64);
+        for (est, p) in [(s.p50_ms, 50.0), (s.p95_ms, 95.0), (s.p99_ms, 99.0)] {
+            let exact = percentile(xs, p);
+            assert!(
+                (est - exact).abs() / exact < 0.10,
+                "shape {n} p{p}: histogram {est} vs exact {exact}"
+            );
+        }
+        let exact_max = xs.iter().cloned().fold(0.0, f64::max);
+        assert_eq!(s.max_ms, exact_max, "shape {n}: max is exact");
+    }
+}
+
+// ----------------------------------------------------------- wire op: stdio
+
+/// The stable snapshot JSON shape: `counters` / `gauges` / `histograms`
+/// objects, each histogram carrying
+/// `count`/`mean_ms`/`p50_ms`/`p95_ms`/`p99_ms`/`max_ms`.
+fn assert_snapshot_shape(v: &Json) {
+    for section in ["counters", "gauges", "histograms"] {
+        assert!(v.get(section).as_obj().is_some(), "snapshot must carry \"{section}\"");
+    }
+    for (name, h) in v.get("histograms").as_obj().unwrap() {
+        for field in ["count", "mean_ms", "p50_ms", "p95_ms", "p99_ms", "max_ms"] {
+            assert!(
+                h.get(field).as_f64().is_some(),
+                "histogram {name} must carry \"{field}\""
+            );
+        }
+    }
+}
+
+#[test]
+fn metrics_op_round_trips_over_the_stdio_loop() {
+    let session = tiny_session();
+    let input = concat!(
+        r#"{"id":1,"op":"explore","params":{"workloads":["vgg16"]}}"#, "\n",
+        r#"{"id":2,"op":"metrics"}"#, "\n",
+    );
+    let mut out = Vec::new();
+    let stats =
+        serve(&session, input.as_bytes(), &mut out, &ServeOptions { concurrency: 1 }).unwrap();
+    assert_eq!((stats.requests, stats.ok, stats.errors), (2, 2, 0));
+
+    // Zero stdout pollution: the output stream is exactly two JSON lines.
+    let text = std::str::from_utf8(&out).unwrap();
+    assert_eq!(text.lines().count(), 2);
+    for line in text.lines() {
+        assert!(line.starts_with('{'), "serve output must be pure JSON lines: {line:?}");
+        Json::parse(line).expect("every output line parses as JSON");
+    }
+
+    let metrics_line = text.lines().nth(1).unwrap();
+    let v = Json::parse(metrics_line).unwrap();
+    assert_eq!(v.get("ok").as_bool(), Some(true));
+    assert_eq!(v.get("op").as_str(), Some("metrics"));
+    assert_snapshot_shape(v.get("result"));
+
+    // Typed round-trip, and the explore that just ran is visible.
+    let resp = ServeResponse::from_json(&v).unwrap();
+    let snap = match resp.result {
+        Ok(ResponseBody::Metrics(s)) => s,
+        other => panic!("expected a metrics response, got {other:?}"),
+    };
+    assert!(snap.counters.get("session.ops.explore").copied().unwrap_or(0) >= 1);
+    assert!(snap.counters.get("session.ops.metrics").copied().unwrap_or(0) >= 1);
+    assert!(snap.counters.get("sweep.shards").copied().unwrap_or(0) >= 1);
+    assert!(snap.counters.get("store.models_trained").copied().unwrap_or(0) >= 1);
+    assert!(snap.histograms.contains_key("sweep.shard_ms"));
+    assert!(snap.histograms.contains_key("store.train_ms"));
+
+    // The snapshot also survives a full JSON round-trip byte-for-byte.
+    let rt = MetricsSnapshot::from_json(&Json::parse(&snap.to_json().to_string()).unwrap());
+    assert_eq!(rt.unwrap(), snap);
+}
+
+// ------------------------------------------------------------- wire op: TCP
+
+#[test]
+fn metrics_op_round_trips_over_tcp() {
+    let session = Arc::new(tiny_session());
+    let mut server =
+        TcpServer::bind(session, "127.0.0.1:0", TransportOptions::default()).unwrap();
+    let mut client = TcpStream::connect(server.local_addr()).unwrap();
+    let mut reader = BufReader::new(client.try_clone().unwrap());
+
+    let mut round_trip = |line: &str| -> ServeResponse {
+        writeln!(client, "{line}").unwrap();
+        client.flush().unwrap();
+        let mut resp = String::new();
+        reader.read_line(&mut resp).unwrap();
+        ServeResponse::from_json(&Json::parse(&resp).unwrap()).unwrap()
+    };
+
+    // Drive one real request first so serve.* instruments exist.
+    let r = round_trip(r#"{"id":1,"op":"workloads"}"#);
+    assert!(r.result.is_ok());
+
+    let r = round_trip(r#"{"id":2,"op":"metrics"}"#);
+    assert_eq!(r.id, Some(2));
+    let snap = match r.result {
+        Ok(ResponseBody::Metrics(s)) => s,
+        other => panic!("expected a metrics response, got {other:?}"),
+    };
+    assert!(snap.counters.get("serve.requests").copied().unwrap_or(0) >= 1);
+    assert!(snap.counters.get("serve.ok").copied().unwrap_or(0) >= 1);
+    assert!(snap.counters.get("serve.connections").copied().unwrap_or(0) >= 1);
+    assert!(snap.gauges.contains_key("serve.inflight"));
+    let lat = snap.histograms.get("serve.request_ms").expect("request latency histogram");
+    assert!(lat.count >= 1 && lat.p50_ms <= lat.max_ms);
+
+    // A second scrape is monotone in the request counter.
+    let before = snap.counters["serve.requests"];
+    let r = round_trip(r#"{"id":3,"op":"metrics"}"#);
+    match r.result {
+        Ok(ResponseBody::Metrics(s)) => {
+            assert!(s.counters["serve.requests"] > before, "scrapes see newer requests")
+        }
+        other => panic!("expected a metrics response, got {other:?}"),
+    }
+
+    drop(client);
+    drop(reader);
+    server.shutdown();
+}
+
+// ------------------------------------------------------- request round-trip
+
+#[test]
+fn metrics_request_json_round_trips() {
+    let line = r#"{"id":9,"op":"metrics"}"#;
+    let req = ServeRequest::from_json(&Json::parse(line).unwrap()).unwrap();
+    assert_eq!(req.id, Some(9));
+    assert_eq!(req.body.op(), "metrics");
+    let re = ServeRequest::from_json(&Json::parse(&req.to_json().to_string()).unwrap()).unwrap();
+    assert_eq!(re.body.op(), "metrics");
+
+    // The registry handle the op reads is the process-wide singleton.
+    let before = registry().snapshot();
+    registry().counter("t.wire_probe").inc();
+    let after = registry().snapshot();
+    assert_eq!(
+        after.counters["t.wire_probe"],
+        before.counters.get("t.wire_probe").copied().unwrap_or(0) + 1
+    );
+}

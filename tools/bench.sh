@@ -40,15 +40,36 @@ bench_check() {
     python3 tools/bench_check.py "$mode" BENCH_sweep.json BENCH_opt.json BENCH_serve.json
 }
 
+# The serve bench attaches the process metrics registry snapshot
+# (metrics/serve.* keys) to its artifact; fail loudly if that wiring ever
+# drops out instead of silently shipping a thinner BENCH_serve.json.
+check_serve_metrics() {
+    if ! command -v python3 >/dev/null 2>&1; then
+        echo "bench.sh: python3 unavailable; skipping serve metrics check" >&2
+        return 0
+    fi
+    python3 - <<'EOF'
+import json, sys
+doc = json.load(open("BENCH_serve.json"))
+m = doc.get("metrics", {})
+need = ["metrics/serve.requests", "metrics/serve.ok", "metrics/serve.request_ms.p50"]
+missing = [k for k in need if k not in m]
+if missing:
+    sys.exit("bench.sh: BENCH_serve.json is missing registry metrics: %s" % missing)
+print("bench.sh: BENCH_serve.json carries the metrics registry snapshot")
+EOF
+}
+
 mode="${1:-all}"
 case "$mode" in
     --sweep-only) run_bench sweep_throughput BENCH_sweep.json ;;
     --opt-only)   run_bench opt_throughput BENCH_opt.json ;;
-    --serve-only) run_bench serve_throughput BENCH_serve.json ;;
+    --serve-only) run_bench serve_throughput BENCH_serve.json; check_serve_metrics ;;
     all|--check|--bless)
         run_bench sweep_throughput BENCH_sweep.json
         run_bench opt_throughput BENCH_opt.json
         run_bench serve_throughput BENCH_serve.json
+        check_serve_metrics
         if [ "$mode" = --check ]; then bench_check --check; fi
         if [ "$mode" = --bless ]; then bench_check --bless; fi
         ;;
